@@ -1,0 +1,94 @@
+//! Shared plumbing for the figure-regeneration examples.
+
+use decentralize_rs::config::ExperimentConfig;
+use decentralize_rs::coordinator::{run_experiment, RunResult};
+use decentralize_rs::runtime::EngineHandle;
+use decentralize_rs::util::args::Args;
+
+pub const FLAGS: &[&str] = &["save", "help"];
+
+/// Base config tuned so topology/sharing effects are visible on the
+/// synthetic task (calibrated in EXPERIMENTS.md): harder noise, one local
+/// step, modest lr.
+pub fn base_config(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.noise = 2.2;
+    cfg.lr = 0.03;
+    cfg.local_steps = 1;
+    cfg.eval_every = 5;
+    cfg
+}
+
+/// Apply the common CLI overrides every figure harness accepts.
+pub fn apply_common(cfg: &mut ExperimentConfig, args: &Args) -> anyhow::Result<()> {
+    cfg.nodes = args.get_parse("nodes", cfg.nodes)?;
+    cfg.rounds = args.get_parse("rounds", cfg.rounds)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    cfg.train_total = args.get_parse("train-total", cfg.train_total)?;
+    cfg.eval_every = args.get_parse("eval-every", cfg.eval_every)?;
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = a.into();
+    }
+    Ok(())
+}
+
+/// Run one experiment variant, echoing progress.
+pub fn run(
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    save: bool,
+) -> anyhow::Result<RunResult> {
+    eprintln!(
+        ">> {} (nodes={} rounds={} topology={}{} sharing={}{})",
+        cfg.name,
+        cfg.nodes,
+        cfg.rounds,
+        cfg.topology,
+        if cfg.dynamic { " dynamic" } else { "" },
+        cfg.sharing,
+        if cfg.secure { " secure" } else { "" },
+    );
+    let result = run_experiment(cfg, engine)?;
+    eprintln!(
+        "   acc {:.4}  bytes/node {:.0}  emu {:.2}s  wall {:.1}s",
+        result.final_accuracy(),
+        result.final_bytes_per_node(),
+        result.final_emu_time(),
+        result.wall_s
+    );
+    if save {
+        let dir = result.save()?;
+        eprintln!("   saved to {}", dir.display());
+    }
+    Ok(result)
+}
+
+/// Print a figure-style comparison table: one row per eval round, one
+/// column group per variant.
+#[allow(dead_code)]
+pub fn print_comparison(title: &str, columns: &[(&str, &RunResult)]) {
+    println!("\n=== {title} ===");
+    print!("{:>6}", "round");
+    for (name, _) in columns {
+        print!(
+            " | {:>9} {:>12} {:>10}",
+            format!("{name}.acc"),
+            format!("{name}.bytes"),
+            format!("{name}.emu_s")
+        );
+    }
+    println!();
+    let rows = columns.iter().map(|(_, r)| r.series.len()).min().unwrap_or(0);
+    for i in 0..rows {
+        print!("{:>6}", columns[0].1.series[i].round);
+        for (_, r) in columns {
+            let p = &r.series[i];
+            print!(
+                " | {:>9.4} {:>12.0} {:>10.3}",
+                p.test_acc.mean, p.bytes_sent.mean, p.emu_time_s.mean
+            );
+        }
+        println!();
+    }
+}

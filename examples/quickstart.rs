@@ -1,0 +1,42 @@
+//! Quickstart: the paper's Fig 2 "simple DL node in a few lines",
+//! DecentralizeRs edition. Eight nodes train collaboratively on a
+//! 3-regular graph; we print the aggregated accuracy curve.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts` first)
+
+use decentralize_rs::config::ExperimentConfig;
+use decentralize_rs::coordinator::run_experiment;
+use decentralize_rs::metrics::render_series;
+use decentralize_rs::runtime::EngineHandle;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Describe the experiment (every field has a sane default).
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "quickstart".into();
+    cfg.nodes = 8;
+    cfg.rounds = 12;
+    cfg.eval_every = 3;
+    cfg.topology = "regular:3".into(); // swap for "ring", "full", ...
+    cfg.sharing = "full".into(); //        ... or "topk:0.1", "choco:0.1:0.5"
+    cfg.train_total = 768;
+    cfg.test_total = 256;
+
+    // 2. Start the PJRT engine on the AOT artifacts (L2/L1 output).
+    let engine = EngineHandle::start(&cfg.artifacts_dir, &[&cfg.model])?;
+
+    // 3. Run: the coordinator builds the dataset partition, topology and
+    //    one thread per node, then drives the D-PSGD rounds.
+    let result = run_experiment(&cfg, &engine)?;
+
+    // 4. Inspect the aggregated series (mean ± 95% CI across nodes).
+    print!("{}", render_series("quickstart", &result.series));
+    println!(
+        "final accuracy {:.3} after {} rounds ({} bytes/node)",
+        result.final_accuracy(),
+        cfg.rounds,
+        result.final_bytes_per_node() as u64
+    );
+    engine.shutdown();
+    Ok(())
+}

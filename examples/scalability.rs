@@ -1,0 +1,74 @@
+//! Figure 6 harness: scalability study — N vs 4N nodes over the SAME
+//! total dataset (so 4N nodes get 4x fewer samples each), degree 5 vs
+//! degree 9 (paper §3.5; 256 vs 1024 nodes in the paper).
+//!
+//! Expected shape: 5-regular at N and at 4N reach nearly the same
+//! accuracy (degree matters more than per-node sample count), and degree
+//! 9 beats degree 5 at 4N by several points.
+//!
+//! Run: `cargo run --release --example scalability -- [--nodes N --rounds R]`
+//! (`--nodes` sets the SMALL setting; the large one is 4x that.)
+
+mod common;
+
+use common::{apply_common, base_config, print_comparison, run, FLAGS};
+use decentralize_rs::runtime::EngineHandle;
+use decentralize_rs::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(FLAGS)?;
+    let save = args.flag("save");
+
+    let mut base = base_config("fig6");
+    base.nodes = 16;
+    base.rounds = 40;
+    base.train_total = 2048; // FIXED total; per-node share shrinks with N
+    apply_common(&mut base, &args)?;
+    let small_n = base.nodes;
+    let large_n = small_n * 4;
+
+    let engine = EngineHandle::start(&base.artifacts_dir, &[&base.model])?;
+
+    let mut small5 = base.clone();
+    small5.name = format!("fig6_{small_n}n_5reg");
+    small5.topology = "regular:5".into();
+    small5.nodes = small_n;
+
+    let mut large5 = base.clone();
+    large5.name = format!("fig6_{large_n}n_5reg");
+    large5.topology = "regular:5".into();
+    large5.nodes = large_n;
+
+    let mut large9 = base.clone();
+    large9.name = format!("fig6_{large_n}n_9reg");
+    large9.topology = "regular:9".into();
+    large9.nodes = large_n;
+
+    let r_s5 = run(&small5, &engine, save)?;
+    let r_l5 = run(&large5, &engine, save)?;
+    let r_l9 = run(&large9, &engine, save)?;
+
+    print_comparison(
+        &format!("Figure 6: scalability {small_n} vs {large_n} nodes, degree 5 vs 9"),
+        &[
+            (&format!("{small_n}n/5r"), &r_s5),
+            (&format!("{large_n}n/5r"), &r_l5),
+            (&format!("{large_n}n/9r"), &r_l9),
+        ],
+    );
+
+    println!("\nheadline:");
+    println!(
+        "  5-regular: {small_n} nodes {:.4} vs {large_n} nodes {:.4} (paper: ~equal despite 4x fewer samples/node)",
+        r_s5.final_accuracy(),
+        r_l5.final_accuracy()
+    );
+    println!(
+        "  at {large_n} nodes: degree 9 {:.4} vs degree 5 {:.4} (+{:.1} points; paper: +5.8)",
+        r_l9.final_accuracy(),
+        r_l5.final_accuracy(),
+        (r_l9.final_accuracy() - r_l5.final_accuracy()) * 100.0
+    );
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Figure 3 harness: 256-node DL across ring / 5-regular / fully-connected
+//! / dynamic 5-regular topologies (paper §3.2).
+//!
+//! Prints the three panels as columns: (a) accuracy vs rounds,
+//! (b) accuracy vs emulated wall-clock, (c) accuracy vs cumulative bytes
+//! per node, plus the headline ratios (fully-connected round-time ×, and
+//! the dynamic-vs-full communication saving).
+//!
+//! Paper scale: `--nodes 256 --rounds 500`. Default here is scaled down
+//! for a single core; the shapes — full > regular > ring per round,
+//! full ≈ 3× slower per round, dynamic ≈ full accuracy at a fraction of
+//! the bytes — hold at both scales (see EXPERIMENTS.md).
+//!
+//! Run: `cargo run --release --example topologies -- [--nodes N --rounds R --save]`
+
+mod common;
+
+use common::{apply_common, base_config, print_comparison, run, FLAGS};
+use decentralize_rs::runtime::EngineHandle;
+use decentralize_rs::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(FLAGS)?;
+    let save = args.flag("save");
+
+    let mut base = base_config("fig3");
+    base.nodes = 24;
+    base.rounds = 30;
+    base.train_total = 1536;
+    apply_common(&mut base, &args)?;
+
+    let engine = EngineHandle::start(&base.artifacts_dir, &[&base.model])?;
+
+    let mut ring = base.clone();
+    ring.name = "fig3_ring".into();
+    ring.topology = "ring".into();
+
+    let mut regular = base.clone();
+    regular.name = "fig3_regular5".into();
+    regular.topology = "regular:5".into();
+
+    let mut full = base.clone();
+    full.name = "fig3_full".into();
+    full.topology = "full".into();
+
+    let mut dynamic = base.clone();
+    dynamic.name = "fig3_dynamic5".into();
+    dynamic.topology = "regular:5".into();
+    dynamic.dynamic = true;
+
+    let r_ring = run(&ring, &engine, save)?;
+    let r_reg = run(&regular, &engine, save)?;
+    let r_full = run(&full, &engine, save)?;
+    let r_dyn = run(&dynamic, &engine, save)?;
+
+    print_comparison(
+        "Figure 3: topology comparison (acc / cumulative bytes / emulated time)",
+        &[
+            ("ring", &r_ring),
+            ("reg5", &r_reg),
+            ("full", &r_full),
+            ("dyn5", &r_dyn),
+        ],
+    );
+
+    // Headline claims.
+    let t_ratio = r_full.final_emu_time() / r_reg.final_emu_time();
+    let comm_saving = r_full.final_bytes_per_node() / r_dyn.final_bytes_per_node();
+    println!("\nheadline ratios:");
+    println!(
+        "  fully-connected round time vs 5-regular : {t_ratio:.1}x (paper: ~3x at 256 nodes)"
+    );
+    println!(
+        "  full vs dynamic-5 communication         : {comm_saving:.1}x (paper: 51x at 256 nodes)"
+    );
+    println!(
+        "  accuracy: full {:.4} vs dynamic-5 {:.4} (paper: nearly identical given time)",
+        r_full.final_accuracy(),
+        r_dyn.final_accuracy()
+    );
+    println!(
+        "  per-round ordering: full {:.4} > regular {:.4} > ring {:.4}",
+        r_full.final_accuracy(),
+        r_reg.final_accuracy(),
+        r_ring.final_accuracy()
+    );
+    engine.shutdown();
+    Ok(())
+}

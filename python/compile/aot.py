@@ -1,0 +1,175 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+artifacts through PJRT and Python never appears on the training path again.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Artifacts per model (mlp / cnn / celeba):
+  {model}_train.hlo.txt     (params[P], x[B,H,W,C], y[B]i32, lr[1]) -> (params', loss)
+  {model}_eval.hlo.txt      (params[P], x[E,H,W,C], y[E]i32) -> (sum_loss, correct i32)
+  {model}_agg.hlo.txt       (stack[K,P], weights[K]) -> params[P]
+  {model}_sparsify.hlo.txt  (values[P], residual[P], threshold[1]) -> (sent, residual')
+plus ``manifest.json`` describing every argument/output shape so the Rust
+runtime is fully manifest-driven.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_model(mdef, out_dir, train_batch, eval_batch, agg_k):
+    """Lower all four entry points for one model; returns manifest entries."""
+    p = mdef.param_count
+    h, w, c = mdef.input_shape
+    entries = {}
+
+    def emit(tag, fn, specs, args_meta, outs_meta):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{mdef.name}_{tag}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries[tag] = {"file": fname, "args": args_meta, "outs": outs_meta}
+        print(f"  {fname}: {len(text)} chars")
+
+    # train: lr enters as a [1] array (a rank-0 scalar is awkward to build
+    # from the rust Literal API).
+    raw_train = M.make_train_step(mdef)
+
+    def train(params, x, y, lr):
+        return raw_train(params, x, y, lr[0])
+
+    emit(
+        "train",
+        train,
+        [
+            _spec((p,)),
+            _spec((train_batch, h, w, c)),
+            _spec((train_batch,), jnp.int32),
+            _spec((1,)),
+        ],
+        [
+            _arg("params", (p,)),
+            _arg("x", (train_batch, h, w, c)),
+            _arg("y", (train_batch,), "i32"),
+            _arg("lr", (1,)),
+        ],
+        [_arg("params", (p,)), _arg("loss", ())],
+    )
+
+    emit(
+        "eval",
+        M.make_eval_batch(mdef),
+        [
+            _spec((p,)),
+            _spec((eval_batch, h, w, c)),
+            _spec((eval_batch,), jnp.int32),
+        ],
+        [
+            _arg("params", (p,)),
+            _arg("x", (eval_batch, h, w, c)),
+            _arg("y", (eval_batch,), "i32"),
+        ],
+        [_arg("sum_loss", ()), _arg("correct", (), "i32")],
+    )
+
+    emit(
+        "agg",
+        M.make_aggregate(agg_k),
+        [_spec((agg_k, p)), _spec((agg_k,))],
+        [_arg("stack", (agg_k, p)), _arg("weights", (agg_k,))],
+        [_arg("params", (p,))],
+    )
+
+    emit(
+        "sparsify",
+        M.make_sparsify(),
+        [_spec((p,)), _spec((p,)), _spec((1,))],
+        [
+            _arg("values", (p,)),
+            _arg("residual", (p,)),
+            _arg("threshold", (1,)),
+        ],
+        [_arg("sent", (p,)), _arg("residual", (p,))],
+    )
+
+    # Initial parameters (He-uniform, seed 0): every node starts from the
+    # same point in D-PSGD, and the Rust side must not re-implement the
+    # init scheme. Raw little-endian f32.
+    init = M.init_params(mdef.spec, seed=0)
+    init_file = f"{mdef.name}_init.f32"
+    import numpy as np
+
+    np.asarray(init, dtype="<f4").tofile(os.path.join(out_dir, init_file))
+    print(f"  {init_file}: {p} params")
+
+    return {
+        "param_count": p,
+        "input_shape": [h, w, c],
+        "num_classes": mdef.num_classes,
+        "train_batch": train_batch,
+        "eval_batch": eval_batch,
+        "agg_k": agg_k,
+        "init_file": init_file,
+        "entries": entries,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="mlp,cnn,celeba")
+    ap.add_argument("--image", type=int, default=16,
+                    help="input image resolution (square)")
+    ap.add_argument("--train-batch", type=int, default=8)
+    ap.add_argument("--eval-batch", type=int, default=32)
+    ap.add_argument("--agg-k", type=int, default=16,
+                    help="max models per aggregation call (degree+1 <= K)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format": 1, "image": args.image, "models": {}}
+    for name in args.models.split(","):
+        name = name.strip()
+        mdef = M.get_model(name, image=args.image)
+        print(f"lowering {name} (P={mdef.param_count}) ...")
+        manifest["models"][name] = lower_model(
+            mdef, args.out_dir, args.train_batch, args.eval_batch, args.agg_k
+        )
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

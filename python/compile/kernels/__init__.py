@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the compute hot-spots (build-time only).
+
+All kernels are lowered with ``interpret=True`` so they inline into plain
+HLO executable by the CPU PJRT client; see DESIGN.md §Hardware-Adaptation.
+"""
+
+from .aggregate import aggregate  # noqa: F401
+from .matmul import dense, matmul  # noqa: F401
+from .sparsify import sparsify  # noqa: F401

@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: weighted neighbor-model aggregation.
+
+The D-PSGD aggregation step is ``theta' = sum_k w_k * theta_k`` over the
+node's own model and its neighbors' models (Metropolis-Hastings weights).
+The kernel streams the ``[K, P]`` stacked-model matrix through VMEM one
+``P``-block at a time and reduces over ``K`` on the VPU — this is the L3
+coordinator's per-round hot path when executed via the exported HLO
+artifact (`artifacts/<model>_aggregate.hlo.txt`).
+
+Oracle: :func:`kernels.ref.aggregate_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# P-axis tile: 8 * 128 lanes of f32 per row of the VREG layout; 4096 keeps
+# the [K, 4096] working set comfortably inside VMEM for K <= 64.
+BLOCK_P = 4096
+
+
+def _aggregate_kernel(stack_ref, w_ref, o_ref):
+    # stack_ref: [K, bp] block, w_ref: [K] weights, o_ref: [bp].
+    # Weighted reduction over K expressed as a (1, K) @ (K, bp) contraction
+    # so a real-TPU lowering maps it onto the MXU; in interpret mode it is a
+    # plain dot.
+    w = w_ref[...].reshape(1, -1)
+    o_ref[...] = jnp.dot(
+        w, stack_ref[...], preferred_element_type=jnp.float32
+    ).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def aggregate(stack, weights, *, block_p: int = BLOCK_P):
+    """``sum_k weights[k] * stack[k, :]`` as a Pallas kernel.
+
+    ``stack``: f32[K, P] — row 0 is conventionally the node's own model.
+    ``weights``: f32[K] — Metropolis-Hastings (or arbitrary) mixing weights;
+    rows a node did not receive carry weight 0, so padding is exact.
+    """
+    k, p = stack.shape
+    bp = min(block_p, p)
+    # Pad P up to a tile multiple; zero tail contributes nothing.
+    pp = -(-p // bp) * bp
+    if pp != p:
+        stack = jnp.pad(stack, ((0, 0), (0, pp - p)))
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp,), jnp.float32),
+        interpret=True,
+    )(stack, weights)
+    return out[:p]

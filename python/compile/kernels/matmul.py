@@ -1,0 +1,169 @@
+"""L1 Pallas kernel: blocked matmul with fused bias and activation.
+
+This is the compute hot-spot of every dense layer in the L2 models
+(`python/compile/model.py`).  The kernel is written TPU-idiomatically —
+tiles sized for VMEM feeding an MXU-shaped ``jnp.dot`` — but is lowered with
+``interpret=True`` on this image so it inlines into plain HLO that the CPU
+PJRT client can execute (real-TPU lowering emits a Mosaic custom-call the
+CPU plugin cannot run; see DESIGN.md §Hardware-Adaptation).
+
+Correctness oracle: :func:`kernels.ref.matmul_ref` (pure jnp), exercised by
+``python/tests/test_kernel_matmul.py`` with hypothesis shape sweeps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-friendly tile sizes.  On TPU the MXU is a 128x128 systolic
+# array; feeding it (128, 128) f32 blocks from VMEM keeps it saturated.  On
+# small problems we shrink blocks to the (padded) problem size instead of
+# wasting VMEM on padding.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, activation, nsteps_k):
+    """Grid = (M/bm, N/bn, K/bk); K is the innermost (sequential) axis.
+
+    The f32 accumulator lives in a VMEM scratch buffer so the MXU output is
+    accumulated at full precision regardless of the input dtype.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _done():
+        out = acc_ref[...]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest tile <= preferred; tiny dims round up to a sublane multiple."""
+    if dim >= preferred:
+        return preferred
+    # Round tiny dims up to a multiple of 8 (f32 sublane) so the tile is
+    # layout-friendly; interpret mode does not care, real TPU does.
+    return max(8, -(-dim // 8) * 8)
+
+
+def _pad_to(x, target, axis):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def matmul(
+    x,
+    w,
+    b=None,
+    *,
+    activation: str = "none",
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+):
+    """``activation(x @ w + b)`` as a blocked Pallas kernel.
+
+    Arbitrary ``(M, K) @ (K, N)`` shapes are supported by padding up to the
+    tile grid and slicing back.  Zero padding is exact for matmul; when the
+    output needed padding (or a bias is given) the bias/activation epilogue
+    runs on the sliced result instead of inside the kernel, so the fused
+    path is kept for aligned no-bias shapes and numerics are identical
+    everywhere.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bk = _pick_block(k, block_k)
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    kp = -(-k // bk) * bk
+
+    xp = _pad_to(_pad_to(x, mp, 0), kp, 1)
+    wp = _pad_to(_pad_to(w, kp, 0), np_, 1)
+    nsteps_k = kp // bk
+
+    fuse = b is None and mp == m and np_ == n
+    out = pl.pallas_call(
+        functools.partial(
+            _matmul_kernel,
+            activation=activation if fuse else "none",
+            nsteps_k=nsteps_k,
+        ),
+        grid=(mp // bm, np_ // bn, nsteps_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp)
+
+    out = out[:m, :n]
+    if not fuse:
+        if b is not None:
+            out = out + b
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+    return out
+
+
+@jax.custom_vjp
+def matmul_ad(x, w):
+    """Differentiable blocked-Pallas matmul.
+
+    ``pallas_call`` has no JVP rule, so the backward pass is supplied
+    explicitly — and itself runs through the same Pallas kernel:
+    ``dx = g @ w.T`` and ``dw = x.T @ g``.
+    """
+    return matmul(x, w)
+
+
+def _matmul_ad_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_ad_bwd(res, g):
+    x, w = res
+    return matmul(g, w.T), matmul(x.T, g)
+
+
+matmul_ad.defvjp(_matmul_ad_fwd, _matmul_ad_bwd)
+
+
+def dense(x, w, b, activation: str = "none"):
+    """Dense layer used by the L2 models (differentiable).
+
+    The matmul runs in the Pallas kernel (fwd and bwd); the bias add and
+    activation form a trivially-differentiable jnp epilogue that XLA fuses
+    into the surrounding HLO.
+    """
+    out = matmul_ad(x, w) + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out

@@ -1,0 +1,29 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here with identical semantics;
+``python/tests/`` asserts allclose between kernel and oracle across
+hypothesis-generated shapes.  The oracles are also what the L2 model uses
+in its reference mode so kernel bugs cannot hide behind model bugs.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, b=None, *, activation: str = "none"):
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+    if b is not None:
+        out = out + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out
+
+
+def aggregate_ref(stack, weights):
+    return jnp.einsum("k,kp->p", weights, stack)
+
+
+def sparsify_ref(values, residual, threshold):
+    corrected = values + residual
+    keep = jnp.abs(corrected) >= threshold[0]
+    sent = jnp.where(keep, corrected, 0.0)
+    return sent, corrected - sent

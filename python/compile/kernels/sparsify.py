@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: threshold sparsification with error feedback.
+
+Sparsifying sharers (TopK, Choco-SGD) send only parameters whose magnitude
+clears a threshold; the un-sent remainder is kept locally as an error
+residual and re-added next round (error feedback).  The top-k *selection*
+(finding the threshold) is done host-side by the Rust coordinator — an
+order-statistics problem that does not vectorize — while this kernel does
+the bandwidth-bound part: fused residual-add, mask, and residual update in
+one pass over the parameter vector (pure VPU elementwise work, one VMEM
+block of P at a time).
+
+Oracle: :func:`kernels.ref.sparsify_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 4096
+
+
+def _sparsify_kernel(v_ref, r_ref, t_ref, out_ref, new_r_ref):
+    corrected = v_ref[...] + r_ref[...]
+    keep = jnp.abs(corrected) >= t_ref[0]
+    sent = jnp.where(keep, corrected, 0.0)
+    out_ref[...] = sent
+    new_r_ref[...] = corrected - sent
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def sparsify(values, residual, threshold, *, block_p: int = BLOCK_P):
+    """Error-compensated threshold sparsification.
+
+    Returns ``(sent, new_residual)`` where
+    ``sent = (v + r) * [|v + r| >= t]`` and ``new_residual = (v + r) - sent``.
+
+    ``values``/``residual``: f32[P]; ``threshold``: f32[1] (runtime scalar —
+    kept as a rank-1 input so it lands in SMEM on real TPU).
+    """
+    p = values.shape[0]
+    bp = min(block_p, p)
+    pp = -(-p // bp) * bp
+    if pp != p:
+        values = jnp.pad(values, (0, pp - p))
+        residual = jnp.pad(residual, (0, pp - p))
+    sent, new_r = pl.pallas_call(
+        _sparsify_kernel,
+        grid=(pp // bp,),
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((pp,), jnp.float32),
+            jax.ShapeDtypeStruct((pp,), jnp.float32),
+        ],
+        interpret=True,
+    )(values, residual, threshold)
+    return sent[:p], new_r[:p]

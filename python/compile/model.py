@@ -1,0 +1,248 @@
+"""L2: JAX models for DecentralizeRs (build-time only).
+
+Defines the training-path compute graphs that the Rust coordinator executes
+through PJRT: per-model ``train_step`` (forward + backward + SGD, matching
+the paper's plain-SGD-no-momentum setup) and ``eval_batch``.  Dense layers
+call the L1 Pallas matmul kernel so the kernel lowers into the same HLO
+module (see ``kernels/matmul.py``).
+
+Parameters cross the Rust<->HLO boundary as ONE flat f32 vector — the same
+representation the DL sharing/aggregation path uses — so the coordinator
+never needs to know the pytree structure.  ``ParamSpec`` records the
+(name, shape) layout; ``flatten``/``unflatten`` are exact inverses.
+
+Models (sized for 1-core CPU emulation; see DESIGN.md substitution table):
+  * ``mlp``    — CIFAR10-S:  flatten -> dense(h, relu) -> dense(10)
+  * ``cnn``    — CIFAR10-S:  2x [conv3x3 + relu + avgpool2] -> dense(10)
+                 (a GN-LeNet-flavored small CNN, convs via lax.conv)
+  * ``celeba`` — CelebA-S:   same CNN shape, 2 classes
+"""
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+from .kernels import ref as kref
+
+
+# --------------------------------------------------------------------------
+# Parameter layout: ordered (name, shape) list <-> flat f32 vector.
+# --------------------------------------------------------------------------
+
+ParamSpec = List[Tuple[str, Tuple[int, ...]]]
+
+
+def param_count(spec: ParamSpec) -> int:
+    total = 0
+    for _, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n
+    return total
+
+
+def unflatten(spec: ParamSpec, flat) -> Dict[str, jnp.ndarray]:
+    params = {}
+    off = 0
+    for name, shape in spec:
+        n = 1
+        for d in shape:
+            n *= d
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten(spec: ParamSpec, params: Dict[str, jnp.ndarray]):
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in spec])
+
+
+def init_params(spec: ParamSpec, seed: int = 0):
+    """He-uniform init for weight matrices/filters, zeros for biases."""
+    key = jax.random.PRNGKey(seed)
+    leaves = []
+    for name, shape in spec:
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:  # bias
+            leaves.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            bound = (6.0 / fan_in) ** 0.5
+            leaves.append(
+                jax.random.uniform(
+                    sub, shape, jnp.float32, minval=-bound, maxval=bound
+                )
+            )
+    flat = jnp.concatenate([l.reshape(-1) for l in leaves])
+    return flat
+
+
+# --------------------------------------------------------------------------
+# Model definitions.
+# --------------------------------------------------------------------------
+
+
+class ModelDef:
+    """A model: its ParamSpec, input shape, and forward function."""
+
+    def __init__(self, name, spec, input_shape, num_classes, forward):
+        self.name = name
+        self.spec = spec
+        self.input_shape = input_shape  # per-example, e.g. (16, 16, 3)
+        self.num_classes = num_classes
+        self.forward = forward  # (params_dict, x, use_ref) -> logits
+
+    @property
+    def param_count(self) -> int:
+        return param_count(self.spec)
+
+
+def _dense(x, w, b, activation, use_ref):
+    if use_ref:
+        return kref.matmul_ref(x, w, b, activation=activation)
+    return kernels.dense(x, w, b, activation=activation)
+
+
+def _mlp_def(image: int = 16, channels: int = 3, hidden: int = 64,
+             classes: int = 10, name: str = "mlp") -> ModelDef:
+    d = image * image * channels
+    spec: ParamSpec = [
+        ("w1", (d, hidden)),
+        ("b1", (hidden,)),
+        ("w2", (hidden, classes)),
+        ("b2", (classes,)),
+    ]
+
+    def forward(p, x, use_ref=False):
+        b = x.shape[0]
+        h = _dense(x.reshape(b, -1), p["w1"], p["b1"], "relu", use_ref)
+        return _dense(h, p["w2"], p["b2"], "none", use_ref)
+
+    return ModelDef(name, spec, (image, image, channels), classes, forward)
+
+
+def _conv(x, w, b):
+    """NHWC conv3x3, SAME padding, stride 1, + bias."""
+    out = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _avgpool2(x):
+    return lax.reduce_window(
+        x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) / 4.0
+
+
+def _cnn_def(image: int = 16, channels: int = 3, classes: int = 10,
+             c1: int = 8, c2: int = 16, name: str = "cnn") -> ModelDef:
+    feat = (image // 4) * (image // 4) * c2
+    spec: ParamSpec = [
+        ("k1", (3, 3, channels, c1)),
+        ("c1b", (c1,)),
+        ("k2", (3, 3, c1, c2)),
+        ("c2b", (c2,)),
+        ("w", (feat, classes)),
+        ("b", (classes,)),
+    ]
+
+    def forward(p, x, use_ref=False):
+        b = x.shape[0]
+        h = jnp.maximum(_conv(x, p["k1"], p["c1b"]), 0.0)
+        h = _avgpool2(h)
+        h = jnp.maximum(_conv(h, p["k2"], p["c2b"]), 0.0)
+        h = _avgpool2(h)
+        return _dense(h.reshape(b, -1), p["w"], p["b"], "none", use_ref)
+
+    return ModelDef(name, spec, (image, image, channels), classes, forward)
+
+
+MODELS: Dict[str, ModelDef] = {
+    "mlp": _mlp_def(),
+    "cnn": _cnn_def(),
+    "celeba": _cnn_def(classes=2, name="celeba"),
+}
+
+
+def get_model(name: str, image: int = 16) -> ModelDef:
+    """Construct a ModelDef; ``image`` rescales the input resolution."""
+    if name == "mlp":
+        return _mlp_def(image=image)
+    if name == "cnn":
+        return _cnn_def(image=image)
+    if name == "celeba":
+        return _cnn_def(image=image, classes=2, name="celeba")
+    raise KeyError(f"unknown model {name!r}; have {sorted(MODELS)}")
+
+
+# --------------------------------------------------------------------------
+# Training / evaluation entry points (what aot.py lowers).
+# --------------------------------------------------------------------------
+
+
+def cross_entropy(logits, y):
+    """Mean softmax cross-entropy; y is int32 class ids."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def make_train_step(mdef: ModelDef, use_ref: bool = False):
+    """(flat_params, x, y, lr) -> (flat_params', loss). Plain SGD."""
+
+    def loss_fn(flat, x, y):
+        p = unflatten(mdef.spec, flat)
+        logits = mdef.forward(p, x, use_ref)
+        return cross_entropy(logits, y)
+
+    def train_step(flat, x, y, lr):
+        loss, grad = jax.value_and_grad(loss_fn)(flat, x, y)
+        return flat - lr * grad, loss
+
+    return train_step
+
+
+def make_eval_batch(mdef: ModelDef, use_ref: bool = False):
+    """(flat_params, x, y) -> (sum_loss, correct_count).
+
+    Returns *sums* (not means) so the Rust side can accumulate exact
+    test-set metrics across batches of any size.
+    """
+
+    def eval_batch(flat, x, y):
+        p = unflatten(mdef.spec, flat)
+        logits = mdef.forward(p, x, use_ref)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        sum_loss = jnp.sum(logz - gold)
+        correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.int32))
+        return sum_loss, correct
+
+    return eval_batch
+
+
+def make_aggregate(k: int):
+    """(stack[K,P], weights[K]) -> [P] via the L1 aggregation kernel."""
+
+    def agg(stack, weights):
+        return kernels.aggregate(stack, weights)
+
+    return agg
+
+
+def make_sparsify():
+    """(values[P], residual[P], threshold[1]) -> (sent[P], residual'[P])."""
+
+    def sp(values, residual, threshold):
+        return kernels.sparsify(values, residual, threshold)
+
+    return sp

@@ -1,0 +1,85 @@
+"""AOT pipeline tests: manifest consistency and HLO text well-formedness.
+
+These lower small modules in-process (fast) and, when ``artifacts/`` exists,
+validate the shipped manifest against the model definitions — the same
+contract the Rust runtime trusts.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip_numerics():
+    """Lower a tiny jitted fn; the HLO text must contain an ENTRY module."""
+
+    def fn(x, y):
+        return (jnp.dot(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "ENTRY" in text and "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_lower_model_writes_all_entries(tmp_path):
+    mdef = M.get_model("cnn", image=8)
+    meta = aot.lower_model(mdef, str(tmp_path), 4, 8, 4)
+    assert set(meta["entries"]) == {"train", "eval", "agg", "sparsify"}
+    for e in meta["entries"].values():
+        path = tmp_path / e["file"]
+        assert path.exists() and path.stat().st_size > 100
+    assert meta["param_count"] == mdef.param_count
+
+
+def test_train_entry_arg_specs(tmp_path):
+    mdef = M.get_model("mlp", image=8)
+    meta = aot.lower_model(mdef, str(tmp_path), 4, 8, 4)
+    args = meta["entries"]["train"]["args"]
+    assert [a["name"] for a in args] == ["params", "x", "y", "lr"]
+    assert args[0]["shape"] == [mdef.param_count]
+    assert args[1]["shape"] == [4, 8, 8, 3]
+    assert args[2]["dtype"] == "i32"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_shipped_manifest_matches_models():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format"] == 1
+    for name, meta in man["models"].items():
+        mdef = M.get_model(name, image=man["image"])
+        assert meta["param_count"] == mdef.param_count, name
+        assert meta["input_shape"] == list(mdef.input_shape)
+        for e in meta["entries"].values():
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(4096)
+            assert "HloModule" in head
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_shipped_train_hlo_shapes_mentioned():
+    """The lowered train module mentions the exact parameter-vector shape."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, meta in man["models"].items():
+        p = meta["param_count"]
+        with open(os.path.join(ART, meta["entries"]["train"]["file"])) as f:
+            text = f.read()
+        assert f"f32[{p}]" in text, name

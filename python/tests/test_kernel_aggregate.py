@@ -1,0 +1,78 @@
+"""Pallas aggregation kernel vs oracle + D-PSGD aggregation invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import aggregate
+from compile.kernels import ref as kref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(1, 24),
+    p=st.integers(1, 9000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_aggregate_matches_ref(k, p, seed):
+    rs = np.random.default_rng(seed)
+    stack = jnp.asarray(rs.standard_normal((k, p)), jnp.float32)
+    w = jnp.asarray(rs.random(k), jnp.float32)
+    got = aggregate(stack, w)
+    want = kref.aggregate_ref(stack, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    k=st.integers(2, 16),
+    kz=st.integers(1, 8),
+    p=st.integers(10, 3000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_zero_weight_rows_are_inert(k, kz, p, seed):
+    """Rows with weight 0 (padding for absent neighbors) change nothing."""
+    rs = np.random.default_rng(seed)
+    stack = jnp.asarray(rs.standard_normal((k, p)), jnp.float32)
+    w = jnp.asarray(rs.random(k), jnp.float32)
+    padded = jnp.concatenate(
+        [stack, jnp.asarray(rs.standard_normal((kz, p)) * 1e6, jnp.float32)]
+    )
+    wpad = jnp.concatenate([w, jnp.zeros((kz,), jnp.float32)])
+    np.testing.assert_allclose(
+        aggregate(padded, wpad), aggregate(stack, w), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_convex_combination_stays_in_hull():
+    """With weights summing to 1, each coordinate stays within min/max."""
+    rs = np.random.default_rng(7)
+    stack = jnp.asarray(rs.standard_normal((6, 500)), jnp.float32)
+    w = jnp.asarray([0.3, 0.2, 0.1, 0.15, 0.15, 0.1], jnp.float32)
+    out = np.asarray(aggregate(stack, w))
+    s = np.asarray(stack)
+    assert (out <= s.max(axis=0) + 1e-5).all()
+    assert (out >= s.min(axis=0) - 1e-5).all()
+
+
+def test_identity_weight_selects_row():
+    rs = np.random.default_rng(8)
+    stack = jnp.asarray(rs.standard_normal((4, 100)), jnp.float32)
+    w = jnp.asarray([0.0, 1.0, 0.0, 0.0], jnp.float32)
+    np.testing.assert_allclose(aggregate(stack, w), stack[1], atol=1e-6)
+
+
+def test_block_boundary_sizes():
+    """P exactly at / one off the kernel tile boundary."""
+    for p in (4095, 4096, 4097, 8192):
+        rs = np.random.default_rng(p)
+        stack = jnp.asarray(rs.standard_normal((3, p)), jnp.float32)
+        w = jnp.asarray([0.5, 0.25, 0.25], jnp.float32)
+        np.testing.assert_allclose(
+            aggregate(stack, w),
+            kref.aggregate_ref(stack, w),
+            rtol=1e-5,
+            atol=1e-4,
+        )

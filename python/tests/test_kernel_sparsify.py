@@ -1,0 +1,80 @@
+"""Pallas sparsification kernel vs oracle + error-feedback invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import sparsify
+from compile.kernels import ref as kref
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def _case(seed, p):
+    rs = np.random.default_rng(seed)
+    v = jnp.asarray(rs.standard_normal(p), jnp.float32)
+    r = jnp.asarray(rs.standard_normal(p) * 0.3, jnp.float32)
+    return v, r
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 9000),
+    t=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sparsify_matches_ref(p, t, seed):
+    v, r = _case(seed, p)
+    th = jnp.asarray([t], jnp.float32)
+    s, nr = sparsify(v, r, th)
+    s2, nr2 = kref.sparsify_ref(v, r, th)
+    np.testing.assert_allclose(s, s2, atol=1e-6)
+    np.testing.assert_allclose(nr, nr2, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 5000),
+    t=st.floats(0.0, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_error_feedback_conserves_mass(p, t, seed):
+    """sent + residual' == values + residual exactly (no information lost)."""
+    v, r = _case(seed, p)
+    s, nr = sparsify(v, r, jnp.asarray([t], jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(s) + np.asarray(nr), np.asarray(v) + np.asarray(r),
+        atol=1e-6,
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    p=st.integers(1, 5000),
+    t=st.floats(0.01, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_disjoint_support(p, t, seed):
+    """Each coordinate is either sent or kept as residual, never both."""
+    v, r = _case(seed, p)
+    s, nr = sparsify(v, r, jnp.asarray([t], jnp.float32))
+    assert (np.asarray(s) * np.asarray(nr) == 0.0).all()
+
+
+def test_threshold_zero_sends_everything():
+    v, r = _case(0, 1000)
+    s, nr = sparsify(v, r, jnp.asarray([0.0], jnp.float32))
+    np.testing.assert_allclose(s, np.asarray(v) + np.asarray(r), atol=1e-6)
+    assert np.abs(np.asarray(nr)).max() == 0.0
+
+
+def test_threshold_monotone_density():
+    """Higher thresholds send fewer coordinates."""
+    v, r = _case(1, 4000)
+    prev = None
+    for t in (0.0, 0.5, 1.0, 2.0, 4.0):
+        s, _ = sparsify(v, r, jnp.asarray([t], jnp.float32))
+        nz = int((np.asarray(s) != 0).sum())
+        if prev is not None:
+            assert nz <= prev
+        prev = nz

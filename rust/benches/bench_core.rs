@@ -1,0 +1,204 @@
+//! Micro-benchmarks of the framework hot paths (the §Perf working set):
+//! aggregation vector math, sharing serialization, compression codecs,
+//! top-k selection, secure-mask expansion, wire framing, in-proc
+//! transport, graph generation, and the PJRT train/agg steps.
+//!
+//! Run: `cargo bench --bench bench_core` (artifact-dependent benches skip
+//! when artifacts are missing).
+
+use decentralize_rs::bench::{black_box, run};
+use decentralize_rs::communication::{decode_envelope, encode_envelope, Envelope, MsgKind};
+use decentralize_rs::compression::{encode_indices_best, FloatCodec, Fp16, Qsgd, RawF32};
+use decentralize_rs::graph;
+use decentralize_rs::model::ParamVec;
+use decentralize_rs::rng::Xoshiro256pp;
+use decentralize_rs::secure;
+use decentralize_rs::sharing::{self, Received, Sharing};
+
+const P: usize = 49_866; // mlp parameter count (the real model size)
+
+fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+}
+
+fn main() {
+    println!("== bench_core: framework hot paths (P = {P}) ==");
+
+    // --- ParamVec math (aggregation inner loop) ---
+    {
+        let mut acc = ParamVec::from_vec(rand_vec(P, 1));
+        let other = ParamVec::from_vec(rand_vec(P, 2));
+        run("paramvec/axpy", 300, || acc.axpy(0.3, black_box(&other)))
+            .print_throughput(P as f64, "elem");
+        run("paramvec/topk_threshold_10pct", 500, || {
+            black_box(other.topk_threshold(P / 10));
+        });
+        run("paramvec/topk_extract_10pct", 500, || {
+            black_box(other.topk(P / 10));
+        });
+    }
+
+    // --- Sharing strategies: outgoing + aggregate ---
+    {
+        let model = ParamVec::from_vec(rand_vec(P, 3));
+        let mut full = sharing::from_spec("full", P, 0).unwrap();
+        let payload = full.outgoing(&model, 0).unwrap();
+        run("sharing/full/outgoing", 300, || {
+            black_box(full.outgoing(&model, 0).unwrap());
+        });
+        let mut model2 = model.clone();
+        run("sharing/full/aggregate_deg5", 300, || {
+            let received: Vec<Received> = (0..5)
+                .map(|s| Received { src: s, weight: 1.0 / 6.0, payload: &payload })
+                .collect();
+            full.aggregate(&mut model2, 1.0 - 5.0 / 6.0, &received).unwrap();
+        });
+
+        let mut choco = sharing::from_spec("choco:0.1:0.5", P, 0).unwrap();
+        choco.set_init(&model);
+        run("sharing/choco/outgoing_10pct", 300, || {
+            black_box(choco.outgoing(&model, 0).unwrap());
+        });
+
+        let mut topk = sharing::from_spec("topk:0.1", P, 0).unwrap();
+        run("sharing/topk/outgoing_10pct", 300, || {
+            black_box(topk.outgoing(&model, 0).unwrap());
+        });
+    }
+
+    // --- Compression codecs ---
+    {
+        let vals = rand_vec(P, 4);
+        run("codec/raw_f32/encode", 200, || {
+            black_box(RawF32.encode(&vals));
+        })
+        .print_throughput(P as f64, "elem");
+        run("codec/fp16/encode", 200, || {
+            black_box(Fp16.encode(&vals));
+        })
+        .print_throughput(P as f64, "elem");
+        let q = Qsgd::new(128, 1);
+        let qenc = q.encode(&vals);
+        run("codec/qsgd/encode", 200, || {
+            black_box(q.encode(&vals));
+        })
+        .print_throughput(P as f64, "elem");
+        run("codec/qsgd/decode", 200, || {
+            black_box(q.decode(&qenc, P).unwrap());
+        });
+        let idx: Vec<u32> = (0..P as u32).step_by(10).collect();
+        run("codec/index_best/encode_10pct", 200, || {
+            black_box(encode_indices_best(&idx, P));
+        });
+    }
+
+    // --- Secure aggregation mask expansion ---
+    {
+        let masker = secure::Masker::new(0, 1, 4.0);
+        run("secure/mask_deg5", 300, || {
+            black_box(masker.mask_for(1, 0, &[0, 2, 3, 4, 5], 6.0, P));
+        })
+        .print_throughput(P as f64, "elem");
+        let seed = [9u8; 16];
+        run("secure/aes_ctr_expand", 300, || {
+            black_box(secure::expand_mask(&seed, P, 1.0));
+        })
+        .print_throughput(P as f64, "elem");
+    }
+
+    // --- Wire framing + transport ---
+    {
+        let env = Envelope {
+            src: 0,
+            dst: 1,
+            round: 3,
+            kind: MsgKind::Model,
+            payload: vec![7u8; P * 4],
+        };
+        let bytes = encode_envelope(&env);
+        run("wire/encode_200KB", 200, || {
+            black_box(encode_envelope(&env));
+        });
+        run("wire/decode_200KB", 200, || {
+            black_box(decode_envelope(&bytes).unwrap());
+        });
+
+        use decentralize_rs::communication::inproc::InprocHub;
+        use decentralize_rs::communication::Transport;
+        let hub = InprocHub::new(2);
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        run("transport/inproc_roundtrip_200KB", 300, || {
+            a.send(env.clone()).unwrap();
+            black_box(b.recv().unwrap());
+        });
+    }
+
+    // --- Graph generation (dynamic-topology path: one graph per round) ---
+    {
+        let mut rng = Xoshiro256pp::new(5);
+        run("graph/random_regular_256_d5", 400, || {
+            black_box(graph::random_regular(256, 5, &mut rng));
+        });
+        let mut rng2 = Xoshiro256pp::new(6);
+        run("graph/mh_weights_256_d5", 200, || {
+            let g = graph::random_regular(256, 5, &mut rng2);
+            black_box(graph::metropolis_hastings(&g));
+        });
+    }
+
+    // --- PJRT engine (needs artifacts) ---
+    let art = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if art.join("manifest.json").exists() {
+        use decentralize_rs::runtime::EngineHandle;
+        let engine = EngineHandle::start(&art, &["mlp"]).unwrap();
+        let meta = engine.manifest().model("mlp").unwrap().clone();
+        let params = meta.load_init().unwrap();
+        let (h, w, c) = meta.input_shape;
+        let x = rand_vec(meta.train_batch * h * w * c, 7);
+        let y: Vec<i32> = (0..meta.train_batch as i32).collect();
+        run("engine/train_step_mlp_b8", 1500, || {
+            black_box(
+                engine
+                    .train_step("mlp", params.clone(), x.clone(), y.clone(), 0.05)
+                    .unwrap(),
+            );
+        });
+        let ex = rand_vec(meta.eval_batch * h * w * c, 8);
+        let ey: Vec<i32> = (0..meta.eval_batch as i32).map(|i| i % 10).collect();
+        run("engine/eval_batch_mlp_b32", 1500, || {
+            black_box(
+                engine
+                    .eval_batch("mlp", params.clone(), ex.clone(), ey.clone())
+                    .unwrap(),
+            );
+        });
+        let stack = rand_vec(meta.agg_k * meta.param_count, 9);
+        let weights = vec![1.0 / meta.agg_k as f32; meta.agg_k];
+        run("engine/pallas_aggregate_k16", 1500, || {
+            black_box(engine.aggregate("mlp", stack.clone(), weights.clone()).unwrap());
+        });
+        // Rust-native aggregation of the same k models (ablation vs the
+        // Pallas artifact; the coordinator uses whichever wins — see
+        // DESIGN.md §Perf).
+        let models: Vec<ParamVec> = (0..meta.agg_k)
+            .map(|i| {
+                ParamVec::from_vec(
+                    stack[i * meta.param_count..(i + 1) * meta.param_count].to_vec(),
+                )
+            })
+            .collect();
+        run("native/aggregate_k16", 300, || {
+            let mut acc = ParamVec::zeros(meta.param_count);
+            for m in &models {
+                acc.axpy(1.0 / meta.agg_k as f32, m);
+            }
+            black_box(acc);
+        });
+        engine.shutdown();
+    } else {
+        println!("(artifacts missing: engine benches skipped — run `make artifacts`)");
+    }
+    println!("== bench_core done ==");
+}

@@ -1,0 +1,37 @@
+//! Figure 3 bench: topology comparison (ring / 5-regular / full /
+//! dynamic 5-regular) at reduced scale. Full-resolution harness:
+//! `cargo run --release --example topologies`.
+
+mod fig_common;
+
+use fig_common::{bench_config, engine_or_skip, run_variant};
+
+fn main() {
+    println!("== fig3: topologies & dynamicity ==");
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+
+    let mut ring = bench_config("fig3/ring");
+    ring.topology = "ring".into();
+    let mut reg = bench_config("fig3/regular5");
+    reg.topology = "regular:5".into();
+    let mut full = bench_config("fig3/full");
+    full.topology = "full".into();
+    let mut dynamic = bench_config("fig3/dynamic5");
+    dynamic.topology = "regular:5".into();
+    dynamic.dynamic = true;
+
+    let r_ring = run_variant(&ring, &engine);
+    let r_reg = run_variant(&reg, &engine);
+    let r_full = run_variant(&full, &engine);
+    let r_dyn = run_variant(&dynamic, &engine);
+
+    // Paper-shape assertions (soft: printed, not panicking, but flagged).
+    let ok_order = r_full.final_accuracy() >= r_reg.final_accuracy()
+        && r_reg.final_accuracy() >= r_ring.final_accuracy() - 0.02;
+    let t_ratio = r_full.final_emu_time() / r_reg.final_emu_time();
+    let b_ratio = r_full.final_bytes_per_node() / r_dyn.final_bytes_per_node();
+    println!("shape: per-round accuracy full>=reg5>=ring : {ok_order}");
+    println!("shape: full/reg5 emulated round-time ratio : {t_ratio:.2}x (paper ~3x)");
+    println!("shape: full/dynamic5 bytes ratio           : {b_ratio:.2}x (paper 51x @256n)");
+    println!("== fig3 done ==");
+}

@@ -1,0 +1,43 @@
+//! Figure 4 bench: sparsification (random sampling, Choco-SGD, TopK) vs
+//! full sharing at a 10% budget, reduced scale. Full-resolution harness:
+//! `cargo run --release --example sparsification`.
+
+mod fig_common;
+
+use fig_common::{bench_config, engine_or_skip, run_variant};
+
+fn main() {
+    println!("== fig4: sparsification vs full sharing (10% budget) ==");
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+
+    let mut full = bench_config("fig4/full");
+    full.rounds = 16;
+    let mut rand = full.clone();
+    rand.name = "fig4/random".into();
+    rand.sharing = "subsample:0.1".into();
+    let mut choco = full.clone();
+    choco.name = "fig4/choco".into();
+    choco.sharing = "choco:0.1:0.6".into();
+    let mut topk = full.clone();
+    topk.name = "fig4/topk".into();
+    topk.sharing = "topk:0.1".into();
+
+    let r_full = run_variant(&full, &engine);
+    let r_rand = run_variant(&rand, &engine);
+    let r_choco = run_variant(&choco, &engine);
+    let r_topk = run_variant(&topk, &engine);
+
+    let budget_ok = r_rand.final_bytes_per_node() < r_full.final_bytes_per_node() * 0.2
+        && r_choco.final_bytes_per_node() < r_full.final_bytes_per_node() * 0.2
+        && r_topk.final_bytes_per_node() < r_full.final_bytes_per_node() * 0.2;
+    println!("shape: sparsifiers honor ~10x byte budget  : {budget_ok}");
+    println!(
+        "shape: full-sharing accuracy lead at equal rounds: {:.4} vs best sparsifier {:.4}",
+        r_full.final_accuracy(),
+        r_rand
+            .final_accuracy()
+            .max(r_choco.final_accuracy())
+            .max(r_topk.final_accuracy())
+    );
+    println!("== fig4 done ==");
+}

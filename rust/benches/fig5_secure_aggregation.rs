@@ -1,0 +1,43 @@
+//! Figure 5 bench: secure aggregation vs plain D-PSGD on both synthetic
+//! datasets, reduced scale. Full-resolution harness:
+//! `cargo run --release --example secure_agg`.
+
+mod fig_common;
+
+use fig_common::{bench_config, engine_or_skip, run_variant};
+
+fn main() {
+    println!("== fig5: secure aggregation ==");
+    let Some(engine) = engine_or_skip(&["mlp", "celeba"]) else { return };
+
+    let mut plain = bench_config("fig5/cifar_dpsgd");
+    plain.topology = "regular:5".into();
+    let mut secure = plain.clone();
+    secure.name = "fig5/cifar_secure".into();
+    secure.secure = true;
+
+    let mut aplain = bench_config("fig5/celeba_dpsgd");
+    aplain.topology = "regular:5".into();
+    aplain.model = "celeba".into();
+    aplain.dataset = "celebas".into();
+    let mut asecure = aplain.clone();
+    asecure.name = "fig5/celeba_secure".into();
+    asecure.secure = true;
+
+    let r_p = run_variant(&plain, &engine);
+    let r_s = run_variant(&secure, &engine);
+    let r_ap = run_variant(&aplain, &engine);
+    let r_as = run_variant(&asecure, &engine);
+
+    let over_c = (r_s.final_bytes_per_node() / r_p.final_bytes_per_node() - 1.0) * 100.0;
+    let over_a = (r_as.final_bytes_per_node() / r_ap.final_bytes_per_node() - 1.0) * 100.0;
+    println!(
+        "shape: CIFAR10-S acc delta {:+.4} | byte overhead {over_c:+.1}% (paper ~ -3% / +3%)",
+        r_s.final_accuracy() - r_p.final_accuracy()
+    );
+    println!(
+        "shape: CelebA-S  acc delta {:+.4} | byte overhead {over_a:+.1}% (paper ~  0% / +3%)",
+        r_as.final_accuracy() - r_ap.final_accuracy()
+    );
+    println!("== fig5 done ==");
+}

@@ -1,0 +1,44 @@
+//! Figure 6 bench: scalability — N vs 4N nodes over the same total
+//! dataset, degree 5 vs 9, reduced scale. Full-resolution harness:
+//! `cargo run --release --example scalability`.
+
+mod fig_common;
+
+use fig_common::{bench_config, engine_or_skip, run_variant};
+
+fn main() {
+    println!("== fig6: scalability (fixed dataset, 4x nodes, degree 5 vs 9) ==");
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+
+    let small_n = 10usize;
+    let large_n = 40usize;
+
+    let mut s5 = bench_config("fig6/small_5reg");
+    s5.nodes = small_n;
+    s5.topology = "regular:5".into();
+    s5.train_total = 1280;
+    let mut l5 = s5.clone();
+    l5.name = "fig6/large_5reg".into();
+    l5.nodes = large_n;
+    let mut l9 = l5.clone();
+    l9.name = "fig6/large_9reg".into();
+    l9.topology = "regular:9".into();
+
+    let r_s5 = run_variant(&s5, &engine);
+    let r_l5 = run_variant(&l5, &engine);
+    let r_l9 = run_variant(&l9, &engine);
+
+    println!(
+        "shape: 5-regular {}n vs {}n accuracy: {:.4} vs {:.4} (paper: ~equal)",
+        small_n,
+        large_n,
+        r_s5.final_accuracy(),
+        r_l5.final_accuracy()
+    );
+    println!(
+        "shape: degree 9 vs 5 at {}n: {:+.1} accuracy points (paper: +5.8)",
+        large_n,
+        (r_l9.final_accuracy() - r_l5.final_accuracy()) * 100.0
+    );
+    println!("== fig6 done ==");
+}

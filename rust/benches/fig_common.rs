@@ -1,0 +1,46 @@
+//! Shared plumbing for the per-figure end-to-end benches: each bench runs
+//! the figure's experiment variants at a reduced scale and prints the
+//! paper-style rows plus wall-clock per variant. Skips cleanly when
+//! artifacts are missing so `cargo bench` always succeeds.
+
+use decentralize_rs::config::ExperimentConfig;
+use decentralize_rs::coordinator::{run_experiment, RunResult};
+use decentralize_rs::runtime::EngineHandle;
+
+/// Reduced-scale base config used by all figure benches (calibrated task
+/// difficulty; see EXPERIMENTS.md).
+pub fn bench_config(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.nodes = 12;
+    cfg.rounds = 12;
+    cfg.eval_every = 6;
+    cfg.train_total = 768;
+    cfg.test_total = 128;
+    cfg.noise = 2.2;
+    cfg.lr = 0.03;
+    cfg.local_steps = 1;
+    cfg
+}
+
+pub fn engine_or_skip(models: &[&str]) -> Option<EngineHandle> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing — run `make artifacts`; bench skipped)");
+        return None;
+    }
+    Some(EngineHandle::start(&dir, models).expect("engine start"))
+}
+
+pub fn run_variant(cfg: &ExperimentConfig, engine: &EngineHandle) -> RunResult {
+    let r = run_experiment(cfg, engine).expect("experiment");
+    println!(
+        "bench {:<28} acc {:>7.4}  bytes/node {:>12.0}  emu {:>8.3}s  wall {:>6.2}s",
+        cfg.name,
+        r.final_accuracy(),
+        r.final_bytes_per_node(),
+        r.final_emu_time(),
+        r.wall_s
+    );
+    r
+}

@@ -1,0 +1,130 @@
+//! Minimal benchmarking framework (criterion is unavailable offline).
+//!
+//! Used by every `cargo bench` target (`harness = false`): warmup, timed
+//! iterations, robust summary (mean / σ / median / min), and an optional
+//! throughput line. Results print in a stable, greppable format:
+//!
+//! ```text
+//! bench <name>  mean 12.34µs  median 12.10µs  sd 0.40µs  min 11.9µs  iters 1000
+//! ```
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{median, Running};
+
+/// One benchmark's summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub sd_s: f64,
+    pub min_s: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "bench {:<44} mean {:>10}  median {:>10}  sd {:>10}  min {:>10}  iters {}",
+            self.name,
+            fmt_s(self.mean_s),
+            fmt_s(self.median_s),
+            fmt_s(self.sd_s),
+            fmt_s(self.min_s),
+            self.iters
+        );
+    }
+
+    /// Print with an ops/sec or items/sec throughput annotation.
+    pub fn print_throughput(&self, items_per_iter: f64, unit: &str) {
+        self.print();
+        let per_sec = items_per_iter / self.mean_s;
+        println!("      {:<44} {:.3e} {unit}/s", "", per_sec);
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.2}µs", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to fill `budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup + calibration: run until 10% of budget or 3 iterations.
+    let warm_budget = budget / 10;
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_iters < 3 || warm_start.elapsed() < warm_budget {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    let target_iters = ((budget.as_secs_f64() * 0.9) / per_iter.max(1e-9)) as usize;
+    let iters = target_iters.clamp(5, 1_000_000);
+
+    let mut r = Running::new();
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        r.push(dt);
+        samples.push(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        mean_s: r.mean(),
+        median_s: median(&samples),
+        sd_s: r.std(),
+        min_s: r.min(),
+        iters,
+    }
+}
+
+/// Convenience: bench and print in one call; returns the result for
+/// comparisons.
+pub fn run<F: FnMut()>(name: &str, budget_ms: u64, f: F) -> BenchResult {
+    let res = bench(name, Duration::from_millis(budget_ms), f);
+    res.print();
+    res
+}
+
+/// Prevent the optimizer from discarding a value (stable-Rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleeps() {
+        let r = bench("sleepy", Duration::from_millis(60), || {
+            std::thread::sleep(Duration::from_millis(2))
+        });
+        assert!(r.mean_s >= 1.5e-3 && r.mean_s < 20e-3, "{}", r.mean_s);
+        assert!(r.iters >= 5);
+        assert!(r.median_s > 0.0 && r.min_s > 0.0);
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert!(fmt_s(2.0).ends_with('s'));
+        assert!(fmt_s(2e-3).ends_with("ms"));
+        assert!(fmt_s(2e-6).ends_with("µs"));
+        assert!(fmt_s(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Per-endpoint traffic counters.
+//!
+//! Figures 3c, 4, and 5 plot *cumulative bytes sent per node*; these
+//! counters are the source of truth for that series. Counted bytes are
+//! wire bytes (header + payload), identically for both transports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Shared atomic counters (cloneable handle).
+#[derive(Debug, Clone, Default)]
+pub struct Counters {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    bytes_sent: AtomicU64,
+    bytes_recv: AtomicU64,
+    msgs_sent: AtomicU64,
+    msgs_recv: AtomicU64,
+}
+
+/// Point-in-time snapshot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CountersSnapshot {
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub msgs_sent: u64,
+    pub msgs_recv: u64,
+}
+
+impl Counters {
+    pub fn new() -> Counters {
+        Counters::default()
+    }
+
+    pub fn on_send(&self, wire_bytes: usize) {
+        self.inner.bytes_sent.fetch_add(wire_bytes as u64, Ordering::Relaxed);
+        self.inner.msgs_sent.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_recv(&self, wire_bytes: usize) {
+        self.inner.bytes_recv.fetch_add(wire_bytes as u64, Ordering::Relaxed);
+        self.inner.msgs_recv.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> CountersSnapshot {
+        CountersSnapshot {
+            bytes_sent: self.inner.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.inner.bytes_recv.load(Ordering::Relaxed),
+            msgs_sent: self.inner.msgs_sent.load(Ordering::Relaxed),
+            msgs_recv: self.inner.msgs_recv.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let c = Counters::new();
+        c.on_send(100);
+        c.on_send(50);
+        c.on_recv(10);
+        let s = c.snapshot();
+        assert_eq!(s.bytes_sent, 150);
+        assert_eq!(s.msgs_sent, 2);
+        assert_eq!(s.bytes_recv, 10);
+        assert_eq!(s.msgs_recv, 1);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let c = Counters::new();
+        let c2 = c.clone();
+        c2.on_send(7);
+        assert_eq!(c.snapshot().bytes_sent, 7);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        let c = Counters::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let h = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        h.on_send(1);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.snapshot().bytes_sent, 4000);
+        assert_eq!(c.snapshot().msgs_sent, 4000);
+    }
+}

@@ -1,0 +1,241 @@
+//! In-process transport: one mailbox per node, used to emulate hundreds
+//! of nodes as threads on one machine (the scale mode of the paper's
+//! evaluation, minus the 16 physical hosts — see DESIGN.md).
+//!
+//! Semantics match the TCP transport: per-sender FIFO order, non-blocking
+//! sends, blocking receives, and wire-byte accounting on both ends.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::{wire_size, Counters, CountersSnapshot, Envelope, Transport};
+
+struct Mailbox {
+    queue: Mutex<MailboxState>,
+    signal: Condvar,
+}
+
+struct MailboxState {
+    messages: VecDeque<Envelope>,
+    open: bool,
+}
+
+/// Shared hub connecting `n` endpoints.
+pub struct InprocHub {
+    boxes: Vec<Arc<Mailbox>>,
+    counters: Vec<Counters>,
+}
+
+impl InprocHub {
+    pub fn new(n: usize) -> Arc<InprocHub> {
+        Arc::new(InprocHub {
+            boxes: (0..n)
+                .map(|_| {
+                    Arc::new(Mailbox {
+                        queue: Mutex::new(MailboxState {
+                            messages: VecDeque::new(),
+                            open: true,
+                        }),
+                        signal: Condvar::new(),
+                    })
+                })
+                .collect(),
+            counters: (0..n).map(|_| Counters::new()).collect(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.boxes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.boxes.is_empty()
+    }
+
+    /// Create the endpoint for node `id`.
+    pub fn endpoint(self: &Arc<Self>, id: usize) -> InprocEndpoint {
+        assert!(id < self.len(), "endpoint id out of range");
+        InprocEndpoint { hub: Arc::clone(self), id }
+    }
+
+    /// Close all mailboxes; blocked receivers drain then observe `None`.
+    pub fn shutdown(&self) {
+        for b in &self.boxes {
+            let mut q = b.queue.lock().unwrap();
+            q.open = false;
+            b.signal.notify_all();
+        }
+    }
+}
+
+/// One node's handle onto the hub.
+pub struct InprocEndpoint {
+    hub: Arc<InprocHub>,
+    id: usize,
+}
+
+impl Transport for InprocEndpoint {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+
+    fn send(&self, env: Envelope) -> Result<()> {
+        if env.dst >= self.hub.len() {
+            bail!("send to unknown node {}", env.dst);
+        }
+        let bytes = wire_size(&env);
+        let mbox = &self.hub.boxes[env.dst];
+        {
+            let mut q = mbox.queue.lock().unwrap();
+            if !q.open {
+                bail!("hub is shut down");
+            }
+            q.messages.push_back(env);
+        }
+        mbox.signal.notify_one();
+        self.hub.counters[self.id].on_send(bytes);
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Option<Envelope>> {
+        let mbox = &self.hub.boxes[self.id];
+        let mut q = mbox.queue.lock().unwrap();
+        loop {
+            if let Some(env) = q.messages.pop_front() {
+                self.hub.counters[self.id].on_recv(wire_size(&env));
+                return Ok(Some(env));
+            }
+            if !q.open {
+                return Ok(None);
+            }
+            q = mbox.signal.wait(q).unwrap();
+        }
+    }
+
+    fn try_recv(&self) -> Result<Option<Envelope>> {
+        let mbox = &self.hub.boxes[self.id];
+        let mut q = mbox.queue.lock().unwrap();
+        if let Some(env) = q.messages.pop_front() {
+            self.hub.counters[self.id].on_recv(wire_size(&env));
+            return Ok(Some(env));
+        }
+        Ok(None)
+    }
+
+    fn counters(&self) -> CountersSnapshot {
+        self.hub.counters[self.id].snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communication::MsgKind;
+
+    fn env(src: usize, dst: usize, round: u64) -> Envelope {
+        Envelope { src, dst, round, kind: MsgKind::Model, payload: vec![0; 10] }
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let hub = InprocHub::new(2);
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        a.send(env(0, 1, 1)).unwrap();
+        let got = b.recv().unwrap().unwrap();
+        assert_eq!(got.src, 0);
+        assert_eq!(got.round, 1);
+    }
+
+    #[test]
+    fn per_sender_fifo_order() {
+        let hub = InprocHub::new(2);
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        for r in 0..50 {
+            a.send(env(0, 1, r)).unwrap();
+        }
+        for r in 0..50 {
+            assert_eq!(b.recv().unwrap().unwrap().round, r);
+        }
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let hub = InprocHub::new(2);
+        let b = hub.endpoint(1);
+        assert!(b.try_recv().unwrap().is_none());
+        hub.endpoint(0).send(env(0, 1, 0)).unwrap();
+        assert!(b.try_recv().unwrap().is_some());
+        assert!(b.try_recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn counters_track_wire_bytes() {
+        let hub = InprocHub::new(2);
+        let a = hub.endpoint(0);
+        let b = hub.endpoint(1);
+        let e = env(0, 1, 0);
+        let expect = wire_size(&e) as u64;
+        a.send(e).unwrap();
+        b.recv().unwrap();
+        assert_eq!(a.counters().bytes_sent, expect);
+        assert_eq!(b.counters().bytes_recv, expect);
+        assert_eq!(a.counters().msgs_sent, 1);
+    }
+
+    #[test]
+    fn shutdown_unblocks_receivers() {
+        let hub = InprocHub::new(1);
+        let e = hub.endpoint(0);
+        let h = Arc::clone(&hub);
+        let t = std::thread::spawn(move || h.endpoint(0).recv().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        hub.shutdown();
+        assert!(t.join().unwrap().is_none());
+        assert!(e.send(env(0, 0, 0)).is_err());
+    }
+
+    #[test]
+    fn shutdown_drains_pending_first() {
+        let hub = InprocHub::new(2);
+        hub.endpoint(0).send(env(0, 1, 7)).unwrap();
+        hub.shutdown();
+        let b = hub.endpoint(1);
+        assert_eq!(b.recv().unwrap().unwrap().round, 7);
+        assert!(b.recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn send_to_unknown_node_fails() {
+        let hub = InprocHub::new(1);
+        assert!(hub.endpoint(0).send(env(0, 9, 0)).is_err());
+    }
+
+    #[test]
+    fn cross_thread_traffic() {
+        let hub = InprocHub::new(4);
+        std::thread::scope(|s| {
+            for id in 0..4usize {
+                let hub = Arc::clone(&hub);
+                s.spawn(move || {
+                    let ep = hub.endpoint(id);
+                    // Everyone sends to everyone.
+                    for dst in 0..4 {
+                        if dst != id {
+                            ep.send(env(id, dst, 0)).unwrap();
+                        }
+                    }
+                    // And receives from everyone else.
+                    let mut seen = std::collections::HashSet::new();
+                    while seen.len() < 3 {
+                        let e = ep.recv().unwrap().unwrap();
+                        seen.insert(e.src);
+                    }
+                });
+            }
+        });
+    }
+}

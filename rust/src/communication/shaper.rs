@@ -1,0 +1,193 @@
+//! Deterministic WAN cost model (network "shaper").
+//!
+//! The paper's emulation measured real wall-clock on 16 machines; on a
+//! single core we instead charge each message a deterministic network
+//! cost and advance an **emulated clock** per node. Per round, a node's
+//! emulated time advances by
+//!
+//! ```text
+//! compute_time + max(0, serialization) + per-neighbor transfer
+//! transfer(bytes) = latency + bytes / bandwidth
+//! ```
+//!
+//! Sends to distinct neighbors share the node's uplink, so a round's
+//! upload time is `latency + total_bytes / bandwidth` under the
+//! (paper-accurate) assumption that the NIC is the bottleneck, and the
+//! round completes when the slowest node's inbound neighbors finish —
+//! which the coordinator computes as a max over the graph. This is what
+//! reproduces Fig 3b's "fully-connected takes ~3x longer for the same
+//! number of rounds" on one machine.
+
+/// Link/host parameters for the emulated network.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkModel {
+    /// One-way message latency in seconds.
+    pub latency_s: f64,
+    /// Per-node uplink bandwidth in bytes/second.
+    pub bandwidth_bps: f64,
+}
+
+impl NetworkModel {
+    /// A LAN-ish default (0.5 ms, 1 Gbit/s).
+    pub fn lan() -> NetworkModel {
+        NetworkModel { latency_s: 0.5e-3, bandwidth_bps: 125e6 }
+    }
+
+    /// A WAN-ish default (40 ms, 100 Mbit/s).
+    pub fn wan() -> NetworkModel {
+        NetworkModel { latency_s: 40e-3, bandwidth_bps: 12.5e6 }
+    }
+
+    /// Time to push `bytes` through the uplink once.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency_s + bytes as f64 / self.bandwidth_bps
+    }
+
+    /// Upload time for one round: all messages share the uplink, latency
+    /// is pipelined (paid once).
+    pub fn round_upload_time(&self, total_bytes: u64) -> f64 {
+        self.latency_s + total_bytes as f64 / self.bandwidth_bps
+    }
+}
+
+/// Heterogeneous fleet: assign each node a network class (paper future
+/// work: FedScale-style device heterogeneity). Deterministic per seed.
+#[derive(Debug, Clone)]
+pub struct HeterogeneousNetwork {
+    models: Vec<NetworkModel>,
+}
+
+impl HeterogeneousNetwork {
+    /// `wan_fraction` of nodes get WAN links, the rest LAN.
+    pub fn lan_wan_mix(nodes: usize, wan_fraction: f64, seed: u64) -> HeterogeneousNetwork {
+        let mut rng = crate::rng::Xoshiro256pp::new(seed);
+        let models = (0..nodes)
+            .map(|_| {
+                if rng.next_f64() < wan_fraction {
+                    NetworkModel::wan()
+                } else {
+                    NetworkModel::lan()
+                }
+            })
+            .collect();
+        HeterogeneousNetwork { models }
+    }
+
+    pub fn model_for(&self, node: usize) -> NetworkModel {
+        self.models[node % self.models.len().max(1)]
+    }
+
+    /// The straggler effect: a synchronous round completes when the
+    /// slowest node finishes its upload.
+    pub fn round_time(&self, bytes_per_node: u64) -> f64 {
+        self.models
+            .iter()
+            .map(|m| m.round_upload_time(bytes_per_node))
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Per-node emulated clock.
+#[derive(Debug, Clone, Default)]
+pub struct EmuClock {
+    now_s: f64,
+}
+
+impl EmuClock {
+    pub fn new() -> EmuClock {
+        EmuClock { now_s: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now_s
+    }
+
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative time step");
+        self.now_s += dt;
+    }
+
+    /// Synchronize to a barrier instant (round end).
+    pub fn sync_to(&mut self, t: f64) {
+        if t > self.now_s {
+            self.now_s = t;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_components() {
+        let m = NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 };
+        assert!((m.transfer_time(500) - 0.51).abs() < 1e-12);
+        assert!((m.transfer_time(0) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upload_shares_uplink() {
+        let m = NetworkModel { latency_s: 0.0, bandwidth_bps: 100.0 };
+        // 10 messages of 100B = 1000B -> 10 s, not 10 x (100/100) in parallel.
+        assert!((m.round_upload_time(1000) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn denser_topology_costs_more_time() {
+        // The Fig 3b mechanism: same payload per neighbor, more neighbors
+        // -> proportionally longer upload.
+        let m = NetworkModel::lan();
+        let per_msg = 200_000u64;
+        let ring = m.round_upload_time(2 * per_msg);
+        let reg5 = m.round_upload_time(5 * per_msg);
+        let full = m.round_upload_time(255 * per_msg);
+        assert!(ring < reg5 && reg5 < full);
+        assert!(full / reg5 > 10.0);
+    }
+
+    #[test]
+    fn clock_advances_and_syncs() {
+        let mut c = EmuClock::new();
+        c.advance(1.5);
+        c.sync_to(1.0); // no-op backwards
+        assert!((c.now() - 1.5).abs() < 1e-12);
+        c.sync_to(2.0);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heterogeneous_mix_deterministic_and_mixed() {
+        let h1 = HeterogeneousNetwork::lan_wan_mix(64, 0.5, 9);
+        let h2 = HeterogeneousNetwork::lan_wan_mix(64, 0.5, 9);
+        let lans = (0..64)
+            .filter(|&i| h1.model_for(i) == NetworkModel::lan())
+            .count();
+        assert!((16..=48).contains(&lans), "{lans} LAN nodes");
+        for i in 0..64 {
+            assert_eq!(h1.model_for(i), h2.model_for(i));
+        }
+    }
+
+    #[test]
+    fn heterogeneous_round_time_is_straggler_bound() {
+        let h = HeterogeneousNetwork::lan_wan_mix(32, 0.25, 3);
+        let t = h.round_time(1_000_000);
+        // Must equal the WAN upload time (the slowest class present).
+        let wan = NetworkModel::wan().round_upload_time(1_000_000);
+        assert!((t - wan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_lan_mix_has_lan_round_time() {
+        let h = HeterogeneousNetwork::lan_wan_mix(8, 0.0, 1);
+        let t = h.round_time(500_000);
+        assert!((t - NetworkModel::lan().round_upload_time(500_000)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presets_sane() {
+        assert!(NetworkModel::wan().latency_s > NetworkModel::lan().latency_s);
+        assert!(NetworkModel::wan().bandwidth_bps < NetworkModel::lan().bandwidth_bps);
+    }
+}

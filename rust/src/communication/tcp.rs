@@ -1,0 +1,290 @@
+//! TCP transport: real sockets for multi-process / multi-machine
+//! deployment ("the same testbed can run in a cluster environment or on
+//! real-world machines over WANs by just configuring the IP address
+//! information", paper §2.1).
+//!
+//! Frames are the same wire encoding as everywhere else, length-delimited
+//! by the header's `len` field. One listener thread accepts inbound
+//! connections and spawns a reader thread per peer; outbound connections
+//! are cached per destination. All inbound messages funnel into one
+//! mailbox, preserving per-sender FIFO order (TCP guarantees in-order
+//! delivery per connection).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use super::{
+    encode_envelope, Counters, CountersSnapshot, Envelope, Transport,
+    WIRE_HEADER_BYTES,
+};
+
+/// Shared inbox fed by reader threads.
+struct Inbox {
+    queue: Mutex<InboxState>,
+    signal: Condvar,
+}
+
+struct InboxState {
+    messages: std::collections::VecDeque<Envelope>,
+    open: bool,
+}
+
+/// TCP transport endpoint for one node.
+pub struct TcpTransport {
+    id: usize,
+    /// node id -> address of every peer (the mapping module provides it).
+    peers: Vec<SocketAddr>,
+    inbox: Arc<Inbox>,
+    outbound: Mutex<HashMap<usize, TcpStream>>,
+    counters: Counters,
+    listener_addr: SocketAddr,
+}
+
+impl TcpTransport {
+    /// Bind `addr` for node `id` and start the acceptor thread.
+    ///
+    /// `peers[i]` must be the listen address of node `i` (including our
+    /// own, which is ignored for sends).
+    pub fn bind(id: usize, addr: SocketAddr, peers: Vec<SocketAddr>) -> Result<Arc<TcpTransport>> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr} for node {id}"))?;
+        let local = listener.local_addr()?;
+        let inbox = Arc::new(Inbox {
+            queue: Mutex::new(InboxState {
+                messages: std::collections::VecDeque::new(),
+                open: true,
+            }),
+            signal: Condvar::new(),
+        });
+        let t = Arc::new(TcpTransport {
+            id,
+            peers,
+            inbox: Arc::clone(&inbox),
+            outbound: Mutex::new(HashMap::new()),
+            counters: Counters::new(),
+            listener_addr: local,
+        });
+        let accept_inbox = Arc::clone(&inbox);
+        let counters = t.counters.clone();
+        std::thread::Builder::new()
+            .name(format!("tcp-accept-{id}"))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    let Ok(stream) = stream else { break };
+                    let inbox = Arc::clone(&accept_inbox);
+                    let counters = counters.clone();
+                    std::thread::Builder::new()
+                        .name("tcp-reader".into())
+                        .spawn(move || {
+                            let _ = reader_loop(stream, &inbox, &counters);
+                        })
+                        .ok();
+                    // Stop accepting once the inbox is closed.
+                    if !accept_inbox.queue.lock().unwrap().open {
+                        break;
+                    }
+                }
+            })
+            .context("spawning acceptor")?;
+        Ok(t)
+    }
+
+    /// The actual bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener_addr
+    }
+
+    /// Close the inbox; readers drain, receivers observe `None`.
+    pub fn shutdown(&self) {
+        let mut q = self.inbox.queue.lock().unwrap();
+        q.open = false;
+        self.inbox.signal.notify_all();
+        // Nudge the acceptor loop awake so it can exit.
+        drop(q);
+        let _ = TcpStream::connect(self.listener_addr);
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, inbox: &Inbox, counters: &Counters) -> Result<()> {
+    loop {
+        let mut header = [0u8; WIRE_HEADER_BYTES];
+        if read_exact_or_eof(&mut stream, &mut header)? {
+            return Ok(()); // clean EOF
+        }
+        let len = u32::from_le_bytes(header[20..24].try_into().unwrap()) as usize;
+        let mut frame = vec![0u8; WIRE_HEADER_BYTES + len];
+        frame[..WIRE_HEADER_BYTES].copy_from_slice(&header);
+        stream.read_exact(&mut frame[WIRE_HEADER_BYTES..])?;
+        let env = super::decode_envelope(&frame)?;
+        counters.on_recv(frame.len());
+        let mut q = inbox.queue.lock().unwrap();
+        if !q.open {
+            return Ok(());
+        }
+        q.messages.push_back(env);
+        inbox.signal.notify_one();
+    }
+}
+
+/// Returns Ok(true) on EOF before any byte, Ok(false) when filled.
+fn read_exact_or_eof(stream: &mut TcpStream, buf: &mut [u8]) -> Result<bool> {
+    let mut read = 0usize;
+    while read < buf.len() {
+        let n = stream.read(&mut buf[read..])?;
+        if n == 0 {
+            if read == 0 {
+                return Ok(true);
+            }
+            bail!("connection closed mid-frame");
+        }
+        read += n;
+    }
+    Ok(false)
+}
+
+impl Transport for Arc<TcpTransport> {
+    fn node_id(&self) -> usize {
+        self.id
+    }
+
+    fn send(&self, env: Envelope) -> Result<()> {
+        if env.dst >= self.peers.len() {
+            bail!("send to unknown node {}", env.dst);
+        }
+        let bytes = encode_envelope(&env);
+        let mut outbound = self.outbound.lock().unwrap();
+        let stream = match outbound.entry(env.dst) {
+            std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let s = TcpStream::connect(self.peers[env.dst]).with_context(|| {
+                    format!("connecting to node {} at {}", env.dst, self.peers[env.dst])
+                })?;
+                s.set_nodelay(true).ok();
+                e.insert(s)
+            }
+        };
+        stream.write_all(&bytes)?;
+        self.counters.on_send(bytes.len());
+        Ok(())
+    }
+
+    fn recv(&self) -> Result<Option<Envelope>> {
+        let mut q = self.inbox.queue.lock().unwrap();
+        loop {
+            if let Some(env) = q.messages.pop_front() {
+                return Ok(Some(env));
+            }
+            if !q.open {
+                return Ok(None);
+            }
+            q = self.inbox.signal.wait(q).unwrap();
+        }
+    }
+
+    fn try_recv(&self) -> Result<Option<Envelope>> {
+        let mut q = self.inbox.queue.lock().unwrap();
+        Ok(q.messages.pop_front())
+    }
+
+    fn counters(&self) -> CountersSnapshot {
+        self.counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communication::{wire_size, MsgKind};
+
+    fn localhost() -> SocketAddr {
+        "127.0.0.1:0".parse().unwrap()
+    }
+
+    /// Reserve `n` ephemeral ports, then bind a transport per node with
+    /// the full peer table (the tiny release/re-bind race is fine for
+    /// loopback tests).
+    fn mesh(n: usize) -> Vec<Arc<TcpTransport>> {
+        let raw: Vec<(TcpListener, SocketAddr)> = (0..n)
+            .map(|_| {
+                let l = TcpListener::bind(localhost()).unwrap();
+                let a = l.local_addr().unwrap();
+                (l, a)
+            })
+            .collect();
+        let table: Vec<SocketAddr> = raw.iter().map(|(_, a)| *a).collect();
+        drop(raw);
+        (0..n)
+            .map(|i| TcpTransport::bind(i, table[i], table.clone()).unwrap())
+            .collect()
+    }
+
+    fn env(src: usize, dst: usize, round: u64, len: usize) -> Envelope {
+        Envelope { src, dst, round, kind: MsgKind::Model, payload: vec![7; len] }
+    }
+
+    #[test]
+    fn two_node_roundtrip() {
+        let nodes = mesh(2);
+        nodes[0].send(env(0, 1, 5, 100)).unwrap();
+        let got = nodes[1].recv().unwrap().unwrap();
+        assert_eq!(got.src, 0);
+        assert_eq!(got.round, 5);
+        assert_eq!(got.payload.len(), 100);
+        for n in &nodes {
+            n.shutdown();
+        }
+    }
+
+    #[test]
+    fn large_frame_and_counters() {
+        let nodes = mesh(2);
+        let e = env(0, 1, 0, 200_000);
+        let expect = wire_size(&e) as u64;
+        nodes[0].send(e).unwrap();
+        let got = nodes[1].recv().unwrap().unwrap();
+        assert_eq!(got.payload.len(), 200_000);
+        assert_eq!(nodes[0].counters().bytes_sent, expect);
+        assert_eq!(nodes[1].counters().bytes_recv, expect);
+        for n in &nodes {
+            n.shutdown();
+        }
+    }
+
+    #[test]
+    fn bidirectional_and_fifo() {
+        let nodes = mesh(3);
+        for r in 0..20 {
+            nodes[0].send(env(0, 2, r, 10)).unwrap();
+            nodes[1].send(env(1, 2, r, 10)).unwrap();
+        }
+        let mut from0 = Vec::new();
+        let mut from1 = Vec::new();
+        for _ in 0..40 {
+            let e = nodes[2].recv().unwrap().unwrap();
+            if e.src == 0 {
+                from0.push(e.round);
+            } else {
+                from1.push(e.round);
+            }
+        }
+        assert_eq!(from0, (0..20).collect::<Vec<_>>());
+        assert_eq!(from1, (0..20).collect::<Vec<_>>());
+        for n in &nodes {
+            n.shutdown();
+        }
+    }
+
+    #[test]
+    fn shutdown_unblocks() {
+        let nodes = mesh(1);
+        let n0 = Arc::clone(&nodes[0]);
+        let t = std::thread::spawn(move || n0.recv().unwrap());
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        nodes[0].shutdown();
+        assert!(t.join().unwrap().is_none());
+    }
+}

@@ -1,0 +1,132 @@
+//! Binary wire format for envelopes.
+//!
+//! Frame layout (little-endian):
+//! ```text
+//! magic   u16  0xDC17
+//! version u8   1
+//! kind    u8
+//! src     u32
+//! dst     u32
+//! round   u64
+//! len     u32  payload byte length
+//! payload [u8; len]
+//! ```
+//! Both transports count `wire_size()` bytes per message, so in-process
+//! emulation reports exactly what a TCP deployment would put on the wire.
+
+use anyhow::{bail, Result};
+
+use super::{Envelope, MsgKind};
+
+pub const WIRE_MAGIC: u16 = 0xDC17;
+pub const WIRE_VERSION: u8 = 1;
+/// Fixed header size in bytes.
+pub const WIRE_HEADER_BYTES: usize = 2 + 1 + 1 + 4 + 4 + 8 + 4;
+
+/// Total wire bytes for an envelope.
+pub fn wire_size(env: &Envelope) -> usize {
+    WIRE_HEADER_BYTES + env.payload.len()
+}
+
+/// Encode to a fresh buffer.
+pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
+    let mut out = Vec::with_capacity(wire_size(env));
+    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out.push(WIRE_VERSION);
+    out.push(env.kind as u8);
+    out.extend_from_slice(&(env.src as u32).to_le_bytes());
+    out.extend_from_slice(&(env.dst as u32).to_le_bytes());
+    out.extend_from_slice(&env.round.to_le_bytes());
+    out.extend_from_slice(&(env.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&env.payload);
+    out
+}
+
+/// Decode a full frame (exact fit required).
+pub fn decode_envelope(bytes: &[u8]) -> Result<Envelope> {
+    if bytes.len() < WIRE_HEADER_BYTES {
+        bail!("frame too short: {} bytes", bytes.len());
+    }
+    let magic = u16::from_le_bytes([bytes[0], bytes[1]]);
+    if magic != WIRE_MAGIC {
+        bail!("bad magic {magic:#06x}");
+    }
+    if bytes[2] != WIRE_VERSION {
+        bail!("unsupported wire version {}", bytes[2]);
+    }
+    let kind = MsgKind::from_u8(bytes[3])
+        .ok_or_else(|| anyhow::anyhow!("unknown message kind {}", bytes[3]))?;
+    let src = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let dst = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let round = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let len = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
+    if bytes.len() != WIRE_HEADER_BYTES + len {
+        bail!(
+            "frame length mismatch: header says {}, have {}",
+            WIRE_HEADER_BYTES + len,
+            bytes.len()
+        );
+    }
+    Ok(Envelope {
+        src,
+        dst,
+        round,
+        kind,
+        payload: bytes[WIRE_HEADER_BYTES..].to_vec(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> Envelope {
+        Envelope {
+            src: 3,
+            dst: 77,
+            round: 12345,
+            kind: MsgKind::Model,
+            payload: vec![1, 2, 3, 4, 5],
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let e = env();
+        let bytes = encode_envelope(&e);
+        assert_eq!(bytes.len(), wire_size(&e));
+        assert_eq!(decode_envelope(&bytes).unwrap(), e);
+    }
+
+    #[test]
+    fn empty_payload() {
+        let e = Envelope { payload: vec![], ..env() };
+        assert_eq!(decode_envelope(&encode_envelope(&e)).unwrap(), e);
+        assert_eq!(wire_size(&e), WIRE_HEADER_BYTES);
+    }
+
+    #[test]
+    fn rejects_corruption() {
+        let e = env();
+        let bytes = encode_envelope(&e);
+        assert!(decode_envelope(&bytes[..10]).is_err()); // truncated
+        let mut bad_magic = bytes.clone();
+        bad_magic[0] = 0;
+        assert!(decode_envelope(&bad_magic).is_err());
+        let mut bad_ver = bytes.clone();
+        bad_ver[2] = 9;
+        assert!(decode_envelope(&bad_ver).is_err());
+        let mut bad_kind = bytes.clone();
+        bad_kind[3] = 200;
+        assert!(decode_envelope(&bad_kind).is_err());
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(decode_envelope(&extra).is_err());
+    }
+
+    #[test]
+    fn header_size_constant_matches() {
+        let e = Envelope { payload: vec![], ..env() };
+        assert_eq!(encode_envelope(&e).len(), WIRE_HEADER_BYTES);
+    }
+}

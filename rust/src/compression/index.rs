@@ -1,0 +1,201 @@
+//! Index codecs for sorted u32 coordinate lists (sparse messages).
+
+use anyhow::{bail, Result};
+
+use super::IndexCodec;
+
+/// LEB128 varint over first-order deltas — compact when indices cluster.
+pub struct VarintDelta;
+
+impl IndexCodec for VarintDelta {
+    fn name(&self) -> &'static str {
+        "varint_delta"
+    }
+
+    fn encode(&self, indices: &[u32]) -> Vec<u8> {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "unsorted indices");
+        let mut out = Vec::with_capacity(indices.len() * 2 + 5);
+        write_varint(indices.len() as u64, &mut out);
+        let mut prev = 0u32;
+        for (i, &x) in indices.iter().enumerate() {
+            let delta = if i == 0 { x } else { x - prev - 1 };
+            write_varint(delta as u64, &mut out);
+            prev = x;
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Vec<u32>> {
+        let mut pos = 0usize;
+        let count = read_varint(bytes, &mut pos)? as usize;
+        let mut out = Vec::with_capacity(count);
+        let mut prev = 0u32;
+        for i in 0..count {
+            let delta = read_varint(bytes, &mut pos)? as u32;
+            let x = if i == 0 { delta } else { prev + delta + 1 };
+            out.push(x);
+            prev = x;
+        }
+        if pos != bytes.len() {
+            bail!("varint_delta: {} trailing bytes", bytes.len() - pos);
+        }
+        Ok(out)
+    }
+}
+
+/// Dense bitmap over `dim` coordinates — compact when density > ~1/8.
+pub struct Bitmask {
+    pub dim: usize,
+}
+
+impl IndexCodec for Bitmask {
+    fn name(&self) -> &'static str {
+        "bitmask"
+    }
+
+    fn encode(&self, indices: &[u32]) -> Vec<u8> {
+        let mut out = vec![0u8; (self.dim + 7) / 8];
+        for &i in indices {
+            debug_assert!((i as usize) < self.dim);
+            out[i as usize / 8] |= 1 << (i % 8);
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8]) -> Result<Vec<u32>> {
+        if bytes.len() != (self.dim + 7) / 8 {
+            bail!(
+                "bitmask: expected {} bytes for dim {}, got {}",
+                (self.dim + 7) / 8,
+                self.dim,
+                bytes.len()
+            );
+        }
+        let mut out = Vec::new();
+        for (byte_i, &b) in bytes.iter().enumerate() {
+            let mut rem = b;
+            while rem != 0 {
+                let bit = rem.trailing_zeros();
+                let idx = byte_i as u32 * 8 + bit;
+                if (idx as usize) < self.dim {
+                    out.push(idx);
+                }
+                rem &= rem - 1;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Adaptive index encoding: pick varint-delta or bitmask, whichever is
+/// smaller, with a 1-byte tag. This is what the sparse sharers use.
+pub fn encode_indices_best(indices: &[u32], dim: usize) -> Vec<u8> {
+    let varint = VarintDelta.encode(indices);
+    let mask_len = (dim + 7) / 8;
+    if varint.len() <= mask_len {
+        let mut out = Vec::with_capacity(varint.len() + 1);
+        out.push(0u8);
+        out.extend_from_slice(&varint);
+        out
+    } else {
+        let mut out = Vec::with_capacity(mask_len + 1);
+        out.push(1u8);
+        out.extend_from_slice(&Bitmask { dim }.encode(indices));
+        out
+    }
+}
+
+/// Inverse of [`encode_indices_best`].
+pub fn decode_indices_best(bytes: &[u8], dim: usize) -> Result<Vec<u32>> {
+    let Some((&tag, body)) = bytes.split_first() else {
+        bail!("empty index payload");
+    };
+    match tag {
+        0 => VarintDelta.decode(body),
+        1 => Bitmask { dim }.decode(body),
+        t => bail!("unknown index codec tag {t}"),
+    }
+}
+
+pub(crate) fn write_varint(mut v: u64, out: &mut Vec<u8>) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+pub(crate) fn read_varint(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = bytes.get(*pos) else {
+            bail!("varint: truncated input");
+        };
+        *pos += 1;
+        if shift >= 64 {
+            bail!("varint: overflow");
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_scalar_roundtrip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_varint(v, &mut buf);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn empty_index_lists() {
+        assert_eq!(VarintDelta.decode(&VarintDelta.encode(&[])).unwrap(), Vec::<u32>::new());
+        let bm = Bitmask { dim: 10 };
+        assert_eq!(bm.decode(&bm.encode(&[])).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn bitmask_edge_bits() {
+        let bm = Bitmask { dim: 17 };
+        let idx = vec![0u32, 7, 8, 15, 16];
+        assert_eq!(bm.decode(&bm.encode(&idx)).unwrap(), idx);
+    }
+
+    #[test]
+    fn adaptive_tag_roundtrip_extremes() {
+        let dim = 80_000;
+        for idx in [
+            vec![0u32],
+            (0..dim as u32).step_by(2).collect::<Vec<_>>(),
+            (0..100u32).collect::<Vec<_>>(),
+        ] {
+            let enc = encode_indices_best(&idx, dim);
+            assert_eq!(decode_indices_best(&enc, dim).unwrap(), idx);
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_trailing() {
+        let enc = VarintDelta.encode(&[1, 5, 9]);
+        assert!(VarintDelta.decode(&enc[..enc.len() - 1]).is_err());
+        let mut extra = enc.clone();
+        extra.push(0);
+        assert!(VarintDelta.decode(&extra).is_err());
+    }
+}

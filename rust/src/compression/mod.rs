@@ -1,0 +1,138 @@
+//! Compression (the paper's *Compression* module): "general-purpose
+//! compression algorithms for floating-point and integer lists".
+//!
+//! Float codecs ([`FloatCodec`]) compress parameter values; index codecs
+//! ([`IndexCodec`]) compress the sorted coordinate lists of sparse
+//! messages. The sharing layer composes them and accounts for every wire
+//! byte, which is what Figures 3c/4/5 measure.
+
+mod float;
+mod index;
+
+pub use float::*;
+pub use index::*;
+
+/// Lossy-or-lossless codec for f32 slices.
+pub trait FloatCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn encode(&self, values: &[f32]) -> Vec<u8>;
+    /// Decode; `n` is the expected element count (codecs may or may not
+    /// need it, but the caller always knows it).
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>>;
+    /// Wire bytes per element (fractional allowed), for cost estimation.
+    fn bytes_per_element(&self) -> f64;
+}
+
+/// Codec for strictly-increasing u32 index lists.
+pub trait IndexCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn encode(&self, indices: &[u32]) -> Vec<u8>;
+    fn decode(&self, bytes: &[u8]) -> anyhow::Result<Vec<u32>>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn sample_values(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Xoshiro256pp::new(seed);
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn raw_roundtrip_exact() {
+        let v = sample_values(1000, 1);
+        let c = RawF32;
+        let dec = c.decode(&c.encode(&v), v.len()).unwrap();
+        assert_eq!(dec, v);
+        assert_eq!(c.encode(&v).len(), 4000);
+    }
+
+    #[test]
+    fn fp16_roundtrip_bounded_error() {
+        let v = sample_values(1000, 2);
+        let c = Fp16;
+        let enc = c.encode(&v);
+        assert_eq!(enc.len(), 2000);
+        let dec = c.decode(&enc, v.len()).unwrap();
+        for (a, b) in v.iter().zip(dec.iter()) {
+            assert!((a - b).abs() <= a.abs() * 1e-3 + 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn qsgd_unbiased_and_compact() {
+        let v = sample_values(4096, 3);
+        let c = Qsgd::new(256, 7);
+        let enc = c.encode(&v);
+        // 1 byte/level + 4-byte norm header.
+        assert!(enc.len() <= v.len() + 16, "{}", enc.len());
+        let dec = c.decode(&enc, v.len()).unwrap();
+        // Stochastic quantization is unbiased: mean error ~0, bounded max.
+        let me: f64 =
+            v.iter().zip(&dec).map(|(a, b)| (a - b) as f64).sum::<f64>() / v.len() as f64;
+        assert!(me.abs() < 5e-3, "mean err {me}");
+        let linf = v.iter().cloned().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in v.iter().zip(dec.iter()) {
+            assert!((a - b).abs() <= 2.0 * linf / 255.0 + 1e-5);
+        }
+    }
+
+    #[test]
+    fn qsgd_empty_and_zero_vectors() {
+        let c = Qsgd::new(16, 1);
+        assert_eq!(c.decode(&c.encode(&[]), 0).unwrap(), Vec::<f32>::new());
+        let z = vec![0.0f32; 64];
+        assert_eq!(c.decode(&c.encode(&z), 64).unwrap(), z);
+    }
+
+    #[test]
+    fn varint_delta_roundtrip() {
+        let idx: Vec<u32> = vec![0, 1, 5, 100, 101, 70000, 1 << 30];
+        let c = VarintDelta;
+        let dec = c.decode(&c.encode(&idx)).unwrap();
+        assert_eq!(dec, idx);
+    }
+
+    #[test]
+    fn varint_delta_compresses_dense_runs() {
+        let idx: Vec<u32> = (1000..2000).collect();
+        let enc = VarintDelta.encode(&idx);
+        // Consecutive deltas are 1 -> 1 byte each (plus the first index).
+        assert!(enc.len() < 1010, "{}", enc.len());
+    }
+
+    #[test]
+    fn bitmask_roundtrip_and_size() {
+        let dim = 1000;
+        let idx: Vec<u32> = (0..dim).filter(|i| i % 7 == 0).collect();
+        let c = Bitmask { dim: dim as usize };
+        let enc = c.encode(&idx);
+        assert_eq!(enc.len(), (dim as usize + 7) / 8);
+        assert_eq!(c.decode(&enc).unwrap(), idx);
+    }
+
+    #[test]
+    fn best_index_codec_picks_smaller() {
+        let dim = 10_000;
+        let sparse: Vec<u32> = vec![5, 600, 9000];
+        let dense: Vec<u32> = (0..9000).collect();
+        assert!(encode_indices_best(&sparse, dim).len() < Bitmask { dim }.encode(&sparse).len() + 2);
+        let d = encode_indices_best(&dense, dim);
+        let roundtrip = decode_indices_best(&d, dim).unwrap();
+        assert_eq!(roundtrip, dense);
+        let s = encode_indices_best(&sparse, dim);
+        assert_eq!(decode_indices_best(&s, dim).unwrap(), sparse);
+    }
+
+    #[test]
+    fn decode_rejects_truncated() {
+        let v = sample_values(10, 4);
+        let enc = RawF32.encode(&v);
+        assert!(RawF32.decode(&enc[..enc.len() - 1], 10).is_err());
+        let q = Qsgd::new(16, 1).encode(&v);
+        assert!(Qsgd::new(16, 1).decode(&q[..2], 10).is_err());
+        assert!(VarintDelta.decode(&[0x80]).is_err());
+    }
+}

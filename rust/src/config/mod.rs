@@ -1,0 +1,289 @@
+//! Experiment configuration (JSON), validation, and presets.
+//!
+//! One config fully describes a run: dataset + partition, model, topology
+//! (static or dynamic), sharing algorithm, secure aggregation, optimizer
+//! settings, network model, and output locations. The figure harnesses in
+//! `examples/` are thin loops over these configs, mirroring how the paper
+//! swaps graph/sharing specifications per experiment (Fig 1).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Fully-resolved experiment configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Experiment label (used for the results directory name).
+    pub name: String,
+    pub nodes: usize,
+    /// Communication rounds to run.
+    pub rounds: u64,
+    /// Evaluate every k rounds (1 = every round).
+    pub eval_every: u64,
+    /// Master seed; per-node / per-round streams derive from it.
+    pub seed: u64,
+    /// Model name in the artifact manifest: mlp | cnn | celeba.
+    pub model: String,
+    /// Dataset family: cifar10s | celebas.
+    pub dataset: String,
+    /// Square image resolution (must match the lowered artifacts).
+    pub image: usize,
+    /// Global train/test example counts (split across nodes).
+    pub train_total: usize,
+    pub test_total: usize,
+    /// Synthetic noise sigma (task difficulty).
+    pub noise: f32,
+    /// Partition spec: iid | shards:<k> | dirichlet:<alpha>.
+    pub partition: String,
+    /// Topology spec: ring | full | star | regular:<d> | er:<p> |
+    /// smallworld:<k>:<b> | torus:<r>:<c>.
+    pub topology: String,
+    /// Re-sample the topology every round via the peer sampler.
+    pub dynamic: bool,
+    /// Sharing spec: full | subsample:<budget> | topk:<budget> |
+    /// choco:<budget>:<gamma> (budget = fraction of params sent).
+    pub sharing: String,
+    /// Wrap sharing in pairwise-mask secure aggregation.
+    pub secure: bool,
+    /// Secure-agg mask amplitude. Masks are uniform in [-m, m); larger
+    /// masks give stronger hiding but more f32 cancellation residue (the
+    /// paper's ~3% accuracy loss is this precision effect).
+    pub mask_scale: f32,
+    /// Per-round probability a node is unavailable (dynamic mode only;
+    /// FedScale-style availability churn).
+    pub churn: f64,
+    pub lr: f32,
+    /// Local SGD steps per communication round.
+    pub local_steps: u32,
+    /// Network model for the emulated clock: lan | wan | none.
+    pub network: String,
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            nodes: 16,
+            rounds: 40,
+            eval_every: 4,
+            seed: 1,
+            model: "mlp".into(),
+            dataset: "cifar10s".into(),
+            image: 16,
+            train_total: 2048,
+            test_total: 512,
+            noise: 0.8,
+            partition: "shards:2".into(),
+            topology: "regular:5".into(),
+            dynamic: false,
+            sharing: "full".into(),
+            secure: false,
+            mask_scale: 4.0,
+            churn: 0.0,
+            lr: 0.05,
+            local_steps: 2,
+            network: "lan".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_json(v: &Json) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let obj = v.as_obj().context("config must be a JSON object")?;
+        // Reject unknown keys: typos in experiment configs are expensive.
+        const KNOWN: &[&str] = &[
+            "name", "nodes", "rounds", "eval_every", "seed", "model",
+            "dataset", "image", "train_total", "test_total", "noise",
+            "partition", "topology", "dynamic", "sharing", "secure", "mask_scale", "churn", "lr",
+            "local_steps", "network", "artifacts_dir", "results_dir",
+        ];
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown config key {k:?}");
+            }
+        }
+        let s = |k: &str, dflt: &str| -> String {
+            v.get(k).as_str().unwrap_or(dflt).to_string()
+        };
+        let n = |k: &str, dflt: usize| v.get(k).as_usize().unwrap_or(dflt);
+        let f = |k: &str, dflt: f64| v.get(k).as_f64().unwrap_or(dflt);
+        let b = |k: &str, dflt: bool| v.get(k).as_bool().unwrap_or(dflt);
+        let cfg = ExperimentConfig {
+            name: s("name", &d.name),
+            nodes: n("nodes", d.nodes),
+            rounds: n("rounds", d.rounds as usize) as u64,
+            eval_every: n("eval_every", d.eval_every as usize) as u64,
+            seed: n("seed", d.seed as usize) as u64,
+            model: s("model", &d.model),
+            dataset: s("dataset", &d.dataset),
+            image: n("image", d.image),
+            train_total: n("train_total", d.train_total),
+            test_total: n("test_total", d.test_total),
+            noise: f("noise", d.noise as f64) as f32,
+            partition: s("partition", &d.partition),
+            topology: s("topology", &d.topology),
+            dynamic: b("dynamic", d.dynamic),
+            sharing: s("sharing", &d.sharing),
+            secure: b("secure", d.secure),
+            mask_scale: f("mask_scale", d.mask_scale as f64) as f32,
+            churn: f("churn", d.churn),
+            lr: f("lr", d.lr as f64) as f32,
+            local_steps: n("local_steps", d.local_steps as usize) as u32,
+            network: s("network", &d.network),
+            artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
+            results_dir: PathBuf::from(s("results_dir", "results")),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&v).with_context(|| format!("in config {}", path.display()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("dataset", Json::str(self.dataset.clone())),
+            ("image", Json::num(self.image as f64)),
+            ("train_total", Json::num(self.train_total as f64)),
+            ("test_total", Json::num(self.test_total as f64)),
+            ("noise", Json::num(self.noise as f64)),
+            ("partition", Json::str(self.partition.clone())),
+            ("topology", Json::str(self.topology.clone())),
+            ("dynamic", Json::Bool(self.dynamic)),
+            ("sharing", Json::str(self.sharing.clone())),
+            ("secure", Json::Bool(self.secure)),
+            ("mask_scale", Json::num(self.mask_scale as f64)),
+            ("churn", Json::num(self.churn)),
+            ("lr", Json::num(self.lr as f64)),
+            ("local_steps", Json::num(self.local_steps as f64)),
+            ("network", Json::str(self.network.clone())),
+            ("artifacts_dir", Json::str(self.artifacts_dir.display().to_string())),
+            ("results_dir", Json::str(self.results_dir.display().to_string())),
+        ])
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes < 2 {
+            bail!("nodes must be >= 2 (got {})", self.nodes);
+        }
+        if self.rounds == 0 || self.eval_every == 0 {
+            bail!("rounds and eval_every must be positive");
+        }
+        if !["mlp", "cnn", "celeba"].contains(&self.model.as_str()) {
+            bail!("unknown model {:?}", self.model);
+        }
+        if !["cifar10s", "celebas"].contains(&self.dataset.as_str()) {
+            bail!("unknown dataset {:?}", self.dataset);
+        }
+        if self.model == "celeba" && self.dataset != "celebas" {
+            bail!("model celeba requires dataset celebas");
+        }
+        if self.dataset == "celebas" && self.model != "celeba" {
+            bail!("dataset celebas requires model celeba (2 classes)");
+        }
+        if !(0.0..1.0).contains(&self.churn) {
+            bail!("churn must be in [0, 1)");
+        }
+        if self.churn > 0.0 && !self.dynamic {
+            bail!("churn requires dynamic topologies (the peer sampler draws availability)");
+        }
+        if !(self.lr > 0.0) {
+            bail!("lr must be positive");
+        }
+        if self.local_steps == 0 {
+            bail!("local_steps must be >= 1");
+        }
+        if self.train_total < self.nodes {
+            bail!("train_total {} < nodes {}", self.train_total, self.nodes);
+        }
+        if !["lan", "wan", "none"].contains(&self.network.as_str()) {
+            bail!("unknown network model {:?}", self.network);
+        }
+        // Spec strings are validated by their own parsers; do it eagerly
+        // so config errors surface before any work happens.
+        crate::dataset::Partition::from_spec(&self.partition)?;
+        let mut rng = crate::rng::Xoshiro256pp::new(0);
+        crate::graph::from_spec(&self.topology, self.nodes, &mut rng)
+            .with_context(|| format!("invalid topology {:?}", self.topology))?;
+        crate::sharing::validate_spec(&self.sharing)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig::default();
+        let back = ExperimentConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let v = parse(r#"{"nodes": 8, "topology": "ring"}"#).unwrap();
+        let cfg = ExperimentConfig::from_json(&v).unwrap();
+        assert_eq!(cfg.nodes, 8);
+        assert_eq!(cfg.topology, "ring");
+        assert_eq!(cfg.model, "mlp");
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let v = parse(r#"{"nodez": 8}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.nodes = 1;
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.model = "resnet".into();
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.sharing = "magic".into();
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.topology = "regular".into();
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.model = "celeba".into();
+        assert!(cfg.validate().is_err()); // dataset mismatch
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("decentra_config_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let cfg = ExperimentConfig::default();
+        std::fs::write(&path, cfg.to_json().pretty()).unwrap();
+        assert_eq!(ExperimentConfig::from_file(&path).unwrap(), cfg);
+    }
+}

@@ -1,0 +1,256 @@
+//! Experiment coordinator: the Fig 1 "driver" — takes a config, builds
+//! the dataset partition / topology / nodes, runs the rounds, collects
+//! per-node logs, and aggregates the series the figures plot.
+//!
+//! In-process mode emulates one-node-one-process as one-node-one-thread
+//! over the [`InprocHub`]; the TCP transport drops in for real
+//! multi-process deployments (`decentra node` subcommand).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::communication::inproc::InprocHub;
+use crate::communication::shaper::NetworkModel;
+use crate::config::ExperimentConfig;
+use crate::dataset::{generate, DataLoader, Dataset, Partition, SyntheticSpec};
+use crate::graph::{from_spec, metropolis_hastings, Graph};
+use crate::metrics::{aggregate, NodeLog, SeriesPoint};
+use crate::model::ParamVec;
+use crate::node::{DlNode, PeerSampler, SecureDlNode, TopologyView};
+use crate::rng::{mix_seed, Xoshiro256pp};
+use crate::runtime::EngineHandle;
+use crate::secure::Masker;
+use crate::sharing;
+use crate::training::Trainer;
+use crate::util::Timer;
+
+/// Everything a finished run produces.
+pub struct RunResult {
+    pub config: ExperimentConfig,
+    pub logs: Vec<NodeLog>,
+    pub series: Vec<SeriesPoint>,
+    /// Real wall-clock seconds for the whole run.
+    pub wall_s: f64,
+}
+
+impl RunResult {
+    /// Final mean test accuracy.
+    pub fn final_accuracy(&self) -> f64 {
+        self.series.last().map(|p| p.test_acc.mean).unwrap_or(f64::NAN)
+    }
+
+    /// Final mean cumulative bytes sent per node.
+    pub fn final_bytes_per_node(&self) -> f64 {
+        self.series.last().map(|p| p.bytes_sent.mean).unwrap_or(f64::NAN)
+    }
+
+    /// Final emulated wall-clock.
+    pub fn final_emu_time(&self) -> f64 {
+        self.series.last().map(|p| p.emu_time_s.mean).unwrap_or(f64::NAN)
+    }
+
+    /// Persist logs + config + aggregated series under
+    /// `results_dir/<name>/`.
+    pub fn save(&self) -> Result<std::path::PathBuf> {
+        let dir = self.config.results_dir.join(&self.config.name);
+        std::fs::create_dir_all(&dir)?;
+        std::fs::write(dir.join("config.json"), self.config.to_json().pretty())?;
+        for log in &self.logs {
+            log.save(&dir)?;
+        }
+        std::fs::write(
+            dir.join("series.txt"),
+            crate::metrics::render_series(&self.config.name, &self.series),
+        )?;
+        Ok(dir)
+    }
+}
+
+/// Build the synthetic dataset pair for a config.
+pub fn build_dataset(cfg: &ExperimentConfig, eval_batch: usize) -> (Dataset, Dataset) {
+    // Round the test set up to a whole number of eval batches so the
+    // fixed-shape eval executable covers it exactly.
+    let test_total = cfg.test_total.div_ceil(eval_batch) * eval_batch;
+    let mut spec = match cfg.dataset.as_str() {
+        "celebas" => SyntheticSpec::celebas(cfg.image, cfg.train_total, test_total, cfg.seed),
+        _ => SyntheticSpec::cifar10s(cfg.image, cfg.train_total, test_total, cfg.seed),
+    };
+    spec.noise = cfg.noise;
+    generate(&spec)
+}
+
+/// Run a full experiment in-process. The engine must already host the
+/// config's model.
+pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunResult> {
+    cfg.validate()?;
+    let wall = Timer::start();
+    let meta = engine.manifest().model(&cfg.model)?.clone();
+    if engine.manifest().image != cfg.image {
+        bail!(
+            "config image {} != artifact image {} (re-run `make artifacts` with --image)",
+            cfg.image,
+            engine.manifest().image
+        );
+    }
+
+    // Dataset + partition.
+    let (train, test) = build_dataset(cfg, meta.eval_batch);
+    let test = Arc::new(test);
+    let mut part_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x9A27]));
+    let partition = Partition::from_spec(&cfg.partition)?;
+    let shards = partition.split(&train.labels, cfg.nodes, &mut part_rng);
+
+    // Common initial parameters from the artifact.
+    let init = meta.load_init()?;
+
+    // Topology.
+    let mut topo_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x7090]));
+    let static_graph: Option<(Arc<Graph>, Arc<crate::graph::MixingWeights>)> = if cfg.dynamic {
+        None
+    } else {
+        let g = from_spec(&cfg.topology, cfg.nodes, &mut topo_rng)?;
+        let w = metropolis_hastings(&g);
+        Some((Arc::new(g), Arc::new(w)))
+    };
+    if cfg.secure && cfg.dynamic {
+        bail!("secure aggregation supports static topologies only");
+    }
+    if cfg.secure && cfg.sharing != "full" {
+        bail!("secure aggregation requires full sharing (masks are dense)");
+    }
+
+    // Emulated-clock calibration: one uncontended training step.
+    let step_time_s = calibrate_step(engine, cfg, &meta, &train)?;
+    let eval_time_s = step_time_s * (test.len() as f64 / meta.train_batch as f64) * 0.4;
+    let network = match cfg.network.as_str() {
+        "lan" => Some(NetworkModel::lan()),
+        "wan" => Some(NetworkModel::wan()),
+        _ => None,
+    };
+
+    // Transport hub: nodes + (dynamic ? sampler : 0).
+    let ranks = cfg.nodes + usize::from(cfg.dynamic);
+    let hub = InprocHub::new(ranks);
+
+    // Spawn everything.
+    let mut logs: Vec<NodeLog> = Vec::with_capacity(cfg.nodes);
+    std::thread::scope(|scope| -> Result<()> {
+        let sampler_handle = if cfg.dynamic {
+            let sampler = PeerSampler {
+                rank: cfg.nodes,
+                nodes: cfg.nodes,
+                rounds: cfg.rounds,
+                spec: cfg.topology.clone(),
+                seed: cfg.seed,
+                churn: cfg.churn,
+                transport: Box::new(hub.endpoint(cfg.nodes)),
+            };
+            Some(scope.spawn(move || sampler.run()))
+        } else {
+            None
+        };
+
+        let mut handles = Vec::with_capacity(cfg.nodes);
+        for id in 0..cfg.nodes {
+            let shard = train.subset(&shards[id]);
+            let loader = DataLoader::new(
+                shard,
+                meta.train_batch,
+                mix_seed(&[cfg.seed, 0xDA7A, id as u64]),
+            );
+            let trainer = Trainer::new(
+                engine.clone(),
+                &cfg.model,
+                loader,
+                cfg.lr,
+                cfg.local_steps,
+            )?;
+            let transport = Box::new(hub.endpoint(id));
+            let test = Arc::clone(&test);
+            let init = init.clone();
+            if cfg.secure {
+                let (g, w) = static_graph.as_ref().unwrap();
+                let node = SecureDlNode {
+                    id,
+                    rounds: cfg.rounds,
+                    eval_every: cfg.eval_every,
+                    transport,
+                    trainer,
+                    params: init,
+                    graph: Arc::clone(g),
+                    weights: Arc::clone(w),
+                    masker: Masker::new(id, cfg.seed, cfg.mask_scale),
+                    test,
+                    network,
+                    step_time_s,
+                    eval_time_s,
+                };
+                handles.push(scope.spawn(move || node.run()));
+            } else {
+                let topology = match &static_graph {
+                    Some((_g, w)) => TopologyView::Static {
+                        self_weight: w.self_weight(id),
+                        neighbors: w.neighbor_weights(id).collect(),
+                    },
+                    None => TopologyView::Dynamic { sampler_rank: cfg.nodes },
+                };
+                let mut sharing_impl =
+                    sharing::from_spec(&cfg.sharing, meta.param_count, mix_seed(&[cfg.seed, id as u64]))?;
+                sharing_impl.set_init(&ParamVec::from_vec(init.clone()));
+                let node = DlNode {
+                    id,
+                    rounds: cfg.rounds,
+                    eval_every: cfg.eval_every,
+                    transport,
+                    trainer,
+                    sharing: sharing_impl,
+                    params: init,
+                    topology,
+                    test,
+                    network,
+                    step_time_s,
+                    eval_time_s,
+                };
+                handles.push(scope.spawn(move || node.run()));
+            }
+        }
+        for h in handles {
+            let log = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
+            logs.push(log);
+        }
+        if let Some(sh) = sampler_handle {
+            sh.join()
+                .map_err(|_| anyhow::anyhow!("sampler thread panicked"))??;
+        }
+        Ok(())
+    })?;
+    hub.shutdown();
+
+    logs.sort_by_key(|l| l.node);
+    let series = aggregate(&logs);
+    Ok(RunResult {
+        config: cfg.clone(),
+        logs,
+        series,
+        wall_s: wall.elapsed().as_secs_f64(),
+    })
+}
+
+/// Time one uncontended local step for the emulated clock.
+fn calibrate_step(
+    engine: &EngineHandle,
+    cfg: &ExperimentConfig,
+    meta: &crate::runtime::ModelMeta,
+    train: &Dataset,
+) -> Result<f64> {
+    let probe = train.subset(&(0..meta.train_batch.min(train.len())).collect::<Vec<_>>());
+    let mut loader = DataLoader::new(probe, meta.train_batch, 0);
+    let params = meta.load_init()?;
+    let batch = loader.next_batch();
+    // Warm-up (first call may hit lazy allocation), then measure.
+    let (p, _) = engine.train_step(&cfg.model, params, batch.features.clone(), batch.labels.clone(), cfg.lr)?;
+    let t = Timer::start();
+    let (_, _) = engine.train_step(&cfg.model, p, batch.features, batch.labels, cfg.lr)?;
+    Ok(t.elapsed().as_secs_f64())
+}

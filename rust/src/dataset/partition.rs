@@ -1,0 +1,254 @@
+//! Data partitioners: how the global training set is split across nodes.
+//!
+//! * [`Partition::Iid`] — shuffle and split evenly.
+//! * [`Partition::Shards`] — McMahan-style sharding: sort by label, cut
+//!   into `nodes * shards_per_node` contiguous shards, deal each node
+//!   `shards_per_node` of them. The paper uses "2-sharding non-IID ...
+//!   which limits the number of classes per node" (§3.1).
+//! * [`Partition::Dirichlet`] — label-distribution skew with
+//!   concentration `alpha` (common in the non-IID literature).
+//!
+//! All partitioners return disjoint index sets covering (almost) the whole
+//! dataset, and are deterministic given the experiment seed.
+
+use crate::rng::Xoshiro256pp;
+
+/// Partition strategy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Partition {
+    Iid,
+    Shards { per_node: usize },
+    Dirichlet { alpha: f64 },
+}
+
+impl Partition {
+    /// Parse from a config string: `iid`, `shards:<k>`, `dirichlet:<alpha>`.
+    pub fn from_spec(spec: &str) -> anyhow::Result<Partition> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        Ok(match parts.as_slice() {
+            ["iid"] => Partition::Iid,
+            ["shards", k] => Partition::Shards { per_node: k.parse()? },
+            ["dirichlet", a] => Partition::Dirichlet { alpha: a.parse()? },
+            _ => anyhow::bail!("unknown partition spec {spec:?}"),
+        })
+    }
+
+    /// Compute per-node example indices.
+    pub fn split(
+        &self,
+        labels: &[u8],
+        nodes: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Vec<Vec<usize>> {
+        assert!(nodes > 0, "no nodes");
+        match self {
+            Partition::Iid => iid(labels.len(), nodes, rng),
+            Partition::Shards { per_node } => shards(labels, nodes, *per_node, rng),
+            Partition::Dirichlet { alpha } => dirichlet(labels, nodes, *alpha, rng),
+        }
+    }
+}
+
+fn iid(n: usize, nodes: usize, rng: &mut Xoshiro256pp) -> Vec<Vec<usize>> {
+    let mut idx = rng.permutation(n);
+    let per = n / nodes;
+    let mut out = Vec::with_capacity(nodes);
+    for _ in 0..nodes {
+        let rest = idx.split_off(per.min(idx.len()));
+        out.push(idx);
+        idx = rest;
+    }
+    // Leftover examples (n % nodes) are dropped, matching equal-shard
+    // experimental setups.
+    out
+}
+
+fn shards(
+    labels: &[u8],
+    nodes: usize,
+    per_node: usize,
+    rng: &mut Xoshiro256pp,
+) -> Vec<Vec<usize>> {
+    let n = labels.len();
+    let total_shards = nodes * per_node;
+    assert!(total_shards <= n, "more shards than examples");
+    // Sort indices by label (stable: ties keep dataset order).
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by_key(|&i| labels[i]);
+    // Cut into contiguous shards and deal them randomly.
+    let shard_size = n / total_shards;
+    let mut shard_ids: Vec<usize> = (0..total_shards).collect();
+    rng.shuffle(&mut shard_ids);
+    let mut out = vec![Vec::with_capacity(per_node * shard_size); nodes];
+    for (pos, &sid) in shard_ids.iter().enumerate() {
+        let node = pos % nodes;
+        let start = sid * shard_size;
+        let end = if sid == total_shards - 1 { start + shard_size } else { start + shard_size };
+        out[node].extend_from_slice(&idx[start..end]);
+    }
+    out
+}
+
+fn dirichlet(
+    labels: &[u8],
+    nodes: usize,
+    alpha: f64,
+    rng: &mut Xoshiro256pp,
+) -> Vec<Vec<usize>> {
+    let num_classes = labels.iter().map(|&l| l as usize + 1).max().unwrap_or(1);
+    // Indices per class, shuffled.
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        per_class[l as usize].push(i);
+    }
+    for c in per_class.iter_mut() {
+        rng.shuffle(c);
+    }
+    let mut out = vec![Vec::new(); nodes];
+    for class_idx in per_class {
+        if class_idx.is_empty() {
+            continue;
+        }
+        let props = rng.dirichlet(alpha, nodes);
+        // Convert proportions to cut points.
+        let mut start = 0usize;
+        let mut acc = 0.0f64;
+        for (node, &p) in props.iter().enumerate() {
+            acc += p;
+            let end = if node == nodes - 1 {
+                class_idx.len()
+            } else {
+                ((acc * class_idx.len() as f64).round() as usize).min(class_idx.len())
+            };
+            out[node].extend_from_slice(&class_idx[start..end]);
+            start = end;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize, classes: usize) -> Vec<u8> {
+        (0..n).map(|i| (i % classes) as u8).collect()
+    }
+
+    fn assert_disjoint_cover(parts: &[Vec<usize>], n: usize, min_cover: usize) {
+        let mut seen = std::collections::HashSet::new();
+        for p in parts {
+            for &i in p {
+                assert!(i < n);
+                assert!(seen.insert(i), "index {i} assigned twice");
+            }
+        }
+        assert!(seen.len() >= min_cover, "covered {} < {min_cover}", seen.len());
+    }
+
+    #[test]
+    fn iid_split_even_and_disjoint() {
+        let mut rng = Xoshiro256pp::new(0);
+        let l = labels(1000, 10);
+        let parts = Partition::Iid.split(&l, 8, &mut rng);
+        assert_eq!(parts.len(), 8);
+        assert!(parts.iter().all(|p| p.len() == 125));
+        assert_disjoint_cover(&parts, 1000, 1000);
+    }
+
+    #[test]
+    fn iid_is_label_balanced() {
+        let mut rng = Xoshiro256pp::new(1);
+        let l = labels(2000, 10);
+        let parts = Partition::Iid.split(&l, 4, &mut rng);
+        for p in &parts {
+            let mut h = [0usize; 10];
+            for &i in p {
+                h[l[i] as usize] += 1;
+            }
+            // Each class ~50 per node out of 500.
+            assert!(h.iter().all(|&c| (30..=70).contains(&c)), "{h:?}");
+        }
+    }
+
+    #[test]
+    fn two_sharding_limits_classes_per_node() {
+        let mut rng = Xoshiro256pp::new(2);
+        let l = labels(2000, 10);
+        let parts = Partition::Shards { per_node: 2 }.split(&l, 20, &mut rng);
+        assert_disjoint_cover(&parts, 2000, 1900);
+        for p in &parts {
+            let classes: std::collections::HashSet<u8> =
+                p.iter().map(|&i| l[i]).collect();
+            // 2 shards -> at most 3 classes (a shard can straddle one
+            // label boundary), typically <= 2.
+            assert!(classes.len() <= 3, "{} classes", classes.len());
+            assert!(!p.is_empty());
+        }
+    }
+
+    #[test]
+    fn sharding_deterministic() {
+        let l = labels(500, 10);
+        let a = Partition::Shards { per_node: 2 }.split(&l, 10, &mut Xoshiro256pp::new(9));
+        let b = Partition::Shards { per_node: 2 }.split(&l, 10, &mut Xoshiro256pp::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dirichlet_skew_increases_as_alpha_drops() {
+        let l = labels(4000, 10);
+        let skew = |alpha: f64| -> f64 {
+            let mut rng = Xoshiro256pp::new(5);
+            let parts = Partition::Dirichlet { alpha }.split(&l, 8, &mut rng);
+            // Mean (max class share) per node.
+            parts
+                .iter()
+                .map(|p| {
+                    let mut h = [0f64; 10];
+                    for &i in p {
+                        h[l[i] as usize] += 1.0;
+                    }
+                    let total: f64 = h.iter().sum();
+                    h.iter().cloned().fold(0.0, f64::max) / total.max(1.0)
+                })
+                .sum::<f64>()
+                / parts.len() as f64
+        };
+        let spiky = skew(0.1);
+        let flat = skew(100.0);
+        assert!(spiky > flat + 0.1, "spiky {spiky} flat {flat}");
+    }
+
+    #[test]
+    fn dirichlet_disjoint() {
+        let mut rng = Xoshiro256pp::new(6);
+        let l = labels(1000, 10);
+        let parts = Partition::Dirichlet { alpha: 0.5 }.split(&l, 6, &mut rng);
+        assert_disjoint_cover(&parts, 1000, 1000);
+    }
+
+    #[test]
+    fn scaling_nodes_shrinks_shards() {
+        // Fig 6 setup: fixed dataset, 4x nodes -> 4x fewer samples each.
+        let l = labels(4096, 10);
+        let small = Partition::Iid.split(&l, 16, &mut Xoshiro256pp::new(7));
+        let large = Partition::Iid.split(&l, 64, &mut Xoshiro256pp::new(7));
+        assert_eq!(small[0].len(), 256);
+        assert_eq!(large[0].len(), 64);
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(Partition::from_spec("iid").unwrap(), Partition::Iid);
+        assert_eq!(
+            Partition::from_spec("shards:2").unwrap(),
+            Partition::Shards { per_node: 2 }
+        );
+        assert_eq!(
+            Partition::from_spec("dirichlet:0.3").unwrap(),
+            Partition::Dirichlet { alpha: 0.3 }
+        );
+        assert!(Partition::from_spec("nope").is_err());
+    }
+}

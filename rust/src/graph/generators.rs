@@ -1,0 +1,272 @@
+//! Topology generators: every family used in the paper's evaluation
+//! (ring, random d-regular, fully connected) plus common research
+//! topologies (Erdős–Rényi, Watts–Strogatz small-world, star, 2-D torus).
+
+use super::Graph;
+use crate::rng::Xoshiro256pp;
+
+/// Ring (cycle) over n nodes — the sparsest connected 2-regular topology.
+pub fn ring(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    if n < 2 {
+        return g;
+    }
+    for i in 0..n {
+        g.add_edge(i, (i + 1) % n);
+    }
+    g
+}
+
+/// Fully-connected (complete) graph.
+pub fn fully_connected(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            g.add_edge(a, b);
+        }
+    }
+    g
+}
+
+/// Star: node 0 is the hub (FL-like communication shape).
+pub fn star(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 1..n {
+        g.add_edge(0, i);
+    }
+    g
+}
+
+/// Random d-regular graph via the pairing (configuration) model with
+/// retries; result is simple (no self-loops/multi-edges) and connected.
+///
+/// `n * d` must be even and `d < n`. This is the generator behind both the
+/// static d-regular topologies and the per-round dynamic graphs the
+/// centralized peer sampler instantiates (paper §3.2).
+pub fn random_regular(n: usize, d: usize, rng: &mut Xoshiro256pp) -> Graph {
+    assert!(d < n, "degree must be < n");
+    assert!(n * d % 2 == 0, "n*d must be even");
+    if d == 0 {
+        return Graph::empty(n);
+    }
+    'attempt: for _ in 0..1000 {
+        // Stubs: each node appears d times; greedily match random stubs,
+        // skipping pairs that would create self-loops or multi-edges
+        // (networkx-style `random_regular_graph` matching). Restart the
+        // attempt only when no legal partner remains for a stub.
+        let mut stubs: Vec<usize> =
+            (0..n).flat_map(|v| std::iter::repeat(v).take(d)).collect();
+        rng.shuffle(&mut stubs);
+        let mut g = Graph::empty(n);
+        while !stubs.is_empty() {
+            let a = stubs.pop().unwrap();
+            // Find a legal partner among remaining stubs.
+            let mut found = None;
+            for probe in 0..stubs.len() {
+                // Randomized probe order: swap a random candidate to the
+                // end region being examined.
+                let j = rng.range(0, stubs.len() - probe);
+                let b = stubs[j];
+                if b != a && !g.has_edge(a, b) {
+                    stubs.swap_remove(j);
+                    found = Some(b);
+                    break;
+                }
+                // Move the illegal candidate out of the probe window.
+                let last = stubs.len() - 1 - probe;
+                stubs.swap(j, last);
+            }
+            match found {
+                Some(b) => g.add_edge(a, b),
+                None => continue 'attempt, // dead end: restart
+            }
+        }
+        if super::is_connected(&g) {
+            return g;
+        }
+    }
+    panic!("failed to sample a connected {d}-regular graph on {n} nodes");
+}
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Xoshiro256pp) -> Graph {
+    assert!((0.0..=1.0).contains(&p));
+    let mut g = Graph::empty(n);
+    for a in 0..n {
+        for b in (a + 1)..n {
+            if rng.next_f64() < p {
+                g.add_edge(a, b);
+            }
+        }
+    }
+    g
+}
+
+/// Watts–Strogatz small-world: ring lattice of even degree `k`, each edge
+/// rewired with probability `beta`.
+pub fn small_world(n: usize, k: usize, beta: f64, rng: &mut Xoshiro256pp) -> Graph {
+    assert!(k % 2 == 0 && k < n, "k must be even and < n");
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for j in 1..=(k / 2) {
+            g.add_edge(i, (i + j) % n);
+        }
+    }
+    // Rewire clockwise edges.
+    for i in 0..n {
+        for j in 1..=(k / 2) {
+            let old = (i + j) % n;
+            if rng.next_f64() < beta && g.has_edge(i, old) {
+                // Pick a new endpoint avoiding self-loops and duplicates.
+                for _ in 0..32 {
+                    let cand = rng.range(0, n);
+                    if cand != i && !g.has_edge(i, cand) {
+                        g.remove_edge(i, old);
+                        g.add_edge(i, cand);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    g
+}
+
+/// 2-D torus on an r x c grid (n = r * c).
+pub fn torus(rows: usize, cols: usize) -> Graph {
+    let n = rows * cols;
+    let mut g = Graph::empty(n);
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = r * cols + c;
+            if cols > 1 {
+                g.add_edge(v, r * cols + (c + 1) % cols);
+            }
+            if rows > 1 {
+                g.add_edge(v, ((r + 1) % rows) * cols + c);
+            }
+        }
+    }
+    g
+}
+
+/// Named generator dispatch used by the config system.
+///
+/// `spec` grammar: `ring`, `full`, `star`, `regular:<d>`, `er:<p>`,
+/// `smallworld:<k>:<beta>`, `torus:<rows>:<cols>`.
+pub fn from_spec(spec: &str, n: usize, rng: &mut Xoshiro256pp) -> anyhow::Result<Graph> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let g = match parts.as_slice() {
+        ["ring"] => ring(n),
+        ["full"] | ["fully_connected"] => fully_connected(n),
+        ["star"] => star(n),
+        ["regular", d] => random_regular(n, d.parse()?, rng),
+        ["er", p] => erdos_renyi(n, p.parse()?, rng),
+        ["smallworld", k, beta] => small_world(n, k.parse()?, beta.parse()?, rng),
+        ["torus", r, c] => {
+            let (r, c): (usize, usize) = (r.parse()?, c.parse()?);
+            anyhow::ensure!(r * c == n, "torus {r}x{c} != n={n}");
+            torus(r, c)
+        }
+        _ => anyhow::bail!("unknown topology spec {spec:?}"),
+    };
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::is_connected;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::new(1234)
+    }
+
+    #[test]
+    fn ring_properties() {
+        let g = ring(8);
+        assert_eq!(g.edge_count(), 8);
+        assert!((0..8).all(|v| g.degree(v) == 2));
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn full_properties() {
+        let g = fully_connected(10);
+        assert_eq!(g.edge_count(), 45);
+        assert!((0..10).all(|v| g.degree(v) == 9));
+    }
+
+    #[test]
+    fn star_properties() {
+        let g = star(6);
+        assert_eq!(g.degree(0), 5);
+        assert!((1..6).all(|v| g.degree(v) == 1));
+    }
+
+    #[test]
+    fn regular_is_regular_and_connected() {
+        let mut r = rng();
+        for (n, d) in [(16, 5), (64, 5), (32, 9), (10, 3)] {
+            let g = random_regular(n, d, &mut r);
+            assert!((0..n).all(|v| g.degree(v) == d), "n={n} d={d}");
+            assert!(is_connected(&g));
+        }
+    }
+
+    #[test]
+    fn regular_degree_zero_ok() {
+        let g = random_regular(6, 0, &mut rng());
+        assert_eq!(g.edge_count(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn regular_odd_product_panics() {
+        random_regular(5, 3, &mut rng());
+    }
+
+    #[test]
+    fn dynamic_regular_differs_per_round() {
+        let mut r = rng();
+        let g1 = random_regular(24, 5, &mut r);
+        let g2 = random_regular(24, 5, &mut r);
+        assert_ne!(g1, g2); // overwhelmingly likely
+    }
+
+    #[test]
+    fn er_edge_density() {
+        let g = erdos_renyi(60, 0.2, &mut rng());
+        let expected = 0.2 * (60.0 * 59.0 / 2.0);
+        let got = g.edge_count() as f64;
+        assert!((got - expected).abs() < expected * 0.35, "got {got}");
+    }
+
+    #[test]
+    fn small_world_preserves_edge_count() {
+        let g = small_world(40, 4, 0.3, &mut rng());
+        // Rewiring moves edges but keeps ~n*k/2 of them (duplicates on
+        // rewire-failure may drop a few).
+        assert!((70..=80).contains(&g.edge_count()), "{}", g.edge_count());
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn torus_properties() {
+        let g = torus(4, 5);
+        assert_eq!(g.len(), 20);
+        assert!((0..20).all(|v| g.degree(v) == 4));
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    fn spec_dispatch() {
+        let mut r = rng();
+        assert_eq!(from_spec("ring", 6, &mut r).unwrap(), ring(6));
+        assert_eq!(from_spec("full", 4, &mut r).unwrap(), fully_connected(4));
+        let g = from_spec("regular:5", 16, &mut r).unwrap();
+        assert!((0..16).all(|v| g.degree(v) == 5));
+        assert!(from_spec("bogus", 4, &mut r).is_err());
+        assert!(from_spec("torus:3:3", 8, &mut r).is_err());
+    }
+}

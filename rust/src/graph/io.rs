@@ -1,0 +1,213 @@
+//! Graph file I/O: edge-list and adjacency-list formats (paper §2.2 —
+//! "the topology can be read from a graph file having edges or an
+//! adjacency list", enabling externally-generated topologies).
+//!
+//! Edge list:          first line `n`, then one `a b` pair per line.
+//! Adjacency list:     first line `n`, then line i = neighbors of node i
+//!                     (possibly empty), whitespace-separated.
+//! Lines starting with `#` are comments in both formats.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::Graph;
+
+/// Parse an edge-list document.
+pub fn parse_edge_list(text: &str) -> Result<Graph> {
+    let mut lines = content_lines(text);
+    let n: usize = lines
+        .next()
+        .context("empty edge-list file")?
+        .trim()
+        .parse()
+        .context("first line must be the node count")?;
+    let mut g = Graph::empty(n);
+    for (lineno, line) in lines.enumerate() {
+        let mut it = line.split_whitespace();
+        let a: usize = match it.next() {
+            None => continue,
+            Some(t) => t.parse().with_context(|| format!("line {}", lineno + 2))?,
+        };
+        let b: usize = it
+            .next()
+            .with_context(|| format!("line {}: missing endpoint", lineno + 2))?
+            .parse()
+            .with_context(|| format!("line {}", lineno + 2))?;
+        if it.next().is_some() {
+            bail!("line {}: expected exactly two endpoints", lineno + 2);
+        }
+        if a >= n || b >= n {
+            bail!("line {}: node id out of range (n={n})", lineno + 2);
+        }
+        g.add_edge(a, b);
+    }
+    Ok(g)
+}
+
+/// Parse an adjacency-list document. Blank lines are significant here:
+/// they encode isolated nodes (comment lines are still skipped).
+pub fn parse_adjacency_list(text: &str) -> Result<Graph> {
+    let mut lines = text
+        .lines()
+        .map(|l| l.trim())
+        .filter(|l| !l.starts_with('#'));
+    let header = lines
+        .by_ref()
+        .find(|l| !l.is_empty())
+        .context("empty adjacency-list file")?;
+    let n: usize = header
+        .parse()
+        .context("first line must be the node count")?;
+    let mut g = Graph::empty(n);
+    let mut row = 0usize;
+    for line in lines {
+        if row >= n {
+            if line.is_empty() {
+                continue; // trailing blank lines are fine
+            }
+            bail!("more adjacency rows than nodes (n={n})");
+        }
+        for tok in line.split_whitespace() {
+            let b: usize = tok.parse().with_context(|| format!("row {row}"))?;
+            if b >= n {
+                bail!("row {row}: neighbor {b} out of range");
+            }
+            g.add_edge(row, b);
+        }
+        row += 1;
+    }
+    if row != n {
+        bail!("expected {n} adjacency rows, found {row}");
+    }
+    Ok(g)
+}
+
+/// Serialize as edge list.
+pub fn to_edge_list(g: &Graph) -> String {
+    let mut out = format!("{}\n", g.len());
+    for (a, b) in g.edges() {
+        out.push_str(&format!("{a} {b}\n"));
+    }
+    out
+}
+
+/// Serialize as adjacency list.
+pub fn to_adjacency_list(g: &Graph) -> String {
+    let mut out = format!("{}\n", g.len());
+    for v in 0..g.len() {
+        let row: Vec<String> = g.neighbors(v).map(|x| x.to_string()).collect();
+        out.push_str(&row.join(" "));
+        out.push('\n');
+    }
+    out
+}
+
+/// Load a graph file. Format is detected from the extension first
+/// (`.adj`/`.adjacency` → adjacency list, `.edges`/`.edgelist`/`.el` →
+/// edge list); unknown extensions fall back to a structural heuristic
+/// (exactly `n` data rows → adjacency, else edge list).
+pub fn load(path: &Path) -> Result<Graph> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading graph file {}", path.display()))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("adj") | Some("adjacency") => return parse_adjacency_list(&text),
+        Some("edges") | Some("edgelist") | Some("el") => return parse_edge_list(&text),
+        _ => {}
+    }
+    let rows: Vec<&str> = content_lines(&text).collect();
+    if rows.is_empty() {
+        bail!("empty graph file {}", path.display());
+    }
+    let n: usize = rows[0].trim().parse().context("first line must be node count")?;
+    if rows.len() - 1 == n {
+        if let Ok(g) = parse_adjacency_list(&text) {
+            return Ok(g);
+        }
+    }
+    parse_edge_list(&text)
+}
+
+pub fn save_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    std::fs::write(path, to_edge_list(g))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+pub fn save_adjacency_list(g: &Graph, path: &Path) -> Result<()> {
+    std::fs::write(path, to_adjacency_list(g))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+fn content_lines(text: &str) -> impl Iterator<Item = &str> {
+    text.lines()
+        .map(|l| l.trim())
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ring, small_world};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = ring(7);
+        let text = to_edge_list(&g);
+        assert_eq!(parse_edge_list(&text).unwrap(), g);
+    }
+
+    #[test]
+    fn adjacency_roundtrip() {
+        let mut rng = Xoshiro256pp::new(3);
+        let g = small_world(20, 4, 0.2, &mut rng);
+        let text = to_adjacency_list(&g);
+        assert_eq!(parse_adjacency_list(&text).unwrap(), g);
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let text = "# topology\n4\n\n0 1\n# middle\n2 3\n";
+        let g = parse_edge_list(text).unwrap();
+        assert_eq!(g.edge_count(), 2);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        assert!(parse_edge_list("3\n0 5\n").is_err());
+        assert!(parse_adjacency_list("2\n1\n5\n").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_edge_list("").is_err());
+        assert!(parse_edge_list("2\n0\n").is_err());
+        assert!(parse_edge_list("2\n0 1 2\n").is_err());
+        assert!(parse_adjacency_list("3\n1\n0\n").is_err()); // missing row
+    }
+
+    #[test]
+    fn load_autodetects_both_formats() {
+        let dir = std::env::temp_dir().join("decentra_graph_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = ring(6);
+
+        let ep = dir.join("g.edges");
+        save_edge_list(&g, &ep).unwrap();
+        assert_eq!(load(&ep).unwrap(), g);
+
+        let ap = dir.join("g.adj");
+        save_adjacency_list(&g, &ap).unwrap();
+        assert_eq!(load(&ap).unwrap(), g);
+    }
+
+    #[test]
+    fn isolated_nodes_survive_adjacency_roundtrip() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        let text = to_adjacency_list(&g);
+        let parsed = parse_adjacency_list(&text).unwrap();
+        assert_eq!(parsed, g);
+        assert_eq!(parsed.degree(3), 0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Overlay topology management (the paper's *Graph* module).
+//!
+//! The graph constrains node communication to immediate neighbors, can be
+//! regenerated at run time (dynamic topologies via the peer sampler), and
+//! is readable from / writable to edge-list and adjacency-list files so
+//! externally-generated topologies can be swapped in ("swift switching of
+//! topologies", §2.2).
+
+mod generators;
+mod io;
+mod properties;
+mod weights;
+
+pub use generators::*;
+pub use io::*;
+pub use properties::*;
+pub use weights::*;
+
+use std::collections::BTreeSet;
+
+/// Undirected overlay graph over nodes `0..n`.
+///
+/// Adjacency is kept as ordered sets: deterministic iteration order makes
+/// every downstream consumer (weights, sharing, wire messages) reproducible
+/// for a fixed seed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    adj: Vec<BTreeSet<usize>>,
+}
+
+impl Graph {
+    /// Empty graph on `n` nodes.
+    pub fn empty(n: usize) -> Graph {
+        Graph { adj: vec![BTreeSet::new(); n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// Add an undirected edge; self-loops are ignored (a node always has
+    /// implicit access to its own model).
+    pub fn add_edge(&mut self, a: usize, b: usize) {
+        assert!(a < self.len() && b < self.len(), "edge out of range");
+        if a == b {
+            return;
+        }
+        self.adj[a].insert(b);
+        self.adj[b].insert(a);
+    }
+
+    pub fn remove_edge(&mut self, a: usize, b: usize) {
+        self.adj[a].remove(&b);
+        self.adj[b].remove(&a);
+    }
+
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.adj[a].contains(&b)
+    }
+
+    /// Neighbor set of `v` (sorted).
+    pub fn neighbors(&self, v: usize) -> impl Iterator<Item = usize> + '_ {
+        self.adj[v].iter().copied()
+    }
+
+    pub fn neighbors_vec(&self, v: usize) -> Vec<usize> {
+        self.adj[v].iter().copied().collect()
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.adj.iter().map(|s| s.len()).sum::<usize>() / 2
+    }
+
+    /// All edges as (a, b) with a < b, sorted.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.edge_count());
+        for (a, nbrs) in self.adj.iter().enumerate() {
+            for &b in nbrs.iter() {
+                if a < b {
+                    out.push((a, b));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edges_are_undirected_and_deduped() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(1, 0);
+        g.add_edge(2, 3);
+        assert_eq!(g.edge_count(), 2);
+        assert!(g.has_edge(1, 0));
+        assert_eq!(g.neighbors_vec(1), vec![0]);
+        g.remove_edge(0, 1);
+        assert_eq!(g.edge_count(), 1);
+        assert!(!g.has_edge(0, 1));
+    }
+
+    #[test]
+    fn self_loops_ignored() {
+        let mut g = Graph::empty(2);
+        g.add_edge(1, 1);
+        assert_eq!(g.edge_count(), 0);
+        assert_eq!(g.degree(1), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_edge_panics() {
+        let mut g = Graph::empty(2);
+        g.add_edge(0, 5);
+    }
+
+    #[test]
+    fn edges_sorted_canonical() {
+        let mut g = Graph::empty(5);
+        g.add_edge(4, 0);
+        g.add_edge(2, 1);
+        assert_eq!(g.edges(), vec![(0, 4), (1, 2)]);
+    }
+}

@@ -1,0 +1,179 @@
+//! Graph analysis: connectivity, degree statistics, spectral gap.
+//!
+//! The spectral gap of the mixing matrix governs D-PSGD convergence speed
+//! (the reason denser topologies converge faster per round, paper Fig 3a);
+//! we expose an estimate so experiments can report it alongside accuracy.
+
+use super::{metropolis_hastings, Graph};
+
+/// BFS connectivity check.
+pub fn is_connected(g: &Graph) -> bool {
+    let n = g.len();
+    if n == 0 {
+        return true;
+    }
+    let mut seen = vec![false; n];
+    let mut queue = std::collections::VecDeque::from([0usize]);
+    seen[0] = true;
+    let mut count = 1;
+    while let Some(v) = queue.pop_front() {
+        for w in g.neighbors(v) {
+            if !seen[w] {
+                seen[w] = true;
+                count += 1;
+                queue.push_back(w);
+            }
+        }
+    }
+    count == n
+}
+
+/// (min, mean, max) node degree.
+pub fn degree_stats(g: &Graph) -> (usize, f64, usize) {
+    let n = g.len();
+    if n == 0 {
+        return (0, 0.0, 0);
+    }
+    let degs: Vec<usize> = (0..n).map(|v| g.degree(v)).collect();
+    let min = *degs.iter().min().unwrap();
+    let max = *degs.iter().max().unwrap();
+    let mean = degs.iter().sum::<usize>() as f64 / n as f64;
+    (min, mean, max)
+}
+
+/// Graph diameter via per-node BFS (O(n·m); fine at experiment scales).
+/// Returns `None` for disconnected graphs.
+pub fn diameter(g: &Graph) -> Option<usize> {
+    let n = g.len();
+    let mut diam = 0;
+    for s in 0..n {
+        let mut dist = vec![usize::MAX; n];
+        dist[s] = 0;
+        let mut q = std::collections::VecDeque::from([s]);
+        while let Some(v) = q.pop_front() {
+            for w in g.neighbors(v) {
+                if dist[w] == usize::MAX {
+                    dist[w] = dist[v] + 1;
+                    q.push_back(w);
+                }
+            }
+        }
+        let far = *dist.iter().max().unwrap();
+        if far == usize::MAX {
+            return None;
+        }
+        diam = diam.max(far);
+    }
+    Some(diam)
+}
+
+/// Estimate the spectral gap `1 - |lambda_2|` of the Metropolis-Hastings
+/// mixing matrix `W` by power iteration on the space orthogonal to the
+/// all-ones vector (the top eigenvector of a doubly-stochastic matrix).
+pub fn spectral_gap(g: &Graph, iters: usize) -> f64 {
+    let n = g.len();
+    if n <= 1 {
+        return 1.0;
+    }
+    let w = metropolis_hastings(g);
+    // Start from a deterministic pseudo-random vector, deflate mean.
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| (i as f64 * 0.754_877_666 + 0.1).sin())
+        .collect();
+    deflate(&mut v);
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..iters {
+        // v <- W v  (W is symmetric for MH on undirected graphs)
+        let mut nv = vec![0.0f64; n];
+        for a in 0..n {
+            nv[a] += w.self_weight(a) * v[a];
+            for (b, wt) in w.neighbor_weights(a) {
+                nv[a] += wt * v[b];
+            }
+        }
+        deflate(&mut nv);
+        lambda = norm(&nv);
+        if lambda < 1e-15 {
+            return 1.0; // second eigenvalue ~0
+        }
+        for x in nv.iter_mut() {
+            *x /= lambda;
+        }
+        v = nv;
+    }
+    (1.0 - lambda).max(0.0)
+}
+
+fn deflate(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f64]) {
+    let n = norm(v);
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{fully_connected, random_regular, ring};
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn connectivity() {
+        let mut g = Graph::empty(4);
+        assert!(!is_connected(&g));
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        assert!(!is_connected(&g));
+        g.add_edge(1, 2);
+        assert!(is_connected(&g));
+        assert!(is_connected(&Graph::empty(0)));
+        assert!(is_connected(&Graph::empty(1)));
+    }
+
+    #[test]
+    fn degree_stats_basic() {
+        let g = ring(6);
+        assert_eq!(degree_stats(&g), (2, 2.0, 2));
+    }
+
+    #[test]
+    fn diameters() {
+        assert_eq!(diameter(&ring(8)), Some(4));
+        assert_eq!(diameter(&fully_connected(5)), Some(1));
+        let mut g = Graph::empty(3);
+        g.add_edge(0, 1);
+        assert_eq!(diameter(&g), None);
+    }
+
+    #[test]
+    fn spectral_gap_ordering_matches_paper_intuition() {
+        // full > regular > ring: denser graphs mix faster.
+        let mut rng = Xoshiro256pp::new(5);
+        let full = spectral_gap(&fully_connected(32), 200);
+        let reg = spectral_gap(&random_regular(32, 5, &mut rng), 200);
+        let rng_gap = spectral_gap(&ring(32), 200);
+        assert!(full > reg, "full {full} vs regular {reg}");
+        assert!(reg > rng_gap, "regular {reg} vs ring {rng_gap}");
+    }
+
+    #[test]
+    fn spectral_gap_complete_graph_closed_form() {
+        // For K_n with MH weights, W = J/n, lambda_2 = 0 -> gap = 1.
+        let gap = spectral_gap(&fully_connected(16), 100);
+        assert!((gap - 1.0).abs() < 1e-6, "gap {gap}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Metropolis–Hastings mixing weights (Xiao, Boyd & Kim 2007) — the
+//! aggregation weights the paper's D-PSGD clients use.
+//!
+//! For an undirected graph, `W[a][b] = 1 / (1 + max(deg(a), deg(b)))` for
+//! each edge and `W[a][a] = 1 - sum_b W[a][b]`. The resulting matrix is
+//! symmetric and doubly stochastic, which guarantees average consensus.
+
+use super::Graph;
+
+/// Row-compressed mixing matrix aligned with a specific [`Graph`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MixingWeights {
+    /// Per node: (neighbor, weight) in neighbor-sorted order.
+    rows: Vec<Vec<(usize, f64)>>,
+    /// Per node: self weight.
+    self_w: Vec<f64>,
+}
+
+impl MixingWeights {
+    pub fn len(&self) -> usize {
+        self.self_w.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.self_w.is_empty()
+    }
+
+    pub fn self_weight(&self, v: usize) -> f64 {
+        self.self_w[v]
+    }
+
+    pub fn neighbor_weights(&self, v: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.rows[v].iter().copied()
+    }
+
+    /// Weight on edge (a, b); zero when not adjacent.
+    pub fn weight(&self, a: usize, b: usize) -> f64 {
+        if a == b {
+            return self.self_w[a];
+        }
+        self.rows[a]
+            .iter()
+            .find(|(n, _)| *n == b)
+            .map(|(_, w)| *w)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Compute Metropolis–Hastings weights for `g`.
+pub fn metropolis_hastings(g: &Graph) -> MixingWeights {
+    let n = g.len();
+    let mut rows = Vec::with_capacity(n);
+    let mut self_w = Vec::with_capacity(n);
+    for a in 0..n {
+        let mut row = Vec::with_capacity(g.degree(a));
+        let mut total = 0.0;
+        for b in g.neighbors(a) {
+            let w = 1.0 / (1.0 + g.degree(a).max(g.degree(b)) as f64);
+            row.push((b, w));
+            total += w;
+        }
+        rows.push(row);
+        self_w.push(1.0 - total);
+    }
+    MixingWeights { rows, self_w }
+}
+
+/// Uniform averaging weights (1/(deg+1) everywhere) — a simpler baseline
+/// some DL works use; kept for ablations.
+pub fn uniform(g: &Graph) -> MixingWeights {
+    let n = g.len();
+    let mut rows = Vec::with_capacity(n);
+    let mut self_w = Vec::with_capacity(n);
+    for a in 0..n {
+        let w = 1.0 / (1.0 + g.degree(a) as f64);
+        rows.push(g.neighbors(a).map(|b| (b, w)).collect());
+        self_w.push(w);
+    }
+    MixingWeights { rows, self_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{fully_connected, random_regular, ring, star};
+    use crate::rng::Xoshiro256pp;
+
+    fn assert_doubly_stochastic(w: &MixingWeights) {
+        let n = w.len();
+        // Row sums = 1.
+        for a in 0..n {
+            let sum: f64 =
+                w.self_weight(a) + w.neighbor_weights(a).map(|(_, x)| x).sum::<f64>();
+            assert!((sum - 1.0).abs() < 1e-12, "row {a} sums to {sum}");
+        }
+        // Symmetry => column sums = 1 too.
+        for a in 0..n {
+            for (b, wab) in w.neighbor_weights(a) {
+                assert!((wab - w.weight(b, a)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mh_ring_values() {
+        let w = metropolis_hastings(&ring(5));
+        // All degrees 2 -> edge weight 1/3, self 1/3.
+        assert!((w.weight(0, 1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((w.self_weight(0) - 1.0 / 3.0).abs() < 1e-12);
+        assert_doubly_stochastic(&w);
+    }
+
+    #[test]
+    fn mh_star_heterogeneous_degrees() {
+        let w = metropolis_hastings(&star(5));
+        // Hub degree 4, leaves degree 1 -> edge weight 1/5.
+        assert!((w.weight(0, 3) - 0.2).abs() < 1e-12);
+        // Leaf self-weight 0.8; hub self-weight 1 - 4/5 = 0.2.
+        assert!((w.self_weight(3) - 0.8).abs() < 1e-12);
+        assert!((w.self_weight(0) - 0.2).abs() < 1e-12);
+        assert_doubly_stochastic(&w);
+    }
+
+    #[test]
+    fn mh_complete_graph_is_uniform() {
+        let w = metropolis_hastings(&fully_connected(8));
+        for a in 0..8 {
+            assert!((w.self_weight(a) - 1.0 / 8.0).abs() < 1e-12);
+            for (_, x) in w.neighbor_weights(a) {
+                assert!((x - 1.0 / 8.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn mh_random_regular_doubly_stochastic() {
+        let mut rng = Xoshiro256pp::new(2);
+        let g = random_regular(30, 5, &mut rng);
+        assert_doubly_stochastic(&metropolis_hastings(&g));
+    }
+
+    #[test]
+    fn uniform_rows_sum_to_one() {
+        let g = star(6);
+        let w = uniform(&g);
+        for a in 0..6 {
+            let sum: f64 =
+                w.self_weight(a) + w.neighbor_weights(a).map(|(_, x)| x).sum::<f64>();
+            assert!((sum - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn absent_edge_weight_is_zero() {
+        let w = metropolis_hastings(&ring(6));
+        assert_eq!(w.weight(0, 3), 0.0);
+    }
+}

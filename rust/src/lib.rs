@@ -1,0 +1,37 @@
+//! # DecentralizeRs
+//!
+//! A decentralized-learning (DL) framework — a from-scratch reproduction
+//! of *"Decentralized Learning Made Easy with DecentralizePy"*
+//! (EuroMLSys '23) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the DL middleware: overlay graphs, peer
+//!   sampling, sharing/aggregation algorithms, secure aggregation,
+//!   transports, datasets, metrics, and the experiment coordinator.
+//! * **Layer 2** — JAX model graphs (`python/compile/model.py`), AOT-
+//!   lowered once to HLO text artifacts.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   compute hot-spots, inlined into the same artifacts.
+//!
+//! At run time the Rust binary executes artifacts through PJRT
+//! ([`runtime`]); Python is never on the training path.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index,
+//! and `examples/quickstart.rs` for the API tour.
+
+pub mod bench;
+pub mod communication;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod graph;
+pub mod mapping;
+pub mod metrics;
+pub mod node;
+pub mod model;
+pub mod rng;
+pub mod runtime;
+pub mod secure;
+pub mod sharing;
+pub mod training;
+pub mod util;

@@ -1,0 +1,334 @@
+//! `decentra` — the DecentralizeRs command-line driver.
+//!
+//! Subcommands:
+//! * `run`     — run an experiment from a JSON config (in-process emulation)
+//! * `node`    — run ONE node over TCP (multi-process / multi-machine mode)
+//! * `graph`   — generate / inspect topology files
+//! * `report`  — aggregate a results directory into a series table
+//! * `fl`      — run the FL-server emulation (Fig 1's specialized node)
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use decentralize_rs::config::ExperimentConfig;
+use decentralize_rs::coordinator::run_experiment;
+use decentralize_rs::graph;
+use decentralize_rs::metrics::{aggregate, render_series, NodeLog};
+use decentralize_rs::rng::Xoshiro256pp;
+use decentralize_rs::runtime::EngineHandle;
+use decentralize_rs::util::args::{usage, Args, OptSpec};
+use decentralize_rs::util::logger;
+use decentralize_rs::{log_info, util};
+
+const FLAGS: &[&str] = &["save", "dynamic", "secure", "info", "help"];
+
+fn main() {
+    logger::init();
+    let args = match Args::from_env(FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command() {
+        Some("run") => cmd_run(&args),
+        Some("node") => cmd_node(&args),
+        Some("graph") => cmd_graph(&args),
+        Some("report") => cmd_report(&args),
+        Some("fl") => cmd_fl(&args),
+        _ => {
+            print_usage();
+            return;
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "{}",
+        usage(
+            "decentra",
+            "decentralized learning framework (DecentralizePy reproduction)",
+            &[
+                OptSpec { name: "config", help: "experiment config JSON (run/node)", default: None, is_flag: false },
+                OptSpec { name: "nodes", help: "override node count", default: None, is_flag: false },
+                OptSpec { name: "rounds", help: "override round count", default: None, is_flag: false },
+                OptSpec { name: "topology", help: "override topology spec", default: None, is_flag: false },
+                OptSpec { name: "sharing", help: "override sharing spec", default: None, is_flag: false },
+                OptSpec { name: "seed", help: "override seed", default: None, is_flag: false },
+                OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts"), is_flag: false },
+                OptSpec { name: "save", help: "persist logs under results/", default: None, is_flag: true },
+                OptSpec { name: "rank", help: "this node's rank (node mode)", default: None, is_flag: false },
+                OptSpec { name: "peers", help: "peers file: one host:port per rank (node mode)", default: None, is_flag: false },
+                OptSpec { name: "out", help: "output file (graph mode)", default: None, is_flag: false },
+                OptSpec { name: "info", help: "print graph statistics (graph mode)", default: None, is_flag: true },
+                OptSpec { name: "dir", help: "results dir (report mode)", default: None, is_flag: false },
+            ],
+        )
+    );
+    println!("subcommands: run | node | graph | report | fl");
+}
+
+/// Apply common CLI overrides onto a loaded config.
+fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
+    if let Some(n) = args.get("nodes") {
+        cfg.nodes = n.parse().context("--nodes")?;
+    }
+    if let Some(r) = args.get("rounds") {
+        cfg.rounds = r.parse().context("--rounds")?;
+    }
+    if let Some(t) = args.get("topology") {
+        cfg.topology = t.to_string();
+    }
+    if let Some(s) = args.get("sharing") {
+        cfg.sharing = s.to_string();
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    if args.flag("dynamic") {
+        cfg.dynamic = true;
+    }
+    if args.flag("secure") {
+        cfg.secure = true;
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a);
+    }
+    cfg.validate()
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(Path::new(path))?,
+        None => ExperimentConfig::default(),
+    };
+    apply_overrides(&mut cfg, args)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    log_info!("run", "experiment {:?}: {} nodes, {} rounds, topology {}, sharing {}{}",
+        cfg.name, cfg.nodes, cfg.rounds, cfg.topology, cfg.sharing,
+        if cfg.secure { " + secure-agg" } else { "" });
+    let engine = EngineHandle::start(&cfg.artifacts_dir, &[cfg.model.as_str()])?;
+    let result = run_experiment(&cfg, &engine)?;
+    print!("{}", render_series(&cfg.name, &result.series));
+    println!(
+        "final: acc {:.4}  bytes/node {}  emu {:.1}s  wall {:.1}s",
+        result.final_accuracy(),
+        util::human_bytes(result.final_bytes_per_node() as u64),
+        result.final_emu_time(),
+        result.wall_s
+    );
+    if args.flag("save") {
+        let dir = result.save()?;
+        log_info!("run", "results saved to {}", dir.display());
+    }
+    engine.shutdown();
+    Ok(())
+}
+
+/// Multi-process mode: run one DL node over TCP. Every process loads the
+/// same config and derives the same dataset partition / topology / init
+/// deterministically from the shared seed — only the rank differs.
+fn cmd_node(args: &Args) -> Result<()> {
+    use decentralize_rs::communication::tcp::TcpTransport;
+    use decentralize_rs::dataset::{DataLoader, Partition};
+    use decentralize_rs::node::{DlNode, TopologyView};
+    use decentralize_rs::rng::mix_seed;
+    use decentralize_rs::training::Trainer;
+    use std::net::SocketAddr;
+    use std::sync::Arc;
+
+    let cfg = load_config(args)?;
+    if cfg.dynamic {
+        bail!("node mode supports static topologies (run the sampler in-process instead)");
+    }
+    let rank: usize = args.require("rank")?.parse().context("--rank")?;
+    let peers_file = args.require("peers")?;
+    let peers: Vec<SocketAddr> = std::fs::read_to_string(peers_file)
+        .with_context(|| format!("reading {peers_file}"))?
+        .lines()
+        .filter(|l| !l.trim().is_empty() && !l.starts_with('#'))
+        .map(|l| l.trim().parse().with_context(|| format!("bad peer addr {l:?}")))
+        .collect::<Result<_>>()?;
+    if peers.len() != cfg.nodes {
+        bail!("peers file has {} entries for {} nodes", peers.len(), cfg.nodes);
+    }
+    if rank >= cfg.nodes {
+        bail!("rank {rank} out of range");
+    }
+
+    let engine = EngineHandle::start(&cfg.artifacts_dir, &[cfg.model.as_str()])?;
+    let meta = engine.manifest().model(&cfg.model)?.clone();
+    let (train, test) = decentralize_rs::coordinator::build_dataset(&cfg, meta.eval_batch);
+    let mut part_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x9A27]));
+    let shards =
+        Partition::from_spec(&cfg.partition)?.split(&train.labels, cfg.nodes, &mut part_rng);
+    let mut topo_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x7090]));
+    let g = graph::from_spec(&cfg.topology, cfg.nodes, &mut topo_rng)?;
+    let w = graph::metropolis_hastings(&g);
+
+    let transport = TcpTransport::bind(rank, peers[rank], peers.clone())?;
+    log_info!("node", "rank {rank} listening on {}", transport.local_addr());
+    // Give peers a moment to come up before the first sends.
+    std::thread::sleep(std::time::Duration::from_millis(500));
+
+    let loader = DataLoader::new(
+        train.subset(&shards[rank]),
+        meta.train_batch,
+        mix_seed(&[cfg.seed, 0xDA7A, rank as u64]),
+    );
+    let node = DlNode {
+        id: rank,
+        rounds: cfg.rounds,
+        eval_every: cfg.eval_every,
+        transport: Box::new(Arc::clone(&transport)),
+        trainer: Trainer::new(engine.clone(), &cfg.model, loader, cfg.lr, cfg.local_steps)?,
+        sharing: decentralize_rs::sharing::from_spec(
+            &cfg.sharing,
+            meta.param_count,
+            mix_seed(&[cfg.seed, rank as u64]),
+        )?,
+        params: meta.load_init()?,
+        topology: TopologyView::Static {
+            self_weight: w.self_weight(rank),
+            neighbors: w.neighbor_weights(rank).collect(),
+        },
+        test: Arc::new(test),
+        network: None,
+        step_time_s: 0.0,
+        eval_time_s: 0.0,
+    };
+    let log = node.run()?;
+    let dir = cfg.results_dir.join(&cfg.name);
+    log.save(&dir)?;
+    log_info!("node", "rank {rank} done; log in {}", dir.display());
+    transport.shutdown();
+    engine.shutdown();
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> Result<()> {
+    let spec = args.get_or("topology", "regular:5").to_string();
+    let n: usize = args.get_parse("nodes", 16usize)?;
+    let seed: u64 = args.get_parse("seed", 1u64)?;
+    let mut rng = Xoshiro256pp::new(seed);
+    let g = graph::from_spec(&spec, n, &mut rng)?;
+    if args.flag("info") {
+        let (dmin, dmean, dmax) = graph::degree_stats(&g);
+        println!("topology {spec} on {n} nodes");
+        println!("  edges      {}", g.edge_count());
+        println!("  degree     min {dmin} / mean {dmean:.2} / max {dmax}");
+        println!("  connected  {}", graph::is_connected(&g));
+        if let Some(d) = graph::diameter(&g) {
+            println!("  diameter   {d}");
+        }
+        println!("  spectral gap {:.4}", graph::spectral_gap(&g, 200));
+    }
+    if let Some(out) = args.get("out") {
+        let path = Path::new(out);
+        if out.ends_with(".adj") {
+            graph::save_adjacency_list(&g, path)?;
+        } else {
+            graph::save_edge_list(&g, path)?;
+        }
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.require("dir")?);
+    let logs = NodeLog::load_dir(&dir)?;
+    if logs.is_empty() {
+        bail!("no node logs in {}", dir.display());
+    }
+    let series = aggregate(&logs);
+    print!("{}", render_series(&dir.display().to_string(), &series));
+    Ok(())
+}
+
+/// FL emulation demo: one server + N clients over the in-process hub.
+fn cmd_fl(args: &Args) -> Result<()> {
+    use decentralize_rs::communication::inproc::InprocHub;
+    use decentralize_rs::dataset::{DataLoader, Partition};
+    use decentralize_rs::node::{FlClient, FlServer};
+    use decentralize_rs::rng::mix_seed;
+    use decentralize_rs::training::Trainer;
+    use std::sync::Arc;
+
+    let mut cfg = load_config(args)?;
+    cfg.name = "fl_emulation".into();
+    let participation: f64 = args.get_parse("participation", 0.5f64)?;
+    let engine = EngineHandle::start(&cfg.artifacts_dir, &[cfg.model.as_str()])?;
+    let meta = engine.manifest().model(&cfg.model)?.clone();
+    let (train, test) = decentralize_rs::coordinator::build_dataset(&cfg, meta.eval_batch);
+    let mut part_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x9A27]));
+    let shards =
+        Partition::from_spec(&cfg.partition)?.split(&train.labels, cfg.nodes, &mut part_rng);
+    let hub = InprocHub::new(cfg.nodes + 1);
+    let test = Arc::new(test);
+
+    let mut log = None;
+    std::thread::scope(|scope| -> Result<()> {
+        let server = FlServer {
+            rank: cfg.nodes,
+            clients: cfg.nodes,
+            rounds: cfg.rounds,
+            eval_every: cfg.eval_every,
+            participation,
+            seed: cfg.seed,
+            transport: Box::new(hub.endpoint(cfg.nodes)),
+            params: meta.load_init()?,
+            trainer: Trainer::new(
+                engine.clone(),
+                &cfg.model,
+                DataLoader::new(train.subset(&shards[0]), meta.train_batch, 0),
+                cfg.lr,
+                cfg.local_steps,
+            )?,
+            test: Arc::clone(&test),
+        };
+        let sh = scope.spawn(move || server.run());
+        let mut clients = Vec::new();
+        for id in 0..cfg.nodes {
+            let client = FlClient {
+                id,
+                server_rank: cfg.nodes,
+                transport: Box::new(hub.endpoint(id)),
+                trainer: Trainer::new(
+                    engine.clone(),
+                    &cfg.model,
+                    DataLoader::new(
+                        train.subset(&shards[id]),
+                        meta.train_batch,
+                        mix_seed(&[cfg.seed, id as u64]),
+                    ),
+                    cfg.lr,
+                    cfg.local_steps,
+                )?,
+            };
+            clients.push(scope.spawn(move || client.run()));
+        }
+        log = Some(sh.join().map_err(|_| anyhow::anyhow!("server panicked"))??);
+        for c in clients {
+            c.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+        }
+        Ok(())
+    })?;
+    hub.shutdown();
+    let log = log.unwrap();
+    let series = aggregate(&[log]);
+    print!("{}", render_series("fl_emulation", &series));
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Node ↔ machine mapping (the paper's *Mapping* module): associates
+//! global node ids with (machine, process) slots so the same experiment
+//! config runs in-process, on one cluster, or across WAN hosts.
+
+use std::net::SocketAddr;
+
+use anyhow::{bail, Context, Result};
+
+/// Assignment of `nodes` global ranks onto `machines` hosts.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Mapping {
+    nodes: usize,
+    machines: usize,
+    /// machine -> number of node processes on it.
+    per_machine: Vec<usize>,
+}
+
+impl Mapping {
+    /// Linear mapping: node `i` lives on machine `i / ceil(n/m)`.
+    /// Mirrors DecentralizePy's `Linear` mapping.
+    pub fn linear(nodes: usize, machines: usize) -> Mapping {
+        assert!(machines > 0 && nodes > 0);
+        let per = nodes.div_ceil(machines);
+        let mut per_machine = vec![0usize; machines];
+        for i in 0..nodes {
+            per_machine[(i / per).min(machines - 1)] += 1;
+        }
+        Mapping { nodes, machines, per_machine }
+    }
+
+    /// Explicit per-machine process counts.
+    pub fn explicit(per_machine: Vec<usize>) -> Mapping {
+        let nodes = per_machine.iter().sum();
+        Mapping { nodes, machines: per_machine.len(), per_machine }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    pub fn machines(&self) -> usize {
+        self.machines
+    }
+
+    /// Global rank -> (machine id, local process rank).
+    pub fn locate(&self, rank: usize) -> (usize, usize) {
+        assert!(rank < self.nodes, "rank out of range");
+        let mut offset = 0usize;
+        for (m, &cnt) in self.per_machine.iter().enumerate() {
+            if rank < offset + cnt {
+                return (m, rank - offset);
+            }
+            offset += cnt;
+        }
+        unreachable!("mapping invariant violated");
+    }
+
+    /// (machine, local rank) -> global rank.
+    pub fn global_rank(&self, machine: usize, local: usize) -> usize {
+        assert!(machine < self.machines);
+        assert!(local < self.per_machine[machine], "local rank out of range");
+        self.per_machine[..machine].iter().sum::<usize>() + local
+    }
+
+    /// Ranks hosted on `machine`.
+    pub fn ranks_on(&self, machine: usize) -> std::ops::Range<usize> {
+        let start: usize = self.per_machine[..machine].iter().sum();
+        start..start + self.per_machine[machine]
+    }
+
+    /// Build the per-node socket address table from per-machine base
+    /// addresses: node with local rank `l` on machine `m` listens on
+    /// `hosts[m]` with port `base_port(m) + l`.
+    pub fn address_table(&self, hosts: &[SocketAddr]) -> Result<Vec<SocketAddr>> {
+        if hosts.len() != self.machines {
+            bail!("{} hosts for {} machines", hosts.len(), self.machines);
+        }
+        let mut out = Vec::with_capacity(self.nodes);
+        for rank in 0..self.nodes {
+            let (m, local) = self.locate(rank);
+            let mut addr = hosts[m];
+            let port = addr
+                .port()
+                .checked_add(local as u16)
+                .context("port overflow in address table")?;
+            addr.set_port(port);
+            out.push(addr);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_even_split() {
+        let m = Mapping::linear(16, 4);
+        assert_eq!(m.nodes(), 16);
+        assert_eq!(m.locate(0), (0, 0));
+        assert_eq!(m.locate(3), (0, 3));
+        assert_eq!(m.locate(4), (1, 0));
+        assert_eq!(m.locate(15), (3, 3));
+    }
+
+    #[test]
+    fn linear_uneven_split() {
+        let m = Mapping::linear(10, 3); // ceil(10/3)=4 -> 4,4,2
+        assert_eq!(m.locate(9), (2, 1));
+        assert_eq!(m.ranks_on(0), 0..4);
+        assert_eq!(m.ranks_on(2), 8..10);
+    }
+
+    #[test]
+    fn roundtrip_locate_global() {
+        let m = Mapping::explicit(vec![3, 1, 5]);
+        for rank in 0..m.nodes() {
+            let (mach, local) = m.locate(rank);
+            assert_eq!(m.global_rank(mach, local), rank);
+        }
+    }
+
+    #[test]
+    fn address_table_ports() {
+        let m = Mapping::explicit(vec![2, 2]);
+        let hosts: Vec<SocketAddr> =
+            vec!["10.0.0.1:9000".parse().unwrap(), "10.0.0.2:9100".parse().unwrap()];
+        let table = m.address_table(&hosts).unwrap();
+        assert_eq!(table[0], "10.0.0.1:9000".parse().unwrap());
+        assert_eq!(table[1], "10.0.0.1:9001".parse().unwrap());
+        assert_eq!(table[3], "10.0.0.2:9101".parse().unwrap());
+    }
+
+    #[test]
+    fn address_table_host_count_checked() {
+        let m = Mapping::linear(4, 2);
+        assert!(m.address_table(&["1.2.3.4:1".parse().unwrap()]).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn locate_out_of_range() {
+        Mapping::linear(4, 2).locate(4);
+    }
+}

@@ -1,0 +1,286 @@
+//! Metrics: per-node JSONL logs and cross-node aggregation.
+//!
+//! Matching the paper's design, "each node locally writes logs and
+//! results in JSON files; to compute aggregate statistics we collect and
+//! process the results in a single machine at the end" (§2.2). A
+//! [`NodeLog`] accumulates one record per evaluation round; the
+//! [`aggregate`] functions turn a set of node logs into the mean ± 95% CI
+//! series the figures plot.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{parse, Json};
+use crate::util::stats::{mean_ci, MeanCi};
+
+/// One evaluation record for one node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub round: u64,
+    /// Emulated wall-clock seconds since training start.
+    pub emu_time_s: f64,
+    /// Real wall-clock seconds since training start.
+    pub real_time_s: f64,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Cumulative wire bytes sent by this node.
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub msgs_sent: u64,
+}
+
+impl Record {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::num(self.round as f64)),
+            ("emu_time_s", Json::num(self.emu_time_s)),
+            ("real_time_s", Json::num(self.real_time_s)),
+            ("train_loss", Json::num(self.train_loss)),
+            ("test_loss", Json::num(self.test_loss)),
+            ("test_acc", Json::num(self.test_acc)),
+            ("bytes_sent", Json::num(self.bytes_sent as f64)),
+            ("bytes_recv", Json::num(self.bytes_recv as f64)),
+            ("msgs_sent", Json::num(self.msgs_sent as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Record> {
+        let f = |k: &str| -> Result<f64> {
+            v.get(k)
+                .as_f64()
+                .with_context(|| format!("record missing field {k}"))
+        };
+        Ok(Record {
+            round: f("round")? as u64,
+            emu_time_s: f("emu_time_s")?,
+            real_time_s: f("real_time_s")?,
+            train_loss: f("train_loss")?,
+            test_loss: f("test_loss")?,
+            test_acc: f("test_acc")?,
+            bytes_sent: f("bytes_sent")? as u64,
+            bytes_recv: f("bytes_recv")? as u64,
+            msgs_sent: f("msgs_sent")? as u64,
+        })
+    }
+}
+
+/// Per-node log: node id + records in round order.
+#[derive(Debug, Clone, Default)]
+pub struct NodeLog {
+    pub node: usize,
+    pub records: Vec<Record>,
+}
+
+impl NodeLog {
+    pub fn new(node: usize) -> NodeLog {
+        NodeLog { node, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, r: Record) {
+        self.records.push(r);
+    }
+
+    /// Serialize as JSONL: one header line then one record per line.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = Json::obj(vec![("node", Json::num(self.node as f64))]).dump();
+        out.push('\n');
+        for r in &self.records {
+            out.push_str(&r.to_json().dump());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str) -> Result<NodeLog> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = parse(lines.next().context("empty node log")?)?;
+        let node = header
+            .get("node")
+            .as_usize()
+            .context("node log header missing node id")?;
+        let mut log = NodeLog::new(node);
+        for line in lines {
+            log.push(Record::from_json(&parse(line)?)?);
+        }
+        Ok(log)
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("node_{:04}.jsonl", self.node));
+        let mut f = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(self.to_jsonl().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<NodeLog> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        NodeLog::from_jsonl(&text)
+    }
+
+    /// Load every `node_*.jsonl` in a directory.
+    pub fn load_dir(dir: &Path) -> Result<Vec<NodeLog>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if name.starts_with("node_") && name.ends_with(".jsonl") {
+                out.push(NodeLog::load(&path)?);
+            }
+        }
+        out.sort_by_key(|l| l.node);
+        Ok(out)
+    }
+}
+
+/// A point in an aggregated series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SeriesPoint {
+    pub round: u64,
+    /// Mean cumulative bytes sent per node at this round.
+    pub bytes_sent: MeanCi,
+    pub emu_time_s: MeanCi,
+    pub real_time_s: MeanCi,
+    pub test_acc: MeanCi,
+    pub test_loss: MeanCi,
+    pub train_loss: MeanCi,
+}
+
+/// Aggregate per-round across nodes: every round that all logs contain
+/// becomes one [`SeriesPoint`] with mean ± CI over nodes.
+pub fn aggregate(logs: &[NodeLog]) -> Vec<SeriesPoint> {
+    if logs.is_empty() {
+        return Vec::new();
+    }
+    let rounds = logs
+        .iter()
+        .map(|l| l.records.len())
+        .min()
+        .unwrap_or(0);
+    let mut out = Vec::with_capacity(rounds);
+    for i in 0..rounds {
+        let collect = |f: &dyn Fn(&Record) -> f64| -> Vec<f64> {
+            logs.iter().map(|l| f(&l.records[i])).collect()
+        };
+        out.push(SeriesPoint {
+            round: logs[0].records[i].round,
+            bytes_sent: mean_ci(&collect(&|r| r.bytes_sent as f64)),
+            emu_time_s: mean_ci(&collect(&|r| r.emu_time_s)),
+            real_time_s: mean_ci(&collect(&|r| r.real_time_s)),
+            test_acc: mean_ci(&collect(&|r| r.test_acc)),
+            test_loss: mean_ci(&collect(&|r| r.test_loss)),
+            train_loss: mean_ci(&collect(&|r| r.train_loss)),
+        });
+    }
+    out
+}
+
+/// Render an aggregated series as aligned text columns (what the figure
+/// harnesses print) — round, acc, loss, time, bytes.
+pub fn render_series(name: &str, series: &[SeriesPoint]) -> String {
+    let mut out = format!(
+        "# {name}\n# {:>6} {:>10} {:>10} {:>12} {:>12} {:>14}\n",
+        "round", "acc", "acc_ci95", "loss", "emu_time_s", "bytes_sent"
+    );
+    for p in series {
+        out.push_str(&format!(
+            "  {:>6} {:>10.4} {:>10.4} {:>12.4} {:>12.3} {:>14.0}\n",
+            p.round, p.test_acc.mean, p.test_acc.ci95, p.test_loss.mean,
+            p.emu_time_s.mean, p.bytes_sent.mean
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u64, acc: f64, bytes: u64) -> Record {
+        Record {
+            round,
+            emu_time_s: round as f64 * 0.5,
+            real_time_s: round as f64 * 0.1,
+            train_loss: 2.0 / (round + 1) as f64,
+            test_loss: 2.1 / (round + 1) as f64,
+            test_acc: acc,
+            bytes_sent: bytes,
+            bytes_recv: bytes,
+            msgs_sent: round * 5,
+        }
+    }
+
+    #[test]
+    fn record_json_roundtrip() {
+        let r = rec(3, 0.42, 1000);
+        let j = r.to_json();
+        assert_eq!(Record::from_json(&j).unwrap(), r);
+    }
+
+    #[test]
+    fn jsonl_roundtrip() {
+        let mut log = NodeLog::new(7);
+        log.push(rec(0, 0.1, 100));
+        log.push(rec(1, 0.2, 200));
+        let text = log.to_jsonl();
+        let back = NodeLog::from_jsonl(&text).unwrap();
+        assert_eq!(back.node, 7);
+        assert_eq!(back.records, log.records);
+    }
+
+    #[test]
+    fn save_load_dir() {
+        let dir = std::env::temp_dir().join("decentra_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        for node in 0..3 {
+            let mut log = NodeLog::new(node);
+            log.push(rec(0, 0.1 * node as f64, 50));
+            log.save(&dir).unwrap();
+        }
+        let logs = NodeLog::load_dir(&dir).unwrap();
+        assert_eq!(logs.len(), 3);
+        assert_eq!(logs[2].node, 2);
+    }
+
+    #[test]
+    fn aggregate_means_and_truncation() {
+        let mut a = NodeLog::new(0);
+        let mut b = NodeLog::new(1);
+        a.push(rec(0, 0.2, 100));
+        a.push(rec(1, 0.4, 200));
+        b.push(rec(0, 0.4, 300));
+        // b is missing round 1 -> series truncates to the common prefix.
+        let series = aggregate(&[a, b]);
+        assert_eq!(series.len(), 1);
+        assert!((series[0].test_acc.mean - 0.3).abs() < 1e-12);
+        assert!((series[0].bytes_sent.mean - 200.0).abs() < 1e-12);
+        assert_eq!(series[0].test_acc.n, 2);
+    }
+
+    #[test]
+    fn aggregate_empty() {
+        assert!(aggregate(&[]).is_empty());
+    }
+
+    #[test]
+    fn render_contains_data() {
+        let mut a = NodeLog::new(0);
+        a.push(rec(0, 0.5, 123));
+        let text = render_series("demo", &aggregate(&[a]));
+        assert!(text.contains("demo"));
+        assert!(text.contains("0.5"));
+        assert!(text.contains("123"));
+    }
+
+    #[test]
+    fn from_jsonl_rejects_garbage() {
+        assert!(NodeLog::from_jsonl("").is_err());
+        assert!(NodeLog::from_jsonl("{\"x\":1}\n").is_err());
+        assert!(NodeLog::from_jsonl("{\"node\":0}\nnot json\n").is_err());
+    }
+}

@@ -1,0 +1,279 @@
+//! Model parameter representation (the paper's *Model* module).
+//!
+//! Models cross the HLO boundary as one flat f32 vector, so the Rust-side
+//! model is a [`ParamVec`] plus whatever extra state a sharing algorithm
+//! needs (the paper motivates the Model module exactly as "a place to
+//! store additional states", e.g. Choco-SGD's `x_hat` or error residuals —
+//! see [`crate::sharing`]).
+
+use crate::rng::Xoshiro256pp;
+
+/// Dense flat parameter vector with the vector ops the DL hot path needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamVec {
+    data: Vec<f32>,
+}
+
+impl ParamVec {
+    pub fn zeros(n: usize) -> ParamVec {
+        ParamVec { data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> ParamVec {
+        ParamVec { data }
+    }
+
+    /// Random init matching the scale of the python-side He-uniform init;
+    /// used only by tests/benches that don't load artifacts.
+    pub fn random(n: usize, scale: f32, rng: &mut Xoshiro256pp) -> ParamVec {
+        ParamVec {
+            data: (0..n).map(|_| (rng.next_f32() * 2.0 - 1.0) * scale).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &ParamVec) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// self *= alpha
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// self += alpha at sparse positions: data[idx] += alpha * val
+    pub fn axpy_sparse(&mut self, alpha: f32, sv: &SparseVec) {
+        for (&i, &v) in sv.indices.iter().zip(sv.values.iter()) {
+            self.data[i as usize] += alpha * v;
+        }
+    }
+
+    pub fn dot(&self, other: &ParamVec) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (*a as f64) * (*b as f64))
+            .sum()
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn linf_norm(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Magnitude of the k-th largest |value| (the TopK threshold).
+    /// `k == 0` returns +inf (send nothing); `k >= len` returns 0.
+    pub fn topk_threshold(&self, k: usize) -> f32 {
+        if k == 0 {
+            return f32::INFINITY;
+        }
+        if k >= self.len() {
+            return 0.0;
+        }
+        let mut mags: Vec<f32> = self.data.iter().map(|x| x.abs()).collect();
+        // k-th largest = (len - k)-th smallest.
+        let pos = mags.len() - k;
+        mags.select_nth_unstable_by(pos, |a, b| a.partial_cmp(b).unwrap());
+        mags[pos]
+    }
+
+    /// Extract the top-k entries by magnitude as a sparse vector.
+    /// Ties at the threshold are broken by index order, and exactly `k`
+    /// entries are returned (assuming `k <= len`).
+    pub fn topk(&self, k: usize) -> SparseVec {
+        let k = k.min(self.len());
+        if k == 0 {
+            return SparseVec::empty(self.len());
+        }
+        let t = self.topk_threshold(k);
+        let mut indices = Vec::with_capacity(k);
+        let mut values = Vec::with_capacity(k);
+        // First pass: strictly above threshold.
+        for (i, &v) in self.data.iter().enumerate() {
+            if v.abs() > t && indices.len() < k {
+                indices.push(i as u32);
+                values.push(v);
+            }
+        }
+        // Second pass: fill with ties at the threshold.
+        if indices.len() < k {
+            for (i, &v) in self.data.iter().enumerate() {
+                if v.abs() == t {
+                    // Maintain sorted index order by merging.
+                    indices.push(i as u32);
+                    values.push(v);
+                    if indices.len() == k {
+                        break;
+                    }
+                }
+            }
+            // Restore index order (first pass indices are sorted, ties
+            // appended; a final sort keeps the representation canonical).
+            let mut pairs: Vec<(u32, f32)> =
+                indices.into_iter().zip(values).collect();
+            pairs.sort_by_key(|(i, _)| *i);
+            indices = pairs.iter().map(|(i, _)| *i).collect();
+            values = pairs.iter().map(|(_, v)| *v).collect();
+        }
+        SparseVec { dim: self.len(), indices, values }
+    }
+
+    /// Uniformly sample `k` coordinates (random-sampling sparsification).
+    pub fn sample_k(&self, k: usize, rng: &mut Xoshiro256pp) -> SparseVec {
+        let k = k.min(self.len());
+        let mut idx = rng.sample_indices(self.len(), k);
+        idx.sort_unstable();
+        SparseVec {
+            dim: self.len(),
+            values: idx.iter().map(|&i| self.data[i]).collect(),
+            indices: idx.into_iter().map(|i| i as u32).collect(),
+        }
+    }
+}
+
+/// Sparse parameter message: sorted indices + values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseVec {
+    pub dim: usize,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn empty(dim: usize) -> SparseVec {
+        SparseVec { dim, indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Densify into a full vector (absent coordinates are zero).
+    pub fn to_dense(&self) -> ParamVec {
+        let mut out = ParamVec::zeros(self.dim);
+        for (&i, &v) in self.indices.iter().zip(self.values.iter()) {
+            out.data[i as usize] = v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pv(v: &[f32]) -> ParamVec {
+        ParamVec::from_vec(v.to_vec())
+    }
+
+    #[test]
+    fn axpy_scale_dot() {
+        let mut a = pv(&[1.0, 2.0, 3.0]);
+        let b = pv(&[0.5, 0.5, 0.5]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.as_slice(), &[2.0, 3.0, 4.0]);
+        a.scale(0.5);
+        assert_eq!(a.as_slice(), &[1.0, 1.5, 2.0]);
+        assert!((a.dot(&b) - (0.5 + 0.75 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norms() {
+        let a = pv(&[3.0, -4.0]);
+        assert!((a.l2_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(a.linf_norm(), 4.0);
+    }
+
+    #[test]
+    fn topk_selects_largest_magnitudes() {
+        let a = pv(&[0.1, -5.0, 3.0, -0.2, 4.0]);
+        let s = a.topk(2);
+        assert_eq!(s.indices, vec![1, 4]);
+        assert_eq!(s.values, vec![-5.0, 4.0]);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn topk_exact_count_with_ties() {
+        let a = pv(&[1.0, 1.0, 1.0, 1.0]);
+        let s = a.topk(2);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.indices, vec![0, 1]); // index-order tie-break
+    }
+
+    #[test]
+    fn topk_threshold_edges() {
+        let a = pv(&[1.0, 2.0, 3.0]);
+        assert_eq!(a.topk_threshold(0), f32::INFINITY);
+        assert_eq!(a.topk_threshold(3), 0.0);
+        assert_eq!(a.topk_threshold(5), 0.0);
+        assert_eq!(a.topk_threshold(1), 3.0);
+        assert_eq!(a.topk_threshold(2), 2.0);
+    }
+
+    #[test]
+    fn topk_full_is_identity_support() {
+        let a = pv(&[0.5, -0.1, 0.0, 2.0]);
+        let s = a.topk(4);
+        assert_eq!(s.nnz(), 4);
+        assert_eq!(s.to_dense(), a);
+    }
+
+    #[test]
+    fn sample_k_distinct_sorted() {
+        let mut rng = Xoshiro256pp::new(1);
+        let a = ParamVec::random(100, 1.0, &mut rng);
+        let s = a.sample_k(10, &mut rng);
+        assert_eq!(s.nnz(), 10);
+        assert!(s.indices.windows(2).all(|w| w[0] < w[1]));
+        for (&i, &v) in s.indices.iter().zip(s.values.iter()) {
+            assert_eq!(v, a.as_slice()[i as usize]);
+        }
+    }
+
+    #[test]
+    fn sparse_roundtrip_and_axpy() {
+        let sv = SparseVec { dim: 5, indices: vec![1, 3], values: vec![2.0, -1.0] };
+        let dense = sv.to_dense();
+        assert_eq!(dense.as_slice(), &[0.0, 2.0, 0.0, -1.0, 0.0]);
+        let mut acc = ParamVec::zeros(5);
+        acc.axpy_sparse(0.5, &sv);
+        assert_eq!(acc.as_slice(), &[0.0, 1.0, 0.0, -0.5, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn axpy_length_mismatch_panics() {
+        let mut a = pv(&[1.0]);
+        a.axpy(1.0, &pv(&[1.0, 2.0]));
+    }
+}

@@ -1,0 +1,219 @@
+//! The DL client node: the paper's Fig 2 training loop as a long-running
+//! process — train locally, exchange models with the current neighbors,
+//! aggregate, periodically evaluate.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::communication::{shaper::EmuClock, shaper::NetworkModel, Envelope, MsgKind, Transport};
+use crate::dataset::Dataset;
+use crate::metrics::{NodeLog, Record};
+use crate::model::ParamVec;
+use crate::sharing::{Received, Sharing};
+use crate::training::Trainer;
+use crate::util::Timer;
+
+use super::proto::{decode_neighbors, encode_control, Control, NeighborAssignment};
+
+/// Static or sampler-driven topology view for one node.
+pub enum TopologyView {
+    /// Fixed neighbor row: (self weight, [(neighbor, weight)]).
+    Static { self_weight: f64, neighbors: Vec<(usize, f64)> },
+    /// Ask the peer sampler (at `sampler_rank`) every round.
+    Dynamic { sampler_rank: usize },
+}
+
+/// Everything a DL node needs to run.
+pub struct DlNode {
+    pub id: usize,
+    pub rounds: u64,
+    pub eval_every: u64,
+    pub transport: Box<dyn Transport>,
+    pub trainer: Trainer,
+    pub sharing: Box<dyn Sharing>,
+    pub params: Vec<f32>,
+    pub topology: TopologyView,
+    pub test: Arc<Dataset>,
+    /// WAN model for the emulated clock (None = skip emu accounting).
+    pub network: Option<NetworkModel>,
+    /// Calibrated seconds per local training step (for the emu clock).
+    pub step_time_s: f64,
+    /// Eval time estimate per full test pass (emu clock).
+    pub eval_time_s: f64,
+}
+
+impl DlNode {
+    /// Run the D-PSGD loop; returns this node's metric log.
+    pub fn run(mut self) -> Result<NodeLog> {
+        let mut log = NodeLog::new(self.id);
+        let mut clock = EmuClock::new();
+        let wall = Timer::start();
+        // Model messages that arrived early (neighbors running ahead).
+        let mut pending: HashMap<(u64, usize), Vec<u8>> = HashMap::new();
+
+        for round in 0..self.rounds {
+            // 1. Current topology row.
+            let assign = self.neighbor_row(round, &mut pending)?;
+
+            // 2. Local training.
+            let (new_params, train_loss) = self.trainer.train_round(std::mem::take(&mut self.params))?;
+            self.params = new_params;
+
+            // 3. Share with neighbors.
+            let model = ParamVec::from_vec(std::mem::take(&mut self.params));
+            let payload = self.sharing.outgoing(&model, round)?;
+            let bytes_before = self.transport.counters().bytes_sent;
+            for &(nbr, _) in &assign.neighbors {
+                self.transport.send(Envelope {
+                    src: self.id,
+                    dst: nbr,
+                    round,
+                    kind: MsgKind::Model,
+                    payload: payload.clone(),
+                })?;
+            }
+            let sent_this_round = self.transport.counters().bytes_sent - bytes_before;
+
+            // 4. Collect this round's models from all current neighbors.
+            let mut msgs: Vec<(usize, Vec<u8>)> = Vec::with_capacity(assign.neighbors.len());
+            for &(nbr, _) in &assign.neighbors {
+                let payload = self.await_model(round, nbr, &mut pending)?;
+                msgs.push((nbr, payload));
+            }
+
+            // 5. Aggregate.
+            let mut model = model;
+            {
+                let received: Vec<Received> = msgs
+                    .iter()
+                    .map(|(src, payload)| Received {
+                        src: *src,
+                        weight: weight_of(&assign, *src),
+                        payload,
+                    })
+                    .collect();
+                self.sharing
+                    .aggregate(&mut model, assign.self_weight, &received)?;
+            }
+            self.params = model.into_vec();
+
+            // 6. Emulated clock: local compute + uplink transfer.
+            if let Some(net) = self.network {
+                clock.advance(self.step_time_s * self.trainer.local_steps() as f64);
+                clock.advance(net.round_upload_time(sent_this_round));
+            }
+
+            // 7. Periodic evaluation.
+            if (round + 1) % self.eval_every == 0 || round + 1 == self.rounds {
+                let (test_loss, test_acc) = self.trainer.evaluate(&self.params, &self.test)?;
+                if self.network.is_some() {
+                    clock.advance(self.eval_time_s);
+                }
+                let c = self.transport.counters();
+                log.push(Record {
+                    round,
+                    emu_time_s: clock.now(),
+                    real_time_s: wall.elapsed().as_secs_f64(),
+                    train_loss,
+                    test_loss,
+                    test_acc,
+                    bytes_sent: c.bytes_sent,
+                    bytes_recv: c.bytes_recv,
+                    msgs_sent: c.msgs_sent,
+                });
+            }
+        }
+        Ok(log)
+    }
+
+    /// Resolve the neighbor row for `round`.
+    fn neighbor_row(
+        &mut self,
+        round: u64,
+        pending: &mut HashMap<(u64, usize), Vec<u8>>,
+    ) -> Result<NeighborAssignment> {
+        match &self.topology {
+            TopologyView::Static { self_weight, neighbors } => Ok(NeighborAssignment {
+                round,
+                self_weight: *self_weight,
+                neighbors: neighbors.clone(),
+            }),
+            TopologyView::Dynamic { sampler_rank } => {
+                let sampler = *sampler_rank;
+                self.transport.send(Envelope {
+                    src: self.id,
+                    dst: sampler,
+                    round,
+                    kind: MsgKind::Control,
+                    payload: encode_control(&Control::Ready { round }),
+                })?;
+                loop {
+                    let env = self
+                        .transport
+                        .recv()?
+                        .context("transport closed while waiting for peer sampler")?;
+                    match env.kind {
+                        MsgKind::Neighbors => {
+                            let a = decode_neighbors(&env.payload)?;
+                            if a.round != round {
+                                bail!(
+                                    "sampler sent round {} while waiting for {round}",
+                                    a.round
+                                );
+                            }
+                            return Ok(a);
+                        }
+                        MsgKind::Model => {
+                            pending.insert((env.round, env.src), env.payload);
+                        }
+                        other => bail!("unexpected {other:?} while waiting for sampler"),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wait for the Model message of (round, src), buffering strays.
+    fn await_model(
+        &mut self,
+        round: u64,
+        src: usize,
+        pending: &mut HashMap<(u64, usize), Vec<u8>>,
+    ) -> Result<Vec<u8>> {
+        if let Some(p) = pending.remove(&(round, src)) {
+            return Ok(p);
+        }
+        loop {
+            let env = self
+                .transport
+                .recv()?
+                .with_context(|| format!("transport closed waiting for model {src}@{round}"))?;
+            match env.kind {
+                MsgKind::Model => {
+                    if env.round == round && env.src == src {
+                        return Ok(env.payload);
+                    }
+                    if env.round < round {
+                        // A stale duplicate — drop (can only happen after
+                        // a dynamic-topology change mid-flight).
+                        continue;
+                    }
+                    pending.insert((env.round, env.src), env.payload);
+                }
+                MsgKind::Control => continue, // stop arrives after our last round
+                other => bail!("unexpected {other:?} while collecting models"),
+            }
+        }
+    }
+}
+
+/// Look up a neighbor's weight in an assignment.
+fn weight_of(a: &NeighborAssignment, src: usize) -> f64 {
+    a.neighbors
+        .iter()
+        .find(|(n, _)| *n == src)
+        .map(|(_, w)| *w)
+        .unwrap_or(0.0)
+}

@@ -1,0 +1,152 @@
+//! Federated-learning emulation: the paper's Fig 1 point that a Node can
+//! be specialized into an FL server (and clients). FedAvg with
+//! configurable client participation; participation 1.0 gives the
+//! classic synchronous parameter-server shape ([`ParameterServer`]).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::communication::{Envelope, MsgKind, Transport};
+use crate::compression::{FloatCodec, RawF32};
+use crate::dataset::Dataset;
+use crate::metrics::{NodeLog, Record};
+use crate::rng::{mix_seed, Xoshiro256pp};
+use crate::training::Trainer;
+use crate::util::Timer;
+
+use super::proto::{encode_control, Control};
+
+/// FedAvg server occupying transport rank `rank`.
+pub struct FlServer {
+    pub rank: usize,
+    pub clients: usize,
+    pub rounds: u64,
+    pub eval_every: u64,
+    /// Fraction of clients sampled per round (1.0 = all).
+    pub participation: f64,
+    pub seed: u64,
+    pub transport: Box<dyn Transport>,
+    pub params: Vec<f32>,
+    /// Server-side evaluation.
+    pub trainer: Trainer,
+    pub test: Arc<Dataset>,
+}
+
+/// Synchronous parameter server = FedAvg with full participation.
+pub type ParameterServer = FlServer;
+
+impl FlServer {
+    pub fn run(mut self) -> Result<NodeLog> {
+        let codec = RawF32;
+        let mut log = NodeLog::new(self.rank);
+        let wall = Timer::start();
+        let dim = self.params.len();
+        let mut rng = Xoshiro256pp::new(mix_seed(&[self.seed, 0xF1]));
+        let m = ((self.clients as f64 * self.participation).round() as usize)
+            .clamp(1, self.clients);
+
+        for round in 0..self.rounds {
+            // Sample cohort and broadcast the global model.
+            let cohort = rng.sample_indices(self.clients, m);
+            let payload = codec.encode(&self.params);
+            for &c in &cohort {
+                self.transport.send(Envelope {
+                    src: self.rank,
+                    dst: c,
+                    round,
+                    kind: MsgKind::FlBroadcast,
+                    payload: payload.clone(),
+                })?;
+            }
+            // Collect updates; FedAvg = uniform average over the cohort.
+            let mut acc = vec![0.0f64; dim];
+            let mut got: HashMap<usize, bool> = HashMap::new();
+            while got.len() < cohort.len() {
+                let env = self
+                    .transport
+                    .recv()?
+                    .context("transport closed collecting FL updates")?;
+                match env.kind {
+                    MsgKind::FlUpdate if env.round == round => {
+                        if got.insert(env.src, true).is_some() {
+                            bail!("duplicate update from client {}", env.src);
+                        }
+                        let vals = codec.decode(&env.payload, dim)?;
+                        for (a, v) in acc.iter_mut().zip(vals.iter()) {
+                            *a += *v as f64;
+                        }
+                    }
+                    MsgKind::FlUpdate => {} // stale round; drop
+                    other => bail!("server got unexpected {other:?}"),
+                }
+            }
+            for (p, a) in self.params.iter_mut().zip(acc.iter()) {
+                *p = (*a / cohort.len() as f64) as f32;
+            }
+
+            if (round + 1) % self.eval_every == 0 || round + 1 == self.rounds {
+                let (test_loss, test_acc) = self.trainer.evaluate(&self.params, &self.test)?;
+                let c = self.transport.counters();
+                log.push(Record {
+                    round,
+                    emu_time_s: 0.0,
+                    real_time_s: wall.elapsed().as_secs_f64(),
+                    train_loss: f64::NAN,
+                    test_loss,
+                    test_acc,
+                    bytes_sent: c.bytes_sent,
+                    bytes_recv: c.bytes_recv,
+                    msgs_sent: c.msgs_sent,
+                });
+            }
+        }
+        // Orderly stop for all clients.
+        for c in 0..self.clients {
+            self.transport.send(Envelope {
+                src: self.rank,
+                dst: c,
+                round: self.rounds,
+                kind: MsgKind::Control,
+                payload: encode_control(&Control::Stop),
+            })?;
+        }
+        Ok(log)
+    }
+}
+
+/// FL client: waits for broadcasts, trains locally, returns the update.
+pub struct FlClient {
+    pub id: usize,
+    pub server_rank: usize,
+    pub transport: Box<dyn Transport>,
+    pub trainer: Trainer,
+}
+
+impl FlClient {
+    pub fn run(mut self) -> Result<()> {
+        let codec = RawF32;
+        loop {
+            let env = self
+                .transport
+                .recv()?
+                .context("transport closed in FL client")?;
+            match env.kind {
+                MsgKind::FlBroadcast => {
+                    let params = codec.decode(&env.payload, env.payload.len() / 4)?;
+                    let (new_params, _loss) = self.trainer.train_round(params)?;
+                    self.transport.send(Envelope {
+                        src: self.id,
+                        dst: self.server_rank,
+                        round: env.round,
+                        kind: MsgKind::FlUpdate,
+                        payload: codec.encode(&new_params),
+                    })?;
+                }
+                MsgKind::Control => return Ok(()),
+                other => bail!("FL client got unexpected {other:?}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! Decentralized gossip-based peer sampling (Jelasity et al., TOCS 2007)
+//! — the paper's named future-work item ("decentralized peer sampling
+//! [16]"), provided as a first-class module.
+//!
+//! Each node keeps a small **partial view**: a set of (peer, age)
+//! descriptors. Every round it picks the *oldest* peer, sends it half of
+//! its view (plus its own fresh descriptor), receives the symmetric
+//! half-view back, and merges keeping the freshest descriptor per peer.
+//! The stream of view samples converges to (near-)uniform random peers —
+//! which is exactly what a dynamic d-regular topology needs, without the
+//! centralized sampler.
+//!
+//! This module implements the protocol state machine over plain payloads
+//! (so it is transport-agnostic and unit-testable without threads); the
+//! driver exchanges the `ViewMessage`s through any [`crate::communication::Transport`].
+
+use crate::rng::Xoshiro256pp;
+
+/// A peer descriptor: node id + age in rounds (0 = freshest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Descriptor {
+    pub peer: usize,
+    pub age: u32,
+}
+
+/// Exchanged half-view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ViewMessage {
+    pub from: usize,
+    pub descriptors: Vec<Descriptor>,
+    /// True for the initiating push (the receiver must reply).
+    pub is_push: bool,
+}
+
+/// Peer-sampling service state for one node.
+#[derive(Debug)]
+pub struct GossipView {
+    pub node: usize,
+    /// Maximum view size (the classic "c" parameter).
+    pub capacity: usize,
+    view: Vec<Descriptor>,
+    rng: Xoshiro256pp,
+}
+
+impl GossipView {
+    /// Bootstrap from any non-empty seed set (e.g. ring neighbors).
+    pub fn new(node: usize, capacity: usize, seeds: &[usize], seed: u64) -> GossipView {
+        assert!(capacity >= 2, "view capacity must be >= 2");
+        let view = seeds
+            .iter()
+            .filter(|&&p| p != node)
+            .take(capacity)
+            .map(|&peer| Descriptor { peer, age: 0 })
+            .collect();
+        GossipView { node, capacity, view, rng: Xoshiro256pp::new(seed) }
+    }
+
+    pub fn view(&self) -> &[Descriptor] {
+        &self.view
+    }
+
+    /// Pick the gossip partner for this round: the oldest descriptor
+    /// (ties broken randomly). Returns `None` on an empty view.
+    pub fn select_partner(&mut self) -> Option<usize> {
+        if self.view.is_empty() {
+            return None;
+        }
+        let max_age = self.view.iter().map(|d| d.age).max().unwrap();
+        let oldest: Vec<usize> = self
+            .view
+            .iter()
+            .filter(|d| d.age == max_age)
+            .map(|d| d.peer)
+            .collect();
+        Some(oldest[self.rng.range(0, oldest.len())])
+    }
+
+    /// Build the half-view to send to `partner` (push or reply).
+    pub fn make_message(&mut self, partner: usize, is_push: bool) -> ViewMessage {
+        // Own fresh descriptor first, then a random half of the view
+        // excluding the partner itself.
+        let mut pool: Vec<Descriptor> =
+            self.view.iter().copied().filter(|d| d.peer != partner).collect();
+        self.rng.shuffle(&mut pool);
+        pool.truncate(self.capacity / 2);
+        let mut descriptors = vec![Descriptor { peer: self.node, age: 0 }];
+        descriptors.extend(pool);
+        ViewMessage { from: self.node, descriptors, is_push }
+    }
+
+    /// Merge a received half-view; keeps the freshest descriptor per peer
+    /// and trims back to capacity by dropping the oldest.
+    pub fn merge(&mut self, msg: &ViewMessage) {
+        for d in &msg.descriptors {
+            if d.peer == self.node {
+                continue;
+            }
+            match self.view.iter_mut().find(|v| v.peer == d.peer) {
+                Some(existing) => existing.age = existing.age.min(d.age),
+                None => self.view.push(*d),
+            }
+        }
+        // Trim: drop oldest first (random among ties).
+        while self.view.len() > self.capacity {
+            let max_age = self.view.iter().map(|d| d.age).max().unwrap();
+            let idx_candidates: Vec<usize> = self
+                .view
+                .iter()
+                .enumerate()
+                .filter(|(_, d)| d.age == max_age)
+                .map(|(i, _)| i)
+                .collect();
+            let kill = idx_candidates[self.rng.range(0, idx_candidates.len())];
+            self.view.swap_remove(kill);
+        }
+    }
+
+    /// Advance the round: age every descriptor.
+    pub fn tick(&mut self) {
+        for d in self.view.iter_mut() {
+            d.age = d.age.saturating_add(1);
+        }
+    }
+
+    /// Sample `k` distinct peers from the current view (what the DL node
+    /// uses as its dynamic neighbor set).
+    pub fn sample_neighbors(&mut self, k: usize) -> Vec<usize> {
+        let mut peers: Vec<usize> = self.view.iter().map(|d| d.peer).collect();
+        self.rng.shuffle(&mut peers);
+        peers.truncate(k);
+        peers
+    }
+}
+
+/// Drive a full in-memory gossip network for `rounds` (used by tests and
+/// by the ablation bench; the threaded deployment exchanges the same
+/// messages over a real transport).
+pub fn simulate_rounds(views: &mut [GossipView], rounds: usize) {
+    for _ in 0..rounds {
+        for i in 0..views.len() {
+            let Some(partner) = views[i].select_partner() else { continue };
+            let push = views[i].make_message(partner, true);
+            let reply = views[partner].make_message(views[i].node, false);
+            views[partner].merge(&push);
+            views[i].merge(&reply);
+        }
+        for v in views.iter_mut() {
+            v.tick();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn network(n: usize, capacity: usize) -> Vec<GossipView> {
+        // Bootstrap from a ring: each node knows its 2 ring neighbors.
+        (0..n)
+            .map(|i| {
+                GossipView::new(
+                    i,
+                    capacity,
+                    &[(i + 1) % n, (i + n - 1) % n],
+                    1000 + i as u64,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn views_stay_within_capacity_and_exclude_self() {
+        let mut views = network(20, 6);
+        simulate_rounds(&mut views, 30);
+        for v in &views {
+            assert!(v.view().len() <= 6);
+            assert!(v.view().iter().all(|d| d.peer != v.node));
+            // No duplicate peers.
+            let set: std::collections::HashSet<_> =
+                v.view().iter().map(|d| d.peer).collect();
+            assert_eq!(set.len(), v.view().len());
+        }
+    }
+
+    #[test]
+    fn views_fill_to_capacity() {
+        let mut views = network(30, 8);
+        simulate_rounds(&mut views, 20);
+        for v in &views {
+            assert_eq!(v.view().len(), 8, "node {}", v.node);
+        }
+    }
+
+    #[test]
+    fn view_reach_spreads_beyond_bootstrap() {
+        // After gossip, views must contain peers far from the original
+        // ring positions (the service mixes the whole network).
+        let n = 40;
+        let mut views = network(n, 8);
+        simulate_rounds(&mut views, 30);
+        let mut far = 0usize;
+        for v in &views {
+            for d in v.view() {
+                let dist =
+                    (v.node as i64 - d.peer as i64).rem_euclid(n as i64).min(
+                        (d.peer as i64 - v.node as i64).rem_euclid(n as i64),
+                    );
+                if dist > 5 {
+                    far += 1;
+                }
+            }
+        }
+        assert!(far > n, "only {far} long-range descriptors");
+    }
+
+    #[test]
+    fn indegree_roughly_balanced() {
+        // Uniform sampling => in-degree (appearances in others' views)
+        // concentrates around capacity.
+        let n = 40;
+        let cap = 8;
+        let mut views = network(n, cap);
+        simulate_rounds(&mut views, 50);
+        let mut indeg = vec![0usize; n];
+        for v in &views {
+            for d in v.view() {
+                indeg[d.peer] += 1;
+            }
+        }
+        let max = *indeg.iter().max().unwrap();
+        let min = *indeg.iter().min().unwrap();
+        assert!(min >= 1, "some node vanished: {indeg:?}");
+        assert!(max <= cap * 4, "hotspot: {indeg:?}");
+    }
+
+    #[test]
+    fn sample_neighbors_distinct_and_from_view() {
+        let mut views = network(20, 8);
+        simulate_rounds(&mut views, 20);
+        let v = &mut views[3];
+        let members: std::collections::HashSet<usize> =
+            v.view().iter().map(|d| d.peer).collect();
+        let sample = v.sample_neighbors(5);
+        assert_eq!(sample.len(), 5);
+        let set: std::collections::HashSet<_> = sample.iter().collect();
+        assert_eq!(set.len(), 5);
+        assert!(sample.iter().all(|p| members.contains(p)));
+    }
+
+    #[test]
+    fn empty_view_yields_no_partner() {
+        let mut v = GossipView::new(0, 4, &[], 1);
+        assert_eq!(v.select_partner(), None);
+        assert!(v.sample_neighbors(3).is_empty());
+    }
+
+    #[test]
+    fn merge_prefers_fresh_descriptors() {
+        let mut v = GossipView::new(0, 4, &[1], 1);
+        v.tick();
+        v.tick();
+        assert_eq!(v.view()[0].age, 2);
+        v.merge(&ViewMessage {
+            from: 1,
+            descriptors: vec![Descriptor { peer: 1, age: 0 }],
+            is_push: true,
+        });
+        assert_eq!(v.view()[0].age, 0);
+    }
+}

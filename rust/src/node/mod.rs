@@ -1,0 +1,22 @@
+//! Node implementations (the paper's *Node* module): "an object of a
+//! sub-class of the node module is instantiated when a DL process
+//! starts … from being a DL client to a FL server or a centralized peer
+//! sampler" (§2.2).
+//!
+//! * [`DlNode`] — the D-PSGD client (paper Fig 2 loop).
+//! * [`SecureDlNode`] — DL client with pairwise-mask secure aggregation.
+//! * [`PeerSampler`] — centralized per-round topology service.
+//! * [`FlServer`] / [`FlClient`] / [`ParameterServer`] — FL emulation.
+
+mod dl;
+mod fl;
+mod gossip_sampler;
+mod peer_sampler;
+pub mod proto;
+mod secure_dl;
+
+pub use dl::{DlNode, TopologyView};
+pub use gossip_sampler::{simulate_rounds as gossip_simulate, Descriptor, GossipView, ViewMessage};
+pub use fl::{FlClient, FlServer, ParameterServer};
+pub use peer_sampler::PeerSampler;
+pub use secure_dl::SecureDlNode;

@@ -1,0 +1,324 @@
+//! Centralized peer sampler: instantiates a fresh topology every round
+//! and tells each node who its neighbors are (paper §3.2, "any dynamic
+//! graph can be realized within the peer sampler").
+//!
+//! The sampler occupies an extra transport rank (`nodes`). Nodes send
+//! `Control::Ready{round}`; once all `nodes` are ready the sampler draws
+//! a new graph from the configured spec, computes Metropolis-Hastings
+//! weights, and replies with each node's `NeighborAssignment`. This
+//! doubles as the round barrier for dynamic experiments.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::communication::{Envelope, MsgKind, Transport};
+use crate::graph::{from_spec, metropolis_hastings};
+use crate::rng::{mix_seed, Xoshiro256pp};
+
+use super::proto::{decode_control, encode_neighbors, Control, NeighborAssignment};
+
+pub struct PeerSampler {
+    pub rank: usize,
+    pub nodes: usize,
+    pub rounds: u64,
+    /// Topology spec re-sampled every round (e.g. "regular:5").
+    pub spec: String,
+    pub seed: u64,
+    /// Per-round probability that a node is unavailable (FedScale-style
+    /// client churn, a paper future-work item). Unavailable nodes receive
+    /// an empty assignment for the round: they keep training locally but
+    /// skip the exchange, and the topology is drawn over the active set.
+    pub churn: f64,
+    pub transport: Box<dyn Transport>,
+}
+
+impl PeerSampler {
+    /// Serve all rounds, then exit.
+    pub fn run(self) -> Result<()> {
+        let mut early: HashMap<u64, usize> = HashMap::new();
+        for round in 0..self.rounds {
+            // Barrier: collect `nodes` ready messages for this round.
+            let mut ready = early.remove(&round).unwrap_or(0);
+            while ready < self.nodes {
+                let env = self
+                    .transport
+                    .recv()?
+                    .context("transport closed while sampling")?;
+                if env.kind != MsgKind::Control {
+                    bail!("peer sampler got unexpected {:?}", env.kind);
+                }
+                match decode_control(&env.payload)? {
+                    Control::Ready { round: r } if r == round => ready += 1,
+                    Control::Ready { round: r } if r > round => {
+                        *early.entry(r).or_insert(0) += 1;
+                    }
+                    Control::Ready { .. } => {} // stale; ignore
+                    Control::Stop => return Ok(()),
+                }
+            }
+            // Availability draw for this round.
+            let mut rng = Xoshiro256pp::new(mix_seed(&[self.seed, 0x70_70, round]));
+            let mut active: Vec<usize> = (0..self.nodes)
+                .filter(|_| self.churn <= 0.0 || rng.next_f64() >= self.churn)
+                .collect();
+            // A d-regular draw needs |active| * d even and d < |active|;
+            // mark one more node unavailable when the parity is wrong
+            // (random victim to avoid bias).
+            if let Some(d) = regular_degree(&self.spec) {
+                if active.len() > d && (active.len() * d) % 2 == 1 {
+                    let victim = rng.range(0, active.len());
+                    active.remove(victim);
+                }
+            }
+            // Fresh topology + weights over the active set (global node
+            // ids are relabeled onto 0..active.len() for the generator).
+            let assignments = self.sample_round(&active, &mut rng)?;
+            for node in 0..self.nodes {
+                let assign = assignments
+                    .get(&node)
+                    .cloned()
+                    .unwrap_or(NeighborAssignment {
+                        round,
+                        self_weight: 1.0,
+                        neighbors: Vec::new(),
+                    });
+                let assign = NeighborAssignment { round, ..assign };
+                self.transport.send(Envelope {
+                    src: self.rank,
+                    dst: node,
+                    round,
+                    kind: MsgKind::Neighbors,
+                    payload: encode_neighbors(&assign),
+                })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Draw the round's topology over `active` and compute per-node rows.
+    fn sample_round(
+        &self,
+        active: &[usize],
+        rng: &mut Xoshiro256pp,
+    ) -> Result<HashMap<usize, NeighborAssignment>> {
+        let m = active.len();
+        let mut out = HashMap::new();
+        if m < 2 {
+            return Ok(out);
+        }
+        // Degrade the spec gracefully when the active set is too small
+        // for it (e.g. regular:5 with 4 actives -> fully connected).
+        let g = if matches!(regular_degree(&self.spec), Some(d) if d >= m) {
+            crate::graph::fully_connected(m)
+        } else {
+            match from_spec(&self.spec, m, rng) {
+                Ok(g) => g,
+                Err(_) => crate::graph::fully_connected(m),
+            }
+        };
+        let w = metropolis_hastings(&g);
+        for (local, &global) in active.iter().enumerate() {
+            out.insert(
+                global,
+                NeighborAssignment {
+                    round: 0, // caller overwrites
+                    self_weight: w.self_weight(local),
+                    neighbors: w
+                        .neighbor_weights(local)
+                        .map(|(n, wt)| (active[n], wt))
+                        .collect(),
+                },
+            );
+        }
+        Ok(out)
+    }
+}
+
+/// Extract `d` from a `regular:<d>` spec.
+fn regular_degree(spec: &str) -> Option<usize> {
+    spec.strip_prefix("regular:")?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communication::inproc::InprocHub;
+    use crate::node::proto::{decode_neighbors, encode_control};
+
+    #[test]
+    fn sampler_serves_rounds_and_barriers() {
+        let nodes = 4usize;
+        let rounds = 3u64;
+        let hub = InprocHub::new(nodes + 1);
+        let sampler = PeerSampler {
+            rank: nodes,
+            nodes,
+            rounds,
+            spec: "regular:3".into(),
+            seed: 7,
+            churn: 0.0,
+            transport: Box::new(hub.endpoint(nodes)),
+        };
+        let h = std::thread::spawn(move || sampler.run().unwrap());
+        let mut assignments: Vec<Vec<NeighborAssignment>> = vec![Vec::new(); nodes];
+        for round in 0..rounds {
+            for id in 0..nodes {
+                hub.endpoint(id)
+                    .send(Envelope {
+                        src: id,
+                        dst: nodes,
+                        round,
+                        kind: MsgKind::Control,
+                        payload: encode_control(&Control::Ready { round }),
+                    })
+                    .unwrap();
+            }
+            for id in 0..nodes {
+                let env = hub.endpoint(id).recv().unwrap().unwrap();
+                assert_eq!(env.kind, MsgKind::Neighbors);
+                let a = decode_neighbors(&env.payload).unwrap();
+                assert_eq!(a.round, round);
+                // 3-regular on 4 nodes = complete graph; weights 1/4.
+                assert_eq!(a.neighbors.len(), 3);
+                let total: f64 =
+                    a.self_weight + a.neighbors.iter().map(|(_, w)| w).sum::<f64>();
+                assert!((total - 1.0).abs() < 1e-9);
+                assignments[id].push(a);
+            }
+        }
+        h.join().unwrap();
+        // Assignments are symmetric: if j is i's neighbor, i is j's.
+        for round in 0..rounds as usize {
+            for i in 0..nodes {
+                for &(j, _) in &assignments[i][round].neighbors {
+                    assert!(assignments[j][round]
+                        .neighbors
+                        .iter()
+                        .any(|&(n, _)| n == i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_graphs_change_between_rounds() {
+        let nodes = 10usize;
+        let hub = InprocHub::new(nodes + 1);
+        let sampler = PeerSampler {
+            rank: nodes,
+            nodes,
+            rounds: 2,
+            spec: "regular:3".into(),
+            seed: 3,
+            churn: 0.0,
+            transport: Box::new(hub.endpoint(nodes)),
+        };
+        let h = std::thread::spawn(move || sampler.run().unwrap());
+        let mut per_round: Vec<Vec<Vec<usize>>> = Vec::new();
+        for round in 0..2u64 {
+            for id in 0..nodes {
+                hub.endpoint(id)
+                    .send(Envelope {
+                        src: id,
+                        dst: nodes,
+                        round,
+                        kind: MsgKind::Control,
+                        payload: encode_control(&Control::Ready { round }),
+                    })
+                    .unwrap();
+            }
+            let mut rows = Vec::new();
+            for id in 0..nodes {
+                let env = hub.endpoint(id).recv().unwrap().unwrap();
+                let a = decode_neighbors(&env.payload).unwrap();
+                rows.push(a.neighbors.iter().map(|&(n, _)| n).collect::<Vec<_>>());
+            }
+            per_round.push(rows);
+        }
+        h.join().unwrap();
+        assert_ne!(per_round[0], per_round[1]);
+    }
+
+    #[test]
+    fn stop_terminates_early() {
+        let hub = InprocHub::new(3);
+        let sampler = PeerSampler {
+            rank: 2,
+            nodes: 2,
+            rounds: 100,
+            spec: "ring".into(),
+            seed: 1,
+            churn: 0.0,
+            transport: Box::new(hub.endpoint(2)),
+        };
+        let h = std::thread::spawn(move || sampler.run());
+        hub.endpoint(0)
+            .send(Envelope {
+                src: 0,
+                dst: 2,
+                round: 0,
+                kind: MsgKind::Control,
+                payload: encode_control(&Control::Stop),
+            })
+            .unwrap();
+        assert!(h.join().unwrap().is_ok());
+    }
+
+
+    #[test]
+    fn churn_excludes_inactive_nodes() {
+        let nodes = 12usize;
+        let hub = InprocHub::new(nodes + 1);
+        let sampler = PeerSampler {
+            rank: nodes,
+            nodes,
+            rounds: 4,
+            spec: "regular:3".into(),
+            seed: 11,
+            churn: 0.4,
+            transport: Box::new(hub.endpoint(nodes)),
+        };
+        let h = std::thread::spawn(move || sampler.run().unwrap());
+        let mut saw_inactive = false;
+        for round in 0..4u64 {
+            for id in 0..nodes {
+                hub.endpoint(id)
+                    .send(Envelope {
+                        src: id,
+                        dst: nodes,
+                        round,
+                        kind: MsgKind::Control,
+                        payload: encode_control(&Control::Ready { round }),
+                    })
+                    .unwrap();
+            }
+            let mut rows = Vec::new();
+            for id in 0..nodes {
+                let env = hub.endpoint(id).recv().unwrap().unwrap();
+                let a = decode_neighbors(&env.payload).unwrap();
+                assert_eq!(a.round, round);
+                rows.push(a);
+            }
+            let inactive: std::collections::HashSet<usize> = rows
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.neighbors.is_empty())
+                .map(|(i, _)| i)
+                .collect();
+            saw_inactive |= !inactive.is_empty();
+            // No active node lists an inactive node as neighbor, and
+            // weights still sum to 1 for everyone.
+            for (i, a) in rows.iter().enumerate() {
+                let total: f64 =
+                    a.self_weight + a.neighbors.iter().map(|(_, w)| w).sum::<f64>();
+                assert!((total - 1.0).abs() < 1e-9, "node {i}");
+                for &(n, _) in &a.neighbors {
+                    assert!(!inactive.contains(&n), "round {round}: {i} -> {n}");
+                }
+            }
+        }
+        h.join().unwrap();
+        assert!(saw_inactive, "40% churn never produced an inactive node");
+    }
+}

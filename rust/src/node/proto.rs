@@ -1,0 +1,124 @@
+//! Payload encodings for control-plane messages (neighbor lists, round
+//! barriers, secure-agg seed exchange). Data-plane model payloads are
+//! owned by the sharing module.
+
+use anyhow::{bail, Result};
+
+/// Per-round neighbor assignment sent by the peer sampler: the node's
+/// neighbor ids with their Metropolis-Hastings weights, plus the node's
+/// self-weight.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NeighborAssignment {
+    pub round: u64,
+    pub self_weight: f64,
+    /// (neighbor id, mixing weight)
+    pub neighbors: Vec<(usize, f64)>,
+}
+
+pub fn encode_neighbors(a: &NeighborAssignment) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12 + a.neighbors.len() * 12);
+    out.extend_from_slice(&a.round.to_le_bytes());
+    out.extend_from_slice(&(a.self_weight as f32).to_le_bytes());
+    out.extend_from_slice(&(a.neighbors.len() as u32).to_le_bytes());
+    for &(id, w) in &a.neighbors {
+        out.extend_from_slice(&(id as u32).to_le_bytes());
+        out.extend_from_slice(&(w as f32).to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_neighbors(bytes: &[u8]) -> Result<NeighborAssignment> {
+    if bytes.len() < 16 {
+        bail!("neighbor assignment too short");
+    }
+    let round = u64::from_le_bytes(bytes[..8].try_into().unwrap());
+    let self_weight = f32::from_le_bytes(bytes[8..12].try_into().unwrap()) as f64;
+    let count = u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+    if bytes.len() != 16 + count * 8 {
+        bail!("neighbor assignment length mismatch");
+    }
+    let mut neighbors = Vec::with_capacity(count);
+    for i in 0..count {
+        let off = 16 + i * 8;
+        let id = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        let w = f32::from_le_bytes(bytes[off + 4..off + 8].try_into().unwrap()) as f64;
+        neighbors.push((id, w));
+    }
+    Ok(NeighborAssignment { round, self_weight, neighbors })
+}
+
+/// Control messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Control {
+    /// Node is ready for `round` (peer-sampler barrier).
+    Ready { round: u64 },
+    /// Orderly stop.
+    Stop,
+}
+
+pub fn encode_control(c: &Control) -> Vec<u8> {
+    match c {
+        Control::Ready { round } => {
+            let mut out = vec![0u8];
+            out.extend_from_slice(&round.to_le_bytes());
+            out
+        }
+        Control::Stop => vec![1u8],
+    }
+}
+
+pub fn decode_control(bytes: &[u8]) -> Result<Control> {
+    match bytes.first() {
+        Some(0) if bytes.len() == 9 => Ok(Control::Ready {
+            round: u64::from_le_bytes(bytes[1..9].try_into().unwrap()),
+        }),
+        Some(1) if bytes.len() == 1 => Ok(Control::Stop),
+        _ => bail!("bad control payload"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn neighbors_roundtrip() {
+        let a = NeighborAssignment {
+            round: 17,
+            self_weight: 0.25,
+            neighbors: vec![(3, 0.25), (9, 0.5)],
+        };
+        let back = decode_neighbors(&encode_neighbors(&a)).unwrap();
+        assert_eq!(back.round, 17);
+        assert!((back.self_weight - 0.25).abs() < 1e-6);
+        assert_eq!(back.neighbors.len(), 2);
+        assert_eq!(back.neighbors[1].0, 9);
+    }
+
+    #[test]
+    fn neighbors_empty() {
+        let a = NeighborAssignment { round: 0, self_weight: 1.0, neighbors: vec![] };
+        assert_eq!(decode_neighbors(&encode_neighbors(&a)).unwrap().neighbors.len(), 0);
+    }
+
+    #[test]
+    fn neighbors_rejects_truncation() {
+        let a = NeighborAssignment {
+            round: 1,
+            self_weight: 0.5,
+            neighbors: vec![(1, 0.5)],
+        };
+        let enc = encode_neighbors(&a);
+        assert!(decode_neighbors(&enc[..enc.len() - 1]).is_err());
+        assert!(decode_neighbors(&[1, 2]).is_err());
+    }
+
+    #[test]
+    fn control_roundtrip() {
+        for c in [Control::Ready { round: 42 }, Control::Stop] {
+            assert_eq!(decode_control(&encode_control(&c)).unwrap(), c);
+        }
+        assert!(decode_control(&[9]).is_err());
+        assert!(decode_control(&[0, 1]).is_err());
+    }
+}

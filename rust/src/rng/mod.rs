@@ -1,0 +1,365 @@
+//! Deterministic random number generation.
+//!
+//! The `rand` crate is unavailable offline, so the framework ships its own
+//! generators:
+//!
+//! * [`SplitMix64`] — seed expansion / hashing (Steele et al.).
+//! * [`Xoshiro256pp`] — general-purpose PRNG for data generation,
+//!   partitioning, topology sampling (Blackman & Vigna's xoshiro256++).
+//! * [`AesCtrPrg`] (in [`crate::secure`]) builds on the cached `aes` crate
+//!   for cryptographic mask expansion.
+//!
+//! Every experiment seeds its generators from `(experiment_seed, node_id,
+//! round)` via [`SplitMix64`], which makes all runs bit-reproducible — the
+//! property the paper's 5-seed × 95%-CI methodology depends on.
+
+/// SplitMix64: tiny, full-period seed expander.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// Mix arbitrary stream labels into one 64-bit seed (order-sensitive).
+pub fn mix_seed(parts: &[u64]) -> u64 {
+    let mut sm = SplitMix64::new(0xDEC0_DE00_5EED_0001);
+    let mut acc = 0u64;
+    for &p in parts {
+        sm.state ^= p.rotate_left(17);
+        acc = acc.rotate_left(29) ^ sm.next_u64();
+    }
+    acc
+}
+
+/// xoshiro256++ 1.0 — fast, high-quality, 2^256-1 period.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let mut s = [0u64; 4];
+        for v in s.iter_mut() {
+            *v = sm.next_u64();
+        }
+        // All-zero state is invalid (never happens from SplitMix64, but be
+        // defensive for direct construction).
+        if s == [0, 0, 0, 0] {
+            s[0] = 1;
+        }
+        Xoshiro256pp { s }
+    }
+
+    /// Derive a child generator for a labeled substream.
+    pub fn fork(&mut self, label: u64) -> Xoshiro256pp {
+        Xoshiro256pp::new(mix_seed(&[self.next_u64(), label]))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Unbiased uniform integer in [0, bound) (Lemire rejection).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "below(0)");
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_wide(x, bound);
+            if lo >= bound || lo >= x.wrapping_neg() % bound {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi) for usize ranges.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo < hi, "empty range");
+        lo + self.below((hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        }
+    }
+
+    /// Normal with mean/std as f32.
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.next_normal() as f32
+    }
+
+    /// In-place Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut v);
+        v
+    }
+
+    /// Sample k distinct indices from 0..n (k <= n), order randomized.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample larger than population");
+        if k * 3 >= n {
+            let mut perm = self.permutation(n);
+            perm.truncate(k);
+            return perm;
+        }
+        // Sparse rejection sampling for k << n.
+        let mut seen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let x = self.below(n as u64) as usize;
+            if seen.insert(x) {
+                out.push(x);
+            }
+        }
+        out
+    }
+
+    /// Dirichlet(alpha * 1) sample of dimension k (for non-IID partitions).
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        // Gamma(alpha) via Marsaglia-Tsang (with boost for alpha < 1).
+        let mut out: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = out.iter().sum();
+        if sum <= 0.0 {
+            // Degenerate draw; fall back to uniform.
+            return vec![1.0 / k as f64; k];
+        }
+        for v in out.iter_mut() {
+            *v /= sum;
+        }
+        out
+    }
+
+    fn gamma(&mut self, alpha: f64) -> f64 {
+        if alpha < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) * U^(1/a).
+            let u = self.next_f64().max(f64::MIN_POSITIVE);
+            return self.gamma(alpha + 1.0) * u.powf(1.0 / alpha);
+        }
+        let d = alpha - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.next_normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+}
+
+#[inline]
+fn mul_wide(a: u64, b: u64) -> (u64, u64) {
+    let r = (a as u128) * (b as u128);
+    ((r >> 64) as u64, r as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 0 (from the public-domain reference C).
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a: Vec<u64> = {
+            let mut r = Xoshiro256pp::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Xoshiro256pp::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut r = Xoshiro256pp::new(43);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn uniform_below_is_in_range_and_roughly_uniform() {
+        let mut r = Xoshiro256pp::new(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..20_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((1700..2300).contains(&c), "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Xoshiro256pp::new(9);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Xoshiro256pp::new(11);
+        let n = 40_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.next_normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::new(3);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Xoshiro256pp::new(5);
+        for (n, k) in [(100, 5), (100, 60), (10, 10), (1000, 3)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Xoshiro256pp::new(13);
+        for alpha in [0.1, 0.5, 1.0, 10.0] {
+            let d = r.dirichlet(alpha, 10);
+            let sum: f64 = d.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(d.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn dirichlet_concentration_effect() {
+        // Small alpha -> spiky; large alpha -> near-uniform.
+        let mut r = Xoshiro256pp::new(17);
+        let spiky: f64 = (0..50)
+            .map(|_| {
+                r.dirichlet(0.05, 10)
+                    .iter()
+                    .cloned()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 50.0;
+        let flat: f64 = (0..50)
+            .map(|_| {
+                r.dirichlet(100.0, 10)
+                    .iter()
+                    .cloned()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 50.0;
+        assert!(spiky > 0.6, "spiky {spiky}");
+        assert!(flat < 0.2, "flat {flat}");
+    }
+
+    #[test]
+    fn mix_seed_order_sensitive() {
+        assert_ne!(mix_seed(&[1, 2]), mix_seed(&[2, 1]));
+        assert_eq!(mix_seed(&[1, 2, 3]), mix_seed(&[1, 2, 3]));
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut r = Xoshiro256pp::new(1);
+        let mut a = r.fork(0);
+        let mut b = r.fork(1);
+        let va: Vec<u64> = (0..4).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..4).map(|_| b.next_u64()).collect();
+        assert_ne!(va, vb);
+    }
+}

@@ -1,0 +1,344 @@
+//! PJRT engine: loads AOT artifacts and executes them for the node layer.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (neither `Send` nor
+//! `Sync`), so the engine owns the client and all compiled executables on
+//! **one dedicated service thread**; node threads talk to it through a
+//! cloneable [`EngineHandle`] over an mpsc channel. On this single-core
+//! testbed XLA execution is serial anyway, so funneling compute through
+//! one thread costs nothing and keeps the hot path allocation-free apart
+//! from the literal buffers themselves.
+//!
+//! HLO **text** is the interchange format (not serialized protos): see
+//! `python/compile/aot.py` and /opt/xla-example/README.md.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{DType, EntryMeta, Manifest};
+
+/// A request processed by the engine thread.
+enum Request {
+    Execute {
+        model: String,
+        entry: &'static str,
+        f32_args: Vec<Vec<f32>>,
+        i32_args: Vec<Vec<i32>>,
+        /// Argument order as dtype tags ('f' pulls the next f32 arg, 'i'
+        /// the next i32 arg) — mirrors the manifest arg order.
+        order: Vec<DType>,
+        reply: mpsc::Sender<Result<Outputs>>,
+    },
+    Shutdown,
+}
+
+/// Raw outputs of an entry point, in manifest order.
+#[derive(Debug, Clone, Default)]
+pub struct Outputs {
+    pub f32s: Vec<Vec<f32>>,
+    pub i32s: Vec<Vec<i32>>,
+    /// Dtype per output, aligned with the manifest `outs`.
+    pub order: Vec<DType>,
+}
+
+impl Outputs {
+    /// The n-th output interpreted as f32 data.
+    pub fn f32_out(&self, n: usize) -> &[f32] {
+        let mut fi = 0;
+        for (i, d) in self.order.iter().enumerate() {
+            if i == n {
+                assert_eq!(*d, DType::F32, "output {n} is not f32");
+                return &self.f32s[fi];
+            }
+            if *d == DType::F32 {
+                fi += 1;
+            }
+        }
+        panic!("output index {n} out of range");
+    }
+
+    pub fn i32_out(&self, n: usize) -> &[i32] {
+        let mut ii = 0;
+        for (i, d) in self.order.iter().enumerate() {
+            if i == n {
+                assert_eq!(*d, DType::I32, "output {n} is not i32");
+                return &self.i32s[ii];
+            }
+            if *d == DType::I32 {
+                ii += 1;
+            }
+        }
+        panic!("output index {n} out of range");
+    }
+}
+
+/// Cloneable, `Send` handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+    manifest: Arc<Manifest>,
+}
+
+impl EngineHandle {
+    /// Start the engine thread, loading and compiling the given models'
+    /// artifacts eagerly (all four entry points each).
+    pub fn start(artifacts_dir: &Path, models: &[&str]) -> Result<EngineHandle> {
+        let manifest = Arc::new(Manifest::load(artifacts_dir)?);
+        for m in models {
+            manifest.model(m)?; // validate before spawning
+        }
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread_manifest = Arc::clone(&manifest);
+        let model_names: Vec<String> = models.iter().map(|s| s.to_string()).collect();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(thread_manifest, model_names, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+        Ok(EngineHandle { tx, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(
+        &self,
+        model: &str,
+        entry: &'static str,
+        f32_args: Vec<Vec<f32>>,
+        i32_args: Vec<Vec<i32>>,
+    ) -> Result<Outputs> {
+        let meta = self.manifest.model(model)?;
+        let em = meta
+            .entries
+            .get(entry)
+            .with_context(|| format!("entry {entry:?} missing for model {model:?}"))?;
+        // Validate argument shapes against the manifest before crossing
+        // the channel: failures surface at the call site.
+        let order: Vec<DType> = em.args.iter().map(|a| a.dtype).collect();
+        let (mut fi, mut ii) = (0usize, 0usize);
+        for a in &em.args {
+            match a.dtype {
+                DType::F32 => {
+                    let got = f32_args
+                        .get(fi)
+                        .with_context(|| format!("missing f32 arg {}", a.name))?;
+                    if got.len() != a.element_count() {
+                        bail!(
+                            "arg {} expects {} elements, got {}",
+                            a.name,
+                            a.element_count(),
+                            got.len()
+                        );
+                    }
+                    fi += 1;
+                }
+                DType::I32 => {
+                    let got = i32_args
+                        .get(ii)
+                        .with_context(|| format!("missing i32 arg {}", a.name))?;
+                    if got.len() != a.element_count() {
+                        bail!(
+                            "arg {} expects {} elements, got {}",
+                            a.name,
+                            a.element_count(),
+                            got.len()
+                        );
+                    }
+                    ii += 1;
+                }
+            }
+        }
+        if fi != f32_args.len() || ii != i32_args.len() {
+            bail!("extra arguments supplied to {model}/{entry}");
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute {
+                model: model.to_string(),
+                entry,
+                f32_args,
+                i32_args,
+                order,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
+        reply_rx.recv().context("engine thread dropped the reply")?
+    }
+
+    /// One local SGD step: returns (new_params, loss).
+    pub fn train_step(
+        &self,
+        model: &str,
+        params: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let out = self.execute(model, "train", vec![params, x, vec![lr]], vec![y])?;
+        let new_params = out.f32_out(0).to_vec();
+        let loss = out.f32_out(1)[0];
+        Ok((new_params, loss))
+    }
+
+    /// Evaluate one fixed-size batch: returns (sum_loss, correct_count).
+    pub fn eval_batch(
+        &self,
+        model: &str,
+        params: Vec<f32>,
+        x: Vec<f32>,
+        y: Vec<i32>,
+    ) -> Result<(f32, i32)> {
+        let out = self.execute(model, "eval", vec![params, x], vec![y])?;
+        Ok((out.f32_out(0)[0], out.i32_out(1)[0]))
+    }
+
+    /// Weighted aggregation of up to `agg_k` stacked models via the L1
+    /// Pallas kernel artifact: returns the mixed parameter vector.
+    pub fn aggregate(
+        &self,
+        model: &str,
+        stack: Vec<f32>,
+        weights: Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let out = self.execute(model, "agg", vec![stack, weights], vec![])?;
+        Ok(out.f32_out(0).to_vec())
+    }
+
+    /// Threshold sparsification with error feedback via the L1 kernel:
+    /// returns (sent, new_residual).
+    pub fn sparsify(
+        &self,
+        model: &str,
+        values: Vec<f32>,
+        residual: Vec<f32>,
+        threshold: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.execute(
+            model,
+            "sparsify",
+            vec![values, residual, vec![threshold]],
+            vec![],
+        )?;
+        Ok((out.f32_out(0).to_vec(), out.f32_out(1).to_vec()))
+    }
+
+    /// Stop the engine thread (idempotent; outstanding requests finish
+    /// first because the channel is FIFO).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    meta: EntryMeta,
+}
+
+fn engine_main(
+    manifest: Arc<Manifest>,
+    models: Vec<String>,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::Sender<Result<()>>,
+) {
+    let setup = (|| -> Result<(xla::PjRtClient, BTreeMap<(String, String), Compiled>)> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut table = BTreeMap::new();
+        for model in &models {
+            let meta = manifest.model(model)?;
+            for (tag, em) in &meta.entries {
+                let proto = xla::HloModuleProto::from_text_file(&em.file)
+                    .with_context(|| format!("parsing {}", em.file.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {}", em.file.display()))?;
+                table.insert(
+                    (model.clone(), tag.clone()),
+                    Compiled { exe, meta: em.clone() },
+                );
+            }
+        }
+        Ok((client, table))
+    })();
+    let table = match setup {
+        Ok((_client, table)) => {
+            let _ = ready.send(Ok(()));
+            table
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Execute { model, entry, f32_args, i32_args, order, reply } => {
+                let result = run_one(&table, &model, entry, f32_args, i32_args, order);
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn run_one(
+    table: &BTreeMap<(String, String), Compiled>,
+    model: &str,
+    entry: &str,
+    f32_args: Vec<Vec<f32>>,
+    i32_args: Vec<Vec<i32>>,
+    order: Vec<DType>,
+) -> Result<Outputs> {
+    let compiled = table
+        .get(&(model.to_string(), entry.to_string()))
+        .with_context(|| format!("{model}/{entry} not compiled"))?;
+    // Build literals in manifest order.
+    let (mut fi, mut ii) = (0usize, 0usize);
+    let mut literals = Vec::with_capacity(order.len());
+    for (pos, d) in order.iter().enumerate() {
+        let spec = &compiled.meta.args[pos];
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match d {
+            DType::F32 => {
+                let lit = xla::Literal::vec1(&f32_args[fi]);
+                fi += 1;
+                lit.reshape(&dims)?
+            }
+            DType::I32 => {
+                let lit = xla::Literal::vec1(&i32_args[ii]);
+                ii += 1;
+                lit.reshape(&dims)?
+            }
+        };
+        literals.push(lit);
+    }
+    let result = compiled.exe.execute::<xla::Literal>(&literals)?;
+    let tuple = result[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: always a tuple, even for one
+    // output.
+    let parts = tuple.to_tuple()?;
+    if parts.len() != compiled.meta.outs.len() {
+        bail!(
+            "{model}/{entry}: expected {} outputs, got {}",
+            compiled.meta.outs.len(),
+            parts.len()
+        );
+    }
+    let mut out = Outputs::default();
+    for (lit, spec) in parts.into_iter().zip(compiled.meta.outs.iter()) {
+        out.order.push(spec.dtype);
+        match spec.dtype {
+            DType::F32 => out.f32s.push(lit.to_vec::<f32>()?),
+            DType::I32 => out.i32s.push(lit.to_vec::<i32>()?),
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,271 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Element type of an argument/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> Result<DType> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            other => bail!("unknown dtype {other:?}"),
+        })
+    }
+}
+
+/// One argument or output of an entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ArgSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<ArgSpec> {
+        let name = v.get("name").as_str().context("arg missing name")?.to_string();
+        let shape = v
+            .get("shape")
+            .as_arr()
+            .context("arg missing shape")?
+            .iter()
+            .map(|d| d.as_usize().context("bad shape dim"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::from_str(v.get("dtype").as_str().unwrap_or("f32"))?;
+        Ok(ArgSpec { name, shape, dtype })
+    }
+}
+
+/// One lowered entry point (train / eval / agg / sparsify).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntryMeta {
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    pub outs: Vec<ArgSpec>,
+}
+
+/// Per-model metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_count: usize,
+    /// (h, w, c)
+    pub input_shape: (usize, usize, usize),
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub agg_k: usize,
+    /// Raw little-endian f32 file with the common initial parameters
+    /// (shared by every node; absent in older manifests).
+    pub init_file: Option<PathBuf>,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+impl ModelMeta {
+    /// Load the common initial parameter vector.
+    pub fn load_init(&self) -> Result<Vec<f32>> {
+        let path = self
+            .init_file
+            .as_ref()
+            .context("manifest has no init_file (re-run `make artifacts`)")?;
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() != self.param_count * 4 {
+            bail!(
+                "init file {} has {} bytes, expected {}",
+                path.display(),
+                bytes.len(),
+                self.param_count * 4
+            );
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub image: usize,
+    pub models: BTreeMap<String, ModelMeta>,
+    /// Directory the artifact files live in.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} (run `make artifacts` to build the AOT artifacts)",
+                path.display()
+            )
+        })?;
+        let v = parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&v, dir)
+    }
+
+    pub fn from_json(v: &Json, dir: &Path) -> Result<Manifest> {
+        if v.get("format").as_i64() != Some(1) {
+            bail!("unsupported manifest format {:?}", v.get("format"));
+        }
+        let image = v.get("image").as_usize().context("manifest missing image")?;
+        let mut models = BTreeMap::new();
+        let obj = v.get("models").as_obj().context("manifest missing models")?;
+        for (name, m) in obj {
+            let shape = m
+                .get("input_shape")
+                .as_arr()
+                .context("model missing input_shape")?;
+            if shape.len() != 3 {
+                bail!("input_shape must be rank 3");
+            }
+            let mut entries = BTreeMap::new();
+            let eobj = m.get("entries").as_obj().context("model missing entries")?;
+            for (tag, e) in eobj {
+                let file = dir.join(e.get("file").as_str().context("entry missing file")?);
+                let args = e
+                    .get("args")
+                    .as_arr()
+                    .context("entry missing args")?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                let outs = e
+                    .get("outs")
+                    .as_arr()
+                    .context("entry missing outs")?
+                    .iter()
+                    .map(ArgSpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+                entries.insert(tag.clone(), EntryMeta { file, args, outs });
+            }
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    param_count: m
+                        .get("param_count")
+                        .as_usize()
+                        .context("model missing param_count")?,
+                    input_shape: (
+                        shape[0].as_usize().context("dim")?,
+                        shape[1].as_usize().context("dim")?,
+                        shape[2].as_usize().context("dim")?,
+                    ),
+                    num_classes: m
+                        .get("num_classes")
+                        .as_usize()
+                        .context("model missing num_classes")?,
+                    train_batch: m
+                        .get("train_batch")
+                        .as_usize()
+                        .context("model missing train_batch")?,
+                    eval_batch: m
+                        .get("eval_batch")
+                        .as_usize()
+                        .context("model missing eval_batch")?,
+                    agg_k: m.get("agg_k").as_usize().context("model missing agg_k")?,
+                    init_file: m.get("init_file").as_str().map(|f| dir.join(f)),
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest { image, models, dir: dir.to_path_buf() })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "image": 16,
+      "models": {
+        "mlp": {
+          "param_count": 100,
+          "input_shape": [4, 4, 3],
+          "num_classes": 10,
+          "train_batch": 8,
+          "eval_batch": 32,
+          "agg_k": 16,
+          "entries": {
+            "train": {
+              "file": "mlp_train.hlo.txt",
+              "args": [
+                {"name": "params", "shape": [100], "dtype": "f32"},
+                {"name": "x", "shape": [8, 4, 4, 3], "dtype": "f32"},
+                {"name": "y", "shape": [8], "dtype": "i32"},
+                {"name": "lr", "shape": [1], "dtype": "f32"}
+              ],
+              "outs": [
+                {"name": "params", "shape": [100], "dtype": "f32"},
+                {"name": "loss", "shape": [], "dtype": "f32"}
+              ]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let v = parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp/artifacts")).unwrap();
+        assert_eq!(m.image, 16);
+        let mlp = m.model("mlp").unwrap();
+        assert_eq!(mlp.param_count, 100);
+        assert_eq!(mlp.input_shape, (4, 4, 3));
+        let train = &mlp.entries["train"];
+        assert_eq!(train.args.len(), 4);
+        assert_eq!(train.args[1].element_count(), 8 * 4 * 4 * 3);
+        assert_eq!(train.args[2].dtype, DType::I32);
+        assert_eq!(train.outs[1].shape.len(), 0);
+        assert!(train.file.ends_with("mlp_train.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let v = parse(SAMPLE).unwrap();
+        let m = Manifest::from_json(&v, Path::new("/tmp")).unwrap();
+        assert!(m.model("cnn").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let v = parse(r#"{"format": 2, "image": 8, "models": {}}"#).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"i32\"", "\"f64\"");
+        let v = parse(&bad).unwrap();
+        assert!(Manifest::from_json(&v, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime: PJRT execution of the AOT-compiled L2/L1 artifacts.
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, wrapped in a channel-served engine
+//! thread ([`EngineHandle`]) because the `xla` crate types are not
+//! `Send`. See `/opt/xla-example/load_hlo/` for the original pattern.
+
+mod engine;
+mod manifest;
+
+pub use engine::{EngineHandle, Outputs};
+pub use manifest::{ArgSpec, DType, EntryMeta, Manifest, ModelMeta};

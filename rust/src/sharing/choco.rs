@@ -1,0 +1,244 @@
+//! Choco-SGD: error-compensated compressed gossip (Koloskova, Stich &
+//! Jaggi, ICML 2019) — the paper's tuned state-of-the-art sparsifier.
+//!
+//! Every node `i` maintains a public estimate `x̂_i` of its own model and
+//! one estimate `x̂_j` per neighbor. Per round:
+//!
+//! ```text
+//! q_i   = TopK(x_i − x̂_i)            (compressed correction)
+//! send q_i;   x̂_i ← x̂_i + q_i        (everyone can track x̂_i)
+//! recv q_j;   x̂_j ← x̂_j + q_j
+//! x_i   ← x_i + γ Σ_j w_ij (x̂_j − x̂_i)   (gossip on the estimates)
+//! ```
+//!
+//! The correction values (not absolute parameters) go on the wire, so the
+//! payload is the same sparse layout as the other sparsifiers. Neighbor
+//! estimates start at the common initialization, which all nodes share by
+//! construction (same seed), matching the algorithm's assumption.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::ParamVec;
+
+use super::{decode_sparse, encode_sparse, Received, Sharing};
+
+pub struct ChocoSgd {
+    budget: f64,
+    gamma: f64,
+    dim: usize,
+    /// x̂_i — public estimate of our own model.
+    x_hat_self: ParamVec,
+    /// x̂_j per neighbor (created lazily at the common init = zeros…
+    /// actually at `init`, see [`ChocoSgd::set_init`]).
+    x_hat_neighbors: HashMap<usize, ParamVec>,
+    /// Common initialization for lazily-created estimates.
+    init: ParamVec,
+    init_set: bool,
+}
+
+impl ChocoSgd {
+    pub fn new(budget: f64, gamma: f64, dim: usize) -> ChocoSgd {
+        assert!(0.0 < budget && budget <= 1.0);
+        assert!(0.0 < gamma && gamma <= 1.0);
+        ChocoSgd {
+            budget,
+            gamma,
+            dim,
+            x_hat_self: ParamVec::zeros(dim),
+            x_hat_neighbors: HashMap::new(),
+            init: ParamVec::zeros(dim),
+            init_set: false,
+        }
+    }
+
+    /// Record the common model initialization (all nodes start equal in
+    /// D-PSGD); estimates start from it rather than from zero.
+    pub fn set_init(&mut self, init: &ParamVec) {
+        self.init = init.clone();
+        self.x_hat_self = init.clone();
+        self.init_set = true;
+    }
+
+    fn k(&self) -> usize {
+        ((self.dim as f64 * self.budget).round() as usize).clamp(1, self.dim)
+    }
+
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+}
+
+impl Sharing for ChocoSgd {
+    fn name(&self) -> &'static str {
+        "choco"
+    }
+
+    fn set_init(&mut self, init: &ParamVec) {
+        ChocoSgd::set_init(self, init);
+    }
+
+    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+        if !self.init_set {
+            // Fallback: treat the first observed model as the common init.
+            self.set_init(model);
+        }
+        // q = TopK(x - x_hat)
+        let mut diff = model.clone();
+        diff.axpy(-1.0, &self.x_hat_self);
+        let q = diff.topk(self.k());
+        // x_hat_self += q
+        self.x_hat_self.axpy_sparse(1.0, &q);
+        Ok(encode_sparse(&q))
+    }
+
+    fn aggregate(
+        &mut self,
+        model: &mut ParamVec,
+        _self_weight: f64,
+        received: &[Received<'_>],
+    ) -> Result<()> {
+        if model.len() != self.dim {
+            bail!("model dim {} != choco dim {}", model.len(), self.dim);
+        }
+        // Update neighbor estimates with their corrections.
+        for r in received {
+            let q = decode_sparse(r.payload, self.dim)?;
+            let x_hat = self
+                .x_hat_neighbors
+                .entry(r.src)
+                .or_insert_with(|| self.init.clone());
+            x_hat.axpy_sparse(1.0, &q);
+        }
+        // Gossip step on estimates: x += gamma * sum_j w_j (x_hat_j - x_hat_i).
+        for r in received {
+            let x_hat_j = &self.x_hat_neighbors[&r.src];
+            let g = (self.gamma * r.weight) as f32;
+            let m = model.as_mut_slice();
+            let hj = x_hat_j.as_slice();
+            let hi = self.x_hat_self.as_slice();
+            for i in 0..self.dim {
+                m[i] += g * (hj[i] - hi[i]);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn estimates_track_model_over_rounds() {
+        // With budget 1.0 the compression is exact: x_hat == model after
+        // each outgoing, so neighbors hold perfect estimates.
+        let mut s = ChocoSgd::new(1.0, 0.5, 8);
+        let mut rng = Xoshiro256pp::new(1);
+        let m = ParamVec::random(8, 1.0, &mut rng);
+        s.set_init(&ParamVec::zeros(8));
+        s.outgoing(&m, 0).unwrap();
+        assert_eq!(s.x_hat_self, m);
+    }
+
+    #[test]
+    fn exact_compression_matches_gossip_average() {
+        // Two nodes, budget 1, gamma 1: one round moves each model to the
+        // weighted average of the estimates == plain gossip.
+        let dims = 4;
+        let init = ParamVec::zeros(dims);
+        let mut sa = ChocoSgd::new(1.0, 1.0, dims);
+        let mut sb = ChocoSgd::new(1.0, 1.0, dims);
+        sa.set_init(&init);
+        sb.set_init(&init);
+        let ma0 = ParamVec::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        let mb0 = ParamVec::from_vec(vec![3.0, 2.0, 1.0, 0.0]);
+        let qa = sa.outgoing(&ma0, 0).unwrap();
+        let qb = sb.outgoing(&mb0, 0).unwrap();
+        let mut ma = ma0.clone();
+        let mut mb = mb0.clone();
+        sa.aggregate(&mut ma, 0.5, &[Received { src: 1, weight: 0.5, payload: &qb }])
+            .unwrap();
+        sb.aggregate(&mut mb, 0.5, &[Received { src: 0, weight: 0.5, payload: &qa }])
+            .unwrap();
+        // x_a + 1.0 * 0.5 * (x_b - x_a) = average.
+        for i in 0..dims {
+            let avg = (ma0.as_slice()[i] + mb0.as_slice()[i]) / 2.0;
+            assert!((ma.as_slice()[i] - avg).abs() < 1e-6);
+            assert!((mb.as_slice()[i] - avg).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn consensus_under_10pct_budget() {
+        // A 4-clique running pure Choco gossip (no gradients) must drive
+        // all models toward the average even at 10% budget.
+        let n = 4;
+        let dim = 100;
+        let mut rng = Xoshiro256pp::new(3);
+        let init = ParamVec::zeros(dim);
+        let mut sharers: Vec<ChocoSgd> =
+            (0..n).map(|_| {
+                let mut s = ChocoSgd::new(0.1, 0.4, dim);
+                s.set_init(&init);
+                s
+            }).collect();
+        let mut models: Vec<ParamVec> =
+            (0..n).map(|_| ParamVec::random(dim, 1.0, &mut rng)).collect();
+        let target: Vec<f32> = (0..dim)
+            .map(|i| models.iter().map(|m| m.as_slice()[i]).sum::<f32>() / n as f32)
+            .collect();
+        let spread = |models: &[ParamVec]| -> f64 {
+            models
+                .iter()
+                .map(|m| {
+                    m.as_slice()
+                        .iter()
+                        .zip(&target)
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .sum::<f64>()
+        };
+        let initial_spread = spread(&models);
+        let w = 1.0 / n as f64;
+        for round in 0..60 {
+            let payloads: Vec<Vec<u8>> = models
+                .iter()
+                .zip(sharers.iter_mut())
+                .map(|(m, s)| s.outgoing(m, round).unwrap())
+                .collect();
+            for i in 0..n {
+                let received: Vec<Received> = (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| Received { src: j, weight: w, payload: &payloads[j] })
+                    .collect();
+                sharers[i].aggregate(&mut models[i], w, &received).unwrap();
+            }
+        }
+        let final_spread = spread(&models);
+        assert!(
+            final_spread < initial_spread * 0.05,
+            "spread {initial_spread} -> {final_spread}"
+        );
+        // And the consensus point is the initial average (gossip is
+        // average-preserving with symmetric weights).
+        for i in 0..dim {
+            let mean =
+                models.iter().map(|m| m.as_slice()[i]).sum::<f32>() / n as f32;
+            assert!((mean - target[i]).abs() < 0.05, "coord {i}");
+        }
+    }
+
+    #[test]
+    fn payload_respects_budget() {
+        let mut s = ChocoSgd::new(0.1, 0.5, 1000);
+        let mut rng = Xoshiro256pp::new(7);
+        let m = ParamVec::random(1000, 1.0, &mut rng);
+        let payload = s.outgoing(&m, 0).unwrap();
+        let sv = decode_sparse(&payload, 1000).unwrap();
+        assert_eq!(sv.nnz(), 100);
+    }
+}

@@ -1,0 +1,151 @@
+//! Full sharing: the D-PSGD baseline — every parameter, every round.
+
+use anyhow::{bail, Result};
+
+use crate::compression::{FloatCodec, Fp16, RawF32};
+use crate::model::ParamVec;
+
+use super::{Received, Sharing};
+
+/// Serialize the whole parameter vector; aggregate by MH-weighted
+/// averaging: `x <- w_self * x + Σ w_i * x_i`.
+pub struct FullSharing {
+    codec: Box<dyn FloatCodec>,
+}
+
+impl FullSharing {
+    pub fn new() -> FullSharing {
+        FullSharing { codec: Box::new(RawF32) }
+    }
+
+    /// Full support but fp16 values (2 bytes/param) — a cheap ablation on
+    /// the value precision axis.
+    pub fn fp16() -> FullSharing {
+        FullSharing { codec: Box::new(Fp16) }
+    }
+}
+
+impl Default for FullSharing {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sharing for FullSharing {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+        Ok(self.codec.encode(model.as_slice()))
+    }
+
+    fn aggregate(
+        &mut self,
+        model: &mut ParamVec,
+        self_weight: f64,
+        received: &[Received<'_>],
+    ) -> Result<()> {
+        let dim = model.len();
+        let total: f64 = self_weight + received.iter().map(|r| r.weight).sum::<f64>();
+        if (total - 1.0).abs() > 1e-6 {
+            bail!("mixing weights sum to {total}, expected 1");
+        }
+        model.scale(self_weight as f32);
+        for r in received {
+            let w = r.weight as f32;
+            // Hot path: decode raw f32 payloads straight into the
+            // accumulator without the intermediate Vec (saves one 4*P-byte
+            // allocation + pass per neighbor per round; see §Perf).
+            if self.codec.name() == "raw_f32" {
+                if r.payload.len() != dim * 4 {
+                    bail!("raw_f32: expected {} bytes, got {}", dim * 4, r.payload.len());
+                }
+                let m = model.as_mut_slice();
+                for (a, c) in m.iter_mut().zip(r.payload.chunks_exact(4)) {
+                    *a += w * f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            } else {
+                let vals = self.codec.decode(r.payload, dim)?;
+                let m = model.as_mut_slice();
+                for (a, v) in m.iter_mut().zip(vals.iter()) {
+                    *a += w * v;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn average_of_two_models() {
+        let mut a = FullSharing::new();
+        let own = ParamVec::from_vec(vec![1.0, 2.0]);
+        let other = ParamVec::from_vec(vec![3.0, 6.0]);
+        let payload = a.outgoing(&other, 0).unwrap();
+        let mut model = own.clone();
+        a.aggregate(
+            &mut model,
+            0.5,
+            &[Received { src: 1, weight: 0.5, payload: &payload }],
+        )
+        .unwrap();
+        assert_eq!(model.as_slice(), &[2.0, 4.0]);
+    }
+
+    #[test]
+    fn payload_is_4_bytes_per_param() {
+        let mut s = FullSharing::new();
+        let m = ParamVec::zeros(100);
+        assert_eq!(s.outgoing(&m, 0).unwrap().len(), 400);
+        let mut h = FullSharing::fp16();
+        assert_eq!(h.outgoing(&m, 0).unwrap().len(), 200);
+    }
+
+    #[test]
+    fn weight_sum_checked() {
+        let mut s = FullSharing::new();
+        let payload = s.outgoing(&ParamVec::zeros(2), 0).unwrap();
+        let mut model = ParamVec::zeros(2);
+        let r = [Received { src: 0, weight: 0.9, payload: &payload }];
+        assert!(s.aggregate(&mut model, 0.5, &r).is_err());
+    }
+
+    #[test]
+    fn three_way_metropolis_average() {
+        let mut s = FullSharing::new();
+        let p1 = s.outgoing(&ParamVec::from_vec(vec![3.0]), 0).unwrap();
+        let p2 = s.outgoing(&ParamVec::from_vec(vec![9.0]), 0).unwrap();
+        let mut model = ParamVec::from_vec(vec![0.0]);
+        s.aggregate(
+            &mut model,
+            1.0 / 3.0,
+            &[
+                Received { src: 1, weight: 1.0 / 3.0, payload: &p1 },
+                Received { src: 2, weight: 1.0 / 3.0, payload: &p2 },
+            ],
+        )
+        .unwrap();
+        assert!((model.as_slice()[0] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fp16_aggregation_close_to_exact() {
+        let mut s = FullSharing::fp16();
+        let other = ParamVec::from_vec(vec![0.123456, -4.5678]);
+        let payload = s.outgoing(&other, 0).unwrap();
+        let mut model = ParamVec::zeros(2);
+        s.aggregate(
+            &mut model,
+            0.5,
+            &[Received { src: 1, weight: 0.5, payload: &payload }],
+        )
+        .unwrap();
+        assert!((model.as_slice()[0] - 0.0617).abs() < 1e-3);
+        assert!((model.as_slice()[1] + 2.2839).abs() < 2e-3);
+    }
+}

@@ -1,0 +1,232 @@
+//! Sharing algorithms (the paper's *Sharing* module): what goes into a
+//! model message and how received messages are aggregated.
+//!
+//! * [`FullSharing`] — serialize all parameters; Metropolis–Hastings
+//!   weighted averaging (plain D-PSGD).
+//! * [`SubSampling`] — random `budget` fraction of coordinates per round
+//!   (the paper's *random sampling* sparsifier, Fig 4).
+//! * [`TopK`] — largest-change coordinates with the change metric the
+//!   paper's Model module motivates ("how much the learning parameters
+//!   changed in the last iteration").
+//! * [`ChocoSgd`] — error-compensated compressed gossip (Koloskova et
+//!   al. 2019), the paper's tuned state-of-the-art sparsifier.
+//! * [`Quantized`] — full support with QSGD-quantized values (ablation).
+//!
+//! Sparse payloads share one wire layout: `u32 index-block length ‖
+//! adaptive index codec block ‖ f32 values`. All byte counts flow through
+//! the transport counters, which is what Figures 3c/4/5 plot.
+
+mod choco;
+mod full;
+mod quantized;
+mod subsample;
+mod topk;
+
+pub use choco::ChocoSgd;
+pub use full::FullSharing;
+pub use quantized::Quantized;
+pub use subsample::SubSampling;
+pub use topk::TopK;
+
+use anyhow::{bail, Context, Result};
+
+use crate::compression::{decode_indices_best, encode_indices_best};
+use crate::model::{ParamVec, SparseVec};
+
+/// A received model message ready for aggregation.
+pub struct Received<'a> {
+    pub src: usize,
+    /// Mixing weight for this neighbor (Metropolis–Hastings).
+    pub weight: f64,
+    pub payload: &'a [u8],
+}
+
+/// Strategy object owned by one node.
+///
+/// `outgoing` may mutate internal state (error residuals, `x_hat`);
+/// `aggregate` folds the received messages into the local model.
+pub trait Sharing: Send {
+    fn name(&self) -> &'static str;
+
+    /// Observe the common model initialization before round 0. Stateful
+    /// strategies (Choco-SGD) need it so every node's estimate of every
+    /// other node starts from the same point; default is a no-op.
+    fn set_init(&mut self, _init: &ParamVec) {}
+
+    /// Build this round's payload from the post-training model.
+    fn outgoing(&mut self, model: &ParamVec, round: u64) -> Result<Vec<u8>>;
+
+    /// Merge received messages into `model`. `self_weight` is the node's
+    /// own mixing weight (1 - sum of neighbor weights).
+    fn aggregate(
+        &mut self,
+        model: &mut ParamVec,
+        self_weight: f64,
+        received: &[Received<'_>],
+    ) -> Result<()>;
+}
+
+/// Parse a sharing spec into a strategy for a `dim`-parameter model.
+///
+/// Grammar: `full` | `full:fp16` | `subsample:<budget>` | `topk:<budget>`
+/// | `choco:<budget>:<gamma>` | `quant:<levels>`.
+pub fn from_spec(spec: &str, dim: usize, seed: u64) -> Result<Box<dyn Sharing>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    Ok(match parts.as_slice() {
+        ["full"] => Box::new(FullSharing::new()),
+        ["full", "fp16"] => Box::new(FullSharing::fp16()),
+        ["subsample", b] => Box::new(SubSampling::new(parse_budget(b)?, dim, seed)),
+        ["topk", b] => Box::new(TopK::new(parse_budget(b)?, dim)),
+        ["choco", b] => Box::new(ChocoSgd::new(parse_budget(b)?, 0.5, dim)),
+        ["choco", b, g] => {
+            let gamma: f64 = g.parse().context("choco gamma")?;
+            if !(0.0 < gamma && gamma <= 1.0) {
+                bail!("choco gamma must be in (0, 1], got {gamma}");
+            }
+            Box::new(ChocoSgd::new(parse_budget(b)?, gamma, dim))
+        }
+        ["quant", levels] => Box::new(Quantized::new(levels.parse()?, seed)),
+        _ => bail!("unknown sharing spec {spec:?}"),
+    })
+}
+
+/// Validate a spec without building it (config-time check).
+pub fn validate_spec(spec: &str) -> Result<()> {
+    from_spec(spec, 8, 0).map(|_| ())
+}
+
+fn parse_budget(s: &str) -> Result<f64> {
+    let b: f64 = s.parse().context("budget")?;
+    if !(0.0 < b && b <= 1.0) {
+        bail!("communication budget must be in (0, 1], got {b}");
+    }
+    Ok(b)
+}
+
+// ---------------------------------------------------------------------
+// Sparse payload wire helpers (shared by all sparsifying strategies).
+// ---------------------------------------------------------------------
+
+/// Encode a sparse vector: `u32 index-block len ‖ index block ‖ f32 values`.
+pub fn encode_sparse(sv: &SparseVec) -> Vec<u8> {
+    let idx = encode_indices_best(&sv.indices, sv.dim);
+    let mut out = Vec::with_capacity(4 + idx.len() + 4 * sv.values.len());
+    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    out.extend_from_slice(&idx);
+    for v in &sv.values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_sparse`] for a model of dimension `dim`.
+pub fn decode_sparse(bytes: &[u8], dim: usize) -> Result<SparseVec> {
+    if bytes.len() < 4 {
+        bail!("sparse payload too short");
+    }
+    let idx_len = u32::from_le_bytes(bytes[..4].try_into().unwrap()) as usize;
+    if bytes.len() < 4 + idx_len {
+        bail!("sparse payload truncated (index block)");
+    }
+    let indices = decode_indices_best(&bytes[4..4 + idx_len], dim)?;
+    let vals_bytes = &bytes[4 + idx_len..];
+    if vals_bytes.len() != indices.len() * 4 {
+        bail!(
+            "sparse payload value block mismatch: {} indices, {} value bytes",
+            indices.len(),
+            vals_bytes.len()
+        );
+    }
+    let values = vals_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(SparseVec { dim, indices, values })
+}
+
+/// Shared aggregation rule for sparse messages with *absolute* values:
+/// coordinates a neighbor did not send fall back to the receiver's own
+/// value, preserving total weight 1 per coordinate
+/// (`out[j] = own[j] + Σ_i w_i (recv_i[j] - own[j])` over senders of j).
+pub fn aggregate_sparse_absolute(
+    model: &mut ParamVec,
+    received: &[(f64, SparseVec)],
+) -> Result<()> {
+    let own = model.clone();
+    for (w, sv) in received {
+        if sv.dim != model.len() {
+            bail!("sparse message dim {} != model dim {}", sv.dim, model.len());
+        }
+        let m = model.as_mut_slice();
+        let o = own.as_slice();
+        for (&i, &v) in sv.indices.iter().zip(sv.values.iter()) {
+            let i = i as usize;
+            m[i] += (*w as f32) * (v - o[i]);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_dispatch() {
+        for spec in ["full", "full:fp16", "subsample:0.1", "topk:0.25", "choco:0.1:0.7", "quant:64"] {
+            assert!(validate_spec(spec).is_ok(), "{spec}");
+        }
+        for spec in ["", "nope", "subsample:0", "subsample:1.5", "choco:0.1:0", "choco:0.1:2"] {
+            assert!(validate_spec(spec).is_err(), "{spec}");
+        }
+    }
+
+    #[test]
+    fn sparse_payload_roundtrip() {
+        let sv = SparseVec {
+            dim: 1000,
+            indices: vec![1, 5, 999],
+            values: vec![0.5, -2.0, 3.25],
+        };
+        let enc = encode_sparse(&sv);
+        assert_eq!(decode_sparse(&enc, 1000).unwrap(), sv);
+    }
+
+    #[test]
+    fn sparse_payload_rejects_truncation() {
+        let sv = SparseVec { dim: 10, indices: vec![2], values: vec![1.0] };
+        let enc = encode_sparse(&sv);
+        assert!(decode_sparse(&enc[..enc.len() - 1], 10).is_err());
+        assert!(decode_sparse(&[1, 0], 10).is_err());
+    }
+
+    #[test]
+    fn sparse_absolute_aggregation_weight_preserving() {
+        // own = [1, 1, 1]; neighbor (w=0.5) sends coord 1 = 3.
+        let mut model = ParamVec::from_vec(vec![1.0, 1.0, 1.0]);
+        let sv = SparseVec { dim: 3, indices: vec![1], values: vec![3.0] };
+        aggregate_sparse_absolute(&mut model, &[(0.5, sv)]).unwrap();
+        assert_eq!(model.as_slice(), &[1.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn sparse_absolute_full_support_equals_dense_average() {
+        let own = ParamVec::from_vec(vec![2.0, 4.0]);
+        let other = ParamVec::from_vec(vec![0.0, 8.0]);
+        let sv = SparseVec {
+            dim: 2,
+            indices: vec![0, 1],
+            values: other.as_slice().to_vec(),
+        };
+        let mut model = own.clone();
+        aggregate_sparse_absolute(&mut model, &[(0.5, sv)]).unwrap();
+        assert_eq!(model.as_slice(), &[1.0, 6.0]);
+    }
+
+    #[test]
+    fn sparse_dim_mismatch_rejected() {
+        let mut model = ParamVec::zeros(4);
+        let sv = SparseVec { dim: 5, indices: vec![0], values: vec![1.0] };
+        assert!(aggregate_sparse_absolute(&mut model, &[(0.5, sv)]).is_err());
+    }
+}

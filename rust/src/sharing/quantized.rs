@@ -1,0 +1,85 @@
+//! Quantized full sharing: every coordinate, QSGD-quantized values.
+//!
+//! The paper lists quantization (QSGD) as the other big communication-
+//! efficiency family next to sparsification; this strategy provides it as
+//! an ablation axis: same support as full sharing, 1 byte per value.
+
+use anyhow::{bail, Result};
+
+use crate::compression::{FloatCodec, Qsgd};
+use crate::model::ParamVec;
+
+use super::{Received, Sharing};
+
+pub struct Quantized {
+    codec: Qsgd,
+}
+
+impl Quantized {
+    pub fn new(levels: u32, seed: u64) -> Quantized {
+        Quantized { codec: Qsgd::new(levels, seed) }
+    }
+}
+
+impl Sharing for Quantized {
+    fn name(&self) -> &'static str {
+        "quant"
+    }
+
+    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+        Ok(self.codec.encode(model.as_slice()))
+    }
+
+    fn aggregate(
+        &mut self,
+        model: &mut ParamVec,
+        self_weight: f64,
+        received: &[Received<'_>],
+    ) -> Result<()> {
+        let dim = model.len();
+        let total: f64 = self_weight + received.iter().map(|r| r.weight).sum::<f64>();
+        if (total - 1.0).abs() > 1e-6 {
+            bail!("mixing weights sum to {total}, expected 1");
+        }
+        model.scale(self_weight as f32);
+        for r in received {
+            let vals = self.codec.decode(r.payload, dim)?;
+            let w = r.weight as f32;
+            for (a, v) in model.as_mut_slice().iter_mut().zip(vals.iter()) {
+                *a += w * v;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn payload_one_byte_per_param_plus_header() {
+        let mut s = Quantized::new(128, 0);
+        let m = ParamVec::zeros(1000);
+        assert_eq!(s.outgoing(&m, 0).unwrap().len(), 1004);
+    }
+
+    #[test]
+    fn aggregation_approximates_average() {
+        let mut s = Quantized::new(128, 1);
+        let mut rng = Xoshiro256pp::new(2);
+        let other = ParamVec::random(512, 1.0, &mut rng);
+        let payload = s.outgoing(&other, 0).unwrap();
+        let mut model = ParamVec::zeros(512);
+        s.aggregate(
+            &mut model,
+            0.5,
+            &[Received { src: 1, weight: 0.5, payload: &payload }],
+        )
+        .unwrap();
+        for (got, want) in model.as_slice().iter().zip(other.as_slice()) {
+            assert!((got - want * 0.5).abs() < 0.02, "{got} vs {}", want * 0.5);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Random-sampling sparsification: each round, send a uniformly random
+//! `budget` fraction of coordinates (paper Fig 4's "random sampling").
+
+use anyhow::Result;
+
+use crate::model::ParamVec;
+use crate::rng::{mix_seed, Xoshiro256pp};
+
+use super::{aggregate_sparse_absolute, decode_sparse, encode_sparse, Received, Sharing};
+
+pub struct SubSampling {
+    budget: f64,
+    dim: usize,
+    rng: Xoshiro256pp,
+}
+
+impl SubSampling {
+    pub fn new(budget: f64, dim: usize, seed: u64) -> SubSampling {
+        assert!(0.0 < budget && budget <= 1.0);
+        SubSampling {
+            budget,
+            dim,
+            rng: Xoshiro256pp::new(mix_seed(&[seed, 0x5AB5])),
+        }
+    }
+
+    fn k(&self) -> usize {
+        ((self.dim as f64 * self.budget).round() as usize).clamp(1, self.dim)
+    }
+}
+
+impl Sharing for SubSampling {
+    fn name(&self) -> &'static str {
+        "subsample"
+    }
+
+    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+        let sv = model.sample_k(self.k(), &mut self.rng);
+        Ok(encode_sparse(&sv))
+    }
+
+    fn aggregate(
+        &mut self,
+        model: &mut ParamVec,
+        _self_weight: f64,
+        received: &[Received<'_>],
+    ) -> Result<()> {
+        let decoded: Vec<(f64, _)> = received
+            .iter()
+            .map(|r| Ok((r.weight, decode_sparse(r.payload, model.len())?)))
+            .collect::<Result<_>>()?;
+        aggregate_sparse_absolute(model, &decoded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_respects_budget() {
+        let mut s = SubSampling::new(0.1, 1000, 1);
+        let mut rng = Xoshiro256pp::new(2);
+        let m = ParamVec::random(1000, 1.0, &mut rng);
+        let payload = s.outgoing(&m, 0).unwrap();
+        let sv = decode_sparse(&payload, 1000).unwrap();
+        assert_eq!(sv.nnz(), 100);
+        // Wire size is far below full sharing (4000 B).
+        assert!(payload.len() < 700, "{}", payload.len());
+    }
+
+    #[test]
+    fn coordinates_change_between_rounds() {
+        let mut s = SubSampling::new(0.05, 500, 3);
+        let m = ParamVec::zeros(500);
+        let a = decode_sparse(&s.outgoing(&m, 0).unwrap(), 500).unwrap();
+        let b = decode_sparse(&s.outgoing(&m, 1).unwrap(), 500).unwrap();
+        assert_ne!(a.indices, b.indices);
+    }
+
+    #[test]
+    fn aggregation_blends_received_coords_only() {
+        let mut s = SubSampling::new(0.5, 4, 1);
+        let mut model = ParamVec::from_vec(vec![1.0; 4]);
+        let sv = crate::model::SparseVec {
+            dim: 4,
+            indices: vec![0, 2],
+            values: vec![5.0, 9.0],
+        };
+        let payload = encode_sparse(&sv);
+        s.aggregate(
+            &mut model,
+            0.5,
+            &[Received { src: 1, weight: 0.5, payload: &payload }],
+        )
+        .unwrap();
+        assert_eq!(model.as_slice(), &[3.0, 1.0, 5.0, 1.0]);
+    }
+
+    #[test]
+    fn full_budget_sends_everything() {
+        let mut s = SubSampling::new(1.0, 16, 1);
+        let mut rng = Xoshiro256pp::new(9);
+        let m = ParamVec::random(16, 1.0, &mut rng);
+        let sv = decode_sparse(&s.outgoing(&m, 0).unwrap(), 16).unwrap();
+        assert_eq!(sv.nnz(), 16);
+        assert_eq!(sv.to_dense(), m);
+    }
+}

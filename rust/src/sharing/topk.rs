@@ -1,0 +1,134 @@
+//! TopK sparsification: send the coordinates that changed the most since
+//! they were last shared, with error feedback.
+//!
+//! The selection metric is `|model - last_shared|` accumulated over
+//! rounds: a coordinate's pending change keeps growing until it is big
+//! enough to be sent (classic error-feedback semantics, and exactly the
+//! "store how much the learning parameters changed" state the paper's
+//! Model module motivates). Sent values are the *absolute* parameter
+//! values at those coordinates, so aggregation uses the same
+//! missing-coordinate rule as random sampling.
+
+use anyhow::Result;
+
+use crate::model::{ParamVec, SparseVec};
+
+use super::{aggregate_sparse_absolute, decode_sparse, encode_sparse, Received, Sharing};
+
+pub struct TopK {
+    budget: f64,
+    dim: usize,
+    /// Snapshot of each coordinate's value when it was last included in a
+    /// message (the reference point for "change since last shared").
+    last_shared: ParamVec,
+    initialized: bool,
+}
+
+impl TopK {
+    pub fn new(budget: f64, dim: usize) -> TopK {
+        assert!(0.0 < budget && budget <= 1.0);
+        TopK { budget, dim, last_shared: ParamVec::zeros(dim), initialized: false }
+    }
+
+    fn k(&self) -> usize {
+        ((self.dim as f64 * self.budget).round() as usize).clamp(1, self.dim)
+    }
+}
+
+impl Sharing for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+        if !self.initialized {
+            // First round: everyone knows the common init; change = model
+            // - init is not defined here, so share the largest-magnitude
+            // values to bootstrap.
+            self.initialized = true;
+            self.last_shared = model.clone();
+            let sv = model.topk(self.k());
+            return Ok(encode_sparse(&sv));
+        }
+        // Change since last shared, per coordinate.
+        let mut delta = model.clone();
+        delta.axpy(-1.0, &self.last_shared);
+        let selected = delta.topk(self.k());
+        // Send absolute values at the selected coordinates and move the
+        // reference point for exactly those coordinates.
+        let values: Vec<f32> = selected
+            .indices
+            .iter()
+            .map(|&i| model.as_slice()[i as usize])
+            .collect();
+        for (&i, &v) in selected.indices.iter().zip(values.iter()) {
+            self.last_shared.as_mut_slice()[i as usize] = v;
+        }
+        let sv = SparseVec { dim: self.dim, indices: selected.indices, values };
+        Ok(encode_sparse(&sv))
+    }
+
+    fn aggregate(
+        &mut self,
+        model: &mut ParamVec,
+        _self_weight: f64,
+        received: &[Received<'_>],
+    ) -> Result<()> {
+        let decoded: Vec<(f64, _)> = received
+            .iter()
+            .map(|r| Ok((r.weight, decode_sparse(r.payload, model.len())?)))
+            .collect::<Result<_>>()?;
+        aggregate_sparse_absolute(model, &decoded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_round_sends_largest_values() {
+        let mut s = TopK::new(0.5, 4);
+        let m = ParamVec::from_vec(vec![0.1, -9.0, 5.0, 0.2]);
+        let sv = decode_sparse(&s.outgoing(&m, 0).unwrap(), 4).unwrap();
+        assert_eq!(sv.indices, vec![1, 2]);
+        assert_eq!(sv.values, vec![-9.0, 5.0]);
+    }
+
+    #[test]
+    fn later_rounds_select_by_change() {
+        let mut s = TopK::new(0.25, 4);
+        let m0 = ParamVec::from_vec(vec![10.0, 0.0, 0.0, 0.0]);
+        s.outgoing(&m0, 0).unwrap(); // bootstraps last_shared = m0
+        // Coordinate 2 changed the most since last shared.
+        let m1 = ParamVec::from_vec(vec![10.1, 0.0, 3.0, 0.5]);
+        let sv = decode_sparse(&s.outgoing(&m1, 1).unwrap(), 4).unwrap();
+        assert_eq!(sv.indices, vec![2]);
+        assert_eq!(sv.values, vec![3.0]);
+    }
+
+    #[test]
+    fn unsent_change_accumulates() {
+        let mut s = TopK::new(0.25, 4);
+        s.outgoing(&ParamVec::zeros(4), 0).unwrap();
+        // Coordinate 1 drifts slowly: 0.4 per round; coordinate 3 jumps.
+        let m1 = ParamVec::from_vec(vec![0.0, 0.4, 0.0, 1.0]);
+        let sv1 = decode_sparse(&s.outgoing(&m1, 1).unwrap(), 4).unwrap();
+        assert_eq!(sv1.indices, vec![3]); // jump wins round 1
+        // Next round coordinate 1 has accumulated 0.8 of unsent change
+        // while 3 only moved 0.1 more -> 1 is now selected.
+        let m2 = ParamVec::from_vec(vec![0.0, 0.8, 0.0, 1.1]);
+        let sv2 = decode_sparse(&s.outgoing(&m2, 2).unwrap(), 4).unwrap();
+        assert_eq!(sv2.indices, vec![1]);
+        assert_eq!(sv2.values, vec![0.8]);
+    }
+
+    #[test]
+    fn budget_respected() {
+        let mut s = TopK::new(0.1, 1000);
+        let mut rng = crate::rng::Xoshiro256pp::new(1);
+        let m = ParamVec::random(1000, 1.0, &mut rng);
+        let sv = decode_sparse(&s.outgoing(&m, 0).unwrap(), 1000).unwrap();
+        assert_eq!(sv.nnz(), 100);
+    }
+}

@@ -1,0 +1,114 @@
+//! Local training (the paper's *Training* module): per-round local SGD
+//! steps and test-set evaluation, executed through the PJRT engine.
+
+use anyhow::{bail, Result};
+
+use crate::dataset::{DataLoader, Dataset};
+use crate::runtime::EngineHandle;
+
+/// Local trainer owned by one node.
+pub struct Trainer {
+    engine: EngineHandle,
+    model: String,
+    loader: DataLoader,
+    lr: f32,
+    local_steps: u32,
+}
+
+impl Trainer {
+    pub fn new(
+        engine: EngineHandle,
+        model: &str,
+        loader: DataLoader,
+        lr: f32,
+        local_steps: u32,
+    ) -> Result<Trainer> {
+        let meta = engine.manifest().model(model)?;
+        if loader.batch_size() != meta.train_batch {
+            bail!(
+                "loader batch {} != lowered train batch {}",
+                loader.batch_size(),
+                meta.train_batch
+            );
+        }
+        Ok(Trainer {
+            engine,
+            model: model.to_string(),
+            loader,
+            lr,
+            local_steps,
+        })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model
+    }
+
+    pub fn local_steps(&self) -> u32 {
+        self.local_steps
+    }
+
+    /// Run `local_steps` SGD steps; returns (new_params, mean train loss).
+    pub fn train_round(&mut self, mut params: Vec<f32>) -> Result<(Vec<f32>, f64)> {
+        let mut total = 0.0f64;
+        for _ in 0..self.local_steps {
+            let batch = self.loader.next_batch();
+            let (p, loss) =
+                self.engine
+                    .train_step(&self.model, params, batch.features, batch.labels, self.lr)?;
+            params = p;
+            total += loss as f64;
+        }
+        Ok((params, total / self.local_steps as f64))
+    }
+
+    /// Exact test-set metrics: returns (mean loss, accuracy).
+    ///
+    /// The eval executable has a fixed batch shape; the caller must supply
+    /// a test set whose size is a multiple of the lowered eval batch (the
+    /// coordinator rounds `test_total` up to guarantee this).
+    pub fn evaluate(&self, params: &[f32], test: &Dataset) -> Result<(f64, f64)> {
+        let meta = self.engine.manifest().model(&self.model)?;
+        let b = meta.eval_batch;
+        if test.len() % b != 0 {
+            bail!("test set size {} not a multiple of eval batch {b}", test.len());
+        }
+        let mut sum_loss = 0.0f64;
+        let mut correct = 0i64;
+        for (batch, valid) in DataLoader::eval_batches(test, b) {
+            debug_assert_eq!(valid, b);
+            let (l, c) = self.engine.eval_batch(
+                &self.model,
+                params.to_vec(),
+                batch.features,
+                batch.labels,
+            )?;
+            sum_loss += l as f64;
+            correct += c as i64;
+        }
+        let n = test.len() as f64;
+        Ok((sum_loss / n, correct as f64 / n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Trainer is exercised end-to-end in rust/tests/dl_integration.rs
+    // (it needs compiled artifacts); unit-level input validation only.
+    use super::*;
+    use crate::dataset::SyntheticSpec;
+
+    #[test]
+    fn batch_mismatch_rejected() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let engine = EngineHandle::start(&dir, &["mlp"]).unwrap();
+        let (train, _) = crate::dataset::generate(&SyntheticSpec::cifar10s(16, 64, 32, 1));
+        let bad = DataLoader::new(train, 3, 0); // lowered batch is 8
+        assert!(Trainer::new(engine.clone(), "mlp", bad, 0.05, 1).is_err());
+        engine.shutdown();
+    }
+}

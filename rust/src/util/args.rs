@@ -1,0 +1,186 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals, with
+//! typed accessors and a generated usage string. This mirrors the role of
+//! DecentralizePy's `utils` arg-parsing helpers.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for usage/help output.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ArgError {
+    #[error("missing value for --{0}")]
+    MissingValue(String),
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{0}: {1:?}")]
+    Invalid(String, String),
+}
+
+impl Args {
+    /// Parse raw tokens. `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> Result<Args, ArgError> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| ArgError::MissingValue(body.to_string()))?;
+                    args.opts.insert(body.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, ArgError> {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, ArgError> {
+        self.get(name)
+            .ok_or_else(|| ArgError::MissingRequired(name.to_string()))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: T,
+    ) -> Result<T, ArgError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| ArgError::Invalid(name.to_string(), s.to_string())),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional (conventionally the subcommand).
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(program: &str, about: &str, specs: &[OptSpec]) -> String {
+    let mut out = format!("{program} — {about}\n\nOptions:\n");
+    for s in specs {
+        let head = if s.is_flag {
+            format!("  --{}", s.name)
+        } else {
+            format!("  --{} <v>", s.name)
+        };
+        out.push_str(&format!("{head:<28}{}", s.help));
+        if let Some(d) = s.default {
+            out.push_str(&format!(" [default: {d}]"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn key_value_styles() {
+        let a = parse(&["--nodes", "16", "--rounds=40"], &[]);
+        assert_eq!(a.get("nodes"), Some("16"));
+        assert_eq!(a.get("rounds"), Some("40"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["run", "--verbose", "--lr", "0.05", "extra"], &["verbose"]);
+        assert_eq!(a.command(), Some("run"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["run".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn typed_parsing() {
+        let a = parse(&["--n", "42"], &[]);
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parse("missing", 7i32).unwrap(), 7);
+        assert!(a.get_parse::<f64>("n", 0.0).is_ok());
+    }
+
+    #[test]
+    fn invalid_value_errors() {
+        let a = parse(&["--n", "abc"], &[]);
+        assert!(matches!(a.get_parse::<usize>("n", 0), Err(ArgError::Invalid(..))));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(vec!["--x".to_string()], &[]);
+        assert!(matches!(r, Err(ArgError::MissingValue(_))));
+    }
+
+    #[test]
+    fn require_works() {
+        let a = parse(&["--cfg", "f.json"], &[]);
+        assert_eq!(a.require("cfg").unwrap(), "f.json");
+        assert!(a.require("nope").is_err());
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage(
+            "decentra",
+            "decentralized learning",
+            &[OptSpec { name: "nodes", help: "node count", default: Some("16"), is_flag: false }],
+        );
+        assert!(u.contains("--nodes"));
+        assert!(u.contains("default: 16"));
+    }
+}

@@ -1,0 +1,157 @@
+//! IEEE-754 binary16 (half precision) conversion.
+//!
+//! Used by the fp16 compressor in `compression` — the paper's compression
+//! module packages "general-purpose compression algorithms for
+//! floating-point lists"; halving the width is the cheapest of those.
+//! Round-to-nearest-even on encode, exact on decode.
+
+/// Convert f32 -> f16 bits (round-to-nearest-even, IEEE semantics
+/// including subnormals, infinities, and NaN).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf stays inf; any NaN maps to the canonical quiet NaN.
+        return if mant != 0 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+
+    // Unbiased exponent, rebiased for f16 (bias 15 vs 127).
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e16 <= 0 {
+        // Subnormal or zero in f16.
+        if e16 < -10 {
+            return sign; // underflow to signed zero
+        }
+        // Add implicit leading 1, shift into subnormal position.
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e16) as u32;
+        let half = 1u32 << (shift - 1);
+        let mut v = m >> shift;
+        // Round to nearest even.
+        let rem = m & ((1 << shift) - 1);
+        if rem > half || (rem == half && (v & 1) == 1) {
+            v += 1;
+        }
+        return sign | v as u16;
+    }
+
+    // Normal: take the top 10 mantissa bits with round-to-nearest-even.
+    let mut v = ((e16 as u32) << 10) | (mant >> 13);
+    let rem = mant & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (v & 1) == 1) {
+        v += 1; // may carry into the exponent, which is exactly correct
+    }
+    sign | v as u16
+}
+
+/// Convert f16 bits -> f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // signed zero
+        } else {
+            // Subnormal: normalize.
+            let mut e = 127 - 15 + 1;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | ((e as u32) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(x: f32) -> f32 {
+        f16_bits_to_f32(f32_to_f16_bits(x))
+    }
+
+    #[test]
+    fn exact_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0] {
+            assert_eq!(roundtrip(v), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn signed_zero_preserved() {
+        assert_eq!(roundtrip(-0.0).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn infinities_and_nan() {
+        assert_eq!(roundtrip(f32::INFINITY), f32::INFINITY);
+        assert_eq!(roundtrip(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(roundtrip(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn overflow_saturates_to_inf() {
+        assert_eq!(roundtrip(1.0e6), f32::INFINITY);
+        assert_eq!(roundtrip(-1.0e6), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn tiny_values_flush_or_subnormal() {
+        // Smallest f16 subnormal is ~5.96e-8.
+        assert_eq!(roundtrip(1.0e-10), 0.0);
+        let sub = 6.0e-8f32;
+        let rt = roundtrip(sub);
+        assert!(rt > 0.0 && (rt - sub).abs() / sub < 0.5);
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        // f16 has 11 significant bits -> rel. error <= 2^-11.
+        let mut x = 6.2e-5f32; // just above the smallest normal f16
+        while x < 6.0e4 {
+            let rt = roundtrip(x);
+            let rel = ((rt - x) / x).abs();
+            assert!(rel <= 4.9e-4, "x={x} rt={rt} rel={rel}");
+            x *= 1.37;
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next f16;
+        // RNE picks the even mantissa (1.0).
+        let x = 1.0 + (2.0f32).powi(-11);
+        assert_eq!(roundtrip(x), 1.0);
+        // 1 + 3*2^-11 is halfway between the 1st and 2nd steps; RNE picks
+        // the even (2nd) step.
+        let y = 1.0 + 3.0 * (2.0f32).powi(-11);
+        assert_eq!(roundtrip(y), 1.0 + 2.0 * (2.0f32).powi(-10));
+    }
+
+    #[test]
+    fn exhaustive_decode_encode_identity() {
+        // Every finite f16 must survive decode->encode exactly.
+        for h in 0u16..=0xFFFF {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan handled above
+            }
+            let f = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(f), h, "bits {h:#06x}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal leveled logger (env_logger is unavailable offline).
+//!
+//! Thread-safe, writes to stderr with wall-clock-relative timestamps.
+//! Level comes from `DECENTRA_LOG` (error|warn|info|debug|trace), default
+//! `info`. Per-node log *files* are handled by `metrics`, not here.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+/// Initialize from the environment; idempotent.
+pub fn init() {
+    let lvl = std::env::var("DECENTRA_LOG")
+        .map(|v| Level::from_str(&v))
+        .unwrap_or(Level::Info);
+    set_level(lvl);
+    Lazy::force(&START);
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.elapsed();
+    let line = format!(
+        "[{:>8.3}s {} {}] {}\n",
+        t.as_secs_f64(),
+        level.tag(),
+        target,
+        msg
+    );
+    let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::from_str("ERROR"), Level::Error);
+        assert_eq!(Level::from_str("debug"), Level::Debug);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+}

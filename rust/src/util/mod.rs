@@ -1,0 +1,86 @@
+//! Cross-cutting utilities: JSON, CLI args, logging, stats, f16, misc.
+//!
+//! Mirrors DecentralizePy's `utils` module (dict manipulation, argument
+//! parsing) plus the pieces this offline environment must provide itself
+//! (JSON codec, logger, bench-grade stats).
+
+pub mod args;
+pub mod f16;
+pub mod json;
+pub mod logger;
+pub mod stats;
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer for coarse phase measurements.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a byte count with binary units ("1.5 MiB").
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration compactly ("1.25s", "310ms").
+pub fn human_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.0}ms", s * 1e3)
+    } else {
+        format!("{:.0}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(12), "12 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn human_duration_units() {
+        assert_eq!(human_duration(Duration::from_millis(310)), "310ms");
+        assert_eq!(human_duration(Duration::from_secs_f64(1.25)), "1.25s");
+        assert_eq!(human_duration(Duration::from_micros(42)), "42µs");
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+}

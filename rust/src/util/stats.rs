@@ -1,0 +1,159 @@
+//! Summary statistics used for experiment reporting.
+//!
+//! The paper reports the mean over 5 seeds with a 95% confidence interval;
+//! [`MeanCi`] implements exactly that (normal-approximation CI, which is
+//! what matplotlib/seaborn-style error bands use at these sample counts).
+
+/// Mean / variance / extrema accumulator (Welford's online algorithm).
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the 95% confidence interval of the mean.
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        1.96 * self.std() / (self.n as f64).sqrt()
+    }
+}
+
+/// Mean with a 95% CI, the unit the figures report per point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MeanCi {
+    pub mean: f64,
+    pub ci95: f64,
+    pub n: u64,
+}
+
+/// Aggregate a slice of per-seed (or per-node) values into mean ± CI.
+pub fn mean_ci(values: &[f64]) -> MeanCi {
+    let mut r = Running::new();
+    for &v in values {
+        r.push(v);
+    }
+    MeanCi { mean: r.mean(), ci95: r.ci95(), n: r.count() }
+}
+
+/// Percentile over a copy of the data (linear interpolation, like numpy).
+pub fn percentile(values: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q), "percentile out of range");
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = q / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Median convenience wrapper.
+pub fn median(values: &[f64]) -> f64 {
+    percentile(values, 50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn running_matches_closed_form() {
+        let data = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut r = Running::new();
+        for d in data {
+            r.push(d);
+        }
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+        assert_eq!(r.count(), 8);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a = mean_ci(&[1.0, 2.0, 3.0]);
+        let many: Vec<f64> = (0..300).map(|i| (i % 3) as f64 + 1.0).collect();
+        let b = mean_ci(&many);
+        assert!(b.ci95 < a.ci95);
+        assert!((a.mean - 2.0).abs() < 1e-12);
+        assert!((b.mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sample_has_zero_ci() {
+        let m = mean_ci(&[5.0]);
+        assert_eq!(m.mean, 5.0);
+        assert_eq!(m.ci95, 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((median(&v) - 2.5).abs() < 1e-12);
+        assert!((percentile(&v, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_range_checked() {
+        percentile(&[1.0], 101.0);
+    }
+}

@@ -1,0 +1,187 @@
+//! End-to-end integration: full decentralized training runs through the
+//! coordinator (dataset -> partition -> topology -> nodes -> PJRT train
+//! steps -> sharing -> aggregation -> metrics). Requires artifacts.
+
+use decentralize_rs::config::ExperimentConfig;
+use decentralize_rs::coordinator::run_experiment;
+use decentralize_rs::runtime::EngineHandle;
+
+fn engine_or_skip(models: &[&str]) -> Option<EngineHandle> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(EngineHandle::start(&dir, models).unwrap())
+}
+
+fn small_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.nodes = 6;
+    cfg.rounds = 8;
+    cfg.eval_every = 4;
+    cfg.train_total = 480;
+    cfg.test_total = 96;
+    cfg.topology = "regular:3".into();
+    cfg.local_steps = 2;
+    cfg
+}
+
+#[test]
+fn dl_training_learns_and_logs() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_dl_basic");
+    cfg.rounds = 16;
+    let result = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(result.logs.len(), 6);
+    // Every node logged the same rounds.
+    for log in &result.logs {
+        assert_eq!(log.records.len(), result.logs[0].records.len());
+        assert!(!log.records.is_empty());
+    }
+    // Learning signal: accuracy well above chance (10 classes) by the end.
+    let acc = result.final_accuracy();
+    assert!(acc > 0.25, "final accuracy {acc}");
+    // Train loss decreased.
+    let first = result.series.first().unwrap().train_loss.mean;
+    let last = result.series.last().unwrap().train_loss.mean;
+    assert!(last < first, "train loss {first} -> {last}");
+    // Bytes accounted: 3 neighbors * (P*4 + header) per round.
+    let bytes = result.final_bytes_per_node();
+    assert!(bytes > 0.0);
+    engine.shutdown();
+}
+
+#[test]
+fn all_nodes_converge_to_similar_accuracy() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let cfg = small_cfg("it_dl_consensus");
+    let result = run_experiment(&cfg, &engine).unwrap();
+    let last = result.series.last().unwrap();
+    // 95% CI across nodes should be modest relative to the mean:
+    // aggregation keeps models close.
+    assert!(last.test_acc.ci95 < 0.2, "acc spread {}", last.test_acc.ci95);
+    engine.shutdown();
+}
+
+#[test]
+fn dynamic_topology_via_peer_sampler() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_dl_dynamic");
+    cfg.dynamic = true;
+    let result = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(result.logs.len(), 6);
+    assert!(result.final_accuracy() > 0.1);
+    engine.shutdown();
+}
+
+#[test]
+fn sparsification_sends_fewer_bytes() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut full = small_cfg("it_full");
+    full.rounds = 4;
+    full.eval_every = 4;
+    let mut sub = full.clone();
+    sub.name = "it_subsample".into();
+    sub.sharing = "subsample:0.1".into();
+    let mut choco = full.clone();
+    choco.name = "it_choco".into();
+    choco.sharing = "choco:0.1:0.5".into();
+    let rf = run_experiment(&full, &engine).unwrap();
+    let rs = run_experiment(&sub, &engine).unwrap();
+    let rc = run_experiment(&choco, &engine).unwrap();
+    let bf = rf.final_bytes_per_node();
+    let bs = rs.final_bytes_per_node();
+    let bc = rc.final_bytes_per_node();
+    // ~10x reduction (plus index overhead).
+    assert!(bs < bf * 0.2, "subsample bytes {bs} vs full {bf}");
+    assert!(bc < bf * 0.2, "choco bytes {bc} vs full {bf}");
+    engine.shutdown();
+}
+
+#[test]
+fn secure_aggregation_matches_plain_dpsgd_closely() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut plain = small_cfg("it_plain");
+    plain.rounds = 10;
+    plain.eval_every = 5;
+    let mut secure = plain.clone();
+    secure.name = "it_secure".into();
+    secure.secure = true;
+    let rp = run_experiment(&plain, &engine).unwrap();
+    let rs = run_experiment(&secure, &engine).unwrap();
+    // Accuracy within a few points (float mask residue only).
+    let da = (rp.final_accuracy() - rs.final_accuracy()).abs();
+    assert!(da < 0.15, "accuracy gap {da}");
+    // Secure costs more bytes (seeds + keys), but only slightly.
+    let bp = rp.final_bytes_per_node();
+    let bs = rs.final_bytes_per_node();
+    assert!(bs > bp, "secure {bs} <= plain {bp}");
+    assert!(bs < bp * 1.25, "secure overhead too large: {bs} vs {bp}");
+    engine.shutdown();
+}
+
+#[test]
+fn run_result_saves_and_reloads() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_dl_save");
+    cfg.rounds = 4;
+    cfg.results_dir = std::env::temp_dir().join("decentra_it_results");
+    let _ = std::fs::remove_dir_all(cfg.results_dir.join(&cfg.name));
+    let result = run_experiment(&cfg, &engine).unwrap();
+    let dir = result.save().unwrap();
+    let logs = decentralize_rs::metrics::NodeLog::load_dir(&dir).unwrap();
+    assert_eq!(logs.len(), cfg.nodes);
+    let series = decentralize_rs::metrics::aggregate(&logs);
+    assert_eq!(series.len(), result.series.len());
+    let cfg2 = ExperimentConfig::from_file(&dir.join("config.json")).unwrap();
+    assert_eq!(cfg2.nodes, cfg.nodes);
+    engine.shutdown();
+}
+
+#[test]
+fn churn_training_still_converges() {
+    // FedScale-style availability churn (paper future work): 25% of the
+    // nodes sit out each round; topology is drawn over the active set.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_dl_churn");
+    cfg.dynamic = true;
+    cfg.churn = 0.25;
+    cfg.rounds = 12;
+    let result = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(result.logs.len(), cfg.nodes);
+    assert!(result.final_accuracy() > 0.2, "acc {}", result.final_accuracy());
+    engine.shutdown();
+}
+
+#[test]
+fn quantized_sharing_runs_end_to_end() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_dl_quant");
+    cfg.sharing = "quant:128".into();
+    let rq = run_experiment(&cfg, &engine).unwrap();
+    let full = small_cfg("it_dl_quant_baseline");
+    let rf = run_experiment(&full, &engine).unwrap();
+    // ~4x byte reduction (1 byte/param vs 4).
+    assert!(rq.final_bytes_per_node() < rf.final_bytes_per_node() * 0.3);
+    assert!(rq.final_accuracy() > 0.2);
+    engine.shutdown();
+}
+
+#[test]
+fn fp16_full_sharing_halves_bytes() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_dl_fp16");
+    cfg.sharing = "full:fp16".into();
+    cfg.rounds = 4;
+    cfg.eval_every = 4;
+    let rh = run_experiment(&cfg, &engine).unwrap();
+    let mut raw = cfg.clone();
+    raw.name = "it_dl_fp16_base".into();
+    raw.sharing = "full".into();
+    let rr = run_experiment(&raw, &engine).unwrap();
+    let ratio = rh.final_bytes_per_node() / rr.final_bytes_per_node();
+    assert!((0.45..0.6).contains(&ratio), "ratio {ratio}");
+    engine.shutdown();
+}

@@ -1,0 +1,303 @@
+//! Randomized property tests (proptest is unavailable offline, so these
+//! drive invariants with the framework's own deterministic PRNG across
+//! many generated cases — failures print the case seed for replay).
+
+use decentralize_rs::communication::{decode_envelope, encode_envelope, Envelope, MsgKind};
+use decentralize_rs::compression::{
+    decode_indices_best, encode_indices_best, FloatCodec, Fp16, Qsgd, RawF32,
+};
+use decentralize_rs::dataset::Partition;
+use decentralize_rs::graph;
+use decentralize_rs::model::ParamVec;
+use decentralize_rs::rng::Xoshiro256pp;
+use decentralize_rs::secure;
+use decentralize_rs::sharing::{self, decode_sparse, encode_sparse, Received, Sharing};
+use decentralize_rs::util::json::{parse, Json};
+
+const CASES: u64 = 60;
+
+fn rand_vals(rng: &mut Xoshiro256pp, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
+}
+
+#[test]
+fn prop_random_regular_always_regular_and_connected() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(1000 + case);
+        let n = rng.range(6, 80);
+        let mut d = rng.range(2, 8.min(n - 1));
+        if n * d % 2 == 1 {
+            d += 1;
+        }
+        if d >= n {
+            continue;
+        }
+        let g = graph::random_regular(n, d, &mut rng);
+        assert!((0..n).all(|v| g.degree(v) == d), "case {case}: n={n} d={d}");
+        assert!(graph::is_connected(&g), "case {case}");
+        // MH weights on it are doubly stochastic.
+        let w = graph::metropolis_hastings(&g);
+        for v in 0..n {
+            let sum: f64 =
+                w.self_weight(v) + w.neighbor_weights(v).map(|(_, x)| x).sum::<f64>();
+            assert!((sum - 1.0).abs() < 1e-9, "case {case} node {v}: {sum}");
+        }
+    }
+}
+
+#[test]
+fn prop_partitions_disjoint_and_in_range() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(2000 + case);
+        let n = rng.range(100, 3000);
+        let classes = rng.range(2, 12);
+        let nodes = rng.range(2, 24);
+        let labels: Vec<u8> = (0..n).map(|_| rng.range(0, classes) as u8).collect();
+        let part = match case % 3 {
+            0 => Partition::Iid,
+            1 => {
+                let per_node = 1 + (case % 3) as usize;
+                if nodes * per_node > n {
+                    continue;
+                }
+                Partition::Shards { per_node }
+            }
+            _ => Partition::Dirichlet { alpha: 0.1 + (case as f64 % 10.0) },
+        };
+        let shards = part.split(&labels, nodes, &mut rng);
+        assert_eq!(shards.len(), nodes, "case {case}");
+        let mut seen = std::collections::HashSet::new();
+        for s in &shards {
+            for &i in s {
+                assert!(i < n, "case {case}");
+                assert!(seen.insert(i), "case {case}: duplicate {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_codecs_roundtrip_within_tolerance() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(3000 + case);
+        let n = rng.range(1, 4000);
+        let vals = rand_vals(&mut rng, n, 1.0 + case as f32);
+        // Raw: exact.
+        assert_eq!(RawF32.decode(&RawF32.encode(&vals), n).unwrap(), vals);
+        // Fp16: relative error bounded for normal-range values.
+        let dec = Fp16.decode(&Fp16.encode(&vals), n).unwrap();
+        for (a, b) in vals.iter().zip(&dec) {
+            assert!((a - b).abs() <= a.abs() * 1e-3 + 1e-4, "case {case}: {a} vs {b}");
+        }
+        // QSGD: max error bounded by 2*linf/levels.
+        let q = Qsgd::new(128, case);
+        let dq = q.decode(&q.encode(&vals), n).unwrap();
+        let linf = vals.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (a, b) in vals.iter().zip(&dq) {
+            assert!((a - b).abs() <= 2.0 * linf / 127.0 + 1e-5, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_sparse_payload_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(4000 + case);
+        let dim = rng.range(1, 60_000);
+        let k = rng.range(0, dim.min(3000) + 1);
+        let mut idx = rng.sample_indices(dim, k);
+        idx.sort_unstable();
+        let sv = decentralize_rs::model::SparseVec {
+            dim,
+            values: rand_vals(&mut rng, k, 2.0),
+            indices: idx.iter().map(|&i| i as u32).collect(),
+        };
+        let enc = encode_sparse(&sv);
+        assert_eq!(decode_sparse(&enc, dim).unwrap(), sv, "case {case}");
+        // Index-only codec agrees too.
+        let ienc = encode_indices_best(&sv.indices, dim);
+        assert_eq!(decode_indices_best(&ienc, dim).unwrap(), sv.indices, "case {case}");
+    }
+}
+
+#[test]
+fn prop_envelope_roundtrip() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(5000 + case);
+        let env = Envelope {
+            src: rng.range(0, 2048),
+            dst: rng.range(0, 2048),
+            round: rng.next_u64() % 1_000_000,
+            kind: MsgKind::from_u8((rng.next_u64() % 7) as u8).unwrap(),
+            payload: (0..rng.range(0, 5000)).map(|_| rng.next_u32() as u8).collect(),
+        };
+        assert_eq!(decode_envelope(&encode_envelope(&env)).unwrap(), env, "case {case}");
+    }
+}
+
+fn random_json(rng: &mut Xoshiro256pp, depth: usize) -> Json {
+    match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_f64() < 0.5),
+        2 => Json::Num((rng.next_f64() * 2e6).round() / 8.0 - 1e5),
+        3 => Json::Str(
+            (0..rng.range(0, 12))
+                .map(|_| char::from_u32(0x20 + rng.next_u32() % 0x250).unwrap_or('x'))
+                .collect(),
+        ),
+        4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.range(0, 5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for case in 0..CASES * 3 {
+        let mut rng = Xoshiro256pp::new(6000 + case);
+        let v = random_json(&mut rng, 3);
+        let compact = parse(&v.dump()).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(compact, v, "case {case} (compact)");
+        let pretty = parse(&v.pretty()).unwrap();
+        assert_eq!(pretty, v, "case {case} (pretty)");
+    }
+}
+
+#[test]
+fn prop_topk_matches_naive_sort() {
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(7000 + case);
+        let n = rng.range(1, 2000);
+        let k = rng.range(1, n + 1);
+        let v = ParamVec::from_vec(rand_vals(&mut rng, n, 1.0));
+        let sv = v.topk(k);
+        assert_eq!(sv.nnz(), k, "case {case}");
+        // The selected set's min |value| >= the max |value| excluded.
+        let selected: std::collections::HashSet<u32> = sv.indices.iter().copied().collect();
+        let min_sel = sv.values.iter().map(|x| x.abs()).fold(f32::INFINITY, f32::min);
+        let max_excl = v
+            .as_slice()
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !selected.contains(&(*i as u32)))
+            .map(|(_, x)| x.abs())
+            .fold(0.0f32, f32::max);
+        assert!(min_sel >= max_excl, "case {case}: {min_sel} < {max_excl}");
+    }
+}
+
+#[test]
+fn prop_gossip_mixing_preserves_mean_and_contracts() {
+    // Full-sharing aggregation over a random connected topology is a
+    // doubly-stochastic mixing step: the global mean is invariant and the
+    // spread contracts after a few rounds.
+    for case in 0..20 {
+        let mut rng = Xoshiro256pp::new(8000 + case);
+        let n = rng.range(4, 16);
+        let mut d = rng.range(2, n.min(6) - 1);
+        if n * d % 2 == 1 {
+            d += 1;
+        }
+        if d >= n {
+            continue;
+        }
+        let g = graph::random_regular(n, d, &mut rng);
+        let w = graph::metropolis_hastings(&g);
+        let dim = 64;
+        let mut models: Vec<ParamVec> =
+            (0..n).map(|_| ParamVec::from_vec(rand_vals(&mut rng, dim, 1.0))).collect();
+        let mean0: Vec<f64> = (0..dim)
+            .map(|i| models.iter().map(|m| m.as_slice()[i] as f64).sum::<f64>() / n as f64)
+            .collect();
+        let spread = |models: &[ParamVec]| -> f64 {
+            models
+                .iter()
+                .map(|m| {
+                    m.as_slice()
+                        .iter()
+                        .zip(&mean0)
+                        .map(|(a, b)| (*a as f64 - b).powi(2))
+                        .sum::<f64>()
+                })
+                .sum()
+        };
+        let s0 = spread(&models);
+        let mut sharers: Vec<Box<dyn Sharing>> =
+            (0..n).map(|_| sharing::from_spec("full", dim, 0).unwrap()).collect();
+        for round in 0..8 {
+            let payloads: Vec<Vec<u8>> = models
+                .iter()
+                .zip(sharers.iter_mut())
+                .map(|(m, s)| s.outgoing(m, round).unwrap())
+                .collect();
+            let mut next = models.clone();
+            for (i, model) in next.iter_mut().enumerate() {
+                let received: Vec<Received> = g
+                    .neighbors(i)
+                    .map(|j| Received { src: j, weight: w.weight(i, j), payload: &payloads[j] })
+                    .collect();
+                sharers[i].aggregate(model, w.self_weight(i), &received).unwrap();
+            }
+            models = next;
+        }
+        // Mean preserved.
+        for i in 0..dim {
+            let mean: f64 =
+                models.iter().map(|m| m.as_slice()[i] as f64).sum::<f64>() / n as f64;
+            assert!((mean - mean0[i]).abs() < 1e-4, "case {case} coord {i}");
+        }
+        // Spread contracted.
+        let s1 = spread(&models);
+        assert!(s1 < s0 * 0.7, "case {case}: spread {s0} -> {s1}");
+    }
+}
+
+#[test]
+fn prop_secure_masks_cancel_in_weighted_sum() {
+    for case in 0..30 {
+        let mut rng = Xoshiro256pp::new(9000 + case);
+        let k = rng.range(2, 8);
+        let dim = rng.range(16, 512);
+        let senders: Vec<usize> = (0..k).collect();
+        // Random positive weights.
+        let weights: Vec<f32> = (0..k).map(|_| 0.05 + rng.next_f32()).collect();
+        let models: Vec<Vec<f32>> =
+            (0..k).map(|_| rand_vals(&mut rng, dim, 1.0)).collect();
+        let mut agg = vec![0.0f64; dim];
+        for (si, &s) in senders.iter().enumerate() {
+            let masker = secure::Masker::new(s, 42 + case, 4.0);
+            let mask = masker.mask_for(99, case, &senders, 1.0 / weights[si], dim);
+            for i in 0..dim {
+                agg[i] += weights[si] as f64 * (models[si][i] + mask[i]) as f64;
+            }
+        }
+        for i in 0..dim {
+            let want: f64 = (0..k)
+                .map(|s| weights[s] as f64 * models[s][i] as f64)
+                .sum();
+            assert!(
+                (agg[i] - want).abs() < 2e-2,
+                "case {case} coord {i}: {} vs {want}",
+                agg[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_f16_roundtrip_idempotent() {
+    use decentralize_rs::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(10_000 + case);
+        for _ in 0..200 {
+            let exp = rng.range(0, 8) as i32 - 4;
+            let x = rng.normal_f32(0.0, 10.0f32.powi(exp));
+            let once = f16_bits_to_f32(f32_to_f16_bits(x));
+            let twice = f16_bits_to_f32(f32_to_f16_bits(once));
+            assert_eq!(once.to_bits(), twice.to_bits(), "case {case}: x={x}");
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration: PJRT engine executing the real AOT artifacts.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests skip politely when
+//! missing so plain `cargo test` still passes in a fresh checkout.
+
+use decentralize_rs::rng::Xoshiro256pp;
+use decentralize_rs::runtime::EngineHandle;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn random_batch(
+    meta: &decentralize_rs::runtime::ModelMeta,
+    batch: usize,
+    seed: u64,
+) -> (Vec<f32>, Vec<i32>) {
+    let (h, w, c) = meta.input_shape;
+    let mut rng = Xoshiro256pp::new(seed);
+    let x: Vec<f32> = (0..batch * h * w * c).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.range(0, meta.num_classes) as i32).collect();
+    (x, y)
+}
+
+fn init_params(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.0, 0.05)).collect()
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::start(&dir, &["mlp"]).unwrap();
+    let meta = engine.manifest().model("mlp").unwrap().clone();
+    let (x, y) = random_batch(&meta, meta.train_batch, 1);
+    let mut params = init_params(meta.param_count, 2);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..30 {
+        let (p, loss) = engine
+            .train_step("mlp", params, x.clone(), y.clone(), 0.05)
+            .unwrap();
+        params = p;
+        first.get_or_insert(loss);
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first * 0.5,
+        "loss did not drop: {first} -> {last}"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn eval_counts_are_sane() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::start(&dir, &["cnn"]).unwrap();
+    let meta = engine.manifest().model("cnn").unwrap().clone();
+    let (x, y) = random_batch(&meta, meta.eval_batch, 3);
+    let params = init_params(meta.param_count, 4);
+    let (sum_loss, correct) = engine.eval_batch("cnn", params, x, y).unwrap();
+    assert!(sum_loss.is_finite() && sum_loss > 0.0);
+    assert!((0..=meta.eval_batch as i32).contains(&correct));
+    engine.shutdown();
+}
+
+#[test]
+fn aggregate_kernel_matches_cpu_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::start(&dir, &["cnn"]).unwrap();
+    let meta = engine.manifest().model("cnn").unwrap().clone();
+    let k = meta.agg_k;
+    let p = meta.param_count;
+    let mut rng = Xoshiro256pp::new(9);
+    let stack: Vec<f32> = (0..k * p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    // Random convex weights over the first 5 rows, zeros elsewhere.
+    let mut weights = vec![0.0f32; k];
+    let mut total = 0.0f32;
+    for w in weights.iter_mut().take(5) {
+        *w = rng.next_f32();
+        total += *w;
+    }
+    for w in weights.iter_mut().take(5) {
+        *w /= total;
+    }
+    let got = engine.aggregate("cnn", stack.clone(), weights.clone()).unwrap();
+    for i in 0..p {
+        let want: f32 = (0..k).map(|r| weights[r] * stack[r * p + i]).sum();
+        assert!((got[i] - want).abs() < 1e-4, "coord {i}: {} vs {want}", got[i]);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn sparsify_kernel_error_feedback_invariants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::start(&dir, &["celeba"]).unwrap();
+    let meta = engine.manifest().model("celeba").unwrap().clone();
+    let p = meta.param_count;
+    let mut rng = Xoshiro256pp::new(11);
+    let values: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let residual: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 0.2)).collect();
+    let (sent, new_r) = engine
+        .sparsify("celeba", values.clone(), residual.clone(), 0.8)
+        .unwrap();
+    for i in 0..p {
+        let corrected = values[i] + residual[i];
+        assert!((sent[i] + new_r[i] - corrected).abs() < 1e-5, "mass at {i}");
+        assert!(sent[i] * new_r[i] == 0.0, "disjoint support at {i}");
+        if corrected.abs() >= 0.8 {
+            assert_eq!(new_r[i], 0.0, "large value kept at {i}");
+        } else {
+            assert_eq!(sent[i], 0.0, "small value sent at {i}");
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn concurrent_callers_share_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::start(&dir, &["cnn"]).unwrap();
+    let meta = engine.manifest().model("cnn").unwrap().clone();
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let engine = engine.clone();
+            let meta = meta.clone();
+            s.spawn(move || {
+                let (x, y) = random_batch(&meta, meta.train_batch, t);
+                let mut params = init_params(meta.param_count, t + 10);
+                for _ in 0..5 {
+                    let (p, loss) = engine
+                        .train_step("cnn", params, x.clone(), y.clone(), 0.05)
+                        .unwrap();
+                    params = p;
+                    assert!(loss.is_finite());
+                }
+            });
+        }
+    });
+    engine.shutdown();
+}
+
+#[test]
+fn bad_arg_shapes_rejected_before_execution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = EngineHandle::start(&dir, &["mlp"]).unwrap();
+    let err = engine.train_step("mlp", vec![0.0; 3], vec![0.0; 3], vec![0], 0.1);
+    assert!(err.is_err());
+    let err2 = engine.eval_batch("nope", vec![], vec![], vec![]);
+    assert!(err2.is_err());
+    engine.shutdown();
+}
