@@ -1,5 +1,7 @@
 //! Figure 6 bench: scalability — N vs 4N nodes over the same total
-//! dataset, degree 5 vs 9, reduced scale. Full-resolution harness:
+//! dataset, degree 5 vs 9, reduced scale, plus the virtual-time
+//! scheduler sweep to 1024 nodes (the paper's 1000+-node emulation on a
+//! bounded worker pool). Full-resolution harness:
 //! `cargo run --release --example scalability`.
 
 mod fig_common;
@@ -40,5 +42,28 @@ fn main() {
         large_n,
         (r_l9.final_accuracy() - r_l5.final_accuracy()) * 100.0
     );
+
+    // Virtual-time scheduler sweep: wall-clock vs node count with a
+    // bounded worker pool (workers ~ cores, not threads = nodes). The
+    // thread-per-node runner cannot reach the top of this range.
+    println!("-- scheduler sweep: 128..1024 nodes, regular:6, 3 rounds --");
+    for &n in &[128usize, 256, 512, 1024] {
+        let mut cfg = bench_config(&format!("fig6/sched_{n}"));
+        cfg.runner = "scheduler".into();
+        cfg.nodes = n;
+        cfg.rounds = 3;
+        cfg.eval_every = 3;
+        cfg.topology = "regular:6".into();
+        cfg.train_total = n * 8; // one train batch per node per step
+        cfg.test_total = 64;
+        cfg.local_steps = 1;
+        let r = run_variant(&cfg, &engine);
+        println!(
+            "scale {n:>5} nodes: wall {:>7.2}s  emu {:>8.1}s  acc {:.4}",
+            r.wall_s,
+            r.final_emu_time(),
+            r.final_accuracy()
+        );
+    }
     println!("== fig6 done ==");
 }

@@ -29,7 +29,13 @@ pub fn engine_or_skip(models: &[&str]) -> Option<EngineHandle> {
         println!("(artifacts missing — run `make artifacts`; bench skipped)");
         return None;
     }
-    Some(EngineHandle::start(&dir, models).expect("engine start"))
+    match EngineHandle::start(&dir, models) {
+        Ok(engine) => Some(engine),
+        Err(e) => {
+            println!("(PJRT engine unavailable: {e:#}; bench skipped)");
+            None
+        }
+    }
 }
 
 pub fn run_variant(cfg: &ExperimentConfig, engine: &EngineHandle) -> RunResult {

@@ -15,7 +15,11 @@
 //!
 //! [`shaper::NetworkModel`] adds a deterministic WAN cost model (latency +
 //! bandwidth) so emulated runs can report wall-clock behavior
-//! (paper Fig 3b) without 128 physical cores.
+//! (paper Fig 3b) without 128 physical cores. The thread-per-node path
+//! charges it per-round after the fact ([`shaper::EmuClock`]); the
+//! virtual-time scheduler ([`crate::scheduler`]) instead uses it to
+//! timestamp individual message *deliveries*, so emulated time reflects
+//! actual arrival order.
 
 pub mod counters;
 pub mod inproc;

@@ -17,6 +17,13 @@
 //! which the coordinator computes as a max over the graph. This is what
 //! reproduces Fig 3b's "fully-connected takes ~3x longer for the same
 //! number of rounds" on one machine.
+//!
+//! The per-round accounting above is the *threaded* path's model. The
+//! virtual-time scheduler ([`crate::scheduler`]) applies the same
+//! parameters per **message**: sends serialize on the sender's uplink
+//! (`bytes / bandwidth_bps`, queuing behind earlier sends) and arrive
+//! one `latency_s` later, so delivery order — not just round cost — is
+//! network-faithful.
 
 /// Link/host parameters for the emulated network.
 #[derive(Debug, Clone, Copy, PartialEq)]

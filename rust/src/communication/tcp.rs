@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -109,6 +110,32 @@ impl TcpTransport {
     }
 }
 
+/// Dial `addr` with a bounded exponential-backoff retry loop. Peers in a
+/// multi-process deployment start in arbitrary order, so first sends may
+/// race the remote listener coming up; retrying here replaces the fixed
+/// startup sleep the CLI used to need.
+fn connect_with_retry(addr: SocketAddr, total_wait: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + total_wait;
+    let mut delay = Duration::from_millis(20);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(e).with_context(|| {
+                        format!("connecting to {addr} (gave up after ~{total_wait:?})")
+                    });
+                }
+                // Sleep the backoff, truncated so the budget's final
+                // attempt still happens right at the deadline.
+                std::thread::sleep(delay.min(deadline - now));
+                delay = (delay * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
 fn reader_loop(mut stream: TcpStream, inbox: &Inbox, counters: &Counters) -> Result<()> {
     loop {
         let mut header = [0u8; WIRE_HEADER_BYTES];
@@ -160,9 +187,8 @@ impl Transport for Arc<TcpTransport> {
         let stream = match outbound.entry(env.dst) {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
             std::collections::hash_map::Entry::Vacant(e) => {
-                let s = TcpStream::connect(self.peers[env.dst]).with_context(|| {
-                    format!("connecting to node {} at {}", env.dst, self.peers[env.dst])
-                })?;
+                let s = connect_with_retry(self.peers[env.dst], Duration::from_secs(10))
+                    .with_context(|| format!("connecting to node {}", env.dst))?;
                 s.set_nodelay(true).ok();
                 e.insert(s)
             }
@@ -276,6 +302,45 @@ mod tests {
         for n in &nodes {
             n.shutdown();
         }
+    }
+
+    #[test]
+    fn send_retries_until_peer_listener_binds() {
+        // Reserve two ports, but bring node 1's listener up LATE: the
+        // first send must retry instead of failing (replaces the fixed
+        // 500 ms startup sleep in `decentra node`).
+        let raw: Vec<(TcpListener, SocketAddr)> = (0..2)
+            .map(|_| {
+                let l = TcpListener::bind(localhost()).unwrap();
+                let a = l.local_addr().unwrap();
+                (l, a)
+            })
+            .collect();
+        let table: Vec<SocketAddr> = raw.iter().map(|(_, a)| *a).collect();
+        drop(raw);
+        let n0 = TcpTransport::bind(0, table[0], table.clone()).unwrap();
+        let late_table = table.clone();
+        let late = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(150));
+            TcpTransport::bind(1, late_table[1], late_table.clone()).unwrap()
+        });
+        n0.send(env(0, 1, 9, 32)).unwrap(); // retries internally
+        let n1 = late.join().unwrap();
+        let got = n1.recv().unwrap().unwrap();
+        assert_eq!(got.round, 9);
+        n0.shutdown();
+        n1.shutdown();
+    }
+
+    #[test]
+    fn connect_gives_up_with_clear_error() {
+        // A port nobody ever listens on: bounded retry, then error.
+        let dead = {
+            let l = TcpListener::bind(localhost()).unwrap();
+            l.local_addr().unwrap()
+        };
+        let err = connect_with_retry(dead, Duration::from_millis(120)).unwrap_err();
+        assert!(format!("{err:#}").contains("gave up"), "{err:#}");
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub struct ExperimentConfig {
     pub local_steps: u32,
     /// Network model for the emulated clock: lan | wan | none.
     pub network: String,
+    /// In-process runner: `scheduler` (discrete-event virtual time on a
+    /// bounded worker pool, the default) | `threads` (one thread/node).
+    pub runner: String,
+    /// Worker threads for the scheduler runner (0 = number of cores).
+    pub workers: usize,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -87,6 +92,8 @@ impl Default for ExperimentConfig {
             lr: 0.05,
             local_steps: 2,
             network: "lan".into(),
+            runner: "scheduler".into(),
+            workers: 0,
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -102,7 +109,8 @@ impl ExperimentConfig {
             "name", "nodes", "rounds", "eval_every", "seed", "model",
             "dataset", "image", "train_total", "test_total", "noise",
             "partition", "topology", "dynamic", "sharing", "secure", "mask_scale", "churn", "lr",
-            "local_steps", "network", "artifacts_dir", "results_dir",
+            "local_steps", "network", "runner", "workers", "artifacts_dir",
+            "results_dir",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -137,6 +145,8 @@ impl ExperimentConfig {
             lr: f("lr", d.lr as f64) as f32,
             local_steps: n("local_steps", d.local_steps as usize) as u32,
             network: s("network", &d.network),
+            runner: s("runner", &d.runner),
+            workers: n("workers", d.workers),
             artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(s("results_dir", "results")),
         };
@@ -174,6 +184,8 @@ impl ExperimentConfig {
             ("lr", Json::num(self.lr as f64)),
             ("local_steps", Json::num(self.local_steps as f64)),
             ("network", Json::str(self.network.clone())),
+            ("runner", Json::str(self.runner.clone())),
+            ("workers", Json::num(self.workers as f64)),
             ("artifacts_dir", Json::str(self.artifacts_dir.display().to_string())),
             ("results_dir", Json::str(self.results_dir.display().to_string())),
         ])
@@ -215,6 +227,15 @@ impl ExperimentConfig {
         }
         if !["lan", "wan", "none"].contains(&self.network.as_str()) {
             bail!("unknown network model {:?}", self.network);
+        }
+        // The coordinator owns the runner-name mapping; delegate so a new
+        // runner only has to be registered in one place.
+        crate::coordinator::runner_from_spec(&self.runner, self.workers).map(|_| ())?;
+        if self.secure && self.dynamic {
+            bail!("secure aggregation supports static topologies only");
+        }
+        if self.secure && self.sharing != "full" {
+            bail!("secure aggregation requires full sharing (masks are dense)");
         }
         // Spec strings are validated by their own parsers; do it eagerly
         // so config errors surface before any work happens.
@@ -275,6 +296,17 @@ mod tests {
         cfg = ExperimentConfig::default();
         cfg.model = "celeba".into();
         assert!(cfg.validate().is_err()); // dataset mismatch
+        cfg = ExperimentConfig::default();
+        cfg.runner = "fibers".into();
+        assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.secure = true;
+        cfg.dynamic = true;
+        assert!(cfg.validate().is_err()); // secure needs a static graph
+        cfg = ExperimentConfig::default();
+        cfg.secure = true;
+        cfg.sharing = "topk:0.1".into();
+        assert!(cfg.validate().is_err()); // secure needs dense sharing
     }
 
     #[test]

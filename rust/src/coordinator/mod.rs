@@ -2,9 +2,18 @@
 //! the dataset partition / topology / nodes, runs the rounds, collects
 //! per-node logs, and aggregates the series the figures plot.
 //!
-//! In-process mode emulates one-node-one-process as one-node-one-thread
-//! over the [`InprocHub`]; the TCP transport drops in for real
-//! multi-process deployments (`decentra node` subcommand).
+//! In-process execution goes through a [`Runner`]:
+//!
+//! * [`SchedulerRunner`] (default) — the discrete-event virtual-time
+//!   scheduler ([`crate::scheduler`]): node logic runs as resumable
+//!   state machines on a bounded worker pool (`workers ≈ cores`), so
+//!   1000+ node emulations fit on one machine.
+//! * [`ThreadedRunner`] — the legacy one-node-one-thread emulation over
+//!   the [`InprocHub`]; also the semantics reference for the scheduler
+//!   (the equivalence test pins them to bit-identical results).
+//!
+//! The TCP transport drops in for real multi-process deployments
+//! (`decentra node` subcommand), which keeps the thread-per-node loop.
 
 use std::sync::Arc;
 
@@ -14,12 +23,13 @@ use crate::communication::inproc::InprocHub;
 use crate::communication::shaper::NetworkModel;
 use crate::config::ExperimentConfig;
 use crate::dataset::{generate, DataLoader, Dataset, Partition, SyntheticSpec};
-use crate::graph::{from_spec, metropolis_hastings, Graph};
+use crate::graph::{from_spec, metropolis_hastings, Graph, MixingWeights};
 use crate::metrics::{aggregate, NodeLog, SeriesPoint};
 use crate::model::ParamVec;
 use crate::node::{DlNode, PeerSampler, SecureDlNode, TopologyView};
 use crate::rng::{mix_seed, Xoshiro256pp};
-use crate::runtime::EngineHandle;
+use crate::runtime::{EngineHandle, ModelMeta};
+use crate::scheduler::{DlNodeSm, SamplerSm, Scheduler, SecureDlNodeSm};
 use crate::secure::Masker;
 use crate::sharing;
 use crate::training::Trainer;
@@ -80,11 +90,25 @@ pub fn build_dataset(cfg: &ExperimentConfig, eval_batch: usize) -> (Dataset, Dat
     generate(&spec)
 }
 
-/// Run a full experiment in-process. The engine must already host the
-/// config's model.
-pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunResult> {
+/// Everything both runners need, prepared once per experiment:
+/// dataset + shards, common init, static topology, calibrated times.
+pub struct RunSetup {
+    pub meta: ModelMeta,
+    pub train: Dataset,
+    pub test: Arc<Dataset>,
+    pub shards: Vec<Vec<usize>>,
+    pub init: Vec<f32>,
+    pub static_graph: Option<(Arc<Graph>, Arc<MixingWeights>)>,
+    pub network: Option<NetworkModel>,
+    /// Calibrated seconds per local training step (for the emu clock).
+    pub step_time_s: f64,
+    /// Eval time estimate per full test pass (emu clock).
+    pub eval_time_s: f64,
+}
+
+/// Validate the config and prepare the shared run state.
+pub fn prepare(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunSetup> {
     cfg.validate()?;
-    let wall = Timer::start();
     let meta = engine.manifest().model(&cfg.model)?.clone();
     if engine.manifest().image != cfg.image {
         bail!(
@@ -106,19 +130,15 @@ pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<R
 
     // Topology.
     let mut topo_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x7090]));
-    let static_graph: Option<(Arc<Graph>, Arc<crate::graph::MixingWeights>)> = if cfg.dynamic {
+    let static_graph: Option<(Arc<Graph>, Arc<MixingWeights>)> = if cfg.dynamic {
         None
     } else {
         let g = from_spec(&cfg.topology, cfg.nodes, &mut topo_rng)?;
         let w = metropolis_hastings(&g);
         Some((Arc::new(g), Arc::new(w)))
     };
-    if cfg.secure && cfg.dynamic {
-        bail!("secure aggregation supports static topologies only");
-    }
-    if cfg.secure && cfg.sharing != "full" {
-        bail!("secure aggregation requires full sharing (masks are dense)");
-    }
+    // (secure+dynamic / secure+sparse combinations are rejected by
+    // cfg.validate() above.)
 
     // Emulated-clock calibration: one uncontended training step.
     let step_time_s = calibrate_step(engine, cfg, &meta, &train)?;
@@ -129,104 +149,48 @@ pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<R
         _ => None,
     };
 
-    // Transport hub: nodes + (dynamic ? sampler : 0).
-    let ranks = cfg.nodes + usize::from(cfg.dynamic);
-    let hub = InprocHub::new(ranks);
+    Ok(RunSetup {
+        meta,
+        train,
+        test,
+        shards,
+        init,
+        static_graph,
+        network,
+        step_time_s,
+        eval_time_s,
+    })
+}
 
-    // Spawn everything.
-    let mut logs: Vec<NodeLog> = Vec::with_capacity(cfg.nodes);
-    std::thread::scope(|scope| -> Result<()> {
-        let sampler_handle = if cfg.dynamic {
-            let sampler = PeerSampler {
-                rank: cfg.nodes,
-                nodes: cfg.nodes,
-                rounds: cfg.rounds,
-                spec: cfg.topology.clone(),
-                seed: cfg.seed,
-                churn: cfg.churn,
-                transport: Box::new(hub.endpoint(cfg.nodes)),
-            };
-            Some(scope.spawn(move || sampler.run()))
-        } else {
-            None
-        };
+/// Strategy for executing the in-process node fleet.
+pub trait Runner {
+    fn name(&self) -> &'static str;
 
-        let mut handles = Vec::with_capacity(cfg.nodes);
-        for id in 0..cfg.nodes {
-            let shard = train.subset(&shards[id]);
-            let loader = DataLoader::new(
-                shard,
-                meta.train_batch,
-                mix_seed(&[cfg.seed, 0xDA7A, id as u64]),
-            );
-            let trainer = Trainer::new(
-                engine.clone(),
-                &cfg.model,
-                loader,
-                cfg.lr,
-                cfg.local_steps,
-            )?;
-            let transport = Box::new(hub.endpoint(id));
-            let test = Arc::clone(&test);
-            let init = init.clone();
-            if cfg.secure {
-                let (g, w) = static_graph.as_ref().unwrap();
-                let node = SecureDlNode {
-                    id,
-                    rounds: cfg.rounds,
-                    eval_every: cfg.eval_every,
-                    transport,
-                    trainer,
-                    params: init,
-                    graph: Arc::clone(g),
-                    weights: Arc::clone(w),
-                    masker: Masker::new(id, cfg.seed, cfg.mask_scale),
-                    test,
-                    network,
-                    step_time_s,
-                    eval_time_s,
-                };
-                handles.push(scope.spawn(move || node.run()));
-            } else {
-                let topology = match &static_graph {
-                    Some((_g, w)) => TopologyView::Static {
-                        self_weight: w.self_weight(id),
-                        neighbors: w.neighbor_weights(id).collect(),
-                    },
-                    None => TopologyView::Dynamic { sampler_rank: cfg.nodes },
-                };
-                let mut sharing_impl =
-                    sharing::from_spec(&cfg.sharing, meta.param_count, mix_seed(&[cfg.seed, id as u64]))?;
-                sharing_impl.set_init(&ParamVec::from_vec(init.clone()));
-                let node = DlNode {
-                    id,
-                    rounds: cfg.rounds,
-                    eval_every: cfg.eval_every,
-                    transport,
-                    trainer,
-                    sharing: sharing_impl,
-                    params: init,
-                    topology,
-                    test,
-                    network,
-                    step_time_s,
-                    eval_time_s,
-                };
-                handles.push(scope.spawn(move || node.run()));
-            }
-        }
-        for h in handles {
-            let log = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
-            logs.push(log);
-        }
-        if let Some(sh) = sampler_handle {
-            sh.join()
-                .map_err(|_| anyhow::anyhow!("sampler thread panicked"))??;
-        }
-        Ok(())
-    })?;
-    hub.shutdown();
+    /// Run every node to completion and return their logs (any order).
+    fn run(
+        &self,
+        cfg: &ExperimentConfig,
+        engine: &EngineHandle,
+        setup: &RunSetup,
+    ) -> Result<Vec<NodeLog>>;
+}
 
+/// Resolve a runner spec (`scheduler` | `threads`).
+pub fn runner_from_spec(spec: &str, workers: usize) -> Result<Box<dyn Runner>> {
+    match spec {
+        "scheduler" => Ok(Box::new(SchedulerRunner { workers })),
+        "threads" => Ok(Box::new(ThreadedRunner)),
+        other => bail!("unknown runner {other:?} (expected scheduler | threads)"),
+    }
+}
+
+/// Run a full experiment in-process. The engine must already host the
+/// config's model. Dispatches to the runner named by `cfg.runner`.
+pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunResult> {
+    let wall = Timer::start();
+    let setup = prepare(cfg, engine)?;
+    let runner = runner_from_spec(&cfg.runner, cfg.workers)?;
+    let mut logs = runner.run(cfg, engine, &setup)?;
     logs.sort_by_key(|l| l.node);
     let series = aggregate(&logs);
     Ok(RunResult {
@@ -235,6 +199,207 @@ pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<R
         series,
         wall_s: wall.elapsed().as_secs_f64(),
     })
+}
+
+fn build_trainer(
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    setup: &RunSetup,
+    id: usize,
+) -> Result<Trainer> {
+    let shard = setup.train.subset(&setup.shards[id]);
+    let loader = DataLoader::new(
+        shard,
+        setup.meta.train_batch,
+        mix_seed(&[cfg.seed, 0xDA7A, id as u64]),
+    );
+    Trainer::new(engine.clone(), &cfg.model, loader, cfg.lr, cfg.local_steps)
+}
+
+fn build_sharing(
+    cfg: &ExperimentConfig,
+    setup: &RunSetup,
+    id: usize,
+) -> Result<Box<dyn sharing::Sharing>> {
+    let mut s = sharing::from_spec(
+        &cfg.sharing,
+        setup.meta.param_count,
+        mix_seed(&[cfg.seed, id as u64]),
+    )?;
+    s.set_init(&ParamVec::from_vec(setup.init.clone()));
+    Ok(s)
+}
+
+fn topology_view(cfg: &ExperimentConfig, setup: &RunSetup, id: usize) -> TopologyView {
+    match &setup.static_graph {
+        Some((_g, w)) => TopologyView::Static {
+            self_weight: w.self_weight(id),
+            neighbors: w.neighbor_weights(id).collect(),
+        },
+        None => TopologyView::Dynamic { sampler_rank: cfg.nodes },
+    }
+}
+
+/// Discrete-event virtual-time execution: all nodes as state machines on
+/// a bounded worker pool. `workers == 0` means "number of cores".
+pub struct SchedulerRunner {
+    pub workers: usize,
+}
+
+impl Runner for SchedulerRunner {
+    fn name(&self) -> &'static str {
+        "scheduler"
+    }
+
+    fn run(
+        &self,
+        cfg: &ExperimentConfig,
+        engine: &EngineHandle,
+        setup: &RunSetup,
+    ) -> Result<Vec<NodeLog>> {
+        let workers = if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        };
+        let mut sched = Scheduler::new(setup.network, workers);
+        for id in 0..cfg.nodes {
+            let trainer = build_trainer(cfg, engine, setup, id)?;
+            if cfg.secure {
+                let (g, w) = setup.static_graph.as_ref().unwrap();
+                sched.add_node(Box::new(SecureDlNodeSm::new(
+                    id,
+                    cfg.rounds,
+                    cfg.eval_every,
+                    trainer,
+                    setup.init.clone(),
+                    Arc::clone(g),
+                    Arc::clone(w),
+                    Masker::new(id, cfg.seed, cfg.mask_scale),
+                    Arc::clone(&setup.test),
+                    setup.step_time_s,
+                    setup.eval_time_s,
+                )));
+            } else {
+                sched.add_node(Box::new(DlNodeSm::new(
+                    id,
+                    cfg.rounds,
+                    cfg.eval_every,
+                    trainer,
+                    build_sharing(cfg, setup, id)?,
+                    setup.init.clone(),
+                    topology_view(cfg, setup, id),
+                    Arc::clone(&setup.test),
+                    setup.step_time_s,
+                    setup.eval_time_s,
+                )));
+            }
+        }
+        if cfg.dynamic {
+            sched.add_node(Box::new(SamplerSm::new(
+                cfg.nodes,
+                cfg.nodes,
+                cfg.rounds,
+                cfg.topology.clone(),
+                cfg.seed,
+                cfg.churn,
+            )));
+        }
+        sched.run()?;
+        Ok(sched.take_logs())
+    }
+}
+
+/// Legacy one-node-one-thread emulation over the in-process hub.
+pub struct ThreadedRunner;
+
+impl Runner for ThreadedRunner {
+    fn name(&self) -> &'static str {
+        "threads"
+    }
+
+    fn run(
+        &self,
+        cfg: &ExperimentConfig,
+        engine: &EngineHandle,
+        setup: &RunSetup,
+    ) -> Result<Vec<NodeLog>> {
+        // Transport hub: nodes + (dynamic ? sampler : 0).
+        let ranks = cfg.nodes + usize::from(cfg.dynamic);
+        let hub = InprocHub::new(ranks);
+
+        let mut logs: Vec<NodeLog> = Vec::with_capacity(cfg.nodes);
+        std::thread::scope(|scope| -> Result<()> {
+            let sampler_handle = if cfg.dynamic {
+                let sampler = PeerSampler {
+                    rank: cfg.nodes,
+                    nodes: cfg.nodes,
+                    rounds: cfg.rounds,
+                    spec: cfg.topology.clone(),
+                    seed: cfg.seed,
+                    churn: cfg.churn,
+                    transport: Box::new(hub.endpoint(cfg.nodes)),
+                };
+                Some(scope.spawn(move || sampler.run()))
+            } else {
+                None
+            };
+
+            let mut handles = Vec::with_capacity(cfg.nodes);
+            for id in 0..cfg.nodes {
+                let trainer = build_trainer(cfg, engine, setup, id)?;
+                let transport = Box::new(hub.endpoint(id));
+                let test = Arc::clone(&setup.test);
+                let init = setup.init.clone();
+                if cfg.secure {
+                    let (g, w) = setup.static_graph.as_ref().unwrap();
+                    let node = SecureDlNode {
+                        id,
+                        rounds: cfg.rounds,
+                        eval_every: cfg.eval_every,
+                        transport,
+                        trainer,
+                        params: init,
+                        graph: Arc::clone(g),
+                        weights: Arc::clone(w),
+                        masker: Masker::new(id, cfg.seed, cfg.mask_scale),
+                        test,
+                        network: setup.network,
+                        step_time_s: setup.step_time_s,
+                        eval_time_s: setup.eval_time_s,
+                    };
+                    handles.push(scope.spawn(move || node.run()));
+                } else {
+                    let node = DlNode {
+                        id,
+                        rounds: cfg.rounds,
+                        eval_every: cfg.eval_every,
+                        transport,
+                        trainer,
+                        sharing: build_sharing(cfg, setup, id)?,
+                        params: init,
+                        topology: topology_view(cfg, setup, id),
+                        test,
+                        network: setup.network,
+                        step_time_s: setup.step_time_s,
+                        eval_time_s: setup.eval_time_s,
+                    };
+                    handles.push(scope.spawn(move || node.run()));
+                }
+            }
+            for h in handles {
+                let log = h.join().map_err(|_| anyhow::anyhow!("node thread panicked"))??;
+                logs.push(log);
+            }
+            if let Some(sh) = sampler_handle {
+                sh.join()
+                    .map_err(|_| anyhow::anyhow!("sampler thread panicked"))??;
+            }
+            Ok(())
+        })?;
+        hub.shutdown();
+        Ok(logs)
+    }
 }
 
 /// Time one uncontended local step for the emulated clock.
@@ -249,7 +414,8 @@ fn calibrate_step(
     let params = meta.load_init()?;
     let batch = loader.next_batch();
     // Warm-up (first call may hit lazy allocation), then measure.
-    let (p, _) = engine.train_step(&cfg.model, params, batch.features.clone(), batch.labels.clone(), cfg.lr)?;
+    let (p, _) =
+        engine.train_step(&cfg.model, params, batch.features.clone(), batch.labels.clone(), cfg.lr)?;
     let t = Timer::start();
     let (_, _) = engine.train_step(&cfg.model, p, batch.features, batch.labels, cfg.lr)?;
     Ok(t.elapsed().as_secs_f64())

@@ -31,6 +31,7 @@ pub mod node;
 pub mod model;
 pub mod rng;
 pub mod runtime;
+pub mod scheduler;
 pub mod secure;
 pub mod sharing;
 pub mod training;

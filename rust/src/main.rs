@@ -49,6 +49,16 @@ fn main() {
     }
 }
 
+/// Value-taking option row for the usage table.
+fn opt(name: &'static str, help: &'static str, default: Option<&'static str>) -> OptSpec {
+    OptSpec { name, help, default, is_flag: false }
+}
+
+/// Boolean flag row for the usage table.
+fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None, is_flag: true }
+}
+
 fn print_usage() {
     println!(
         "{}",
@@ -56,19 +66,24 @@ fn print_usage() {
             "decentra",
             "decentralized learning framework (DecentralizePy reproduction)",
             &[
-                OptSpec { name: "config", help: "experiment config JSON (run/node)", default: None, is_flag: false },
-                OptSpec { name: "nodes", help: "override node count", default: None, is_flag: false },
-                OptSpec { name: "rounds", help: "override round count", default: None, is_flag: false },
-                OptSpec { name: "topology", help: "override topology spec", default: None, is_flag: false },
-                OptSpec { name: "sharing", help: "override sharing spec", default: None, is_flag: false },
-                OptSpec { name: "seed", help: "override seed", default: None, is_flag: false },
-                OptSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts"), is_flag: false },
-                OptSpec { name: "save", help: "persist logs under results/", default: None, is_flag: true },
-                OptSpec { name: "rank", help: "this node's rank (node mode)", default: None, is_flag: false },
-                OptSpec { name: "peers", help: "peers file: one host:port per rank (node mode)", default: None, is_flag: false },
-                OptSpec { name: "out", help: "output file (graph mode)", default: None, is_flag: false },
-                OptSpec { name: "info", help: "print graph statistics (graph mode)", default: None, is_flag: true },
-                OptSpec { name: "dir", help: "results dir (report mode)", default: None, is_flag: false },
+                opt("config", "experiment config JSON (run/node)", None),
+                opt("nodes", "override node count", None),
+                opt("rounds", "override round count", None),
+                opt("topology", "override topology spec", None),
+                opt("sharing", "override sharing spec", None),
+                opt("seed", "override seed", None),
+                flag("dynamic", "re-sample the topology every round (peer sampler)"),
+                flag("secure", "wrap sharing in pairwise-mask secure aggregation"),
+                opt("runner", "in-process runner: scheduler | threads (run mode)", Some("scheduler")),
+                opt("workers", "scheduler worker threads (0 = cores)", Some("0")),
+                opt("participation", "client participation fraction (fl mode)", Some("0.5")),
+                opt("artifacts", "artifacts directory", Some("artifacts")),
+                flag("save", "persist logs under results/"),
+                opt("rank", "this node's rank (node mode)", None),
+                opt("peers", "peers file: one host:port per rank (node mode)", None),
+                opt("out", "output file (graph mode)", None),
+                flag("info", "print graph statistics (graph mode)"),
+                opt("dir", "results dir (report mode)", None),
             ],
         )
     );
@@ -98,6 +113,12 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if args.flag("secure") {
         cfg.secure = true;
     }
+    if let Some(r) = args.get("runner") {
+        cfg.runner = r.to_string();
+    }
+    if let Some(w) = args.get("workers") {
+        cfg.workers = w.parse().context("--workers")?;
+    }
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(a);
     }
@@ -115,9 +136,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    log_info!("run", "experiment {:?}: {} nodes, {} rounds, topology {}, sharing {}{}",
+    log_info!("run", "experiment {:?}: {} nodes, {} rounds, topology {}, sharing {}{} [{} runner]",
         cfg.name, cfg.nodes, cfg.rounds, cfg.topology, cfg.sharing,
-        if cfg.secure { " + secure-agg" } else { "" });
+        if cfg.secure { " + secure-agg" } else { "" }, cfg.runner);
     let engine = EngineHandle::start(&cfg.artifacts_dir, &[cfg.model.as_str()])?;
     let result = run_experiment(&cfg, &engine)?;
     print!("{}", render_series(&cfg.name, &result.series));
@@ -179,8 +200,8 @@ fn cmd_node(args: &Args) -> Result<()> {
 
     let transport = TcpTransport::bind(rank, peers[rank], peers.clone())?;
     log_info!("node", "rank {rank} listening on {}", transport.local_addr());
-    // Give peers a moment to come up before the first sends.
-    std::thread::sleep(std::time::Duration::from_millis(500));
+    // No startup barrier needed: first sends retry with backoff until
+    // the remote listener is up (see TcpTransport::connect_with_retry).
 
     let loader = DataLoader::new(
         train.subset(&shards[rank]),

@@ -20,3 +20,8 @@ pub use gossip_sampler::{simulate_rounds as gossip_simulate, Descriptor, GossipV
 pub use fl::{FlClient, FlServer, ParameterServer};
 pub use peer_sampler::PeerSampler;
 pub use secure_dl::SecureDlNode;
+
+// Round-logic helpers shared with the virtual-time scheduler's state
+// machines (crate::scheduler).
+pub(crate) use peer_sampler::draw_round;
+pub(crate) use secure_dl::{key_agreement_envelopes, secure_round_envelopes};

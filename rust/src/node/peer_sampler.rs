@@ -57,33 +57,11 @@ impl PeerSampler {
                     Control::Stop => return Ok(()),
                 }
             }
-            // Availability draw for this round.
-            let mut rng = Xoshiro256pp::new(mix_seed(&[self.seed, 0x70_70, round]));
-            let mut active: Vec<usize> = (0..self.nodes)
-                .filter(|_| self.churn <= 0.0 || rng.next_f64() >= self.churn)
-                .collect();
-            // A d-regular draw needs |active| * d even and d < |active|;
-            // mark one more node unavailable when the parity is wrong
-            // (random victim to avoid bias).
-            if let Some(d) = regular_degree(&self.spec) {
-                if active.len() > d && (active.len() * d) % 2 == 1 {
-                    let victim = rng.range(0, active.len());
-                    active.remove(victim);
-                }
-            }
-            // Fresh topology + weights over the active set (global node
-            // ids are relabeled onto 0..active.len() for the generator).
-            let assignments = self.sample_round(&active, &mut rng)?;
-            for node in 0..self.nodes {
-                let assign = assignments
-                    .get(&node)
-                    .cloned()
-                    .unwrap_or(NeighborAssignment {
-                        round,
-                        self_weight: 1.0,
-                        neighbors: Vec::new(),
-                    });
-                let assign = NeighborAssignment { round, ..assign };
+            for (node, assign) in
+                draw_round(&self.spec, self.seed, self.churn, self.nodes, round)?
+                    .into_iter()
+                    .enumerate()
+            {
                 self.transport.send(Envelope {
                     src: self.rank,
                     dst: node,
@@ -95,44 +73,85 @@ impl PeerSampler {
         }
         Ok(())
     }
+}
 
-    /// Draw the round's topology over `active` and compute per-node rows.
-    fn sample_round(
-        &self,
-        active: &[usize],
-        rng: &mut Xoshiro256pp,
-    ) -> Result<HashMap<usize, NeighborAssignment>> {
-        let m = active.len();
-        let mut out = HashMap::new();
-        if m < 2 {
-            return Ok(out);
+/// Draw one round's topology for every node: availability churn, parity
+/// fix-up for d-regular specs, fresh graph + Metropolis-Hastings weights
+/// over the active set. Deterministic in `(seed, round)`; shared by the
+/// threaded [`PeerSampler`] and the scheduler's `SamplerSm`. Inactive
+/// nodes get an empty assignment (train locally, skip the exchange).
+pub(crate) fn draw_round(
+    spec: &str,
+    seed: u64,
+    churn: f64,
+    nodes: usize,
+    round: u64,
+) -> Result<Vec<NeighborAssignment>> {
+    // Availability draw for this round.
+    let mut rng = Xoshiro256pp::new(mix_seed(&[seed, 0x70_70, round]));
+    let mut active: Vec<usize> = (0..nodes)
+        .filter(|_| churn <= 0.0 || rng.next_f64() >= churn)
+        .collect();
+    // A d-regular draw needs |active| * d even and d < |active|; mark one
+    // more node unavailable when the parity is wrong (random victim to
+    // avoid bias).
+    if let Some(d) = regular_degree(spec) {
+        if active.len() > d && (active.len() * d) % 2 == 1 {
+            let victim = rng.range(0, active.len());
+            active.remove(victim);
         }
-        // Degrade the spec gracefully when the active set is too small
-        // for it (e.g. regular:5 with 4 actives -> fully connected).
-        let g = if matches!(regular_degree(&self.spec), Some(d) if d >= m) {
-            crate::graph::fully_connected(m)
-        } else {
-            match from_spec(&self.spec, m, rng) {
-                Ok(g) => g,
-                Err(_) => crate::graph::fully_connected(m),
-            }
-        };
-        let w = metropolis_hastings(&g);
-        for (local, &global) in active.iter().enumerate() {
-            out.insert(
-                global,
-                NeighborAssignment {
-                    round: 0, // caller overwrites
-                    self_weight: w.self_weight(local),
-                    neighbors: w
-                        .neighbor_weights(local)
-                        .map(|(n, wt)| (active[n], wt))
-                        .collect(),
-                },
-            );
-        }
-        Ok(out)
     }
+    // Fresh topology + weights over the active set (global node ids are
+    // relabeled onto 0..active.len() for the generator).
+    let assignments = sample_over_active(spec, &active, &mut rng)?;
+    Ok((0..nodes)
+        .map(|node| {
+            let a = assignments.get(&node).cloned().unwrap_or(NeighborAssignment {
+                round,
+                self_weight: 1.0,
+                neighbors: Vec::new(),
+            });
+            NeighborAssignment { round, ..a }
+        })
+        .collect())
+}
+
+/// Draw the round's topology over `active` and compute per-node rows.
+fn sample_over_active(
+    spec: &str,
+    active: &[usize],
+    rng: &mut Xoshiro256pp,
+) -> Result<HashMap<usize, NeighborAssignment>> {
+    let m = active.len();
+    let mut out = HashMap::new();
+    if m < 2 {
+        return Ok(out);
+    }
+    // Degrade the spec gracefully when the active set is too small for
+    // it (e.g. regular:5 with 4 actives -> fully connected).
+    let g = if matches!(regular_degree(spec), Some(d) if d >= m) {
+        crate::graph::fully_connected(m)
+    } else {
+        match from_spec(spec, m, rng) {
+            Ok(g) => g,
+            Err(_) => crate::graph::fully_connected(m),
+        }
+    };
+    let w = metropolis_hastings(&g);
+    for (local, &global) in active.iter().enumerate() {
+        out.insert(
+            global,
+            NeighborAssignment {
+                round: 0, // caller overwrites
+                self_weight: w.self_weight(local),
+                neighbors: w
+                    .neighbor_weights(local)
+                    .map(|(n, wt)| (active[n], wt))
+                    .collect(),
+            },
+        );
+    }
+    Ok(out)
 }
 
 /// Extract `d` from a `regular:<d>` spec.

@@ -54,20 +54,9 @@ impl SecureDlNode {
         let dim = self.params.len();
         let mut pending: HashMap<(u64, usize), Vec<u8>> = HashMap::new();
 
-        // Round-0 key agreement: one 32-byte message to every higher-id
-        // node we share a receiver with (here: anyone within 2 hops).
-        for peer in self.two_hop_peers(&neighbors) {
-            if peer > self.id {
-                let master =
-                    crate::secure::master_secret(self.masker_seed(), self.id, peer);
-                self.transport.send(Envelope {
-                    src: self.id,
-                    dst: peer,
-                    round: 0,
-                    kind: MsgKind::SecureSeed,
-                    payload: master.to_vec(),
-                })?;
-            }
+        // Round-0 key agreement.
+        for env in key_agreement_envelopes(self.id, self.masker_seed(), &self.graph, &neighbors) {
+            self.transport.send(env)?;
         }
 
         for round in 0..self.rounds {
@@ -77,41 +66,16 @@ impl SecureDlNode {
 
             let bytes_before = self.transport.counters().bytes_sent;
 
-            // 2. Per-receiver masking + send. Each receiver r gets
-            //    x_i + (1/w_ri) * sum of pair masks over r's sender set.
-            for &r in &neighbors {
-                let co_senders: Vec<usize> = self.graph.neighbors_vec(r);
-                let w_ri = self.weights.weight(r, self.id);
-                debug_assert!(w_ri > 0.0);
-                // Per-round seed advertisements to higher-id co-senders
-                // (16 B each — the metadata the paper attributes the ~3%
-                // overhead to).
-                for &peer in &co_senders {
-                    if peer > self.id {
-                        let master =
-                            crate::secure::master_secret(self.masker_seed(), self.id, peer);
-                        let seed = crate::secure::round_seed(&master, r, round);
-                        self.transport.send(Envelope {
-                            src: self.id,
-                            dst: peer,
-                            round,
-                            kind: MsgKind::SecureSeed,
-                            payload: seed.to_vec(),
-                        })?;
-                    }
-                }
-                let mask = self.masker.mask_for(r, round, &co_senders, (1.0 / w_ri) as f32, dim);
-                let mut masked = self.params.clone();
-                for (m, k) in masked.iter_mut().zip(mask.iter()) {
-                    *m += k;
-                }
-                self.transport.send(Envelope {
-                    src: self.id,
-                    dst: r,
-                    round,
-                    kind: MsgKind::Model,
-                    payload: codec.encode(&masked),
-                })?;
+            // 2. Per-receiver masking + send.
+            for env in secure_round_envelopes(
+                self.id,
+                round,
+                &self.params,
+                &self.graph,
+                &self.weights,
+                &self.masker,
+            ) {
+                self.transport.send(env)?;
             }
             let sent_this_round = self.transport.counters().bytes_sent - bytes_before;
 
@@ -169,19 +133,6 @@ impl SecureDlNode {
         self.masker.experiment_seed()
     }
 
-    /// Nodes that can co-occur with us in some receiver's sender set.
-    fn two_hop_peers(&self, neighbors: &[usize]) -> Vec<usize> {
-        let mut out = std::collections::BTreeSet::new();
-        for &r in neighbors {
-            for n in self.graph.neighbors(r) {
-                if n != self.id {
-                    out.insert(n);
-                }
-            }
-        }
-        out.into_iter().collect()
-    }
-
     fn await_model(
         &mut self,
         round: u64,
@@ -211,4 +162,92 @@ impl SecureDlNode {
             }
         }
     }
+}
+
+/// Nodes that can co-occur with `id` in some receiver's sender set.
+pub(crate) fn two_hop_peers(graph: &Graph, id: usize, neighbors: &[usize]) -> Vec<usize> {
+    let mut out = std::collections::BTreeSet::new();
+    for &r in neighbors {
+        for n in graph.neighbors(r) {
+            if n != id {
+                out.insert(n);
+            }
+        }
+    }
+    out.into_iter().collect()
+}
+
+/// Round-0 key agreement: one 32-byte message to every higher-id node we
+/// share a receiver with (here: anyone within 2 hops). Shared by the
+/// threaded [`SecureDlNode`] and the scheduler's `SecureDlNodeSm`.
+pub(crate) fn key_agreement_envelopes(
+    id: usize,
+    seed: u64,
+    graph: &Graph,
+    neighbors: &[usize],
+) -> Vec<Envelope> {
+    let mut out = Vec::new();
+    for peer in two_hop_peers(graph, id, neighbors) {
+        if peer > id {
+            let master = crate::secure::master_secret(seed, id, peer);
+            out.push(Envelope {
+                src: id,
+                dst: peer,
+                round: 0,
+                kind: MsgKind::SecureSeed,
+                payload: master.to_vec(),
+            });
+        }
+    }
+    out
+}
+
+/// One round's outgoing traffic for a secure node: per-receiver seed
+/// advertisements plus the masked model. Each receiver r gets
+/// `x_i + (1/w_ri) * sum of pair masks over r's sender set`; the
+/// 16-byte per-(pair, receiver) seed advertisements to higher-id
+/// co-senders are the metadata the paper attributes the ~3% overhead to.
+pub(crate) fn secure_round_envelopes(
+    id: usize,
+    round: u64,
+    params: &[f32],
+    graph: &Graph,
+    weights: &MixingWeights,
+    masker: &Masker,
+) -> Vec<Envelope> {
+    let codec = RawF32;
+    let dim = params.len();
+    let seed = masker.experiment_seed();
+    let mut out = Vec::new();
+    for r in graph.neighbors_vec(id) {
+        let co_senders: Vec<usize> = graph.neighbors_vec(r);
+        let w_ri = weights.weight(r, id);
+        debug_assert!(w_ri > 0.0);
+        for &peer in &co_senders {
+            if peer > id {
+                let master = crate::secure::master_secret(seed, id, peer);
+                let round_seed = crate::secure::round_seed(&master, r, round);
+                out.push(Envelope {
+                    src: id,
+                    dst: peer,
+                    round,
+                    kind: MsgKind::SecureSeed,
+                    payload: round_seed.to_vec(),
+                });
+            }
+        }
+        let mask = masker.mask_for(r, round, &co_senders, (1.0 / w_ri) as f32, dim);
+        let mut masked = params.to_vec();
+        for (m, k) in masked.iter_mut().zip(mask.iter()) {
+            *m += k;
+        }
+        out.push(Envelope {
+            src: id,
+            dst: r,
+            round,
+            kind: MsgKind::Model,
+            payload: codec.encode(&masked),
+        });
+    }
+    out
 }

@@ -8,10 +8,19 @@
 //! one thread costs nothing and keeps the hot path allocation-free apart
 //! from the literal buffers themselves.
 //!
+//! Multi-step rounds go through [`EngineHandle::train_chain`], which
+//! batches a whole local round into one request so the channel round-trip
+//! is paid once per round, not once per step — the request-batching the
+//! virtual-time scheduler relies on at 1000+ nodes.
+//!
 //! HLO **text** is the interchange format (not serialized protos): see
 //! `python/compile/aot.py` and /opt/xla-example/README.md.
+//!
+//! The `xla` crate is an optional dependency (feature `xla`). Without it
+//! the crate still builds: [`EngineHandle::start`] reports a clear error
+//! and everything artifact-independent (graphs, sharing, transports, the
+//! scheduler) works normally.
 
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -31,6 +40,17 @@ enum Request {
         /// the next i32 arg) — mirrors the manifest arg order.
         order: Vec<DType>,
         reply: mpsc::Sender<Result<Outputs>>,
+    },
+    /// A whole local round: `batches.len()` chained train steps executed
+    /// without crossing the channel between steps. Returns the final
+    /// params and the per-step losses.
+    TrainChain {
+        model: String,
+        params: Vec<f32>,
+        lr: f32,
+        batches: Vec<(Vec<f32>, Vec<i32>)>,
+        order: Vec<DType>,
+        reply: mpsc::Sender<Result<(Vec<f32>, Vec<f32>)>>,
     },
     Shutdown,
 }
@@ -71,7 +91,7 @@ impl Outputs {
                 ii += 1;
             }
         }
-        panic!("output index {n} out of range");
+        panic!("output index {n} out of range")
     }
 }
 
@@ -96,7 +116,7 @@ impl EngineHandle {
         let model_names: Vec<String> = models.iter().map(|s| s.to_string()).collect();
         std::thread::Builder::new()
             .name("pjrt-engine".into())
-            .spawn(move || engine_main(thread_manifest, model_names, rx, ready_tx))
+            .spawn(move || backend::engine_main(thread_manifest, model_names, rx, ready_tx))
             .context("spawning engine thread")?;
         ready_rx
             .recv()
@@ -108,6 +128,15 @@ impl EngineHandle {
         &self.manifest
     }
 
+    /// Look up an entry's metadata, for argument validation.
+    fn entry_meta(&self, model: &str, entry: &str) -> Result<EntryMeta> {
+        let meta = self.manifest.model(model)?;
+        meta.entries
+            .get(entry)
+            .cloned()
+            .with_context(|| format!("entry {entry:?} missing for model {model:?}"))
+    }
+
     fn execute(
         &self,
         model: &str,
@@ -115,11 +144,7 @@ impl EngineHandle {
         f32_args: Vec<Vec<f32>>,
         i32_args: Vec<Vec<i32>>,
     ) -> Result<Outputs> {
-        let meta = self.manifest.model(model)?;
-        let em = meta
-            .entries
-            .get(entry)
-            .with_context(|| format!("entry {entry:?} missing for model {model:?}"))?;
+        let em = self.entry_meta(model, entry)?;
         // Validate argument shapes against the manifest before crossing
         // the channel: failures surface at the call site.
         let order: Vec<DType> = em.args.iter().map(|a| a.dtype).collect();
@@ -188,6 +213,60 @@ impl EngineHandle {
         Ok((new_params, loss))
     }
 
+    /// Chain `batches.len()` SGD steps in ONE engine request: params flow
+    /// step-to-step inside the engine thread, so the per-step channel
+    /// round-trip (and reply allocation) is amortized over the round.
+    /// Bit-identical to calling [`train_step`] in a loop.
+    ///
+    /// [`train_step`]: EngineHandle::train_step
+    pub fn train_chain(
+        &self,
+        model: &str,
+        params: Vec<f32>,
+        batches: Vec<(Vec<f32>, Vec<i32>)>,
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        if batches.is_empty() {
+            return Ok((params, Vec::new()));
+        }
+        let em = self.entry_meta(model, "train")?;
+        let order: Vec<DType> = em.args.iter().map(|a| a.dtype).collect();
+        let (mut fexp, mut iexp) = (Vec::new(), Vec::new());
+        for a in &em.args {
+            match a.dtype {
+                DType::F32 => fexp.push(a.element_count()),
+                DType::I32 => iexp.push(a.element_count()),
+            }
+        }
+        // train's signature is (params, x, lr | y) in some manifest order.
+        if fexp.len() != 3 || iexp.len() != 1 {
+            bail!("{model}/train has an unexpected signature");
+        }
+        if params.len() != fexp[0] {
+            bail!("params expect {} elements, got {}", fexp[0], params.len());
+        }
+        for (x, y) in &batches {
+            if x.len() != fexp[1] {
+                bail!("batch features expect {} elements, got {}", fexp[1], x.len());
+            }
+            if y.len() != iexp[0] {
+                bail!("batch labels expect {} elements, got {}", iexp[0], y.len());
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request::TrainChain {
+                model: model.to_string(),
+                params,
+                lr,
+                batches,
+                order,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("engine thread is gone"))?;
+        reply_rx.recv().context("engine thread dropped the reply")?
+    }
+
     /// Evaluate one fixed-size batch: returns (sum_loss, correct_count).
     pub fn eval_batch(
         &self,
@@ -237,108 +316,157 @@ impl EngineHandle {
     }
 }
 
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    meta: EntryMeta,
-}
+#[cfg(feature = "xla")]
+mod backend {
+    //! Real PJRT execution (feature `xla`).
 
-fn engine_main(
-    manifest: Arc<Manifest>,
-    models: Vec<String>,
-    rx: mpsc::Receiver<Request>,
-    ready: mpsc::Sender<Result<()>>,
-) {
-    let setup = (|| -> Result<(xla::PjRtClient, BTreeMap<(String, String), Compiled>)> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut table = BTreeMap::new();
-        for model in &models {
-            let meta = manifest.model(model)?;
-            for (tag, em) in &meta.entries {
-                let proto = xla::HloModuleProto::from_text_file(&em.file)
-                    .with_context(|| format!("parsing {}", em.file.display()))?;
-                let comp = xla::XlaComputation::from_proto(&proto);
-                let exe = client
-                    .compile(&comp)
-                    .with_context(|| format!("compiling {}", em.file.display()))?;
-                table.insert(
-                    (model.clone(), tag.clone()),
-                    Compiled { exe, meta: em.clone() },
-                );
-            }
-        }
-        Ok((client, table))
-    })();
-    let table = match setup {
-        Ok((_client, table)) => {
-            let _ = ready.send(Ok(()));
-            table
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    while let Ok(req) = rx.recv() {
-        match req {
-            Request::Shutdown => break,
-            Request::Execute { model, entry, f32_args, i32_args, order, reply } => {
-                let result = run_one(&table, &model, entry, f32_args, i32_args, order);
-                let _ = reply.send(result);
-            }
-        }
+    use std::collections::BTreeMap;
+
+    use super::*;
+
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+        meta: EntryMeta,
     }
-}
 
-fn run_one(
-    table: &BTreeMap<(String, String), Compiled>,
-    model: &str,
-    entry: &str,
-    f32_args: Vec<Vec<f32>>,
-    i32_args: Vec<Vec<i32>>,
-    order: Vec<DType>,
-) -> Result<Outputs> {
-    let compiled = table
-        .get(&(model.to_string(), entry.to_string()))
-        .with_context(|| format!("{model}/{entry} not compiled"))?;
-    // Build literals in manifest order.
-    let (mut fi, mut ii) = (0usize, 0usize);
-    let mut literals = Vec::with_capacity(order.len());
-    for (pos, d) in order.iter().enumerate() {
-        let spec = &compiled.meta.args[pos];
-        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-        let lit = match d {
-            DType::F32 => {
-                let lit = xla::Literal::vec1(&f32_args[fi]);
-                fi += 1;
-                lit.reshape(&dims)?
+    pub(super) fn engine_main(
+        manifest: Arc<Manifest>,
+        models: Vec<String>,
+        rx: mpsc::Receiver<Request>,
+        ready: mpsc::Sender<Result<()>>,
+    ) {
+        let setup = (|| -> Result<(xla::PjRtClient, BTreeMap<(String, String), Compiled>)> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut table = BTreeMap::new();
+            for model in &models {
+                let meta = manifest.model(model)?;
+                for (tag, em) in &meta.entries {
+                    let proto = xla::HloModuleProto::from_text_file(&em.file)
+                        .with_context(|| format!("parsing {}", em.file.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .with_context(|| format!("compiling {}", em.file.display()))?;
+                    table.insert(
+                        (model.clone(), tag.clone()),
+                        Compiled { exe, meta: em.clone() },
+                    );
+                }
             }
-            DType::I32 => {
-                let lit = xla::Literal::vec1(&i32_args[ii]);
-                ii += 1;
-                lit.reshape(&dims)?
+            Ok((client, table))
+        })();
+        let table = match setup {
+            Ok((_client, table)) => {
+                let _ = ready.send(Ok(()));
+                table
+            }
+            Err(e) => {
+                let _ = ready.send(Err(e));
+                return;
             }
         };
-        literals.push(lit);
-    }
-    let result = compiled.exe.execute::<xla::Literal>(&literals)?;
-    let tuple = result[0][0].to_literal_sync()?;
-    // aot.py lowers with return_tuple=True: always a tuple, even for one
-    // output.
-    let parts = tuple.to_tuple()?;
-    if parts.len() != compiled.meta.outs.len() {
-        bail!(
-            "{model}/{entry}: expected {} outputs, got {}",
-            compiled.meta.outs.len(),
-            parts.len()
-        );
-    }
-    let mut out = Outputs::default();
-    for (lit, spec) in parts.into_iter().zip(compiled.meta.outs.iter()) {
-        out.order.push(spec.dtype);
-        match spec.dtype {
-            DType::F32 => out.f32s.push(lit.to_vec::<f32>()?),
-            DType::I32 => out.i32s.push(lit.to_vec::<i32>()?),
+        while let Ok(req) = rx.recv() {
+            match req {
+                Request::Shutdown => break,
+                Request::Execute { model, entry, f32_args, i32_args, order, reply } => {
+                    let result = run_one(&table, &model, entry, f32_args, i32_args, order);
+                    let _ = reply.send(result);
+                }
+                Request::TrainChain { model, mut params, lr, batches, order, reply } => {
+                    let result = (|| -> Result<(Vec<f32>, Vec<f32>)> {
+                        let mut losses = Vec::with_capacity(batches.len());
+                        for (x, y) in batches {
+                            let out = run_one(
+                                &table,
+                                &model,
+                                "train",
+                                vec![std::mem::take(&mut params), x, vec![lr]],
+                                vec![y],
+                                order.clone(),
+                            )?;
+                            params = out.f32_out(0).to_vec();
+                            losses.push(out.f32_out(1)[0]);
+                        }
+                        Ok((params, losses))
+                    })();
+                    let _ = reply.send(result);
+                }
+            }
         }
     }
-    Ok(out)
+
+    fn run_one(
+        table: &BTreeMap<(String, String), Compiled>,
+        model: &str,
+        entry: &str,
+        f32_args: Vec<Vec<f32>>,
+        i32_args: Vec<Vec<i32>>,
+        order: Vec<DType>,
+    ) -> Result<Outputs> {
+        let compiled = table
+            .get(&(model.to_string(), entry.to_string()))
+            .with_context(|| format!("{model}/{entry} not compiled"))?;
+        // Build literals in manifest order.
+        let (mut fi, mut ii) = (0usize, 0usize);
+        let mut literals = Vec::with_capacity(order.len());
+        for (pos, d) in order.iter().enumerate() {
+            let spec = &compiled.meta.args[pos];
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match d {
+                DType::F32 => {
+                    let lit = xla::Literal::vec1(&f32_args[fi]);
+                    fi += 1;
+                    lit.reshape(&dims)?
+                }
+                DType::I32 => {
+                    let lit = xla::Literal::vec1(&i32_args[ii]);
+                    ii += 1;
+                    lit.reshape(&dims)?
+                }
+            };
+            literals.push(lit);
+        }
+        let result = compiled.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even for
+        // one output.
+        let parts = tuple.to_tuple()?;
+        if parts.len() != compiled.meta.outs.len() {
+            bail!(
+                "{model}/{entry}: expected {} outputs, got {}",
+                compiled.meta.outs.len(),
+                parts.len()
+            );
+        }
+        let mut out = Outputs::default();
+        for (lit, spec) in parts.into_iter().zip(compiled.meta.outs.iter()) {
+            out.order.push(spec.dtype);
+            match spec.dtype {
+                DType::F32 => out.f32s.push(lit.to_vec::<f32>()?),
+                DType::I32 => out.i32s.push(lit.to_vec::<i32>()?),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod backend {
+    //! Stub backend: the `xla` crate is not compiled in. Startup fails
+    //! with a clear message; artifact-gated tests skip long before this.
+
+    use super::*;
+
+    pub(super) fn engine_main(
+        _manifest: Arc<Manifest>,
+        _models: Vec<String>,
+        rx: mpsc::Receiver<Request>,
+        ready: mpsc::Sender<Result<()>>,
+    ) {
+        let _ = ready.send(Err(anyhow::anyhow!(
+            "built without the `xla` feature: PJRT execution is unavailable \
+             (rebuild with `cargo build --features xla`)"
+        )));
+        drop(rx);
+    }
 }

