@@ -1,0 +1,63 @@
+//! Fig 7 (beyond-the-paper) bench: heterogeneity & WAN scenarios on the
+//! virtual-time scheduler — a straggler-severity sweep (emulated-clock
+//! slowdown at identical byte cost), a geo-clustered WAN matrix vs
+//! uniform LAN, and session churn. Skips cleanly without artifacts.
+
+mod fig_common;
+
+use fig_common::{bench_config, engine_or_skip, run_variant};
+
+fn main() {
+    println!("== fig7: heterogeneity & WAN scenarios ==");
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+
+    // Straggler severity sweep: 1/8 of the fleet is k× slower; the
+    // synchronous rounds pace at the stragglers' speed.
+    println!("-- straggler severity sweep (12 nodes, regular:5, 6 rounds) --");
+    let mut base_emu = f64::NAN;
+    for k in [1u32, 2, 4, 8] {
+        let mut cfg = bench_config(&format!("fig7/stragglers_x{k}"));
+        cfg.rounds = 6;
+        cfg.eval_every = 6;
+        cfg.step_time = format!("stragglers:0.125:{k}");
+        let r = run_variant(&cfg, &engine);
+        if k == 1 {
+            base_emu = r.final_emu_time();
+        }
+        println!(
+            "straggler x{k:>2}: emu {:>8.3}s  slowdown {:.2}x",
+            r.final_emu_time(),
+            r.final_emu_time() / base_emu
+        );
+    }
+
+    // Per-link WAN: 4 geo clusters (LAN inside, 30-120 ms across) vs the
+    // uniform LAN baseline — same bytes, WAN-paced clock.
+    println!("-- geo-clustered WAN links vs uniform LAN --");
+    let mut lan = bench_config("fig7/links_lan");
+    lan.rounds = 6;
+    lan.eval_every = 6;
+    let mut geo = lan.clone();
+    geo.name = "fig7/links_geo4".into();
+    geo.link_model = "geo:4".into();
+    let r_lan = run_variant(&lan, &engine);
+    let r_geo = run_variant(&geo, &engine);
+    println!(
+        "geo:4 emu {:>8.3}s vs lan {:>8.3}s ({:.2}x)",
+        r_geo.final_emu_time(),
+        r_lan.final_emu_time(),
+        r_geo.final_emu_time() / r_lan.final_emu_time()
+    );
+
+    // Replayable churn: dynamic topology drawn over session traces.
+    println!("-- session churn (dynamic topology) --");
+    let mut churn = bench_config("fig7/churn_sessions");
+    churn.dynamic = true;
+    churn.churn_trace = "sessions:8:2".into();
+    let r_churn = run_variant(&churn, &engine);
+    println!(
+        "sessions 8on/2off: acc {:.4} (uniform-availability baseline above)",
+        r_churn.final_accuracy()
+    );
+    println!("== fig7 done ==");
+}

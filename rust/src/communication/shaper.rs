@@ -24,6 +24,21 @@
 //! (`bytes / bandwidth_bps`, queuing behind earlier sends) and arrive
 //! one `latency_s` later, so delivery order — not just round cost — is
 //! network-faithful.
+//!
+//! # Per-link delays
+//!
+//! A single [`NetworkModel`] gives every sender the same uplink and
+//! every message the same latency. [`LinkMatrix`] generalizes that to a
+//! dense `(src, dst)` lookup — each *link* owns a latency and a
+//! bandwidth — for geo-distributed WAN scenarios where intra-datacenter
+//! and cross-ocean links differ by orders of magnitude.
+//! [`LinkModel`] is what the scheduler consumes at delivery
+//! timestamping: either the uniform model (bit-identical to PR-1
+//! behavior) or a matrix. The sender's uplink stays serial in both
+//! cases: a burst queues in staging order, each message transfers at
+//! its link's bandwidth and then pays its link's latency.
+
+use std::sync::Arc;
 
 /// Link/host parameters for the emulated network.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -91,6 +106,144 @@ impl HeterogeneousNetwork {
             .iter()
             .map(|m| m.round_upload_time(bytes_per_node))
             .fold(0.0, f64::max)
+    }
+}
+
+/// Dense `(src, dst)` link parameters for WAN scenarios.
+///
+/// Built by the scenario subsystem ([`crate::scenario`]) from a
+/// generator preset (`geo:<clusters>`) or a matrix file, or as a
+/// uniform matrix for equivalence testing. Ranks outside the matrix
+/// (e.g. the peer sampler's service rank) fall back to LAN-class
+/// defaults — coordination traffic is not the modeled bottleneck.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkMatrix {
+    n: usize,
+    /// Row-major `n * n` one-way latencies in seconds.
+    latency_s: Vec<f64>,
+    /// Row-major `n * n` link bandwidths in bytes/second.
+    bandwidth_bps: Vec<f64>,
+}
+
+impl LinkMatrix {
+    /// Every link gets `m`'s parameters (reproduces the per-sender
+    /// [`NetworkModel`] behavior exactly).
+    pub fn uniform(n: usize, m: NetworkModel) -> LinkMatrix {
+        LinkMatrix {
+            n,
+            latency_s: vec![m.latency_s; n * n],
+            bandwidth_bps: vec![m.bandwidth_bps; n * n],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Set one directed link's parameters.
+    pub fn set(&mut self, src: usize, dst: usize, latency_s: f64, bandwidth_bps: f64) {
+        assert!(src < self.n && dst < self.n, "link ({src}, {dst}) out of range");
+        self.latency_s[src * self.n + dst] = latency_s;
+        self.bandwidth_bps[src * self.n + dst] = bandwidth_bps;
+    }
+
+    /// `(latency_s, bandwidth_bps)` for the directed link `src -> dst`.
+    pub fn link(&self, src: usize, dst: usize) -> (f64, f64) {
+        if src >= self.n || dst >= self.n {
+            let lan = NetworkModel::lan();
+            return (lan.latency_s, lan.bandwidth_bps);
+        }
+        (self.latency_s[src * self.n + dst], self.bandwidth_bps[src * self.n + dst])
+    }
+
+    /// Geo-clustered WAN preset: nodes split into `clusters` contiguous
+    /// blocks (datacenters). Intra-cluster links are LAN-class;
+    /// inter-cluster links get WAN bandwidth and a per-cluster-pair
+    /// latency drawn deterministically in [30 ms, 120 ms], symmetric.
+    /// `geo:1` therefore degenerates to a uniform LAN matrix.
+    pub fn geo_clustered(n: usize, clusters: usize, seed: u64) -> LinkMatrix {
+        let clusters = clusters.max(1).min(n.max(1));
+        let lan = NetworkModel::lan();
+        let wan = NetworkModel::wan();
+        // Symmetric cluster-pair latency table.
+        let mut rng = crate::rng::Xoshiro256pp::new(seed);
+        let mut pair_latency = vec![0.0f64; clusters * clusters];
+        for a in 0..clusters {
+            for b in (a + 1)..clusters {
+                let l = 0.030 + 0.090 * rng.next_f64();
+                pair_latency[a * clusters + b] = l;
+                pair_latency[b * clusters + a] = l;
+            }
+        }
+        let cluster_of = |i: usize| i * clusters / n.max(1);
+        let mut m = LinkMatrix::uniform(n, lan);
+        for src in 0..n {
+            for dst in 0..n {
+                let (ca, cb) = (cluster_of(src), cluster_of(dst));
+                if ca != cb {
+                    m.set(src, dst, pair_latency[ca * clusters + cb], wan.bandwidth_bps);
+                }
+            }
+        }
+        m
+    }
+
+    /// Parse a link file: one `src dst latency_s bandwidth_bps` line per
+    /// directed link (`#` comments allowed); unspecified links use
+    /// `default`.
+    pub fn from_file(path: &str, n: usize, default: NetworkModel) -> anyhow::Result<LinkMatrix> {
+        use anyhow::Context;
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading link matrix {path}"))?;
+        let mut m = LinkMatrix::uniform(n, default);
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let bad = || format!("{path}:{}: expected `src dst latency_s bandwidth_bps`", i + 1);
+            let mut parts = line.split_whitespace();
+            let src: usize = parts.next().with_context(bad)?.parse().with_context(bad)?;
+            let dst: usize = parts.next().with_context(bad)?.parse().with_context(bad)?;
+            let latency_s: f64 = parts.next().with_context(bad)?.parse().with_context(bad)?;
+            let bandwidth_bps: f64 = parts.next().with_context(bad)?.parse().with_context(bad)?;
+            if src >= n || dst >= n {
+                anyhow::bail!("{path}:{}: link ({src}, {dst}) out of range for {n} nodes", i + 1);
+            }
+            if !(latency_s >= 0.0) || !(bandwidth_bps > 0.0) {
+                anyhow::bail!("{path}:{}: latency must be >= 0 and bandwidth > 0", i + 1);
+            }
+            m.set(src, dst, latency_s, bandwidth_bps);
+        }
+        Ok(m)
+    }
+
+    /// True when every link has identical parameters (the degenerate
+    /// matrix; equivalent to a uniform [`NetworkModel`]).
+    pub fn is_uniform(&self) -> bool {
+        self.latency_s.windows(2).all(|w| w[0] == w[1])
+            && self.bandwidth_bps.windows(2).all(|w| w[0] == w[1])
+    }
+}
+
+/// What the scheduler consumes at delivery timestamping: one model for
+/// every link, or a per-link matrix.
+#[derive(Debug, Clone)]
+pub enum LinkModel {
+    /// Every link shares `NetworkModel` parameters (PR-1 behavior).
+    Uniform(NetworkModel),
+    /// Dense per-link lookup.
+    Matrix(Arc<LinkMatrix>),
+}
+
+impl LinkModel {
+    /// `(latency_s, bandwidth_bps)` for the directed link `src -> dst`.
+    #[inline]
+    pub fn link(&self, src: usize, dst: usize) -> (f64, f64) {
+        match self {
+            LinkModel::Uniform(m) => (m.latency_s, m.bandwidth_bps),
+            LinkModel::Matrix(m) => m.link(src, dst),
+        }
     }
 }
 
@@ -196,5 +349,68 @@ mod tests {
     fn presets_sane() {
         assert!(NetworkModel::wan().latency_s > NetworkModel::lan().latency_s);
         assert!(NetworkModel::wan().bandwidth_bps < NetworkModel::lan().bandwidth_bps);
+    }
+
+    #[test]
+    fn uniform_matrix_matches_network_model() {
+        let net = NetworkModel { latency_s: 0.02, bandwidth_bps: 5e6 };
+        let m = LinkMatrix::uniform(4, net);
+        assert!(m.is_uniform());
+        for src in 0..4 {
+            for dst in 0..4 {
+                assert_eq!(m.link(src, dst), (net.latency_s, net.bandwidth_bps));
+            }
+        }
+        let lm = LinkModel::Matrix(Arc::new(m));
+        assert_eq!(lm.link(1, 2), LinkModel::Uniform(net).link(1, 2));
+    }
+
+    #[test]
+    fn out_of_range_rank_gets_lan_fallback() {
+        let m = LinkMatrix::uniform(2, NetworkModel::wan());
+        let lan = NetworkModel::lan();
+        // The peer sampler's service rank sits beyond the matrix.
+        assert_eq!(m.link(0, 2), (lan.latency_s, lan.bandwidth_bps));
+        assert_eq!(m.link(2, 0), (lan.latency_s, lan.bandwidth_bps));
+    }
+
+    #[test]
+    fn geo_clusters_split_lan_wan() {
+        let m = LinkMatrix::geo_clustered(16, 4, 7);
+        let lan = NetworkModel::lan();
+        // Contiguous blocks of 4: 0 and 1 share a cluster, 0 and 15 don't.
+        assert_eq!(m.link(0, 1), (lan.latency_s, lan.bandwidth_bps));
+        let (inter_lat, inter_bw) = m.link(0, 15);
+        assert!((0.030..=0.120).contains(&inter_lat), "{inter_lat}");
+        assert_eq!(inter_bw, NetworkModel::wan().bandwidth_bps);
+        // Latencies are symmetric per cluster pair and deterministic.
+        assert_eq!(m.link(0, 15), m.link(15, 0));
+        assert_eq!(m, LinkMatrix::geo_clustered(16, 4, 7));
+        assert!(!m.is_uniform());
+    }
+
+    #[test]
+    fn geo_single_cluster_is_uniform_lan() {
+        let m = LinkMatrix::geo_clustered(8, 1, 3);
+        assert!(m.is_uniform());
+        assert_eq!(m, LinkMatrix::uniform(8, NetworkModel::lan()));
+    }
+
+    #[test]
+    fn matrix_file_overrides_defaults() {
+        let dir = std::env::temp_dir().join("decentra_link_matrix");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("links.txt");
+        std::fs::write(&path, "# slow cross-link\n0 1 0.1 1000\n1 0 0.2 500\n").unwrap();
+        let lan = NetworkModel::lan();
+        let m = LinkMatrix::from_file(path.to_str().unwrap(), 3, lan).unwrap();
+        assert_eq!(m.link(0, 1), (0.1, 1000.0));
+        assert_eq!(m.link(1, 0), (0.2, 500.0));
+        assert_eq!(m.link(0, 2), (lan.latency_s, lan.bandwidth_bps));
+        // Bad lines rejected.
+        std::fs::write(&path, "0 9 0.1 1000\n").unwrap();
+        assert!(LinkMatrix::from_file(path.to_str().unwrap(), 3, lan).is_err());
+        std::fs::write(&path, "0 1 -0.1 1000\n").unwrap();
+        assert!(LinkMatrix::from_file(path.to_str().unwrap(), 3, lan).is_err());
     }
 }

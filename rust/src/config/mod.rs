@@ -35,15 +35,15 @@ pub struct ExperimentConfig {
     pub test_total: usize,
     /// Synthetic noise sigma (task difficulty).
     pub noise: f32,
-    /// Partition spec: iid | shards:<k> | dirichlet:<alpha>.
+    /// Partition spec: `iid` | `shards:<k>` | `dirichlet:<alpha>`.
     pub partition: String,
-    /// Topology spec: ring | full | star | regular:<d> | er:<p> |
-    /// smallworld:<k>:<b> | torus:<r>:<c>.
+    /// Topology spec: `ring` | `full` | `star` | `regular:<d>` |
+    /// `er:<p>` | `smallworld:<k>:<b>` | `torus:<r>:<c>`.
     pub topology: String,
     /// Re-sample the topology every round via the peer sampler.
     pub dynamic: bool,
-    /// Sharing spec: full | subsample:<budget> | topk:<budget> |
-    /// choco:<budget>:<gamma> (budget = fraction of params sent).
+    /// Sharing spec: `full` | `subsample:<budget>` | `topk:<budget>` |
+    /// `choco:<budget>:<gamma>` (budget = fraction of params sent).
     pub sharing: String,
     /// Wrap sharing in pairwise-mask secure aggregation.
     pub secure: bool,
@@ -54,11 +54,24 @@ pub struct ExperimentConfig {
     /// Per-round probability a node is unavailable (dynamic mode only;
     /// FedScale-style availability churn).
     pub churn: f64,
+    /// Replayable availability trace, replacing the Bernoulli `churn`
+    /// draw: empty (off) | `trace:<path>` |
+    /// `sessions:<mean_on>:<mean_off>` | `departures:<frac>`.
+    /// See [`crate::scenario`].
+    pub churn_trace: String,
     pub lr: f32,
     /// Local SGD steps per communication round.
     pub local_steps: u32,
-    /// Network model for the emulated clock: lan | wan | none.
+    /// Network model for the emulated clock: `lan` | `wan` | `none`.
     pub network: String,
+    /// Per-node compute heterogeneity (step-time multipliers):
+    /// `uniform` | `stragglers:<frac>:<factor>` | `lognormal:<sigma>` |
+    /// `trace:<path>`. See [`crate::scenario::ComputePlan`].
+    pub step_time: String,
+    /// Per-link delay model for the scheduler: `uniform` (use
+    /// `network`) | `geo:<clusters>` | `matrix:<path>`.
+    /// See [`crate::communication::shaper::LinkMatrix`].
+    pub link_model: String,
     /// In-process runner: `scheduler` (discrete-event virtual time on a
     /// bounded worker pool, the default) | `threads` (one thread/node).
     pub runner: String,
@@ -89,9 +102,12 @@ impl Default for ExperimentConfig {
             secure: false,
             mask_scale: 4.0,
             churn: 0.0,
+            churn_trace: String::new(),
             lr: 0.05,
             local_steps: 2,
             network: "lan".into(),
+            step_time: "uniform".into(),
+            link_model: "uniform".into(),
             runner: "scheduler".into(),
             workers: 0,
             artifacts_dir: PathBuf::from("artifacts"),
@@ -108,9 +124,9 @@ impl ExperimentConfig {
         const KNOWN: &[&str] = &[
             "name", "nodes", "rounds", "eval_every", "seed", "model",
             "dataset", "image", "train_total", "test_total", "noise",
-            "partition", "topology", "dynamic", "sharing", "secure", "mask_scale", "churn", "lr",
-            "local_steps", "network", "runner", "workers", "artifacts_dir",
-            "results_dir",
+            "partition", "topology", "dynamic", "sharing", "secure", "mask_scale", "churn",
+            "churn_trace", "lr", "local_steps", "network", "step_time", "link_model",
+            "runner", "workers", "artifacts_dir", "results_dir",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -142,9 +158,12 @@ impl ExperimentConfig {
             secure: b("secure", d.secure),
             mask_scale: f("mask_scale", d.mask_scale as f64) as f32,
             churn: f("churn", d.churn),
+            churn_trace: s("churn_trace", &d.churn_trace),
             lr: f("lr", d.lr as f64) as f32,
             local_steps: n("local_steps", d.local_steps as usize) as u32,
             network: s("network", &d.network),
+            step_time: s("step_time", &d.step_time),
+            link_model: s("link_model", &d.link_model),
             runner: s("runner", &d.runner),
             workers: n("workers", d.workers),
             artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
@@ -181,9 +200,12 @@ impl ExperimentConfig {
             ("secure", Json::Bool(self.secure)),
             ("mask_scale", Json::num(self.mask_scale as f64)),
             ("churn", Json::num(self.churn)),
+            ("churn_trace", Json::str(self.churn_trace.clone())),
             ("lr", Json::num(self.lr as f64)),
             ("local_steps", Json::num(self.local_steps as f64)),
             ("network", Json::str(self.network.clone())),
+            ("step_time", Json::str(self.step_time.clone())),
+            ("link_model", Json::str(self.link_model.clone())),
             ("runner", Json::str(self.runner.clone())),
             ("workers", Json::num(self.workers as f64)),
             ("artifacts_dir", Json::str(self.artifacts_dir.display().to_string())),
@@ -227,6 +249,33 @@ impl ExperimentConfig {
         }
         if !["lan", "wan", "none"].contains(&self.network.as_str()) {
             bail!("unknown network model {:?}", self.network);
+        }
+        // Scenario axes: spec syntax (trace files are only read at
+        // prepare) and runner compatibility. Per-link delays and
+        // static-topology churn traces are delivery-level semantics only
+        // the virtual-time scheduler implements.
+        crate::scenario::ComputePlan::validate_spec(&self.step_time)?;
+        crate::scenario::validate_link_spec(&self.link_model)?;
+        crate::scenario::ChurnTrace::validate_spec(&self.churn_trace)?;
+        if !matches!(self.link_model.as_str(), "" | "uniform") && self.runner != "scheduler" {
+            bail!("link_model {:?} requires runner \"scheduler\"", self.link_model);
+        }
+        // CHOCO keeps per-neighbor estimate replicas that must observe
+        // every increment; a changing neighbor set (dynamic topologies)
+        // or missed rounds (churn) silently desync them.
+        if self.sharing.starts_with("choco") && (self.dynamic || !self.churn_trace.is_empty()) {
+            bail!("choco sharing requires a static, fully-participating topology (no dynamic mode or churn traces)");
+        }
+        if !self.churn_trace.is_empty() {
+            if self.secure {
+                bail!("churn traces are incompatible with secure aggregation (pairwise masks need full participation)");
+            }
+            if self.churn > 0.0 {
+                bail!("set either churn (Bernoulli) or churn_trace, not both");
+            }
+            if !self.dynamic && self.runner != "scheduler" {
+                bail!("static-topology churn traces require runner \"scheduler\"");
+            }
         }
         // The coordinator owns the runner-name mapping; delegate so a new
         // runner only has to be registered in one place.
@@ -307,6 +356,41 @@ mod tests {
         cfg.secure = true;
         cfg.sharing = "topk:0.1".into();
         assert!(cfg.validate().is_err()); // secure needs dense sharing
+        cfg = ExperimentConfig::default();
+        cfg.step_time = "stragglers:2:4".into();
+        assert!(cfg.validate().is_err()); // fraction out of range
+        cfg = ExperimentConfig::default();
+        cfg.link_model = "geo:4".into();
+        cfg.runner = "threads".into();
+        assert!(cfg.validate().is_err()); // per-link needs the scheduler
+        cfg = ExperimentConfig::default();
+        cfg.churn_trace = "departures:0.2".into();
+        cfg.secure = true;
+        assert!(cfg.validate().is_err()); // churn trace vs secure agg
+        cfg = ExperimentConfig::default();
+        cfg.churn_trace = "sessions:6:3".into();
+        cfg.dynamic = true;
+        cfg.churn = 0.2;
+        assert!(cfg.validate().is_err()); // two churn models at once
+        cfg = ExperimentConfig::default();
+        cfg.sharing = "choco:0.1:0.5".into();
+        cfg.churn_trace = "departures:0.2".into();
+        assert!(cfg.validate().is_err()); // choco estimates desync under churn
+        cfg = ExperimentConfig::default();
+        cfg.sharing = "choco:0.1:0.5".into();
+        cfg.dynamic = true;
+        assert!(cfg.validate().is_err()); // ...and under changing neighbor sets
+    }
+
+    #[test]
+    fn scenario_specs_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.step_time = "stragglers:0.125:4".into();
+        cfg.link_model = "geo:4".into();
+        cfg.churn_trace = "sessions:12:3".into();
+        cfg.validate().unwrap(); // static + scheduler: the WAN scenario
+        cfg.dynamic = true;
+        cfg.validate().unwrap(); // dynamic churn traces too
     }
 
     #[test]

@@ -21,6 +21,7 @@ use anyhow::{bail, Result};
 
 use crate::communication::inproc::InprocHub;
 use crate::communication::shaper::NetworkModel;
+use crate::scenario::Scenario;
 use crate::config::ExperimentConfig;
 use crate::dataset::{generate, DataLoader, Dataset, Partition, SyntheticSpec};
 use crate::graph::{from_spec, metropolis_hastings, Graph, MixingWeights};
@@ -91,7 +92,8 @@ pub fn build_dataset(cfg: &ExperimentConfig, eval_batch: usize) -> (Dataset, Dat
 }
 
 /// Everything both runners need, prepared once per experiment:
-/// dataset + shards, common init, static topology, calibrated times.
+/// dataset + shards, common init, static topology, calibrated times,
+/// and the resolved heterogeneity/WAN/churn [`Scenario`].
 pub struct RunSetup {
     pub meta: ModelMeta,
     pub train: Dataset,
@@ -104,6 +106,12 @@ pub struct RunSetup {
     pub step_time_s: f64,
     /// Eval time estimate per full test pass (emu clock).
     pub eval_time_s: f64,
+    /// Heterogeneity/WAN/churn scenario (degenerate by default).
+    pub scenario: Scenario,
+    /// Per-node step time: `step_time_s` × the scenario's multiplier.
+    pub step_times: Vec<f64>,
+    /// Per-node eval time, scaled the same way.
+    pub eval_times: Vec<f64>,
 }
 
 /// Validate the config and prepare the shared run state.
@@ -149,6 +157,22 @@ pub fn prepare(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunSetup
         _ => None,
     };
 
+    // Scenario axes (all degenerate by default): per-node step-time
+    // multipliers, per-link delays, availability churn.
+    let scenario = Scenario::from_specs(
+        &cfg.step_time,
+        &cfg.link_model,
+        &cfg.churn_trace,
+        network,
+        cfg.nodes,
+        cfg.rounds,
+        cfg.seed,
+    )?;
+    let step_times: Vec<f64> =
+        (0..cfg.nodes).map(|i| step_time_s * scenario.compute.multiplier(i)).collect();
+    let eval_times: Vec<f64> =
+        (0..cfg.nodes).map(|i| eval_time_s * scenario.compute.multiplier(i)).collect();
+
     Ok(RunSetup {
         meta,
         train,
@@ -159,6 +183,9 @@ pub fn prepare(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunSetup
         network,
         step_time_s,
         eval_time_s,
+        scenario,
+        step_times,
+        eval_times,
     })
 }
 
@@ -262,7 +289,11 @@ impl Runner for SchedulerRunner {
         } else {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
         };
-        let mut sched = Scheduler::new(setup.network, workers);
+        let mut sched = Scheduler::with_links(setup.scenario.links.clone(), workers);
+        // Static topologies handle churn traces node-side (each node
+        // filters by the shared trace); dynamic ones centrally in the
+        // sampler, so the nodes stay trace-unaware there.
+        let node_churn = if cfg.dynamic { None } else { setup.scenario.churn.clone() };
         for id in 0..cfg.nodes {
             let trainer = build_trainer(cfg, engine, setup, id)?;
             if cfg.secure {
@@ -277,8 +308,8 @@ impl Runner for SchedulerRunner {
                     Arc::clone(w),
                     Masker::new(id, cfg.seed, cfg.mask_scale),
                     Arc::clone(&setup.test),
-                    setup.step_time_s,
-                    setup.eval_time_s,
+                    setup.step_times[id],
+                    setup.eval_times[id],
                 )));
             } else {
                 sched.add_node(Box::new(DlNodeSm::new(
@@ -290,8 +321,9 @@ impl Runner for SchedulerRunner {
                     setup.init.clone(),
                     topology_view(cfg, setup, id),
                     Arc::clone(&setup.test),
-                    setup.step_time_s,
-                    setup.eval_time_s,
+                    node_churn.clone(),
+                    setup.step_times[id],
+                    setup.eval_times[id],
                 )));
             }
         }
@@ -302,7 +334,7 @@ impl Runner for SchedulerRunner {
                 cfg.rounds,
                 cfg.topology.clone(),
                 cfg.seed,
-                cfg.churn,
+                setup.scenario.availability(cfg.churn),
             )));
         }
         sched.run()?;
@@ -337,7 +369,7 @@ impl Runner for ThreadedRunner {
                     rounds: cfg.rounds,
                     spec: cfg.topology.clone(),
                     seed: cfg.seed,
-                    churn: cfg.churn,
+                    avail: setup.scenario.availability(cfg.churn),
                     transport: Box::new(hub.endpoint(cfg.nodes)),
                 };
                 Some(scope.spawn(move || sampler.run()))
@@ -365,8 +397,8 @@ impl Runner for ThreadedRunner {
                         masker: Masker::new(id, cfg.seed, cfg.mask_scale),
                         test,
                         network: setup.network,
-                        step_time_s: setup.step_time_s,
-                        eval_time_s: setup.eval_time_s,
+                        step_time_s: setup.step_times[id],
+                        eval_time_s: setup.eval_times[id],
                     };
                     handles.push(scope.spawn(move || node.run()));
                 } else {
@@ -381,8 +413,8 @@ impl Runner for ThreadedRunner {
                         topology: topology_view(cfg, setup, id),
                         test,
                         network: setup.network,
-                        step_time_s: setup.step_time_s,
-                        eval_time_s: setup.eval_time_s,
+                        step_time_s: setup.step_times[id],
+                        eval_time_s: setup.eval_times[id],
                     };
                     handles.push(scope.spawn(move || node.run()));
                 }

@@ -15,8 +15,15 @@
 //! At run time the Rust binary executes artifacts through PJRT
 //! ([`runtime`]); Python is never on the training path.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index,
-//! and `examples/quickstart.rs` for the API tour.
+//! Large fleets run on the virtual-time [`scheduler`]; the [`scenario`]
+//! subsystem layers compute heterogeneity, per-link WAN delays, and
+//! availability churn on top of it.
+//!
+//! See the repository `README.md` for the quickstart,
+//! `docs/ARCHITECTURE.md` for the scheduler/scenario walk-through, and
+//! `examples/quickstart.rs` for the API tour.
+
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench;
 pub mod communication;
@@ -31,6 +38,7 @@ pub mod node;
 pub mod model;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod scheduler;
 pub mod secure;
 pub mod sharing;

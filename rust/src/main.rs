@@ -76,6 +76,10 @@ fn print_usage() {
                 flag("secure", "wrap sharing in pairwise-mask secure aggregation"),
                 opt("runner", "in-process runner: scheduler | threads (run mode)", Some("scheduler")),
                 opt("workers", "scheduler worker threads (0 = cores)", Some("0")),
+                opt("scenario", "scenario overlay JSON: step_time/link_model/churn_trace/network/churn", None),
+                opt("step-time-trace", "per-node compute: uniform | stragglers:<f>:<x> | lognormal:<s> | trace:<path>", Some("uniform")),
+                opt("link-model", "per-link delays: uniform | geo:<clusters> | matrix:<path>", Some("uniform")),
+                opt("churn-trace", "availability: trace:<path> | sessions:<on>:<off> | departures:<frac>", None),
                 opt("participation", "client participation fraction (fl mode)", Some("0.5")),
                 opt("artifacts", "artifacts directory", Some("artifacts")),
                 flag("save", "persist logs under results/"),
@@ -119,10 +123,71 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().context("--workers")?;
     }
+    if let Some(s) = args.get("step-time-trace") {
+        cfg.step_time = s.to_string();
+    }
+    if let Some(s) = args.get("link-model") {
+        cfg.link_model = s.to_string();
+    }
+    if let Some(s) = args.get("churn-trace") {
+        cfg.churn_trace = s.to_string();
+    }
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(a);
     }
     cfg.validate()
+}
+
+/// Merge a scenario overlay file onto the config: a JSON object with
+/// any of `step_time`, `link_model`, `churn_trace`, `network`, `churn`.
+/// Individual flags (`--step-time-trace`, …) still win over the file.
+/// Unknown keys and wrong-typed values are hard errors — a silently
+/// ignored scenario axis would fake baseline results as scenario runs.
+fn apply_scenario_file(cfg: &mut ExperimentConfig, path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading scenario {}", path.display()))?;
+    let v = decentralize_rs::util::json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let obj = v.as_obj().context("scenario file must be a JSON object")?;
+    for (k, val) in obj {
+        let want_str = || {
+            val.as_str().map(str::to_string).with_context(|| {
+                format!("scenario key {k:?} in {} must be a string", path.display())
+            })
+        };
+        match k.as_str() {
+            "step_time" => cfg.step_time = want_str()?,
+            "link_model" => cfg.link_model = want_str()?,
+            "churn_trace" => cfg.churn_trace = want_str()?,
+            "network" => cfg.network = want_str()?,
+            "churn" => {
+                cfg.churn = val.as_f64().with_context(|| {
+                    format!("scenario key \"churn\" in {} must be a number", path.display())
+                })?;
+            }
+            other => bail!(
+                "unknown scenario key {other:?} in {} \
+                 (expected step_time | link_model | churn_trace | network | churn)",
+                path.display()
+            ),
+        }
+    }
+    Ok(())
+}
+
+/// Modes that bypass the in-process scheduler cannot honor the scenario
+/// axes (or churn); reject them instead of silently running a baseline.
+fn reject_scenario_axes(cfg: &ExperimentConfig, mode: &str) -> Result<()> {
+    if !matches!(cfg.step_time.as_str(), "" | "uniform")
+        || !matches!(cfg.link_model.as_str(), "" | "uniform")
+        || !cfg.churn_trace.is_empty()
+        || cfg.churn > 0.0
+    {
+        bail!(
+            "{mode} mode does not support scenario axes \
+             (step_time / link_model / churn_trace / churn); use `decentra run`"
+        );
+    }
+    Ok(())
 }
 
 fn load_config(args: &Args) -> Result<ExperimentConfig> {
@@ -130,6 +195,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
         Some(path) => ExperimentConfig::from_file(Path::new(path))?,
         None => ExperimentConfig::default(),
     };
+    if let Some(path) = args.get("scenario") {
+        apply_scenario_file(&mut cfg, Path::new(path))?;
+    }
     apply_overrides(&mut cfg, args)?;
     Ok(cfg)
 }
@@ -173,6 +241,7 @@ fn cmd_node(args: &Args) -> Result<()> {
     if cfg.dynamic {
         bail!("node mode supports static topologies (run the sampler in-process instead)");
     }
+    reject_scenario_axes(&cfg, "node")?;
     let rank: usize = args.require("rank")?.parse().context("--rank")?;
     let peers_file = args.require("peers")?;
     let peers: Vec<SocketAddr> = std::fs::read_to_string(peers_file)
@@ -289,6 +358,7 @@ fn cmd_fl(args: &Args) -> Result<()> {
 
     let mut cfg = load_config(args)?;
     cfg.name = "fl_emulation".into();
+    reject_scenario_axes(&cfg, "fl")?;
     let participation: f64 = args.get_parse("participation", 0.5f64)?;
     let engine = EngineHandle::start(&cfg.artifacts_dir, &[cfg.model.as_str()])?;
     let meta = engine.manifest().model(&cfg.model)?.clone();

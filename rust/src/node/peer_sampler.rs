@@ -7,6 +7,13 @@
 //! a new graph from the configured spec, computes Metropolis-Hastings
 //! weights, and replies with each node's `NeighborAssignment`. This
 //! doubles as the round barrier for dynamic experiments.
+//!
+//! Availability is pluggable ([`Availability`]): either the original
+//! per-round i.i.d. Bernoulli draw, or a replayable
+//! [`crate::scenario::ChurnTrace`]. Either way, unavailable nodes
+//! receive an empty assignment for the round — they keep training
+//! locally but skip the exchange — and the round's topology is drawn
+//! over the active set only.
 
 use std::collections::HashMap;
 
@@ -15,6 +22,7 @@ use anyhow::{bail, Context, Result};
 use crate::communication::{Envelope, MsgKind, Transport};
 use crate::graph::{from_spec, metropolis_hastings};
 use crate::rng::{mix_seed, Xoshiro256pp};
+use crate::scenario::Availability;
 
 use super::proto::{decode_control, encode_neighbors, Control, NeighborAssignment};
 
@@ -25,11 +33,10 @@ pub struct PeerSampler {
     /// Topology spec re-sampled every round (e.g. "regular:5").
     pub spec: String,
     pub seed: u64,
-    /// Per-round probability that a node is unavailable (FedScale-style
-    /// client churn, a paper future-work item). Unavailable nodes receive
-    /// an empty assignment for the round: they keep training locally but
-    /// skip the exchange, and the topology is drawn over the active set.
-    pub churn: f64,
+    /// Per-round availability model (FedScale-style client churn, a
+    /// paper future-work item): Bernoulli unavailability or a replayable
+    /// churn trace.
+    pub avail: Availability,
     pub transport: Box<dyn Transport>,
 }
 
@@ -58,7 +65,7 @@ impl PeerSampler {
                 }
             }
             for (node, assign) in
-                draw_round(&self.spec, self.seed, self.churn, self.nodes, round)?
+                draw_round(&self.spec, self.seed, &self.avail, self.nodes, round)?
                     .into_iter()
                     .enumerate()
             {
@@ -75,22 +82,27 @@ impl PeerSampler {
     }
 }
 
-/// Draw one round's topology for every node: availability churn, parity
-/// fix-up for d-regular specs, fresh graph + Metropolis-Hastings weights
-/// over the active set. Deterministic in `(seed, round)`; shared by the
+/// Draw one round's topology for every node: availability (Bernoulli or
+/// churn trace), parity fix-up for d-regular specs, fresh graph +
+/// Metropolis-Hastings weights over the active set. Deterministic in
+/// `(seed, round)` (a trace makes it replayable outright); shared by the
 /// threaded [`PeerSampler`] and the scheduler's `SamplerSm`. Inactive
 /// nodes get an empty assignment (train locally, skip the exchange).
 pub(crate) fn draw_round(
     spec: &str,
     seed: u64,
-    churn: f64,
+    avail: &Availability,
     nodes: usize,
     round: u64,
 ) -> Result<Vec<NeighborAssignment>> {
-    // Availability draw for this round.
+    // Availability draw for this round (the Bernoulli arm consumes rng
+    // draws in node order, exactly as the pre-trace implementation did).
     let mut rng = Xoshiro256pp::new(mix_seed(&[seed, 0x70_70, round]));
     let mut active: Vec<usize> = (0..nodes)
-        .filter(|_| churn <= 0.0 || rng.next_f64() >= churn)
+        .filter(|&node| match avail {
+            Availability::Bernoulli(p) => *p <= 0.0 || rng.next_f64() >= *p,
+            Availability::Trace(trace) => trace.active(node, round),
+        })
         .collect();
     // A d-regular draw needs |active| * d even and d < |active|; mark one
     // more node unavailable when the parity is wrong (random victim to
@@ -176,7 +188,7 @@ mod tests {
             rounds,
             spec: "regular:3".into(),
             seed: 7,
-            churn: 0.0,
+            avail: Availability::always(),
             transport: Box::new(hub.endpoint(nodes)),
         };
         let h = std::thread::spawn(move || sampler.run().unwrap());
@@ -230,7 +242,7 @@ mod tests {
             rounds: 2,
             spec: "regular:3".into(),
             seed: 3,
-            churn: 0.0,
+            avail: Availability::always(),
             transport: Box::new(hub.endpoint(nodes)),
         };
         let h = std::thread::spawn(move || sampler.run().unwrap());
@@ -268,7 +280,7 @@ mod tests {
             rounds: 100,
             spec: "ring".into(),
             seed: 1,
-            churn: 0.0,
+            avail: Availability::always(),
             transport: Box::new(hub.endpoint(2)),
         };
         let h = std::thread::spawn(move || sampler.run());
@@ -295,7 +307,7 @@ mod tests {
             rounds: 4,
             spec: "regular:3".into(),
             seed: 11,
-            churn: 0.4,
+            avail: Availability::Bernoulli(0.4),
             transport: Box::new(hub.endpoint(nodes)),
         };
         let h = std::thread::spawn(move || sampler.run().unwrap());
@@ -339,5 +351,41 @@ mod tests {
         }
         h.join().unwrap();
         assert!(saw_inactive, "40% churn never produced an inactive node");
+    }
+
+    #[test]
+    fn churn_trace_drives_active_set() {
+        use crate::scenario::ChurnTrace;
+        use std::sync::Arc;
+        // Node 2 departs after round 1; node 3 sits out round 1 only.
+        let dir = std::env::temp_dir().join("decentra_sampler_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.txt");
+        std::fs::write(&path, "2 0 2\n3 0 1\n3 2 -\n").unwrap();
+        let trace = Arc::new(ChurnTrace::from_file(path.to_str().unwrap(), 6).unwrap());
+        let avail = Availability::Trace(trace);
+        for round in 0..4u64 {
+            let rows = draw_round("regular:2", 5, &avail, 6, round).unwrap();
+            let inactive: Vec<usize> = rows
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.neighbors.is_empty())
+                .map(|(i, _)| i)
+                .collect();
+            match round {
+                0 => assert!(inactive.is_empty(), "round 0: {inactive:?}"),
+                1 => assert_eq!(inactive, vec![3]),
+                // Node 2 has departed; 3 is back.
+                _ => assert_eq!(inactive, vec![2]),
+            }
+            // Replayable: the same round draws the same rows.
+            assert_eq!(rows, draw_round("regular:2", 5, &avail, 6, round).unwrap());
+            // No active node lists an inactive one.
+            for (i, a) in rows.iter().enumerate() {
+                for &(n, _) in &a.neighbors {
+                    assert!(!inactive.contains(&n), "round {round}: {i} -> {n}");
+                }
+            }
+        }
     }
 }

@@ -6,8 +6,8 @@
 //! * [`SplitMix64`] — seed expansion / hashing (Steele et al.).
 //! * [`Xoshiro256pp`] — general-purpose PRNG for data generation,
 //!   partitioning, topology sampling (Blackman & Vigna's xoshiro256++).
-//! * [`AesCtrPrg`] (in [`crate::secure`]) builds on the cached `aes` crate
-//!   for cryptographic mask expansion.
+//! * AES-CTR mask expansion (in [`crate::secure`]) builds on the cached
+//!   `aes` crate for cryptographic mask streams.
 //!
 //! Every experiment seeds its generators from `(experiment_seed, node_id,
 //! round)` via [`SplitMix64`], which makes all runs bit-reproducible — the

@@ -1,0 +1,340 @@
+//! Replayable availability churn: who is online at which round.
+//!
+//! The PR-1 peer sampler modeled availability as i.i.d. Bernoulli coin
+//! flips per round. A [`ChurnTrace`] replaces that with explicit,
+//! replayable per-node online intervals — arrival/departure traces in
+//! the FedScale style — so runs with churn are exactly reproducible and
+//! can express *sessions* (nodes that leave and come back) and
+//! *departures* (nodes that leave for good). [`Availability`] is the
+//! bridge type the peer sampler consumes: either the legacy Bernoulli
+//! draw or a trace.
+//!
+//! Spec grammar (the config's `churn_trace` key / `--churn-trace` flag):
+//!
+//! * empty — no trace; the `churn` config key's Bernoulli draw applies
+//!   (PR-1 behavior).
+//! * `trace:<path>` — interval file: one `node start end` triple per
+//!   line, `end` exclusive, `-` meaning "never leaves"; nodes with no
+//!   line are always online; `#` comments allowed.
+//! * `sessions:<mean_on>:<mean_off>` — every node alternates online /
+//!   offline sessions whose lengths are uniform in `[1, 2*mean - 1]`
+//!   rounds (mean `mean`), starting online at round 0. Seeded.
+//! * `departures:<frac>` — each node independently departs for good
+//!   with probability `frac`, at a seeded round in `[1, rounds)`.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::{mix_seed, Xoshiro256pp};
+
+/// Sentinel round meaning "never" (an interval that does not end).
+pub const FOREVER: u64 = u64::MAX;
+
+/// Per-round node availability for the peer sampler and the scheduler's
+/// DL state machines.
+#[derive(Debug, Clone)]
+pub enum Availability {
+    /// Each node is independently unavailable with probability `p` each
+    /// round (the PR-1 i.i.d. model; `0.0` = everyone always on).
+    Bernoulli(f64),
+    /// Replayable arrival/departure trace.
+    Trace(Arc<ChurnTrace>),
+}
+
+impl Availability {
+    /// Everyone online every round.
+    pub fn always() -> Availability {
+        Availability::Bernoulli(0.0)
+    }
+}
+
+/// Per-node online intervals, half-open `[start, end)` in rounds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnTrace {
+    /// Sorted, disjoint intervals per node.
+    intervals: Vec<Vec<(u64, u64)>>,
+}
+
+impl ChurnTrace {
+    /// Everyone online forever (degenerate trace).
+    pub fn always_on(nodes: usize) -> ChurnTrace {
+        ChurnTrace { intervals: vec![vec![(0, FOREVER)]; nodes] }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.intervals.len()
+    }
+
+    /// Is `node` online at `round`? Ranks beyond the trace (e.g. the
+    /// peer sampler's service rank) are always online.
+    pub fn active(&self, node: usize, round: u64) -> bool {
+        match self.intervals.get(node) {
+            None => true,
+            Some(iv) => iv.iter().any(|&(s, e)| s <= round && round < e),
+        }
+    }
+
+    /// The last round `node` is online: `None` if it is never online,
+    /// `Some(FOREVER)` if it never leaves for good. A node whose last
+    /// online round is `r` has *departed* once its clock passes `r` —
+    /// the scheduler then drops deliveries still in flight to it.
+    pub fn last_online_round(&self, node: usize) -> Option<u64> {
+        let iv = match self.intervals.get(node) {
+            None => return Some(FOREVER),
+            Some(iv) => iv,
+        };
+        iv.last().map(|&(_, e)| if e == FOREVER { FOREVER } else { e - 1 })
+    }
+
+    /// Check spec syntax without touching the filesystem.
+    pub fn validate_spec(spec: &str) -> Result<()> {
+        parse_spec(spec).map(|_| ())
+    }
+
+    /// Materialize a trace for `nodes` nodes and `rounds` rounds;
+    /// `Ok(None)` for the empty spec (Bernoulli churn applies).
+    pub fn from_spec(
+        spec: &str,
+        nodes: usize,
+        rounds: u64,
+        seed: u64,
+    ) -> Result<Option<ChurnTrace>> {
+        Ok(match parse_spec(spec)? {
+            Spec::None => None,
+            Spec::File { path } => Some(ChurnTrace::from_file(&path, nodes)?),
+            Spec::Sessions { mean_on, mean_off } => {
+                Some(ChurnTrace::sessions(nodes, rounds, mean_on, mean_off, seed))
+            }
+            Spec::Departures { frac } => Some(ChurnTrace::departures(nodes, rounds, frac, seed)),
+        })
+    }
+
+    /// Parse an interval file (`node start end`, `end` exclusive or `-`).
+    pub fn from_file(path: &str, nodes: usize) -> Result<ChurnTrace> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading churn trace {path}"))?;
+        let mut intervals: Vec<Vec<(u64, u64)>> = vec![Vec::new(); nodes];
+        let mut mentioned = vec![false; nodes];
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let bad = || format!("{path}:{}: expected `node start end` (end = round or -)", i + 1);
+            let mut parts = line.split_whitespace();
+            let node: usize = parts.next().with_context(bad)?.parse().with_context(bad)?;
+            let start: u64 = parts.next().with_context(bad)?.parse().with_context(bad)?;
+            let end_tok = parts.next().with_context(bad)?;
+            let end = if end_tok == "-" || end_tok == "inf" {
+                FOREVER
+            } else {
+                end_tok.parse().with_context(bad)?
+            };
+            if node >= nodes {
+                bail!("{path}:{}: node {node} out of range (fleet has {nodes})", i + 1);
+            }
+            if end <= start {
+                bail!("{path}:{}: empty interval [{start}, {end})", i + 1);
+            }
+            intervals[node].push((start, end));
+            mentioned[node] = true;
+        }
+        for (node, m) in mentioned.iter().enumerate() {
+            if !m {
+                intervals[node].push((0, FOREVER));
+            }
+        }
+        for (node, iv) in intervals.iter_mut().enumerate() {
+            iv.sort_unstable();
+            for w in iv.windows(2) {
+                if w[1].0 < w[0].1 {
+                    bail!("churn trace {path}: node {node} has overlapping intervals");
+                }
+            }
+        }
+        Ok(ChurnTrace { intervals })
+    }
+
+    /// Alternating online/offline sessions per node, starting online at
+    /// round 0; session lengths are uniform in `[1, 2*mean - 1]`.
+    pub fn sessions(nodes: usize, rounds: u64, mean_on: u64, mean_off: u64, seed: u64) -> ChurnTrace {
+        let draw = |rng: &mut Xoshiro256pp, mean: u64| -> u64 {
+            1 + rng.below(2 * mean.max(1) - 1)
+        };
+        let intervals = (0..nodes)
+            .map(|node| {
+                let mut rng = Xoshiro256pp::new(mix_seed(&[seed, 0xC4_9A, node as u64]));
+                let mut iv = Vec::new();
+                let mut t = 0u64;
+                let mut online = true;
+                while t < rounds {
+                    let len = draw(&mut rng, if online { mean_on } else { mean_off });
+                    if online {
+                        iv.push((t, t + len));
+                    }
+                    t += len;
+                    online = !online;
+                }
+                iv
+            })
+            .collect();
+        ChurnTrace { intervals }
+    }
+
+    /// Each node independently departs for good with probability `frac`,
+    /// at a seeded round in `[1, rounds)`; the rest never leave.
+    pub fn departures(nodes: usize, rounds: u64, frac: f64, seed: u64) -> ChurnTrace {
+        let mut rng = Xoshiro256pp::new(mix_seed(&[seed, 0xDE_9A]));
+        let intervals = (0..nodes)
+            .map(|_| {
+                if rounds >= 2 && rng.next_f64() < frac {
+                    let d = 1 + rng.below(rounds - 1);
+                    vec![(0, d)]
+                } else {
+                    vec![(0, FOREVER)]
+                }
+            })
+            .collect();
+        ChurnTrace { intervals }
+    }
+}
+
+enum Spec {
+    None,
+    File { path: String },
+    Sessions { mean_on: u64, mean_off: u64 },
+    Departures { frac: f64 },
+}
+
+fn parse_spec(spec: &str) -> Result<Spec> {
+    if spec.is_empty() {
+        return Ok(Spec::None);
+    }
+    if let Some(path) = spec.strip_prefix("trace:") {
+        if path.is_empty() {
+            bail!("churn trace spec is trace:<path>");
+        }
+        return Ok(Spec::File { path: path.to_string() });
+    }
+    if let Some(rest) = spec.strip_prefix("sessions:") {
+        let (a, b) = rest
+            .split_once(':')
+            .context("sessions spec is sessions:<mean_on>:<mean_off>")?;
+        let mean_on: u64 = a.parse().with_context(|| format!("bad mean_on {a:?}"))?;
+        let mean_off: u64 = b.parse().with_context(|| format!("bad mean_off {b:?}"))?;
+        if mean_on == 0 || mean_off == 0 {
+            bail!("session means must be >= 1 round");
+        }
+        return Ok(Spec::Sessions { mean_on, mean_off });
+    }
+    if let Some(rest) = spec.strip_prefix("departures:") {
+        let frac: f64 = rest.parse().with_context(|| format!("bad departure fraction {rest:?}"))?;
+        if !(0.0..=1.0).contains(&frac) {
+            bail!("departure fraction must be in [0, 1] (got {frac})");
+        }
+        return Ok(Spec::Departures { frac });
+    }
+    bail!(
+        "unknown churn spec {spec:?} \
+         (expected trace:<path> | sessions:<mean_on>:<mean_off> | departures:<frac>)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn always_on_never_departs() {
+        let t = ChurnTrace::always_on(4);
+        assert!(t.active(2, 0) && t.active(2, 1_000_000));
+        assert_eq!(t.last_online_round(2), Some(FOREVER));
+        assert!(t.active(99, 5)); // out-of-range rank fallback
+        assert_eq!(t.last_online_round(99), Some(FOREVER));
+    }
+
+    #[test]
+    fn file_roundtrip_intervals() {
+        let dir = std::env::temp_dir().join("decentra_churn_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("churn.txt");
+        std::fs::write(&path, "# availability\n0 0 -\n1 0 5\n1 8 -\n2 0 3\n").unwrap();
+        let t = ChurnTrace::from_file(path.to_str().unwrap(), 4).unwrap();
+        // Node 0: always on.
+        assert!(t.active(0, 100));
+        // Node 1: on [0,5), off [5,8), on from 8.
+        assert!(t.active(1, 4) && !t.active(1, 5) && !t.active(1, 7) && t.active(1, 8));
+        assert_eq!(t.last_online_round(1), Some(FOREVER));
+        // Node 2: departs after round 2.
+        assert!(t.active(2, 2) && !t.active(2, 3));
+        assert_eq!(t.last_online_round(2), Some(2));
+        // Node 3: not mentioned -> always on.
+        assert!(t.active(3, 42));
+    }
+
+    #[test]
+    fn file_rejects_bad_lines() {
+        let dir = std::env::temp_dir().join("decentra_churn_trace_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, body) in [
+            ("overlap.txt", "0 0 5\n0 3 8\n"),
+            ("empty_iv.txt", "0 5 5\n"),
+            ("range.txt", "9 0 -\n"),
+            ("garbage.txt", "zero one two\n"),
+        ] {
+            let path = dir.join(name);
+            std::fs::write(&path, body).unwrap();
+            assert!(ChurnTrace::from_file(path.to_str().unwrap(), 4).is_err(), "{name}");
+        }
+    }
+
+    #[test]
+    fn sessions_deterministic_start_online_and_mix() {
+        let a = ChurnTrace::sessions(32, 40, 6, 3, 11);
+        let b = ChurnTrace::sessions(32, 40, 6, 3, 11);
+        assert_eq!(a, b);
+        // Everyone starts online.
+        assert!((0..32).all(|i| a.active(i, 0)));
+        // Some node is offline at some round (3-round mean gaps in 40
+        // rounds make an all-online draw astronomically unlikely).
+        let some_off =
+            (0..32).any(|i| (0..40).any(|r| !a.active(i, r)));
+        assert!(some_off);
+    }
+
+    #[test]
+    fn departures_split_fleet() {
+        let t = ChurnTrace::departures(64, 20, 0.5, 5);
+        let gone = (0..64)
+            .filter(|&i| t.last_online_round(i) != Some(FOREVER))
+            .count();
+        assert!((16..=48).contains(&gone), "{gone} departures");
+        for i in 0..64 {
+            match t.last_online_round(i) {
+                Some(FOREVER) => assert!(t.active(i, 1_000)),
+                Some(last) => {
+                    assert!((1..20).contains(&(last + 1)), "depart round {}", last + 1);
+                    assert!(t.active(i, last) && !t.active(i, last + 1));
+                }
+                None => panic!("node {i} never online"),
+            }
+        }
+    }
+
+    #[test]
+    fn spec_validation() {
+        for good in ["", "trace:/tmp/x", "sessions:6:3", "departures:0.25"] {
+            assert!(ChurnTrace::validate_spec(good).is_ok(), "{good}");
+        }
+        for bad in ["trace:", "sessions:0:3", "sessions:6", "departures:1.5", "bernoulli:0.2"] {
+            assert!(ChurnTrace::validate_spec(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn from_spec_empty_is_none() {
+        assert!(ChurnTrace::from_spec("", 8, 10, 1).unwrap().is_none());
+        assert!(ChurnTrace::from_spec("departures:0.2", 8, 10, 1).unwrap().is_some());
+    }
+}

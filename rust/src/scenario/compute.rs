@@ -1,0 +1,228 @@
+//! Per-node compute heterogeneity: a step-time multiplier for every node.
+//!
+//! The coordinator calibrates one `step_time_s` for the whole fleet; a
+//! [`ComputePlan`] scales it per node so slow devices (stragglers) take
+//! proportionally longer in virtual time. Spec grammar (the config's
+//! `step_time` key / the `--step-time-trace` flag):
+//!
+//! * `uniform` — every node runs at the calibrated speed (the default,
+//!   bit-identical to not having a plan at all).
+//! * `stragglers:<frac>:<factor>` — each node is independently a
+//!   straggler with probability `frac`; stragglers are `factor`× slower.
+//! * `lognormal:<sigma>` — multiplier `exp(sigma * z)` with `z` standard
+//!   normal, a FedScale-style heavy-tailed device distribution.
+//! * `trace:<path>` — one positive multiplier per line (`#` comments
+//!   allowed), FedScale-device-trace style; entries are cycled when the
+//!   file has fewer lines than the fleet has nodes.
+//!
+//! All seeded draws are deterministic in `(seed, spec)`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::Xoshiro256pp;
+
+/// Parsed spec, before any file IO or random draws.
+enum Spec {
+    Uniform,
+    Stragglers { frac: f64, factor: f64 },
+    LogNormal { sigma: f64 },
+    Trace { path: String },
+}
+
+fn parse_spec(spec: &str) -> Result<Spec> {
+    if spec.is_empty() || spec == "uniform" {
+        return Ok(Spec::Uniform);
+    }
+    if let Some(rest) = spec.strip_prefix("stragglers:") {
+        let (a, b) = rest
+            .split_once(':')
+            .context("stragglers spec is stragglers:<frac>:<factor>")?;
+        let frac: f64 = a.parse().with_context(|| format!("bad straggler fraction {a:?}"))?;
+        let factor: f64 = b.parse().with_context(|| format!("bad straggler factor {b:?}"))?;
+        if !(0.0..=1.0).contains(&frac) {
+            bail!("straggler fraction must be in [0, 1] (got {frac})");
+        }
+        if !(factor > 0.0) {
+            bail!("straggler factor must be positive (got {factor})");
+        }
+        return Ok(Spec::Stragglers { frac, factor });
+    }
+    if let Some(rest) = spec.strip_prefix("lognormal:") {
+        let sigma: f64 = rest.parse().with_context(|| format!("bad lognormal sigma {rest:?}"))?;
+        if !(sigma >= 0.0) {
+            bail!("lognormal sigma must be >= 0 (got {sigma})");
+        }
+        return Ok(Spec::LogNormal { sigma });
+    }
+    if let Some(path) = spec.strip_prefix("trace:") {
+        if path.is_empty() {
+            bail!("trace spec is trace:<path>");
+        }
+        return Ok(Spec::Trace { path: path.to_string() });
+    }
+    bail!(
+        "unknown step-time spec {spec:?} \
+         (expected uniform | stragglers:<frac>:<factor> | lognormal:<sigma> | trace:<path>)"
+    )
+}
+
+/// One step-time multiplier per node (1.0 = the calibrated speed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComputePlan {
+    multipliers: Vec<f64>,
+}
+
+impl ComputePlan {
+    /// Every node at the calibrated speed.
+    pub fn uniform(nodes: usize) -> ComputePlan {
+        ComputePlan { multipliers: vec![1.0; nodes] }
+    }
+
+    /// Check spec syntax without touching the filesystem (config
+    /// validation runs this; `trace:` files are read only at prepare).
+    pub fn validate_spec(spec: &str) -> Result<()> {
+        parse_spec(spec).map(|_| ())
+    }
+
+    /// Materialize a plan for `nodes` nodes. Deterministic in `seed`.
+    pub fn from_spec(spec: &str, nodes: usize, seed: u64) -> Result<ComputePlan> {
+        let multipliers = match parse_spec(spec)? {
+            Spec::Uniform => vec![1.0; nodes],
+            Spec::Stragglers { frac, factor } => {
+                let mut rng = Xoshiro256pp::new(seed);
+                (0..nodes)
+                    .map(|_| if rng.next_f64() < frac { factor } else { 1.0 })
+                    .collect()
+            }
+            Spec::LogNormal { sigma } => {
+                let mut rng = Xoshiro256pp::new(seed);
+                (0..nodes).map(|_| (sigma * rng.next_normal()).exp()).collect()
+            }
+            Spec::Trace { path } => {
+                let entries = read_trace(&path)?;
+                (0..nodes).map(|i| entries[i % entries.len()]).collect()
+            }
+        };
+        Ok(ComputePlan { multipliers })
+    }
+
+    /// The step-time multiplier for `node`. Ranks beyond the plan (e.g.
+    /// the peer sampler's service rank) run at the calibrated speed.
+    pub fn multiplier(&self, node: usize) -> f64 {
+        self.multipliers.get(node).copied().unwrap_or(1.0)
+    }
+
+    /// True when every node runs at exactly the calibrated speed (the
+    /// degenerate scenario; runs are bit-identical to having no plan).
+    pub fn is_uniform(&self) -> bool {
+        self.multipliers.iter().all(|&m| m == 1.0)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.multipliers.len()
+    }
+}
+
+/// Read a multiplier-per-line trace file.
+fn read_trace(path: &str) -> Result<Vec<f64>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading step-time trace {path}"))?;
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let m: f64 = line
+            .parse()
+            .with_context(|| format!("{path}:{}: bad multiplier {line:?}", i + 1))?;
+        if !(m > 0.0) {
+            bail!("{path}:{}: multiplier must be positive (got {m})", i + 1);
+        }
+        out.push(m);
+    }
+    if out.is_empty() {
+        bail!("step-time trace {path} has no entries");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_all_ones() {
+        let p = ComputePlan::from_spec("uniform", 8, 1).unwrap();
+        assert!(p.is_uniform());
+        assert_eq!(p.multiplier(3), 1.0);
+        assert_eq!(p.multiplier(100), 1.0); // out-of-range rank fallback
+    }
+
+    #[test]
+    fn stragglers_deterministic_and_fractional() {
+        let a = ComputePlan::from_spec("stragglers:0.25:4", 64, 9).unwrap();
+        let b = ComputePlan::from_spec("stragglers:0.25:4", 64, 9).unwrap();
+        assert_eq!(a, b);
+        let slow = (0..64).filter(|&i| a.multiplier(i) == 4.0).count();
+        let fast = (0..64).filter(|&i| a.multiplier(i) == 1.0).count();
+        assert_eq!(slow + fast, 64);
+        assert!((4..=32).contains(&slow), "{slow} stragglers");
+        assert!(!a.is_uniform());
+    }
+
+    #[test]
+    fn straggler_factor_one_is_degenerate() {
+        let p = ComputePlan::from_spec("stragglers:0.5:1", 32, 7).unwrap();
+        assert!(p.is_uniform());
+    }
+
+    #[test]
+    fn lognormal_positive_and_spread() {
+        let p = ComputePlan::from_spec("lognormal:0.5", 128, 3).unwrap();
+        assert!((0..128).all(|i| p.multiplier(i) > 0.0));
+        assert!(!p.is_uniform());
+        // sigma 0 degenerates to uniform.
+        let z = ComputePlan::from_spec("lognormal:0", 16, 3).unwrap();
+        assert!(z.is_uniform());
+    }
+
+    #[test]
+    fn trace_file_cycles() {
+        let dir = std::env::temp_dir().join("decentra_compute_trace");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("devices.txt");
+        std::fs::write(&path, "# device speeds\n1.0\n2.5\n0.5\n").unwrap();
+        let spec = format!("trace:{}", path.display());
+        let p = ComputePlan::from_spec(&spec, 5, 0).unwrap();
+        assert_eq!(p.multiplier(0), 1.0);
+        assert_eq!(p.multiplier(1), 2.5);
+        assert_eq!(p.multiplier(2), 0.5);
+        assert_eq!(p.multiplier(3), 1.0); // cycled
+        assert_eq!(p.multiplier(4), 2.5);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        for bad in [
+            "stragglers:2:4",
+            "stragglers:0.5:0",
+            "stragglers:0.5",
+            "lognormal:-1",
+            "trace:",
+            "warp:9",
+        ] {
+            assert!(ComputePlan::validate_spec(bad).is_err(), "{bad}");
+        }
+        for good in ["uniform", "", "stragglers:0.1:8", "lognormal:0.3", "trace:/tmp/x"] {
+            assert!(ComputePlan::validate_spec(good).is_ok(), "{good}");
+        }
+    }
+
+    #[test]
+    fn missing_trace_file_errors_at_materialize_not_validate() {
+        let spec = "trace:/nonexistent/decentra/devices.txt";
+        assert!(ComputePlan::validate_spec(spec).is_ok());
+        assert!(ComputePlan::from_spec(spec, 4, 0).is_err());
+    }
+}

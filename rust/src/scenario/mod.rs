@@ -1,0 +1,213 @@
+//! Heterogeneity & WAN scenarios: who is slow, which links are far,
+//! who is online.
+//!
+//! The paper's claim is that the emulation captures "practical and
+//! crucial behaviors … associated to parallelism, data transfer,
+//! network delays, and wall-clock time". PR 1's virtual-time scheduler
+//! made per-message timing faithful but still modeled every node as
+//! equally fast, every link as one `(latency, bandwidth)` pair, and
+//! availability as i.i.d. coin flips. A [`Scenario`] layers three
+//! orthogonal, independently-specified axes on top of a base config:
+//!
+//! * **Compute heterogeneity** ([`ComputePlan`]) — a per-node step-time
+//!   multiplier (seeded distribution or FedScale-style trace file), so
+//!   stragglers delay their neighbors' `AwaitModels` completion in
+//!   virtual time.
+//! * **Per-link delays** ([`crate::communication::shaper::LinkMatrix`])
+//!   — a dense `(src, dst)` latency/bandwidth lookup (geo-clustered WAN
+//!   preset or matrix file) applied at delivery timestamping in the
+//!   scheduler.
+//! * **Availability churn** ([`ChurnTrace`] / [`Availability`]) —
+//!   replayable per-node online intervals replacing the Bernoulli draw;
+//!   nodes can sit out rounds, return, or depart for good, in which
+//!   case the scheduler drops their in-flight deliveries.
+//!
+//! Every axis has a *degenerate* spec (`uniform` / `uniform` / empty)
+//! under which runs stay **bit-identical** to the plain PR-1 scheduler
+//! path — scenarios are pure extensions, never silent behavior changes.
+//! Specs enter through the config keys `step_time`, `link_model`, and
+//! `churn_trace`, or the CLI flags `--step-time-trace`, `--link-model`,
+//! `--churn-trace`, and `--scenario` (a JSON overlay file). See
+//! `docs/ARCHITECTURE.md` for the subsystem walk-through and
+//! `docs/CLI.md` for the full spec grammars.
+
+mod churn;
+mod compute;
+
+pub use churn::{Availability, ChurnTrace, FOREVER};
+pub use compute::ComputePlan;
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::communication::shaper::{LinkMatrix, LinkModel, NetworkModel};
+use crate::rng::mix_seed;
+
+/// Check a `link_model` spec's syntax (no filesystem access).
+pub fn validate_link_spec(spec: &str) -> Result<()> {
+    parse_link_spec(spec).map(|_| ())
+}
+
+enum LinkSpec {
+    Uniform,
+    Geo { clusters: usize },
+    Matrix { path: String },
+}
+
+fn parse_link_spec(spec: &str) -> Result<LinkSpec> {
+    if spec.is_empty() || spec == "uniform" {
+        return Ok(LinkSpec::Uniform);
+    }
+    if let Some(rest) = spec.strip_prefix("geo:") {
+        let clusters: usize = rest.parse().with_context(|| format!("bad cluster count {rest:?}"))?;
+        if clusters == 0 {
+            bail!("geo spec needs >= 1 cluster");
+        }
+        return Ok(LinkSpec::Geo { clusters });
+    }
+    if let Some(path) = spec.strip_prefix("matrix:") {
+        if path.is_empty() {
+            bail!("matrix spec is matrix:<path>");
+        }
+        return Ok(LinkSpec::Matrix { path: path.to_string() });
+    }
+    bail!("unknown link-model spec {spec:?} (expected uniform | geo:<clusters> | matrix:<path>)")
+}
+
+/// Resolve a `link_model` spec into what the scheduler consumes.
+/// `base` is the config's uniform network model (`None` = untimed);
+/// `uniform` defers to it, matrix specs override it.
+pub fn link_model_from_spec(
+    spec: &str,
+    nodes: usize,
+    seed: u64,
+    base: Option<NetworkModel>,
+) -> Result<Option<LinkModel>> {
+    Ok(match parse_link_spec(spec)? {
+        LinkSpec::Uniform => base.map(LinkModel::Uniform),
+        LinkSpec::Geo { clusters } => Some(LinkModel::Matrix(Arc::new(
+            LinkMatrix::geo_clustered(nodes, clusters, seed),
+        ))),
+        LinkSpec::Matrix { path } => {
+            let default = base.unwrap_or_else(NetworkModel::lan);
+            Some(LinkModel::Matrix(Arc::new(LinkMatrix::from_file(&path, nodes, default)?)))
+        }
+    })
+}
+
+/// One fully-resolved scenario: everything the runners need beyond the
+/// base config. Built once per experiment by `coordinator::prepare()`.
+pub struct Scenario {
+    /// Per-node step-time multipliers.
+    pub compute: ComputePlan,
+    /// Delivery-timestamping model for the scheduler (`None` = untimed).
+    pub links: Option<LinkModel>,
+    /// Replayable availability (`None` = the config's Bernoulli churn).
+    pub churn: Option<Arc<ChurnTrace>>,
+}
+
+impl Scenario {
+    /// The all-degenerate scenario (PR-1 behavior) over `base`.
+    pub fn degenerate(nodes: usize, base: Option<NetworkModel>) -> Scenario {
+        Scenario {
+            compute: ComputePlan::uniform(nodes),
+            links: base.map(LinkModel::Uniform),
+            churn: None,
+        }
+    }
+
+    /// Materialize the three axes from their config specs. Seeds for
+    /// each axis derive from the experiment seed with distinct labels,
+    /// so e.g. changing the churn spec never reshuffles stragglers.
+    pub fn from_specs(
+        step_time: &str,
+        link_model: &str,
+        churn_trace: &str,
+        base: Option<NetworkModel>,
+        nodes: usize,
+        rounds: u64,
+        seed: u64,
+    ) -> Result<Scenario> {
+        Ok(Scenario {
+            compute: ComputePlan::from_spec(step_time, nodes, mix_seed(&[seed, 0x5CE0]))?,
+            links: link_model_from_spec(link_model, nodes, mix_seed(&[seed, 0x11EF]), base)?,
+            churn: ChurnTrace::from_spec(churn_trace, nodes, rounds, mix_seed(&[seed, 0xC0A1]))?,
+        })
+    }
+
+    /// The availability model the peer sampler should use in dynamic
+    /// mode (`bernoulli` is the config's churn probability).
+    pub fn availability(&self, bernoulli: f64) -> Availability {
+        match &self.churn {
+            Some(t) => Availability::Trace(Arc::clone(t)),
+            None => Availability::Bernoulli(bernoulli),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_spec_validation() {
+        for good in ["uniform", "", "geo:4", "matrix:/tmp/links.txt"] {
+            assert!(validate_link_spec(good).is_ok(), "{good}");
+        }
+        for bad in ["geo:0", "geo:x", "matrix:", "mesh:3"] {
+            assert!(validate_link_spec(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn uniform_link_spec_defers_to_base() {
+        let base = NetworkModel::lan();
+        match link_model_from_spec("uniform", 8, 1, Some(base)).unwrap() {
+            Some(LinkModel::Uniform(m)) => assert_eq!(m, base),
+            other => panic!("expected uniform, got {other:?}"),
+        }
+        assert!(link_model_from_spec("uniform", 8, 1, None).unwrap().is_none());
+        // A matrix spec produces timing even with an untimed base.
+        assert!(link_model_from_spec("geo:2", 8, 1, None).unwrap().is_some());
+    }
+
+    #[test]
+    fn degenerate_scenario_axes() {
+        let s = Scenario::degenerate(16, Some(NetworkModel::wan()));
+        assert!(s.compute.is_uniform());
+        assert!(s.churn.is_none());
+        assert!(matches!(s.links, Some(LinkModel::Uniform(_))));
+        assert!(matches!(s.availability(0.3), Availability::Bernoulli(p) if p == 0.3));
+    }
+
+    #[test]
+    fn from_specs_builds_all_axes() {
+        let s = Scenario::from_specs(
+            "stragglers:0.25:4",
+            "geo:4",
+            "departures:0.25",
+            Some(NetworkModel::lan()),
+            64,
+            20,
+            7,
+        )
+        .unwrap();
+        assert!(!s.compute.is_uniform());
+        assert!(matches!(s.links, Some(LinkModel::Matrix(_))));
+        assert!(s.churn.is_some());
+        assert!(matches!(s.availability(0.0), Availability::Trace(_)));
+        // Deterministic in the seed.
+        let t = Scenario::from_specs(
+            "stragglers:0.25:4",
+            "geo:4",
+            "departures:0.25",
+            Some(NetworkModel::lan()),
+            64,
+            20,
+            7,
+        )
+        .unwrap();
+        assert_eq!(s.compute, t.compute);
+    }
+}

@@ -9,13 +9,19 @@
 //!
 //! * `Start` — a node's first activation at t = 0.
 //! * `Deliver` — a message arrival. Delivery timestamps come from the
-//!   [`NetworkModel`]: each sender owns a serial uplink, so message *k*
+//!   [`LinkModel`]: each sender owns a serial uplink, so message *k*
 //!   of a burst finishes at `max(now, uplink_free) + bytes/bandwidth`
-//!   and arrives one latency later. Virtual time therefore reflects the
-//!   actual arrival *order* under the modeled network — unlike the
-//!   thread-per-node path, which only charged an aggregate per-round
-//!   upload cost after the fact. Without a network model, delivery is
-//!   immediate and ordered by sequence number.
+//!   and arrives one latency later; with a per-link matrix
+//!   ([`crate::communication::shaper::LinkMatrix`]) the bandwidth and
+//!   latency are looked up per `(src, dst)` pair, with a uniform
+//!   [`NetworkModel`] every link shares them. Virtual time therefore
+//!   reflects the actual arrival *order* under the modeled network —
+//!   unlike the thread-per-node path, which only charged an aggregate
+//!   per-round upload cost after the fact. Without a network model,
+//!   delivery is immediate and ordered by sequence number. Deliveries
+//!   addressed to a **departed** node (one that called
+//!   [`NodeCtx::depart`], e.g. on a churn-trace departure) are dropped
+//!   at pop time and counted in [`Scheduler::dropped_deliveries`].
 //! * `ComputeDone` — completion of a node's local compute (training
 //!   step(s), evaluation), stamped with the calibrated step time. The
 //!   actual computation runs on a **bounded worker pool** (`workers ≈
@@ -48,7 +54,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::communication::shaper::NetworkModel;
+use crate::communication::shaper::{LinkModel, NetworkModel};
 use crate::communication::{wire_size, Counters, CountersSnapshot, Envelope};
 use crate::dataset::Dataset;
 use crate::metrics::NodeLog;
@@ -88,6 +94,7 @@ pub struct NodeCtx {
     counters: Counters,
     sends: Vec<Envelope>,
     compute: Option<(f64, ComputeFn)>,
+    departed: bool,
 }
 
 impl NodeCtx {
@@ -110,6 +117,14 @@ impl NodeCtx {
     /// are included; the current wake's are counted after it returns).
     pub fn counters(&self) -> CountersSnapshot {
         self.counters.snapshot()
+    }
+
+    /// Mark this node as permanently departed (churn-trace departure).
+    /// Sends staged in the same wake still go out — a node may push its
+    /// last update and leave — but every delivery addressed to it from
+    /// now on is dropped instead of waking it.
+    pub fn depart(&mut self) {
+        self.departed = true;
     }
 }
 
@@ -245,7 +260,7 @@ impl WorkerPool {
 ///
 /// [`run`]: Scheduler::run
 pub struct Scheduler {
-    network: Option<NetworkModel>,
+    links: Option<LinkModel>,
     workers: usize,
     nodes: Vec<Option<Box<dyn EventNode>>>,
     queue: BinaryHeap<std::cmp::Reverse<Event>>,
@@ -254,14 +269,22 @@ pub struct Scheduler {
     node_time: Vec<f64>,
     uplink_free: Vec<f64>,
     counters: Vec<Counters>,
+    departed: Vec<bool>,
+    dropped: u64,
 }
 
 impl Scheduler {
     /// `network = None` means untimed delivery (all events at t = 0, in
     /// staging order); `workers` is the pool size (>= 1 enforced).
     pub fn new(network: Option<NetworkModel>, workers: usize) -> Scheduler {
+        Scheduler::with_links(network.map(LinkModel::Uniform), workers)
+    }
+
+    /// Like [`new`](Scheduler::new), but with a general [`LinkModel`]
+    /// (a per-link matrix for WAN scenarios, or the uniform model).
+    pub fn with_links(links: Option<LinkModel>, workers: usize) -> Scheduler {
         Scheduler {
-            network,
+            links,
             workers: workers.max(1),
             nodes: Vec::new(),
             queue: BinaryHeap::new(),
@@ -270,6 +293,8 @@ impl Scheduler {
             node_time: Vec::new(),
             uplink_free: Vec::new(),
             counters: Vec::new(),
+            departed: Vec::new(),
+            dropped: 0,
         }
     }
 
@@ -280,6 +305,7 @@ impl Scheduler {
         self.node_time.push(0.0);
         self.uplink_free.push(0.0);
         self.counters.push(Counters::new());
+        self.departed.push(false);
         id
     }
 
@@ -295,6 +321,11 @@ impl Scheduler {
 
     pub fn counters(&self, id: usize) -> CountersSnapshot {
         self.counters[id].snapshot()
+    }
+
+    /// Deliveries dropped because their destination had departed.
+    pub fn dropped_deliveries(&self) -> u64 {
+        self.dropped
     }
 
     fn push(&mut self, at: f64, kind: EventKind) {
@@ -339,6 +370,11 @@ impl Scheduler {
                     if dst >= self.nodes.len() {
                         bail!("message to unknown node {dst}");
                     }
+                    if self.departed[dst] {
+                        // In flight to a node that left; drop on the floor.
+                        self.dropped += 1;
+                        continue;
+                    }
                     self.counters[dst].on_recv(wire_size(&env));
                     (dst, Wake::Message(env))
                 }
@@ -362,30 +398,36 @@ impl Scheduler {
             counters: self.counters[node].clone(),
             sends: Vec::new(),
             compute: None,
+            departed: false,
         };
         let handled = sm.on_event(&mut ctx, wake);
         self.nodes[node] = Some(sm);
         handled?;
-        let NodeCtx { sends, compute, .. } = ctx;
+        let NodeCtx { sends, compute, departed, .. } = ctx;
+        if departed {
+            self.departed[node] = true;
+        }
         let now = self.node_time[node];
         for env in sends {
             let bytes = wire_size(&env);
             self.counters[node].on_send(bytes);
-            let deliver_at = match self.network {
-                Some(net) => {
+            let deliver_at = match &self.links {
+                Some(links) => {
                     // The sender's uplink is serial: bursts queue behind
                     // each other; latency is per-message and pipelined.
+                    // Bandwidth and latency are the (src, dst) link's.
+                    let (latency_s, bandwidth_bps) = links.link(node, env.dst);
                     let start = self.uplink_free[node].max(now);
-                    let finish = start + bytes as f64 / net.bandwidth_bps;
+                    let finish = start + bytes as f64 / bandwidth_bps;
                     self.uplink_free[node] = finish;
-                    finish + net.latency_s
+                    finish + latency_s
                 }
                 None => now,
             };
             self.push(deliver_at, EventKind::Deliver { env });
         }
         if let Some((duration_s, body)) = compute {
-            let duration_s = if self.network.is_some() { duration_s } else { 0.0 };
+            let duration_s = if self.links.is_some() { duration_s } else { 0.0 };
             let job = self.next_job;
             self.next_job += 1;
             self.push(now + duration_s, EventKind::ComputeDone { node, job });

@@ -8,6 +8,20 @@
 //! loss averaging), so a static-topology run produces bit-identical
 //! final parameters under either runner — enforced by the equivalence
 //! test in `rust/tests/dl_integration.rs`.
+//!
+//! # Churn traces (static topologies)
+//!
+//! With a [`ChurnTrace`], [`DlNodeSm`] consults the shared trace each
+//! round: offline rounds are skipped without training (all nodes filter
+//! the offline node out of their neighbor sets for those rounds, folding
+//! its mixing weight into their self-weight, so no one waits on it); a
+//! node whose trace never brings it back *departs* — on its final online
+//! round it trains and pushes its last model to its neighbors, then
+//! leaves without pulling theirs, and the scheduler drops the in-flight
+//! deliveries still addressed to it. Dynamic (peer-sampler) topologies
+//! handle churn centrally instead: [`SamplerSm`] draws each round's
+//! graph over the trace's active set and hands inactive nodes an empty
+//! assignment.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -24,6 +38,7 @@ use crate::node::proto::{decode_control, decode_neighbors, encode_control, encod
 use crate::node::proto::{Control, NeighborAssignment};
 use crate::node::TopologyView;
 use crate::node::{draw_round, key_agreement_envelopes, secure_round_envelopes};
+use crate::scenario::{Availability, ChurnTrace};
 use crate::secure::Masker;
 use crate::sharing::{Received, Sharing};
 use crate::training::Trainer;
@@ -43,6 +58,8 @@ enum DlState {
     Evaluating,
     /// All rounds finished.
     Done,
+    /// Left for good mid-experiment (churn-trace departure).
+    Departed,
 }
 
 /// Event-driven D-PSGD client (state-machine twin of
@@ -56,6 +73,8 @@ pub struct DlNodeSm {
     params: Vec<f32>,
     topology: TopologyView,
     test: Arc<Dataset>,
+    /// Availability trace (static topologies only; `None` = always on).
+    churn: Option<Arc<ChurnTrace>>,
     step_time_s: f64,
     eval_time_s: f64,
     // --- runtime state ---
@@ -82,6 +101,7 @@ impl DlNodeSm {
         params: Vec<f32>,
         topology: TopologyView,
         test: Arc<Dataset>,
+        churn: Option<Arc<ChurnTrace>>,
         step_time_s: f64,
         eval_time_s: f64,
     ) -> DlNodeSm {
@@ -94,6 +114,7 @@ impl DlNodeSm {
             params,
             topology,
             test,
+            churn,
             step_time_s,
             eval_time_s,
             round: 0,
@@ -108,16 +129,45 @@ impl DlNodeSm {
     }
 
     fn begin_round(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        if let Some(tr) = &self.churn {
+            // Sit out offline rounds; leave for good once the trace
+            // never brings this node back online.
+            while self.round < self.rounds && !tr.active(self.id, self.round) {
+                if tr.last_online_round(self.id).map_or(true, |l| l < self.round) {
+                    self.state = DlState::Departed;
+                    ctx.depart();
+                    return Ok(());
+                }
+                self.round += 1;
+            }
+        }
         if self.round == self.rounds {
             self.state = DlState::Done;
             return Ok(());
         }
         let assign = match &self.topology {
-            TopologyView::Static { self_weight, neighbors } => NeighborAssignment {
-                round: self.round,
-                self_weight: *self_weight,
-                neighbors: neighbors.clone(),
-            },
+            TopologyView::Static { self_weight, neighbors } => {
+                // Filter out neighbors the shared trace marks offline
+                // this round (they send nothing and expect nothing);
+                // their mixing weight folds into the self-weight so the
+                // row stays stochastic.
+                let (self_weight, neighbors) = match &self.churn {
+                    Some(tr) => {
+                        let mut sw = *self_weight;
+                        let mut nbrs = Vec::with_capacity(neighbors.len());
+                        for &(n, w) in neighbors {
+                            if tr.active(n, self.round) {
+                                nbrs.push((n, w));
+                            } else {
+                                sw += w;
+                            }
+                        }
+                        (sw, nbrs)
+                    }
+                    None => (*self_weight, neighbors.clone()),
+                };
+                NeighborAssignment { round: self.round, self_weight, neighbors }
+            }
             TopologyView::Dynamic { sampler_rank } => {
                 ctx.send(Envelope {
                     src: self.id,
@@ -160,6 +210,14 @@ impl DlNodeSm {
         ctx.start_compute(self.eval_time_s, job.into_compute());
         self.state = DlState::Evaluating;
         Ok(())
+    }
+
+    /// True when the trace says this is the node's last online round —
+    /// it should broadcast and leave rather than await aggregation.
+    fn parting_round(&self) -> bool {
+        self.churn
+            .as_ref()
+            .is_some_and(|tr| tr.last_online_round(self.id) == Some(self.round))
     }
 
     /// Aggregate once every current neighbor's model has arrived.
@@ -249,6 +307,16 @@ impl EventNode for DlNodeSm {
                         });
                     }
                     self.model = Some(model);
+                    if self.parting_round() {
+                        // Final online round: push the last update, then
+                        // leave without pulling. Neighbor models still in
+                        // flight after this wake are dropped by the
+                        // scheduler; any delivered earlier just sit in
+                        // `pending` and are discarded with the node.
+                        self.state = DlState::Departed;
+                        ctx.depart();
+                        return Ok(());
+                    }
                     self.state = DlState::AwaitModels;
                     self.try_aggregate(ctx)
                 }
@@ -275,7 +343,7 @@ impl EventNode for DlNodeSm {
     }
 
     fn done(&self) -> bool {
-        self.state == DlState::Done
+        matches!(self.state, DlState::Done | DlState::Departed)
     }
 
     fn take_log(&mut self) -> Option<NodeLog> {
@@ -498,7 +566,7 @@ pub struct SamplerSm {
     rounds: u64,
     spec: String,
     seed: u64,
-    churn: f64,
+    avail: Availability,
     round: u64,
     ready: HashMap<u64, usize>,
     stopped: bool,
@@ -511,7 +579,7 @@ impl SamplerSm {
         rounds: u64,
         spec: String,
         seed: u64,
-        churn: f64,
+        avail: Availability,
     ) -> SamplerSm {
         SamplerSm {
             rank,
@@ -519,7 +587,7 @@ impl SamplerSm {
             rounds,
             spec,
             seed,
-            churn,
+            avail,
             round: 0,
             ready: HashMap::new(),
             stopped: false,
@@ -533,7 +601,7 @@ impl SamplerSm {
         {
             self.ready.remove(&self.round);
             let assignments =
-                draw_round(&self.spec, self.seed, self.churn, self.nodes, self.round)?;
+                draw_round(&self.spec, self.seed, &self.avail, self.nodes, self.round)?;
             for (node, assign) in assignments.into_iter().enumerate() {
                 ctx.send(Envelope {
                     src: self.rank,

@@ -205,6 +205,128 @@ fn run_result_saves_and_reloads() {
 }
 
 #[test]
+fn degenerate_scenario_is_bit_identical() {
+    // The scenario subsystem must be a pure extension: a run whose
+    // scenario axes are all degenerate (straggler factor 1, one geo
+    // cluster == uniform LAN matrix, no churn trace) is bit-identical
+    // to the plain PR-1 scheduler path. (Emulated time is not compared:
+    // the per-run step-time calibration measures real wall-clock.)
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut plain = small_cfg("it_scen_plain");
+    plain.rounds = 6;
+    plain.eval_every = 3;
+    let mut degen = plain.clone();
+    degen.name = "it_scen_degen".into();
+    degen.step_time = "stragglers:0.5:1".into();
+    degen.link_model = "geo:1".into();
+    let rp = run_experiment(&plain, &engine).unwrap();
+    let rd = run_experiment(&degen, &engine).unwrap();
+    assert_eq!(rp.logs.len(), rd.logs.len());
+    for (lp, ld) in rp.logs.iter().zip(rd.logs.iter()) {
+        assert_eq!(lp.node, ld.node);
+        assert_eq!(lp.records.len(), ld.records.len(), "node {}", lp.node);
+        for (a, b) in lp.records.iter().zip(ld.records.iter()) {
+            assert_eq!(a.test_acc, b.test_acc, "node {} acc", lp.node);
+            assert_eq!(a.test_loss, b.test_loss, "node {} loss", lp.node);
+            assert_eq!(a.train_loss, b.train_loss, "node {} train loss", lp.node);
+            assert_eq!(a.bytes_sent, b.bytes_sent, "node {} bytes", lp.node);
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn straggler_scenario_stretches_virtual_time() {
+    // 8x stragglers delay their neighbors' AwaitModels states, so the
+    // same experiment takes strictly longer on the emulated clock while
+    // exchanging exactly the same bytes.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut uniform = small_cfg("it_scen_uniform");
+    uniform.rounds = 4;
+    uniform.eval_every = 4;
+    let mut slow = uniform.clone();
+    slow.name = "it_scen_stragglers".into();
+    slow.step_time = "stragglers:0.3:8".into();
+    let ru = run_experiment(&uniform, &engine).unwrap();
+    let rs = run_experiment(&slow, &engine).unwrap();
+    assert!(
+        rs.final_emu_time() > ru.final_emu_time() * 1.5,
+        "straggled {} vs uniform {}",
+        rs.final_emu_time(),
+        ru.final_emu_time()
+    );
+    assert_eq!(ru.final_bytes_per_node(), rs.final_bytes_per_node());
+    engine.shutdown();
+}
+
+#[test]
+fn churn_trace_static_run_with_departures_completes() {
+    // Static topology + departures trace: departing nodes push their
+    // final update and leave; everyone else keeps training on the
+    // filtered neighbor sets and the run terminates cleanly.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_scen_departures");
+    cfg.rounds = 12;
+    cfg.eval_every = 3;
+    cfg.churn_trace = "departures:0.3".into();
+    let r = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(r.logs.len(), cfg.nodes);
+    // Survivors logged the full experiment.
+    let max_records = r.logs.iter().map(|l| l.records.len()).max().unwrap();
+    assert_eq!(max_records, 4);
+    engine.shutdown();
+}
+
+#[test]
+fn churn_trace_dynamic_sessions_converge() {
+    // Dynamic topology + session churn: the sampler draws each round's
+    // graph over the trace's active set; training still converges.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_scen_sessions");
+    cfg.dynamic = true;
+    cfg.churn_trace = "sessions:8:2".into();
+    cfg.rounds = 12;
+    let r = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(r.logs.len(), cfg.nodes);
+    assert!(r.final_accuracy() > 0.15, "acc {}", r.final_accuracy());
+    engine.shutdown();
+}
+
+#[test]
+fn wan_scenario_run_completes() {
+    // The headline scenario: stragglers + geo-clustered WAN links +
+    // churn sessions in one run (a small-scale version of
+    // examples/configs/wan_scenario.json).
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_scen_wan");
+    cfg.rounds = 6;
+    cfg.eval_every = 3;
+    cfg.step_time = "stragglers:0.25:4".into();
+    cfg.link_model = "geo:3".into();
+    cfg.churn_trace = "sessions:10:2".into();
+    let r = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(r.logs.len(), cfg.nodes);
+    // Inter-cluster latency is >= 30 ms per hop and every node has at
+    // most one intra-cluster neighbor (3 clusters of 2, regular:3), so
+    // each of the 6 rounds waits on at least one WAN link — the clock
+    // must run well past a uniform-LAN baseline even with calibration
+    // noise between the two runs.
+    let mut lan = cfg.clone();
+    lan.name = "it_scen_wan_baseline".into();
+    lan.step_time = "uniform".into();
+    lan.link_model = "uniform".into();
+    lan.churn_trace = String::new();
+    let rl = run_experiment(&lan, &engine).unwrap();
+    assert!(
+        r.final_emu_time() > rl.final_emu_time() + 0.1,
+        "wan {} vs lan {}",
+        r.final_emu_time(),
+        rl.final_emu_time()
+    );
+    engine.shutdown();
+}
+
+#[test]
 fn churn_training_still_converges() {
     // FedScale-style availability churn (paper future work): 25% of the
     // nodes sit out each round; topology is drawn over the active set.
