@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
     }
     let gap_gossip = graph::spectral_gap(&g, 200);
     let mut rng = Xoshiro256pp::new(1);
-    let reference = graph::random_regular(n, d, &mut rng);
+    let reference = graph::random_regular(n, d, &mut rng).expect("reference d-regular sample");
     let gap_ref = graph::spectral_gap(&reference, 200);
     let (dmin, dmean, dmax) = graph::degree_stats(&g);
     println!("  gossip topology degree  : min {dmin} / mean {dmean:.1} / max {dmax}");

@@ -114,6 +114,7 @@ fn main() {
             dst: 1,
             round: 3,
             kind: MsgKind::Model,
+            sent_at_s: 0.0,
             payload: vec![7u8; P * 4],
         };
         let bytes = encode_envelope(&env);
@@ -139,11 +140,11 @@ fn main() {
     {
         let mut rng = Xoshiro256pp::new(5);
         run("graph/random_regular_256_d5", 400, || {
-            black_box(graph::random_regular(256, 5, &mut rng));
+            black_box(graph::random_regular(256, 5, &mut rng).unwrap());
         });
         let mut rng2 = Xoshiro256pp::new(6);
         run("graph/mh_weights_256_d5", 200, || {
-            let g = graph::random_regular(256, 5, &mut rng2);
+            let g = graph::random_regular(256, 5, &mut rng2).unwrap();
             black_box(graph::metropolis_hastings(&g));
         });
     }

@@ -135,7 +135,7 @@ mod tests {
     use crate::communication::MsgKind;
 
     fn env(src: usize, dst: usize, round: u64) -> Envelope {
-        Envelope { src, dst, round, kind: MsgKind::Model, payload: vec![0; 10] }
+        Envelope { src, dst, round, kind: MsgKind::Model, sent_at_s: 0.0, payload: vec![0; 10] }
     }
 
     #[test]

@@ -77,6 +77,12 @@ pub struct Envelope {
     /// for future rounds — neighbors may run slightly ahead).
     pub round: u64,
     pub kind: MsgKind,
+    /// Virtual time at which the sender put this message on the wire.
+    /// Stamped by the virtual-time scheduler when the send is staged;
+    /// `0.0` on transports without a virtual clock (threads / TCP).
+    /// Receivers use it to compute a message's *staleness* (its age at
+    /// aggregation time) for asynchronous gossip.
+    pub sent_at_s: f64,
     pub payload: Vec<u8>,
 }
 

@@ -142,7 +142,8 @@ fn reader_loop(mut stream: TcpStream, inbox: &Inbox, counters: &Counters) -> Res
         if read_exact_or_eof(&mut stream, &mut header)? {
             return Ok(()); // clean EOF
         }
-        let len = u32::from_le_bytes(header[20..24].try_into().unwrap()) as usize;
+        // Payload length is the last header field (see wire.rs layout).
+        let len = u32::from_le_bytes(header[WIRE_HEADER_BYTES - 4..].try_into().unwrap()) as usize;
         let mut frame = vec![0u8; WIRE_HEADER_BYTES + len];
         frame[..WIRE_HEADER_BYTES].copy_from_slice(&header);
         stream.read_exact(&mut frame[WIRE_HEADER_BYTES..])?;
@@ -249,7 +250,7 @@ mod tests {
     }
 
     fn env(src: usize, dst: usize, round: u64, len: usize) -> Envelope {
-        Envelope { src, dst, round, kind: MsgKind::Model, payload: vec![7; len] }
+        Envelope { src, dst, round, kind: MsgKind::Model, sent_at_s: 0.25, payload: vec![7; len] }
     }
 
     #[test]

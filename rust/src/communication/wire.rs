@@ -3,25 +3,30 @@
 //! Frame layout (little-endian):
 //! ```text
 //! magic   u16  0xDC17
-//! version u8   1
+//! version u8   2
 //! kind    u8
 //! src     u32
 //! dst     u32
 //! round   u64
+//! sent_at f64  sender's virtual send time in seconds (bit pattern)
 //! len     u32  payload byte length
 //! payload [u8; len]
 //! ```
 //! Both transports count `wire_size()` bytes per message, so in-process
 //! emulation reports exactly what a TCP deployment would put on the wire.
+//!
+//! Version 2 added the `sent_at` virtual timestamp: asynchronous gossip
+//! weights a received model by its *age*, so the send instant must ride
+//! with the message rather than being reconstructed at the receiver.
 
 use anyhow::{bail, Result};
 
 use super::{Envelope, MsgKind};
 
 pub const WIRE_MAGIC: u16 = 0xDC17;
-pub const WIRE_VERSION: u8 = 1;
+pub const WIRE_VERSION: u8 = 2;
 /// Fixed header size in bytes.
-pub const WIRE_HEADER_BYTES: usize = 2 + 1 + 1 + 4 + 4 + 8 + 4;
+pub const WIRE_HEADER_BYTES: usize = 2 + 1 + 1 + 4 + 4 + 8 + 8 + 4;
 
 /// Total wire bytes for an envelope.
 pub fn wire_size(env: &Envelope) -> usize {
@@ -37,6 +42,7 @@ pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
     out.extend_from_slice(&(env.src as u32).to_le_bytes());
     out.extend_from_slice(&(env.dst as u32).to_le_bytes());
     out.extend_from_slice(&env.round.to_le_bytes());
+    out.extend_from_slice(&env.sent_at_s.to_le_bytes());
     out.extend_from_slice(&(env.payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&env.payload);
     out
@@ -59,7 +65,8 @@ pub fn decode_envelope(bytes: &[u8]) -> Result<Envelope> {
     let src = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
     let dst = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
     let round = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
-    let len = u32::from_le_bytes(bytes[20..24].try_into().unwrap()) as usize;
+    let sent_at_s = f64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let len = u32::from_le_bytes(bytes[28..32].try_into().unwrap()) as usize;
     if bytes.len() != WIRE_HEADER_BYTES + len {
         bail!(
             "frame length mismatch: header says {}, have {}",
@@ -72,6 +79,7 @@ pub fn decode_envelope(bytes: &[u8]) -> Result<Envelope> {
         dst,
         round,
         kind,
+        sent_at_s,
         payload: bytes[WIRE_HEADER_BYTES..].to_vec(),
     })
 }
@@ -86,6 +94,7 @@ mod tests {
             dst: 77,
             round: 12345,
             kind: MsgKind::Model,
+            sent_at_s: 1.25,
             payload: vec![1, 2, 3, 4, 5],
         }
     }

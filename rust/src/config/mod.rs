@@ -45,6 +45,22 @@ pub struct ExperimentConfig {
     /// Sharing spec: `full` | `subsample:<budget>` | `topk:<budget>` |
     /// `choco:<budget>:<gamma>` (budget = fraction of params sent).
     pub sharing: String,
+    /// Round execution model: `dl` (synchronous D-PSGD: every round
+    /// barriers on all neighbor models) | `async_dl` (asynchronous
+    /// gossip: aggregate whatever arrived by a virtual deadline,
+    /// staleness-weighted; scheduler runner only).
+    /// See [`crate::scheduler::AsyncDlNodeSm`].
+    pub mode: String,
+    /// Async deadline spec: `fixed:<seconds>` | `p<q>` (quantile-
+    /// adaptive) | `factor:<f>` (of the node's own round compute time).
+    /// See [`crate::node::DeadlineSpec`]. Ignored for `mode = "dl"`.
+    pub deadline: String,
+    /// Async staleness policy: `none` | `linear:<tau>` | `poly:<alpha>`.
+    /// See [`crate::node::StalenessPolicy`]. Ignored for `mode = "dl"`.
+    pub staleness: String,
+    /// Async late-delivery policy: `buffer` | `drop`.
+    /// See [`crate::node::LatePolicy`]. Ignored for `mode = "dl"`.
+    pub late: String,
     /// Wrap sharing in pairwise-mask secure aggregation.
     pub secure: bool,
     /// Secure-agg mask amplitude. Masks are uniform in [-m, m); larger
@@ -99,6 +115,10 @@ impl Default for ExperimentConfig {
             topology: "regular:5".into(),
             dynamic: false,
             sharing: "full".into(),
+            mode: "dl".into(),
+            deadline: "factor:2".into(),
+            staleness: "none".into(),
+            late: "buffer".into(),
             secure: false,
             mask_scale: 4.0,
             churn: 0.0,
@@ -124,7 +144,8 @@ impl ExperimentConfig {
         const KNOWN: &[&str] = &[
             "name", "nodes", "rounds", "eval_every", "seed", "model",
             "dataset", "image", "train_total", "test_total", "noise",
-            "partition", "topology", "dynamic", "sharing", "secure", "mask_scale", "churn",
+            "partition", "topology", "dynamic", "sharing", "mode", "deadline", "staleness",
+            "late", "secure", "mask_scale", "churn",
             "churn_trace", "lr", "local_steps", "network", "step_time", "link_model",
             "runner", "workers", "artifacts_dir", "results_dir",
         ];
@@ -155,6 +176,10 @@ impl ExperimentConfig {
             topology: s("topology", &d.topology),
             dynamic: b("dynamic", d.dynamic),
             sharing: s("sharing", &d.sharing),
+            mode: s("mode", &d.mode),
+            deadline: s("deadline", &d.deadline),
+            staleness: s("staleness", &d.staleness),
+            late: s("late", &d.late),
             secure: b("secure", d.secure),
             mask_scale: f("mask_scale", d.mask_scale as f64) as f32,
             churn: f("churn", d.churn),
@@ -197,6 +222,10 @@ impl ExperimentConfig {
             ("topology", Json::str(self.topology.clone())),
             ("dynamic", Json::Bool(self.dynamic)),
             ("sharing", Json::str(self.sharing.clone())),
+            ("mode", Json::str(self.mode.clone())),
+            ("deadline", Json::str(self.deadline.clone())),
+            ("staleness", Json::str(self.staleness.clone())),
+            ("late", Json::str(self.late.clone())),
             ("secure", Json::Bool(self.secure)),
             ("mask_scale", Json::num(self.mask_scale as f64)),
             ("churn", Json::num(self.churn)),
@@ -250,6 +279,33 @@ impl ExperimentConfig {
         if !["lan", "wan", "none"].contains(&self.network.as_str()) {
             bail!("unknown network model {:?}", self.network);
         }
+        // Execution mode + async-gossip policies. Spec syntax is checked
+        // even in synchronous mode so a typo surfaces immediately.
+        if !["dl", "async_dl"].contains(&self.mode.as_str()) {
+            bail!("unknown mode {:?} (expected dl | async_dl)", self.mode);
+        }
+        crate::node::DeadlineSpec::validate_spec(&self.deadline)
+            .with_context(|| format!("invalid deadline {:?}", self.deadline))?;
+        crate::node::StalenessPolicy::validate_spec(&self.staleness)
+            .with_context(|| format!("invalid staleness {:?}", self.staleness))?;
+        crate::node::LatePolicy::validate_spec(&self.late)
+            .with_context(|| format!("invalid late policy {:?}", self.late))?;
+        if self.mode == "async_dl" {
+            // Async gossip is a scheduler-only execution model: it needs
+            // timer events and per-message virtual timestamps.
+            if self.runner != "scheduler" {
+                bail!("mode \"async_dl\" requires runner \"scheduler\"");
+            }
+            if self.secure {
+                bail!("mode \"async_dl\" is incompatible with secure aggregation (pairwise masks need every neighbor's message, asynchrony drops that guarantee)");
+            }
+            if self.dynamic {
+                bail!("mode \"async_dl\" requires a static topology (the peer sampler is a per-round barrier, which asynchrony removes)");
+            }
+            if self.sharing.starts_with("choco") {
+                bail!("mode \"async_dl\" is incompatible with choco sharing (per-neighbor estimates desync under partial aggregation)");
+            }
+        }
         // Scenario axes: spec syntax (trace files are only read at
         // prepare) and runner compatibility. Per-link delays and
         // static-topology churn traces are delivery-level semantics only
@@ -257,6 +313,12 @@ impl ExperimentConfig {
         crate::scenario::ComputePlan::validate_spec(&self.step_time)?;
         crate::scenario::validate_link_spec(&self.link_model)?;
         crate::scenario::ChurnTrace::validate_spec(&self.churn_trace)?;
+        // Time-indexed crashes kill a node mid-round without notice; a
+        // synchronous fleet would deadlock waiting for it, so crashes
+        // require the timeout-driven async mode.
+        if crate::scenario::is_crash_spec(&self.churn_trace) && self.mode != "async_dl" {
+            bail!("churn_trace \"crashes:\" requires mode \"async_dl\" (synchronous rounds would deadlock on the crashed node)");
+        }
         if !matches!(self.link_model.as_str(), "" | "uniform") && self.runner != "scheduler" {
             bail!("link_model {:?} requires runner \"scheduler\"", self.link_model);
         }
@@ -380,6 +442,51 @@ mod tests {
         cfg.sharing = "choco:0.1:0.5".into();
         cfg.dynamic = true;
         assert!(cfg.validate().is_err()); // ...and under changing neighbor sets
+    }
+
+    #[test]
+    fn async_mode_validation() {
+        // Happy path: async + scheduler + scenario axes compose.
+        let mut cfg = ExperimentConfig::default();
+        cfg.mode = "async_dl".into();
+        cfg.deadline = "p90".into();
+        cfg.staleness = "linear:3".into();
+        cfg.late = "drop".into();
+        cfg.step_time = "stragglers:0.125:4".into();
+        cfg.link_model = "geo:4".into();
+        cfg.churn_trace = "crashes:0.2:10".into();
+        cfg.validate().unwrap();
+
+        let base = cfg.clone();
+        cfg = base.clone();
+        cfg.runner = "threads".into();
+        assert!(cfg.validate().is_err()); // scheduler-only
+        cfg = base.clone();
+        cfg.secure = true;
+        assert!(cfg.validate().is_err()); // no secure aggregation
+        cfg = base.clone();
+        cfg.dynamic = true;
+        assert!(cfg.validate().is_err()); // no peer-sampler barrier
+        cfg = base.clone();
+        cfg.churn_trace = String::new();
+        cfg.sharing = "choco:0.1:0.5".into();
+        assert!(cfg.validate().is_err()); // choco needs full rounds
+        cfg = base.clone();
+        cfg.mode = "eventually".into();
+        assert!(cfg.validate().is_err()); // unknown mode
+        cfg = base.clone();
+        cfg.deadline = "whenever".into();
+        assert!(cfg.validate().is_err()); // bad deadline spec
+        cfg = base.clone();
+        cfg.staleness = "exp:2".into();
+        assert!(cfg.validate().is_err()); // bad staleness spec
+        cfg = base.clone();
+        cfg.late = "requeue".into();
+        assert!(cfg.validate().is_err()); // bad late policy
+        // Crash traces are async-only.
+        cfg = ExperimentConfig::default();
+        cfg.churn_trace = "crashes:0.2:10".into();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -27,10 +27,10 @@ use crate::dataset::{generate, DataLoader, Dataset, Partition, SyntheticSpec};
 use crate::graph::{from_spec, metropolis_hastings, Graph, MixingWeights};
 use crate::metrics::{aggregate, NodeLog, SeriesPoint};
 use crate::model::ParamVec;
-use crate::node::{DlNode, PeerSampler, SecureDlNode, TopologyView};
+use crate::node::{AsyncPolicy, DlNode, PeerSampler, SecureDlNode, TopologyView};
 use crate::rng::{mix_seed, Xoshiro256pp};
 use crate::runtime::{EngineHandle, ModelMeta};
-use crate::scheduler::{DlNodeSm, SamplerSm, Scheduler, SecureDlNodeSm};
+use crate::scheduler::{AsyncDlNodeSm, DlNodeSm, SamplerSm, Scheduler, SecureDlNodeSm};
 use crate::secure::Masker;
 use crate::sharing;
 use crate::training::Trainer;
@@ -294,9 +294,33 @@ impl Runner for SchedulerRunner {
         // filters by the shared trace); dynamic ones centrally in the
         // sampler, so the nodes stay trace-unaware there.
         let node_churn = if cfg.dynamic { None } else { setup.scenario.churn.clone() };
+        let async_policy = if cfg.mode == "async_dl" {
+            Some(AsyncPolicy::from_specs(&cfg.deadline, &cfg.staleness, &cfg.late)?)
+        } else {
+            None
+        };
         for id in 0..cfg.nodes {
             let trainer = build_trainer(cfg, engine, setup, id)?;
-            if cfg.secure {
+            if let Some(policy) = async_policy {
+                // Asynchronous gossip (validation guarantees a static,
+                // non-secure topology here).
+                let (_g, w) = setup.static_graph.as_ref().unwrap();
+                sched.add_node(Box::new(AsyncDlNodeSm::new(
+                    id,
+                    cfg.rounds,
+                    cfg.eval_every,
+                    trainer,
+                    build_sharing(cfg, setup, id)?,
+                    setup.init.clone(),
+                    w.self_weight(id),
+                    w.neighbor_weights(id).collect(),
+                    Arc::clone(&setup.test),
+                    node_churn.clone(),
+                    setup.step_times[id],
+                    setup.eval_times[id],
+                    policy,
+                )));
+            } else if cfg.secure {
                 let (g, w) = setup.static_graph.as_ref().unwrap();
                 sched.add_node(Box::new(SecureDlNodeSm::new(
                     id,
@@ -336,6 +360,15 @@ impl Runner for SchedulerRunner {
                 cfg.seed,
                 setup.scenario.availability(cfg.churn),
             )));
+        }
+        // Time-indexed crashes (a `crashes:` trace): the scheduler kills
+        // the node mid-round at its crash instant; neighbors time out.
+        if let Some(trace) = &setup.scenario.churn {
+            for id in 0..cfg.nodes {
+                if let Some(at_s) = trace.crash_time(id) {
+                    sched.set_crash_time(id, at_s);
+                }
+            }
         }
         sched.run()?;
         Ok(sched.take_logs())

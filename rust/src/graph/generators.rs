@@ -5,6 +5,26 @@
 use super::Graph;
 use crate::rng::Xoshiro256pp;
 
+/// Attempts the pairing-model sampler makes before giving up. Each
+/// attempt is a full stub shuffle + matching; failures this deep mean
+/// the `(n, d)` combination is pathologically constrained, not unlucky.
+pub const REGULAR_MAX_ATTEMPTS: usize = 1000;
+
+/// Typed failure modes of [`random_regular`], surfaced through config
+/// validation instead of panicking the process.
+#[derive(Debug, thiserror::Error)]
+pub enum RegularGraphError {
+    #[error("d-regular topology needs degree < nodes (got d = {d}, n = {n})")]
+    DegreeTooLarge { n: usize, d: usize },
+    #[error("d-regular topology needs n*d even (got n = {n}, d = {d}); add a node or change the degree")]
+    OddStubTotal { n: usize, d: usize },
+    #[error(
+        "no connected {d}-regular graph on {n} nodes after {attempts} sampling attempts \
+         (deterministic in the seed; retry with a different seed, degree, or node count)"
+    )]
+    Exhausted { n: usize, d: usize, attempts: usize },
+}
+
 /// Ring (cycle) over n nodes — the sparsest connected 2-regular topology.
 pub fn ring(n: usize) -> Graph {
     let mut g = Graph::empty(n);
@@ -40,16 +60,28 @@ pub fn star(n: usize) -> Graph {
 /// Random d-regular graph via the pairing (configuration) model with
 /// retries; result is simple (no self-loops/multi-edges) and connected.
 ///
-/// `n * d` must be even and `d < n`. This is the generator behind both the
-/// static d-regular topologies and the per-round dynamic graphs the
+/// `n * d` must be even and `d < n` — violations and retry exhaustion
+/// return a typed [`RegularGraphError`] (config validation surfaces it)
+/// rather than panicking. Retries are capped at
+/// [`REGULAR_MAX_ATTEMPTS`]; the whole sampler is deterministic in the
+/// caller's RNG state. This is the generator behind both the static
+/// d-regular topologies and the per-round dynamic graphs the
 /// centralized peer sampler instantiates (paper §3.2).
-pub fn random_regular(n: usize, d: usize, rng: &mut Xoshiro256pp) -> Graph {
-    assert!(d < n, "degree must be < n");
-    assert!(n * d % 2 == 0, "n*d must be even");
-    if d == 0 {
-        return Graph::empty(n);
+pub fn random_regular(
+    n: usize,
+    d: usize,
+    rng: &mut Xoshiro256pp,
+) -> Result<Graph, RegularGraphError> {
+    if d >= n {
+        return Err(RegularGraphError::DegreeTooLarge { n, d });
     }
-    'attempt: for _ in 0..1000 {
+    if n * d % 2 != 0 {
+        return Err(RegularGraphError::OddStubTotal { n, d });
+    }
+    if d == 0 {
+        return Ok(Graph::empty(n));
+    }
+    'attempt: for _ in 0..REGULAR_MAX_ATTEMPTS {
         // Stubs: each node appears d times; greedily match random stubs,
         // skipping pairs that would create self-loops or multi-edges
         // (networkx-style `random_regular_graph` matching). Restart the
@@ -82,10 +114,10 @@ pub fn random_regular(n: usize, d: usize, rng: &mut Xoshiro256pp) -> Graph {
             }
         }
         if super::is_connected(&g) {
-            return g;
+            return Ok(g);
         }
     }
-    panic!("failed to sample a connected {d}-regular graph on {n} nodes");
+    Err(RegularGraphError::Exhausted { n, d, attempts: REGULAR_MAX_ATTEMPTS })
 }
 
 /// Erdős–Rényi G(n, p).
@@ -160,7 +192,7 @@ pub fn from_spec(spec: &str, n: usize, rng: &mut Xoshiro256pp) -> anyhow::Result
         ["ring"] => ring(n),
         ["full"] | ["fully_connected"] => fully_connected(n),
         ["star"] => star(n),
-        ["regular", d] => random_regular(n, d.parse()?, rng),
+        ["regular", d] => random_regular(n, d.parse()?, rng)?,
         ["er", p] => erdos_renyi(n, p.parse()?, rng),
         ["smallworld", k, beta] => small_world(n, k.parse()?, beta.parse()?, rng),
         ["torus", r, c] => {
@@ -208,7 +240,7 @@ mod tests {
     fn regular_is_regular_and_connected() {
         let mut r = rng();
         for (n, d) in [(16, 5), (64, 5), (32, 9), (10, 3)] {
-            let g = random_regular(n, d, &mut r);
+            let g = random_regular(n, d, &mut r).unwrap();
             assert!((0..n).all(|v| g.degree(v) == d), "n={n} d={d}");
             assert!(is_connected(&g));
         }
@@ -216,21 +248,34 @@ mod tests {
 
     #[test]
     fn regular_degree_zero_ok() {
-        let g = random_regular(6, 0, &mut rng());
+        let g = random_regular(6, 0, &mut rng()).unwrap();
         assert_eq!(g.edge_count(), 0);
     }
 
     #[test]
-    #[should_panic]
-    fn regular_odd_product_panics() {
-        random_regular(5, 3, &mut rng());
+    fn regular_rejects_bad_shapes_with_typed_errors() {
+        // Odd stub total: no 3-regular graph on 5 nodes exists.
+        let err = random_regular(5, 3, &mut rng()).unwrap_err();
+        assert!(matches!(err, RegularGraphError::OddStubTotal { n: 5, d: 3 }), "{err}");
+        // Degree >= n.
+        let err = random_regular(4, 4, &mut rng()).unwrap_err();
+        assert!(matches!(err, RegularGraphError::DegreeTooLarge { n: 4, d: 4 }), "{err}");
+        // The messages are self-explanatory (what config validation shows).
+        assert!(err.to_string().contains("degree < nodes"), "{err}");
+    }
+
+    #[test]
+    fn regular_error_surfaces_through_spec_dispatch() {
+        let mut r = rng();
+        let err = from_spec("regular:3", 5, &mut r).unwrap_err();
+        assert!(err.to_string().contains("n*d even"), "{err}");
     }
 
     #[test]
     fn dynamic_regular_differs_per_round() {
         let mut r = rng();
-        let g1 = random_regular(24, 5, &mut r);
-        let g2 = random_regular(24, 5, &mut r);
+        let g1 = random_regular(24, 5, &mut r).unwrap();
+        let g2 = random_regular(24, 5, &mut r).unwrap();
         assert_ne!(g1, g2); // overwhelmingly likely
     }
 

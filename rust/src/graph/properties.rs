@@ -164,7 +164,7 @@ mod tests {
         // full > regular > ring: denser graphs mix faster.
         let mut rng = Xoshiro256pp::new(5);
         let full = spectral_gap(&fully_connected(32), 200);
-        let reg = spectral_gap(&random_regular(32, 5, &mut rng), 200);
+        let reg = spectral_gap(&random_regular(32, 5, &mut rng).unwrap(), 200);
         let rng_gap = spectral_gap(&ring(32), 200);
         assert!(full > reg, "full {full} vs regular {reg}");
         assert!(reg > rng_gap, "regular {reg} vs ring {rng_gap}");

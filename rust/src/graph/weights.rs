@@ -135,7 +135,7 @@ mod tests {
     #[test]
     fn mh_random_regular_doubly_stochastic() {
         let mut rng = Xoshiro256pp::new(2);
-        let g = random_regular(30, 5, &mut rng);
+        let g = random_regular(30, 5, &mut rng).unwrap();
         assert_doubly_stochastic(&metropolis_hastings(&g));
     }
 

@@ -74,12 +74,16 @@ fn print_usage() {
                 opt("seed", "override seed", None),
                 flag("dynamic", "re-sample the topology every round (peer sampler)"),
                 flag("secure", "wrap sharing in pairwise-mask secure aggregation"),
+                opt("mode", "round model: dl (synchronous) | async_dl (deadline gossip)", Some("dl")),
+                opt("deadline", "async deadline: fixed:<s> | p<q> | factor:<f>", Some("factor:2")),
+                opt("staleness", "async staleness: none | linear:<tau> | poly:<alpha>", Some("none")),
+                opt("late", "async late-delivery policy: buffer | drop", Some("buffer")),
                 opt("runner", "in-process runner: scheduler | threads (run mode)", Some("scheduler")),
                 opt("workers", "scheduler worker threads (0 = cores)", Some("0")),
                 opt("scenario", "scenario overlay JSON: step_time/link_model/churn_trace/network/churn", None),
                 opt("step-time-trace", "per-node compute: uniform | stragglers:<f>:<x> | lognormal:<s> | trace:<path>", Some("uniform")),
                 opt("link-model", "per-link delays: uniform | geo:<clusters> | matrix:<path>", Some("uniform")),
-                opt("churn-trace", "availability: trace:<path> | sessions:<on>:<off> | departures:<frac>", None),
+                opt("churn-trace", "availability: trace:<path> | sessions:<on>:<off> | departures:<frac> | crashes:<frac>:<horizon_s>", None),
                 opt("participation", "client participation fraction (fl mode)", Some("0.5")),
                 opt("artifacts", "artifacts directory", Some("artifacts")),
                 flag("save", "persist logs under results/"),
@@ -116,6 +120,18 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     }
     if args.flag("secure") {
         cfg.secure = true;
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = m.to_string();
+    }
+    if let Some(d) = args.get("deadline") {
+        cfg.deadline = d.to_string();
+    }
+    if let Some(s) = args.get("staleness") {
+        cfg.staleness = s.to_string();
+    }
+    if let Some(l) = args.get("late") {
+        cfg.late = l.to_string();
     }
     if let Some(r) = args.get("runner") {
         cfg.runner = r.to_string();
@@ -175,7 +191,8 @@ fn apply_scenario_file(cfg: &mut ExperimentConfig, path: &Path) -> Result<()> {
 }
 
 /// Modes that bypass the in-process scheduler cannot honor the scenario
-/// axes (or churn); reject them instead of silently running a baseline.
+/// axes (or churn, or async gossip); reject them instead of silently
+/// running a baseline.
 fn reject_scenario_axes(cfg: &ExperimentConfig, mode: &str) -> Result<()> {
     if !matches!(cfg.step_time.as_str(), "" | "uniform")
         || !matches!(cfg.link_model.as_str(), "" | "uniform")
@@ -186,6 +203,9 @@ fn reject_scenario_axes(cfg: &ExperimentConfig, mode: &str) -> Result<()> {
             "{mode} mode does not support scenario axes \
              (step_time / link_model / churn_trace / churn); use `decentra run`"
         );
+    }
+    if cfg.mode != "dl" {
+        bail!("{mode} mode supports only mode \"dl\" (async gossip needs the scheduler; use `decentra run`)");
     }
     Ok(())
 }
@@ -204,9 +224,11 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    log_info!("run", "experiment {:?}: {} nodes, {} rounds, topology {}, sharing {}{} [{} runner]",
+    log_info!("run", "experiment {:?}: {} nodes, {} rounds, topology {}, sharing {}{}{} [{} runner]",
         cfg.name, cfg.nodes, cfg.rounds, cfg.topology, cfg.sharing,
-        if cfg.secure { " + secure-agg" } else { "" }, cfg.runner);
+        if cfg.secure { " + secure-agg" } else { "" },
+        if cfg.mode == "async_dl" { " + async gossip" } else { "" },
+        cfg.runner);
     let engine = EngineHandle::start(&cfg.artifacts_dir, &[cfg.model.as_str()])?;
     let result = run_experiment(&cfg, &engine)?;
     print!("{}", render_series(&cfg.name, &result.series));

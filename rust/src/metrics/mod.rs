@@ -30,6 +30,14 @@ pub struct Record {
     pub bytes_sent: u64,
     pub bytes_recv: u64,
     pub msgs_sent: u64,
+    /// Async gossip: cumulative messages that missed a deadline but were
+    /// buffered for the next round (0 for synchronous nodes).
+    pub late_msgs: u64,
+    /// Async gossip: cumulative messages dropped for missing a deadline.
+    pub dropped_msgs: u64,
+    /// Async gossip: mean virtual age (seconds) of every neighbor model
+    /// aggregated so far.
+    pub mean_staleness_s: f64,
 }
 
 impl Record {
@@ -44,6 +52,9 @@ impl Record {
             ("bytes_sent", Json::num(self.bytes_sent as f64)),
             ("bytes_recv", Json::num(self.bytes_recv as f64)),
             ("msgs_sent", Json::num(self.msgs_sent as f64)),
+            ("late_msgs", Json::num(self.late_msgs as f64)),
+            ("dropped_msgs", Json::num(self.dropped_msgs as f64)),
+            ("mean_staleness_s", Json::num(self.mean_staleness_s)),
         ])
     }
 
@@ -53,6 +64,9 @@ impl Record {
                 .as_f64()
                 .with_context(|| format!("record missing field {k}"))
         };
+        // Async-gossip fields default to 0 so logs written before they
+        // existed still load.
+        let opt = |k: &str| -> f64 { v.get(k).as_f64().unwrap_or(0.0) };
         Ok(Record {
             round: f("round")? as u64,
             emu_time_s: f("emu_time_s")?,
@@ -63,6 +77,9 @@ impl Record {
             bytes_sent: f("bytes_sent")? as u64,
             bytes_recv: f("bytes_recv")? as u64,
             msgs_sent: f("msgs_sent")? as u64,
+            late_msgs: opt("late_msgs") as u64,
+            dropped_msgs: opt("dropped_msgs") as u64,
+            mean_staleness_s: opt("mean_staleness_s"),
         })
     }
 }
@@ -151,24 +168,32 @@ pub struct SeriesPoint {
     pub train_loss: MeanCi,
 }
 
-/// Aggregate per-round across nodes: every round that all logs contain
-/// becomes one [`SeriesPoint`] with mean ± CI over nodes.
+/// Aggregate across nodes, grouped by **round number**: every round
+/// that *any* log evaluated becomes one [`SeriesPoint`] with mean ± CI
+/// over the nodes that logged it (the CI's `n` records how many).
+/// Nodes that crash or depart early simply stop contributing, and a
+/// node that skipped an eval (offline session) is absent from just
+/// that round's point — neither truncates nor skews the survivors'
+/// series. With identical logs (no churn) this degenerates to
+/// averaging over the whole fleet, exactly as before.
 pub fn aggregate(logs: &[NodeLog]) -> Vec<SeriesPoint> {
-    if logs.is_empty() {
-        return Vec::new();
-    }
-    let rounds = logs
+    let mut rounds: Vec<u64> = logs
         .iter()
-        .map(|l| l.records.len())
-        .min()
-        .unwrap_or(0);
-    let mut out = Vec::with_capacity(rounds);
-    for i in 0..rounds {
+        .flat_map(|l| l.records.iter().map(|r| r.round))
+        .collect();
+    rounds.sort_unstable();
+    rounds.dedup();
+    let mut out = Vec::with_capacity(rounds.len());
+    for round in rounds {
+        let present: Vec<&Record> = logs
+            .iter()
+            .filter_map(|l| l.records.iter().find(|r| r.round == round))
+            .collect();
         let collect = |f: &dyn Fn(&Record) -> f64| -> Vec<f64> {
-            logs.iter().map(|l| f(&l.records[i])).collect()
+            present.iter().map(|r| f(r)).collect()
         };
         out.push(SeriesPoint {
-            round: logs[0].records[i].round,
+            round,
             bytes_sent: mean_ci(&collect(&|r| r.bytes_sent as f64)),
             emu_time_s: mean_ci(&collect(&|r| r.emu_time_s)),
             real_time_s: mean_ci(&collect(&|r| r.real_time_s)),
@@ -212,7 +237,25 @@ mod tests {
             bytes_sent: bytes,
             bytes_recv: bytes,
             msgs_sent: round * 5,
+            late_msgs: round,
+            dropped_msgs: 1,
+            mean_staleness_s: 0.25,
         }
+    }
+
+    #[test]
+    fn record_without_async_fields_still_loads() {
+        let mut j = rec(2, 0.5, 10).to_json();
+        // Simulate a pre-async log line by dropping the new keys.
+        if let Json::Obj(ref mut obj) = j {
+            obj.remove("late_msgs");
+            obj.remove("dropped_msgs");
+            obj.remove("mean_staleness_s");
+        }
+        let r = Record::from_json(&j).unwrap();
+        assert_eq!(r.late_msgs, 0);
+        assert_eq!(r.dropped_msgs, 0);
+        assert_eq!(r.mean_staleness_s, 0.0);
     }
 
     #[test]
@@ -248,18 +291,21 @@ mod tests {
     }
 
     #[test]
-    fn aggregate_means_and_truncation() {
+    fn aggregate_means_and_survivor_series() {
         let mut a = NodeLog::new(0);
         let mut b = NodeLog::new(1);
         a.push(rec(0, 0.2, 100));
         a.push(rec(1, 0.4, 200));
         b.push(rec(0, 0.4, 300));
-        // b is missing round 1 -> series truncates to the common prefix.
+        // b stops after its first eval (crash/departure): round 0
+        // averages both nodes, round 1 is the survivor alone.
         let series = aggregate(&[a, b]);
-        assert_eq!(series.len(), 1);
+        assert_eq!(series.len(), 2);
         assert!((series[0].test_acc.mean - 0.3).abs() < 1e-12);
         assert!((series[0].bytes_sent.mean - 200.0).abs() < 1e-12);
         assert_eq!(series[0].test_acc.n, 2);
+        assert!((series[1].test_acc.mean - 0.4).abs() < 1e-12);
+        assert_eq!(series[1].test_acc.n, 1);
     }
 
     #[test]

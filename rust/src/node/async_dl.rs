@@ -1,0 +1,303 @@
+//! Asynchronous gossip policies: virtual deadlines, staleness-aware
+//! aggregation weights, and late-delivery handling.
+//!
+//! Synchronous D-PSGD barriers every round: a node cannot aggregate
+//! until *all* of its neighbors' models for that round have arrived, so
+//! one straggler or one dead peer paces (or deadlocks) its whole
+//! neighborhood. The asynchronous variant (AD-PSGD-style) drops the
+//! completeness requirement: each node trains continuously, broadcasts,
+//! and at a per-round **virtual deadline** aggregates whatever neighbor
+//! models have arrived, weighting each by its **staleness** (the virtual
+//! age carried in the envelope's `sent_at_s` stamp).
+//!
+//! This module holds the pure policy types shared by the scheduler's
+//! [`AsyncDlNodeSm`](crate::scheduler::AsyncDlNodeSm) state machine, the
+//! config validation, and the CLI:
+//!
+//! * [`DeadlineSpec`] — when a round's collection window closes:
+//!   `fixed:<seconds>` | `p<q>` (quantile-adaptive over observed
+//!   neighbor arrival offsets) | `factor:<f>` (multiple of the node's
+//!   own per-round compute time).
+//! * [`StalenessPolicy`] — how much weight an aged model retains:
+//!   `none` | `linear:<tau>` | `poly:<alpha>`.
+//! * [`LatePolicy`] — what happens to a message that was already in
+//!   flight when the deadline fired: `buffer` it for the next round or
+//!   `drop` it. Either way it is counted per node.
+
+use anyhow::{bail, Context, Result};
+
+/// When a node's per-round collection window closes, in virtual time
+/// measured from the round's start.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DeadlineSpec {
+    /// A fixed window of `seconds` per round.
+    Fixed(f64),
+    /// Adaptive: the `q`-quantile (0 < q < 1) of the recently observed
+    /// neighbor-model arrival offsets (the state machine keeps a bounded
+    /// rolling window) — the node waits just long enough to catch
+    /// roughly a `q` fraction of its neighbors' updates. Until enough
+    /// history exists the window falls back to twice the node's own
+    /// round compute time.
+    Quantile(f64),
+    /// `f` times the node's own per-round compute time.
+    Factor(f64),
+}
+
+/// Observations needed before a [`DeadlineSpec::Quantile`] window trusts
+/// its history instead of the compute-time fallback.
+const QUANTILE_WARMUP: usize = 4;
+
+impl DeadlineSpec {
+    /// Parse `fixed:<seconds>` | `p<q>` | `factor:<f>`.
+    pub fn from_spec(spec: &str) -> Result<DeadlineSpec> {
+        if let Some(s) = spec.strip_prefix("fixed:") {
+            let secs: f64 = s.parse().with_context(|| format!("bad deadline seconds {s:?}"))?;
+            if !(secs > 0.0) {
+                bail!("fixed deadline must be > 0 seconds (got {secs})");
+            }
+            return Ok(DeadlineSpec::Fixed(secs));
+        }
+        if let Some(q) = spec.strip_prefix('p') {
+            let q: u32 = q.parse().with_context(|| format!("bad deadline quantile {spec:?}"))?;
+            if !(1..=99).contains(&q) {
+                bail!("deadline quantile must be p1..p99 (got p{q})");
+            }
+            return Ok(DeadlineSpec::Quantile(q as f64 / 100.0));
+        }
+        if let Some(f) = spec.strip_prefix("factor:") {
+            let f: f64 = f.parse().with_context(|| format!("bad deadline factor {f:?}"))?;
+            if !(f > 0.0) {
+                bail!("deadline factor must be > 0 (got {f})");
+            }
+            return Ok(DeadlineSpec::Factor(f));
+        }
+        bail!("unknown deadline spec {spec:?} (expected fixed:<seconds> | p<q> | factor:<f>)")
+    }
+
+    /// Check spec syntax only.
+    pub fn validate_spec(spec: &str) -> Result<()> {
+        DeadlineSpec::from_spec(spec).map(|_| ())
+    }
+
+    /// The collection window for the next round. `round_compute_s` is
+    /// the node's own per-round training time; `history` the arrival
+    /// offsets (arrival time − window start) observed so far, in
+    /// arrival order.
+    pub fn window_s(&self, round_compute_s: f64, history: &[f64]) -> f64 {
+        let floor = 1e-9; // never a zero-length window
+        match *self {
+            DeadlineSpec::Fixed(s) => s.max(floor),
+            DeadlineSpec::Factor(f) => (f * round_compute_s).max(floor),
+            DeadlineSpec::Quantile(q) => {
+                if history.len() < QUANTILE_WARMUP {
+                    return (2.0 * round_compute_s).max(floor);
+                }
+                let mut sorted = history.to_vec();
+                sorted.sort_by(f64::total_cmp);
+                let rank = ((sorted.len() as f64) * q).ceil() as usize;
+                sorted[rank.clamp(1, sorted.len()) - 1].max(floor)
+            }
+        }
+    }
+}
+
+/// Multiplier applied to a neighbor's mixing weight as a function of its
+/// model's virtual age at aggregation time. Weight shed by aging models
+/// folds back into the receiver's self-weight, keeping the mixing row
+/// stochastic.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StalenessPolicy {
+    /// Age-blind: every arrived model keeps its full weight.
+    None,
+    /// Linear decay to zero at age `tau`: `max(0, 1 - age/tau)`.
+    Linear(f64),
+    /// Polynomial decay `(1 + age)^-alpha` (never reaches zero).
+    Poly(f64),
+}
+
+impl StalenessPolicy {
+    /// Parse `none` | `linear:<tau>` | `poly:<alpha>`.
+    pub fn from_spec(spec: &str) -> Result<StalenessPolicy> {
+        if spec.is_empty() || spec == "none" {
+            return Ok(StalenessPolicy::None);
+        }
+        if let Some(t) = spec.strip_prefix("linear:") {
+            let tau: f64 = t.parse().with_context(|| format!("bad staleness tau {t:?}"))?;
+            if !(tau > 0.0) {
+                bail!("linear staleness tau must be > 0 seconds (got {tau})");
+            }
+            return Ok(StalenessPolicy::Linear(tau));
+        }
+        if let Some(a) = spec.strip_prefix("poly:") {
+            let alpha: f64 = a.parse().with_context(|| format!("bad staleness alpha {a:?}"))?;
+            if !(alpha >= 0.0) {
+                bail!("poly staleness alpha must be >= 0 (got {alpha})");
+            }
+            return Ok(StalenessPolicy::Poly(alpha));
+        }
+        bail!("unknown staleness spec {spec:?} (expected none | linear:<tau> | poly:<alpha>)")
+    }
+
+    /// Check spec syntax only.
+    pub fn validate_spec(spec: &str) -> Result<()> {
+        StalenessPolicy::from_spec(spec).map(|_| ())
+    }
+
+    /// Weight multiplier in [0, 1] for a model `age_s` old.
+    pub fn factor(&self, age_s: f64) -> f64 {
+        let age = age_s.max(0.0);
+        match *self {
+            StalenessPolicy::None => 1.0,
+            StalenessPolicy::Linear(tau) => (1.0 - age / tau).max(0.0),
+            StalenessPolicy::Poly(alpha) => (1.0 + age).powf(-alpha),
+        }
+    }
+}
+
+/// What to do with a message that was already in flight when the
+/// receiver's deadline fired (its `sent_at_s` predates the last
+/// deadline): hold it for the next aggregation, or discard it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LatePolicy {
+    /// Keep it; the next deadline aggregates it with its (larger) age.
+    Buffer,
+    /// Discard it and count it.
+    Drop,
+}
+
+impl LatePolicy {
+    /// Parse `buffer` | `drop`.
+    pub fn from_spec(spec: &str) -> Result<LatePolicy> {
+        match spec {
+            "" | "buffer" => Ok(LatePolicy::Buffer),
+            "drop" => Ok(LatePolicy::Drop),
+            other => bail!("unknown late policy {other:?} (expected buffer | drop)"),
+        }
+    }
+
+    /// Check spec syntax only.
+    pub fn validate_spec(spec: &str) -> Result<()> {
+        LatePolicy::from_spec(spec).map(|_| ())
+    }
+}
+
+/// The full async-gossip policy bundle a node runs under.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsyncPolicy {
+    pub deadline: DeadlineSpec,
+    pub staleness: StalenessPolicy,
+    pub late: LatePolicy,
+}
+
+impl AsyncPolicy {
+    /// Build from the three config specs.
+    pub fn from_specs(deadline: &str, staleness: &str, late: &str) -> Result<AsyncPolicy> {
+        Ok(AsyncPolicy {
+            deadline: DeadlineSpec::from_spec(deadline)?,
+            staleness: StalenessPolicy::from_spec(staleness)?,
+            late: LatePolicy::from_spec(late)?,
+        })
+    }
+}
+
+/// Per-node async-gossip counters surfaced through the metric log.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AsyncStats {
+    /// Messages that missed their deadline but were kept for the next
+    /// round ([`LatePolicy::Buffer`]).
+    pub late_msgs: u64,
+    /// Messages discarded for missing their deadline
+    /// ([`LatePolicy::Drop`]).
+    pub dropped_msgs: u64,
+    /// Sum of virtual ages over all models aggregated so far.
+    pub staleness_sum_s: f64,
+    /// Number of models aggregated so far.
+    pub aggregated: u64,
+}
+
+impl AsyncStats {
+    /// Mean virtual age of every model aggregated so far (0 if none).
+    pub fn mean_staleness_s(&self) -> f64 {
+        if self.aggregated == 0 {
+            0.0
+        } else {
+            self.staleness_sum_s / self.aggregated as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_spec_parsing() {
+        assert_eq!(DeadlineSpec::from_spec("fixed:0.5").unwrap(), DeadlineSpec::Fixed(0.5));
+        assert_eq!(DeadlineSpec::from_spec("p90").unwrap(), DeadlineSpec::Quantile(0.9));
+        assert_eq!(DeadlineSpec::from_spec("factor:2").unwrap(), DeadlineSpec::Factor(2.0));
+        for bad in ["", "fixed:0", "fixed:-1", "p0", "p100", "px", "factor:0", "soon"] {
+            assert!(DeadlineSpec::validate_spec(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fixed_and_factor_windows() {
+        assert_eq!(DeadlineSpec::Fixed(0.5).window_s(0.1, &[]), 0.5);
+        assert!((DeadlineSpec::Factor(3.0).window_s(0.1, &[]) - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_window_warms_up_then_adapts() {
+        let d = DeadlineSpec::Quantile(0.5);
+        // Too little history: fall back to 2x compute.
+        assert!((d.window_s(0.1, &[0.9]) - 0.2).abs() < 1e-12);
+        // With history, the median of the observed offsets.
+        let hist = [0.1, 0.2, 0.3, 0.4, 0.5, 0.6];
+        let w = d.window_s(0.1, &hist);
+        assert!((w - 0.3).abs() < 1e-12, "median window {w}");
+        // p90 over ten offsets picks the 9th smallest.
+        let hist10: Vec<f64> = (1..=10).map(|i| i as f64 / 10.0).collect();
+        let w = DeadlineSpec::Quantile(0.9).window_s(0.1, &hist10);
+        assert!((w - 0.9).abs() < 1e-12, "p90 window {w}");
+    }
+
+    #[test]
+    fn staleness_factors() {
+        assert_eq!(StalenessPolicy::None.factor(1e9), 1.0);
+        let lin = StalenessPolicy::Linear(2.0);
+        assert!((lin.factor(0.0) - 1.0).abs() < 1e-12);
+        assert!((lin.factor(1.0) - 0.5).abs() < 1e-12);
+        assert_eq!(lin.factor(5.0), 0.0);
+        let poly = StalenessPolicy::Poly(1.0);
+        assert!((poly.factor(0.0) - 1.0).abs() < 1e-12);
+        assert!((poly.factor(1.0) - 0.5).abs() < 1e-12);
+        assert!(poly.factor(100.0) > 0.0);
+    }
+
+    #[test]
+    fn staleness_spec_parsing() {
+        assert_eq!(StalenessPolicy::from_spec("none").unwrap(), StalenessPolicy::None);
+        assert_eq!(StalenessPolicy::from_spec("linear:3").unwrap(), StalenessPolicy::Linear(3.0));
+        assert_eq!(StalenessPolicy::from_spec("poly:0.5").unwrap(), StalenessPolicy::Poly(0.5));
+        for bad in ["linear:0", "linear:-2", "poly:-1", "exp:2"] {
+            assert!(StalenessPolicy::validate_spec(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn late_policy_parsing() {
+        assert_eq!(LatePolicy::from_spec("buffer").unwrap(), LatePolicy::Buffer);
+        assert_eq!(LatePolicy::from_spec("").unwrap(), LatePolicy::Buffer);
+        assert_eq!(LatePolicy::from_spec("drop").unwrap(), LatePolicy::Drop);
+        assert!(LatePolicy::from_spec("queue").is_err());
+    }
+
+    #[test]
+    fn stats_mean_staleness() {
+        let mut s = AsyncStats::default();
+        assert_eq!(s.mean_staleness_s(), 0.0);
+        s.staleness_sum_s = 3.0;
+        s.aggregated = 2;
+        assert!((s.mean_staleness_s() - 1.5).abs() < 1e-12);
+    }
+}

@@ -71,6 +71,7 @@ impl DlNode {
                     dst: nbr,
                     round,
                     kind: MsgKind::Model,
+                    sent_at_s: 0.0,
                     payload: payload.clone(),
                 })?;
             }
@@ -122,6 +123,9 @@ impl DlNode {
                     bytes_sent: c.bytes_sent,
                     bytes_recv: c.bytes_recv,
                     msgs_sent: c.msgs_sent,
+                    late_msgs: 0,
+                    dropped_msgs: 0,
+                    mean_staleness_s: 0.0,
                 });
             }
         }
@@ -147,6 +151,7 @@ impl DlNode {
                     dst: sampler,
                     round,
                     kind: MsgKind::Control,
+                    sent_at_s: 0.0,
                     payload: encode_control(&Control::Ready { round }),
                 })?;
                 loop {

@@ -57,6 +57,7 @@ impl FlServer {
                     dst: c,
                     round,
                     kind: MsgKind::FlBroadcast,
+                    sent_at_s: 0.0,
                     payload: payload.clone(),
                 })?;
             }
@@ -99,6 +100,9 @@ impl FlServer {
                     bytes_sent: c.bytes_sent,
                     bytes_recv: c.bytes_recv,
                     msgs_sent: c.msgs_sent,
+                    late_msgs: 0,
+                    dropped_msgs: 0,
+                    mean_staleness_s: 0.0,
                 });
             }
         }
@@ -109,6 +113,7 @@ impl FlServer {
                 dst: c,
                 round: self.rounds,
                 kind: MsgKind::Control,
+                sent_at_s: 0.0,
                 payload: encode_control(&Control::Stop),
             })?;
         }
@@ -141,6 +146,7 @@ impl FlClient {
                         dst: self.server_rank,
                         round: env.round,
                         kind: MsgKind::FlUpdate,
+                        sent_at_s: 0.0,
                         payload: codec.encode(&new_params),
                     })?;
                 }

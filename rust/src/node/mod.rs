@@ -7,7 +7,11 @@
 //! * [`SecureDlNode`] — DL client with pairwise-mask secure aggregation.
 //! * [`PeerSampler`] — centralized per-round topology service.
 //! * [`FlServer`] / [`FlClient`] / [`ParameterServer`] — FL emulation.
+//! * [`async_dl`] — asynchronous-gossip policies (virtual deadlines,
+//!   staleness weighting, late-delivery handling) consumed by the
+//!   scheduler's `AsyncDlNodeSm`.
 
+pub mod async_dl;
 mod dl;
 mod fl;
 mod gossip_sampler;
@@ -15,6 +19,7 @@ mod peer_sampler;
 pub mod proto;
 mod secure_dl;
 
+pub use async_dl::{AsyncPolicy, DeadlineSpec, LatePolicy, StalenessPolicy};
 pub use dl::{DlNode, TopologyView};
 pub use gossip_sampler::{simulate_rounds as gossip_simulate, Descriptor, GossipView, ViewMessage};
 pub use fl::{FlClient, FlServer, ParameterServer};

@@ -74,6 +74,7 @@ impl PeerSampler {
                     dst: node,
                     round,
                     kind: MsgKind::Neighbors,
+                    sent_at_s: 0.0,
                     payload: encode_neighbors(&assign),
                 })?;
             }
@@ -201,6 +202,7 @@ mod tests {
                         dst: nodes,
                         round,
                         kind: MsgKind::Control,
+                        sent_at_s: 0.0,
                         payload: encode_control(&Control::Ready { round }),
                     })
                     .unwrap();
@@ -255,6 +257,7 @@ mod tests {
                         dst: nodes,
                         round,
                         kind: MsgKind::Control,
+                        sent_at_s: 0.0,
                         payload: encode_control(&Control::Ready { round }),
                     })
                     .unwrap();
@@ -290,6 +293,7 @@ mod tests {
                 dst: 2,
                 round: 0,
                 kind: MsgKind::Control,
+                sent_at_s: 0.0,
                 payload: encode_control(&Control::Stop),
             })
             .unwrap();
@@ -320,6 +324,7 @@ mod tests {
                         dst: nodes,
                         round,
                         kind: MsgKind::Control,
+                        sent_at_s: 0.0,
                         payload: encode_control(&Control::Ready { round }),
                     })
                     .unwrap();

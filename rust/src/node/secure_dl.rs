@@ -121,6 +121,9 @@ impl SecureDlNode {
                     bytes_sent: c.bytes_sent,
                     bytes_recv: c.bytes_recv,
                     msgs_sent: c.msgs_sent,
+                    late_msgs: 0,
+                    dropped_msgs: 0,
+                    mean_staleness_s: 0.0,
                 });
             }
         }
@@ -195,6 +198,7 @@ pub(crate) fn key_agreement_envelopes(
                 dst: peer,
                 round: 0,
                 kind: MsgKind::SecureSeed,
+                sent_at_s: 0.0,
                 payload: master.to_vec(),
             });
         }
@@ -232,6 +236,7 @@ pub(crate) fn secure_round_envelopes(
                     dst: peer,
                     round,
                     kind: MsgKind::SecureSeed,
+                    sent_at_s: 0.0,
                     payload: round_seed.to_vec(),
                 });
             }
@@ -246,6 +251,7 @@ pub(crate) fn secure_round_envelopes(
             dst: r,
             round,
             kind: MsgKind::Model,
+            sent_at_s: 0.0,
             payload: codec.encode(&masked),
         });
     }

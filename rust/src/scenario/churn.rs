@@ -21,6 +21,14 @@
 //!   rounds (mean `mean`), starting online at round 0. Seeded.
 //! * `departures:<frac>` — each node independently departs for good
 //!   with probability `frac`, at a seeded round in `[1, rounds)`.
+//! * `crashes:<frac>:<horizon_s>` — **time-indexed** fail-stop crashes:
+//!   each node independently crashes with probability `frac` at a
+//!   seeded *virtual instant* uniform in `(0, horizon_s)` seconds. A
+//!   crash is not round-aligned: the scheduler kills the node mid-round
+//!   (dropping its queued events) and its neighbors discover the
+//!   silence only through their own timeouts — which is why `crashes:`
+//!   requires the asynchronous gossip mode (`mode = "async_dl"`); a
+//!   synchronous fleet would deadlock waiting for the dead node.
 
 use std::sync::Arc;
 
@@ -49,17 +57,27 @@ impl Availability {
     }
 }
 
-/// Per-node online intervals, half-open `[start, end)` in rounds.
+/// Per-node online intervals, half-open `[start, end)` in rounds, plus
+/// optional *time-indexed* crash instants (virtual seconds).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChurnTrace {
     /// Sorted, disjoint intervals per node.
     intervals: Vec<Vec<(u64, u64)>>,
+    /// Virtual instant at which each node fail-stops (`None` = never).
+    /// Orthogonal to the round-indexed intervals: a `crashes:` trace
+    /// keeps every node round-active until its crash instant.
+    crash_time_s: Vec<Option<f64>>,
 }
 
 impl ChurnTrace {
+    fn from_intervals(intervals: Vec<Vec<(u64, u64)>>) -> ChurnTrace {
+        let nodes = intervals.len();
+        ChurnTrace { intervals, crash_time_s: vec![None; nodes] }
+    }
+
     /// Everyone online forever (degenerate trace).
     pub fn always_on(nodes: usize) -> ChurnTrace {
-        ChurnTrace { intervals: vec![vec![(0, FOREVER)]; nodes] }
+        ChurnTrace::from_intervals(vec![vec![(0, FOREVER)]; nodes])
     }
 
     pub fn nodes(&self) -> usize {
@@ -107,6 +125,9 @@ impl ChurnTrace {
                 Some(ChurnTrace::sessions(nodes, rounds, mean_on, mean_off, seed))
             }
             Spec::Departures { frac } => Some(ChurnTrace::departures(nodes, rounds, frac, seed)),
+            Spec::Crashes { frac, horizon_s } => {
+                Some(ChurnTrace::crashes(nodes, frac, horizon_s, seed))
+            }
         })
     }
 
@@ -153,7 +174,7 @@ impl ChurnTrace {
                 }
             }
         }
-        Ok(ChurnTrace { intervals })
+        Ok(ChurnTrace::from_intervals(intervals))
     }
 
     /// Alternating online/offline sessions per node, starting online at
@@ -179,7 +200,7 @@ impl ChurnTrace {
                 iv
             })
             .collect();
-        ChurnTrace { intervals }
+        ChurnTrace::from_intervals(intervals)
     }
 
     /// Each node independently departs for good with probability `frac`,
@@ -196,7 +217,43 @@ impl ChurnTrace {
                 }
             })
             .collect();
-        ChurnTrace { intervals }
+        ChurnTrace::from_intervals(intervals)
+    }
+
+    /// Time-indexed fail-stop crashes: each node independently crashes
+    /// with probability `frac` at a seeded virtual instant uniform in
+    /// `(0, horizon_s)`. Everyone stays round-active until their crash —
+    /// the scheduler enforces the instant itself, mid-round.
+    pub fn crashes(nodes: usize, frac: f64, horizon_s: f64, seed: u64) -> ChurnTrace {
+        let mut rng = Xoshiro256pp::new(mix_seed(&[seed, 0xC7_A5]));
+        let crash_time_s = (0..nodes)
+            .map(|_| {
+                // Consume both draws unconditionally so each node's
+                // crash instant is independent of earlier outcomes.
+                let hit = rng.next_f64() < frac;
+                let at = rng.next_f64() * horizon_s;
+                if hit && at > 0.0 {
+                    Some(at)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        ChurnTrace {
+            intervals: vec![vec![(0, FOREVER)]; nodes],
+            crash_time_s,
+        }
+    }
+
+    /// The virtual instant `node` fail-stops, if any. Ranks beyond the
+    /// trace never crash.
+    pub fn crash_time(&self, node: usize) -> Option<f64> {
+        self.crash_time_s.get(node).copied().flatten()
+    }
+
+    /// True when any node has a time-indexed crash scheduled.
+    pub fn has_crashes(&self) -> bool {
+        self.crash_time_s.iter().any(|c| c.is_some())
     }
 }
 
@@ -205,6 +262,13 @@ enum Spec {
     File { path: String },
     Sessions { mean_on: u64, mean_off: u64 },
     Departures { frac: f64 },
+    Crashes { frac: f64, horizon_s: f64 },
+}
+
+/// True when `spec` is a time-indexed `crashes:` trace (they need the
+/// async scheduler; config validation gates on this).
+pub fn is_crash_spec(spec: &str) -> bool {
+    spec.starts_with("crashes:")
 }
 
 fn parse_spec(spec: &str) -> Result<Spec> {
@@ -235,9 +299,24 @@ fn parse_spec(spec: &str) -> Result<Spec> {
         }
         return Ok(Spec::Departures { frac });
     }
+    if let Some(rest) = spec.strip_prefix("crashes:") {
+        let (f, h) = rest
+            .split_once(':')
+            .context("crash spec is crashes:<frac>:<horizon_s>")?;
+        let frac: f64 = f.parse().with_context(|| format!("bad crash fraction {f:?}"))?;
+        if !(0.0..=1.0).contains(&frac) {
+            bail!("crash fraction must be in [0, 1] (got {frac})");
+        }
+        let horizon_s: f64 = h.parse().with_context(|| format!("bad crash horizon {h:?}"))?;
+        if !(horizon_s > 0.0) {
+            bail!("crash horizon must be > 0 virtual seconds (got {horizon_s})");
+        }
+        return Ok(Spec::Crashes { frac, horizon_s });
+    }
     bail!(
         "unknown churn spec {spec:?} \
-         (expected trace:<path> | sessions:<mean_on>:<mean_off> | departures:<frac>)"
+         (expected trace:<path> | sessions:<mean_on>:<mean_off> | departures:<frac> \
+          | crashes:<frac>:<horizon_s>)"
     )
 }
 
@@ -324,12 +403,53 @@ mod tests {
 
     #[test]
     fn spec_validation() {
-        for good in ["", "trace:/tmp/x", "sessions:6:3", "departures:0.25"] {
+        for good in ["", "trace:/tmp/x", "sessions:6:3", "departures:0.25", "crashes:0.2:5.0"] {
             assert!(ChurnTrace::validate_spec(good).is_ok(), "{good}");
         }
-        for bad in ["trace:", "sessions:0:3", "sessions:6", "departures:1.5", "bernoulli:0.2"] {
+        for bad in [
+            "trace:",
+            "sessions:0:3",
+            "sessions:6",
+            "departures:1.5",
+            "bernoulli:0.2",
+            "crashes:0.2",
+            "crashes:1.5:5",
+            "crashes:0.2:0",
+            "crashes:0.2:-3",
+        ] {
             assert!(ChurnTrace::validate_spec(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn crash_spec_detection() {
+        assert!(crate::scenario::is_crash_spec("crashes:0.2:5"));
+        assert!(!crate::scenario::is_crash_spec("departures:0.2"));
+        assert!(!crate::scenario::is_crash_spec(""));
+    }
+
+    #[test]
+    fn crashes_are_time_indexed_and_deterministic() {
+        let a = ChurnTrace::crashes(64, 0.5, 10.0, 9);
+        let b = ChurnTrace::crashes(64, 0.5, 10.0, 9);
+        assert_eq!(a, b);
+        assert!(a.has_crashes());
+        let crashed = (0..64).filter(|&i| a.crash_time(i).is_some()).count();
+        assert!((16..=48).contains(&crashed), "{crashed} crashes");
+        for i in 0..64 {
+            // Round-indexed availability is untouched: everyone is
+            // active every round until the scheduler kills them.
+            assert!(a.active(i, 1_000));
+            assert_eq!(a.last_online_round(i), Some(FOREVER));
+            if let Some(t) = a.crash_time(i) {
+                assert!((0.0..10.0).contains(&t), "crash at {t}");
+            }
+        }
+        // Ranks beyond the trace never crash.
+        assert_eq!(a.crash_time(500), None);
+        // Other trace kinds schedule no crashes.
+        assert!(!ChurnTrace::departures(16, 10, 0.5, 1).has_crashes());
+        assert!(!ChurnTrace::always_on(4).has_crashes());
     }
 
     #[test]

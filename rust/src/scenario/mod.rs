@@ -34,7 +34,7 @@
 mod churn;
 mod compute;
 
-pub use churn::{Availability, ChurnTrace, FOREVER};
+pub use churn::{is_crash_spec, Availability, ChurnTrace, FOREVER};
 pub use compute::ComputePlan;
 
 use std::sync::Arc;

@@ -28,6 +28,26 @@
 //!   cores`, not `workers = nodes`); virtual completion time is fixed at
 //!   submission, so wall-clock execution order never affects virtual
 //!   order.
+//! * `Timer` — a node's own alarm, staged with [`NodeCtx::set_timer`]
+//!   and delivered as [`Wake::Timer`] at `now + delay`. Timers are
+//!   **cancelable** ([`NodeCtx::cancel_timer`]): a canceled timer is
+//!   discarded at pop time instead of waking its node. Timers are what
+//!   give nodes *deadlines* — the asynchronous gossip state machine
+//!   ([`AsyncDlNodeSm`]) aggregates whatever neighbor models arrived
+//!   when its per-round deadline timer fires, so a slow or crashed
+//!   neighbor can never stall it.
+//!
+//! # Crashes
+//!
+//! [`Scheduler::set_crash_time`] registers a virtual instant at which a
+//! node fails mid-run (a `crashes:` churn trace). From that instant on
+//! the node is treated exactly like a departed node: every event
+//! addressed to it — deliveries (counted in
+//! [`Scheduler::dropped_deliveries`]), timers, compute completions — is
+//! discarded instead of waking it, and the final deadlock check exempts
+//! it. Crucially the node itself gets no notification: its neighbors
+//! must discover the silence through their own timeouts, which is the
+//! behavior the async gossip subsystem exists to model.
 //!
 //! Nodes are resumable state machines ([`EventNode`]) woken with a
 //! [`Wake`]; they react by staging sends and at most one compute job per
@@ -45,10 +65,10 @@
 
 mod nodes;
 
-pub use nodes::{DlNodeSm, SamplerSm, SecureDlNodeSm};
+pub use nodes::{AsyncDlNodeSm, DlNodeSm, SamplerSm, SecureDlNodeSm};
 
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -83,6 +103,9 @@ pub enum Wake {
     Message(Envelope),
     /// The node's in-flight compute job finished.
     ComputeDone(ComputeOutput),
+    /// A timer staged with [`NodeCtx::set_timer`] fired; carries the id
+    /// `set_timer` returned.
+    Timer(u64),
 }
 
 /// A node's window onto the scheduler during one wake.
@@ -94,12 +117,19 @@ pub struct NodeCtx {
     counters: Counters,
     sends: Vec<Envelope>,
     compute: Option<(f64, ComputeFn)>,
+    /// First id handed out by `set_timer` this wake (scheduler-global).
+    timer_base: u64,
+    /// Delays of timers staged this wake; id = `timer_base + index`.
+    timers: Vec<f64>,
+    /// Timer ids canceled this wake.
+    cancels: Vec<u64>,
     departed: bool,
 }
 
 impl NodeCtx {
     /// Stage a message send at the current virtual time. Delivery is
-    /// timestamped by the scheduler's network model after the wake.
+    /// timestamped by the scheduler's network model after the wake; the
+    /// envelope's `sent_at_s` is stamped with this node's clock.
     pub fn send(&mut self, env: Envelope) {
         self.sends.push(env);
     }
@@ -111,6 +141,24 @@ impl NodeCtx {
     pub fn start_compute(&mut self, duration_s: f64, f: ComputeFn) {
         assert!(self.compute.is_none(), "one compute job per wake");
         self.compute = Some((duration_s, f));
+    }
+
+    /// Arm a timer that wakes this node with [`Wake::Timer`] at
+    /// `now + delay_s` of virtual time. Returns the id the wake will
+    /// carry; pass it to [`cancel_timer`](NodeCtx::cancel_timer) to
+    /// disarm. Negative delays clamp to 0 (fire at the current instant,
+    /// after already-queued same-time events).
+    pub fn set_timer(&mut self, delay_s: f64) -> u64 {
+        let id = self.timer_base + self.timers.len() as u64;
+        self.timers.push(delay_s.max(0.0));
+        id
+    }
+
+    /// Cancel a timer set in this or an earlier wake. Canceling a timer
+    /// that already fired (or was never set) is a silent no-op, so state
+    /// machines don't need to track firing races.
+    pub fn cancel_timer(&mut self, id: u64) {
+        self.cancels.push(id);
     }
 
     /// Wire-byte counters for this node (sends staged in *earlier* wakes
@@ -151,6 +199,7 @@ enum EventKind {
     Start { node: usize },
     Deliver { env: Envelope },
     ComputeDone { node: usize, job: u64 },
+    Timer { node: usize, timer: u64 },
 }
 
 struct Event {
@@ -266,10 +315,18 @@ pub struct Scheduler {
     queue: BinaryHeap<std::cmp::Reverse<Event>>,
     seq: u64,
     next_job: u64,
+    next_timer: u64,
+    /// Timer ids with an event still in the queue. Bounds
+    /// `canceled_timers`: canceling an already-fired id is a true no-op
+    /// instead of a permanent HashSet entry.
+    pending_timers: HashSet<u64>,
+    canceled_timers: HashSet<u64>,
     node_time: Vec<f64>,
     uplink_free: Vec<f64>,
     counters: Vec<Counters>,
     departed: Vec<bool>,
+    /// Virtual instant at which each node crashes (`NAN` = never).
+    crash_at: Vec<f64>,
     dropped: u64,
 }
 
@@ -290,10 +347,14 @@ impl Scheduler {
             queue: BinaryHeap::new(),
             seq: 0,
             next_job: 0,
+            next_timer: 0,
+            pending_timers: HashSet::new(),
+            canceled_timers: HashSet::new(),
             node_time: Vec::new(),
             uplink_free: Vec::new(),
             counters: Vec::new(),
             departed: Vec::new(),
+            crash_at: Vec::new(),
             dropped: 0,
         }
     }
@@ -306,7 +367,18 @@ impl Scheduler {
         self.uplink_free.push(0.0);
         self.counters.push(Counters::new());
         self.departed.push(false);
+        self.crash_at.push(f64::NAN);
         id
+    }
+
+    /// Schedule `node` to fail-stop at virtual time `at_s` (a `crashes:`
+    /// churn trace). The node is not told: from `at_s` on, every event
+    /// addressed to it is silently discarded (deliveries are counted in
+    /// [`dropped_deliveries`](Scheduler::dropped_deliveries)), and the
+    /// end-of-run deadlock check exempts it. Neighbors only notice
+    /// through their own timeouts.
+    pub fn set_crash_time(&mut self, node: usize, at_s: f64) {
+        self.crash_at[node] = at_s;
     }
 
     /// A node's virtual clock (its last wake time).
@@ -345,11 +417,20 @@ impl Scheduler {
         let result = self.drain(&mut pool);
         pool.shutdown();
         result?;
+        // Departed / crashed nodes are exempt from the deadlock check:
+        // they legitimately stop mid-protocol. A node with a crash
+        // *scheduled* counts too, even if no event ever popped at or
+        // after its crash instant (crash marking is lazy): the queue has
+        // quiesced, so nothing can reach it before it dies.
         let stuck: Vec<usize> = self
             .nodes
             .iter()
             .enumerate()
-            .filter(|(_, n)| n.as_ref().is_some_and(|n| !n.done()))
+            .filter(|(i, n)| {
+                !self.departed[*i]
+                    && self.crash_at[*i].is_nan()
+                    && n.as_ref().is_some_and(|n| !n.done())
+            })
             .map(|(i, _)| i)
             .collect();
         if !stuck.is_empty() {
@@ -361,16 +442,33 @@ impl Scheduler {
         Ok(())
     }
 
+    /// True once `node` has passed its registered crash instant at
+    /// event time `at` (and marks it departed on the first observation).
+    fn crashed(&mut self, node: usize, at: f64) -> bool {
+        // NaN (no crash scheduled) compares false.
+        if at >= self.crash_at[node] {
+            self.departed[node] = true;
+            true
+        } else {
+            false
+        }
+    }
+
     fn drain(&mut self, pool: &mut WorkerPool) -> Result<()> {
         while let Some(std::cmp::Reverse(ev)) = self.queue.pop() {
             let (node, wake) = match ev.kind {
-                EventKind::Start { node } => (node, Wake::Start),
+                EventKind::Start { node } => {
+                    if self.crashed(node, ev.at) {
+                        continue;
+                    }
+                    (node, Wake::Start)
+                }
                 EventKind::Deliver { env } => {
                     let dst = env.dst;
                     if dst >= self.nodes.len() {
                         bail!("message to unknown node {dst}");
                     }
-                    if self.departed[dst] {
+                    if self.departed[dst] || self.crashed(dst, ev.at) {
                         // In flight to a node that left; drop on the floor.
                         self.dropped += 1;
                         continue;
@@ -379,7 +477,25 @@ impl Scheduler {
                     (dst, Wake::Message(env))
                 }
                 EventKind::ComputeDone { node, job } => {
-                    (node, Wake::ComputeDone(pool.wait_for(job)?))
+                    // Always reap the pool result (otherwise it would sit
+                    // in the stash forever); discard it if the node
+                    // crashed while the job was in flight.
+                    let out = pool.wait_for(job);
+                    if self.departed[node] || self.crashed(node, ev.at) {
+                        drop(out);
+                        continue;
+                    }
+                    (node, Wake::ComputeDone(out?))
+                }
+                EventKind::Timer { node, timer } => {
+                    self.pending_timers.remove(&timer);
+                    if self.canceled_timers.remove(&timer) {
+                        continue;
+                    }
+                    if self.departed[node] || self.crashed(node, ev.at) {
+                        continue;
+                    }
+                    (node, Wake::Timer(timer))
                 }
             };
             self.wake(node, ev.at, wake, pool)?;
@@ -398,17 +514,35 @@ impl Scheduler {
             counters: self.counters[node].clone(),
             sends: Vec::new(),
             compute: None,
+            timer_base: self.next_timer,
+            timers: Vec::new(),
+            cancels: Vec::new(),
             departed: false,
         };
         let handled = sm.on_event(&mut ctx, wake);
         self.nodes[node] = Some(sm);
         handled?;
-        let NodeCtx { sends, compute, departed, .. } = ctx;
+        let NodeCtx { sends, compute, timers, cancels, departed, .. } = ctx;
         if departed {
             self.departed[node] = true;
         }
         let now = self.node_time[node];
-        for env in sends {
+        let staged_timers = timers.len() as u64;
+        for (i, delay_s) in timers.into_iter().enumerate() {
+            let timer = self.next_timer + i as u64;
+            self.pending_timers.insert(timer);
+            self.push(now + delay_s, EventKind::Timer { node, timer });
+        }
+        self.next_timer += staged_timers;
+        for id in cancels {
+            // Only remember cancellations of timers still in the queue;
+            // canceling a fired (or never-set) id is a no-op.
+            if self.pending_timers.contains(&id) {
+                self.canceled_timers.insert(id);
+            }
+        }
+        for mut env in sends {
+            env.sent_at_s = now;
             let bytes = wire_size(&env);
             self.counters[node].on_send(bytes);
             let deliver_at = match &self.links {
@@ -506,6 +640,7 @@ mod tests {
                             dst: 1,
                             round: r,
                             kind: MsgKind::Control,
+                            sent_at_s: 0.0,
                             payload: vec![1],
                         });
                     }
@@ -529,6 +664,7 @@ mod tests {
                     dst: env.src,
                     round: env.round,
                     kind: MsgKind::Control,
+                    sent_at_s: 0.0,
                     payload: vec![2],
                 });
             }
@@ -619,6 +755,141 @@ mod tests {
         s.add_node(Box::new(Panicky));
         let err = s.run().unwrap_err().to_string();
         assert!(err.contains("panicked"), "{err}");
+    }
+
+    /// Arms a timer at start; optionally cancels it on a later wake.
+    struct Alarm {
+        delay_s: f64,
+        cancel_on_message: bool,
+        timer: Option<u64>,
+        fired_at: Option<f64>,
+        done_when_fired: bool,
+    }
+
+    impl EventNode for Alarm {
+        fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+            match wake {
+                Wake::Start => {
+                    self.timer = Some(ctx.set_timer(self.delay_s));
+                }
+                Wake::Message(_) => {
+                    if self.cancel_on_message {
+                        if let Some(id) = self.timer {
+                            ctx.cancel_timer(id);
+                        }
+                    }
+                }
+                Wake::Timer(id) => {
+                    assert_eq!(Some(id), self.timer, "foreign timer id");
+                    self.fired_at = Some(ctx.now_s);
+                }
+                _ => {}
+            }
+            Ok(())
+        }
+        fn done(&self) -> bool {
+            !self.done_when_fired || self.fired_at.is_some()
+        }
+    }
+
+    /// Sends one message to `dst` at start; immediately done.
+    struct OneShot {
+        id: usize,
+        dst: usize,
+    }
+
+    impl EventNode for OneShot {
+        fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+            if let Wake::Start = wake {
+                ctx.send(Envelope {
+                    src: self.id,
+                    dst: self.dst,
+                    round: 0,
+                    kind: MsgKind::Control,
+                    sent_at_s: 0.0,
+                    payload: vec![9],
+                });
+            }
+            Ok(())
+        }
+        fn done(&self) -> bool {
+            true
+        }
+    }
+
+    #[test]
+    fn timer_fires_at_virtual_deadline() {
+        let net = NetworkModel { latency_s: 0.0, bandwidth_bps: 1e9 };
+        let mut s = Scheduler::new(Some(net), 1);
+        let id = s.add_node(Box::new(Alarm {
+            delay_s: 0.75,
+            cancel_on_message: false,
+            timer: None,
+            fired_at: None,
+            done_when_fired: true,
+        }));
+        s.run().unwrap();
+        assert!((s.node_time(id) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn canceled_timer_never_fires() {
+        // The alarm cancels its own pending timer when the neighbor's
+        // message (delivered well before the deadline) arrives.
+        let net = NetworkModel { latency_s: 0.001, bandwidth_bps: 1e9 };
+        let mut s = Scheduler::new(Some(net), 1);
+        s.add_node(Box::new(Alarm {
+            delay_s: 100.0,
+            cancel_on_message: true,
+            timer: None,
+            fired_at: None,
+            done_when_fired: false,
+        }));
+        s.add_node(Box::new(OneShot { id: 1, dst: 0 }));
+        s.run().unwrap();
+        // The queue drained without ever waking the alarm at t = 100.
+        assert!(s.node_time(0) < 1.0);
+    }
+
+    #[test]
+    fn scheduled_crash_exempts_even_eventless_node() {
+        // The crashed node has NO pending events at or after its crash
+        // instant (crash marking is lazy), yet the deadlock check must
+        // still exempt it per the set_crash_time contract.
+        struct Waiter;
+        impl EventNode for Waiter {
+            fn on_event(&mut self, _ctx: &mut NodeCtx, _wake: Wake) -> Result<()> {
+                Ok(())
+            }
+            fn done(&self) -> bool {
+                false // forever waiting for a message that never comes
+            }
+        }
+        let mut s = Scheduler::new(None, 1);
+        s.add_node(Box::new(Waiter));
+        s.set_crash_time(0, 1.0); // queue drains at t = 0, before this
+        s.run().unwrap();
+    }
+
+    #[test]
+    fn crashed_node_drops_events_and_run_completes() {
+        // The alarm's deadline is at t = 5 but the node crashes at t = 1:
+        // the timer is discarded, the node is exempt from the deadlock
+        // check, and deliveries after the crash are dropped + counted.
+        let net = NetworkModel { latency_s: 2.0, bandwidth_bps: 1e9 };
+        let mut s = Scheduler::new(Some(net), 1);
+        s.add_node(Box::new(Alarm {
+            delay_s: 5.0,
+            cancel_on_message: false,
+            timer: None,
+            fired_at: None,
+            done_when_fired: true, // would deadlock if not crash-exempt
+        }));
+        s.add_node(Box::new(OneShot { id: 1, dst: 0 })); // one msg, arrives t > 2
+        s.set_crash_time(0, 1.0);
+        s.run().unwrap();
+        assert_eq!(s.dropped_deliveries(), 1);
+        assert_eq!(s.counters(0).msgs_recv, 0);
     }
 
     #[test]

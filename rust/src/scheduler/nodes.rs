@@ -9,6 +9,11 @@
 //! final parameters under either runner — enforced by the equivalence
 //! test in `rust/tests/dl_integration.rs`.
 //!
+//! [`AsyncDlNodeSm`] has **no** threaded twin: it is a genuinely new
+//! execution model (asynchronous gossip over virtual deadlines) that
+//! only exists on the scheduler, because it needs first-class timer
+//! events and per-message virtual timestamps.
+//!
 //! # Churn traces (static topologies)
 //!
 //! With a [`ChurnTrace`], [`DlNodeSm`] consults the shared trace each
@@ -34,6 +39,7 @@ use crate::dataset::Dataset;
 use crate::graph::{Graph, MixingWeights};
 use crate::metrics::{NodeLog, Record};
 use crate::model::ParamVec;
+use crate::node::async_dl::{AsyncPolicy, AsyncStats, DeadlineSpec, LatePolicy};
 use crate::node::proto::{decode_control, decode_neighbors, encode_control, encode_neighbors};
 use crate::node::proto::{Control, NeighborAssignment};
 use crate::node::TopologyView;
@@ -174,6 +180,7 @@ impl DlNodeSm {
                     dst: *sampler_rank,
                     round: self.round,
                     kind: MsgKind::Control,
+                    sent_at_s: 0.0,
                     payload: encode_control(&Control::Ready { round: self.round }),
                 });
                 self.state = DlState::AwaitAssignment;
@@ -303,6 +310,7 @@ impl EventNode for DlNodeSm {
                             dst: nbr,
                             round: self.round,
                             kind: MsgKind::Model,
+                            sent_at_s: 0.0,
                             payload: payload.clone(),
                         });
                     }
@@ -333,12 +341,17 @@ impl EventNode for DlNodeSm {
                         bytes_sent: c.bytes_sent,
                         bytes_recv: c.bytes_recv,
                         msgs_sent: c.msgs_sent,
+                        late_msgs: 0,
+                        dropped_msgs: 0,
+                        mean_staleness_s: 0.0,
                     });
                     self.round += 1;
                     self.begin_round(ctx)
                 }
                 ComputeOutput::Value(_) => bail!("unexpected compute output"),
             },
+            // Synchronous nodes arm no timers.
+            Wake::Timer(_) => Ok(()),
         }
     }
 
@@ -538,12 +551,17 @@ impl EventNode for SecureDlNodeSm {
                         bytes_sent: c.bytes_sent,
                         bytes_recv: c.bytes_recv,
                         msgs_sent: c.msgs_sent,
+                        late_msgs: 0,
+                        dropped_msgs: 0,
+                        mean_staleness_s: 0.0,
                     });
                     self.round += 1;
                     self.begin_round(ctx)
                 }
                 ComputeOutput::Value(_) => bail!("unexpected compute output"),
             },
+            // Secure aggregation runs fully synchronously; no timers.
+            Wake::Timer(_) => Ok(()),
         }
     }
 
@@ -608,6 +626,7 @@ impl SamplerSm {
                     dst: node,
                     round: self.round,
                     kind: MsgKind::Neighbors,
+                    sent_at_s: 0.0,
                     payload: encode_neighbors(&assign),
                 });
             }
@@ -639,10 +658,400 @@ impl EventNode for SamplerSm {
                 }
             }
             Wake::ComputeDone(_) => bail!("sampler schedules no compute"),
+            Wake::Timer(_) => bail!("sampler arms no timers"),
         }
     }
 
     fn done(&self) -> bool {
         self.stopped || self.round == self.rounds
+    }
+}
+
+/// Most recent arrival offsets a quantile deadline considers. Bounds
+/// both memory and the per-round clone-and-sort in
+/// [`DeadlineSpec::window_s`] on long runs.
+const OFFSET_HISTORY_CAP: usize = 512;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum AsyncState {
+    /// Local training in flight on the worker pool.
+    Training,
+    /// Trained and broadcast; waiting for the deadline timer.
+    AwaitDeadline,
+    /// Offline round (churn trace): idling for one window, no training.
+    Idling,
+    /// Evaluation in flight on the worker pool.
+    Evaluating,
+    /// All rounds finished.
+    Done,
+    /// Left for good mid-experiment (churn-trace departure).
+    Departed,
+}
+
+/// Asynchronous D-PSGD client: the `mode = "async_dl"` execution model.
+///
+/// Unlike [`DlNodeSm`] there is **no** `AwaitModels` completeness
+/// requirement. Each round the node
+///
+/// 1. arms a *deadline timer* ([`crate::node::DeadlineSpec`]) and starts
+///    training,
+/// 2. broadcasts its model to every neighbor the moment training
+///    finishes (the scheduler stamps the envelope's `sent_at_s`),
+/// 3. when the deadline fires (and training is done), aggregates
+///    **whatever neighbor models have arrived**, weighting each by the
+///    staleness policy applied to its virtual age; weight shed by aged
+///    or absent neighbors folds into the self-weight so the mixing row
+///    stays stochastic,
+/// 4. then immediately begins the next round.
+///
+/// A message that was already in flight when a deadline fired is *late*:
+/// the [`crate::node::LatePolicy`] either buffers it for the next
+/// round's aggregation or drops it, counted per node either way. Only
+/// the freshest buffered model per neighbor is kept (per-sender FIFO
+/// makes later arrivals strictly newer).
+///
+/// Because everything is driven by virtual deadlines, a slow straggler
+/// delays nobody, and a neighbor killed mid-round by a `crashes:` churn
+/// trace simply stops contributing models — its neighbors' timers fire
+/// regardless, so the run completes instead of deadlocking.
+pub struct AsyncDlNodeSm {
+    id: usize,
+    rounds: u64,
+    eval_every: u64,
+    trainer: Option<Trainer>,
+    sharing: Box<dyn Sharing>,
+    params: Vec<f32>,
+    /// Static mixing row (async mode is static-topology only).
+    self_weight: f64,
+    neighbors: Vec<(usize, f64)>,
+    test: Arc<Dataset>,
+    /// Round-indexed availability trace (`None` = always on).
+    churn: Option<Arc<ChurnTrace>>,
+    eval_time_s: f64,
+    /// Own per-round training time (step time × local steps).
+    round_compute_s: f64,
+    policy: AsyncPolicy,
+    // --- runtime state ---
+    round: u64,
+    state: AsyncState,
+    /// Virtual instant the current round's collection window opened.
+    window_start_s: f64,
+    /// Virtual instant of the last *aggregating* deadline.
+    last_deadline_s: f64,
+    deadline_timer: Option<u64>,
+    /// The deadline fired while training was still in flight.
+    deadline_passed: bool,
+    /// Post-training model parked until the deadline.
+    model: Option<ParamVec>,
+    train_loss: f64,
+    /// Freshest buffered model per neighbor: src -> (sent_at_s, payload).
+    inbox: HashMap<usize, (f64, Vec<u8>)>,
+    /// Arrival offsets (arrival - window start) for quantile deadlines.
+    /// Only fed under a `p<q>` spec, and bounded to the most recent
+    /// [`OFFSET_HISTORY_CAP`] observations (rotating overwrite).
+    arrival_offsets: Vec<f64>,
+    /// Next rotating slot in `arrival_offsets` once it reaches the cap.
+    offset_cursor: usize,
+    stats: AsyncStats,
+    log: Option<NodeLog>,
+    wall: Timer,
+}
+
+impl AsyncDlNodeSm {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: usize,
+        rounds: u64,
+        eval_every: u64,
+        trainer: Trainer,
+        sharing: Box<dyn Sharing>,
+        params: Vec<f32>,
+        self_weight: f64,
+        neighbors: Vec<(usize, f64)>,
+        test: Arc<Dataset>,
+        churn: Option<Arc<ChurnTrace>>,
+        step_time_s: f64,
+        eval_time_s: f64,
+        policy: AsyncPolicy,
+    ) -> AsyncDlNodeSm {
+        let round_compute_s = step_time_s * trainer.local_steps() as f64;
+        AsyncDlNodeSm {
+            id,
+            rounds,
+            eval_every,
+            trainer: Some(trainer),
+            sharing,
+            params,
+            self_weight,
+            neighbors,
+            test,
+            churn,
+            eval_time_s,
+            round_compute_s,
+            policy,
+            round: 0,
+            state: AsyncState::Training,
+            window_start_s: 0.0,
+            last_deadline_s: 0.0,
+            deadline_timer: None,
+            deadline_passed: false,
+            model: None,
+            train_loss: 0.0,
+            inbox: HashMap::new(),
+            arrival_offsets: Vec::new(),
+            offset_cursor: 0,
+            stats: AsyncStats::default(),
+            log: Some(NodeLog::new(id)),
+            wall: Timer::start(),
+        }
+    }
+
+    /// Record one arrival offset for the quantile-adaptive deadline.
+    /// No-op under fixed/factor specs (the history is never read), and
+    /// bounded: once full, the oldest observation is overwritten, so a
+    /// long run tracks the *recent* arrival distribution at O(1) cost.
+    fn record_offset(&mut self, offset_s: f64) {
+        if !matches!(self.policy.deadline, DeadlineSpec::Quantile(_)) {
+            return;
+        }
+        if self.arrival_offsets.len() < OFFSET_HISTORY_CAP {
+            self.arrival_offsets.push(offset_s);
+        } else {
+            self.arrival_offsets[self.offset_cursor] = offset_s;
+            self.offset_cursor = (self.offset_cursor + 1) % OFFSET_HISTORY_CAP;
+        }
+    }
+
+    /// True when the trace says this is the node's last online round.
+    fn parting_round(&self) -> bool {
+        self.churn
+            .as_ref()
+            .is_some_and(|tr| tr.last_online_round(self.id) == Some(self.round))
+    }
+
+    /// Open the next round's collection window: arm the deadline and
+    /// start training (or idle one window on an offline round).
+    fn begin_round(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        if self.round == self.rounds {
+            self.state = AsyncState::Done;
+            return Ok(());
+        }
+        if let Some(tr) = &self.churn {
+            if !tr.active(self.id, self.round) {
+                if tr.last_online_round(self.id).map_or(true, |l| l < self.round) {
+                    // Never coming back: leave for good.
+                    self.state = AsyncState::Departed;
+                    ctx.depart();
+                    return Ok(());
+                }
+                // Offline round: idle one window of virtual time without
+                // training or broadcasting, then move on.
+                self.window_start_s = ctx.now_s;
+                let window = self
+                    .policy
+                    .deadline
+                    .window_s(self.round_compute_s, &self.arrival_offsets);
+                self.deadline_timer = Some(ctx.set_timer(window));
+                self.state = AsyncState::Idling;
+                return Ok(());
+            }
+        }
+        self.window_start_s = ctx.now_s;
+        self.deadline_passed = false;
+        let window = self
+            .policy
+            .deadline
+            .window_s(self.round_compute_s, &self.arrival_offsets);
+        self.deadline_timer = Some(ctx.set_timer(window));
+        let trainer = self.trainer.take().context("trainer already in flight")?;
+        let params = std::mem::take(&mut self.params);
+        ctx.start_compute(
+            self.round_compute_s,
+            Box::new(move || {
+                let mut trainer = trainer;
+                let (params, loss) = trainer.train_round(params)?;
+                Ok(ComputeOutput::Train { trainer, params, loss })
+            }),
+        );
+        self.state = AsyncState::Training;
+        Ok(())
+    }
+
+    /// Aggregate whatever arrived, staleness-weighted, then advance.
+    fn aggregate_and_advance(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let mut model = self.model.take().context("no trained model to aggregate")?;
+        // Deterministic: walk the static neighbor row in order, pulling
+        // each neighbor's freshest buffered model if one arrived.
+        let mut self_w = self.self_weight;
+        let mut msgs: Vec<(usize, f64, Vec<u8>)> = Vec::new();
+        for &(nbr, w) in &self.neighbors {
+            match self.inbox.remove(&nbr) {
+                Some((sent_at_s, payload)) => {
+                    let age = (ctx.now_s - sent_at_s).max(0.0);
+                    let eff = w * self.policy.staleness.factor(age);
+                    self_w += w - eff;
+                    self.stats.staleness_sum_s += age;
+                    self.stats.aggregated += 1;
+                    msgs.push((nbr, eff, payload));
+                }
+                // Nothing arrived in time: the absent neighbor's weight
+                // folds into the self-weight (the row stays stochastic).
+                None => self_w += w,
+            }
+        }
+        {
+            let received: Vec<Received> = msgs
+                .iter()
+                .map(|(src, weight, payload)| Received {
+                    src: *src,
+                    weight: *weight,
+                    payload,
+                })
+                .collect();
+            self.sharing.aggregate(&mut model, self_w, &received)?;
+        }
+        self.params = model.into_vec();
+        if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
+            let trainer = self.trainer.take().context("trainer already in flight")?;
+            let job = EvalJob {
+                trainer,
+                params: self.params.clone(),
+                test: Arc::clone(&self.test),
+            };
+            ctx.start_compute(self.eval_time_s, job.into_compute());
+            self.state = AsyncState::Evaluating;
+            Ok(())
+        } else {
+            self.round += 1;
+            self.begin_round(ctx)
+        }
+    }
+}
+
+impl EventNode for AsyncDlNodeSm {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        match wake {
+            Wake::Start => self.begin_round(ctx),
+            Wake::Message(env) => {
+                if !matches!(env.kind, MsgKind::Model)
+                    || matches!(self.state, AsyncState::Done | AsyncState::Departed)
+                {
+                    return Ok(());
+                }
+                // Feed the quantile-deadline history (p<q> specs only),
+                // but only while the collection window is open: during
+                // Evaluating/Idling, `window_start_s` belongs to an
+                // already-closed window, so offsets measured against it
+                // would be inflated by eval time and balloon the
+                // adaptive deadline.
+                if matches!(self.state, AsyncState::Training | AsyncState::AwaitDeadline) {
+                    self.record_offset((ctx.now_s - self.window_start_s).max(0.0));
+                }
+                // Late = already in flight when the last aggregating
+                // deadline fired (the cut missed it).
+                if env.sent_at_s < self.last_deadline_s {
+                    match self.policy.late {
+                        LatePolicy::Drop => {
+                            self.stats.dropped_msgs += 1;
+                            return Ok(());
+                        }
+                        LatePolicy::Buffer => self.stats.late_msgs += 1,
+                    }
+                }
+                // Freshest model per neighbor wins (per-sender FIFO makes
+                // later arrivals strictly newer).
+                self.inbox.insert(env.src, (env.sent_at_s, env.payload));
+                Ok(())
+            }
+            Wake::Timer(id) => {
+                if self.deadline_timer != Some(id) {
+                    return Ok(()); // stale timer from a superseded round
+                }
+                self.deadline_timer = None;
+                match self.state {
+                    AsyncState::Training => {
+                        // Deadline fired mid-train: close the window now,
+                        // aggregate the moment training completes.
+                        self.last_deadline_s = ctx.now_s;
+                        self.deadline_passed = true;
+                        Ok(())
+                    }
+                    AsyncState::AwaitDeadline => {
+                        self.last_deadline_s = ctx.now_s;
+                        self.aggregate_and_advance(ctx)
+                    }
+                    AsyncState::Idling => {
+                        self.round += 1;
+                        self.begin_round(ctx)
+                    }
+                    _ => Ok(()),
+                }
+            }
+            Wake::ComputeDone(out) => match out {
+                ComputeOutput::Train { trainer, params, loss } => {
+                    self.trainer = Some(trainer);
+                    self.train_loss = loss;
+                    let model = ParamVec::from_vec(params);
+                    let payload = self.sharing.outgoing(&model, self.round)?;
+                    for &(nbr, _) in &self.neighbors {
+                        ctx.send(Envelope {
+                            src: self.id,
+                            dst: nbr,
+                            round: self.round,
+                            kind: MsgKind::Model,
+                            sent_at_s: 0.0, // stamped by the scheduler
+                            payload: payload.clone(),
+                        });
+                    }
+                    self.model = Some(model);
+                    if self.parting_round() {
+                        // Push the final update, then leave without
+                        // pulling; disarm the pending deadline.
+                        if let Some(id) = self.deadline_timer.take() {
+                            ctx.cancel_timer(id);
+                        }
+                        self.state = AsyncState::Departed;
+                        ctx.depart();
+                        return Ok(());
+                    }
+                    if self.deadline_passed {
+                        // The window already closed while we trained.
+                        self.aggregate_and_advance(ctx)
+                    } else {
+                        self.state = AsyncState::AwaitDeadline;
+                        Ok(())
+                    }
+                }
+                ComputeOutput::Eval { trainer, test_loss, test_acc } => {
+                    self.trainer = Some(trainer);
+                    let c = ctx.counters();
+                    self.log.as_mut().expect("log taken mid-run").push(Record {
+                        round: self.round,
+                        emu_time_s: ctx.now_s,
+                        real_time_s: self.wall.elapsed().as_secs_f64(),
+                        train_loss: self.train_loss,
+                        test_loss,
+                        test_acc,
+                        bytes_sent: c.bytes_sent,
+                        bytes_recv: c.bytes_recv,
+                        msgs_sent: c.msgs_sent,
+                        late_msgs: self.stats.late_msgs,
+                        dropped_msgs: self.stats.dropped_msgs,
+                        mean_staleness_s: self.stats.mean_staleness_s(),
+                    });
+                    self.round += 1;
+                    self.begin_round(ctx)
+                }
+                ComputeOutput::Value(_) => bail!("unexpected compute output"),
+            },
+        }
+    }
+
+    fn done(&self) -> bool {
+        matches!(self.state, AsyncState::Done | AsyncState::Departed)
+    }
+
+    fn take_log(&mut self) -> Option<NodeLog> {
+        self.log.take()
     }
 }

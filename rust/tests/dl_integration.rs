@@ -371,3 +371,211 @@ fn fp16_full_sharing_halves_bytes() {
     assert!((0.45..0.6).contains(&ratio), "ratio {ratio}");
     engine.shutdown();
 }
+
+// ---------------------------------------------------------------------
+// Asynchronous gossip (mode = "async_dl").
+// ---------------------------------------------------------------------
+
+/// Find a seed whose derived scenario satisfies `want` (e.g. "at least
+/// one straggler was actually drawn"), so Bernoulli scenario draws can
+/// never make an assertion vacuous. Deterministic.
+fn seed_where(
+    cfg: &decentralize_rs::config::ExperimentConfig,
+    want: impl Fn(&decentralize_rs::scenario::Scenario) -> bool,
+) -> u64 {
+    for seed in 1..1000u64 {
+        let scenario = decentralize_rs::scenario::Scenario::from_specs(
+            &cfg.step_time,
+            &cfg.link_model,
+            &cfg.churn_trace,
+            None,
+            cfg.nodes,
+            cfg.rounds,
+            seed,
+        )
+        .unwrap();
+        if want(&scenario) {
+            return seed;
+        }
+    }
+    panic!("no seed under 1000 produced the wanted scenario draw");
+}
+
+#[test]
+fn async_dl_trains_and_logs_staleness_metrics() {
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_async_basic");
+    cfg.mode = "async_dl".into();
+    cfg.deadline = "factor:2".into();
+    cfg.staleness = "linear:5".into();
+    cfg.rounds = 12;
+    cfg.eval_every = 4;
+    let result = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(result.logs.len(), cfg.nodes);
+    for log in &result.logs {
+        assert_eq!(log.records.len(), 3, "node {}", log.node);
+        // Mean staleness is populated (every aggregated model has a
+        // positive virtual age: at least its own transfer time).
+        assert!(
+            log.records.last().unwrap().mean_staleness_s > 0.0,
+            "node {} has no staleness signal",
+            log.node
+        );
+    }
+    // Async gossip still learns on this task.
+    let acc = result.final_accuracy();
+    assert!(acc > 0.2, "final accuracy {acc}");
+    engine.shutdown();
+}
+
+#[test]
+fn async_dl_bit_identical_across_worker_counts() {
+    // One shared prepare() (so the calibrated step time is identical),
+    // then the same experiment on 1 / 4 / 8 pool workers: every metric
+    // except real wall-clock must match bit-for-bit.
+    use decentralize_rs::coordinator::{prepare, Runner, SchedulerRunner};
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_async_workers");
+    cfg.mode = "async_dl".into();
+    cfg.deadline = "factor:2".into();
+    cfg.staleness = "poly:0.5".into();
+    cfg.rounds = 6;
+    cfg.eval_every = 3;
+    cfg.step_time = "stragglers:0.25:4".into();
+    let setup = prepare(&cfg, &engine).unwrap();
+    let mut runs = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let mut logs = SchedulerRunner { workers }.run(&cfg, &engine, &setup).unwrap();
+        logs.sort_by_key(|l| l.node);
+        runs.push(logs);
+    }
+    for other in &runs[1..] {
+        assert_eq!(runs[0].len(), other.len());
+        for (a, b) in runs[0].iter().zip(other.iter()) {
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.records.len(), b.records.len(), "node {}", a.node);
+            for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+                assert_eq!(ra.round, rb.round, "node {}", a.node);
+                assert_eq!(ra.emu_time_s, rb.emu_time_s, "node {}", a.node);
+                assert_eq!(ra.train_loss, rb.train_loss, "node {}", a.node);
+                assert_eq!(ra.test_loss, rb.test_loss, "node {}", a.node);
+                assert_eq!(ra.test_acc, rb.test_acc, "node {}", a.node);
+                assert_eq!(ra.bytes_sent, rb.bytes_sent, "node {}", a.node);
+                assert_eq!(ra.bytes_recv, rb.bytes_recv, "node {}", a.node);
+                assert_eq!(ra.msgs_sent, rb.msgs_sent, "node {}", a.node);
+                assert_eq!(ra.late_msgs, rb.late_msgs, "node {}", a.node);
+                assert_eq!(ra.dropped_msgs, rb.dropped_msgs, "node {}", a.node);
+                assert_eq!(ra.mean_staleness_s, rb.mean_staleness_s, "node {}", a.node);
+            }
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn async_dl_beats_sync_virtual_time_under_stragglers() {
+    // The fig8 claim at test scale: with 10x stragglers, synchronous
+    // rounds pace at the stragglers' speed while async nodes close
+    // their windows on their own deadlines — same experiment, strictly
+    // less virtual time, comparable accuracy.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut sync_cfg = small_cfg("it_async_vs_sync_base");
+    sync_cfg.nodes = 12;
+    sync_cfg.train_total = 960;
+    sync_cfg.topology = "regular:4".into();
+    sync_cfg.rounds = 8;
+    sync_cfg.eval_every = 4;
+    sync_cfg.step_time = "stragglers:0.1:10".into();
+    sync_cfg.seed = seed_where(&sync_cfg, |s| !s.compute.is_uniform());
+    let mut async_cfg = sync_cfg.clone();
+    async_cfg.name = "it_async_vs_sync_async".into();
+    async_cfg.mode = "async_dl".into();
+    async_cfg.deadline = "factor:2".into();
+    async_cfg.staleness = "linear:10".into();
+    let rs = run_experiment(&sync_cfg, &engine).unwrap();
+    let ra = run_experiment(&async_cfg, &engine).unwrap();
+    assert!(
+        ra.final_emu_time() < rs.final_emu_time() * 0.8,
+        "async {} vs sync {}",
+        ra.final_emu_time(),
+        rs.final_emu_time()
+    );
+    // Asynchrony must not wreck convergence on this task.
+    assert!(
+        ra.final_accuracy() > rs.final_accuracy() - 0.15,
+        "async acc {} vs sync acc {}",
+        ra.final_accuracy(),
+        rs.final_accuracy()
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn async_dl_crash_mid_round_completes_without_deadlock() {
+    // A crashes: trace kills nodes at virtual instants (not round
+    // boundaries). Fixed per-round deadlines make the virtual span
+    // machine-independent: 8 rounds x 0.3 s = 2.4 s, crashes land in
+    // (0, 1.5), so at least one node dies mid-run and its neighbors
+    // finish on timeouts instead of deadlocking.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_async_crash");
+    cfg.mode = "async_dl".into();
+    cfg.deadline = "fixed:0.3".into();
+    cfg.staleness = "linear:2".into();
+    cfg.rounds = 8;
+    cfg.eval_every = 2;
+    cfg.churn_trace = "crashes:0.4:1.5".into();
+    cfg.seed = seed_where(&cfg, |s| {
+        s.churn.as_ref().is_some_and(|t| {
+            let crashed = (0..6).filter(|&i| t.crash_time(i).is_some()).count();
+            (1..6).contains(&crashed) // some crash, some survive
+        })
+    });
+    let result = run_experiment(&cfg, &engine).unwrap();
+    assert_eq!(result.logs.len(), cfg.nodes);
+    let max_records = result.logs.iter().map(|l| l.records.len()).max().unwrap();
+    let min_records = result.logs.iter().map(|l| l.records.len()).min().unwrap();
+    // Survivors logged every eval; at least one casualty logged fewer.
+    assert_eq!(max_records, 4, "survivors should reach round 8");
+    assert!(min_records < 4, "a crashed node cannot have a full log");
+    engine.shutdown();
+}
+
+#[test]
+fn async_dl_drop_policy_counts_dropped_messages() {
+    // With a WAN link model and a tight fixed deadline, some messages
+    // are still in flight when windows close; under late = "drop" they
+    // are counted instead of buffered.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_async_drop");
+    cfg.mode = "async_dl".into();
+    cfg.deadline = "fixed:0.05".into();
+    cfg.staleness = "none".into();
+    cfg.late = "drop".into();
+    cfg.link_model = "geo:3".into();
+    cfg.rounds = 6;
+    cfg.eval_every = 6;
+    // Guarantee at least one inter-cluster link slower than the window,
+    // so a late message is structurally unavoidable.
+    cfg.seed = seed_where(&cfg, |s| match &s.links {
+        Some(decentralize_rs::communication::shaper::LinkModel::Matrix(m)) => (0..cfg.nodes)
+            .any(|a| (0..cfg.nodes).any(|b| m.link(a, b).0 > 0.06)),
+        _ => false,
+    });
+    let result = run_experiment(&cfg, &engine).unwrap();
+    let total_dropped: u64 = result
+        .logs
+        .iter()
+        .map(|l| l.records.last().unwrap().dropped_msgs)
+        .sum();
+    let total_late: u64 = result
+        .logs
+        .iter()
+        .map(|l| l.records.last().unwrap().late_msgs)
+        .sum();
+    // 30+ ms inter-cluster latency vs 50 ms windows: some messages must
+    // miss the cut, and the drop policy never buffers them.
+    assert!(total_dropped > 0, "geo WAN + 50 ms windows produced no late messages");
+    assert_eq!(total_late, 0, "drop policy must not buffer late messages");
+    engine.shutdown();
+}

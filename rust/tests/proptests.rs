@@ -32,7 +32,7 @@ fn prop_random_regular_always_regular_and_connected() {
         if d >= n {
             continue;
         }
-        let g = graph::random_regular(n, d, &mut rng);
+        let g = graph::random_regular(n, d, &mut rng).unwrap();
         assert!((0..n).all(|v| g.degree(v) == d), "case {case}: n={n} d={d}");
         assert!(graph::is_connected(&g), "case {case}");
         // MH weights on it are doubly stochastic.
@@ -129,6 +129,7 @@ fn prop_envelope_roundtrip() {
             dst: rng.range(0, 2048),
             round: rng.next_u64() % 1_000_000,
             kind: MsgKind::from_u8((rng.next_u64() % 7) as u8).unwrap(),
+            sent_at_s: rng.next_f64() * 1e4,
             payload: (0..rng.range(0, 5000)).map(|_| rng.next_u32() as u8).collect(),
         };
         assert_eq!(decode_envelope(&encode_envelope(&env)).unwrap(), env, "case {case}");
@@ -204,7 +205,7 @@ fn prop_gossip_mixing_preserves_mean_and_contracts() {
         if d >= n {
             continue;
         }
-        let g = graph::random_regular(n, d, &mut rng);
+        let g = graph::random_regular(n, d, &mut rng).unwrap();
         let w = graph::metropolis_hastings(&g);
         let dim = 64;
         let mut models: Vec<ParamVec> =
