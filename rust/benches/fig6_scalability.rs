@@ -1,12 +1,33 @@
 //! Figure 6 bench: scalability — N vs 4N nodes over the same total
 //! dataset, degree 5 vs 9, reduced scale, plus the virtual-time
-//! scheduler sweep to 1024 nodes (the paper's 1000+-node emulation on a
-//! bounded worker pool). Full-resolution harness:
+//! scheduler sweep (the paper's 1000+-node emulation on a bounded
+//! worker pool). The sweep runs `param_store = "owned"` to 1024 nodes
+//! (the historical ceiling: per-node parameter buffers) and
+//! `param_store = "shared"` to 4096, recording peak parameter bytes per
+//! point from the store report; the whole trajectory is written to
+//! `BENCH_fig6.json`. Full-resolution harness:
 //! `cargo run --release --example scalability`.
 
 mod fig_common;
 
+use decentralize_rs::coordinator::RunResult;
+use decentralize_rs::util::json::Json;
 use fig_common::{bench_config, engine_or_skip, run_variant};
+
+/// Peak parameter bytes for one run: the store report in shared mode,
+/// the analytic per-node-copy floor (nodes × params × 4) in owned mode.
+fn peak_param_bytes(r: &RunResult, nodes: usize) -> (u64, u64) {
+    match &r.store {
+        Some(report) => (
+            report.at_start.resident_bytes + report.at_start.shared_bytes,
+            report.at_end.peak_resident_bytes + report.at_end.shared_bytes,
+        ),
+        None => {
+            let owned = (nodes * r.param_count * 4) as u64;
+            (owned, owned)
+        }
+    }
+}
 
 fn main() {
     println!("== fig6: scalability (fixed dataset, 4x nodes, degree 5 vs 9) ==");
@@ -43,13 +64,29 @@ fn main() {
         (r_l9.final_accuracy() - r_l5.final_accuracy()) * 100.0
     );
 
-    // Virtual-time scheduler sweep: wall-clock vs node count with a
-    // bounded worker pool (workers ~ cores, not threads = nodes). The
-    // thread-per-node runner cannot reach the top of this range.
-    println!("-- scheduler sweep: 128..1024 nodes, regular:6, 3 rounds --");
-    for &n in &[128usize, 256, 512, 1024] {
-        let mut cfg = bench_config(&format!("fig6/sched_{n}"));
+    // Virtual-time scheduler sweep: wall-clock and parameter memory vs
+    // node count on a bounded worker pool. Owned mode stops at the old
+    // 1024 ceiling; the shared store carries the sweep to 4096 (its
+    // startup cost is one base snapshot regardless of fleet size, and
+    // broadcasts serialize once per round instead of once per neighbor).
+    println!("-- scheduler sweep: regular:6, 3 rounds, owned ≤1024 vs shared ≤4096 --");
+    let sweep: &[(usize, &str)] = &[
+        (128, "owned"),
+        (256, "owned"),
+        (512, "owned"),
+        (1024, "owned"),
+        (128, "shared"),
+        (256, "shared"),
+        (512, "shared"),
+        (1024, "shared"),
+        (2048, "shared"),
+        (4096, "shared"),
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    for &(n, store_mode) in sweep {
+        let mut cfg = bench_config(&format!("fig6/sched_{n}_{store_mode}"));
         cfg.runner = "scheduler".into();
+        cfg.param_store = store_mode.into();
         cfg.nodes = n;
         cfg.rounds = 3;
         cfg.eval_every = 3;
@@ -58,12 +95,33 @@ fn main() {
         cfg.test_total = 64;
         cfg.local_steps = 1;
         let r = run_variant(&cfg, &engine);
+        let (start_bytes, peak_bytes) = peak_param_bytes(&r, n);
         println!(
-            "scale {n:>5} nodes: wall {:>7.2}s  emu {:>8.1}s  acc {:.4}",
+            "scale {n:>5} nodes [{store_mode:>6}]: wall {:>7.2}s  emu {:>8.1}s  acc {:.4}  \
+             param bytes start {:>12} peak {:>12}",
             r.wall_s,
             r.final_emu_time(),
-            r.final_accuracy()
+            r.final_accuracy(),
+            start_bytes,
+            peak_bytes,
         );
+        rows.push(Json::obj(vec![
+            ("figure", Json::str("fig6")),
+            ("nodes", Json::num(n as f64)),
+            ("param_store", Json::str(store_mode)),
+            ("rounds", Json::num(cfg.rounds as f64)),
+            ("wall_s", Json::num(r.wall_s)),
+            ("emu_time_s", Json::num(r.final_emu_time())),
+            ("test_acc", Json::num(r.final_accuracy())),
+            ("param_count", Json::num(r.param_count as f64)),
+            ("param_bytes_start", Json::num(start_bytes as f64)),
+            ("param_bytes_peak", Json::num(peak_bytes as f64)),
+        ]));
+    }
+    let artifact = Json::Arr(rows).pretty();
+    match std::fs::write("BENCH_fig6.json", &artifact) {
+        Ok(()) => println!("trajectory written to BENCH_fig6.json"),
+        Err(e) => println!("(could not write BENCH_fig6.json: {e})"),
     }
     println!("== fig6 done ==");
 }

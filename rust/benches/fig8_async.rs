@@ -112,7 +112,8 @@ fn main() {
     for workers in [1usize, 4, 8] {
         let mut logs = SchedulerRunner { workers }
             .run(&async_cfg, &engine, &setup)
-            .expect("async run");
+            .expect("async run")
+            .logs;
         logs.sort_by_key(|l| l.node);
         runs.push(logs);
     }

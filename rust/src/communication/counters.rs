@@ -3,6 +3,20 @@
 //! Figures 3c, 4, and 5 plot *cumulative bytes sent per node*; these
 //! counters are the source of truth for that series. Counted bytes are
 //! wire bytes (header + payload), identically for both transports.
+//!
+//! # Serialized vs wire bytes
+//!
+//! `bytes_sent` is *wire* bytes: a model broadcast to `k` neighbors
+//! counts `k ×` (header + payload), because that is what a real
+//! deployment puts on the network and what the figures plot. Before the
+//! zero-copy broadcast ([`crate::store::Payload`]) the same number also
+//! doubled as a proxy for serialization work — effectively counting
+//! each payload's construction once per recipient, a k-fold
+//! double-count of CPU/memory cost. `bytes_serialized` separates the
+//! two: it counts each *built* payload exactly once
+//! ([`Counters::on_serialize`], called by the sender when it encodes a
+//! model), regardless of how many queues the shared buffer fans out
+//! into. Delivered bytes stay per-recipient in `bytes_recv`.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -19,6 +33,7 @@ struct Inner {
     bytes_recv: AtomicU64,
     msgs_sent: AtomicU64,
     msgs_recv: AtomicU64,
+    bytes_serialized: AtomicU64,
 }
 
 /// Point-in-time snapshot.
@@ -28,6 +43,9 @@ pub struct CountersSnapshot {
     pub bytes_recv: u64,
     pub msgs_sent: u64,
     pub msgs_recv: u64,
+    /// Payload bytes this endpoint actually serialized (once per built
+    /// payload; broadcast fan-out does not multiply it).
+    pub bytes_serialized: u64,
 }
 
 impl Counters {
@@ -45,12 +63,21 @@ impl Counters {
         self.inner.msgs_recv.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One freshly built payload of `payload_bytes` (counted once per
+    /// serialization, however many recipients share the buffer).
+    pub fn on_serialize(&self, payload_bytes: usize) {
+        self.inner
+            .bytes_serialized
+            .fetch_add(payload_bytes as u64, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> CountersSnapshot {
         CountersSnapshot {
             bytes_sent: self.inner.bytes_sent.load(Ordering::Relaxed),
             bytes_recv: self.inner.bytes_recv.load(Ordering::Relaxed),
             msgs_sent: self.inner.msgs_sent.load(Ordering::Relaxed),
             msgs_recv: self.inner.msgs_recv.load(Ordering::Relaxed),
+            bytes_serialized: self.inner.bytes_serialized.load(Ordering::Relaxed),
         }
     }
 }
@@ -70,6 +97,22 @@ mod tests {
         assert_eq!(s.msgs_sent, 2);
         assert_eq!(s.bytes_recv, 10);
         assert_eq!(s.msgs_recv, 1);
+        assert_eq!(s.bytes_serialized, 0);
+    }
+
+    #[test]
+    fn serialized_bytes_count_once_per_payload_not_per_recipient() {
+        let c = Counters::new();
+        // One 100-byte payload broadcast to 4 recipients: serialization
+        // counted once, wire bytes per recipient.
+        c.on_serialize(100);
+        for _ in 0..4 {
+            c.on_send(100 + 32);
+        }
+        let s = c.snapshot();
+        assert_eq!(s.bytes_serialized, 100);
+        assert_eq!(s.bytes_sent, 4 * 132);
+        assert_eq!(s.msgs_sent, 4);
     }
 
     #[test]

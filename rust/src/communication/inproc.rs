@@ -4,13 +4,21 @@
 //!
 //! Semantics match the TCP transport: per-sender FIFO order, non-blocking
 //! sends, blocking receives, and wire-byte accounting on both ends.
+//!
+//! Broadcasts are zero-copy: payloads are [`Payload`] buffers
+//! (`Arc<[u8]>`), so staging the same model into every neighbor's queue
+//! shares one allocation — the per-recipient duplication that used to
+//! dominate threaded-path memory at scale is gone. Accounting follows
+//! the split described in [`super::counters`]: `bytes_sent` stays
+//! per-recipient wire bytes, while [`Transport::note_serialized`] counts
+//! each built payload once.
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{bail, Result};
 
-use super::{wire_size, Counters, CountersSnapshot, Envelope, Transport};
+use super::{wire_size, Counters, CountersSnapshot, Envelope, Payload, Transport};
 
 struct Mailbox {
     queue: Mutex<MailboxState>,
@@ -124,6 +132,10 @@ impl Transport for InprocEndpoint {
         Ok(None)
     }
 
+    fn note_serialized(&self, bytes: usize) {
+        self.hub.counters[self.id].on_serialize(bytes);
+    }
+
     fn counters(&self) -> CountersSnapshot {
         self.hub.counters[self.id].snapshot()
     }
@@ -135,7 +147,14 @@ mod tests {
     use crate::communication::MsgKind;
 
     fn env(src: usize, dst: usize, round: u64) -> Envelope {
-        Envelope { src, dst, round, kind: MsgKind::Model, sent_at_s: 0.0, payload: vec![0; 10] }
+        Envelope {
+            src,
+            dst,
+            round,
+            kind: MsgKind::Model,
+            sent_at_s: 0.0,
+            payload: vec![0; 10].into(),
+        }
     }
 
     #[test]
@@ -184,6 +203,37 @@ mod tests {
         assert_eq!(a.counters().bytes_sent, expect);
         assert_eq!(b.counters().bytes_recv, expect);
         assert_eq!(a.counters().msgs_sent, 1);
+    }
+
+    #[test]
+    fn broadcast_shares_one_payload_across_queues() {
+        // One staged payload, three destinations: every delivered
+        // envelope must point at the SAME allocation (zero-copy), and
+        // serialization accounting counts the payload once while wire
+        // bytes count per recipient.
+        let hub = InprocHub::new(4);
+        let a = hub.endpoint(0);
+        let payload: Payload = vec![42u8; 4096].into();
+        a.note_serialized(payload.len());
+        for dst in 1..4 {
+            a.send(Envelope {
+                src: 0,
+                dst,
+                round: 0,
+                kind: MsgKind::Model,
+                sent_at_s: 0.0,
+                payload: payload.clone(),
+            })
+            .unwrap();
+        }
+        for dst in 1..4 {
+            let got = hub.endpoint(dst).recv().unwrap().unwrap();
+            assert!(Payload::ptr_eq(&got.payload, &payload), "copied for {dst}");
+        }
+        let c = a.counters();
+        assert_eq!(c.bytes_serialized, 4096);
+        assert_eq!(c.msgs_sent, 3);
+        assert!(c.bytes_sent > 3 * 4096); // wire bytes: 3 × (header + payload)
     }
 
     #[test]

@@ -30,6 +30,10 @@ mod wire;
 pub use counters::{Counters, CountersSnapshot};
 pub use wire::{decode_envelope, encode_envelope, wire_size, WIRE_HEADER_BYTES};
 
+/// Re-exported from [`crate::store`]: the zero-copy payload buffer every
+/// envelope carries (serialize once, share across all recipients).
+pub use crate::store::Payload;
+
 use anyhow::Result;
 
 /// Message kinds exchanged by nodes. Kept as a flat u8 enum so the wire
@@ -83,7 +87,9 @@ pub struct Envelope {
     /// Receivers use it to compute a message's *staleness* (its age at
     /// aggregation time) for asynchronous gossip.
     pub sent_at_s: f64,
-    pub payload: Vec<u8>,
+    /// Shared immutable bytes: cloning an envelope (or fanning one
+    /// payload out to many destinations) never copies the payload.
+    pub payload: Payload,
 }
 
 /// Point-to-point transport endpoint owned by one node.
@@ -101,6 +107,13 @@ pub trait Transport: Send {
 
     /// Non-blocking receive.
     fn try_recv(&self) -> Result<Option<Envelope>>;
+
+    /// Record that the sender just serialized `bytes` of fresh payload.
+    /// Called once per *built* payload, not per recipient — the
+    /// broadcast fan-out shares one buffer — so `bytes_serialized`
+    /// tracks serialization work while `bytes_sent` tracks the wire.
+    /// Default is a no-op for transports that keep no counters.
+    fn note_serialized(&self, _bytes: usize) {}
 
     /// Wire-byte and message counters for this endpoint.
     fn counters(&self) -> CountersSnapshot;

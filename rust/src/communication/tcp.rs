@@ -217,6 +217,10 @@ impl Transport for Arc<TcpTransport> {
         Ok(q.messages.pop_front())
     }
 
+    fn note_serialized(&self, bytes: usize) {
+        self.counters.on_serialize(bytes);
+    }
+
     fn counters(&self) -> CountersSnapshot {
         self.counters.snapshot()
     }
@@ -250,7 +254,14 @@ mod tests {
     }
 
     fn env(src: usize, dst: usize, round: u64, len: usize) -> Envelope {
-        Envelope { src, dst, round, kind: MsgKind::Model, sent_at_s: 0.25, payload: vec![7; len] }
+        Envelope {
+            src,
+            dst,
+            round,
+            kind: MsgKind::Model,
+            sent_at_s: 0.25,
+            payload: vec![7; len].into(),
+        }
     }
 
     #[test]

@@ -80,7 +80,7 @@ pub fn decode_envelope(bytes: &[u8]) -> Result<Envelope> {
         round,
         kind,
         sent_at_s,
-        payload: bytes[WIRE_HEADER_BYTES..].to_vec(),
+        payload: crate::store::Payload::from(&bytes[WIRE_HEADER_BYTES..]),
     })
 }
 
@@ -95,7 +95,7 @@ mod tests {
             round: 12345,
             kind: MsgKind::Model,
             sent_at_s: 1.25,
-            payload: vec![1, 2, 3, 4, 5],
+            payload: vec![1, 2, 3, 4, 5].into(),
         }
     }
 
@@ -109,7 +109,7 @@ mod tests {
 
     #[test]
     fn empty_payload() {
-        let e = Envelope { payload: vec![], ..env() };
+        let e = Envelope { payload: crate::communication::Payload::empty(), ..env() };
         assert_eq!(decode_envelope(&encode_envelope(&e)).unwrap(), e);
         assert_eq!(wire_size(&e), WIRE_HEADER_BYTES);
     }
@@ -135,7 +135,7 @@ mod tests {
 
     #[test]
     fn header_size_constant_matches() {
-        let e = Envelope { payload: vec![], ..env() };
+        let e = Envelope { payload: crate::communication::Payload::empty(), ..env() };
         assert_eq!(encode_envelope(&e).len(), WIRE_HEADER_BYTES);
     }
 }

@@ -93,6 +93,12 @@ pub struct ExperimentConfig {
     pub runner: String,
     /// Worker threads for the scheduler runner (0 = number of cores).
     pub workers: usize,
+    /// Model-state ownership: `owned` (every node clones the init, the
+    /// historical default) | `shared` (one copy-on-write
+    /// [`crate::store::ParamStore`]; nodes materialize a private shard
+    /// on first write, so memory is O(active divergence) and 4096+-node
+    /// fleets fit in one process). Bit-identical results either way.
+    pub param_store: String,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -130,6 +136,7 @@ impl Default for ExperimentConfig {
             link_model: "uniform".into(),
             runner: "scheduler".into(),
             workers: 0,
+            param_store: "owned".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -147,7 +154,7 @@ impl ExperimentConfig {
             "partition", "topology", "dynamic", "sharing", "mode", "deadline", "staleness",
             "late", "secure", "mask_scale", "churn",
             "churn_trace", "lr", "local_steps", "network", "step_time", "link_model",
-            "runner", "workers", "artifacts_dir", "results_dir",
+            "runner", "workers", "param_store", "artifacts_dir", "results_dir",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -191,6 +198,7 @@ impl ExperimentConfig {
             link_model: s("link_model", &d.link_model),
             runner: s("runner", &d.runner),
             workers: n("workers", d.workers),
+            param_store: s("param_store", &d.param_store),
             artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(s("results_dir", "results")),
         };
@@ -237,6 +245,7 @@ impl ExperimentConfig {
             ("link_model", Json::str(self.link_model.clone())),
             ("runner", Json::str(self.runner.clone())),
             ("workers", Json::num(self.workers as f64)),
+            ("param_store", Json::str(self.param_store.clone())),
             ("artifacts_dir", Json::str(self.artifacts_dir.display().to_string())),
             ("results_dir", Json::str(self.results_dir.display().to_string())),
         ])
@@ -342,6 +351,12 @@ impl ExperimentConfig {
         // The coordinator owns the runner-name mapping; delegate so a new
         // runner only has to be registered in one place.
         crate::coordinator::runner_from_spec(&self.runner, self.workers).map(|_| ())?;
+        if !["owned", "shared"].contains(&self.param_store.as_str()) {
+            bail!(
+                "unknown param_store {:?} (expected owned | shared)",
+                self.param_store
+            );
+        }
         if self.secure && self.dynamic {
             bail!("secure aggregation supports static topologies only");
         }
@@ -410,6 +425,9 @@ mod tests {
         cfg = ExperimentConfig::default();
         cfg.runner = "fibers".into();
         assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.param_store = "mmap".into();
+        assert!(cfg.validate().is_err()); // owned | shared only
         cfg = ExperimentConfig::default();
         cfg.secure = true;
         cfg.dynamic = true;
@@ -487,6 +505,19 @@ mod tests {
         cfg = ExperimentConfig::default();
         cfg.churn_trace = "crashes:0.2:10".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn param_store_modes_validate() {
+        // Shared store composes with both runners and with secure mode.
+        let mut cfg = ExperimentConfig::default();
+        cfg.param_store = "shared".into();
+        cfg.validate().unwrap();
+        cfg.runner = "threads".into();
+        cfg.validate().unwrap();
+        cfg.runner = "scheduler".into();
+        cfg.secure = true;
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //! * [`SchedulerRunner`] (default) — the discrete-event virtual-time
 //!   scheduler ([`crate::scheduler`]): node logic runs as resumable
 //!   state machines on a bounded worker pool (`workers ≈ cores`), so
-//!   1000+ node emulations fit on one machine.
+//!   1000+ node emulations fit on one machine. With
+//!   `param_store = "shared"` all model state further lives in one
+//!   copy-on-write [`ParamStore`], which is what carries `fig6` to
+//!   4096 nodes.
 //! * [`ThreadedRunner`] — the legacy one-node-one-thread emulation over
 //!   the [`InprocHub`]; also the semantics reference for the scheduler
 //!   (the equivalence test pins them to bit-identical results).
@@ -33,6 +36,7 @@ use crate::runtime::{EngineHandle, ModelMeta};
 use crate::scheduler::{AsyncDlNodeSm, DlNodeSm, SamplerSm, Scheduler, SecureDlNodeSm};
 use crate::secure::Masker;
 use crate::sharing;
+use crate::store::{ParamSlot, ParamStore, StoreReport};
 use crate::training::Trainer;
 use crate::util::Timer;
 
@@ -43,6 +47,10 @@ pub struct RunResult {
     pub series: Vec<SeriesPoint>,
     /// Real wall-clock seconds for the whole run.
     pub wall_s: f64,
+    /// Model parameter count (benches derive owned-mode memory from it).
+    pub param_count: usize,
+    /// Shared-store accounting (`param_store = "shared"` runs only).
+    pub store: Option<StoreReport>,
 }
 
 impl RunResult {
@@ -74,6 +82,9 @@ impl RunResult {
             dir.join("series.txt"),
             crate::metrics::render_series(&self.config.name, &self.series),
         )?;
+        if let Some(report) = &self.store {
+            std::fs::write(dir.join("store.jsonl"), report.to_jsonl())?;
+        }
         Ok(dir)
     }
 }
@@ -99,7 +110,10 @@ pub struct RunSetup {
     pub train: Dataset,
     pub test: Arc<Dataset>,
     pub shards: Vec<Vec<usize>>,
-    pub init: Vec<f32>,
+    /// Shared base snapshot of the common model initialization. Runners
+    /// either clone it per node (`param_store = "owned"`) or hand it to
+    /// a per-run [`ParamStore`] whose nodes copy-on-write from it.
+    pub init: Arc<[f32]>,
     pub static_graph: Option<(Arc<Graph>, Arc<MixingWeights>)>,
     pub network: Option<NetworkModel>,
     /// Calibrated seconds per local training step (for the emu clock).
@@ -133,8 +147,9 @@ pub fn prepare(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunSetup
     let partition = Partition::from_spec(&cfg.partition)?;
     let shards = partition.split(&train.labels, cfg.nodes, &mut part_rng);
 
-    // Common initial parameters from the artifact.
-    let init = meta.load_init()?;
+    // Common initial parameters from the artifact, held once as the
+    // shared base snapshot.
+    let init: Arc<[f32]> = meta.load_init()?.into();
 
     // Topology.
     let mut topo_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x7090]));
@@ -189,6 +204,13 @@ pub fn prepare(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunSetup
     })
 }
 
+/// What a [`Runner`] hands back: per-node logs plus, for
+/// `param_store = "shared"` runs, the store's accounting report.
+pub struct RunnerOutput {
+    pub logs: Vec<NodeLog>,
+    pub store: Option<StoreReport>,
+}
+
 /// Strategy for executing the in-process node fleet.
 pub trait Runner {
     fn name(&self) -> &'static str;
@@ -199,7 +221,21 @@ pub trait Runner {
         cfg: &ExperimentConfig,
         engine: &EngineHandle,
         setup: &RunSetup,
-    ) -> Result<Vec<NodeLog>>;
+    ) -> Result<RunnerOutput>;
+}
+
+/// Build the per-run parameter slots: one fresh [`ParamStore`] over the
+/// prepared base snapshot in shared mode (a run must never see another
+/// run's materialized shards), plain per-node clones otherwise.
+fn param_store_for(cfg: &ExperimentConfig, setup: &RunSetup) -> Option<ParamStore> {
+    (cfg.param_store == "shared").then(|| ParamStore::with_base(Arc::clone(&setup.init)))
+}
+
+fn param_slot(store: &Option<ParamStore>, setup: &RunSetup) -> ParamSlot {
+    match store {
+        Some(s) => ParamSlot::stored(s.register()),
+        None => ParamSlot::owned(setup.init.to_vec()),
+    }
 }
 
 /// Resolve a runner spec (`scheduler` | `threads`).
@@ -217,7 +253,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<R
     let wall = Timer::start();
     let setup = prepare(cfg, engine)?;
     let runner = runner_from_spec(&cfg.runner, cfg.workers)?;
-    let mut logs = runner.run(cfg, engine, &setup)?;
+    let RunnerOutput { mut logs, store } = runner.run(cfg, engine, &setup)?;
     logs.sort_by_key(|l| l.node);
     let series = aggregate(&logs);
     Ok(RunResult {
@@ -225,6 +261,8 @@ pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<R
         logs,
         series,
         wall_s: wall.elapsed().as_secs_f64(),
+        param_count: setup.meta.param_count,
+        store,
     })
 }
 
@@ -243,17 +281,21 @@ fn build_trainer(
     Trainer::new(engine.clone(), &cfg.model, loader, cfg.lr, cfg.local_steps)
 }
 
+/// `init` is the run's one borrowed init `ParamVec` (building a fresh
+/// copy per node would reintroduce the O(nodes × params) startup cost
+/// the shared store removes; stateful strategies clone what they keep).
 fn build_sharing(
     cfg: &ExperimentConfig,
     setup: &RunSetup,
     id: usize,
+    init: &ParamVec,
 ) -> Result<Box<dyn sharing::Sharing>> {
     let mut s = sharing::from_spec(
         &cfg.sharing,
         setup.meta.param_count,
         mix_seed(&[cfg.seed, id as u64]),
     )?;
-    s.set_init(&ParamVec::from_vec(setup.init.clone()));
+    s.set_init(init);
     Ok(s)
 }
 
@@ -283,12 +325,14 @@ impl Runner for SchedulerRunner {
         cfg: &ExperimentConfig,
         engine: &EngineHandle,
         setup: &RunSetup,
-    ) -> Result<Vec<NodeLog>> {
+    ) -> Result<RunnerOutput> {
         let workers = if self.workers > 0 {
             self.workers
         } else {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
         };
+        let store = param_store_for(cfg, setup);
+        let init_pv = ParamVec::from_vec(setup.init.to_vec());
         let mut sched = Scheduler::with_links(setup.scenario.links.clone(), workers);
         // Static topologies handle churn traces node-side (each node
         // filters by the shared trace); dynamic ones centrally in the
@@ -301,6 +345,7 @@ impl Runner for SchedulerRunner {
         };
         for id in 0..cfg.nodes {
             let trainer = build_trainer(cfg, engine, setup, id)?;
+            let params = param_slot(&store, setup);
             if let Some(policy) = async_policy {
                 // Asynchronous gossip (validation guarantees a static,
                 // non-secure topology here).
@@ -310,8 +355,8 @@ impl Runner for SchedulerRunner {
                     cfg.rounds,
                     cfg.eval_every,
                     trainer,
-                    build_sharing(cfg, setup, id)?,
-                    setup.init.clone(),
+                    build_sharing(cfg, setup, id, &init_pv)?,
+                    params,
                     w.self_weight(id),
                     w.neighbor_weights(id).collect(),
                     Arc::clone(&setup.test),
@@ -327,7 +372,7 @@ impl Runner for SchedulerRunner {
                     cfg.rounds,
                     cfg.eval_every,
                     trainer,
-                    setup.init.clone(),
+                    params,
                     Arc::clone(g),
                     Arc::clone(w),
                     Masker::new(id, cfg.seed, cfg.mask_scale),
@@ -341,8 +386,8 @@ impl Runner for SchedulerRunner {
                     cfg.rounds,
                     cfg.eval_every,
                     trainer,
-                    build_sharing(cfg, setup, id)?,
-                    setup.init.clone(),
+                    build_sharing(cfg, setup, id, &init_pv)?,
+                    params,
                     topology_view(cfg, setup, id),
                     Arc::clone(&setup.test),
                     node_churn.clone(),
@@ -370,8 +415,16 @@ impl Runner for SchedulerRunner {
                 }
             }
         }
+        // Accounting: every node is registered but nothing has trained
+        // yet — in shared mode this snapshot stays O(1) in node count.
+        let at_start = store.as_ref().map(|s| s.stats());
         sched.run()?;
-        Ok(sched.take_logs())
+        let logs = sched.take_logs();
+        let report = store.as_ref().map(|s| StoreReport {
+            at_start: at_start.unwrap(),
+            at_end: s.stats(),
+        });
+        Ok(RunnerOutput { logs, store: report })
     }
 }
 
@@ -388,10 +441,18 @@ impl Runner for ThreadedRunner {
         cfg: &ExperimentConfig,
         engine: &EngineHandle,
         setup: &RunSetup,
-    ) -> Result<Vec<NodeLog>> {
+    ) -> Result<RunnerOutput> {
         // Transport hub: nodes + (dynamic ? sampler : 0).
         let ranks = cfg.nodes + usize::from(cfg.dynamic);
         let hub = InprocHub::new(ranks);
+        let store = param_store_for(cfg, setup);
+        // Register every node's slot up front so the `at_start` snapshot
+        // means the same thing as on the scheduler runner: whole fleet
+        // registered, nothing trained yet.
+        let mut slots: Vec<ParamSlot> =
+            (0..cfg.nodes).map(|_| param_slot(&store, setup)).collect();
+        let at_start = store.as_ref().map(|s| s.stats());
+        let init_pv = ParamVec::from_vec(setup.init.to_vec());
 
         let mut logs: Vec<NodeLog> = Vec::with_capacity(cfg.nodes);
         std::thread::scope(|scope| -> Result<()> {
@@ -411,11 +472,10 @@ impl Runner for ThreadedRunner {
             };
 
             let mut handles = Vec::with_capacity(cfg.nodes);
-            for id in 0..cfg.nodes {
+            for (id, params) in slots.drain(..).enumerate() {
                 let trainer = build_trainer(cfg, engine, setup, id)?;
                 let transport = Box::new(hub.endpoint(id));
                 let test = Arc::clone(&setup.test);
-                let init = setup.init.clone();
                 if cfg.secure {
                     let (g, w) = setup.static_graph.as_ref().unwrap();
                     let node = SecureDlNode {
@@ -424,7 +484,7 @@ impl Runner for ThreadedRunner {
                         eval_every: cfg.eval_every,
                         transport,
                         trainer,
-                        params: init,
+                        params,
                         graph: Arc::clone(g),
                         weights: Arc::clone(w),
                         masker: Masker::new(id, cfg.seed, cfg.mask_scale),
@@ -441,8 +501,8 @@ impl Runner for ThreadedRunner {
                         eval_every: cfg.eval_every,
                         transport,
                         trainer,
-                        sharing: build_sharing(cfg, setup, id)?,
-                        params: init,
+                        sharing: build_sharing(cfg, setup, id, &init_pv)?,
+                        params,
                         topology: topology_view(cfg, setup, id),
                         test,
                         network: setup.network,
@@ -463,7 +523,14 @@ impl Runner for ThreadedRunner {
             Ok(())
         })?;
         hub.shutdown();
-        Ok(logs)
+        // Threaded nodes are consumed by their threads, so their shard
+        // handles are already released here: `at_end` reports zero live
+        // shards and the peak is the number that matters.
+        let report = store.as_ref().map(|s| StoreReport {
+            at_start: at_start.unwrap(),
+            at_end: s.stats(),
+        });
+        Ok(RunnerOutput { logs, store: report })
     }
 }
 

@@ -17,7 +17,9 @@
 //!
 //! Large fleets run on the virtual-time [`scheduler`]; the [`scenario`]
 //! subsystem layers compute heterogeneity, per-link WAN delays, and
-//! availability churn on top of it.
+//! availability churn on top of it, and the shared parameter [`store`]
+//! (copy-on-write model shards + zero-copy broadcast payloads) keeps
+//! memory O(active divergence) so one process reaches 4096+ nodes.
 //!
 //! See the repository `README.md` for the quickstart,
 //! `docs/ARCHITECTURE.md` for the scheduler/scenario walk-through, and
@@ -42,5 +44,6 @@ pub mod scenario;
 pub mod scheduler;
 pub mod secure;
 pub mod sharing;
+pub mod store;
 pub mod training;
 pub mod util;

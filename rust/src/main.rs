@@ -80,6 +80,7 @@ fn print_usage() {
                 opt("late", "async late-delivery policy: buffer | drop", Some("buffer")),
                 opt("runner", "in-process runner: scheduler | threads (run mode)", Some("scheduler")),
                 opt("workers", "scheduler worker threads (0 = cores)", Some("0")),
+                opt("param-store", "model-state ownership: owned | shared (CoW shards + zero-copy broadcast)", Some("owned")),
                 opt("scenario", "scenario overlay JSON: step_time/link_model/churn_trace/network/churn", None),
                 opt("step-time-trace", "per-node compute: uniform | stragglers:<f>:<x> | lognormal:<s> | trace:<path>", Some("uniform")),
                 opt("link-model", "per-link delays: uniform | geo:<clusters> | matrix:<path>", Some("uniform")),
@@ -138,6 +139,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     }
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().context("--workers")?;
+    }
+    if let Some(p) = args.get("param-store") {
+        cfg.param_store = p.to_string();
     }
     if let Some(s) = args.get("step-time-trace") {
         cfg.step_time = s.to_string();
@@ -239,6 +243,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         result.final_emu_time(),
         result.wall_s
     );
+    if let Some(report) = &result.store {
+        println!(
+            "store: peak param bytes {} (shared base {}), {}/{} shards materialized",
+            util::human_bytes(report.at_end.peak_resident_bytes),
+            util::human_bytes(report.at_end.shared_bytes),
+            report.at_end.materialized_total,
+            report.at_end.nodes,
+        );
+    }
     if args.flag("save") {
         let dir = result.save()?;
         log_info!("run", "results saved to {}", dir.display());
@@ -310,7 +323,9 @@ fn cmd_node(args: &Args) -> Result<()> {
             meta.param_count,
             mix_seed(&[cfg.seed, rank as u64]),
         )?,
-        params: meta.load_init()?,
+        // One node per process: a shared store has nothing to share, so
+        // TCP node mode always owns its parameters.
+        params: decentralize_rs::store::ParamSlot::owned(meta.load_init()?),
         topology: TopologyView::Static {
             self_weight: w.self_weight(rank),
             neighbors: w.neighbor_weights(rank).collect(),

@@ -30,6 +30,11 @@ pub struct Record {
     pub bytes_sent: u64,
     pub bytes_recv: u64,
     pub msgs_sent: u64,
+    /// Cumulative payload bytes this node actually serialized: each
+    /// built payload counts once, however many recipients the zero-copy
+    /// broadcast shares it with (`bytes_sent` stays per-recipient wire
+    /// bytes; see [`crate::communication::counters`]).
+    pub bytes_serialized: u64,
     /// Async gossip: cumulative messages that missed a deadline but were
     /// buffered for the next round (0 for synchronous nodes).
     pub late_msgs: u64,
@@ -52,6 +57,7 @@ impl Record {
             ("bytes_sent", Json::num(self.bytes_sent as f64)),
             ("bytes_recv", Json::num(self.bytes_recv as f64)),
             ("msgs_sent", Json::num(self.msgs_sent as f64)),
+            ("bytes_serialized", Json::num(self.bytes_serialized as f64)),
             ("late_msgs", Json::num(self.late_msgs as f64)),
             ("dropped_msgs", Json::num(self.dropped_msgs as f64)),
             ("mean_staleness_s", Json::num(self.mean_staleness_s)),
@@ -64,8 +70,8 @@ impl Record {
                 .as_f64()
                 .with_context(|| format!("record missing field {k}"))
         };
-        // Async-gossip fields default to 0 so logs written before they
-        // existed still load.
+        // Fields added after the seed format (async gossip, the shared
+        // parameter store) default to 0 so older logs still load.
         let opt = |k: &str| -> f64 { v.get(k).as_f64().unwrap_or(0.0) };
         Ok(Record {
             round: f("round")? as u64,
@@ -77,6 +83,7 @@ impl Record {
             bytes_sent: f("bytes_sent")? as u64,
             bytes_recv: f("bytes_recv")? as u64,
             msgs_sent: f("msgs_sent")? as u64,
+            bytes_serialized: opt("bytes_serialized") as u64,
             late_msgs: opt("late_msgs") as u64,
             dropped_msgs: opt("dropped_msgs") as u64,
             mean_staleness_s: opt("mean_staleness_s"),
@@ -237,6 +244,7 @@ mod tests {
             bytes_sent: bytes,
             bytes_recv: bytes,
             msgs_sent: round * 5,
+            bytes_serialized: bytes / 2,
             late_msgs: round,
             dropped_msgs: 1,
             mean_staleness_s: 0.25,
@@ -246,16 +254,18 @@ mod tests {
     #[test]
     fn record_without_async_fields_still_loads() {
         let mut j = rec(2, 0.5, 10).to_json();
-        // Simulate a pre-async log line by dropping the new keys.
+        // Simulate a pre-async, pre-store log line by dropping new keys.
         if let Json::Obj(ref mut obj) = j {
             obj.remove("late_msgs");
             obj.remove("dropped_msgs");
             obj.remove("mean_staleness_s");
+            obj.remove("bytes_serialized");
         }
         let r = Record::from_json(&j).unwrap();
         assert_eq!(r.late_msgs, 0);
         assert_eq!(r.dropped_msgs, 0);
         assert_eq!(r.mean_staleness_s, 0.0);
+        assert_eq!(r.bytes_serialized, 0);
     }
 
     #[test]

@@ -12,6 +12,7 @@ use crate::dataset::Dataset;
 use crate::metrics::{NodeLog, Record};
 use crate::model::ParamVec;
 use crate::sharing::{Received, Sharing};
+use crate::store::{ParamSlot, Payload};
 use crate::training::Trainer;
 use crate::util::Timer;
 
@@ -33,7 +34,8 @@ pub struct DlNode {
     pub transport: Box<dyn Transport>,
     pub trainer: Trainer,
     pub sharing: Box<dyn Sharing>,
-    pub params: Vec<f32>,
+    /// Private vector or shared-store CoW handle (`param_store` config).
+    pub params: ParamSlot,
     pub topology: TopologyView,
     pub test: Arc<Dataset>,
     /// WAN model for the emulated clock (None = skip emu accounting).
@@ -51,19 +53,21 @@ impl DlNode {
         let mut clock = EmuClock::new();
         let wall = Timer::start();
         // Model messages that arrived early (neighbors running ahead).
-        let mut pending: HashMap<(u64, usize), Vec<u8>> = HashMap::new();
+        let mut pending: HashMap<(u64, usize), Payload> = HashMap::new();
 
         for round in 0..self.rounds {
             // 1. Current topology row.
             let assign = self.neighbor_row(round, &mut pending)?;
 
-            // 2. Local training.
-            let (new_params, train_loss) = self.trainer.train_round(std::mem::take(&mut self.params))?;
-            self.params = new_params;
+            // 2. Local training (first take materializes the CoW shard
+            //    in shared-store mode).
+            let (new_params, train_loss) = self.trainer.train_round(self.params.take())?;
+            let model = ParamVec::from_vec(new_params);
 
-            // 3. Share with neighbors.
-            let model = ParamVec::from_vec(std::mem::take(&mut self.params));
-            let payload = self.sharing.outgoing(&model, round)?;
+            // 3. Share with neighbors: serialize once, every envelope
+            //    shares the same payload buffer.
+            let payload: Payload = self.sharing.outgoing(&model, round)?.into();
+            self.transport.note_serialized(payload.len());
             let bytes_before = self.transport.counters().bytes_sent;
             for &(nbr, _) in &assign.neighbors {
                 self.transport.send(Envelope {
@@ -78,7 +82,7 @@ impl DlNode {
             let sent_this_round = self.transport.counters().bytes_sent - bytes_before;
 
             // 4. Collect this round's models from all current neighbors.
-            let mut msgs: Vec<(usize, Vec<u8>)> = Vec::with_capacity(assign.neighbors.len());
+            let mut msgs: Vec<(usize, Payload)> = Vec::with_capacity(assign.neighbors.len());
             for &(nbr, _) in &assign.neighbors {
                 let payload = self.await_model(round, nbr, &mut pending)?;
                 msgs.push((nbr, payload));
@@ -92,13 +96,13 @@ impl DlNode {
                     .map(|(src, payload)| Received {
                         src: *src,
                         weight: weight_of(&assign, *src),
-                        payload,
+                        payload: payload.as_slice(),
                     })
                     .collect();
                 self.sharing
                     .aggregate(&mut model, assign.self_weight, &received)?;
             }
-            self.params = model.into_vec();
+            self.params.put(model.into_vec());
 
             // 6. Emulated clock: local compute + uplink transfer.
             if let Some(net) = self.network {
@@ -106,9 +110,11 @@ impl DlNode {
                 clock.advance(net.round_upload_time(sent_this_round));
             }
 
-            // 7. Periodic evaluation.
+            // 7. Periodic evaluation (borrow the params out, no copy).
             if (round + 1) % self.eval_every == 0 || round + 1 == self.rounds {
-                let (test_loss, test_acc) = self.trainer.evaluate(&self.params, &self.test)?;
+                let params = self.params.take();
+                let (test_loss, test_acc) = self.trainer.evaluate(&params, &self.test)?;
+                self.params.put(params);
                 if self.network.is_some() {
                     clock.advance(self.eval_time_s);
                 }
@@ -123,6 +129,7 @@ impl DlNode {
                     bytes_sent: c.bytes_sent,
                     bytes_recv: c.bytes_recv,
                     msgs_sent: c.msgs_sent,
+                    bytes_serialized: c.bytes_serialized,
                     late_msgs: 0,
                     dropped_msgs: 0,
                     mean_staleness_s: 0.0,
@@ -136,7 +143,7 @@ impl DlNode {
     fn neighbor_row(
         &mut self,
         round: u64,
-        pending: &mut HashMap<(u64, usize), Vec<u8>>,
+        pending: &mut HashMap<(u64, usize), Payload>,
     ) -> Result<NeighborAssignment> {
         match &self.topology {
             TopologyView::Static { self_weight, neighbors } => Ok(NeighborAssignment {
@@ -152,7 +159,7 @@ impl DlNode {
                     round,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
-                    payload: encode_control(&Control::Ready { round }),
+                    payload: encode_control(&Control::Ready { round }).into(),
                 })?;
                 loop {
                     let env = self
@@ -185,8 +192,8 @@ impl DlNode {
         &mut self,
         round: u64,
         src: usize,
-        pending: &mut HashMap<(u64, usize), Vec<u8>>,
-    ) -> Result<Vec<u8>> {
+        pending: &mut HashMap<(u64, usize), Payload>,
+    ) -> Result<Payload> {
         if let Some(p) = pending.remove(&(round, src)) {
             return Ok(p);
         }

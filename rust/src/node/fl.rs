@@ -8,7 +8,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::communication::{Envelope, MsgKind, Transport};
+use crate::communication::{Envelope, MsgKind, Payload, Transport};
 use crate::compression::{FloatCodec, RawF32};
 use crate::dataset::Dataset;
 use crate::metrics::{NodeLog, Record};
@@ -48,9 +48,11 @@ impl FlServer {
             .clamp(1, self.clients);
 
         for round in 0..self.rounds {
-            // Sample cohort and broadcast the global model.
+            // Sample cohort and broadcast the global model: serialized
+            // once, shared by every cohort member's envelope.
             let cohort = rng.sample_indices(self.clients, m);
-            let payload = codec.encode(&self.params);
+            let payload: Payload = codec.encode(&self.params).into();
+            self.transport.note_serialized(payload.len());
             for &c in &cohort {
                 self.transport.send(Envelope {
                     src: self.rank,
@@ -100,6 +102,7 @@ impl FlServer {
                     bytes_sent: c.bytes_sent,
                     bytes_recv: c.bytes_recv,
                     msgs_sent: c.msgs_sent,
+                    bytes_serialized: c.bytes_serialized,
                     late_msgs: 0,
                     dropped_msgs: 0,
                     mean_staleness_s: 0.0,
@@ -114,7 +117,7 @@ impl FlServer {
                 round: self.rounds,
                 kind: MsgKind::Control,
                 sent_at_s: 0.0,
-                payload: encode_control(&Control::Stop),
+                payload: encode_control(&Control::Stop).into(),
             })?;
         }
         Ok(log)
@@ -141,13 +144,15 @@ impl FlClient {
                 MsgKind::FlBroadcast => {
                     let params = codec.decode(&env.payload, env.payload.len() / 4)?;
                     let (new_params, _loss) = self.trainer.train_round(params)?;
+                    let payload: Payload = codec.encode(&new_params).into();
+                    self.transport.note_serialized(payload.len());
                     self.transport.send(Envelope {
                         src: self.id,
                         dst: self.server_rank,
                         round: env.round,
                         kind: MsgKind::FlUpdate,
                         sent_at_s: 0.0,
-                        payload: codec.encode(&new_params),
+                        payload,
                     })?;
                 }
                 MsgKind::Control => return Ok(()),

@@ -75,7 +75,7 @@ impl PeerSampler {
                     round,
                     kind: MsgKind::Neighbors,
                     sent_at_s: 0.0,
-                    payload: encode_neighbors(&assign),
+                    payload: encode_neighbors(&assign).into(),
                 })?;
             }
         }
@@ -203,7 +203,7 @@ mod tests {
                         round,
                         kind: MsgKind::Control,
                         sent_at_s: 0.0,
-                        payload: encode_control(&Control::Ready { round }),
+                        payload: encode_control(&Control::Ready { round }).into(),
                     })
                     .unwrap();
             }
@@ -258,7 +258,7 @@ mod tests {
                         round,
                         kind: MsgKind::Control,
                         sent_at_s: 0.0,
-                        payload: encode_control(&Control::Ready { round }),
+                        payload: encode_control(&Control::Ready { round }).into(),
                     })
                     .unwrap();
             }
@@ -294,7 +294,7 @@ mod tests {
                 round: 0,
                 kind: MsgKind::Control,
                 sent_at_s: 0.0,
-                payload: encode_control(&Control::Stop),
+                payload: encode_control(&Control::Stop).into(),
             })
             .unwrap();
         assert!(h.join().unwrap().is_ok());
@@ -325,7 +325,7 @@ mod tests {
                         round,
                         kind: MsgKind::Control,
                         sent_at_s: 0.0,
-                        payload: encode_control(&Control::Ready { round }),
+                        payload: encode_control(&Control::Ready { round }).into(),
                     })
                     .unwrap();
             }

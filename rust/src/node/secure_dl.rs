@@ -22,6 +22,7 @@ use crate::dataset::Dataset;
 use crate::graph::{Graph, MixingWeights};
 use crate::metrics::{NodeLog, Record};
 use crate::secure::Masker;
+use crate::store::{ParamSlot, Payload};
 use crate::training::Trainer;
 use crate::util::Timer;
 
@@ -31,7 +32,8 @@ pub struct SecureDlNode {
     pub eval_every: u64,
     pub transport: Box<dyn Transport>,
     pub trainer: Trainer,
-    pub params: Vec<f32>,
+    /// Private vector or shared-store CoW handle (`param_store` config).
+    pub params: ParamSlot,
     /// Full static topology (every node knows the graph; the coordinator
     /// distributes it, standing in for the receiver-announces-senders
     /// metadata round of the real protocol).
@@ -52,37 +54,39 @@ impl SecureDlNode {
         let codec = RawF32;
         let neighbors: Vec<usize> = self.graph.neighbors_vec(self.id);
         let dim = self.params.len();
-        let mut pending: HashMap<(u64, usize), Vec<u8>> = HashMap::new();
+        let mut pending: HashMap<(u64, usize), Payload> = HashMap::new();
 
         // Round-0 key agreement.
         for env in key_agreement_envelopes(self.id, self.masker_seed(), &self.graph, &neighbors) {
+            self.transport.note_serialized(env.payload.len());
             self.transport.send(env)?;
         }
 
         for round in 0..self.rounds {
             // 1. Local training.
-            let (p, train_loss) = self.trainer.train_round(std::mem::take(&mut self.params))?;
-            self.params = p;
+            let (mut params, train_loss) = self.trainer.train_round(self.params.take())?;
 
             let bytes_before = self.transport.counters().bytes_sent;
 
-            // 2. Per-receiver masking + send.
+            // 2. Per-receiver masking + send. Masked payloads are
+            //    per-receiver distinct buffers, so serialization is
+            //    counted per envelope (nothing to share).
             for env in secure_round_envelopes(
                 self.id,
                 round,
-                &self.params,
+                &params,
                 &self.graph,
                 &self.weights,
                 &self.masker,
             ) {
+                self.transport.note_serialized(env.payload.len());
                 self.transport.send(env)?;
             }
             let sent_this_round = self.transport.counters().bytes_sent - bytes_before;
 
             // 3. Receive masked models from all neighbors and aggregate:
             //    x <- w_self x + sum_i w_i x~_i  (masks cancel pairwise).
-            let mut agg: Vec<f64> = self
-                .params
+            let mut agg: Vec<f64> = params
                 .iter()
                 .map(|&v| v as f64 * self.weights.self_weight(self.id))
                 .collect();
@@ -94,9 +98,10 @@ impl SecureDlNode {
                     *a += w * *v as f64;
                 }
             }
-            for (p, a) in self.params.iter_mut().zip(agg.iter()) {
+            for (p, a) in params.iter_mut().zip(agg.iter()) {
                 *p = *a as f32;
             }
+            self.params.put(params);
 
             // 4. Emulated clock.
             if let Some(net) = self.network {
@@ -104,9 +109,11 @@ impl SecureDlNode {
                 clock.advance(net.round_upload_time(sent_this_round));
             }
 
-            // 5. Evaluation.
+            // 5. Evaluation (borrow the params out, no copy).
             if (round + 1) % self.eval_every == 0 || round + 1 == self.rounds {
-                let (test_loss, test_acc) = self.trainer.evaluate(&self.params, &self.test)?;
+                let params = self.params.take();
+                let (test_loss, test_acc) = self.trainer.evaluate(&params, &self.test)?;
+                self.params.put(params);
                 if self.network.is_some() {
                     clock.advance(self.eval_time_s);
                 }
@@ -121,6 +128,7 @@ impl SecureDlNode {
                     bytes_sent: c.bytes_sent,
                     bytes_recv: c.bytes_recv,
                     msgs_sent: c.msgs_sent,
+                    bytes_serialized: c.bytes_serialized,
                     late_msgs: 0,
                     dropped_msgs: 0,
                     mean_staleness_s: 0.0,
@@ -140,8 +148,8 @@ impl SecureDlNode {
         &mut self,
         round: u64,
         src: usize,
-        pending: &mut HashMap<(u64, usize), Vec<u8>>,
-    ) -> Result<Vec<u8>> {
+        pending: &mut HashMap<(u64, usize), Payload>,
+    ) -> Result<Payload> {
         if let Some(p) = pending.remove(&(round, src)) {
             return Ok(p);
         }
@@ -199,7 +207,7 @@ pub(crate) fn key_agreement_envelopes(
                 round: 0,
                 kind: MsgKind::SecureSeed,
                 sent_at_s: 0.0,
-                payload: master.to_vec(),
+                payload: master.to_vec().into(),
             });
         }
     }
@@ -237,7 +245,7 @@ pub(crate) fn secure_round_envelopes(
                     round,
                     kind: MsgKind::SecureSeed,
                     sent_at_s: 0.0,
-                    payload: round_seed.to_vec(),
+                    payload: round_seed.to_vec().into(),
                 });
             }
         }
@@ -252,7 +260,7 @@ pub(crate) fn secure_round_envelopes(
             round,
             kind: MsgKind::Model,
             sent_at_s: 0.0,
-            payload: codec.encode(&masked),
+            payload: codec.encode(&masked).into(),
         });
     }
     out

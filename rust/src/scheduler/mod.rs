@@ -161,6 +161,14 @@ impl NodeCtx {
         self.cancels.push(id);
     }
 
+    /// Record that this node just serialized `bytes` of fresh payload
+    /// (once per built payload — the zero-copy broadcast shares one
+    /// buffer across recipients, so fan-out must not multiply this;
+    /// see [`crate::communication::counters`]). Counted immediately.
+    pub fn note_serialized(&self, bytes: usize) {
+        self.counters.on_serialize(bytes);
+    }
+
     /// Wire-byte counters for this node (sends staged in *earlier* wakes
     /// are included; the current wake's are counted after it returns).
     pub fn counters(&self) -> CountersSnapshot {
@@ -641,7 +649,7 @@ mod tests {
                             round: r,
                             kind: MsgKind::Control,
                             sent_at_s: 0.0,
-                            payload: vec![1],
+                            payload: vec![1].into(),
                         });
                     }
                 }
@@ -665,7 +673,7 @@ mod tests {
                     round: env.round,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
-                    payload: vec![2],
+                    payload: vec![2].into(),
                 });
             }
             Ok(())
@@ -807,7 +815,7 @@ mod tests {
                     round: 0,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
-                    payload: vec![9],
+                    payload: vec![9].into(),
                 });
             }
             Ok(())

@@ -47,6 +47,7 @@ use crate::node::{draw_round, key_agreement_envelopes, secure_round_envelopes};
 use crate::scenario::{Availability, ChurnTrace};
 use crate::secure::Masker;
 use crate::sharing::{Received, Sharing};
+use crate::store::{ParamSlot, Payload};
 use crate::training::Trainer;
 use crate::util::Timer;
 
@@ -76,7 +77,9 @@ pub struct DlNodeSm {
     eval_every: u64,
     trainer: Option<Trainer>,
     sharing: Box<dyn Sharing>,
-    params: Vec<f32>,
+    /// Model parameters: a private vector (`param_store = "owned"`) or a
+    /// copy-on-write handle into the shared [`crate::store::ParamStore`].
+    params: ParamSlot,
     topology: TopologyView,
     test: Arc<Dataset>,
     /// Availability trace (static topologies only; `None` = always on).
@@ -91,7 +94,7 @@ pub struct DlNodeSm {
     model: Option<ParamVec>,
     train_loss: f64,
     /// Early/buffered model payloads keyed by (round, sender).
-    pending: HashMap<(u64, usize), Vec<u8>>,
+    pending: HashMap<(u64, usize), Payload>,
     log: Option<NodeLog>,
     wall: Timer,
 }
@@ -104,7 +107,7 @@ impl DlNodeSm {
         eval_every: u64,
         trainer: Trainer,
         sharing: Box<dyn Sharing>,
-        params: Vec<f32>,
+        params: ParamSlot,
         topology: TopologyView,
         test: Arc<Dataset>,
         churn: Option<Arc<ChurnTrace>>,
@@ -140,6 +143,7 @@ impl DlNodeSm {
             // never brings this node back online.
             while self.round < self.rounds && !tr.active(self.id, self.round) {
                 if tr.last_online_round(self.id).map_or(true, |l| l < self.round) {
+                    self.params.release();
                     self.state = DlState::Departed;
                     ctx.depart();
                     return Ok(());
@@ -181,7 +185,7 @@ impl DlNodeSm {
                     round: self.round,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
-                    payload: encode_control(&Control::Ready { round: self.round }),
+                    payload: encode_control(&Control::Ready { round: self.round }).into(),
                 });
                 self.state = DlState::AwaitAssignment;
                 return Ok(());
@@ -193,7 +197,8 @@ impl DlNodeSm {
 
     fn start_train(&mut self, ctx: &mut NodeCtx) -> Result<()> {
         let trainer = self.trainer.take().context("trainer already in flight")?;
-        let params = std::mem::take(&mut self.params);
+        // First take materializes this node's CoW shard in shared mode.
+        let params = self.params.take();
         let duration_s = self.step_time_s * trainer.local_steps() as f64;
         ctx.start_compute(
             duration_s,
@@ -211,7 +216,7 @@ impl DlNodeSm {
         let trainer = self.trainer.take().context("trainer already in flight")?;
         let job = EvalJob {
             trainer,
-            params: self.params.clone(),
+            params: self.params.to_vec(),
             test: Arc::clone(&self.test),
         };
         ctx.start_compute(self.eval_time_s, job.into_compute());
@@ -236,7 +241,7 @@ impl DlNodeSm {
         if !order.iter().all(|&(n, _)| self.pending.contains_key(&(self.round, n))) {
             return Ok(());
         }
-        let msgs: Vec<(usize, f64, Vec<u8>)> = order
+        let msgs: Vec<(usize, f64, Payload)> = order
             .iter()
             .map(|&(n, w)| (n, w, self.pending.remove(&(self.round, n)).unwrap()))
             .collect();
@@ -247,12 +252,12 @@ impl DlNodeSm {
                 .map(|(src, weight, payload)| Received {
                     src: *src,
                     weight: *weight,
-                    payload,
+                    payload: payload.as_slice(),
                 })
                 .collect();
             self.sharing.aggregate(&mut model, self_weight, &received)?;
         }
-        self.params = model.into_vec();
+        self.params.put(model.into_vec());
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
             self.start_eval(ctx)
         } else {
@@ -302,7 +307,10 @@ impl EventNode for DlNodeSm {
                     self.trainer = Some(trainer);
                     self.train_loss = loss;
                     let model = ParamVec::from_vec(params);
-                    let payload = self.sharing.outgoing(&model, self.round)?;
+                    // Serialize once; every neighbor's envelope shares
+                    // the same buffer (zero-copy broadcast).
+                    let payload: Payload = self.sharing.outgoing(&model, self.round)?.into();
+                    ctx.note_serialized(payload.len());
                     let assign = self.assign.as_ref().context("no neighbor assignment")?;
                     for &(nbr, _) in &assign.neighbors {
                         ctx.send(Envelope {
@@ -314,17 +322,20 @@ impl EventNode for DlNodeSm {
                             payload: payload.clone(),
                         });
                     }
-                    self.model = Some(model);
                     if self.parting_round() {
                         // Final online round: push the last update, then
                         // leave without pulling. Neighbor models still in
                         // flight after this wake are dropped by the
                         // scheduler; any delivered earlier just sit in
-                        // `pending` and are discarded with the node.
+                        // `pending` and are discarded with the node. The
+                        // parameter shard goes back to the store.
+                        self.params.put(model.into_vec());
+                        self.params.release();
                         self.state = DlState::Departed;
                         ctx.depart();
                         return Ok(());
                     }
+                    self.model = Some(model);
                     self.state = DlState::AwaitModels;
                     self.try_aggregate(ctx)
                 }
@@ -341,6 +352,7 @@ impl EventNode for DlNodeSm {
                         bytes_sent: c.bytes_sent,
                         bytes_recv: c.bytes_recv,
                         msgs_sent: c.msgs_sent,
+                        bytes_serialized: c.bytes_serialized,
                         late_msgs: 0,
                         dropped_msgs: 0,
                         mean_staleness_s: 0.0,
@@ -371,7 +383,7 @@ pub struct SecureDlNodeSm {
     rounds: u64,
     eval_every: u64,
     trainer: Option<Trainer>,
-    params: Vec<f32>,
+    params: ParamSlot,
     graph: Arc<Graph>,
     weights: Arc<MixingWeights>,
     masker: Masker,
@@ -383,7 +395,7 @@ pub struct SecureDlNodeSm {
     round: u64,
     state: DlState,
     train_loss: f64,
-    pending: HashMap<(u64, usize), Vec<u8>>,
+    pending: HashMap<(u64, usize), Payload>,
     log: Option<NodeLog>,
     wall: Timer,
 }
@@ -395,7 +407,7 @@ impl SecureDlNodeSm {
         rounds: u64,
         eval_every: u64,
         trainer: Trainer,
-        params: Vec<f32>,
+        params: ParamSlot,
         graph: Arc<Graph>,
         weights: Arc<MixingWeights>,
         masker: Masker,
@@ -432,7 +444,7 @@ impl SecureDlNodeSm {
             return Ok(());
         }
         let trainer = self.trainer.take().context("trainer already in flight")?;
-        let params = std::mem::take(&mut self.params);
+        let params = self.params.take();
         let duration_s = self.step_time_s * trainer.local_steps() as f64;
         ctx.start_compute(
             duration_s,
@@ -457,9 +469,9 @@ impl SecureDlNodeSm {
         // x <- w_self x + sum_i w_i x~_i (masks cancel pairwise); f64
         // accumulation in neighbor order, exactly as the threaded path.
         let codec = RawF32;
-        let dim = self.params.len();
-        let mut agg: Vec<f64> = self
-            .params
+        let mut params = self.params.take();
+        let dim = params.len();
+        let mut agg: Vec<f64> = params
             .iter()
             .map(|&v| v as f64 * self.weights.self_weight(self.id))
             .collect();
@@ -471,14 +483,15 @@ impl SecureDlNodeSm {
                 *a += w * *v as f64;
             }
         }
-        for (p, a) in self.params.iter_mut().zip(agg.iter()) {
+        for (p, a) in params.iter_mut().zip(agg.iter()) {
             *p = *a as f32;
         }
+        self.params.put(params);
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
             let trainer = self.trainer.take().context("trainer already in flight")?;
             let job = EvalJob {
                 trainer,
-                params: self.params.clone(),
+                params: self.params.to_vec(),
                 test: Arc::clone(&self.test),
             };
             ctx.start_compute(self.eval_time_s, job.into_compute());
@@ -501,6 +514,7 @@ impl EventNode for SecureDlNodeSm {
                     &self.graph,
                     &self.neighbors,
                 ) {
+                    ctx.note_serialized(env.payload.len());
                     ctx.send(env);
                 }
                 self.begin_round(ctx)
@@ -524,17 +538,21 @@ impl EventNode for SecureDlNodeSm {
                 ComputeOutput::Train { trainer, params, loss } => {
                     self.trainer = Some(trainer);
                     self.train_loss = loss;
-                    self.params = params;
+                    // Masked payloads are per-receiver (each one is a
+                    // distinct buffer), so serialization is counted per
+                    // envelope here — there is nothing to share.
                     for env in secure_round_envelopes(
                         self.id,
                         self.round,
-                        &self.params,
+                        &params,
                         &self.graph,
                         &self.weights,
                         &self.masker,
                     ) {
+                        ctx.note_serialized(env.payload.len());
                         ctx.send(env);
                     }
+                    self.params.put(params);
                     self.state = DlState::AwaitModels;
                     self.try_aggregate(ctx)
                 }
@@ -551,6 +569,7 @@ impl EventNode for SecureDlNodeSm {
                         bytes_sent: c.bytes_sent,
                         bytes_recv: c.bytes_recv,
                         msgs_sent: c.msgs_sent,
+                        bytes_serialized: c.bytes_serialized,
                         late_msgs: 0,
                         dropped_msgs: 0,
                         mean_staleness_s: 0.0,
@@ -627,7 +646,7 @@ impl SamplerSm {
                     round: self.round,
                     kind: MsgKind::Neighbors,
                     sent_at_s: 0.0,
-                    payload: encode_neighbors(&assign),
+                    payload: encode_neighbors(&assign).into(),
                 });
             }
             self.round += 1;
@@ -720,7 +739,7 @@ pub struct AsyncDlNodeSm {
     eval_every: u64,
     trainer: Option<Trainer>,
     sharing: Box<dyn Sharing>,
-    params: Vec<f32>,
+    params: ParamSlot,
     /// Static mixing row (async mode is static-topology only).
     self_weight: f64,
     neighbors: Vec<(usize, f64)>,
@@ -745,7 +764,7 @@ pub struct AsyncDlNodeSm {
     model: Option<ParamVec>,
     train_loss: f64,
     /// Freshest buffered model per neighbor: src -> (sent_at_s, payload).
-    inbox: HashMap<usize, (f64, Vec<u8>)>,
+    inbox: HashMap<usize, (f64, Payload)>,
     /// Arrival offsets (arrival - window start) for quantile deadlines.
     /// Only fed under a `p<q>` spec, and bounded to the most recent
     /// [`OFFSET_HISTORY_CAP`] observations (rotating overwrite).
@@ -765,7 +784,7 @@ impl AsyncDlNodeSm {
         eval_every: u64,
         trainer: Trainer,
         sharing: Box<dyn Sharing>,
-        params: Vec<f32>,
+        params: ParamSlot,
         self_weight: f64,
         neighbors: Vec<(usize, f64)>,
         test: Arc<Dataset>,
@@ -839,7 +858,9 @@ impl AsyncDlNodeSm {
         if let Some(tr) = &self.churn {
             if !tr.active(self.id, self.round) {
                 if tr.last_online_round(self.id).map_or(true, |l| l < self.round) {
-                    // Never coming back: leave for good.
+                    // Never coming back: leave for good and give the
+                    // parameter shard back to the store.
+                    self.params.release();
                     self.state = AsyncState::Departed;
                     ctx.depart();
                     return Ok(());
@@ -864,7 +885,7 @@ impl AsyncDlNodeSm {
             .window_s(self.round_compute_s, &self.arrival_offsets);
         self.deadline_timer = Some(ctx.set_timer(window));
         let trainer = self.trainer.take().context("trainer already in flight")?;
-        let params = std::mem::take(&mut self.params);
+        let params = self.params.take();
         ctx.start_compute(
             self.round_compute_s,
             Box::new(move || {
@@ -883,7 +904,7 @@ impl AsyncDlNodeSm {
         // Deterministic: walk the static neighbor row in order, pulling
         // each neighbor's freshest buffered model if one arrived.
         let mut self_w = self.self_weight;
-        let mut msgs: Vec<(usize, f64, Vec<u8>)> = Vec::new();
+        let mut msgs: Vec<(usize, f64, Payload)> = Vec::new();
         for &(nbr, w) in &self.neighbors {
             match self.inbox.remove(&nbr) {
                 Some((sent_at_s, payload)) => {
@@ -905,17 +926,17 @@ impl AsyncDlNodeSm {
                 .map(|(src, weight, payload)| Received {
                     src: *src,
                     weight: *weight,
-                    payload,
+                    payload: payload.as_slice(),
                 })
                 .collect();
             self.sharing.aggregate(&mut model, self_w, &received)?;
         }
-        self.params = model.into_vec();
+        self.params.put(model.into_vec());
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
             let trainer = self.trainer.take().context("trainer already in flight")?;
             let job = EvalJob {
                 trainer,
-                params: self.params.clone(),
+                params: self.params.to_vec(),
                 test: Arc::clone(&self.test),
             };
             ctx.start_compute(self.eval_time_s, job.into_compute());
@@ -992,7 +1013,9 @@ impl EventNode for AsyncDlNodeSm {
                     self.trainer = Some(trainer);
                     self.train_loss = loss;
                     let model = ParamVec::from_vec(params);
-                    let payload = self.sharing.outgoing(&model, self.round)?;
+                    // One serialization, shared by every recipient.
+                    let payload: Payload = self.sharing.outgoing(&model, self.round)?.into();
+                    ctx.note_serialized(payload.len());
                     for &(nbr, _) in &self.neighbors {
                         ctx.send(Envelope {
                             src: self.id,
@@ -1003,17 +1026,20 @@ impl EventNode for AsyncDlNodeSm {
                             payload: payload.clone(),
                         });
                     }
-                    self.model = Some(model);
                     if self.parting_round() {
                         // Push the final update, then leave without
-                        // pulling; disarm the pending deadline.
+                        // pulling; disarm the pending deadline and give
+                        // the parameter shard back to the store.
                         if let Some(id) = self.deadline_timer.take() {
                             ctx.cancel_timer(id);
                         }
+                        self.params.put(model.into_vec());
+                        self.params.release();
                         self.state = AsyncState::Departed;
                         ctx.depart();
                         return Ok(());
                     }
+                    self.model = Some(model);
                     if self.deadline_passed {
                         // The window already closed while we trained.
                         self.aggregate_and_advance(ctx)
@@ -1035,6 +1061,7 @@ impl EventNode for AsyncDlNodeSm {
                         bytes_sent: c.bytes_sent,
                         bytes_recv: c.bytes_recv,
                         msgs_sent: c.msgs_sent,
+                        bytes_serialized: c.bytes_serialized,
                         late_msgs: self.stats.late_msgs,
                         dropped_msgs: self.stats.dropped_msgs,
                         mean_staleness_s: self.stats.mean_staleness_s(),

@@ -1,0 +1,530 @@
+//! Shared parameter-store subsystem: copy-on-write model shards and
+//! zero-copy payload broadcast.
+//!
+//! The paper's headline capability is emulating 1000+ nodes in one
+//! process; what caps that number in practice is parameter memory, not
+//! CPU. Before this subsystem every emulated node owned a private
+//! `Vec<f32>` clone of the common initialization (O(nodes × params)
+//! allocated before round 0 even starts) and every broadcast cloned the
+//! serialized model once per neighbor (O(nodes × degree × params) of
+//! in-flight payload bytes). The store breaks both terms:
+//!
+//! * **Copy-on-write shards** — [`ParamStore`] owns one shared base
+//!   snapshot (`Arc<[f32]>`, the artifact's common init). Nodes hold
+//!   [`ParamsRef`] handles and read through to the base until their
+//!   first write ([`ParamsRef::take_for_write`]), which materializes a
+//!   private shard. Resident parameter memory is therefore O(active
+//!   divergence): nodes that never train (offline churn sessions,
+//!   late-joining cohorts) cost nothing, and a departing node releases
+//!   its shard back ([`ParamsRef::release`]).
+//! * **Zero-copy broadcast** — [`Payload`] (an `Arc<[u8]>` buffer) lets
+//!   a node serialize its outgoing model once per round and share the
+//!   allocation across every recipient's queue.
+//! * **Accounting** — the store counts live shards, shared bytes, and
+//!   peak resident parameter bytes ([`StoreStats`]); runs export a
+//!   [`StoreReport`] into the results directory (`store.jsonl`) and the
+//!   `fig6` bench writes a `BENCH_fig6.json` trajectory from it.
+//!
+//! Node code is store-agnostic: a [`ParamSlot`] either owns a plain
+//! vector (`param_store = "owned"`, the back-compat default) or holds a
+//! [`ParamsRef`] (`param_store = "shared"`). Both variants hand out the
+//! exact same `Vec<f32>` values in the same order, so a run is
+//! bit-identical across the two modes and across worker counts —
+//! enforced by `shared_param_store_bit_identical_to_owned_across_workers`
+//! in `rust/tests/dl_integration.rs` and the CoW property tests in
+//! `rust/tests/proptests.rs`.
+//!
+//! # Shard lifecycle
+//!
+//! ```text
+//! register()      take_for_write()      put()            release()/Drop
+//! ────────────▶ Shared ──────────────▶ InFlight ───────▶ Owned ──────────▶ Released
+//!               (reads hit the base)   (vec is out       (private shard;   (bytes returned;
+//!                                       with a compute    reads/writes      handle dead)
+//!                                       job; 1 copy       hit the shard)
+//!                                       charged here)        │    ▲
+//!                                                            └────┘
+//!                                                       take_for_write/put
+//! ```
+//!
+//! Materialization happens exactly once, at the first
+//! `take_for_write` — for DL nodes that is the start of their first
+//! training round. `InFlight` means the vector is temporarily outside
+//! the store (owned by a worker-pool compute job); its bytes stay
+//! charged to the store until `release`.
+
+mod payload;
+
+pub use payload::Payload;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// One node's shard state inside the store.
+enum Slot {
+    /// Never written: reads resolve to the shared base snapshot.
+    Shared,
+    /// Materialized private shard.
+    Owned(Vec<f32>),
+    /// Taken for write; the vector is out with a compute job.
+    InFlight,
+    /// Handle released (node departed / dropped); bytes returned.
+    Released,
+}
+
+struct StoreInner {
+    base: Arc<[f32]>,
+    /// Registered handles (shards are locked per-node, not globally —
+    /// one node's materialization or eval snapshot never serializes
+    /// another node's store access).
+    nodes: AtomicU64,
+    live_shards: AtomicU64,
+    materialized_total: AtomicU64,
+    resident_bytes: AtomicU64,
+    peak_resident_bytes: AtomicU64,
+}
+
+impl StoreInner {
+    fn shard_bytes(&self) -> u64 {
+        (self.base.len() * std::mem::size_of::<f32>()) as u64
+    }
+
+    /// Charge one newly materialized shard.
+    fn on_materialize(&self) {
+        self.live_shards.fetch_add(1, Ordering::Relaxed);
+        self.materialized_total.fetch_add(1, Ordering::Relaxed);
+        let bytes = self.shard_bytes();
+        let now = self.resident_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_resident_bytes.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Return one shard's bytes (release of a materialized shard).
+    fn on_release(&self) {
+        self.live_shards.fetch_sub(1, Ordering::Relaxed);
+        self.resident_bytes.fetch_sub(self.shard_bytes(), Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time accounting snapshot of a [`ParamStore`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StoreStats {
+    /// Registered handles (== emulated nodes backed by the store).
+    pub nodes: u64,
+    /// Bytes of the shared base snapshot (counted once, ever).
+    pub shared_bytes: u64,
+    /// Currently materialized shards (owned or in flight).
+    pub live_shards: u64,
+    /// Shards ever materialized (monotone; release does not undo it).
+    pub materialized_total: u64,
+    /// Bytes of materialized shards currently charged to the store.
+    pub resident_bytes: u64,
+    /// High-water mark of `resident_bytes`.
+    pub peak_resident_bytes: u64,
+}
+
+impl StoreStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("shared_bytes", Json::num(self.shared_bytes as f64)),
+            ("live_shards", Json::num(self.live_shards as f64)),
+            ("materialized_total", Json::num(self.materialized_total as f64)),
+            ("resident_bytes", Json::num(self.resident_bytes as f64)),
+            ("peak_resident_bytes", Json::num(self.peak_resident_bytes as f64)),
+        ])
+    }
+}
+
+/// Store accounting exported by a finished run: one snapshot taken after
+/// every node registered (before round 0) and one at quiescence. The gap
+/// between the two is the run's actual divergence; `at_start` is what
+/// stays O(1) in node count and breaks the per-node-buffer scale ceiling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StoreReport {
+    pub at_start: StoreStats,
+    pub at_end: StoreStats,
+}
+
+impl StoreReport {
+    /// Two JSONL lines (`phase: start | end`), written as `store.jsonl`
+    /// next to the per-node metric logs.
+    pub fn to_jsonl(&self) -> String {
+        let line = |phase: &str, s: &StoreStats| {
+            let mut j = s.to_json();
+            if let Json::Obj(ref mut obj) = j {
+                obj.insert("phase".into(), Json::str(phase));
+            }
+            let mut out = j.dump();
+            out.push('\n');
+            out
+        };
+        let mut out = line("start", &self.at_start);
+        out.push_str(&line("end", &self.at_end));
+        out
+    }
+}
+
+/// Process-wide owner of all model parameter state for one run
+/// (`param_store = "shared"`). Cheap to clone (handle).
+#[derive(Clone)]
+pub struct ParamStore {
+    inner: Arc<StoreInner>,
+}
+
+impl ParamStore {
+    /// Build a store over a shared base snapshot (the common model init).
+    pub fn with_base(base: Arc<[f32]>) -> ParamStore {
+        ParamStore {
+            inner: Arc::new(StoreInner {
+                base,
+                nodes: AtomicU64::new(0),
+                live_shards: AtomicU64::new(0),
+                materialized_total: AtomicU64::new(0),
+                resident_bytes: AtomicU64::new(0),
+                peak_resident_bytes: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Convenience for tests: wrap a plain vector as the base.
+    pub fn from_vec(base: Vec<f32>) -> ParamStore {
+        ParamStore::with_base(base.into())
+    }
+
+    /// Parameter-vector dimension (every shard has it).
+    pub fn dim(&self) -> usize {
+        self.inner.base.len()
+    }
+
+    /// Register one node; the returned handle reads through to the base
+    /// until its first write.
+    pub fn register(&self) -> ParamsRef {
+        let id = self.inner.nodes.fetch_add(1, Ordering::Relaxed) as usize;
+        ParamsRef {
+            store: Arc::clone(&self.inner),
+            slot: Mutex::new(Slot::Shared),
+            id,
+        }
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            nodes: self.inner.nodes.load(Ordering::Relaxed),
+            shared_bytes: self.inner.shard_bytes(),
+            live_shards: self.inner.live_shards.load(Ordering::Relaxed),
+            materialized_total: self.inner.materialized_total.load(Ordering::Relaxed),
+            resident_bytes: self.inner.resident_bytes.load(Ordering::Relaxed),
+            peak_resident_bytes: self.inner.peak_resident_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One node's handle onto the [`ParamStore`]. The shard is locked
+/// per-node (the handle owns its slot's mutex), so one node's
+/// materialization, eval snapshot, or release never contends with
+/// another node's — the store-wide state is all atomics. Dropping the
+/// handle releases the shard (its bytes stop counting as resident).
+pub struct ParamsRef {
+    store: Arc<StoreInner>,
+    /// This node's shard, guarded by its own lock (interior mutability
+    /// lets `take`/`put` run from `&self` node code and compute jobs).
+    slot: Mutex<Slot>,
+    /// Registration index, for diagnostics only.
+    id: usize,
+}
+
+impl ParamsRef {
+    pub fn dim(&self) -> usize {
+        self.store.base.len()
+    }
+
+    /// True once this node has materialized a private shard.
+    pub fn materialized(&self) -> bool {
+        matches!(*self.slot.lock().unwrap(), Slot::Owned(_) | Slot::InFlight)
+    }
+
+    /// Take the parameters out for mutation (training). The first call
+    /// copies the shared base — that copy *is* the CoW materialization —
+    /// and later calls hand back the private shard. The caller must
+    /// [`put`](ParamsRef::put) the vector back; taking twice without a
+    /// put is a node-logic bug and panics (mirrors the one-compute-per-
+    /// wake assertion in the scheduler).
+    pub fn take_for_write(&self) -> Vec<f32> {
+        let prior = {
+            let mut slot = self.slot.lock().unwrap();
+            std::mem::replace(&mut *slot, Slot::InFlight)
+        };
+        match prior {
+            Slot::Shared => {
+                // The O(params) materialization copy happens outside
+                // even the per-node lock.
+                self.store.on_materialize();
+                self.store.base.to_vec()
+            }
+            Slot::Owned(v) => v,
+            Slot::InFlight => panic!("shard {} already taken for write", self.id),
+            Slot::Released => panic!("shard {} used after release", self.id),
+        }
+    }
+
+    /// Return the (possibly mutated) parameters taken with
+    /// [`take_for_write`](ParamsRef::take_for_write).
+    pub fn put(&self, params: Vec<f32>) {
+        assert_eq!(params.len(), self.store.base.len(), "shard dimension changed");
+        let mut slot = self.slot.lock().unwrap();
+        assert!(
+            matches!(*slot, Slot::InFlight),
+            "put without a matching take_for_write on shard {}",
+            self.id
+        );
+        *slot = Slot::Owned(params);
+    }
+
+    /// Run `f` over the current view without copying (base until the
+    /// first write, the private shard after). Holds only this node's
+    /// shard lock for the duration.
+    pub fn with<R>(&self, f: impl FnOnce(&[f32]) -> R) -> R {
+        let slot = self.slot.lock().unwrap();
+        match &*slot {
+            Slot::Shared => f(&self.store.base),
+            Slot::Owned(v) => f(v),
+            Slot::InFlight => panic!("shard {} is taken for write", self.id),
+            Slot::Released => panic!("shard {} used after release", self.id),
+        }
+    }
+
+    /// Copy the current view out (evaluation jobs need owned buffers).
+    /// An unmaterialized shard clones the base `Arc` first and copies
+    /// outside the per-node lock.
+    pub fn to_vec(&self) -> Vec<f32> {
+        {
+            let slot = self.slot.lock().unwrap();
+            match &*slot {
+                Slot::Shared => {} // fall through: copy base lock-free
+                Slot::Owned(v) => return v.clone(),
+                Slot::InFlight => panic!("shard {} is taken for write", self.id),
+                Slot::Released => panic!("shard {} used after release", self.id),
+            }
+        }
+        self.store.base.to_vec()
+    }
+
+    /// Give the shard back for good (churn-trace departure): resident
+    /// bytes drop, the handle is dead. Idempotent; `Drop` calls it too.
+    pub fn release(&self) {
+        let prior = {
+            let mut slot = self.slot.lock().unwrap();
+            std::mem::replace(&mut *slot, Slot::Released)
+        };
+        match prior {
+            // An in-flight vector is out with a compute job that will
+            // never put it back; its charge is returned here either way.
+            Slot::Owned(_) | Slot::InFlight => self.store.on_release(),
+            Slot::Shared | Slot::Released => {}
+        }
+    }
+}
+
+impl Drop for ParamsRef {
+    fn drop(&mut self) {
+        self.release();
+    }
+}
+
+/// A node's parameter slot: either a plain owned vector
+/// (`param_store = "owned"`, the historical behavior) or a handle into
+/// the shared [`ParamStore`]. Both variants move identical `Vec<f32>`
+/// values through `take`/`put`, which is what keeps the two modes
+/// bit-identical.
+pub struct ParamSlot {
+    dim: usize,
+    kind: SlotKind,
+}
+
+enum SlotKind {
+    Owned(Option<Vec<f32>>),
+    Stored(ParamsRef),
+}
+
+impl ParamSlot {
+    /// Private per-node buffer (legacy mode).
+    pub fn owned(params: Vec<f32>) -> ParamSlot {
+        ParamSlot { dim: params.len(), kind: SlotKind::Owned(Some(params)) }
+    }
+
+    /// Copy-on-write handle into a shared store.
+    pub fn stored(handle: ParamsRef) -> ParamSlot {
+        ParamSlot { dim: handle.dim(), kind: SlotKind::Stored(handle) }
+    }
+
+    /// Parameter dimension (stable across take/put).
+    pub fn len(&self) -> usize {
+        self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dim == 0
+    }
+
+    /// Take the parameters out for mutation; pair with
+    /// [`put`](ParamSlot::put).
+    pub fn take(&mut self) -> Vec<f32> {
+        match &mut self.kind {
+            SlotKind::Owned(v) => v.take().expect("params already taken"),
+            SlotKind::Stored(r) => r.take_for_write(),
+        }
+    }
+
+    /// Return the parameters taken with [`take`](ParamSlot::take).
+    pub fn put(&mut self, params: Vec<f32>) {
+        match &mut self.kind {
+            SlotKind::Owned(v) => {
+                debug_assert!(v.is_none(), "put without a matching take");
+                *v = Some(params);
+            }
+            SlotKind::Stored(r) => r.put(params),
+        }
+    }
+
+    /// Copy the current parameters out (evaluation snapshot).
+    pub fn to_vec(&self) -> Vec<f32> {
+        match &self.kind {
+            SlotKind::Owned(v) => v.as_ref().expect("params are taken").clone(),
+            SlotKind::Stored(r) => r.to_vec(),
+        }
+    }
+
+    /// Drop the parameters for good (departure): frees the owned buffer
+    /// or releases the store shard.
+    pub fn release(&mut self) {
+        match &mut self.kind {
+            SlotKind::Owned(v) => {
+                v.take();
+            }
+            SlotKind::Stored(r) => r.release(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_free_until_first_write() {
+        let store = ParamStore::from_vec(vec![1.0; 100]);
+        let refs: Vec<ParamsRef> = (0..64).map(|_| store.register()).collect();
+        let s = store.stats();
+        assert_eq!(s.nodes, 64);
+        assert_eq!(s.shared_bytes, 400);
+        assert_eq!(s.live_shards, 0);
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.peak_resident_bytes, 0);
+        // Reads hit the base without materializing.
+        refs[7].with(|v| assert_eq!(v, &[1.0f32; 100][..]));
+        assert_eq!(store.stats().live_shards, 0);
+    }
+
+    #[test]
+    fn first_write_materializes_and_isolates() {
+        let store = ParamStore::from_vec(vec![0.5; 8]);
+        let a = store.register();
+        let b = store.register();
+        let mut v = a.take_for_write();
+        assert_eq!(v, vec![0.5; 8]);
+        v[0] = 9.0;
+        a.put(v);
+        assert!(a.materialized());
+        assert!(!b.materialized());
+        // Read-your-writes for a, base view for b.
+        assert_eq!(a.to_vec()[0], 9.0);
+        assert_eq!(b.to_vec()[0], 0.5);
+        let s = store.stats();
+        assert_eq!(s.live_shards, 1);
+        assert_eq!(s.materialized_total, 1);
+        assert_eq!(s.resident_bytes, 32);
+        assert_eq!(s.peak_resident_bytes, 32);
+    }
+
+    #[test]
+    fn release_returns_bytes_but_keeps_peak() {
+        let store = ParamStore::from_vec(vec![0.0; 16]);
+        let a = store.register();
+        let b = store.register();
+        a.put({
+            let mut v = a.take_for_write();
+            v[1] = 1.0;
+            v
+        });
+        b.put({
+            let mut v = b.take_for_write();
+            v[2] = 2.0;
+            v
+        });
+        assert_eq!(store.stats().resident_bytes, 128);
+        a.release();
+        let s = store.stats();
+        assert_eq!(s.live_shards, 1);
+        assert_eq!(s.resident_bytes, 64);
+        assert_eq!(s.peak_resident_bytes, 128);
+        assert_eq!(s.materialized_total, 2);
+        // Idempotent, and Drop releases too.
+        a.release();
+        drop(b);
+        assert_eq!(store.stats().live_shards, 0);
+        assert_eq!(store.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "already taken")]
+    fn double_take_panics() {
+        let store = ParamStore::from_vec(vec![0.0; 4]);
+        let a = store.register();
+        let _v = a.take_for_write();
+        let _w = a.take_for_write();
+    }
+
+    #[test]
+    fn slot_owned_and_stored_move_identical_values() {
+        let base = vec![1.0f32, 2.0, 3.0];
+        let store = ParamStore::from_vec(base.clone());
+        let mut owned = ParamSlot::owned(base.clone());
+        let mut stored = ParamSlot::stored(store.register());
+        assert_eq!(owned.len(), 3);
+        assert_eq!(stored.len(), 3);
+        let (mut a, mut b) = (owned.take(), stored.take());
+        assert_eq!(a, b);
+        a[1] = 7.0;
+        b[1] = 7.0;
+        owned.put(a);
+        stored.put(b);
+        assert_eq!(owned.to_vec(), stored.to_vec());
+        // len is stable even while the params are taken.
+        let _t = owned.take();
+        assert_eq!(owned.len(), 3);
+        owned.put(_t);
+        owned.release();
+        stored.release();
+        assert_eq!(store.stats().live_shards, 0);
+    }
+
+    #[test]
+    fn report_serializes_as_jsonl() {
+        let store = ParamStore::from_vec(vec![0.0; 4]);
+        let at_start = store.stats();
+        let a = store.register();
+        a.put(a.take_for_write());
+        let report = StoreReport { at_start, at_end: store.stats() };
+        let text = report.to_jsonl();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let start = crate::util::json::parse(lines[0]).unwrap();
+        let end = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(start.get("phase").as_str(), Some("start"));
+        assert_eq!(end.get("phase").as_str(), Some("end"));
+        assert_eq!(end.get("live_shards").as_usize(), Some(1));
+        assert_eq!(end.get("shared_bytes").as_usize(), Some(16));
+    }
+}

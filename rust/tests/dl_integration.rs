@@ -445,7 +445,7 @@ fn async_dl_bit_identical_across_worker_counts() {
     let setup = prepare(&cfg, &engine).unwrap();
     let mut runs = Vec::new();
     for workers in [1usize, 4, 8] {
-        let mut logs = SchedulerRunner { workers }.run(&cfg, &engine, &setup).unwrap();
+        let mut logs = SchedulerRunner { workers }.run(&cfg, &engine, &setup).unwrap().logs;
         logs.sort_by_key(|l| l.node);
         runs.push(logs);
     }
@@ -577,5 +577,103 @@ fn async_dl_drop_policy_counts_dropped_messages() {
     // miss the cut, and the drop policy never buffers them.
     assert!(total_dropped > 0, "geo WAN + 50 ms windows produced no late messages");
     assert_eq!(total_late, 0, "drop policy must not buffer late messages");
+    engine.shutdown();
+}
+
+#[test]
+fn shared_param_store_bit_identical_to_owned_across_workers() {
+    // The acceptance gate for the shared parameter store: a 128-node
+    // scheduler run produces bit-identical per-node metrics in
+    // param_store = "shared" vs "owned", each across worker counts 1/4
+    // (one shared prepare() so calibration is common), and the store
+    // report shows registration cost O(1) in node count.
+    use decentralize_rs::coordinator::{prepare, Runner, SchedulerRunner};
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_param_store");
+    cfg.nodes = 128;
+    cfg.rounds = 3;
+    cfg.eval_every = 3;
+    cfg.train_total = 1280;
+    cfg.test_total = 64;
+    cfg.topology = "regular:4".into();
+    cfg.local_steps = 1;
+    let setup = prepare(&cfg, &engine).unwrap();
+    let mut runs = Vec::new();
+    for store_mode in ["owned", "shared"] {
+        for workers in [1usize, 4] {
+            let mut c = cfg.clone();
+            c.param_store = store_mode.into();
+            let out = SchedulerRunner { workers }.run(&c, &engine, &setup).unwrap();
+            if store_mode == "shared" {
+                let report = out.store.expect("shared mode must report store stats");
+                // Before round 0 the whole fleet shares one base.
+                assert_eq!(report.at_start.nodes, 128);
+                assert_eq!(report.at_start.resident_bytes, 0);
+                // Every node trains, so every node diverged; peak covers
+                // exactly the divergence, not per-node init copies.
+                assert_eq!(report.at_end.materialized_total, 128);
+                assert!(report.at_end.peak_resident_bytes >= report.at_end.resident_bytes);
+            } else {
+                assert!(out.store.is_none(), "owned mode must not report a store");
+            }
+            let mut logs = out.logs;
+            logs.sort_by_key(|l| l.node);
+            runs.push(logs);
+        }
+    }
+    for other in &runs[1..] {
+        assert_eq!(runs[0].len(), other.len());
+        for (a, b) in runs[0].iter().zip(other.iter()) {
+            assert_eq!(a.node, b.node);
+            assert_eq!(a.records.len(), b.records.len(), "node {}", a.node);
+            for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+                assert_eq!(ra.round, rb.round, "node {}", a.node);
+                assert_eq!(ra.train_loss, rb.train_loss, "node {}", a.node);
+                assert_eq!(ra.test_loss, rb.test_loss, "node {}", a.node);
+                assert_eq!(ra.test_acc, rb.test_acc, "node {}", a.node);
+                assert_eq!(ra.bytes_sent, rb.bytes_sent, "node {}", a.node);
+                assert_eq!(ra.bytes_recv, rb.bytes_recv, "node {}", a.node);
+                assert_eq!(ra.msgs_sent, rb.msgs_sent, "node {}", a.node);
+                assert_eq!(ra.bytes_serialized, rb.bytes_serialized, "node {}", a.node);
+            }
+        }
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn shared_param_store_threaded_runner_matches_scheduler() {
+    // Shared mode is runner-agnostic: the threaded path over the same
+    // prepare() agrees with the scheduler bit-for-bit, and its store
+    // report carries the same peak shape (all nodes trained).
+    use decentralize_rs::coordinator::{prepare, Runner, SchedulerRunner, ThreadedRunner};
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = small_cfg("it_param_store_threads");
+    cfg.nodes = 16;
+    cfg.rounds = 4;
+    cfg.eval_every = 2;
+    cfg.train_total = 640;
+    cfg.topology = "regular:4".into();
+    cfg.param_store = "shared".into();
+    let setup = prepare(&cfg, &engine).unwrap();
+    let sched = SchedulerRunner { workers: 4 }.run(&cfg, &engine, &setup).unwrap();
+    let threads = ThreadedRunner.run(&cfg, &engine, &setup).unwrap();
+    let (mut ls, mut lt) = (sched.logs, threads.logs);
+    ls.sort_by_key(|l| l.node);
+    lt.sort_by_key(|l| l.node);
+    for (a, b) in ls.iter().zip(lt.iter()) {
+        let (ra, rb) = (a.records.last().unwrap(), b.records.last().unwrap());
+        assert_eq!(ra.test_acc, rb.test_acc, "node {}", a.node);
+        assert_eq!(ra.train_loss, rb.train_loss, "node {}", a.node);
+        assert_eq!(ra.bytes_sent, rb.bytes_sent, "node {}", a.node);
+        assert_eq!(ra.bytes_serialized, rb.bytes_serialized, "node {}", a.node);
+    }
+    let rs = sched.store.unwrap();
+    let rt = threads.store.unwrap();
+    assert_eq!(rs.at_end.materialized_total, 16);
+    assert_eq!(rt.at_end.materialized_total, 16);
+    // Threaded nodes release on thread exit; the scheduler keeps shards
+    // live until the run is torn down. Peaks agree.
+    assert_eq!(rs.at_end.peak_resident_bytes, rt.at_end.peak_resident_bytes);
     engine.shutdown();
 }

@@ -12,6 +12,7 @@ use decentralize_rs::model::ParamVec;
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::secure;
 use decentralize_rs::sharing::{self, decode_sparse, encode_sparse, Received, Sharing};
+use decentralize_rs::store::{ParamSlot, ParamStore};
 use decentralize_rs::util::json::{parse, Json};
 
 const CASES: u64 = 60;
@@ -130,7 +131,10 @@ fn prop_envelope_roundtrip() {
             round: rng.next_u64() % 1_000_000,
             kind: MsgKind::from_u8((rng.next_u64() % 7) as u8).unwrap(),
             sent_at_s: rng.next_f64() * 1e4,
-            payload: (0..rng.range(0, 5000)).map(|_| rng.next_u32() as u8).collect(),
+            payload: (0..rng.range(0, 5000))
+                .map(|_| rng.next_u32() as u8)
+                .collect::<Vec<u8>>()
+                .into(),
         };
         assert_eq!(decode_envelope(&encode_envelope(&env)).unwrap(), env, "case {case}");
     }
@@ -285,6 +289,88 @@ fn prop_secure_masks_cancel_in_weighted_sum() {
                 agg[i]
             );
         }
+    }
+}
+
+#[test]
+fn prop_param_store_cow_read_your_writes_and_isolation() {
+    // Random interleavings of take/mutate/put and reads across many
+    // handles: every node must always observe exactly its own write
+    // history (read-your-writes) and never a neighbor's (isolation),
+    // with store accounting consistent throughout. Shadow copies are
+    // plain per-node vectors mutated in lockstep.
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(11_000 + case);
+        let dim = rng.range(1, 300);
+        let nodes = rng.range(2, 16);
+        let base = rand_vals(&mut rng, dim, 1.0);
+        let store = ParamStore::from_vec(base.clone());
+        let slots: Vec<_> = (0..nodes).map(|_| store.register()).collect();
+        let mut shadow: Vec<Vec<f32>> = vec![base.clone(); nodes];
+        let mut writers = std::collections::HashSet::new();
+        for op in 0..rng.range(5, 80) {
+            let who = rng.range(0, nodes);
+            if rng.next_f64() < 0.5 {
+                // Write: identical mutation on shard and shadow.
+                let at = rng.range(0, dim);
+                let delta = rng.normal_f32(0.0, 1.0);
+                let mut v = slots[who].take_for_write();
+                assert_eq!(v, shadow[who], "case {case} op {op}: take view");
+                v[at] += delta;
+                shadow[who][at] += delta;
+                slots[who].put(v);
+                writers.insert(who);
+            } else {
+                // Read-your-writes without materializing.
+                slots[who].with(|v| assert_eq!(v, &shadow[who][..], "case {case} op {op}"));
+                assert_eq!(slots[who].materialized(), writers.contains(&who));
+            }
+        }
+        // Final isolation check over every node.
+        for (i, slot) in slots.iter().enumerate() {
+            assert_eq!(slot.to_vec(), shadow[i], "case {case} node {i}");
+        }
+        // Accounting: exactly the writers materialized, peak >= resident,
+        // and resident = writers × dim × 4.
+        let s = store.stats();
+        assert_eq!(s.nodes, nodes as u64, "case {case}");
+        assert_eq!(s.live_shards, writers.len() as u64, "case {case}");
+        assert_eq!(s.materialized_total, writers.len() as u64, "case {case}");
+        assert_eq!(s.resident_bytes, (writers.len() * dim * 4) as u64, "case {case}");
+        assert!(s.peak_resident_bytes >= s.resident_bytes, "case {case}");
+        assert_eq!(s.shared_bytes, (dim * 4) as u64, "case {case}");
+    }
+}
+
+#[test]
+fn prop_param_slot_owned_and_stored_agree() {
+    // The ParamSlot abstraction must hand back identical vectors in
+    // identical order for both modes under random take/mutate/put/read
+    // sequences — the invariant behind shared-vs-owned bit-identity.
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(12_000 + case);
+        let dim = rng.range(1, 200);
+        let base = rand_vals(&mut rng, dim, 1.0);
+        let store = ParamStore::from_vec(base.clone());
+        let mut owned = ParamSlot::owned(base.clone());
+        let mut stored = ParamSlot::stored(store.register());
+        for op in 0..rng.range(1, 40) {
+            if rng.next_f64() < 0.6 {
+                let at = rng.range(0, dim);
+                let delta = rng.normal_f32(0.0, 2.0);
+                let (mut a, mut b) = (owned.take(), stored.take());
+                assert_eq!(a, b, "case {case} op {op}");
+                a[at] *= 0.5;
+                a[at] += delta;
+                b[at] *= 0.5;
+                b[at] += delta;
+                owned.put(a);
+                stored.put(b);
+            } else {
+                assert_eq!(owned.to_vec(), stored.to_vec(), "case {case} op {op}");
+            }
+        }
+        assert_eq!(owned.to_vec(), stored.to_vec(), "case {case} final");
     }
 }
 
