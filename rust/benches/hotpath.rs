@@ -1,0 +1,352 @@
+//! Hot-path perf-regression harness: the numbers that gate the round
+//! loop, written to `BENCH_hotpath.json` so the trajectory accumulates
+//! per PR (the CI `bench-smoke` job uploads it as an artifact).
+//!
+//! Three sections, all artifact-free:
+//!
+//! 1. **Aggregate throughput** at `dim` params × 6 neighbors for every
+//!    sharing strategy, plus the retained scalar reference for full
+//!    sharing *measured in the same run* — the `speedup_vs_scalar` row
+//!    is the regression gate for the fused kernels.
+//! 2. **Codec throughput**: encode + reusable-buffer decode for every
+//!    float codec.
+//! 3. **Scheduler round rate**: a 1024-node regular:6 gossip fleet of
+//!    pure message-driven state machines (no engine), measuring
+//!    node-rounds/s through the virtual-time scheduler.
+//!
+//! Quick mode (CI): `cargo bench --bench hotpath -- --quick` or
+//! `HOTPATH_QUICK=1` — smaller dim, fewer nodes, shorter budgets; the
+//! JSON is written either way.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use decentralize_rs::bench::{run, BenchResult};
+use decentralize_rs::communication::{Envelope, MsgKind, Payload};
+use decentralize_rs::compression::{FloatCodec, Fp16, Qsgd, RawF32};
+use decentralize_rs::graph;
+use decentralize_rs::kernels::{reference, Scratch};
+use decentralize_rs::model::ParamVec;
+use decentralize_rs::rng::Xoshiro256pp;
+use decentralize_rs::scheduler::{EventNode, NodeCtx, Scheduler, Wake};
+use decentralize_rs::sharing::{self, Received, Sharing};
+use decentralize_rs::util::json::Json;
+
+const NEIGHBORS: usize = 6;
+
+fn rand_model(dim: usize, seed: u64) -> ParamVec {
+    let mut rng = Xoshiro256pp::new(seed);
+    ParamVec::random(dim, 1.0, &mut rng)
+}
+
+/// One JSON trajectory row for a timed section.
+#[allow(clippy::too_many_arguments)]
+fn row(
+    bench: &str,
+    mode: &str,
+    dim: usize,
+    res: &BenchResult,
+    items_per_iter: f64,
+    unit: &str,
+    quick: bool,
+) -> Json {
+    Json::obj(vec![
+        ("figure", Json::str("hotpath")),
+        ("bench", Json::str(bench)),
+        ("mode", Json::str(mode)),
+        ("dim", Json::num(dim as f64)),
+        ("neighbors", Json::num(NEIGHBORS as f64)),
+        ("mean_s", Json::num(res.mean_s)),
+        ("median_s", Json::num(res.median_s)),
+        ("min_s", Json::num(res.min_s)),
+        ("iters", Json::num(res.iters as f64)),
+        ("throughput", Json::num(items_per_iter / res.mean_s)),
+        ("throughput_unit", Json::str(unit)),
+        ("quick", Json::Bool(quick)),
+    ])
+}
+
+/// Per-sender payloads for one strategy (each sender is its own
+/// instance, as in a real fleet; stateful strategies see the common
+/// init first).
+fn strategy_payloads(spec: &str, dim: usize, init: &ParamVec) -> Vec<Vec<u8>> {
+    (0..NEIGHBORS)
+        .map(|s| {
+            let mut sh = sharing::from_spec(spec, dim, 1000 + s as u64).unwrap();
+            sh.set_init(init);
+            sh.outgoing(&rand_model(dim, 2000 + s as u64), 0).unwrap()
+        })
+        .collect()
+}
+
+/// Pure message-driven gossip state machine: train-free D-PSGD round
+/// loop (broadcast → await all → aggregate → next), exercising the
+/// scheduler queue, zero-copy broadcast, and the kernel aggregation.
+struct GossipSm {
+    id: usize,
+    rounds: u64,
+    round: u64,
+    self_weight: f64,
+    neighbors: Vec<(usize, f64)>,
+    sharing: Box<dyn Sharing>,
+    model: ParamVec,
+    pending: HashMap<(u64, usize), Payload>,
+    scratch: Scratch,
+}
+
+impl GossipSm {
+    fn broadcast(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let payload: Payload = self
+            .sharing
+            .outgoing_with(&self.model, self.round, &mut self.scratch)?
+            .into();
+        ctx.note_serialized(payload.len());
+        for &(nbr, _) in &self.neighbors {
+            ctx.send(Envelope {
+                src: self.id,
+                dst: nbr,
+                round: self.round,
+                kind: MsgKind::Model,
+                sent_at_s: 0.0,
+                payload: payload.clone(),
+            });
+        }
+        Ok(())
+    }
+
+    fn try_aggregate(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        loop {
+            if self.round >= self.rounds {
+                return Ok(());
+            }
+            if !self
+                .neighbors
+                .iter()
+                .all(|&(n, _)| self.pending.contains_key(&(self.round, n)))
+            {
+                return Ok(());
+            }
+            let msgs: Vec<(usize, f64, Payload)> = self
+                .neighbors
+                .iter()
+                .map(|&(n, w)| (n, w, self.pending.remove(&(self.round, n)).unwrap()))
+                .collect();
+            let received: Vec<Received> = msgs
+                .iter()
+                .map(|(src, weight, payload)| Received {
+                    src: *src,
+                    weight: *weight,
+                    payload: payload.as_slice(),
+                })
+                .collect();
+            self.sharing
+                .aggregate_with(&mut self.model, self.self_weight, &received, &mut self.scratch)?;
+            self.round += 1;
+            if self.round < self.rounds {
+                self.broadcast(ctx)?;
+            }
+        }
+    }
+}
+
+impl EventNode for GossipSm {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        match wake {
+            Wake::Start => self.broadcast(ctx),
+            Wake::Message(env) => {
+                if env.kind == MsgKind::Model && env.round >= self.round {
+                    self.pending.insert((env.round, env.src), env.payload);
+                }
+                self.try_aggregate(ctx)
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.round >= self.rounds
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("HOTPATH_QUICK").is_ok_and(|v| v != "0");
+    let dim: usize = if quick { 262_144 } else { 1_048_576 };
+    let budget_ms: u64 = if quick { 250 } else { 800 };
+    let sched_nodes: usize = if quick { 256 } else { 1024 };
+    let sched_rounds: u64 = if quick { 3 } else { 5 };
+    println!(
+        "== hotpath: round hot-path regression harness (dim = {dim}, {NEIGHBORS} neighbors{}) ==",
+        if quick { ", quick" } else { "" }
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let elems = (dim * NEIGHBORS) as f64;
+    let self_w = 1.0 - NEIGHBORS as f64 / (NEIGHBORS + 1) as f64;
+    let w = 1.0 / (NEIGHBORS + 1) as f64;
+    let init = ParamVec::zeros(dim);
+
+    // --- 1. full-sharing aggregate: fused kernels vs the retained
+    //        scalar reference (fresh-vector decode + scalar fold), in
+    //        the same run. This ratio is the acceptance gate.
+    let full_payloads = strategy_payloads("full", dim, &init);
+    let speedup = {
+        let received: Vec<Received> = full_payloads
+            .iter()
+            .enumerate()
+            .map(|(s, p)| Received { src: s, weight: w, payload: p })
+            .collect();
+        let mut sh = sharing::from_spec("full", dim, 0).unwrap();
+        let mut model = rand_model(dim, 1);
+        let mut scratch = Scratch::new();
+        let kernel = run("aggregate/full/kernel", budget_ms, || {
+            sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
+        });
+        kernel.print_throughput(elems, "param_neighbor");
+        rows.push(row(
+            "aggregate/full",
+            "kernel",
+            dim,
+            &kernel,
+            elems,
+            "param_neighbors_per_s",
+            quick,
+        ));
+
+        let mut model_ref = rand_model(dim, 1);
+        let scalar = run("aggregate/full/scalar_ref", budget_ms, || {
+            reference::scale(model_ref.as_mut_slice(), self_w as f32);
+            for r in &received {
+                reference::decode_le_axpy(model_ref.as_mut_slice(), r.weight as f32, r.payload);
+            }
+        });
+        scalar.print_throughput(elems, "param_neighbor");
+        rows.push(row(
+            "aggregate/full",
+            "scalar_ref",
+            dim,
+            &scalar,
+            elems,
+            "param_neighbors_per_s",
+            quick,
+        ));
+        let speedup = scalar.mean_s / kernel.mean_s;
+        println!("aggregate/full: kernel is {speedup:.2}x the scalar reference");
+        speedup
+    };
+    rows.push(Json::obj(vec![
+        ("figure", Json::str("hotpath")),
+        ("bench", Json::str("aggregate/full/speedup")),
+        ("dim", Json::num(dim as f64)),
+        ("neighbors", Json::num(NEIGHBORS as f64)),
+        ("speedup_vs_scalar", Json::num(speedup)),
+        ("meets_2x", Json::Bool(speedup >= 2.0)),
+        ("quick", Json::Bool(quick)),
+    ]));
+
+    // --- per-strategy aggregate throughput (kernel path) ---
+    for spec in ["full:fp16", "quant:64", "subsample:0.1", "topk:0.1", "choco:0.1:0.5"] {
+        let payloads = strategy_payloads(spec, dim, &init);
+        let received: Vec<Received> = payloads
+            .iter()
+            .enumerate()
+            .map(|(s, p)| Received { src: s, weight: w, payload: p })
+            .collect();
+        let mut sh = sharing::from_spec(spec, dim, 0).unwrap();
+        sh.set_init(&init);
+        let mut model = rand_model(dim, 1);
+        let mut scratch = Scratch::new();
+        let name = format!("aggregate/{}", spec.split(':').next().unwrap());
+        let res = run(&name, budget_ms, || {
+            sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
+        });
+        res.print_throughput(elems, "param_neighbor");
+        rows.push(row(&name, "kernel", dim, &res, elems, "param_neighbors_per_s", quick));
+    }
+
+    // --- 2. codec encode / decode throughput (reusable decode buffer,
+    //        as the aggregation hot path uses it) ---
+    {
+        let vals = rand_model(dim, 3).into_vec();
+        let codecs: [(&str, Box<dyn FloatCodec>); 3] = [
+            ("raw_f32", Box::new(RawF32)),
+            ("fp16", Box::new(Fp16)),
+            ("qsgd128", Box::new(Qsgd::new(128, 1))),
+        ];
+        for (name, codec) in &codecs {
+            let enc_name = format!("codec/{name}/encode");
+            let res = run(&enc_name, budget_ms / 2, || {
+                std::hint::black_box(codec.encode(&vals));
+            });
+            res.print_throughput(dim as f64, "elem");
+            rows.push(row(&enc_name, "kernel", dim, &res, dim as f64, "elems_per_s", quick));
+
+            let enc = codec.encode(&vals);
+            let mut buf: Vec<f32> = Vec::new();
+            let dec_name = format!("codec/{name}/decode_into");
+            let res = run(&dec_name, budget_ms / 2, || {
+                codec.decode_into(&enc, dim, &mut buf).unwrap();
+                std::hint::black_box(buf.len());
+            });
+            res.print_throughput(dim as f64, "elem");
+            rows.push(row(&dec_name, "kernel", dim, &res, dim as f64, "elems_per_s", quick));
+        }
+    }
+
+    // --- 3. scheduler round rate: pure-gossip fleet, no engine ---
+    {
+        let sched_dim = 1024usize;
+        let mut rng = Xoshiro256pp::new(42);
+        let g = graph::random_regular(sched_nodes, NEIGHBORS, &mut rng).unwrap();
+        let mw = graph::metropolis_hastings(&g);
+        let mut sched = Scheduler::new(None, 1);
+        for id in 0..sched_nodes {
+            let neighbors: Vec<(usize, f64)> = mw.neighbor_weights(id).collect();
+            sched.add_node(Box::new(GossipSm {
+                id,
+                rounds: sched_rounds,
+                round: 0,
+                self_weight: mw.self_weight(id),
+                neighbors,
+                sharing: sharing::from_spec("full", sched_dim, id as u64).unwrap(),
+                model: rand_model(sched_dim, 77 + id as u64),
+                pending: HashMap::new(),
+                scratch: Scratch::new(),
+            }));
+        }
+        let t = std::time::Instant::now();
+        sched.run().unwrap();
+        let elapsed = t.elapsed().as_secs_f64();
+        let node_rounds = (sched_nodes as u64 * sched_rounds) as f64;
+        println!(
+            "scheduler/round_rate: {sched_nodes} nodes x {sched_rounds} rounds in {elapsed:.3}s \
+             = {:.0} node-rounds/s",
+            node_rounds / elapsed
+        );
+        rows.push(Json::obj(vec![
+            ("figure", Json::str("hotpath")),
+            ("bench", Json::str("scheduler/round_rate")),
+            ("mode", Json::str("kernel")),
+            ("dim", Json::num(sched_dim as f64)),
+            ("nodes", Json::num(sched_nodes as f64)),
+            ("rounds", Json::num(sched_rounds as f64)),
+            ("wall_s", Json::num(elapsed)),
+            ("throughput", Json::num(node_rounds / elapsed)),
+            ("throughput_unit", Json::str("node_rounds_per_s")),
+            ("quick", Json::Bool(quick)),
+        ]));
+    }
+
+    let artifact = Json::Arr(rows).pretty();
+    match std::fs::write("BENCH_hotpath.json", &artifact) {
+        Ok(()) => println!("trajectory written to BENCH_hotpath.json"),
+        Err(e) => {
+            // The artifact IS the point of this harness (the CI job
+            // uploads it as the perf trajectory); failing to write it
+            // must fail the run, not warn-and-green.
+            eprintln!("could not write BENCH_hotpath.json: {e}");
+            std::process::exit(1);
+        }
+    }
+    println!("== hotpath done ==");
+}

@@ -28,7 +28,9 @@ pub mod tcp;
 mod wire;
 
 pub use counters::{Counters, CountersSnapshot};
-pub use wire::{decode_envelope, encode_envelope, wire_size, WIRE_HEADER_BYTES};
+pub use wire::{
+    decode_envelope, encode_envelope, encode_envelope_header, wire_size, WIRE_HEADER_BYTES,
+};
 
 /// Re-exported from [`crate::store`]: the zero-copy payload buffer every
 /// envelope carries (serialize once, share across all recipients).

@@ -11,7 +11,7 @@
 //! delivery per connection).
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -19,7 +19,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::{
-    encode_envelope, Counters, CountersSnapshot, Envelope, Transport,
+    encode_envelope_header, Counters, CountersSnapshot, Envelope, Transport,
     WIRE_HEADER_BYTES,
 };
 
@@ -158,6 +158,37 @@ fn reader_loop(mut stream: TcpStream, inbox: &Inbox, counters: &Counters) -> Res
     }
 }
 
+/// Write `header ‖ payload` as one frame without first copying them
+/// into a contiguous buffer. Vectored writes handle partial progress:
+/// while the header is unfinished both slices are offered, afterwards
+/// the remaining payload is written directly from the shared buffer.
+fn write_frame(stream: &mut TcpStream, header: &[u8], payload: &[u8]) -> std::io::Result<()> {
+    let total = header.len() + payload.len();
+    let mut written = 0usize;
+    while written < total {
+        let res = if written < header.len() {
+            stream.write_vectored(&[IoSlice::new(&header[written..]), IoSlice::new(payload)])
+        } else {
+            stream.write(&payload[written - header.len()..])
+        };
+        let n = match res {
+            Ok(n) => n,
+            // Retry EINTR like write_all did — aborting here would leave
+            // a half-written frame and desync the peer's reader.
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "connection closed mid-frame",
+            ));
+        }
+        written += n;
+    }
+    Ok(())
+}
+
 /// Returns Ok(true) on EOF before any byte, Ok(false) when filled.
 fn read_exact_or_eof(stream: &mut TcpStream, buf: &mut [u8]) -> Result<bool> {
     let mut read = 0usize;
@@ -183,7 +214,12 @@ impl Transport for Arc<TcpTransport> {
         if env.dst >= self.peers.len() {
             bail!("send to unknown node {}", env.dst);
         }
-        let bytes = encode_envelope(&env);
+        // Header-only encode + vectored write: the payload is the
+        // broadcast-shared `Arc<[u8]>`, and it goes on the socket
+        // straight from that buffer instead of being copied into a
+        // fresh per-recipient frame first.
+        let header = encode_envelope_header(&env);
+        let wire_bytes = WIRE_HEADER_BYTES + env.payload.len();
         let mut outbound = self.outbound.lock().unwrap();
         let stream = match outbound.entry(env.dst) {
             std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
@@ -194,8 +230,8 @@ impl Transport for Arc<TcpTransport> {
                 e.insert(s)
             }
         };
-        stream.write_all(&bytes)?;
-        self.counters.on_send(bytes.len());
+        write_frame(stream, &header, &env.payload)?;
+        self.counters.on_send(wire_bytes);
         Ok(())
     }
 
@@ -287,6 +323,33 @@ mod tests {
         assert_eq!(got.payload.len(), 200_000);
         assert_eq!(nodes[0].counters().bytes_sent, expect);
         assert_eq!(nodes[1].counters().bytes_recv, expect);
+        for n in &nodes {
+            n.shutdown();
+        }
+    }
+
+    #[test]
+    fn shared_payload_fanout_arrives_intact() {
+        // One Arc-backed payload, two recipients: the vectored send path
+        // writes from the shared buffer, and both frames decode whole.
+        let nodes = mesh(3);
+        let payload: crate::communication::Payload = vec![9u8; 50_000].into();
+        for dst in [1usize, 2] {
+            nodes[0]
+                .send(Envelope {
+                    src: 0,
+                    dst,
+                    round: 1,
+                    kind: MsgKind::Model,
+                    sent_at_s: 0.0,
+                    payload: payload.clone(),
+                })
+                .unwrap();
+        }
+        for n in &nodes[1..] {
+            let got = n.recv().unwrap().unwrap();
+            assert_eq!(got.payload.as_slice(), payload.as_slice());
+        }
         for n in &nodes {
             n.shutdown();
         }

@@ -33,17 +33,28 @@ pub fn wire_size(env: &Envelope) -> usize {
     WIRE_HEADER_BYTES + env.payload.len()
 }
 
-/// Encode to a fresh buffer.
+/// Encode just the fixed header. The payload rides separately: the TCP
+/// transport writes `header ‖ payload` with a vectored write, so the
+/// broadcast-shared `Arc<[u8]>` payload is never copied into a
+/// per-recipient frame buffer (at degree *k* that copy was *k* full
+/// serialized models per round).
+pub fn encode_envelope_header(env: &Envelope) -> [u8; WIRE_HEADER_BYTES] {
+    let mut out = [0u8; WIRE_HEADER_BYTES];
+    out[0..2].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out[2] = WIRE_VERSION;
+    out[3] = env.kind as u8;
+    out[4..8].copy_from_slice(&(env.src as u32).to_le_bytes());
+    out[8..12].copy_from_slice(&(env.dst as u32).to_le_bytes());
+    out[12..20].copy_from_slice(&env.round.to_le_bytes());
+    out[20..28].copy_from_slice(&env.sent_at_s.to_le_bytes());
+    out[28..32].copy_from_slice(&(env.payload.len() as u32).to_le_bytes());
+    out
+}
+
+/// Encode to a fresh buffer (tests, transports without vectored I/O).
 pub fn encode_envelope(env: &Envelope) -> Vec<u8> {
     let mut out = Vec::with_capacity(wire_size(env));
-    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
-    out.push(WIRE_VERSION);
-    out.push(env.kind as u8);
-    out.extend_from_slice(&(env.src as u32).to_le_bytes());
-    out.extend_from_slice(&(env.dst as u32).to_le_bytes());
-    out.extend_from_slice(&env.round.to_le_bytes());
-    out.extend_from_slice(&env.sent_at_s.to_le_bytes());
-    out.extend_from_slice(&(env.payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&encode_envelope_header(env));
     out.extend_from_slice(&env.payload);
     out
 }
@@ -137,5 +148,14 @@ mod tests {
     fn header_size_constant_matches() {
         let e = Envelope { payload: crate::communication::Payload::empty(), ..env() };
         assert_eq!(encode_envelope(&e).len(), WIRE_HEADER_BYTES);
+    }
+
+    #[test]
+    fn header_only_encode_is_frame_prefix() {
+        let e = env();
+        let frame = encode_envelope(&e);
+        let header = encode_envelope_header(&e);
+        assert_eq!(&frame[..WIRE_HEADER_BYTES], &header[..]);
+        assert_eq!(&frame[WIRE_HEADER_BYTES..], &e.payload[..]);
     }
 }

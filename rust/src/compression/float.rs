@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::kernels::{decode_le_axpy, decode_le_axpy2, decode_le_into};
 use crate::rng::{mix_seed, Xoshiro256pp};
 use crate::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
 
@@ -24,13 +25,41 @@ impl FloatCodec for RawF32 {
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        self.decode_into(bytes, n, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], n: usize, out: &mut Vec<f32>) -> Result<()> {
         if bytes.len() != n * 4 {
             bail!("raw_f32: expected {} bytes, got {}", n * 4, bytes.len());
         }
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+        decode_le_into(out, bytes);
+        Ok(())
+    }
+
+    fn decode_axpy(
+        &self,
+        bytes: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        _scratch: &mut Vec<f32>,
+    ) -> Result<()> {
+        // Fully fused: wire bytes -> weighted accumulate, no staging.
+        decode_le_axpy(acc, alpha, bytes)
+    }
+
+    fn decode_axpy2(
+        &self,
+        b1: &[u8],
+        a1: f32,
+        b2: &[u8],
+        a2: f32,
+        acc: &mut [f32],
+        _scratch: &mut Vec<f32>,
+    ) -> Result<()> {
+        // Pairwise fused: one accumulator pass for two payloads.
+        decode_le_axpy2(acc, a1, b1, a2, b2)
     }
 
     fn bytes_per_element(&self) -> f64 {
@@ -55,13 +84,23 @@ impl FloatCodec for Fp16 {
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        self.decode_into(bytes, n, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], n: usize, out: &mut Vec<f32>) -> Result<()> {
         if bytes.len() != n * 2 {
             bail!("fp16: expected {} bytes, got {}", n * 2, bytes.len());
         }
-        Ok(bytes
-            .chunks_exact(2)
-            .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])))
-            .collect())
+        out.clear();
+        out.reserve(n);
+        out.extend(
+            bytes
+                .chunks_exact(2)
+                .map(|c| f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]))),
+        );
+        Ok(())
     }
 
     fn bytes_per_element(&self) -> f64 {
@@ -133,28 +172,35 @@ impl FloatCodec for Qsgd {
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n);
+        self.decode_into(bytes, n, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], n: usize, out: &mut Vec<f32>) -> Result<()> {
         if bytes.len() != 4 + n {
             bail!("qsgd: expected {} bytes, got {}", 4 + n, bytes.len());
         }
         let linf = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
         let s = (self.levels - 1) as f32;
         let body = &bytes[4..];
+        out.clear();
+        out.reserve(n);
         if linf == 0.0 {
-            return Ok(vec![0.0; n]);
+            out.extend(std::iter::repeat(0.0f32).take(n));
+        } else if self.levels <= 128 {
+            out.extend(body.iter().map(|&b| {
+                let sign = if b & 0x80 != 0 { -1.0 } else { 1.0 };
+                let level = (b & 0x7F) as f32;
+                sign * linf * level / s
+            }));
+        } else {
+            out.extend(body.iter().map(|&b| {
+                let level = b as f32;
+                (level / s * 2.0 - 1.0) * linf
+            }));
         }
-        Ok(body
-            .iter()
-            .map(|&b| {
-                if self.levels <= 128 {
-                    let sign = if b & 0x80 != 0 { -1.0 } else { 1.0 };
-                    let level = (b & 0x7F) as f32;
-                    sign * linf * level / s
-                } else {
-                    let level = b as f32;
-                    (level / s * 2.0 - 1.0) * linf
-                }
-            })
-            .collect())
+        Ok(())
     }
 
     fn bytes_per_element(&self) -> f64 {

@@ -13,22 +13,33 @@ impl IndexCodec for VarintDelta {
     }
 
     fn encode(&self, indices: &[u32]) -> Vec<u8> {
-        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "unsorted indices");
         let mut out = Vec::with_capacity(indices.len() * 2 + 5);
-        write_varint(indices.len() as u64, &mut out);
-        let mut prev = 0u32;
-        for (i, &x) in indices.iter().enumerate() {
-            let delta = if i == 0 { x } else { x - prev - 1 };
-            write_varint(delta as u64, &mut out);
-            prev = x;
-        }
+        self.encode_into(indices, &mut out);
         out
     }
 
+    fn encode_into(&self, indices: &[u32], out: &mut Vec<u8>) {
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "unsorted indices");
+        write_varint(indices.len() as u64, out);
+        let mut prev = 0u32;
+        for (i, &x) in indices.iter().enumerate() {
+            let delta = if i == 0 { x } else { x - prev - 1 };
+            write_varint(delta as u64, out);
+            prev = x;
+        }
+    }
+
     fn decode(&self, bytes: &[u8]) -> Result<Vec<u32>> {
+        let mut out = Vec::new();
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut Vec<u32>) -> Result<()> {
         let mut pos = 0usize;
         let count = read_varint(bytes, &mut pos)? as usize;
-        let mut out = Vec::with_capacity(count);
+        out.clear();
+        out.reserve(count.min(bytes.len().saturating_sub(pos) + 1));
         let mut prev = 0u32;
         for i in 0..count {
             let delta = read_varint(bytes, &mut pos)? as u32;
@@ -39,7 +50,7 @@ impl IndexCodec for VarintDelta {
         if pos != bytes.len() {
             bail!("varint_delta: {} trailing bytes", bytes.len() - pos);
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -54,15 +65,27 @@ impl IndexCodec for Bitmask {
     }
 
     fn encode(&self, indices: &[u32]) -> Vec<u8> {
-        let mut out = vec![0u8; (self.dim + 7) / 8];
-        for &i in indices {
-            debug_assert!((i as usize) < self.dim);
-            out[i as usize / 8] |= 1 << (i % 8);
-        }
+        let mut out = Vec::with_capacity((self.dim + 7) / 8);
+        self.encode_into(indices, &mut out);
         out
     }
 
+    fn encode_into(&self, indices: &[u32], out: &mut Vec<u8>) {
+        let base = out.len();
+        out.resize(base + (self.dim + 7) / 8, 0);
+        for &i in indices {
+            debug_assert!((i as usize) < self.dim);
+            out[base + i as usize / 8] |= 1 << (i % 8);
+        }
+    }
+
     fn decode(&self, bytes: &[u8]) -> Result<Vec<u32>> {
+        let mut out = Vec::new();
+        self.decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    fn decode_into(&self, bytes: &[u8], out: &mut Vec<u32>) -> Result<()> {
         if bytes.len() != (self.dim + 7) / 8 {
             bail!(
                 "bitmask: expected {} bytes for dim {}, got {}",
@@ -71,7 +94,7 @@ impl IndexCodec for Bitmask {
                 bytes.len()
             );
         }
-        let mut out = Vec::new();
+        out.clear();
         for (byte_i, &b) in bytes.iter().enumerate() {
             let mut rem = b;
             while rem != 0 {
@@ -83,36 +106,54 @@ impl IndexCodec for Bitmask {
                 rem &= rem - 1;
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
 /// Adaptive index encoding: pick varint-delta or bitmask, whichever is
 /// smaller, with a 1-byte tag. This is what the sparse sharers use.
 pub fn encode_indices_best(indices: &[u32], dim: usize) -> Vec<u8> {
-    let varint = VarintDelta.encode(indices);
+    let mut out = Vec::new();
+    encode_indices_best_into(indices, dim, &mut out);
+    out
+}
+
+/// [`encode_indices_best`] into a reusable buffer (cleared + refilled):
+/// encodes varint-delta first, and replaces it with the bitmask when
+/// that is smaller — same tag and byte output, no fresh allocation once
+/// the buffer has capacity.
+pub fn encode_indices_best_into(indices: &[u32], dim: usize, out: &mut Vec<u8>) {
+    out.clear();
+    // Worst-case varint size (tag + count + 5 B/index): reserving it up
+    // front pins the buffer's capacity after the first call, so a
+    // reused scratch buffer never regrows on later rounds whose varint
+    // block happens to be a few bytes longer.
+    out.reserve(6 + 5 * indices.len());
+    out.push(0u8);
+    VarintDelta.encode_into(indices, out);
     let mask_len = (dim + 7) / 8;
-    if varint.len() <= mask_len {
-        let mut out = Vec::with_capacity(varint.len() + 1);
-        out.push(0u8);
-        out.extend_from_slice(&varint);
-        out
-    } else {
-        let mut out = Vec::with_capacity(mask_len + 1);
+    if out.len() - 1 > mask_len {
+        out.clear();
         out.push(1u8);
-        out.extend_from_slice(&Bitmask { dim }.encode(indices));
-        out
+        Bitmask { dim }.encode_into(indices, out);
     }
 }
 
 /// Inverse of [`encode_indices_best`].
 pub fn decode_indices_best(bytes: &[u8], dim: usize) -> Result<Vec<u32>> {
+    let mut out = Vec::new();
+    decode_indices_best_into(bytes, dim, &mut out)?;
+    Ok(out)
+}
+
+/// [`decode_indices_best`] into a reusable buffer (cleared + refilled).
+pub fn decode_indices_best_into(bytes: &[u8], dim: usize, out: &mut Vec<u32>) -> Result<()> {
     let Some((&tag, body)) = bytes.split_first() else {
         bail!("empty index payload");
     };
     match tag {
-        0 => VarintDelta.decode(body),
-        1 => Bitmask { dim }.decode(body),
+        0 => VarintDelta.decode_into(body, out),
+        1 => Bitmask { dim }.decode_into(body, out),
         t => bail!("unknown index codec tag {t}"),
     }
 }

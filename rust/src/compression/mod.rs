@@ -19,6 +19,54 @@ pub trait FloatCodec: Send + Sync {
     /// Decode; `n` is the expected element count (codecs may or may not
     /// need it, but the caller always knows it).
     fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>>;
+    /// Decode into a reusable buffer (cleared + refilled) so the hot
+    /// path allocates nothing once the buffer has capacity. Values are
+    /// bit-identical to [`decode`](FloatCodec::decode); every in-crate
+    /// codec overrides the allocating default.
+    fn decode_into(&self, bytes: &[u8], n: usize, out: &mut Vec<f32>) -> anyhow::Result<()> {
+        *out = self.decode(bytes, n)?;
+        Ok(())
+    }
+    /// Fused decode + weighted accumulate:
+    /// `acc[i] += alpha * decode(bytes)[i]`. The default stages through
+    /// `scratch` (one reusable buffer, no fresh allocation); [`RawF32`]
+    /// overrides with the fully fused [`crate::kernels::decode_le_axpy`]
+    /// that never touches `scratch` at all. This is the single dense
+    /// aggregation entry point — it replaces the per-strategy
+    /// decode-then-fold loops *and* the `codec.name() == "raw_f32"`
+    /// string-compare dispatch full sharing used to carry.
+    fn decode_axpy(
+        &self,
+        bytes: &[u8],
+        alpha: f32,
+        acc: &mut [f32],
+        scratch: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        self.decode_into(bytes, acc.len(), scratch)?;
+        crate::kernels::axpy(acc, alpha, scratch);
+        Ok(())
+    }
+    /// Fold **two** payloads in one call:
+    /// `decode_axpy(b1, a1)` then `decode_axpy(b2, a2)` per element. The
+    /// default is literally that sequential pair, so every codec stays
+    /// bit-identical; [`RawF32`] overrides with the pairwise-fused
+    /// [`crate::kernels::decode_le_axpy2`], which makes one accumulator
+    /// pass instead of two — the dominant traffic saving for dense
+    /// aggregation at degree ≥ 2. (RawF32 validates both lengths before
+    /// folding either; an aggregation error aborts the run, so the
+    /// partial-fold difference on malformed input is unobservable.)
+    fn decode_axpy2(
+        &self,
+        b1: &[u8],
+        a1: f32,
+        b2: &[u8],
+        a2: f32,
+        acc: &mut [f32],
+        scratch: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        self.decode_axpy(b1, a1, acc, scratch)?;
+        self.decode_axpy(b2, a2, acc, scratch)
+    }
     /// Wire bytes per element (fractional allowed), for cost estimation.
     fn bytes_per_element(&self) -> f64;
 }
@@ -27,7 +75,18 @@ pub trait FloatCodec: Send + Sync {
 pub trait IndexCodec: Send + Sync {
     fn name(&self) -> &'static str;
     fn encode(&self, indices: &[u32]) -> Vec<u8>;
+    /// Append the encoding to `out` (no fresh allocation); the default
+    /// delegates to [`encode`](IndexCodec::encode).
+    fn encode_into(&self, indices: &[u32], out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.encode(indices));
+    }
     fn decode(&self, bytes: &[u8]) -> anyhow::Result<Vec<u32>>;
+    /// Decode into a reusable buffer (cleared + refilled); the default
+    /// delegates to [`decode`](IndexCodec::decode).
+    fn decode_into(&self, bytes: &[u8], out: &mut Vec<u32>) -> anyhow::Result<()> {
+        *out = self.decode(bytes)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -124,6 +183,58 @@ mod tests {
         assert_eq!(roundtrip, dense);
         let s = encode_indices_best(&sparse, dim);
         assert_eq!(decode_indices_best(&s, dim).unwrap(), sparse);
+    }
+
+    #[test]
+    fn decode_into_matches_decode_and_reuses_capacity() {
+        let v = sample_values(1000, 9);
+        let codecs: [Box<dyn FloatCodec>; 3] =
+            [Box::new(RawF32), Box::new(Fp16), Box::new(Qsgd::new(64, 5))];
+        for c in &codecs {
+            let enc = c.encode(&v);
+            let fresh = c.decode(&enc, v.len()).unwrap();
+            let mut buf = vec![0.0f32; 7]; // dirty, wrong-sized
+            c.decode_into(&enc, v.len(), &mut buf).unwrap();
+            assert_eq!(buf, fresh, "{}", c.name());
+            let cap = buf.capacity();
+            c.decode_into(&enc, v.len(), &mut buf).unwrap();
+            assert_eq!(buf.capacity(), cap, "{}: steady-state decode grew", c.name());
+        }
+    }
+
+    #[test]
+    fn decode_axpy_matches_decode_then_fold() {
+        let v = sample_values(333, 10); // odd length crosses chunk tails
+        let base = sample_values(333, 11);
+        let codecs: [Box<dyn FloatCodec>; 3] =
+            [Box::new(RawF32), Box::new(Fp16), Box::new(Qsgd::new(128, 6))];
+        for c in &codecs {
+            let enc = c.encode(&v);
+            let mut fused = base.clone();
+            let mut scratch = Vec::new();
+            c.decode_axpy(&enc, 0.25, &mut fused, &mut scratch).unwrap();
+            let mut folded = base.clone();
+            let dec = c.decode(&enc, v.len()).unwrap();
+            for (a, b) in folded.iter_mut().zip(dec.iter()) {
+                *a += 0.25 * b;
+            }
+            assert_eq!(fused, folded, "{}", c.name());
+            // Wrong-length payloads surface as errors, not panics.
+            assert!(c.decode_axpy(&enc[..enc.len() - 1], 0.25, &mut fused, &mut scratch).is_err());
+        }
+    }
+
+    #[test]
+    fn index_into_variants_match() {
+        let dim = 10_000;
+        for idx in [vec![5u32, 600, 9000], (0..9000u32).collect::<Vec<_>>()] {
+            let mut enc = vec![0xFFu8; 3]; // dirty buffer
+            encode_indices_best_into(&idx, dim, &mut enc);
+            assert_eq!(enc, encode_indices_best(&idx, dim));
+            let mut dec = vec![7u32];
+            decode_indices_best_into(&enc, dim, &mut dec).unwrap();
+            assert_eq!(dec, idx);
+        }
     }
 
     #[test]

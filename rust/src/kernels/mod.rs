@@ -1,0 +1,498 @@
+//! Fused, allocation-free primitives for the round hot path.
+//!
+//! Every aggregation in the sharing layer reduces to a handful of dense
+//! vector operations: scale the local model by its self-weight, fold in
+//! each neighbor's payload with its mixing weight, scatter sparse
+//! updates. Before this module each strategy carried its own scalar
+//! loop, and the dense paths decoded every neighbor payload into a
+//! fresh `Vec<f32>` first — one 4·P-byte allocation plus an extra
+//! memory pass per neighbor per round. The kernels here are
+//! *chunk-unrolled* (fixed 8-lane bodies over `chunks_exact`, scalar
+//! tail) so the compiler can auto-vectorize them without bounds checks,
+//! and the fused [`decode_le_axpy`] goes straight from wire bytes to
+//! the weighted accumulator with no intermediate vector at all.
+//!
+//! **Bit-identity is a hard contract.** Each kernel performs exactly
+//! the per-element operation of the scalar loop it replaced, in the
+//! same element order, with the same rounding — unrolling only splits
+//! *independent* lanes, never reassociates an element's arithmetic. The
+//! scalar originals are retained in [`reference`] and proptests pin
+//! every kernel bit-identical to them across odd tail lengths and chunk
+//! boundaries (`rust/tests/proptests.rs`), which is what keeps the
+//! shared-vs-owned and worker-count equivalence tests green.
+//!
+//! The [`Scratch`] arena supplies the reusable buffers (decode floats,
+//! sparse index/value staging, f64 accumulator, payload bytes) that
+//! make steady-state rounds allocation-free; every node owns one and
+//! threads it through [`crate::sharing::Sharing::aggregate_with`] /
+//! [`outgoing_with`](crate::sharing::Sharing::outgoing_with). See
+//! `docs/PERFORMANCE.md` for the hot-path map and the per-round
+//! allocation budget, and `benches/hotpath.rs` for the regression
+//! harness that tracks kernel-vs-reference throughput in
+//! `BENCH_hotpath.json`.
+
+use anyhow::{bail, Result};
+
+/// Unroll width: 8 f32 lanes (one AVX2 register, two NEON registers).
+const LANES: usize = 8;
+
+/// `x[i] *= alpha`
+pub fn scale(x: &mut [f32], alpha: f32) {
+    let mut chunks = x.chunks_exact_mut(LANES);
+    for c in &mut chunks {
+        for v in c.iter_mut() {
+            *v *= alpha;
+        }
+    }
+    for v in chunks.into_remainder() {
+        *v *= alpha;
+    }
+}
+
+/// `acc[i] += alpha * x[i]`
+pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut b = x.chunks_exact(LANES);
+    for (ca, cb) in (&mut a).zip(&mut b) {
+        for i in 0..LANES {
+            ca[i] += alpha * cb[i];
+        }
+    }
+    for (va, vb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *va += alpha * vb;
+    }
+}
+
+/// `acc[i] += alpha * (x[i] - y[i])` — the Choco-SGD gossip step on a
+/// pair of public estimates.
+pub fn diff_axpy(acc: &mut [f32], alpha: f32, x: &[f32], y: &[f32]) {
+    assert_eq!(acc.len(), x.len());
+    assert_eq!(acc.len(), y.len());
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut bx = x.chunks_exact(LANES);
+    let mut by = y.chunks_exact(LANES);
+    for ((ca, cx), cy) in (&mut a).zip(&mut bx).zip(&mut by) {
+        for i in 0..LANES {
+            ca[i] += alpha * (cx[i] - cy[i]);
+        }
+    }
+    for ((va, vx), vy) in a
+        .into_remainder()
+        .iter_mut()
+        .zip(bx.remainder())
+        .zip(by.remainder())
+    {
+        *va += alpha * (vx - vy);
+    }
+}
+
+/// Fused little-endian f32 decode + weighted accumulate:
+/// `acc[i] += alpha * f32::from_le_bytes(bytes[4i..4i+4])`, with no
+/// intermediate vector. This is the dense-aggregation workhorse — one
+/// pass over the payload instead of decode-then-fold.
+pub fn decode_le_axpy(acc: &mut [f32], alpha: f32, bytes: &[u8]) -> Result<()> {
+    if bytes.len() != acc.len() * 4 {
+        bail!("raw_f32: expected {} bytes, got {}", acc.len() * 4, bytes.len());
+    }
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut b = bytes.chunks_exact(4 * LANES);
+    for (ca, cb) in (&mut a).zip(&mut b) {
+        for i in 0..LANES {
+            let v = f32::from_le_bytes([cb[4 * i], cb[4 * i + 1], cb[4 * i + 2], cb[4 * i + 3]]);
+            ca[i] += alpha * v;
+        }
+    }
+    for (va, cb) in a.into_remainder().iter_mut().zip(b.remainder().chunks_exact(4)) {
+        *va += alpha * f32::from_le_bytes([cb[0], cb[1], cb[2], cb[3]]);
+    }
+    Ok(())
+}
+
+/// Fused decode + weighted accumulate of **two** payloads in one
+/// accumulator pass:
+/// `acc[i] = (acc[i] + a1·v1[i]) + a2·v2[i]` — per element exactly the
+/// sequence [`decode_le_axpy`] twice (two sequential f32 additions, no
+/// reassociation, no FMA contraction), but a single traversal of `acc`,
+/// which halves the dominant accumulator read/write traffic for dense
+/// aggregation at degree ≥ 2. Both payload lengths are validated before
+/// anything folds (the sequential pair folds the first payload before
+/// seeing the second's length; the difference is unobservable because
+/// an aggregation error aborts the run).
+pub fn decode_le_axpy2(acc: &mut [f32], a1: f32, b1: &[u8], a2: f32, b2: &[u8]) -> Result<()> {
+    if b1.len() != acc.len() * 4 {
+        bail!("raw_f32: expected {} bytes, got {}", acc.len() * 4, b1.len());
+    }
+    if b2.len() != acc.len() * 4 {
+        bail!("raw_f32: expected {} bytes, got {}", acc.len() * 4, b2.len());
+    }
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut c1 = b1.chunks_exact(4 * LANES);
+    let mut c2 = b2.chunks_exact(4 * LANES);
+    for ((ca, p1), p2) in (&mut a).zip(&mut c1).zip(&mut c2) {
+        for i in 0..LANES {
+            let v1 = f32::from_le_bytes([p1[4 * i], p1[4 * i + 1], p1[4 * i + 2], p1[4 * i + 3]]);
+            let v2 = f32::from_le_bytes([p2[4 * i], p2[4 * i + 1], p2[4 * i + 2], p2[4 * i + 3]]);
+            ca[i] = (ca[i] + a1 * v1) + a2 * v2;
+        }
+    }
+    for ((va, p1), p2) in a
+        .into_remainder()
+        .iter_mut()
+        .zip(c1.remainder().chunks_exact(4))
+        .zip(c2.remainder().chunks_exact(4))
+    {
+        let v1 = f32::from_le_bytes([p1[0], p1[1], p1[2], p1[3]]);
+        let v2 = f32::from_le_bytes([p2[0], p2[1], p2[2], p2[3]]);
+        *va = (*va + a1 * v1) + a2 * v2;
+    }
+    Ok(())
+}
+
+/// Little-endian f32 decode into a reusable buffer (cleared + refilled;
+/// no allocation once `out` has capacity).
+pub fn decode_le_into(out: &mut Vec<f32>, bytes: &[u8]) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    out.clear();
+    out.reserve(bytes.len() / 4);
+    out.extend(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+}
+
+/// Fused decode + widening accumulate for the secure-aggregation path:
+/// `acc[i] += w * (decoded f32 as f64)`. Accumulation stays in f64, in
+/// element order, exactly as the scalar loop it replaced.
+pub fn decode_le_axpy_widen(acc: &mut [f64], w: f64, bytes: &[u8]) -> Result<()> {
+    if bytes.len() != acc.len() * 4 {
+        bail!("raw_f32: expected {} bytes, got {}", acc.len() * 4, bytes.len());
+    }
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut b = bytes.chunks_exact(4 * LANES);
+    for (ca, cb) in (&mut a).zip(&mut b) {
+        for i in 0..LANES {
+            let v = f32::from_le_bytes([cb[4 * i], cb[4 * i + 1], cb[4 * i + 2], cb[4 * i + 3]]);
+            ca[i] += w * v as f64;
+        }
+    }
+    for (va, cb) in a.into_remainder().iter_mut().zip(b.remainder().chunks_exact(4)) {
+        *va += w * f32::from_le_bytes([cb[0], cb[1], cb[2], cb[3]]) as f64;
+    }
+    Ok(())
+}
+
+/// `out = src[i] as f64 * w` into a reusable f64 buffer (the secure
+/// path's accumulator initialization: self-weighted own parameters).
+pub fn widen_scale(out: &mut Vec<f64>, src: &[f32], w: f64) {
+    out.clear();
+    out.reserve(src.len());
+    out.extend(src.iter().map(|&v| v as f64 * w));
+}
+
+/// `dst[i] = src[i] as f32` — narrow the f64 accumulator back into the
+/// parameter vector.
+pub fn narrow(dst: &mut [f32], src: &[f64]) {
+    assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = *s as f32;
+    }
+}
+
+/// Sparse weighted accumulate: `acc[idx[j]] += alpha * vals[j]`.
+/// Indices must be in-bounds (the sparse decoders guarantee it for
+/// well-formed payloads; out-of-bounds panics, as the scalar loop did).
+pub fn scatter_axpy(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32]) {
+    assert_eq!(indices.len(), vals.len());
+    for (&i, &v) in indices.iter().zip(vals.iter()) {
+        acc[i as usize] += alpha * v;
+    }
+}
+
+/// Sparse absolute-value blend: `acc[idx[j]] += alpha * (vals[j] -
+/// own[idx[j]])` — the missing-coordinate-preserving aggregation rule
+/// shared by the subsample and top-k sparsifiers, against a snapshot of
+/// the receiver's pre-aggregation values.
+pub fn scatter_blend(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32], own: &[f32]) {
+    assert_eq!(indices.len(), vals.len());
+    assert_eq!(acc.len(), own.len());
+    for (&i, &v) in indices.iter().zip(vals.iter()) {
+        let i = i as usize;
+        acc[i] += alpha * (v - own[i]);
+    }
+}
+
+pub mod reference {
+    //! Retained scalar originals of every kernel, kept for two jobs:
+    //! the bit-identity proptests pin each kernel to its reference
+    //! across odd tails and chunk boundaries, and `benches/hotpath.rs`
+    //! measures the kernel-vs-reference speedup that
+    //! `BENCH_hotpath.json` tracks per PR. Not called on any hot path.
+
+    /// Scalar `x[i] *= alpha`.
+    pub fn scale(x: &mut [f32], alpha: f32) {
+        for v in x.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Scalar `acc[i] += alpha * x[i]`.
+    pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
+        assert_eq!(acc.len(), x.len());
+        for (a, b) in acc.iter_mut().zip(x.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Scalar `acc[i] += alpha * (x[i] - y[i])`.
+    pub fn diff_axpy(acc: &mut [f32], alpha: f32, x: &[f32], y: &[f32]) {
+        assert_eq!(acc.len(), x.len());
+        assert_eq!(acc.len(), y.len());
+        for i in 0..acc.len() {
+            acc[i] += alpha * (x[i] - y[i]);
+        }
+    }
+
+    /// The pre-kernel dense fold: decode the payload into a **fresh**
+    /// vector, then accumulate — one allocation and one extra pass per
+    /// neighbor per round. This is the baseline the hotpath bench's
+    /// `speedup_vs_scalar` compares against.
+    pub fn decode_le_axpy(acc: &mut [f32], alpha: f32, bytes: &[u8]) {
+        assert_eq!(bytes.len(), acc.len() * 4);
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        for (a, v) in acc.iter_mut().zip(vals.iter()) {
+            *a += alpha * v;
+        }
+    }
+
+    /// Scalar widening fold of a raw-f32 payload into an f64 accumulator.
+    pub fn decode_le_axpy_widen(acc: &mut [f64], w: f64, bytes: &[u8]) {
+        assert_eq!(bytes.len(), acc.len() * 4);
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        for (a, v) in acc.iter_mut().zip(vals.iter()) {
+            *a += w * *v as f64;
+        }
+    }
+
+    /// Scalar `acc[idx[j]] += alpha * vals[j]`.
+    pub fn scatter_axpy(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32]) {
+        for (&i, &v) in indices.iter().zip(vals.iter()) {
+            acc[i as usize] += alpha * v;
+        }
+    }
+
+    /// Scalar sparse absolute-value blend against an own-value snapshot.
+    pub fn scatter_blend(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32], own: &[f32]) {
+        for (&i, &v) in indices.iter().zip(vals.iter()) {
+            let i = i as usize;
+            acc[i] += alpha * (v - own[i]);
+        }
+    }
+}
+
+/// Per-node scratch arena: every reusable hot-path buffer in one place.
+///
+/// A node allocates one `Scratch` at construction and threads it
+/// through every `outgoing_with` / `aggregate_with` call; after the
+/// first round warms the buffers up to the model dimension, steady-state
+/// rounds reallocate nothing (pinned by the capacity-signature test in
+/// `rust/tests/hotpath_alloc.rs`). Buffers are plain public fields —
+/// borrow them individually so disjoint field borrows coexist.
+///
+/// The only per-round allocations left after the arena are the outgoing
+/// payload itself (it becomes a shared `Arc<[u8]>`
+/// [`crate::store::Payload`], which by construction cannot be reused)
+/// and O(k) sparse-selection output; `docs/PERFORMANCE.md` lists the
+/// full budget.
+#[derive(Default)]
+pub struct Scratch {
+    /// Dense decode buffer (float codecs, staged neighbor values).
+    pub dense: Vec<f32>,
+    /// Second dense buffer: diff vectors (Choco/TopK change metric),
+    /// own-value snapshots (sparse absolute aggregation).
+    pub dense2: Vec<f32>,
+    /// Top-k selection buffer (coordinate magnitudes).
+    pub mags: Vec<f32>,
+    /// Sparse message coordinate staging.
+    pub indices: Vec<u32>,
+    /// Sparse message value staging.
+    pub values: Vec<f32>,
+    /// f64 accumulator for the secure-aggregation fold.
+    pub doubles: Vec<f64>,
+    /// Byte staging (index-codec blocks inside sparse payload builds).
+    pub bytes: Vec<u8>,
+}
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch::default()
+    }
+
+    /// Capacities of every buffer, in declaration order. The
+    /// allocation-freeze test records this after a warm-up round and
+    /// asserts it never changes again: a stable signature means no
+    /// hot-path buffer reallocated.
+    pub fn capacity_signature(&self) -> [usize; 7] {
+        [
+            self.dense.capacity(),
+            self.dense2.capacity(),
+            self.mags.capacity(),
+            self.indices.capacity(),
+            self.values.capacity(),
+            self.doubles.capacity(),
+            self.bytes.capacity(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn vals(rng: &mut Xoshiro256pp, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    /// Lengths that straddle the unroll width: empty, sub-chunk, exact
+    /// chunks, and every off-by-one around the boundary.
+    const EDGE_LENS: [usize; 10] = [0, 1, 3, 7, 8, 9, 15, 16, 17, 100];
+
+    #[test]
+    fn scale_axpy_match_reference_on_edge_lengths() {
+        for (case, &n) in EDGE_LENS.iter().enumerate() {
+            let mut rng = Xoshiro256pp::new(100 + case as u64);
+            let base = vals(&mut rng, n);
+            let x = vals(&mut rng, n);
+            let (mut a, mut b) = (base.clone(), base.clone());
+            scale(&mut a, 0.37);
+            reference::scale(&mut b, 0.37);
+            assert_eq!(a, b, "scale n={n}");
+            axpy(&mut a, -1.25, &x);
+            reference::axpy(&mut b, -1.25, &x);
+            assert_eq!(a, b, "axpy n={n}");
+        }
+    }
+
+    #[test]
+    fn decode_le_axpy_matches_reference_and_checks_length() {
+        for (case, &n) in EDGE_LENS.iter().enumerate() {
+            let mut rng = Xoshiro256pp::new(200 + case as u64);
+            let base = vals(&mut rng, n);
+            let payload: Vec<u8> = vals(&mut rng, n)
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect();
+            let (mut a, mut b) = (base.clone(), base.clone());
+            decode_le_axpy(&mut a, 0.61, &payload).unwrap();
+            reference::decode_le_axpy(&mut b, 0.61, &payload);
+            assert_eq!(a, b, "n={n}");
+        }
+        let mut acc = vec![0.0f32; 4];
+        assert!(decode_le_axpy(&mut acc, 1.0, &[0u8; 15]).is_err());
+    }
+
+    #[test]
+    fn decode_le_axpy2_equals_sequential_pair() {
+        for (case, &n) in EDGE_LENS.iter().enumerate() {
+            let mut rng = Xoshiro256pp::new(300 + case as u64);
+            let base = vals(&mut rng, n);
+            let p1: Vec<u8> = vals(&mut rng, n).iter().flat_map(|v| v.to_le_bytes()).collect();
+            let p2: Vec<u8> = vals(&mut rng, n).iter().flat_map(|v| v.to_le_bytes()).collect();
+            let (mut a, mut b) = (base.clone(), base);
+            decode_le_axpy2(&mut a, 0.3, &p1, -0.7, &p2).unwrap();
+            decode_le_axpy(&mut b, 0.3, &p1).unwrap();
+            decode_le_axpy(&mut b, -0.7, &p2).unwrap();
+            assert_eq!(a, b, "n={n}");
+        }
+        let mut acc = vec![0.0f32; 2];
+        assert!(decode_le_axpy2(&mut acc, 1.0, &[0u8; 8], 1.0, &[0u8; 7]).is_err());
+        assert!(decode_le_axpy2(&mut acc, 1.0, &[0u8; 7], 1.0, &[0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn widen_narrow_roundtrip_matches_scalar() {
+        let mut rng = Xoshiro256pp::new(7);
+        for &n in &EDGE_LENS {
+            let src = vals(&mut rng, n);
+            let payload: Vec<u8> = vals(&mut rng, n)
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect();
+            let mut acc = Vec::new();
+            widen_scale(&mut acc, &src, 0.4);
+            let mut acc_ref: Vec<f64> = src.iter().map(|&v| v as f64 * 0.4).collect();
+            assert_eq!(acc, acc_ref, "widen n={n}");
+            decode_le_axpy_widen(&mut acc, 0.3, &payload).unwrap();
+            reference::decode_le_axpy_widen(&mut acc_ref, 0.3, &payload);
+            assert_eq!(acc, acc_ref, "fold n={n}");
+            let mut out = vec![0.0f32; n];
+            narrow(&mut out, &acc);
+            let want: Vec<f32> = acc.iter().map(|&a| a as f32).collect();
+            assert_eq!(out, want, "narrow n={n}");
+        }
+    }
+
+    #[test]
+    fn scatter_kernels_match_reference() {
+        let mut rng = Xoshiro256pp::new(11);
+        let n = 50;
+        let base = vals(&mut rng, n);
+        let own = vals(&mut rng, n);
+        let indices: Vec<u32> = vec![0, 3, 17, 31, 49];
+        let v = vals(&mut rng, indices.len());
+        let (mut a, mut b) = (base.clone(), base.clone());
+        scatter_axpy(&mut a, 0.8, &indices, &v);
+        reference::scatter_axpy(&mut b, 0.8, &indices, &v);
+        assert_eq!(a, b);
+        scatter_blend(&mut a, 0.5, &indices, &v, &own);
+        reference::scatter_blend(&mut b, 0.5, &indices, &v, &own);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn diff_axpy_matches_reference() {
+        let mut rng = Xoshiro256pp::new(13);
+        for &n in &EDGE_LENS {
+            let base = vals(&mut rng, n);
+            let x = vals(&mut rng, n);
+            let y = vals(&mut rng, n);
+            let (mut a, mut b) = (base.clone(), base.clone());
+            diff_axpy(&mut a, 0.21, &x, &y);
+            reference::diff_axpy(&mut b, 0.21, &x, &y);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn decode_le_into_reuses_capacity() {
+        let payload: Vec<u8> = (0..64u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let mut out = Vec::new();
+        decode_le_into(&mut out, &payload);
+        assert_eq!(out.len(), 64);
+        assert_eq!(out[5], 5.0);
+        let cap = out.capacity();
+        decode_le_into(&mut out, &payload);
+        assert_eq!(out.capacity(), cap, "steady-state decode must not grow");
+    }
+
+    #[test]
+    fn scratch_signature_tracks_growth() {
+        let mut s = Scratch::new();
+        let sig0 = s.capacity_signature();
+        assert_eq!(sig0, [0; 7]);
+        s.dense.extend_from_slice(&[1.0; 16]);
+        assert_ne!(s.capacity_signature(), sig0);
+        let warm = s.capacity_signature();
+        s.dense.clear();
+        s.dense.extend_from_slice(&[2.0; 16]);
+        assert_eq!(s.capacity_signature(), warm);
+    }
+}

@@ -34,6 +34,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataset;
 pub mod graph;
+pub mod kernels;
 pub mod mapping;
 pub mod metrics;
 pub mod node;

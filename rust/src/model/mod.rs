@@ -93,57 +93,16 @@ impl ParamVec {
     /// Magnitude of the k-th largest |value| (the TopK threshold).
     /// `k == 0` returns +inf (send nothing); `k >= len` returns 0.
     pub fn topk_threshold(&self, k: usize) -> f32 {
-        if k == 0 {
-            return f32::INFINITY;
-        }
-        if k >= self.len() {
-            return 0.0;
-        }
-        let mut mags: Vec<f32> = self.data.iter().map(|x| x.abs()).collect();
-        // k-th largest = (len - k)-th smallest.
-        let pos = mags.len() - k;
-        mags.select_nth_unstable_by(pos, |a, b| a.partial_cmp(b).unwrap());
-        mags[pos]
+        topk_threshold_of(&self.data, k, &mut Vec::new())
     }
 
     /// Extract the top-k entries by magnitude as a sparse vector.
     /// Ties at the threshold are broken by index order, and exactly `k`
-    /// entries are returned (assuming `k <= len`).
+    /// entries are returned (assuming `k <= len`; NaN coordinates are
+    /// never selected — see [`topk_threshold_of`]).
     pub fn topk(&self, k: usize) -> SparseVec {
-        let k = k.min(self.len());
-        if k == 0 {
-            return SparseVec::empty(self.len());
-        }
-        let t = self.topk_threshold(k);
-        let mut indices = Vec::with_capacity(k);
-        let mut values = Vec::with_capacity(k);
-        // First pass: strictly above threshold.
-        for (i, &v) in self.data.iter().enumerate() {
-            if v.abs() > t && indices.len() < k {
-                indices.push(i as u32);
-                values.push(v);
-            }
-        }
-        // Second pass: fill with ties at the threshold.
-        if indices.len() < k {
-            for (i, &v) in self.data.iter().enumerate() {
-                if v.abs() == t {
-                    // Maintain sorted index order by merging.
-                    indices.push(i as u32);
-                    values.push(v);
-                    if indices.len() == k {
-                        break;
-                    }
-                }
-            }
-            // Restore index order (first pass indices are sorted, ties
-            // appended; a final sort keeps the representation canonical).
-            let mut pairs: Vec<(u32, f32)> =
-                indices.into_iter().zip(values).collect();
-            pairs.sort_by_key(|(i, _)| *i);
-            indices = pairs.iter().map(|(i, _)| *i).collect();
-            values = pairs.iter().map(|(_, v)| *v).collect();
-        }
+        let (mut mags, mut indices, mut values) = (Vec::new(), Vec::new(), Vec::new());
+        topk_of(&self.data, k, &mut mags, &mut indices, &mut values);
         SparseVec { dim: self.len(), indices, values }
     }
 
@@ -156,6 +115,84 @@ impl ParamVec {
             dim: self.len(),
             values: idx.iter().map(|&i| self.data[i]).collect(),
             indices: idx.into_iter().map(|i| i as u32).collect(),
+        }
+    }
+}
+
+/// Magnitude of the k-th largest |value| over a raw slice, selecting
+/// inside `mags` (cleared + refilled — a reusable scratch buffer, so
+/// the per-round hot path allocates nothing). NaN-safe: the comparator
+/// is [`f32::total_cmp`], under which NaN magnitudes sort above every
+/// finite value instead of panicking mid-selection (the old
+/// `partial_cmp().unwrap()` comparator aborted the whole run on a
+/// single NaN parameter).
+pub fn topk_threshold_of(data: &[f32], k: usize, mags: &mut Vec<f32>) -> f32 {
+    if k == 0 {
+        return f32::INFINITY;
+    }
+    if k >= data.len() {
+        return 0.0;
+    }
+    mags.clear();
+    mags.reserve(data.len());
+    mags.extend(data.iter().map(|x| x.abs()));
+    // k-th largest = (len - k)-th smallest.
+    let pos = mags.len() - k;
+    mags.select_nth_unstable_by(pos, |a, b| a.total_cmp(b));
+    mags[pos]
+}
+
+/// Top-k by |value| over a raw slice into caller-owned buffers
+/// (`indices`/`values` cleared + refilled; `mags` is the selection
+/// scratch). Same algorithm as [`ParamVec::topk`] — strictly-above
+/// threshold first, index-order tie fill, canonical index order — with
+/// every O(dim) buffer supplied by the caller. NaN coordinates compare
+/// neither above nor equal to the threshold, so they are never
+/// selected (and the result may then hold fewer than `k` entries).
+pub fn topk_of(
+    data: &[f32],
+    k: usize,
+    mags: &mut Vec<f32>,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) {
+    indices.clear();
+    values.clear();
+    let k = k.min(data.len());
+    if k == 0 {
+        return;
+    }
+    let t = topk_threshold_of(data, k, mags);
+    indices.reserve(k);
+    values.reserve(k);
+    // First pass: strictly above threshold.
+    for (i, &v) in data.iter().enumerate() {
+        if v.abs() > t && indices.len() < k {
+            indices.push(i as u32);
+            values.push(v);
+        }
+    }
+    // Second pass: fill with ties at the threshold, then restore
+    // canonical index order (tie indices were appended out of order).
+    if indices.len() < k {
+        let above = indices.len();
+        for (i, &v) in data.iter().enumerate() {
+            if v.abs() == t {
+                indices.push(i as u32);
+                values.push(v);
+                if indices.len() == k {
+                    break;
+                }
+            }
+        }
+        if above > 0 {
+            let mut pairs: Vec<(u32, f32)> =
+                indices.iter().copied().zip(values.iter().copied()).collect();
+            pairs.sort_by_key(|(i, _)| *i);
+            for (j, (i, v)) in pairs.into_iter().enumerate() {
+                indices[j] = i;
+                values[j] = v;
+            }
         }
     }
 }
@@ -238,6 +275,37 @@ mod tests {
         assert_eq!(a.topk_threshold(5), 0.0);
         assert_eq!(a.topk_threshold(1), 3.0);
         assert_eq!(a.topk_threshold(2), 2.0);
+    }
+
+    #[test]
+    fn topk_tolerates_nan_parameters() {
+        // Regression: the selection comparator was
+        // `partial_cmp().unwrap()`, which panicked the moment a NaN
+        // parameter reached top-k selection (diverged training, bad
+        // payload). total_cmp sorts NaN magnitudes above every finite
+        // value; NaN coordinates are simply never selected.
+        let a = pv(&[0.5, f32::NAN, 2.0, -1.0]);
+        assert_eq!(a.topk_threshold(2), 2.0);
+        let s = a.topk(2);
+        assert!(s.values.iter().all(|v| !v.is_nan()));
+        assert_eq!(s.indices, vec![2]);
+        assert_eq!(s.values, vec![2.0]);
+        // All-NaN never panics either.
+        let b = pv(&[f32::NAN, f32::NAN]);
+        let t = b.topk_threshold(1);
+        assert!(t.is_nan());
+        assert_eq!(b.topk(1).nnz(), 0);
+    }
+
+    #[test]
+    fn topk_of_matches_method_with_dirty_scratch() {
+        let a = pv(&[0.1, -5.0, 3.0, -0.2, 4.0, 4.0]);
+        let want = a.topk(3);
+        let (mut mags, mut idx, mut vals) =
+            (vec![9.0f32; 2], vec![7u32; 5], vec![1.0f32]);
+        topk_of(a.as_slice(), 3, &mut mags, &mut idx, &mut vals);
+        assert_eq!(idx, want.indices);
+        assert_eq!(vals, want.values);
     }
 
     #[test]

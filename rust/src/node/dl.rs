@@ -9,6 +9,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::communication::{shaper::EmuClock, shaper::NetworkModel, Envelope, MsgKind, Transport};
 use crate::dataset::Dataset;
+use crate::kernels::Scratch;
 use crate::metrics::{NodeLog, Record};
 use crate::model::ParamVec;
 use crate::sharing::{Received, Sharing};
@@ -54,6 +55,9 @@ impl DlNode {
         let wall = Timer::start();
         // Model messages that arrived early (neighbors running ahead).
         let mut pending: HashMap<(u64, usize), Payload> = HashMap::new();
+        // Per-node arena: hot-path buffers warm up in round 0 and are
+        // reused for the rest of the run.
+        let mut scratch = Scratch::new();
 
         for round in 0..self.rounds {
             // 1. Current topology row.
@@ -66,7 +70,7 @@ impl DlNode {
 
             // 3. Share with neighbors: serialize once, every envelope
             //    shares the same payload buffer.
-            let payload: Payload = self.sharing.outgoing(&model, round)?.into();
+            let payload: Payload = self.sharing.outgoing_with(&model, round, &mut scratch)?.into();
             self.transport.note_serialized(payload.len());
             let bytes_before = self.transport.counters().bytes_sent;
             for &(nbr, _) in &assign.neighbors {
@@ -100,7 +104,7 @@ impl DlNode {
                     })
                     .collect();
                 self.sharing
-                    .aggregate(&mut model, assign.self_weight, &received)?;
+                    .aggregate_with(&mut model, assign.self_weight, &received, &mut scratch)?;
             }
             self.params.put(model.into_vec());
 

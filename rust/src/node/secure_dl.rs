@@ -20,6 +20,7 @@ use crate::communication::{shaper::EmuClock, shaper::NetworkModel, Envelope, Msg
 use crate::compression::{FloatCodec, RawF32};
 use crate::dataset::Dataset;
 use crate::graph::{Graph, MixingWeights};
+use crate::kernels::{self, Scratch};
 use crate::metrics::{NodeLog, Record};
 use crate::secure::Masker;
 use crate::store::{ParamSlot, Payload};
@@ -51,10 +52,11 @@ impl SecureDlNode {
         let mut log = NodeLog::new(self.id);
         let mut clock = EmuClock::new();
         let wall = Timer::start();
-        let codec = RawF32;
         let neighbors: Vec<usize> = self.graph.neighbors_vec(self.id);
-        let dim = self.params.len();
         let mut pending: HashMap<(u64, usize), Payload> = HashMap::new();
+        // Reusable f64 accumulator for the masked fold (warm after
+        // round 0; no per-round allocation).
+        let mut scratch = Scratch::new();
 
         // Round-0 key agreement.
         for env in key_agreement_envelopes(self.id, self.masker_seed(), &self.graph, &neighbors) {
@@ -85,22 +87,20 @@ impl SecureDlNode {
             let sent_this_round = self.transport.counters().bytes_sent - bytes_before;
 
             // 3. Receive masked models from all neighbors and aggregate:
-            //    x <- w_self x + sum_i w_i x~_i  (masks cancel pairwise).
-            let mut agg: Vec<f64> = params
-                .iter()
-                .map(|&v| v as f64 * self.weights.self_weight(self.id))
-                .collect();
+            //    x <- w_self x + sum_i w_i x~_i  (masks cancel pairwise),
+            //    fused straight from payload bytes into the reusable f64
+            //    accumulator, in neighbor order as before.
+            kernels::widen_scale(
+                &mut scratch.doubles,
+                &params,
+                self.weights.self_weight(self.id),
+            );
             for &nbr in &neighbors {
                 let payload = self.await_model(round, nbr, &mut pending)?;
-                let vals = codec.decode(&payload, dim)?;
                 let w = self.weights.weight(self.id, nbr);
-                for (a, v) in agg.iter_mut().zip(vals.iter()) {
-                    *a += w * *v as f64;
-                }
+                kernels::decode_le_axpy_widen(&mut scratch.doubles, w, &payload)?;
             }
-            for (p, a) in params.iter_mut().zip(agg.iter()) {
-                *p = *a as f32;
-            }
+            kernels::narrow(&mut params, &scratch.doubles);
             self.params.put(params);
 
             // 4. Emulated clock.

@@ -34,9 +34,9 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::communication::{Envelope, MsgKind};
-use crate::compression::{FloatCodec, RawF32};
 use crate::dataset::Dataset;
 use crate::graph::{Graph, MixingWeights};
+use crate::kernels::{self, Scratch};
 use crate::metrics::{NodeLog, Record};
 use crate::model::ParamVec;
 use crate::node::async_dl::{AsyncPolicy, AsyncStats, DeadlineSpec, LatePolicy};
@@ -95,6 +95,9 @@ pub struct DlNodeSm {
     train_loss: f64,
     /// Early/buffered model payloads keyed by (round, sender).
     pending: HashMap<(u64, usize), Payload>,
+    /// Reusable hot-path buffers (decode, diff, sparse staging): warm
+    /// after round 0, so steady-state rounds allocate nothing.
+    scratch: Scratch,
     log: Option<NodeLog>,
     wall: Timer,
 }
@@ -132,6 +135,7 @@ impl DlNodeSm {
             model: None,
             train_loss: 0.0,
             pending: HashMap::new(),
+            scratch: Scratch::new(),
             log: Some(NodeLog::new(id)),
             wall: Timer::start(),
         }
@@ -255,7 +259,8 @@ impl DlNodeSm {
                     payload: payload.as_slice(),
                 })
                 .collect();
-            self.sharing.aggregate(&mut model, self_weight, &received)?;
+            self.sharing
+                .aggregate_with(&mut model, self_weight, &received, &mut self.scratch)?;
         }
         self.params.put(model.into_vec());
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
@@ -309,7 +314,10 @@ impl EventNode for DlNodeSm {
                     let model = ParamVec::from_vec(params);
                     // Serialize once; every neighbor's envelope shares
                     // the same buffer (zero-copy broadcast).
-                    let payload: Payload = self.sharing.outgoing(&model, self.round)?.into();
+                    let payload: Payload = self
+                        .sharing
+                        .outgoing_with(&model, self.round, &mut self.scratch)?
+                        .into();
                     ctx.note_serialized(payload.len());
                     let assign = self.assign.as_ref().context("no neighbor assignment")?;
                     for &(nbr, _) in &assign.neighbors {
@@ -396,6 +404,8 @@ pub struct SecureDlNodeSm {
     state: DlState,
     train_loss: f64,
     pending: HashMap<(u64, usize), Payload>,
+    /// Reusable f64 accumulator (+ decode staging) for the masked fold.
+    scratch: Scratch,
     log: Option<NodeLog>,
     wall: Timer,
 }
@@ -433,6 +443,7 @@ impl SecureDlNodeSm {
             state: DlState::Training,
             train_loss: 0.0,
             pending: HashMap::new(),
+            scratch: Scratch::new(),
             log: Some(NodeLog::new(id)),
             wall: Timer::start(),
         }
@@ -467,25 +478,21 @@ impl SecureDlNodeSm {
             return Ok(());
         }
         // x <- w_self x + sum_i w_i x~_i (masks cancel pairwise); f64
-        // accumulation in neighbor order, exactly as the threaded path.
-        let codec = RawF32;
+        // accumulation in neighbor order, exactly as the threaded path,
+        // fused straight from the raw-f32 payload bytes into the
+        // arena's reusable accumulator.
         let mut params = self.params.take();
-        let dim = params.len();
-        let mut agg: Vec<f64> = params
-            .iter()
-            .map(|&v| v as f64 * self.weights.self_weight(self.id))
-            .collect();
+        kernels::widen_scale(
+            &mut self.scratch.doubles,
+            &params,
+            self.weights.self_weight(self.id),
+        );
         for &nbr in &self.neighbors {
             let payload = self.pending.remove(&(self.round, nbr)).unwrap();
-            let vals = codec.decode(&payload, dim)?;
             let w = self.weights.weight(self.id, nbr);
-            for (a, v) in agg.iter_mut().zip(vals.iter()) {
-                *a += w * *v as f64;
-            }
+            kernels::decode_le_axpy_widen(&mut self.scratch.doubles, w, &payload)?;
         }
-        for (p, a) in params.iter_mut().zip(agg.iter()) {
-            *p = *a as f32;
-        }
+        kernels::narrow(&mut params, &self.scratch.doubles);
         self.params.put(params);
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
             let trainer = self.trainer.take().context("trainer already in flight")?;
@@ -772,6 +779,8 @@ pub struct AsyncDlNodeSm {
     /// Next rotating slot in `arrival_offsets` once it reaches the cap.
     offset_cursor: usize,
     stats: AsyncStats,
+    /// Reusable hot-path buffers, as in [`DlNodeSm`].
+    scratch: Scratch,
     log: Option<NodeLog>,
     wall: Timer,
 }
@@ -820,6 +829,7 @@ impl AsyncDlNodeSm {
             arrival_offsets: Vec::new(),
             offset_cursor: 0,
             stats: AsyncStats::default(),
+            scratch: Scratch::new(),
             log: Some(NodeLog::new(id)),
             wall: Timer::start(),
         }
@@ -929,7 +939,8 @@ impl AsyncDlNodeSm {
                     payload: payload.as_slice(),
                 })
                 .collect();
-            self.sharing.aggregate(&mut model, self_w, &received)?;
+            self.sharing
+                .aggregate_with(&mut model, self_w, &received, &mut self.scratch)?;
         }
         self.params.put(model.into_vec());
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
@@ -1014,7 +1025,10 @@ impl EventNode for AsyncDlNodeSm {
                     self.train_loss = loss;
                     let model = ParamVec::from_vec(params);
                     // One serialization, shared by every recipient.
-                    let payload: Payload = self.sharing.outgoing(&model, self.round)?.into();
+                    let payload: Payload = self
+                        .sharing
+                        .outgoing_with(&model, self.round, &mut self.scratch)?
+                        .into();
                     ctx.note_serialized(payload.len());
                     for &(nbr, _) in &self.neighbors {
                         ctx.send(Envelope {

@@ -20,9 +20,10 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::model::ParamVec;
+use crate::kernels::{self, Scratch};
+use crate::model::{topk_of, ParamVec};
 
-use super::{decode_sparse, encode_sparse, Received, Sharing};
+use super::{decode_sparse_into, encode_sparse_parts, Received, Sharing};
 
 pub struct ChocoSgd {
     budget: f64,
@@ -79,48 +80,74 @@ impl Sharing for ChocoSgd {
         ChocoSgd::set_init(self, init);
     }
 
-    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+    fn outgoing_with(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
         if !self.init_set {
             // Fallback: treat the first observed model as the common init.
             self.set_init(model);
         }
-        // q = TopK(x - x_hat)
-        let mut diff = model.clone();
-        diff.axpy(-1.0, &self.x_hat_self);
-        let q = diff.topk(self.k());
+        // q = TopK(x - x_hat), staged entirely in the arena. Choco
+        // touches the full parameter vector three times per outgoing
+        // (diff, selection, estimate update) — all of it runs on the
+        // kernels with zero fresh O(dim) buffers.
+        scratch.dense2.clear();
+        scratch.dense2.extend_from_slice(model.as_slice());
+        kernels::axpy(&mut scratch.dense2, -1.0, self.x_hat_self.as_slice());
+        topk_of(
+            &scratch.dense2,
+            self.k(),
+            &mut scratch.mags,
+            &mut scratch.indices,
+            &mut scratch.values,
+        );
         // x_hat_self += q
-        self.x_hat_self.axpy_sparse(1.0, &q);
-        Ok(encode_sparse(&q))
+        kernels::scatter_axpy(
+            self.x_hat_self.as_mut_slice(),
+            1.0,
+            &scratch.indices,
+            &scratch.values,
+        );
+        Ok(encode_sparse_parts(
+            &scratch.indices,
+            &scratch.values,
+            self.dim,
+            &mut scratch.bytes,
+        ))
     }
 
-    fn aggregate(
+    fn aggregate_with(
         &mut self,
         model: &mut ParamVec,
         _self_weight: f64,
         received: &[Received<'_>],
+        scratch: &mut Scratch,
     ) -> Result<()> {
         if model.len() != self.dim {
             bail!("model dim {} != choco dim {}", model.len(), self.dim);
         }
         // Update neighbor estimates with their corrections.
         for r in received {
-            let q = decode_sparse(r.payload, self.dim)?;
+            decode_sparse_into(r.payload, self.dim, &mut scratch.indices, &mut scratch.values)?;
             let x_hat = self
                 .x_hat_neighbors
                 .entry(r.src)
                 .or_insert_with(|| self.init.clone());
-            x_hat.axpy_sparse(1.0, &q);
+            kernels::scatter_axpy(x_hat.as_mut_slice(), 1.0, &scratch.indices, &scratch.values);
         }
         // Gossip step on estimates: x += gamma * sum_j w_j (x_hat_j - x_hat_i).
         for r in received {
             let x_hat_j = &self.x_hat_neighbors[&r.src];
             let g = (self.gamma * r.weight) as f32;
-            let m = model.as_mut_slice();
-            let hj = x_hat_j.as_slice();
-            let hi = self.x_hat_self.as_slice();
-            for i in 0..self.dim {
-                m[i] += g * (hj[i] - hi[i]);
-            }
+            kernels::diff_axpy(
+                model.as_mut_slice(),
+                g,
+                x_hat_j.as_slice(),
+                self.x_hat_self.as_slice(),
+            );
         }
         Ok(())
     }
@@ -130,6 +157,7 @@ impl Sharing for ChocoSgd {
 mod tests {
     use super::*;
     use crate::rng::Xoshiro256pp;
+    use crate::sharing::decode_sparse;
 
     #[test]
     fn estimates_track_model_over_rounds() {

@@ -3,6 +3,7 @@
 use anyhow::{bail, Result};
 
 use crate::compression::{FloatCodec, Fp16, RawF32};
+use crate::kernels::{self, Scratch};
 use crate::model::ParamVec;
 
 use super::{Received, Sharing};
@@ -36,42 +37,46 @@ impl Sharing for FullSharing {
         "full"
     }
 
-    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+    fn outgoing_with(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        _scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
         Ok(self.codec.encode(model.as_slice()))
     }
 
-    fn aggregate(
+    fn aggregate_with(
         &mut self,
         model: &mut ParamVec,
         self_weight: f64,
         received: &[Received<'_>],
+        scratch: &mut Scratch,
     ) -> Result<()> {
-        let dim = model.len();
         let total: f64 = self_weight + received.iter().map(|r| r.weight).sum::<f64>();
         if (total - 1.0).abs() > 1e-6 {
             bail!("mixing weights sum to {total}, expected 1");
         }
-        model.scale(self_weight as f32);
-        for r in received {
-            let w = r.weight as f32;
-            // Hot path: decode raw f32 payloads straight into the
-            // accumulator without the intermediate Vec (saves one 4*P-byte
-            // allocation + pass per neighbor per round; see §Perf).
-            if self.codec.name() == "raw_f32" {
-                if r.payload.len() != dim * 4 {
-                    bail!("raw_f32: expected {} bytes, got {}", dim * 4, r.payload.len());
-                }
-                let m = model.as_mut_slice();
-                for (a, c) in m.iter_mut().zip(r.payload.chunks_exact(4)) {
-                    *a += w * f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-                }
-            } else {
-                let vals = self.codec.decode(r.payload, dim)?;
-                let m = model.as_mut_slice();
-                for (a, v) in m.iter_mut().zip(vals.iter()) {
-                    *a += w * v;
-                }
-            }
+        kernels::scale(model.as_mut_slice(), self_weight as f32);
+        // Every codec folds through the fused decode_axpy entry points:
+        // raw f32 goes bytes -> accumulator with no staging at all (and
+        // pairs of neighbors share one accumulator pass), other codecs
+        // stage once in the scratch arena. (This retired the old
+        // `codec.name() == "raw_f32"` string-compare dispatch.)
+        let mut pairs = received.chunks_exact(2);
+        for pair in &mut pairs {
+            self.codec.decode_axpy2(
+                pair[0].payload,
+                pair[0].weight as f32,
+                pair[1].payload,
+                pair[1].weight as f32,
+                model.as_mut_slice(),
+                &mut scratch.dense,
+            )?;
+        }
+        for r in pairs.remainder() {
+            self.codec
+                .decode_axpy(r.payload, r.weight as f32, model.as_mut_slice(), &mut scratch.dense)?;
         }
         Ok(())
     }

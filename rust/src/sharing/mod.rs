@@ -15,6 +15,13 @@
 //! Sparse payloads share one wire layout: `u32 index-block length ‖
 //! adaptive index codec block ‖ f32 values`. All byte counts flow through
 //! the transport counters, which is what Figures 3c/4/5 plot.
+//!
+//! All five strategies aggregate through the fused primitives in
+//! [`crate::kernels`] and stage every intermediate in a per-node
+//! [`Scratch`] arena (`aggregate_with` / `outgoing_with`), so
+//! steady-state rounds are allocation-free; the scalar loops they
+//! replaced are retained as references and pinned bit-identical by the
+//! proptests. `docs/PERFORMANCE.md` maps the full hot path.
 
 mod choco;
 mod full;
@@ -30,7 +37,8 @@ pub use topk::TopK;
 
 use anyhow::{bail, Context, Result};
 
-use crate::compression::{decode_indices_best, encode_indices_best};
+use crate::compression::{decode_indices_best_into, encode_indices_best_into};
+use crate::kernels::{self, Scratch};
 use crate::model::{ParamVec, SparseVec};
 
 /// A received model message ready for aggregation.
@@ -43,8 +51,15 @@ pub struct Received<'a> {
 
 /// Strategy object owned by one node.
 ///
-/// `outgoing` may mutate internal state (error residuals, `x_hat`);
-/// `aggregate` folds the received messages into the local model.
+/// `outgoing_with` may mutate internal state (error residuals,
+/// `x_hat`); `aggregate_with` folds the received messages into the
+/// local model. Both take the node's [`Scratch`] arena so steady-state
+/// rounds reuse every O(dim) buffer; the scratch-less [`outgoing`]
+/// / [`aggregate`] wrappers build a throwaway arena per call (tests,
+/// cold paths) and are bit-identical by construction.
+///
+/// [`outgoing`]: Sharing::outgoing
+/// [`aggregate`]: Sharing::aggregate
 pub trait Sharing: Send {
     fn name(&self) -> &'static str;
 
@@ -54,7 +69,20 @@ pub trait Sharing: Send {
     fn set_init(&mut self, _init: &ParamVec) {}
 
     /// Build this round's payload from the post-training model.
-    fn outgoing(&mut self, model: &ParamVec, round: u64) -> Result<Vec<u8>>;
+    fn outgoing(&mut self, model: &ParamVec, round: u64) -> Result<Vec<u8>> {
+        self.outgoing_with(model, round, &mut Scratch::new())
+    }
+
+    /// [`outgoing`](Sharing::outgoing) with a caller-owned scratch
+    /// arena for every intermediate buffer. The returned payload vector
+    /// is the one unavoidable allocation: it becomes the broadcast's
+    /// shared `Arc<[u8]>` and cannot be reused.
+    fn outgoing_with(
+        &mut self,
+        model: &ParamVec,
+        round: u64,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>>;
 
     /// Merge received messages into `model`. `self_weight` is the node's
     /// own mixing weight (1 - sum of neighbor weights).
@@ -63,6 +91,18 @@ pub trait Sharing: Send {
         model: &mut ParamVec,
         self_weight: f64,
         received: &[Received<'_>],
+    ) -> Result<()> {
+        self.aggregate_with(model, self_weight, received, &mut Scratch::new())
+    }
+
+    /// [`aggregate`](Sharing::aggregate) with a caller-owned scratch
+    /// arena; allocation-free once the arena is warm.
+    fn aggregate_with(
+        &mut self,
+        model: &mut ParamVec,
+        self_weight: f64,
+        received: &[Received<'_>],
+        scratch: &mut Scratch,
     ) -> Result<()>;
 }
 
@@ -109,11 +149,24 @@ fn parse_budget(s: &str) -> Result<f64> {
 
 /// Encode a sparse vector: `u32 index-block len ‖ index block ‖ f32 values`.
 pub fn encode_sparse(sv: &SparseVec) -> Vec<u8> {
-    let idx = encode_indices_best(&sv.indices, sv.dim);
-    let mut out = Vec::with_capacity(4 + idx.len() + 4 * sv.values.len());
-    out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
-    out.extend_from_slice(&idx);
-    for v in &sv.values {
+    let mut idx_scratch = Vec::new();
+    encode_sparse_parts(&sv.indices, &sv.values, sv.dim, &mut idx_scratch)
+}
+
+/// [`encode_sparse`] from raw index/value slices, staging the index
+/// block in `idx_scratch` (cleared + refilled). The returned vector is
+/// the payload itself — the one allocation a sparse broadcast keeps.
+pub fn encode_sparse_parts(
+    indices: &[u32],
+    values: &[f32],
+    dim: usize,
+    idx_scratch: &mut Vec<u8>,
+) -> Vec<u8> {
+    encode_indices_best_into(indices, dim, idx_scratch);
+    let mut out = Vec::with_capacity(4 + idx_scratch.len() + 4 * values.len());
+    out.extend_from_slice(&(idx_scratch.len() as u32).to_le_bytes());
+    out.extend_from_slice(idx_scratch);
+    for v in values {
         out.extend_from_slice(&v.to_le_bytes());
     }
     out
@@ -121,6 +174,20 @@ pub fn encode_sparse(sv: &SparseVec) -> Vec<u8> {
 
 /// Inverse of [`encode_sparse`] for a model of dimension `dim`.
 pub fn decode_sparse(bytes: &[u8], dim: usize) -> Result<SparseVec> {
+    let (mut indices, mut values) = (Vec::new(), Vec::new());
+    decode_sparse_into(bytes, dim, &mut indices, &mut values)?;
+    Ok(SparseVec { dim, indices, values })
+}
+
+/// [`decode_sparse`] into reusable index/value buffers (cleared +
+/// refilled) — the hot-path variant that allocates nothing once the
+/// buffers have capacity.
+pub fn decode_sparse_into(
+    bytes: &[u8],
+    dim: usize,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f32>,
+) -> Result<()> {
     if bytes.len() < 4 {
         bail!("sparse payload too short");
     }
@@ -128,7 +195,7 @@ pub fn decode_sparse(bytes: &[u8], dim: usize) -> Result<SparseVec> {
     if bytes.len() < 4 + idx_len {
         bail!("sparse payload truncated (index block)");
     }
-    let indices = decode_indices_best(&bytes[4..4 + idx_len], dim)?;
+    decode_indices_best_into(&bytes[4..4 + idx_len], dim, indices)?;
     let vals_bytes = &bytes[4 + idx_len..];
     if vals_bytes.len() != indices.len() * 4 {
         bail!(
@@ -137,17 +204,24 @@ pub fn decode_sparse(bytes: &[u8], dim: usize) -> Result<SparseVec> {
             vals_bytes.len()
         );
     }
-    let values = vals_bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
-    Ok(SparseVec { dim, indices, values })
+    values.clear();
+    values.reserve(indices.len());
+    values.extend(
+        vals_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+    Ok(())
 }
 
 /// Shared aggregation rule for sparse messages with *absolute* values:
 /// coordinates a neighbor did not send fall back to the receiver's own
 /// value, preserving total weight 1 per coordinate
 /// (`out[j] = own[j] + Σ_i w_i (recv_i[j] - own[j])` over senders of j).
+///
+/// This is the retained scalar reference: the hot path runs
+/// [`aggregate_sparse_absolute_with`], which the proptests pin
+/// bit-identical to this loop.
 pub fn aggregate_sparse_absolute(
     model: &mut ParamVec,
     received: &[(f64, SparseVec)],
@@ -163,6 +237,32 @@ pub fn aggregate_sparse_absolute(
             let i = i as usize;
             m[i] += (*w as f32) * (v - o[i]);
         }
+    }
+    Ok(())
+}
+
+/// Kernel twin of [`aggregate_sparse_absolute`] over still-encoded
+/// payloads: each message decodes into the arena's sparse buffers and
+/// folds in with [`kernels::scatter_blend`] against an arena snapshot
+/// of the receiver's pre-aggregation values — no clone of the model, no
+/// per-message vectors.
+pub fn aggregate_sparse_absolute_with(
+    model: &mut ParamVec,
+    received: &[Received<'_>],
+    scratch: &mut Scratch,
+) -> Result<()> {
+    let dim = model.len();
+    scratch.dense2.clear();
+    scratch.dense2.extend_from_slice(model.as_slice());
+    for r in received {
+        decode_sparse_into(r.payload, dim, &mut scratch.indices, &mut scratch.values)?;
+        kernels::scatter_blend(
+            model.as_mut_slice(),
+            r.weight as f32,
+            &scratch.indices,
+            &scratch.values,
+            &scratch.dense2,
+        );
     }
     Ok(())
 }
@@ -221,6 +321,40 @@ mod tests {
         let mut model = own.clone();
         aggregate_sparse_absolute(&mut model, &[(0.5, sv)]).unwrap();
         assert_eq!(model.as_slice(), &[1.0, 6.0]);
+    }
+
+    #[test]
+    fn scratch_sparse_aggregation_matches_scalar_reference() {
+        let own = ParamVec::from_vec(vec![1.0, -2.0, 0.5, 3.0, 0.0]);
+        let sv1 = SparseVec { dim: 5, indices: vec![1, 4], values: vec![2.0, 1.0] };
+        let sv2 = SparseVec { dim: 5, indices: vec![0, 1], values: vec![-1.0, 0.25] };
+        let mut a = own.clone();
+        aggregate_sparse_absolute(&mut a, &[(0.3, sv1.clone()), (0.2, sv2.clone())]).unwrap();
+        let (p1, p2) = (encode_sparse(&sv1), encode_sparse(&sv2));
+        let recv = [
+            Received { src: 1, weight: 0.3, payload: &p1 },
+            Received { src: 2, weight: 0.2, payload: &p2 },
+        ];
+        let mut scratch = Scratch::new();
+        let mut b = own.clone();
+        aggregate_sparse_absolute_with(&mut b, &recv, &mut scratch).unwrap();
+        assert_eq!(a.as_slice(), b.as_slice());
+        // A dirty, reused arena changes nothing.
+        let mut c = own.clone();
+        aggregate_sparse_absolute_with(&mut c, &recv, &mut scratch).unwrap();
+        assert_eq!(a.as_slice(), c.as_slice());
+    }
+
+    #[test]
+    fn encode_sparse_parts_matches_encode_sparse() {
+        let sv = SparseVec {
+            dim: 1000,
+            indices: vec![1, 5, 999],
+            values: vec![0.5, -2.0, 3.25],
+        };
+        let mut idx_scratch = vec![0xAAu8; 9]; // dirty
+        let parts = encode_sparse_parts(&sv.indices, &sv.values, sv.dim, &mut idx_scratch);
+        assert_eq!(parts, encode_sparse(&sv));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use anyhow::{bail, Result};
 
 use crate::compression::{FloatCodec, Qsgd};
+use crate::kernels::{self, Scratch};
 use crate::model::ParamVec;
 
 use super::{Received, Sharing};
@@ -26,28 +27,32 @@ impl Sharing for Quantized {
         "quant"
     }
 
-    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+    fn outgoing_with(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        _scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
         Ok(self.codec.encode(model.as_slice()))
     }
 
-    fn aggregate(
+    fn aggregate_with(
         &mut self,
         model: &mut ParamVec,
         self_weight: f64,
         received: &[Received<'_>],
+        scratch: &mut Scratch,
     ) -> Result<()> {
-        let dim = model.len();
         let total: f64 = self_weight + received.iter().map(|r| r.weight).sum::<f64>();
         if (total - 1.0).abs() > 1e-6 {
             bail!("mixing weights sum to {total}, expected 1");
         }
-        model.scale(self_weight as f32);
+        kernels::scale(model.as_mut_slice(), self_weight as f32);
         for r in received {
-            let vals = self.codec.decode(r.payload, dim)?;
-            let w = r.weight as f32;
-            for (a, v) in model.as_mut_slice().iter_mut().zip(vals.iter()) {
-                *a += w * v;
-            }
+            // QSGD stages its dequantized values once in the arena and
+            // folds them in with the axpy kernel — no fresh vector.
+            self.codec
+                .decode_axpy(r.payload, r.weight as f32, model.as_mut_slice(), &mut scratch.dense)?;
         }
         Ok(())
     }

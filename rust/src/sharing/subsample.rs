@@ -3,10 +3,11 @@
 
 use anyhow::Result;
 
+use crate::kernels::Scratch;
 use crate::model::ParamVec;
 use crate::rng::{mix_seed, Xoshiro256pp};
 
-use super::{aggregate_sparse_absolute, decode_sparse, encode_sparse, Received, Sharing};
+use super::{aggregate_sparse_absolute_with, encode_sparse_parts, Received, Sharing};
 
 pub struct SubSampling {
     budget: f64,
@@ -34,28 +35,31 @@ impl Sharing for SubSampling {
         "subsample"
     }
 
-    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+    fn outgoing_with(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
         let sv = model.sample_k(self.k(), &mut self.rng);
-        Ok(encode_sparse(&sv))
+        Ok(encode_sparse_parts(&sv.indices, &sv.values, sv.dim, &mut scratch.bytes))
     }
 
-    fn aggregate(
+    fn aggregate_with(
         &mut self,
         model: &mut ParamVec,
         _self_weight: f64,
         received: &[Received<'_>],
+        scratch: &mut Scratch,
     ) -> Result<()> {
-        let decoded: Vec<(f64, _)> = received
-            .iter()
-            .map(|r| Ok((r.weight, decode_sparse(r.payload, model.len())?)))
-            .collect::<Result<_>>()?;
-        aggregate_sparse_absolute(model, &decoded)
+        aggregate_sparse_absolute_with(model, received, scratch)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sharing::{decode_sparse, encode_sparse};
 
     #[test]
     fn payload_respects_budget() {

@@ -11,9 +11,10 @@
 
 use anyhow::Result;
 
-use crate::model::{ParamVec, SparseVec};
+use crate::kernels::{self, Scratch};
+use crate::model::{topk_of, ParamVec};
 
-use super::{aggregate_sparse_absolute, decode_sparse, encode_sparse, Received, Sharing};
+use super::{aggregate_sparse_absolute_with, encode_sparse_parts, Received, Sharing};
 
 pub struct TopK {
     budget: f64,
@@ -40,51 +41,72 @@ impl Sharing for TopK {
         "topk"
     }
 
-    fn outgoing(&mut self, model: &ParamVec, _round: u64) -> Result<Vec<u8>> {
+    fn outgoing_with(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<u8>> {
         if !self.initialized {
             // First round: everyone knows the common init; change = model
             // - init is not defined here, so share the largest-magnitude
             // values to bootstrap.
             self.initialized = true;
             self.last_shared = model.clone();
-            let sv = model.topk(self.k());
-            return Ok(encode_sparse(&sv));
+            topk_of(
+                model.as_slice(),
+                self.k(),
+                &mut scratch.mags,
+                &mut scratch.indices,
+                &mut scratch.values,
+            );
+            return Ok(encode_sparse_parts(
+                &scratch.indices,
+                &scratch.values,
+                self.dim,
+                &mut scratch.bytes,
+            ));
         }
-        // Change since last shared, per coordinate.
-        let mut delta = model.clone();
-        delta.axpy(-1.0, &self.last_shared);
-        let selected = delta.topk(self.k());
+        // Change since last shared, per coordinate, staged in the arena.
+        scratch.dense2.clear();
+        scratch.dense2.extend_from_slice(model.as_slice());
+        kernels::axpy(&mut scratch.dense2, -1.0, self.last_shared.as_slice());
+        topk_of(
+            &scratch.dense2,
+            self.k(),
+            &mut scratch.mags,
+            &mut scratch.indices,
+            &mut scratch.values,
+        );
         // Send absolute values at the selected coordinates and move the
         // reference point for exactly those coordinates.
-        let values: Vec<f32> = selected
-            .indices
-            .iter()
-            .map(|&i| model.as_slice()[i as usize])
-            .collect();
-        for (&i, &v) in selected.indices.iter().zip(values.iter()) {
-            self.last_shared.as_mut_slice()[i as usize] = v;
+        for (&i, v) in scratch.indices.iter().zip(scratch.values.iter_mut()) {
+            *v = model.as_slice()[i as usize];
+            self.last_shared.as_mut_slice()[i as usize] = *v;
         }
-        let sv = SparseVec { dim: self.dim, indices: selected.indices, values };
-        Ok(encode_sparse(&sv))
+        Ok(encode_sparse_parts(
+            &scratch.indices,
+            &scratch.values,
+            self.dim,
+            &mut scratch.bytes,
+        ))
     }
 
-    fn aggregate(
+    fn aggregate_with(
         &mut self,
         model: &mut ParamVec,
         _self_weight: f64,
         received: &[Received<'_>],
+        scratch: &mut Scratch,
     ) -> Result<()> {
-        let decoded: Vec<(f64, _)> = received
-            .iter()
-            .map(|r| Ok((r.weight, decode_sparse(r.payload, model.len())?)))
-            .collect::<Result<_>>()?;
-        aggregate_sparse_absolute(model, &decoded)
+        aggregate_sparse_absolute_with(model, received, scratch)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sharing::decode_sparse;
 
     #[test]
     fn first_round_sends_largest_values() {

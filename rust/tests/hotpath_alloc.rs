@@ -1,0 +1,159 @@
+//! Allocation freeze for the round hot path: after a warm-up round, a
+//! node's [`Scratch`] arena must never grow again, and the dense
+//! aggregation fold must perform literally zero heap allocations.
+//!
+//! The whole check lives in ONE `#[test]` on purpose: the counting
+//! global allocator is process-wide, and a second concurrently-running
+//! test would pollute the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use decentralize_rs::kernels::Scratch;
+use decentralize_rs::model::ParamVec;
+use decentralize_rs::rng::Xoshiro256pp;
+use decentralize_rs::sharing::{self, Received, Sharing};
+
+/// System allocator wrapper counting every alloc/realloc call.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+const DIM: usize = 4096;
+const NEIGHBORS: usize = 6;
+const SPECS: [&str; 6] =
+    ["full", "full:fp16", "subsample:0.2", "topk:0.2", "quant:64", "choco:0.2:0.5"];
+
+fn rand_model(seed: u64) -> ParamVec {
+    let mut rng = Xoshiro256pp::new(seed);
+    ParamVec::random(DIM, 1.0, &mut rng)
+}
+
+#[test]
+fn steady_state_rounds_do_not_allocate_hot_path_buffers() {
+    let w = 1.0 / (NEIGHBORS + 1) as f64;
+    let self_w = 1.0 - NEIGHBORS as f64 * w;
+    let init = ParamVec::zeros(DIM);
+
+    for spec in SPECS {
+        // A receiver plus NEIGHBORS senders, each its own instance with
+        // its own arena, evolving models — a miniature real fleet.
+        let mut receiver = sharing::from_spec(spec, DIM, 0).unwrap();
+        receiver.set_init(&init);
+        let mut scratch = Scratch::new();
+        let mut model = rand_model(1);
+        let mut senders: Vec<(Box<dyn Sharing>, ParamVec, Scratch)> = (0..NEIGHBORS)
+            .map(|s| {
+                let mut sh = sharing::from_spec(spec, DIM, 10 + s as u64).unwrap();
+                sh.set_init(&init);
+                (sh, rand_model(20 + s as u64), Scratch::new())
+            })
+            .collect();
+        let mut drift = Xoshiro256pp::new(99);
+        let mut warm_sig = None;
+        for round in 0..12u64 {
+            let payloads: Vec<Vec<u8>> = senders
+                .iter_mut()
+                .map(|(sh, m, sc)| sh.outgoing_with(m, round, sc).unwrap())
+                .collect();
+            let own_payload = receiver.outgoing_with(&model, round, &mut scratch).unwrap();
+            drop(own_payload);
+            let received: Vec<Received> = payloads
+                .iter()
+                .enumerate()
+                .map(|(s, p)| Received { src: s, weight: w, payload: p })
+                .collect();
+            receiver
+                .aggregate_with(&mut model, self_w, &received, &mut scratch)
+                .unwrap();
+            // Warm-up is round 0; from round 1 on, the arena's capacity
+            // signature must be frozen.
+            match warm_sig {
+                None => warm_sig = Some(scratch.capacity_signature()),
+                Some(sig) => assert_eq!(
+                    scratch.capacity_signature(),
+                    sig,
+                    "{spec}: scratch arena grew after warm-up (round {round})"
+                ),
+            }
+            // Models drift between rounds as in real training.
+            for v in model.as_mut_slice().iter_mut() {
+                *v += drift.normal_f32(0.0, 0.05);
+            }
+            for (_, m, _) in senders.iter_mut() {
+                for v in m.as_mut_slice().iter_mut() {
+                    *v += drift.normal_f32(0.0, 0.05);
+                }
+            }
+        }
+    }
+
+    // Part 2: once warm, aggregation performs ZERO heap allocations for
+    // every strategy (the payloads are fixed here so the measurement
+    // isolates the aggregation path itself).
+    for spec in SPECS {
+        let payloads: Vec<Vec<u8>> = (0..NEIGHBORS)
+            .map(|s| {
+                let mut sh = sharing::from_spec(spec, DIM, 30 + s as u64).unwrap();
+                sh.set_init(&init);
+                sh.outgoing(&rand_model(40 + s as u64), 0).unwrap()
+            })
+            .collect();
+        let received: Vec<Received> = payloads
+            .iter()
+            .enumerate()
+            .map(|(s, p)| Received { src: s, weight: w, payload: p })
+            .collect();
+        let mut sh = sharing::from_spec(spec, DIM, 0).unwrap();
+        sh.set_init(&init);
+        let mut model = rand_model(2);
+        let mut scratch = Scratch::new();
+        for _ in 0..3 {
+            sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
+        }
+        let before = allocs();
+        for _ in 0..25 {
+            sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
+        }
+        let grew = allocs() - before;
+        assert_eq!(grew, 0, "{spec}: {grew} allocations in 25 warm aggregations");
+    }
+
+    // Part 3: a warm full-sharing outgoing allocates exactly once — the
+    // payload vector itself, which becomes the broadcast's shared
+    // Arc<[u8]> and cannot be pooled.
+    {
+        let mut sh = sharing::from_spec("full", DIM, 0).unwrap();
+        let model = rand_model(3);
+        let mut scratch = Scratch::new();
+        drop(sh.outgoing_with(&model, 0, &mut scratch).unwrap());
+        let before = allocs();
+        let payload = sh.outgoing_with(&model, 1, &mut scratch).unwrap();
+        let grew = allocs() - before;
+        drop(payload);
+        assert_eq!(grew, 1, "full outgoing must allocate only the payload itself");
+    }
+}

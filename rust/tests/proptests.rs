@@ -8,10 +8,14 @@ use decentralize_rs::compression::{
 };
 use decentralize_rs::dataset::Partition;
 use decentralize_rs::graph;
-use decentralize_rs::model::ParamVec;
+use decentralize_rs::kernels::{self, reference, Scratch};
+use decentralize_rs::model::{ParamVec, SparseVec};
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::secure;
-use decentralize_rs::sharing::{self, decode_sparse, encode_sparse, Received, Sharing};
+use decentralize_rs::sharing::{
+    self, aggregate_sparse_absolute, aggregate_sparse_absolute_with, decode_sparse, encode_sparse,
+    Received, Sharing,
+};
 use decentralize_rs::store::{ParamSlot, ParamStore};
 use decentralize_rs::util::json::{parse, Json};
 
@@ -371,6 +375,202 @@ fn prop_param_slot_owned_and_stored_agree() {
             }
         }
         assert_eq!(owned.to_vec(), stored.to_vec(), "case {case} final");
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Lengths that exercise the kernels' 8-lane chunking: multiples of the
+/// chunk width, off-by-one on both sides, and arbitrary tails.
+fn edge_len(rng: &mut Xoshiro256pp, case: u64) -> usize {
+    match case % 4 {
+        0 => rng.range(0, 40) * 8,
+        1 => rng.range(0, 40) * 8 + 1,
+        2 => rng.range(1, 40) * 8 - 1,
+        _ => rng.range(0, 3000),
+    }
+}
+
+#[test]
+fn prop_kernels_bit_identical_to_scalar_reference() {
+    // The hard contract behind the fused-kernel refactor: every kernel
+    // must produce exactly the bits its retained scalar original
+    // produced, across chunk boundaries and odd tails.
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(13_000 + case);
+        let n = edge_len(&mut rng, case);
+        let base = rand_vals(&mut rng, n, 2.0);
+        let x = rand_vals(&mut rng, n, 1.0);
+        let y = rand_vals(&mut rng, n, 1.0);
+        let alpha = rng.normal_f32(0.0, 1.0);
+        let payload: Vec<u8> = x.iter().flat_map(|v| v.to_le_bytes()).collect();
+
+        let (mut a, mut b) = (base.clone(), base.clone());
+        kernels::scale(&mut a, alpha);
+        reference::scale(&mut b, alpha);
+        assert_eq!(bits(&a), bits(&b), "scale case {case} n={n}");
+
+        kernels::axpy(&mut a, alpha, &x);
+        reference::axpy(&mut b, alpha, &x);
+        assert_eq!(bits(&a), bits(&b), "axpy case {case} n={n}");
+
+        kernels::diff_axpy(&mut a, alpha, &x, &y);
+        reference::diff_axpy(&mut b, alpha, &x, &y);
+        assert_eq!(bits(&a), bits(&b), "diff_axpy case {case} n={n}");
+
+        kernels::decode_le_axpy(&mut a, alpha, &payload).unwrap();
+        reference::decode_le_axpy(&mut b, alpha, &payload);
+        assert_eq!(bits(&a), bits(&b), "decode_le_axpy case {case} n={n}");
+
+        // Widening secure fold.
+        let w = rng.next_f64();
+        let mut wa = Vec::new();
+        kernels::widen_scale(&mut wa, &base, w);
+        let mut wb: Vec<f64> = base.iter().map(|&v| v as f64 * w).collect();
+        kernels::decode_le_axpy_widen(&mut wa, w, &payload).unwrap();
+        reference::decode_le_axpy_widen(&mut wb, w, &payload);
+        assert_eq!(wa, wb, "widen fold case {case} n={n}");
+        let (mut na, mut nb) = (vec![0.0f32; n], vec![0.0f32; n]);
+        kernels::narrow(&mut na, &wa);
+        for (p, q) in nb.iter_mut().zip(wb.iter()) {
+            *p = *q as f32;
+        }
+        assert_eq!(bits(&na), bits(&nb), "narrow case {case} n={n}");
+
+        // Scatter kernels over random sorted support.
+        if n > 0 {
+            let k = rng.range(0, n.min(200) + 1);
+            let mut idx = rng.sample_indices(n, k);
+            idx.sort_unstable();
+            let indices: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
+            let vals = rand_vals(&mut rng, k, 1.0);
+            kernels::scatter_axpy(&mut a, alpha, &indices, &vals);
+            reference::scatter_axpy(&mut b, alpha, &indices, &vals);
+            assert_eq!(bits(&a), bits(&b), "scatter_axpy case {case}");
+            kernels::scatter_blend(&mut a, alpha, &indices, &vals, &base);
+            reference::scatter_blend(&mut b, alpha, &indices, &vals, &base);
+            assert_eq!(bits(&a), bits(&b), "scatter_blend case {case}");
+        }
+    }
+}
+
+#[test]
+fn prop_full_aggregate_matches_scalar_reference() {
+    // FullSharing on the fused kernels vs the retired scalar path
+    // (decode into a fresh vector, then fold), bit for bit.
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(15_000 + case);
+        let dim = edge_len(&mut rng, case).max(1);
+        let k = rng.range(1, 7);
+        let w = 1.0 / (k + 1) as f64;
+        let self_w = 1.0 - k as f64 * w;
+        let payloads: Vec<Vec<u8>> = (0..k)
+            .map(|_| RawF32.encode(&rand_vals(&mut rng, dim, 1.0)))
+            .collect();
+        let received: Vec<Received> = payloads
+            .iter()
+            .enumerate()
+            .map(|(s, p)| Received { src: s, weight: w, payload: p })
+            .collect();
+        let start = rand_vals(&mut rng, dim, 1.0);
+
+        let mut sh = sharing::from_spec("full", dim, 0).unwrap();
+        let mut model = ParamVec::from_vec(start.clone());
+        let mut scratch = Scratch::new();
+        sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
+
+        let mut want = start;
+        reference::scale(&mut want, self_w as f32);
+        for r in &received {
+            reference::decode_le_axpy(&mut want, r.weight as f32, r.payload);
+        }
+        assert_eq!(bits(model.as_slice()), bits(&want), "case {case} dim={dim} k={k}");
+    }
+}
+
+#[test]
+fn prop_sparse_aggregate_kernel_matches_scalar() {
+    // The arena-based sparse absolute aggregation (decode_sparse_into +
+    // scatter_blend) vs the retained scalar rule, with one dirty arena
+    // reused across every case.
+    let mut scratch = Scratch::new();
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(16_000 + case);
+        let dim = rng.range(1, 2000);
+        let k_nbrs = rng.range(1, 6);
+        let start = rand_vals(&mut rng, dim, 1.0);
+        let mut svs: Vec<(f64, SparseVec)> = Vec::new();
+        for _ in 0..k_nbrs {
+            let k = rng.range(0, dim.min(300) + 1);
+            let mut idx = rng.sample_indices(dim, k);
+            idx.sort_unstable();
+            svs.push((
+                rng.next_f64() / k_nbrs as f64,
+                SparseVec {
+                    dim,
+                    values: rand_vals(&mut rng, k, 1.0),
+                    indices: idx.into_iter().map(|i| i as u32).collect(),
+                },
+            ));
+        }
+        let mut a = ParamVec::from_vec(start.clone());
+        aggregate_sparse_absolute(&mut a, &svs).unwrap();
+
+        let payloads: Vec<(f64, Vec<u8>)> =
+            svs.iter().map(|(w, sv)| (*w, encode_sparse(sv))).collect();
+        let received: Vec<Received> = payloads
+            .iter()
+            .enumerate()
+            .map(|(s, (w, p))| Received { src: s, weight: *w, payload: p })
+            .collect();
+        let mut b = ParamVec::from_vec(start);
+        aggregate_sparse_absolute_with(&mut b, &received, &mut scratch).unwrap();
+        assert_eq!(bits(a.as_slice()), bits(b.as_slice()), "case {case} dim={dim}");
+    }
+}
+
+#[test]
+fn prop_strategies_bit_identical_under_scratch_reuse() {
+    // Every strategy must behave identically whether it runs on a fresh
+    // throwaway arena per call (the scratch-less trait wrappers) or one
+    // long-lived dirty arena (the node hot path) — over multi-round
+    // trajectories with evolving models and real payloads.
+    let specs = ["full", "full:fp16", "subsample:0.2", "topk:0.2", "quant:64", "choco:0.2:0.5"];
+    for (si, spec) in specs.iter().enumerate() {
+        for case in 0..10u64 {
+            let mut rng = Xoshiro256pp::new(17_000 + 100 * si as u64 + case);
+            let dim = rng.range(1, 600);
+            let init = ParamVec::from_vec(rand_vals(&mut rng, dim, 1.0));
+            let mut s1 = sharing::from_spec(spec, dim, 5).unwrap();
+            let mut s2 = sharing::from_spec(spec, dim, 5).unwrap();
+            let mut nbr = sharing::from_spec(spec, dim, 6).unwrap();
+            s1.set_init(&init);
+            s2.set_init(&init);
+            nbr.set_init(&init);
+            let mut scratch = Scratch::new();
+            let mut m1 = init.clone();
+            let mut m2 = init.clone();
+            let mut nbr_model = ParamVec::from_vec(rand_vals(&mut rng, dim, 1.0));
+            for round in 0..5u64 {
+                let p1 = s1.outgoing(&m1, round).unwrap();
+                let p2 = s2.outgoing_with(&m2, round, &mut scratch).unwrap();
+                assert_eq!(p1, p2, "{spec} case {case} round {round}: payload");
+                let pn = nbr.outgoing(&nbr_model, round).unwrap();
+                let recv = [Received { src: 9, weight: 0.5, payload: &pn }];
+                s1.aggregate(&mut m1, 0.5, &recv).unwrap();
+                s2.aggregate_with(&mut m2, 0.5, &recv, &mut scratch).unwrap();
+                assert_eq!(
+                    bits(m1.as_slice()),
+                    bits(m2.as_slice()),
+                    "{spec} case {case} round {round}: model"
+                );
+                for v in nbr_model.as_mut_slice() {
+                    *v += rng.normal_f32(0.0, 0.1);
+                }
+            }
+        }
     }
 }
 
