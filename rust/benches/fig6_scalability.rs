@@ -1,21 +1,220 @@
 //! Figure 6 bench: scalability — N vs 4N nodes over the same total
 //! dataset, degree 5 vs 9, reduced scale, plus the virtual-time
 //! scheduler sweep (the paper's 1000+-node emulation on a bounded
-//! worker pool). The sweep runs `param_store = "owned"` to 1024 nodes
-//! (the historical ceiling: per-node parameter buffers) and
-//! `param_store = "shared"` to 4096, recording peak parameter bytes per
-//! point from the store report; the whole trajectory is written to
-//! `BENCH_fig6.json`. Full-resolution harness:
-//! `cargo run --release --example scalability`.
+//! worker pool). Two sweeps feed `BENCH_fig6.json`:
+//!
+//! * **Memory tier sweep** (artifact-free, always runs): a ring-gossip
+//!   fleet over the shared [`ParamStore`] at 8192 → 102400 nodes, with
+//!   a sparse writer cohort (`nodes / 16`). The unpaged shared store is
+//!   charged a whole shard per writer; the paged store
+//!   (`--param-store paged`) only the pages a writer actually dirties,
+//!   which is what carries the sweep to the 100k tier. Points past the
+//!   wall-clock budget are recorded as not-completed instead of
+//!   stalling `cargo bench`.
+//! * **Engine sweep** (needs artifacts): real training runs,
+//!   `param_store = "owned"` to 1024 nodes (the historical ceiling),
+//!   shared/paged to 4096, recording peak parameter bytes per point
+//!   from the store report.
+//!
+//! Full-resolution harness: `cargo run --release --example scalability`.
 
 mod fig_common;
 
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::Result;
+use decentralize_rs::communication::{Envelope, MsgKind, Payload};
 use decentralize_rs::coordinator::RunResult;
+use decentralize_rs::scheduler::{EventNode, NodeCtx, Scheduler, Wake};
+use decentralize_rs::store::{ParamSlot, ParamStore};
 use decentralize_rs::util::json::Json;
 use fig_common::{bench_config, engine_or_skip, run_variant};
 
-/// Peak parameter bytes for one run: the store report in shared mode,
-/// the analytic per-node-copy floor (nodes × params × 4) in owned mode.
+/// Memory-sweep model: 4096 f32 = 16 KiB per shard.
+const DIM: usize = 4096;
+/// Paged-mode page size: 1024 f32 = 4 KiB pages (4 pages per shard).
+const PAGE: usize = 1024;
+const MEM_ROUNDS: u64 = 3;
+/// Wall-clock budget for the whole memory sweep; later points are
+/// recorded with `completed: false` once it is spent.
+const MEM_BUDGET_S: f64 = 120.0;
+
+/// Ring-gossip node for the memory sweep (mirrors the CI memory smoke):
+/// writers nudge one coordinate per round — with an id-distinct value,
+/// so no two writers ever produce byte-identical pages and the paged
+/// store's interning cannot collapse the cohort — then every node
+/// broadcasts one small shared payload to both ring neighbors.
+struct MemNode {
+    id: usize,
+    fleet: usize,
+    params: ParamSlot,
+    writer: bool,
+    round: u64,
+    /// Per-round arrival counts (a neighbor may run one round ahead).
+    arrived: HashMap<u64, usize>,
+}
+
+impl MemNode {
+    fn do_round(&mut self, ctx: &mut NodeCtx) {
+        if self.writer {
+            let mut v = self.params.take();
+            // Id-distinct write: every writer's dirty page is unique.
+            v[self.id % DIM] += 1.0 + self.id as f32;
+            self.params.put(v);
+        }
+        let payload: Payload = vec![self.round as u8; 64].into();
+        ctx.note_serialized(payload.len());
+        for dst in [
+            (self.id + 1) % self.fleet,
+            (self.id + self.fleet - 1) % self.fleet,
+        ] {
+            ctx.send(Envelope {
+                src: self.id,
+                dst,
+                round: self.round,
+                kind: MsgKind::Model,
+                sent_at_s: 0.0,
+                payload: payload.clone(),
+            });
+        }
+    }
+
+    fn advance_if_ready(&mut self, ctx: &mut NodeCtx) {
+        while self.round < MEM_ROUNDS
+            && self.arrived.get(&self.round).copied().unwrap_or(0) >= 2
+        {
+            self.arrived.remove(&self.round);
+            self.round += 1;
+            if self.round < MEM_ROUNDS {
+                self.do_round(ctx);
+            }
+        }
+    }
+}
+
+impl EventNode for MemNode {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        match wake {
+            Wake::Start => {
+                self.do_round(ctx);
+                Ok(())
+            }
+            Wake::Message(env) => {
+                if env.round >= self.round {
+                    *self.arrived.entry(env.round).or_insert(0) += 1;
+                }
+                self.advance_if_ready(ctx);
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.round >= MEM_ROUNDS
+    }
+}
+
+/// Analytic peak floor for one memory-sweep point, page-granular: a
+/// writer that dirties a single element still pays a whole page (or a
+/// whole shard when unpaged), plus one transient assembled shard and
+/// the shared base.
+fn mem_peak_floor(writers: usize, paged: bool) -> u64 {
+    let shard_bytes = (DIM * 4) as u64;
+    let unit = if paged { (PAGE * 4) as u64 } else { shard_bytes };
+    writers as u64 * unit + shard_bytes + shard_bytes
+}
+
+/// Run one memory-sweep point and return its JSON row.
+fn mem_point(n: usize, paged: bool, budget_left: bool) -> Json {
+    let shard_bytes = (DIM * 4) as u64;
+    let writers = n / 16;
+    let mode = if paged { "paged" } else { "shared" };
+    let floor = mem_peak_floor(writers, paged);
+    if !budget_left {
+        println!(
+            "mem   {n:>6} nodes [{mode:>6}]: skipped (wall budget spent); \
+             analytic peak floor {floor}"
+        );
+        return Json::obj(vec![
+            ("figure", Json::str("fig6")),
+            ("kind", Json::str("memory_sweep")),
+            ("nodes", Json::num(n as f64)),
+            ("param_store", Json::str(mode)),
+            ("page_size", Json::num(if paged { PAGE as f64 } else { 0.0 })),
+            ("rounds", Json::num(MEM_ROUNDS as f64)),
+            ("writers", Json::num(writers as f64)),
+            ("wall_s", Json::Null),
+            ("param_bytes_start", Json::num(shard_bytes as f64)),
+            ("param_bytes_peak", Json::num(floor as f64)),
+            ("live_pages", Json::Null),
+            ("live_shards", Json::Null),
+            ("completed", Json::Bool(false)),
+            ("provenance", Json::str("computed")),
+        ]);
+    }
+
+    let store = if paged {
+        ParamStore::from_vec_paged(vec![0.5; DIM], PAGE)
+    } else {
+        ParamStore::from_vec(vec![0.5; DIM])
+    };
+    let mut sched = Scheduler::new(None, 4);
+    for id in 0..n {
+        sched.add_node(Box::new(MemNode {
+            id,
+            fleet: n,
+            params: ParamSlot::stored(store.register()),
+            writer: id < writers,
+            round: 0,
+            arrived: HashMap::new(),
+        }));
+    }
+    let wall = Instant::now();
+    sched.run().expect("memory sweep fleet");
+    let wall_s = wall.elapsed().as_secs_f64();
+    let stats = store.stats();
+    let peak = stats.peak_resident_bytes + stats.shared_bytes;
+    println!(
+        "mem   {n:>6} nodes [{mode:>6}]: wall {wall_s:>6.2}s  peak param bytes {peak:>12}  \
+         (floor {floor})  {}/{} shards materialized, {} divergent pages live",
+        stats.live_shards, stats.nodes, stats.live_pages,
+    );
+    assert!(
+        peak <= floor,
+        "memory sweep peak {peak} exceeds page-granular analytic floor {floor} \
+         ({n} nodes, {mode})"
+    );
+    Json::obj(vec![
+        ("figure", Json::str("fig6")),
+        ("kind", Json::str("memory_sweep")),
+        ("nodes", Json::num(n as f64)),
+        ("param_store", Json::str(mode)),
+        ("page_size", Json::num(if paged { PAGE as f64 } else { 0.0 })),
+        ("rounds", Json::num(MEM_ROUNDS as f64)),
+        ("writers", Json::num(writers as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("param_bytes_start", Json::num(stats.shared_bytes as f64)),
+        ("param_bytes_peak", Json::num(peak as f64)),
+        ("live_pages", Json::num(stats.live_pages as f64)),
+        ("live_shards", Json::num(stats.live_shards as f64)),
+        ("completed", Json::Bool(true)),
+        ("provenance", Json::str("measured")),
+    ])
+}
+
+fn write_rows(rows: &[Json]) {
+    let artifact = Json::Arr(rows.to_vec()).pretty();
+    match std::fs::write("BENCH_fig6.json", &artifact) {
+        Ok(()) => println!("trajectory written to BENCH_fig6.json"),
+        Err(e) => println!("(could not write BENCH_fig6.json: {e})"),
+    }
+}
+
+/// Peak parameter bytes for one engine run: the store report in
+/// shared/paged mode, the analytic per-node-copy floor
+/// (nodes × params × 4) in owned mode.
 fn peak_param_bytes(r: &RunResult, nodes: usize) -> (u64, u64) {
     match &r.store {
         Some(report) => (
@@ -30,6 +229,25 @@ fn peak_param_bytes(r: &RunResult, nodes: usize) -> (u64, u64) {
 }
 
 fn main() {
+    // Memory tier sweep first: artifact-free, so it runs (and the JSON
+    // gets written) even where the PJRT engine is unavailable.
+    println!("== fig6: memory tier sweep (ring gossip, writers = nodes/16) ==");
+    let sweep_start = Instant::now();
+    let mem_sweep: &[(usize, bool)] = &[
+        (8192, false),
+        (8192, true),
+        (16384, true),
+        (32768, true),
+        (65536, true),
+        (102400, true),
+    ];
+    let mut rows: Vec<Json> = Vec::new();
+    for &(n, paged) in mem_sweep {
+        let budget_left = sweep_start.elapsed().as_secs_f64() < MEM_BUDGET_S;
+        rows.push(mem_point(n, paged, budget_left));
+    }
+    write_rows(&rows);
+
     println!("== fig6: scalability (fixed dataset, 4x nodes, degree 5 vs 9) ==");
     let Some(engine) = engine_or_skip(&["mlp"]) else { return };
 
@@ -68,8 +286,10 @@ fn main() {
     // node count on a bounded worker pool. Owned mode stops at the old
     // 1024 ceiling; the shared store carries the sweep to 4096 (its
     // startup cost is one base snapshot regardless of fleet size, and
-    // broadcasts serialize once per round instead of once per neighbor).
-    println!("-- scheduler sweep: regular:6, 3 rounds, owned ≤1024 vs shared ≤4096 --");
+    // broadcasts serialize once per round instead of once per neighbor);
+    // paged points pin the page-granular accounting under real training,
+    // where every node diverges and the two modes meet.
+    println!("-- scheduler sweep: regular:6, 3 rounds, owned ≤1024 vs shared/paged ≤4096 --");
     let sweep: &[(usize, &str)] = &[
         (128, "owned"),
         (256, "owned"),
@@ -81,8 +301,9 @@ fn main() {
         (1024, "shared"),
         (2048, "shared"),
         (4096, "shared"),
+        (1024, "paged"),
+        (4096, "paged"),
     ];
-    let mut rows: Vec<Json> = Vec::new();
     for &(n, store_mode) in sweep {
         let mut cfg = bench_config(&format!("fig6/sched_{n}_{store_mode}"));
         cfg.runner = "scheduler".into();
@@ -96,9 +317,13 @@ fn main() {
         cfg.local_steps = 1;
         let r = run_variant(&cfg, &engine);
         let (start_bytes, peak_bytes) = peak_param_bytes(&r, n);
+        let (live_shards, live_pages) = match &r.store {
+            Some(report) => (report.at_end.live_shards, report.at_end.live_pages),
+            None => (0, 0),
+        };
         println!(
             "scale {n:>5} nodes [{store_mode:>6}]: wall {:>7.2}s  emu {:>8.1}s  acc {:.4}  \
-             param bytes start {:>12} peak {:>12}",
+             param bytes start {:>12} peak {:>12}  shards {live_shards} pages {live_pages}",
             r.wall_s,
             r.final_emu_time(),
             r.final_accuracy(),
@@ -107,6 +332,7 @@ fn main() {
         );
         rows.push(Json::obj(vec![
             ("figure", Json::str("fig6")),
+            ("kind", Json::str("engine_sweep")),
             ("nodes", Json::num(n as f64)),
             ("param_store", Json::str(store_mode)),
             ("rounds", Json::num(cfg.rounds as f64)),
@@ -118,10 +344,6 @@ fn main() {
             ("param_bytes_peak", Json::num(peak_bytes as f64)),
         ]));
     }
-    let artifact = Json::Arr(rows).pretty();
-    match std::fs::write("BENCH_fig6.json", &artifact) {
-        Ok(()) => println!("trajectory written to BENCH_fig6.json"),
-        Err(e) => println!("(could not write BENCH_fig6.json: {e})"),
-    }
+    write_rows(&rows);
     println!("== fig6 done ==");
 }

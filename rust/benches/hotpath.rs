@@ -17,6 +17,15 @@
 //! Quick mode (CI): `cargo bench --bench hotpath -- --quick` or
 //! `HOTPATH_QUICK=1` — smaller dim, fewer nodes, shorter budgets; the
 //! JSON is written either way.
+//!
+//! **Perf ratchet** (`--ratchet` or `HOTPATH_RATCHET=1`): the committed
+//! `BENCH_hotpath.json` is read as history, new rows are appended with
+//! the next `run` id, and each throughput row is compared against the
+//! **median** of its prior `(bench, mode, quick)` history — median, so
+//! one noisy historical run can't move the bar. A sustained >20% drop
+//! exits 2 (after writing the artifact, so the trajectory still
+//! records the regression). Empty history is a no-op: the ratchet only
+//! tightens once a baseline has accumulated.
 
 use std::collections::HashMap;
 
@@ -31,7 +40,7 @@ use decentralize_rs::model::ParamVec;
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::scheduler::{EventNode, NodeCtx, Scheduler, Wake};
 use decentralize_rs::sharing::{self, Received, Sharing};
-use decentralize_rs::util::json::Json;
+use decentralize_rs::util::json::{parse, Json};
 
 const NEIGHBORS: usize = 6;
 
@@ -97,10 +106,11 @@ struct GossipSm {
 
 impl GossipSm {
     fn broadcast(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        // Pooled serialization: warm rounds reuse the retained payload
+        // buffer, so the broadcast allocates nothing.
         let payload: Payload = self
             .sharing
-            .outgoing_with(&self.model, self.round, &mut self.scratch)?
-            .into();
+            .outgoing_pooled(&self.model, self.round, &mut self.scratch)?;
         ctx.note_serialized(payload.len());
         for &(nbr, _) in &self.neighbors {
             ctx.send(Envelope {
@@ -172,6 +182,23 @@ impl EventNode for GossipSm {
 fn main() {
     let quick = std::env::args().any(|a| a == "--quick")
         || std::env::var("HOTPATH_QUICK").is_ok_and(|v| v != "0");
+    let ratchet = std::env::args().any(|a| a == "--ratchet")
+        || std::env::var("HOTPATH_RATCHET").is_ok_and(|v| v != "0");
+    // Committed trajectory = ratchet history. Unreadable/absent files
+    // degrade to an empty history (first run seeds the baseline).
+    let history: Vec<Json> = std::fs::read_to_string("BENCH_hotpath.json")
+        .ok()
+        .and_then(|s| parse(&s).ok())
+        .and_then(|j| match j {
+            Json::Arr(rows) => Some(rows),
+            _ => None,
+        })
+        .unwrap_or_default();
+    let run_id = history
+        .iter()
+        .filter_map(|r| r.get("run").as_f64())
+        .fold(0.0, f64::max) as u64
+        + 1;
     let dim: usize = if quick { 262_144 } else { 1_048_576 };
     let budget_ms: u64 = if quick { 250 } else { 800 };
     let sched_nodes: usize = if quick { 256 } else { 1024 };
@@ -337,9 +364,53 @@ fn main() {
         ]));
     }
 
-    let artifact = Json::Arr(rows).pretty();
+    // Tag this run's rows and append them to the committed history so
+    // the trajectory accumulates per PR.
+    for r in rows.iter_mut() {
+        if let Json::Obj(m) = r {
+            m.insert("run".into(), Json::num(run_id as f64));
+        }
+    }
+    // Ratchet check happens before the write so failures still land in
+    // the artifact; the exit happens after.
+    let mut regressions: Vec<String> = Vec::new();
+    if ratchet {
+        for r in &rows {
+            let (Some(bench), Some(cur)) =
+                (r.get("bench").as_str(), r.get("throughput").as_f64())
+            else {
+                continue;
+            };
+            let mode = r.get("mode").as_str().unwrap_or("");
+            let mut prior: Vec<f64> = history
+                .iter()
+                .filter(|h| {
+                    h.get("bench").as_str() == Some(bench)
+                        && h.get("mode").as_str().unwrap_or("") == mode
+                        && h.get("quick").as_bool() == Some(quick)
+                })
+                .filter_map(|h| h.get("throughput").as_f64())
+                .collect();
+            if prior.is_empty() {
+                continue;
+            }
+            prior.sort_by(f64::total_cmp);
+            let baseline = prior[prior.len() / 2];
+            if cur < 0.8 * baseline {
+                regressions.push(format!(
+                    "{bench} [{mode}]: {cur:.3e} < 80% of median baseline {baseline:.3e} \
+                     ({} prior runs)",
+                    prior.len()
+                ));
+            }
+        }
+    }
+
+    let mut all = history;
+    all.extend(rows);
+    let artifact = Json::Arr(all).pretty();
     match std::fs::write("BENCH_hotpath.json", &artifact) {
-        Ok(()) => println!("trajectory written to BENCH_hotpath.json"),
+        Ok(()) => println!("trajectory written to BENCH_hotpath.json (run {run_id})"),
         Err(e) => {
             // The artifact IS the point of this harness (the CI job
             // uploads it as the perf trajectory); failing to write it
@@ -347,6 +418,13 @@ fn main() {
             eprintln!("could not write BENCH_hotpath.json: {e}");
             std::process::exit(1);
         }
+    }
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("perf ratchet: {r}");
+        }
+        eprintln!("perf ratchet: sustained >20% regression vs committed history");
+        std::process::exit(2);
     }
     println!("== hotpath done ==");
 }

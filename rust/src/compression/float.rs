@@ -18,10 +18,16 @@ impl FloatCodec for RawF32 {
 
     fn encode(&self, values: &[f32]) -> Vec<u8> {
         let mut out = Vec::with_capacity(values.len() * 4);
+        self.encode_into(values, &mut out);
+        out
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(values.len() * 4);
         for v in values {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        out
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
@@ -77,10 +83,16 @@ impl FloatCodec for Fp16 {
 
     fn encode(&self, values: &[f32]) -> Vec<u8> {
         let mut out = Vec::with_capacity(values.len() * 2);
+        self.encode_into(values, &mut out);
+        out
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(values.len() * 2);
         for &v in values {
             out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
         }
-        out
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {
@@ -133,12 +145,19 @@ impl FloatCodec for Qsgd {
     }
 
     fn encode(&self, values: &[f32]) -> Vec<u8> {
-        let linf = values.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
         let mut out = Vec::with_capacity(4 + values.len());
+        self.encode_into(values, &mut out);
+        out
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(4 + values.len());
+        let linf = values.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
         out.extend_from_slice(&linf.to_le_bytes());
         if linf == 0.0 {
             out.resize(4 + values.len(), 0x80); // all zeros, sign +
-            return out;
+            return;
         }
         let s = (self.levels - 1) as f32;
         let mut rng = Xoshiro256pp::new(mix_seed(&[self.seed, values.len() as u64]));
@@ -168,7 +187,6 @@ impl FloatCodec for Qsgd {
             };
             out.push(byte);
         }
-        out
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> Result<Vec<f32>> {

@@ -16,6 +16,14 @@ pub use index::*;
 pub trait FloatCodec: Send + Sync {
     fn name(&self) -> &'static str;
     fn encode(&self, values: &[f32]) -> Vec<u8>;
+    /// Encode into a reusable buffer (cleared + refilled); bytes are
+    /// identical to [`encode`](FloatCodec::encode). Every in-crate codec
+    /// overrides the allocating default, which is what lets the outgoing
+    /// path run allocation-free against a pooled payload buffer.
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) {
+        out.clear();
+        out.extend_from_slice(&self.encode(values));
+    }
     /// Decode; `n` is the expected element count (codecs may or may not
     /// need it, but the caller always knows it).
     fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>>;
@@ -234,6 +242,23 @@ mod tests {
             let mut dec = vec![7u32];
             decode_indices_best_into(&enc, dim, &mut dec).unwrap();
             assert_eq!(dec, idx);
+        }
+    }
+
+    #[test]
+    fn encode_into_matches_encode_and_reuses_capacity() {
+        let v = sample_values(1000, 12);
+        let codecs: [Box<dyn FloatCodec>; 3] =
+            [Box::new(RawF32), Box::new(Fp16), Box::new(Qsgd::new(64, 5))];
+        for c in &codecs {
+            let fresh = c.encode(&v);
+            let mut buf = vec![0xAAu8; 3]; // dirty, wrong-sized
+            c.encode_into(&v, &mut buf);
+            assert_eq!(buf, fresh, "{}", c.name());
+            let cap = buf.capacity();
+            c.encode_into(&v, &mut buf);
+            assert_eq!(buf, fresh, "{}", c.name());
+            assert_eq!(buf.capacity(), cap, "{}: steady-state encode grew", c.name());
         }
     }
 

@@ -97,8 +97,14 @@ pub struct ExperimentConfig {
     /// historical default) | `shared` (one copy-on-write
     /// [`crate::store::ParamStore`]; nodes materialize a private shard
     /// on first write, so memory is O(active divergence) and 4096+-node
-    /// fleets fit in one process). Bit-identical results either way.
+    /// fleets fit in one process) | `paged` (shared, but divergent
+    /// state is tracked per fixed-size *page* and byte-identical pages
+    /// are interned back into one copy, so memory is O(pages actually
+    /// written) — the 100k-node tier). Bit-identical results either way.
     pub param_store: String,
+    /// Page size in *elements* (f32 lanes) for `param_store: "paged"`;
+    /// ignored by the other modes. Must be > 0.
+    pub page_size: usize,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -137,6 +143,7 @@ impl Default for ExperimentConfig {
             runner: "scheduler".into(),
             workers: 0,
             param_store: "owned".into(),
+            page_size: 1024,
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -154,7 +161,7 @@ impl ExperimentConfig {
             "partition", "topology", "dynamic", "sharing", "mode", "deadline", "staleness",
             "late", "secure", "mask_scale", "churn",
             "churn_trace", "lr", "local_steps", "network", "step_time", "link_model",
-            "runner", "workers", "param_store", "artifacts_dir", "results_dir",
+            "runner", "workers", "param_store", "page_size", "artifacts_dir", "results_dir",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -199,6 +206,7 @@ impl ExperimentConfig {
             runner: s("runner", &d.runner),
             workers: n("workers", d.workers),
             param_store: s("param_store", &d.param_store),
+            page_size: n("page_size", d.page_size),
             artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(s("results_dir", "results")),
         };
@@ -246,6 +254,7 @@ impl ExperimentConfig {
             ("runner", Json::str(self.runner.clone())),
             ("workers", Json::num(self.workers as f64)),
             ("param_store", Json::str(self.param_store.clone())),
+            ("page_size", Json::num(self.page_size as f64)),
             ("artifacts_dir", Json::str(self.artifacts_dir.display().to_string())),
             ("results_dir", Json::str(self.results_dir.display().to_string())),
         ])
@@ -351,11 +360,14 @@ impl ExperimentConfig {
         // The coordinator owns the runner-name mapping; delegate so a new
         // runner only has to be registered in one place.
         crate::coordinator::runner_from_spec(&self.runner, self.workers).map(|_| ())?;
-        if !["owned", "shared"].contains(&self.param_store.as_str()) {
+        if !["owned", "shared", "paged"].contains(&self.param_store.as_str()) {
             bail!(
-                "unknown param_store {:?} (expected owned | shared)",
+                "unknown param_store {:?} (expected owned | shared | paged)",
                 self.param_store
             );
+        }
+        if self.page_size == 0 {
+            bail!("page_size must be > 0 (elements per page)");
         }
         if self.secure && self.dynamic {
             bail!("secure aggregation supports static topologies only");
@@ -427,7 +439,7 @@ mod tests {
         assert!(cfg.validate().is_err());
         cfg = ExperimentConfig::default();
         cfg.param_store = "mmap".into();
-        assert!(cfg.validate().is_err()); // owned | shared only
+        assert!(cfg.validate().is_err()); // owned | shared | paged only
         cfg = ExperimentConfig::default();
         cfg.secure = true;
         cfg.dynamic = true;
@@ -518,6 +530,12 @@ mod tests {
         cfg.runner = "scheduler".into();
         cfg.secure = true;
         cfg.validate().unwrap();
+        // Paged mode validates; a zero page size does not.
+        cfg = ExperimentConfig::default();
+        cfg.param_store = "paged".into();
+        cfg.validate().unwrap();
+        cfg.page_size = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

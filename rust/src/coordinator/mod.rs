@@ -225,10 +225,16 @@ pub trait Runner {
 }
 
 /// Build the per-run parameter slots: one fresh [`ParamStore`] over the
-/// prepared base snapshot in shared mode (a run must never see another
-/// run's materialized shards), plain per-node clones otherwise.
+/// prepared base snapshot in shared/paged mode (a run must never see
+/// another run's materialized shards), plain per-node clones otherwise.
 fn param_store_for(cfg: &ExperimentConfig, setup: &RunSetup) -> Option<ParamStore> {
-    (cfg.param_store == "shared").then(|| ParamStore::with_base(Arc::clone(&setup.init)))
+    match cfg.param_store.as_str() {
+        "shared" => Some(ParamStore::with_base(Arc::clone(&setup.init))),
+        "paged" => {
+            Some(ParamStore::with_base_paged(Arc::clone(&setup.init), cfg.page_size))
+        }
+        _ => None,
+    }
 }
 
 fn param_slot(store: &Option<ParamStore>, setup: &RunSetup) -> ParamSlot {

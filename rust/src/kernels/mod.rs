@@ -306,11 +306,12 @@ pub mod reference {
 /// `rust/tests/hotpath_alloc.rs`). Buffers are plain public fields —
 /// borrow them individually so disjoint field borrows coexist.
 ///
-/// The only per-round allocations left after the arena are the outgoing
-/// payload itself (it becomes a shared `Arc<[u8]>`
-/// [`crate::store::Payload`], which by construction cannot be reused)
-/// and O(k) sparse-selection output; `docs/PERFORMANCE.md` lists the
-/// full budget.
+/// Even the outgoing payload buffer is pooled here: broadcast handles
+/// park in `payloads` after each round and are refilled in place once
+/// every recipient has dropped theirs
+/// ([`checkout_payload`](Scratch::checkout_payload)), leaving only O(k)
+/// sparse-selection output as per-round allocation;
+/// `docs/PERFORMANCE.md` lists the full budget.
 #[derive(Default)]
 pub struct Scratch {
     /// Dense decode buffer (float codecs, staged neighbor values).
@@ -328,18 +329,52 @@ pub struct Scratch {
     pub doubles: Vec<f64>,
     /// Byte staging (index-codec blocks inside sparse payload builds).
     pub bytes: Vec<u8>,
+    /// Pooled broadcast payload handles: one parks here per round and is
+    /// reused once every recipient of that broadcast dropped its clone.
+    pub payloads: Vec<crate::store::Payload>,
 }
+
+/// Bound on parked payload handles: with the scheduler's one-broadcast-
+/// per-round cadence one slot cycles, so anything past a few means
+/// recipients are holding on (slow consumers) and pooling them is a
+/// leak, not a win.
+const PAYLOAD_POOL_CAP: usize = 4;
 
 impl Scratch {
     pub fn new() -> Scratch {
         Scratch::default()
     }
 
-    /// Capacities of every buffer, in declaration order. The
-    /// allocation-freeze test records this after a warm-up round and
-    /// asserts it never changes again: a stable signature means no
-    /// hot-path buffer reallocated.
-    pub fn capacity_signature(&self) -> [usize; 7] {
+    /// Pop a reusable broadcast payload out of the pool: the first
+    /// parked handle whose recipients have all dropped their clones.
+    /// `None` when every pooled payload is still in flight (the caller
+    /// falls back to a fresh buffer). Moving the handle *out* keeps the
+    /// borrow of its buffer disjoint from the rest of the arena.
+    pub fn checkout_payload(&mut self) -> Option<crate::store::Payload> {
+        let i = self.payloads.iter().position(crate::store::Payload::is_unique)?;
+        Some(self.payloads.swap_remove(i))
+    }
+
+    /// Park a broadcast payload handle for reuse next round. Bounded:
+    /// when the pool overflows, a still-shared handle is evicted first
+    /// (its buffer can never be reclaimed by us anyway).
+    pub fn retain_payload(&mut self, payload: crate::store::Payload) {
+        self.payloads.push(payload);
+        if self.payloads.len() > PAYLOAD_POOL_CAP {
+            let i = self
+                .payloads
+                .iter()
+                .position(|p| !p.is_unique())
+                .unwrap_or(0);
+            self.payloads.swap_remove(i);
+        }
+    }
+
+    /// Capacities of every buffer, in declaration order (the last entry
+    /// sums the pooled payload buffers). The allocation-freeze test
+    /// records this after a warm-up round and asserts it never changes
+    /// again: a stable signature means no hot-path buffer reallocated.
+    pub fn capacity_signature(&self) -> [usize; 8] {
         [
             self.dense.capacity(),
             self.dense2.capacity(),
@@ -348,6 +383,7 @@ impl Scratch {
             self.values.capacity(),
             self.doubles.capacity(),
             self.bytes.capacity(),
+            self.payloads.iter().map(|p| p.capacity()).sum(),
         ]
     }
 }
@@ -487,12 +523,39 @@ mod tests {
     fn scratch_signature_tracks_growth() {
         let mut s = Scratch::new();
         let sig0 = s.capacity_signature();
-        assert_eq!(sig0, [0; 7]);
+        assert_eq!(sig0, [0; 8]);
         s.dense.extend_from_slice(&[1.0; 16]);
         assert_ne!(s.capacity_signature(), sig0);
         let warm = s.capacity_signature();
         s.dense.clear();
         s.dense.extend_from_slice(&[2.0; 16]);
         assert_eq!(s.capacity_signature(), warm);
+    }
+
+    #[test]
+    fn payload_pool_checks_out_unique_handles_only() {
+        use crate::store::Payload;
+        let mut s = Scratch::new();
+        assert!(s.checkout_payload().is_none());
+        let p: Payload = vec![1u8, 2, 3].into();
+        let in_flight = p.clone(); // a recipient still holds the buffer
+        s.retain_payload(p);
+        assert!(s.checkout_payload().is_none());
+        drop(in_flight);
+        let mut reused = s.checkout_payload().expect("recipients gone, buffer reusable");
+        assert_eq!(&reused[..], &[1, 2, 3]);
+        assert!(reused.buf_mut().is_some());
+        assert!(s.checkout_payload().is_none()); // pool is empty again
+
+        // The pool stays bounded, evicting still-shared handles first.
+        let keep: Payload = vec![9u8; 8].into();
+        let held = keep.clone();
+        s.retain_payload(keep);
+        for _ in 0..6 {
+            s.retain_payload(vec![0u8; 4].into());
+        }
+        assert!(s.payloads.len() <= 4);
+        assert!(s.payloads.iter().all(Payload::is_unique));
+        drop(held);
     }
 }

@@ -80,7 +80,8 @@ fn print_usage() {
                 opt("late", "async late-delivery policy: buffer | drop", Some("buffer")),
                 opt("runner", "in-process runner: scheduler | threads (run mode)", Some("scheduler")),
                 opt("workers", "scheduler worker threads (0 = cores)", Some("0")),
-                opt("param-store", "model-state ownership: owned | shared (CoW shards + zero-copy broadcast)", Some("owned")),
+                opt("param-store", "model-state ownership: owned | shared (CoW shards + zero-copy broadcast) | paged (per-page CoW + interning)", Some("owned")),
+                opt("page-size", "elements per CoW page (paged store only)", Some("1024")),
                 opt("scenario", "scenario overlay JSON: step_time/link_model/churn_trace/network/churn", None),
                 opt("step-time-trace", "per-node compute: uniform | stragglers:<f>:<x> | lognormal:<s> | trace:<path>", Some("uniform")),
                 opt("link-model", "per-link delays: uniform | geo:<clusters> | matrix:<path>", Some("uniform")),
@@ -142,6 +143,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     }
     if let Some(p) = args.get("param-store") {
         cfg.param_store = p.to_string();
+    }
+    if let Some(p) = args.get("page-size") {
+        cfg.page_size = p.parse().context("--page-size")?;
     }
     if let Some(s) = args.get("step-time-trace") {
         cfg.step_time = s.to_string();
@@ -251,6 +255,14 @@ fn cmd_run(args: &Args) -> Result<()> {
             report.at_end.materialized_total,
             report.at_end.nodes,
         );
+        if report.at_end.page_size > 0 {
+            println!(
+                "store: paged ({} elems/page), {} divergent pages live ({})",
+                report.at_end.page_size,
+                report.at_end.live_pages,
+                util::human_bytes(report.at_end.page_bytes),
+            );
+        }
     }
     if args.flag("save") {
         let dir = result.save()?;

@@ -69,8 +69,8 @@ impl DlNode {
             let model = ParamVec::from_vec(new_params);
 
             // 3. Share with neighbors: serialize once, every envelope
-            //    shares the same payload buffer.
-            let payload: Payload = self.sharing.outgoing_with(&model, round, &mut scratch)?.into();
+            //    shares the same payload buffer (pooled across rounds).
+            let payload: Payload = self.sharing.outgoing_pooled(&model, round, &mut scratch)?;
             self.transport.note_serialized(payload.len());
             let bytes_before = self.transport.counters().bytes_sent;
             for &(nbr, _) in &assign.neighbors {

@@ -5,7 +5,11 @@
 //! # Event model
 //!
 //! The scheduler owns a **global virtual clock** and a priority queue of
-//! timestamped events. Three event kinds exist:
+//! timestamped events, physically laid out as **per-worker heap shards**
+//! (events land in the shard of their home node, `node % workers`; the
+//! drain loop pops the min of the shard heads by `(at, seq)`, so the
+//! event order — and the run — is bit-identical for every worker
+//! count). Four event kinds exist:
 //!
 //! * `Start` — a node's first activation at t = 0.
 //! * `Deliver` — a message arrival. Delivery timestamps come from the
@@ -320,7 +324,16 @@ pub struct Scheduler {
     links: Option<LinkModel>,
     workers: usize,
     nodes: Vec<Option<Box<dyn EventNode>>>,
-    queue: BinaryHeap<std::cmp::Reverse<Event>>,
+    /// Per-worker event heaps, sharded by the event's home node id
+    /// (`node % shards.len()`). One global heap serializes every push
+    /// and pop through a single `log n`-of-everything structure; at
+    /// fleet scale the heap becomes the scheduler's own hot spot.
+    /// Sharding keeps each heap `fleet / workers` deep while a
+    /// min-of-heads merge frontier preserves the exact `(at, seq)`
+    /// total order — `seq` is assigned globally at push, so pop order
+    /// is bit-identical to the single-heap scheduler for every worker
+    /// count (pinned by the workers-1/4/8 equivalence tests).
+    shards: Vec<BinaryHeap<std::cmp::Reverse<Event>>>,
     seq: u64,
     next_job: u64,
     next_timer: u64,
@@ -348,11 +361,12 @@ impl Scheduler {
     /// Like [`new`](Scheduler::new), but with a general [`LinkModel`]
     /// (a per-link matrix for WAN scenarios, or the uniform model).
     pub fn with_links(links: Option<LinkModel>, workers: usize) -> Scheduler {
+        let workers = workers.max(1);
         Scheduler {
             links,
-            workers: workers.max(1),
+            workers,
             nodes: Vec::new(),
-            queue: BinaryHeap::new(),
+            shards: (0..workers).map(|_| BinaryHeap::new()).collect(),
             seq: 0,
             next_job: 0,
             next_timer: 0,
@@ -408,10 +422,45 @@ impl Scheduler {
         self.dropped
     }
 
+    /// Heap shard an event lives in: keyed by the event's home node so
+    /// a node's wakes cluster, independent of who pushed them.
+    fn shard_of(&self, kind: &EventKind) -> usize {
+        let node = match kind {
+            EventKind::Start { node }
+            | EventKind::ComputeDone { node, .. }
+            | EventKind::Timer { node, .. } => *node,
+            EventKind::Deliver { env } => env.dst,
+        };
+        node % self.shards.len()
+    }
+
     fn push(&mut self, at: f64, kind: EventKind) {
         let seq = self.seq;
         self.seq += 1;
-        self.queue.push(std::cmp::Reverse(Event { at, seq, kind }));
+        let shard = self.shard_of(&kind);
+        self.shards[shard].push(std::cmp::Reverse(Event { at, seq, kind }));
+    }
+
+    /// Pop the globally next event: the minimum of the shard heads by
+    /// `(at, seq)`. `seq` is unique across shards, so the total order —
+    /// and therefore the run — is identical for every shard count.
+    fn pop_next(&mut self) -> Option<Event> {
+        let mut best: Option<(usize, f64, u64)> = None;
+        for (i, heap) in self.shards.iter().enumerate() {
+            if let Some(std::cmp::Reverse(ev)) = heap.peek() {
+                let better = match best {
+                    None => true,
+                    Some((_, at, seq)) => {
+                        ev.at.total_cmp(&at).then(ev.seq.cmp(&seq)) == Ordering::Less
+                    }
+                };
+                if better {
+                    best = Some((i, ev.at, ev.seq));
+                }
+            }
+        }
+        let (i, _, _) = best?;
+        self.shards[i].pop().map(|std::cmp::Reverse(ev)| ev)
     }
 
     /// Run to quiescence: process events in virtual-time order until the
@@ -463,7 +512,7 @@ impl Scheduler {
     }
 
     fn drain(&mut self, pool: &mut WorkerPool) -> Result<()> {
-        while let Some(std::cmp::Reverse(ev)) = self.queue.pop() {
+        while let Some(ev) = self.pop_next() {
             let (node, wake) = match ev.kind {
                 EventKind::Start { node } => {
                     if self.crashed(node, ev.at) {
@@ -624,6 +673,29 @@ mod tests {
             .map(|std::cmp::Reverse(e)| (e.at, e.seq))
             .collect();
         assert_eq!(order, vec![(0.5, 2), (1.0, 1), (1.0, 3), (2.0, 0)]);
+    }
+
+    #[test]
+    fn sharded_heaps_pop_in_global_time_seq_order() {
+        // Push events for many nodes (spread across the 4 shards) in a
+        // scrambled order; pop_next must yield the exact (at, seq) total
+        // order a single heap would — including the seq tiebreak among
+        // equal-time events living in *different* shards.
+        let mut s = Scheduler::new(None, 4);
+        let times = [3.0, 1.0, 2.0, 1.0, 0.5, 2.0, 1.0, 3.0, 0.5, 2.0, 1.0, 0.0];
+        for (node, at) in times.iter().enumerate() {
+            s.push(*at, EventKind::Start { node });
+        }
+        assert!(s.shards.iter().filter(|h| !h.is_empty()).count() > 1);
+        let mut popped = Vec::new();
+        while let Some(ev) = s.pop_next() {
+            popped.push((ev.at, ev.seq));
+        }
+        assert_eq!(popped.len(), times.len());
+        let mut want: Vec<(f64, u64)> =
+            times.iter().enumerate().map(|(seq, at)| (*at, seq as u64)).collect();
+        want.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        assert_eq!(popped, want);
     }
 
     /// Sends `burst` messages at start, then waits for `burst` replies.

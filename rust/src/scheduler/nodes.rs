@@ -313,11 +313,12 @@ impl EventNode for DlNodeSm {
                     self.train_loss = loss;
                     let model = ParamVec::from_vec(params);
                     // Serialize once; every neighbor's envelope shares
-                    // the same buffer (zero-copy broadcast).
+                    // the same buffer (zero-copy broadcast), and the
+                    // buffer itself comes from the arena's payload pool
+                    // once recipients of earlier rounds let go.
                     let payload: Payload = self
                         .sharing
-                        .outgoing_with(&model, self.round, &mut self.scratch)?
-                        .into();
+                        .outgoing_pooled(&model, self.round, &mut self.scratch)?;
                     ctx.note_serialized(payload.len());
                     let assign = self.assign.as_ref().context("no neighbor assignment")?;
                     for &(nbr, _) in &assign.neighbors {
@@ -1024,11 +1025,11 @@ impl EventNode for AsyncDlNodeSm {
                     self.trainer = Some(trainer);
                     self.train_loss = loss;
                     let model = ParamVec::from_vec(params);
-                    // One serialization, shared by every recipient.
+                    // One serialization, shared by every recipient —
+                    // in a pooled buffer reused across rounds.
                     let payload: Payload = self
                         .sharing
-                        .outgoing_with(&model, self.round, &mut self.scratch)?
-                        .into();
+                        .outgoing_pooled(&model, self.round, &mut self.scratch)?;
                     ctx.note_serialized(payload.len());
                     for &(nbr, _) in &self.neighbors {
                         ctx.send(Envelope {

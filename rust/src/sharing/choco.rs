@@ -23,7 +23,7 @@ use anyhow::{bail, Result};
 use crate::kernels::{self, Scratch};
 use crate::model::{topk_of, ParamVec};
 
-use super::{decode_sparse_into, encode_sparse_parts, Received, Sharing};
+use super::{decode_sparse_into, encode_sparse_parts_into, Received, Sharing};
 
 pub struct ChocoSgd {
     budget: f64,
@@ -80,12 +80,13 @@ impl Sharing for ChocoSgd {
         ChocoSgd::set_init(self, init);
     }
 
-    fn outgoing_with(
+    fn outgoing_into(
         &mut self,
         model: &ParamVec,
         _round: u64,
         scratch: &mut Scratch,
-    ) -> Result<Vec<u8>> {
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
         if !self.init_set {
             // Fallback: treat the first observed model as the common init.
             self.set_init(model);
@@ -111,12 +112,14 @@ impl Sharing for ChocoSgd {
             &scratch.indices,
             &scratch.values,
         );
-        Ok(encode_sparse_parts(
+        encode_sparse_parts_into(
             &scratch.indices,
             &scratch.values,
             self.dim,
             &mut scratch.bytes,
-        ))
+            out,
+        );
+        Ok(())
     }
 
     fn aggregate_with(

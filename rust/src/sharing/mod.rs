@@ -40,6 +40,7 @@ use anyhow::{bail, Context, Result};
 use crate::compression::{decode_indices_best_into, encode_indices_best_into};
 use crate::kernels::{self, Scratch};
 use crate::model::{ParamVec, SparseVec};
+use crate::store::Payload;
 
 /// A received model message ready for aggregation.
 pub struct Received<'a> {
@@ -73,16 +74,55 @@ pub trait Sharing: Send {
         self.outgoing_with(model, round, &mut Scratch::new())
     }
 
+    /// [`outgoing`](Sharing::outgoing) into a caller-owned scratch
+    /// arena and output buffer (cleared + refilled). This is the one
+    /// required outgoing method: strategies write their payload bytes
+    /// into `out`, so the caller decides whether those bytes land in a
+    /// fresh vector ([`outgoing_with`](Sharing::outgoing_with)) or a
+    /// pooled broadcast buffer
+    /// ([`outgoing_pooled`](Sharing::outgoing_pooled)) — both are
+    /// bit-identical by construction.
+    fn outgoing_into(
+        &mut self,
+        model: &ParamVec,
+        round: u64,
+        scratch: &mut Scratch,
+        out: &mut Vec<u8>,
+    ) -> Result<()>;
+
     /// [`outgoing`](Sharing::outgoing) with a caller-owned scratch
-    /// arena for every intermediate buffer. The returned payload vector
-    /// is the one unavoidable allocation: it becomes the broadcast's
-    /// shared `Arc<[u8]>` and cannot be reused.
+    /// arena, returning the payload as a fresh vector.
     fn outgoing_with(
         &mut self,
         model: &ParamVec,
         round: u64,
         scratch: &mut Scratch,
-    ) -> Result<Vec<u8>>;
+    ) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.outgoing_into(model, round, scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Build this round's payload in a pooled broadcast buffer from the
+    /// arena ([`Scratch::checkout_payload`]): byte-identical to
+    /// [`outgoing_with`](Sharing::outgoing_with), but once the pool is
+    /// warm — i.e. every recipient of a previous broadcast dropped its
+    /// handle — the outgoing path performs zero heap allocations. A
+    /// clone of the returned payload parks back in the arena for the
+    /// next round.
+    fn outgoing_pooled(
+        &mut self,
+        model: &ParamVec,
+        round: u64,
+        scratch: &mut Scratch,
+    ) -> Result<Payload> {
+        let mut payload = scratch.checkout_payload().unwrap_or_default();
+        let buf = payload.buf_mut().expect("checked-out payload has other holders");
+        buf.clear();
+        self.outgoing_into(model, round, scratch, buf)?;
+        scratch.retain_payload(payload.clone());
+        Ok(payload)
+    }
 
     /// Merge received messages into `model`. `self_weight` is the node's
     /// own mixing weight (1 - sum of neighbor weights).
@@ -154,22 +194,36 @@ pub fn encode_sparse(sv: &SparseVec) -> Vec<u8> {
 }
 
 /// [`encode_sparse`] from raw index/value slices, staging the index
-/// block in `idx_scratch` (cleared + refilled). The returned vector is
-/// the payload itself — the one allocation a sparse broadcast keeps.
+/// block in `idx_scratch` (cleared + refilled).
 pub fn encode_sparse_parts(
     indices: &[u32],
     values: &[f32],
     dim: usize,
     idx_scratch: &mut Vec<u8>,
 ) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_sparse_parts_into(indices, values, dim, idx_scratch, &mut out);
+    out
+}
+
+/// [`encode_sparse_parts`] into a reusable payload buffer (cleared +
+/// refilled) — with a pooled buffer, a warm sparse broadcast allocates
+/// nothing at all.
+pub fn encode_sparse_parts_into(
+    indices: &[u32],
+    values: &[f32],
+    dim: usize,
+    idx_scratch: &mut Vec<u8>,
+    out: &mut Vec<u8>,
+) {
     encode_indices_best_into(indices, dim, idx_scratch);
-    let mut out = Vec::with_capacity(4 + idx_scratch.len() + 4 * values.len());
+    out.clear();
+    out.reserve(4 + idx_scratch.len() + 4 * values.len());
     out.extend_from_slice(&(idx_scratch.len() as u32).to_le_bytes());
     out.extend_from_slice(idx_scratch);
     for v in values {
         out.extend_from_slice(&v.to_le_bytes());
     }
-    out
 }
 
 /// Inverse of [`encode_sparse`] for a model of dimension `dim`.
@@ -355,6 +409,43 @@ mod tests {
         let mut idx_scratch = vec![0xAAu8; 9]; // dirty
         let parts = encode_sparse_parts(&sv.indices, &sv.values, sv.dim, &mut idx_scratch);
         assert_eq!(parts, encode_sparse(&sv));
+    }
+
+    #[test]
+    fn outgoing_pooled_matches_outgoing_with_and_reuses_buffer() {
+        use crate::rng::Xoshiro256pp;
+        let dim = 64;
+        let mut rng = Xoshiro256pp::new(7);
+        for spec in ["full", "full:fp16", "subsample:0.25", "topk:0.25", "choco:0.25:0.5", "quant:64"] {
+            let init = ParamVec::zeros(dim);
+            let mut a = from_spec(spec, dim, 3).unwrap();
+            let mut b = from_spec(spec, dim, 3).unwrap();
+            a.set_init(&init);
+            b.set_init(&init);
+            let (mut sa, mut sb) = (Scratch::new(), Scratch::new());
+            let mut model = ParamVec::random(dim, 1.0, &mut rng);
+            let mut prev_ptr = None;
+            for round in 0..3u64 {
+                let plain = a.outgoing_with(&model, round, &mut sa).unwrap();
+                let pooled = b.outgoing_pooled(&model, round, &mut sb).unwrap();
+                assert_eq!(&pooled[..], &plain[..], "{spec} round {round}");
+                let ptr = pooled.as_slice().as_ptr() as usize;
+                if let Some(prev) = prev_ptr {
+                    // Fixed-size payloads: the pooled buffer is reused,
+                    // not reallocated, once the previous handle dropped.
+                    // (Sparse payloads may regrow while their adaptive
+                    // index block settles, so only equality is pinned.)
+                    if matches!(spec, "full" | "full:fp16" | "quant:64") {
+                        assert_eq!(ptr, prev, "{spec} round {round}: pooled buffer not reused");
+                    }
+                }
+                prev_ptr = Some(ptr);
+                drop(pooled); // all recipients let go before the next round
+                for v in model.as_mut_slice().iter_mut() {
+                    *v += rng.normal_f32(0.0, 0.1);
+                }
+            }
+        }
     }
 
     #[test]

@@ -27,13 +27,15 @@ impl Sharing for Quantized {
         "quant"
     }
 
-    fn outgoing_with(
+    fn outgoing_into(
         &mut self,
         model: &ParamVec,
         _round: u64,
         _scratch: &mut Scratch,
-    ) -> Result<Vec<u8>> {
-        Ok(self.codec.encode(model.as_slice()))
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        self.codec.encode_into(model.as_slice(), out);
+        Ok(())
     }
 
     fn aggregate_with(

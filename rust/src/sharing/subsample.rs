@@ -7,7 +7,7 @@ use crate::kernels::Scratch;
 use crate::model::ParamVec;
 use crate::rng::{mix_seed, Xoshiro256pp};
 
-use super::{aggregate_sparse_absolute_with, encode_sparse_parts, Received, Sharing};
+use super::{aggregate_sparse_absolute_with, encode_sparse_parts_into, Received, Sharing};
 
 pub struct SubSampling {
     budget: f64,
@@ -35,14 +35,16 @@ impl Sharing for SubSampling {
         "subsample"
     }
 
-    fn outgoing_with(
+    fn outgoing_into(
         &mut self,
         model: &ParamVec,
         _round: u64,
         scratch: &mut Scratch,
-    ) -> Result<Vec<u8>> {
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
         let sv = model.sample_k(self.k(), &mut self.rng);
-        Ok(encode_sparse_parts(&sv.indices, &sv.values, sv.dim, &mut scratch.bytes))
+        encode_sparse_parts_into(&sv.indices, &sv.values, sv.dim, &mut scratch.bytes, out);
+        Ok(())
     }
 
     fn aggregate_with(

@@ -14,7 +14,7 @@ use anyhow::Result;
 use crate::kernels::{self, Scratch};
 use crate::model::{topk_of, ParamVec};
 
-use super::{aggregate_sparse_absolute_with, encode_sparse_parts, Received, Sharing};
+use super::{aggregate_sparse_absolute_with, encode_sparse_parts_into, Received, Sharing};
 
 pub struct TopK {
     budget: f64,
@@ -41,12 +41,13 @@ impl Sharing for TopK {
         "topk"
     }
 
-    fn outgoing_with(
+    fn outgoing_into(
         &mut self,
         model: &ParamVec,
         _round: u64,
         scratch: &mut Scratch,
-    ) -> Result<Vec<u8>> {
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
         if !self.initialized {
             // First round: everyone knows the common init; change = model
             // - init is not defined here, so share the largest-magnitude
@@ -60,12 +61,14 @@ impl Sharing for TopK {
                 &mut scratch.indices,
                 &mut scratch.values,
             );
-            return Ok(encode_sparse_parts(
+            encode_sparse_parts_into(
                 &scratch.indices,
                 &scratch.values,
                 self.dim,
                 &mut scratch.bytes,
-            ));
+                out,
+            );
+            return Ok(());
         }
         // Change since last shared, per coordinate, staged in the arena.
         scratch.dense2.clear();
@@ -84,12 +87,14 @@ impl Sharing for TopK {
             *v = model.as_slice()[i as usize];
             self.last_shared.as_mut_slice()[i as usize] = *v;
         }
-        Ok(encode_sparse_parts(
+        encode_sparse_parts_into(
             &scratch.indices,
             &scratch.values,
             self.dim,
             &mut scratch.bytes,
-        ))
+            out,
+        );
+        Ok(())
     }
 
     fn aggregate_with(

@@ -17,9 +17,19 @@
 //!   divergence): nodes that never train (offline churn sessions,
 //!   late-joining cohorts) cost nothing, and a departing node releases
 //!   its shard back ([`ParamsRef::release`]).
-//! * **Zero-copy broadcast** — [`Payload`] (an `Arc<[u8]>` buffer) lets
+//! * **Paged shards + interning** (`param_store = "paged"`) — the base
+//!   is split into fixed-size pages (`page_size` f32 elements); a write
+//!   only materializes the pages whose bytes actually differ from the
+//!   base, and every divergent page is *interned*: hashed on
+//!   [`ParamsRef::put`] and deduplicated store-wide, so two nodes whose
+//!   aggregation converged onto the same page content share one copy,
+//!   and a page that reconverges to the base bit-for-bit is folded back
+//!   and its bytes reclaimed. Resident memory is O(unique divergent
+//!   pages), the term that makes the 100k-node tier fit in RAM.
+//! * **Zero-copy broadcast** — [`Payload`] (a shared byte buffer) lets
 //!   a node serialize its outgoing model once per round and share the
-//!   allocation across every recipient's queue.
+//!   allocation across every recipient's queue; unique buffers can be
+//!   pooled and refilled in place (see `Scratch::checkout_payload`).
 //! * **Accounting** — the store counts live shards, shared bytes, and
 //!   peak resident parameter bytes ([`StoreStats`]); runs export a
 //!   [`StoreReport`] into the results directory (`store.jsonl`) and the
@@ -52,30 +62,72 @@
 //! training round. `InFlight` means the vector is temporarily outside
 //! the store (owned by a worker-pool compute job); its bytes stay
 //! charged to the store until `release`.
+//!
+//! In paged mode the lifecycle is per *page*: `take_for_write` always
+//! assembles (and transiently charges) one full working vector, but
+//! `put` diffs it page-by-page against the base and only the divergent
+//! pages stay resident — interned, refcounted, and reclaimed the moment
+//! the last holder reconverges or departs.
 
 mod payload;
 
 pub use payload::Payload;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::util::json::Json;
 
+/// FNV-1a over the page's f32 bit patterns — the intern table's content
+/// hash. Bit-exact on purpose: `-0.0` vs `0.0` (and NaN payloads) must
+/// not be conflated, or paged runs would stop being bit-identical to
+/// owned ones.
+fn page_hash(vals: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in vals {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Bit-exact page equality (the comparison backing both interning and
+/// the fold-back-to-base check).
+fn pages_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
 /// One node's shard state inside the store.
 enum Slot {
     /// Never written: reads resolve to the shared base snapshot.
     Shared,
-    /// Materialized private shard.
+    /// Materialized private shard (unpaged stores).
     Owned(Vec<f32>),
     /// Taken for write; the vector is out with a compute job.
     InFlight,
+    /// Paged store: per-page view. `None` reads through to the base
+    /// page, `Some` is an interned divergent page.
+    Paged(Vec<Option<Arc<[f32]>>>),
+    /// Paged store, taken for write: the assembled vector is out with
+    /// the writer; the old pages stay charged until `put` diffs the
+    /// returned vector against them.
+    PagedInFlight(Vec<Option<Arc<[f32]>>>),
     /// Handle released (node departed / dropped); bytes returned.
     Released,
 }
 
 struct StoreInner {
     base: Arc<[f32]>,
+    /// Page size in f32 elements; 0 = unpaged (whole-shard CoW).
+    page_size: usize,
+    /// Content-addressed divergent pages, keyed by [`page_hash`] with a
+    /// bucket per hash for collisions. The table holds one reference to
+    /// each page; slots hold the rest. All intern/unintern transitions
+    /// happen under this lock, so refcount checks are race-free.
+    intern: Mutex<HashMap<u64, Vec<Arc<[f32]>>>>,
     /// Registered handles (shards are locked per-node, not globally —
     /// one node's materialization or eval snapshot never serializes
     /// another node's store access).
@@ -84,6 +136,8 @@ struct StoreInner {
     materialized_total: AtomicU64,
     resident_bytes: AtomicU64,
     peak_resident_bytes: AtomicU64,
+    live_pages: AtomicU64,
+    page_bytes: AtomicU64,
 }
 
 impl StoreInner {
@@ -91,19 +145,114 @@ impl StoreInner {
         (self.base.len() * std::mem::size_of::<f32>()) as u64
     }
 
-    /// Charge one newly materialized shard.
+    fn paged(&self) -> bool {
+        self.page_size > 0
+    }
+
+    fn page_count(&self) -> usize {
+        (self.base.len() + self.page_size - 1) / self.page_size
+    }
+
+    /// Element range of page `p` (the last page may be short).
+    fn page_range(&self, p: usize) -> std::ops::Range<usize> {
+        let start = p * self.page_size;
+        start..(start + self.page_size).min(self.base.len())
+    }
+
+    /// Charge `bytes` of resident parameter memory, updating the peak.
+    fn charge(&self, bytes: u64) {
+        let now = self.resident_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.peak_resident_bytes.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Return `bytes` of resident parameter memory.
+    fn discharge(&self, bytes: u64) {
+        self.resident_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+
+    /// Charge one newly materialized shard (unpaged stores).
     fn on_materialize(&self) {
         self.live_shards.fetch_add(1, Ordering::Relaxed);
         self.materialized_total.fetch_add(1, Ordering::Relaxed);
-        let bytes = self.shard_bytes();
-        let now = self.resident_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
-        self.peak_resident_bytes.fetch_max(now, Ordering::Relaxed);
+        self.charge(self.shard_bytes());
     }
 
     /// Return one shard's bytes (release of a materialized shard).
     fn on_release(&self) {
         self.live_shards.fetch_sub(1, Ordering::Relaxed);
-        self.resident_bytes.fetch_sub(self.shard_bytes(), Ordering::Relaxed);
+        self.discharge(self.shard_bytes());
+    }
+
+    /// Copy a paged view out into one contiguous vector.
+    fn assemble(&self, pages: &[Option<Arc<[f32]>>]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.base.len());
+        for (p, pg) in pages.iter().enumerate() {
+            match pg {
+                None => out.extend_from_slice(&self.base[self.page_range(p)]),
+                Some(pg) => out.extend_from_slice(pg),
+            }
+        }
+        out
+    }
+
+    /// Look the page content up in the intern table, inserting a fresh
+    /// copy on miss. The returned handle is the slot's reference; the
+    /// table keeps one of its own, so a freshly interned page has a
+    /// strong count of 2.
+    fn intern_page(&self, vals: &[f32]) -> Arc<[f32]> {
+        let mut table = self.intern.lock().unwrap();
+        let bucket = table.entry(page_hash(vals)).or_default();
+        for pg in bucket.iter() {
+            if pages_equal(pg, vals) {
+                return Arc::clone(pg);
+            }
+        }
+        let pg: Arc<[f32]> = Arc::from(vals);
+        bucket.push(Arc::clone(&pg));
+        self.live_pages.fetch_add(1, Ordering::Relaxed);
+        let bytes = (vals.len() * std::mem::size_of::<f32>()) as u64;
+        self.page_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.charge(bytes);
+        pg
+    }
+
+    /// Drop one slot's reference to an interned page. When the table's
+    /// own copy is the only other holder, the page is reclaimed and its
+    /// bytes returned.
+    fn unintern_page(&self, pg: Arc<[f32]>) {
+        let mut table = self.intern.lock().unwrap();
+        let hash = page_hash(&pg);
+        let Some(bucket) = table.get_mut(&hash) else { return };
+        let Some(i) = bucket.iter().position(|q| Arc::ptr_eq(q, &pg)) else { return };
+        // `pg` (the slot's handle) + the table entry are two counts;
+        // anything above means other slots still share this page. New
+        // references are only minted under the table lock we hold.
+        if Arc::strong_count(&pg) == 2 {
+            bucket.swap_remove(i);
+            if bucket.is_empty() {
+                table.remove(&hash);
+            }
+            self.live_pages.fetch_sub(1, Ordering::Relaxed);
+            let bytes = (pg.len() * std::mem::size_of::<f32>()) as u64;
+            self.page_bytes.fetch_sub(bytes, Ordering::Relaxed);
+            self.discharge(bytes);
+        }
+    }
+
+    /// Release a paged slot's pages (departure path).
+    fn release_pages(&self, pages: Vec<Option<Arc<[f32]>>>, in_flight: bool) {
+        let diverged = pages.iter().any(Option::is_some);
+        for pg in pages.into_iter().flatten() {
+            self.unintern_page(pg);
+        }
+        if diverged {
+            self.live_shards.fetch_sub(1, Ordering::Relaxed);
+        }
+        if in_flight {
+            // The assembled vector is out with a job that will never
+            // put it back; its transient charge is returned here.
+            self.discharge(self.shard_bytes());
+        }
     }
 }
 
@@ -122,6 +271,12 @@ pub struct StoreStats {
     pub resident_bytes: u64,
     /// High-water mark of `resident_bytes`.
     pub peak_resident_bytes: u64,
+    /// CoW page size in f32 elements (0 = unpaged store).
+    pub page_size: u64,
+    /// Unique divergent pages currently interned (paged stores only).
+    pub live_pages: u64,
+    /// Bytes of interned divergent pages (subset of `resident_bytes`).
+    pub page_bytes: u64,
 }
 
 impl StoreStats {
@@ -133,6 +288,9 @@ impl StoreStats {
             ("materialized_total", Json::num(self.materialized_total as f64)),
             ("resident_bytes", Json::num(self.resident_bytes as f64)),
             ("peak_resident_bytes", Json::num(self.peak_resident_bytes as f64)),
+            ("page_size", Json::num(self.page_size as f64)),
+            ("live_pages", Json::num(self.live_pages as f64)),
+            ("page_bytes", Json::num(self.page_bytes as f64)),
         ])
     }
 }
@@ -174,23 +332,44 @@ pub struct ParamStore {
 }
 
 impl ParamStore {
-    /// Build a store over a shared base snapshot (the common model init).
-    pub fn with_base(base: Arc<[f32]>) -> ParamStore {
+    fn build(base: Arc<[f32]>, page_size: usize) -> ParamStore {
         ParamStore {
             inner: Arc::new(StoreInner {
                 base,
+                page_size,
+                intern: Mutex::new(HashMap::new()),
                 nodes: AtomicU64::new(0),
                 live_shards: AtomicU64::new(0),
                 materialized_total: AtomicU64::new(0),
                 resident_bytes: AtomicU64::new(0),
                 peak_resident_bytes: AtomicU64::new(0),
+                live_pages: AtomicU64::new(0),
+                page_bytes: AtomicU64::new(0),
             }),
         }
+    }
+
+    /// Build a store over a shared base snapshot (the common model init).
+    pub fn with_base(base: Arc<[f32]>) -> ParamStore {
+        ParamStore::build(base, 0)
+    }
+
+    /// Build a *paged* store: writes materialize only the `page_size`-
+    /// element pages that differ from the base, and divergent pages are
+    /// interned store-wide (`param_store = "paged"`).
+    pub fn with_base_paged(base: Arc<[f32]>, page_size: usize) -> ParamStore {
+        assert!(page_size > 0, "page_size must be >= 1 (f32 elements per page)");
+        ParamStore::build(base, page_size)
     }
 
     /// Convenience for tests: wrap a plain vector as the base.
     pub fn from_vec(base: Vec<f32>) -> ParamStore {
         ParamStore::with_base(base.into())
+    }
+
+    /// Convenience for tests: paged variant of [`from_vec`](ParamStore::from_vec).
+    pub fn from_vec_paged(base: Vec<f32>, page_size: usize) -> ParamStore {
+        ParamStore::with_base_paged(base.into(), page_size)
     }
 
     /// Parameter-vector dimension (every shard has it).
@@ -217,6 +396,9 @@ impl ParamStore {
             materialized_total: self.inner.materialized_total.load(Ordering::Relaxed),
             resident_bytes: self.inner.resident_bytes.load(Ordering::Relaxed),
             peak_resident_bytes: self.inner.peak_resident_bytes.load(Ordering::Relaxed),
+            page_size: self.inner.page_size as u64,
+            live_pages: self.inner.live_pages.load(Ordering::Relaxed),
+            page_bytes: self.inner.page_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -240,9 +422,14 @@ impl ParamsRef {
         self.store.base.len()
     }
 
-    /// True once this node has materialized a private shard.
+    /// True once this node has materialized private state: a whole
+    /// shard (unpaged) or at least one divergent page (paged).
     pub fn materialized(&self) -> bool {
-        matches!(*self.slot.lock().unwrap(), Slot::Owned(_) | Slot::InFlight)
+        match &*self.slot.lock().unwrap() {
+            Slot::Owned(_) | Slot::InFlight | Slot::PagedInFlight(_) => true,
+            Slot::Paged(pages) => pages.iter().any(Option::is_some),
+            Slot::Shared | Slot::Released => false,
+        }
     }
 
     /// Take the parameters out for mutation (training). The first call
@@ -252,6 +439,9 @@ impl ParamsRef {
     /// put is a node-logic bug and panics (mirrors the one-compute-per-
     /// wake assertion in the scheduler).
     pub fn take_for_write(&self) -> Vec<f32> {
+        if self.store.paged() {
+            return self.take_for_write_paged();
+        }
         let prior = {
             let mut slot = self.slot.lock().unwrap();
             std::mem::replace(&mut *slot, Slot::InFlight)
@@ -266,13 +456,45 @@ impl ParamsRef {
             Slot::Owned(v) => v,
             Slot::InFlight => panic!("shard {} already taken for write", self.id),
             Slot::Released => panic!("shard {} used after release", self.id),
+            Slot::Paged(_) | Slot::PagedInFlight(_) => {
+                unreachable!("paged slot in an unpaged store")
+            }
         }
+    }
+
+    /// Paged stores always hand out a freshly assembled full vector and
+    /// charge it transiently; `put` diffs it page-by-page and only the
+    /// divergent pages stay resident.
+    fn take_for_write_paged(&self) -> Vec<f32> {
+        let mut slot = self.slot.lock().unwrap();
+        let out = match std::mem::replace(&mut *slot, Slot::InFlight) {
+            Slot::Shared => {
+                *slot = Slot::PagedInFlight(vec![None; self.store.page_count()]);
+                self.store.base.to_vec()
+            }
+            Slot::Paged(pages) => {
+                let v = self.store.assemble(&pages);
+                *slot = Slot::PagedInFlight(pages);
+                v
+            }
+            Slot::InFlight | Slot::PagedInFlight(_) => {
+                panic!("shard {} already taken for write", self.id)
+            }
+            Slot::Released => panic!("shard {} used after release", self.id),
+            Slot::Owned(_) => unreachable!("owned slot in a paged store"),
+        };
+        drop(slot);
+        self.store.charge(self.store.shard_bytes());
+        out
     }
 
     /// Return the (possibly mutated) parameters taken with
     /// [`take_for_write`](ParamsRef::take_for_write).
     pub fn put(&self, params: Vec<f32>) {
         assert_eq!(params.len(), self.store.base.len(), "shard dimension changed");
+        if self.store.paged() {
+            return self.put_paged(&params);
+        }
         let mut slot = self.slot.lock().unwrap();
         assert!(
             matches!(*slot, Slot::InFlight),
@@ -282,15 +504,76 @@ impl ParamsRef {
         *slot = Slot::Owned(params);
     }
 
-    /// Run `f` over the current view without copying (base until the
-    /// first write, the private shard after). Holds only this node's
-    /// shard lock for the duration.
+    /// Diff the returned vector against the base page-by-page: pages
+    /// that match the base bit-for-bit fold back (reconvergence reclaims
+    /// their bytes), the rest are interned so identical divergent pages
+    /// are stored once fleet-wide. Stale pages are released *before*
+    /// their replacements are interned, so the steady-state peak tracks
+    /// live pages plus one in-flight vector, not a transient double
+    /// copy.
+    fn put_paged(&self, params: &[f32]) {
+        let mut slot = self.slot.lock().unwrap();
+        let old_pages = match std::mem::replace(&mut *slot, Slot::InFlight) {
+            Slot::PagedInFlight(pages) => pages,
+            _ => panic!("put without a matching take_for_write on shard {}", self.id),
+        };
+        let was_diverged = old_pages.iter().any(Option::is_some);
+        let mut new_pages: Vec<Option<Arc<[f32]>>> = Vec::with_capacity(old_pages.len());
+        for (p, old) in old_pages.into_iter().enumerate() {
+            let range = self.store.page_range(p);
+            let vals = &params[range.clone()];
+            if pages_equal(vals, &self.store.base[range]) {
+                if let Some(pg) = old {
+                    self.store.unintern_page(pg);
+                }
+                new_pages.push(None);
+            } else if let Some(pg) = old {
+                if pages_equal(vals, &pg) {
+                    new_pages.push(Some(pg));
+                } else {
+                    self.store.unintern_page(pg);
+                    new_pages.push(Some(self.store.intern_page(vals)));
+                }
+            } else {
+                new_pages.push(Some(self.store.intern_page(vals)));
+            }
+        }
+        let now_diverged = new_pages.iter().any(Option::is_some);
+        match (was_diverged, now_diverged) {
+            (false, true) => {
+                self.store.live_shards.fetch_add(1, Ordering::Relaxed);
+                self.store.materialized_total.fetch_add(1, Ordering::Relaxed);
+            }
+            (true, false) => {
+                self.store.live_shards.fetch_sub(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        *slot = Slot::Paged(new_pages);
+        drop(slot);
+        // The in-flight full-vector copy returns with this put.
+        self.store.discharge(self.store.shard_bytes());
+    }
+
+    /// Run `f` over the current view (base until the first write, the
+    /// private shard after). Copy-free except for paged slots with
+    /// divergent pages, which assemble a temporary contiguous vector.
+    /// Holds only this node's shard lock for the duration.
     pub fn with<R>(&self, f: impl FnOnce(&[f32]) -> R) -> R {
         let slot = self.slot.lock().unwrap();
         match &*slot {
             Slot::Shared => f(&self.store.base),
             Slot::Owned(v) => f(v),
-            Slot::InFlight => panic!("shard {} is taken for write", self.id),
+            Slot::Paged(pages) => {
+                if pages.iter().all(Option::is_none) {
+                    f(&self.store.base)
+                } else {
+                    f(&self.store.assemble(pages))
+                }
+            }
+            Slot::InFlight | Slot::PagedInFlight(_) => {
+                panic!("shard {} is taken for write", self.id)
+            }
             Slot::Released => panic!("shard {} used after release", self.id),
         }
     }
@@ -304,7 +587,10 @@ impl ParamsRef {
             match &*slot {
                 Slot::Shared => {} // fall through: copy base lock-free
                 Slot::Owned(v) => return v.clone(),
-                Slot::InFlight => panic!("shard {} is taken for write", self.id),
+                Slot::Paged(pages) => return self.store.assemble(pages),
+                Slot::InFlight | Slot::PagedInFlight(_) => {
+                    panic!("shard {} is taken for write", self.id)
+                }
                 Slot::Released => panic!("shard {} used after release", self.id),
             }
         }
@@ -322,6 +608,8 @@ impl ParamsRef {
             // An in-flight vector is out with a compute job that will
             // never put it back; its charge is returned here either way.
             Slot::Owned(_) | Slot::InFlight => self.store.on_release(),
+            Slot::Paged(pages) => self.store.release_pages(pages, false),
+            Slot::PagedInFlight(pages) => self.store.release_pages(pages, true),
             Slot::Shared | Slot::Released => {}
         }
     }
@@ -508,6 +796,100 @@ mod tests {
         owned.release();
         stored.release();
         assert_eq!(store.stats().live_shards, 0);
+    }
+
+    #[test]
+    fn paged_first_write_materializes_only_written_pages() {
+        let store = ParamStore::from_vec_paged(vec![0.5; 8], 2); // 4 pages of 2 f32
+        let a = store.register();
+        let mut v = a.take_for_write();
+        assert_eq!(v, vec![0.5; 8]);
+        v[3] = 9.0; // dirties page 1 only
+        a.put(v);
+        assert!(a.materialized());
+        assert_eq!(a.to_vec()[3], 9.0);
+        a.with(|v| assert_eq!(v[2], 0.5));
+        let s = store.stats();
+        assert_eq!(s.page_size, 2);
+        assert_eq!(s.live_shards, 1);
+        assert_eq!(s.materialized_total, 1);
+        assert_eq!(s.live_pages, 1);
+        assert_eq!(s.page_bytes, 8);
+        // One 8-byte page resident, not the 32-byte shard; the peak saw
+        // the page plus the transient in-flight copy.
+        assert_eq!(s.resident_bytes, 8);
+        assert_eq!(s.peak_resident_bytes, 32 + 8);
+        a.release();
+        let s = store.stats();
+        assert_eq!(s.live_pages, 0);
+        assert_eq!(s.live_shards, 0);
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.peak_resident_bytes, 40);
+    }
+
+    #[test]
+    fn paged_identical_pages_intern_to_one_copy() {
+        let store = ParamStore::from_vec_paged(vec![0.0; 8], 4); // 2 pages
+        let a = store.register();
+        let b = store.register();
+        for r in [&a, &b] {
+            let mut v = r.take_for_write();
+            v[1] = 5.0; // identical page-0 content on both nodes
+            r.put(v);
+        }
+        let s = store.stats();
+        assert_eq!(s.live_shards, 2);
+        assert_eq!(s.live_pages, 1); // deduplicated: one interned page serves both
+        assert_eq!(s.page_bytes, 16);
+        assert_eq!(s.resident_bytes, 16);
+        assert_eq!(a.to_vec(), b.to_vec());
+        // The first release keeps the shared page; the last reclaims it.
+        a.release();
+        assert_eq!(store.stats().live_pages, 1);
+        b.release();
+        let s = store.stats();
+        assert_eq!(s.live_pages, 0);
+        assert_eq!(s.resident_bytes, 0);
+    }
+
+    #[test]
+    fn paged_reconvergence_returns_resident_bytes_to_baseline() {
+        let store = ParamStore::from_vec_paged(vec![1.0; 6], 4); // pages: 4 + short tail of 2
+        let a = store.register();
+        let mut v = a.take_for_write();
+        v[5] = 3.0; // tail page, charged by its real 2-f32 size
+        a.put(v);
+        let s = store.stats();
+        assert_eq!(s.live_pages, 1);
+        assert_eq!(s.page_bytes, 8);
+        assert_eq!(s.resident_bytes, 8);
+        // Aggregation drives the node back onto the base bit-for-bit:
+        // interning folds the page back and every byte is reclaimed.
+        let mut v = a.take_for_write();
+        assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0, 1.0, 3.0]);
+        v[5] = 1.0;
+        a.put(v);
+        let s = store.stats();
+        assert_eq!(s.live_pages, 0);
+        assert_eq!(s.resident_bytes, 0);
+        assert_eq!(s.live_shards, 0);
+        assert!(!a.materialized());
+        assert_eq!(s.peak_resident_bytes, 24 + 8);
+        // The handle keeps working after reconverging.
+        assert_eq!(a.to_vec(), vec![1.0; 6]);
+        let mut v = a.take_for_write();
+        v[0] = 2.0;
+        a.put(v);
+        assert_eq!(store.stats().live_pages, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "already taken")]
+    fn paged_double_take_panics() {
+        let store = ParamStore::from_vec_paged(vec![0.0; 4], 2);
+        let a = store.register();
+        let _v = a.take_for_write();
+        let _w = a.take_for_write();
     }
 
     #[test]

@@ -1,31 +1,36 @@
 //! Zero-copy message payloads: one serialization, many recipients.
 //!
-//! A [`Payload`] is an immutable, reference-counted byte buffer
-//! (`Arc<[u8]>` underneath). Cloning one is a pointer bump, so a node
-//! that broadcasts its model to `k` neighbors serializes **once** and
-//! every envelope — and every receive queue the envelope sits in —
-//! shares the same allocation. Before this type, every
-//! `payload.clone()` at a broadcast site duplicated the full serialized
-//! model per recipient, which at 4096 nodes × degree 6 made in-flight
-//! payload copies the dominant term of the emulator's memory footprint.
+//! A [`Payload`] is a reference-counted byte buffer (`Arc<Vec<u8>>`
+//! underneath). Cloning one is a pointer bump, so a node that
+//! broadcasts its model to `k` neighbors serializes **once** and every
+//! envelope — and every receive queue the envelope sits in — shares the
+//! same allocation. Before this type, every `payload.clone()` at a
+//! broadcast site duplicated the full serialized model per recipient,
+//! which at 4096 nodes × degree 6 made in-flight payload copies the
+//! dominant term of the emulator's memory footprint.
 //!
-//! Payloads are deliberately immutable: a receiver that needs to mutate
-//! bytes copies them out explicitly (none of the current protocols do —
-//! aggregation decodes into fresh `f32` buffers).
+//! Payloads are immutable while shared: a handle only exposes its bytes
+//! mutably through [`buf_mut`](Payload::buf_mut), which succeeds solely
+//! when the handle is the buffer's *unique* holder. That is the hook
+//! the hot path's payload pool builds on (`Scratch::checkout_payload`):
+//! once every recipient of last round's broadcast has dropped its
+//! handle, the sender reclaims the buffer and refills it in place —
+//! zero allocations per round at steady state. The extra pointer hop of
+//! `Arc<Vec<u8>>` over `Arc<[u8]>` is what buys that reusability.
 
 use std::fmt;
 use std::ops::Deref;
 use std::sync::Arc;
 
-/// Immutable shared byte buffer used as the payload of every
+/// Shared byte buffer used as the payload of every
 /// [`crate::communication::Envelope`]. `Clone` is O(1).
 #[derive(Clone, PartialEq, Eq)]
-pub struct Payload(Arc<[u8]>);
+pub struct Payload(Arc<Vec<u8>>);
 
 impl Payload {
-    /// The empty payload (control frames, tests).
+    /// The empty payload (control frames, tests, pool bootstrap).
     pub fn empty() -> Payload {
-        Payload(Arc::from(Vec::new()))
+        Payload(Arc::new(Vec::new()))
     }
 
     pub fn len(&self) -> usize {
@@ -37,7 +42,25 @@ impl Payload {
     }
 
     pub fn as_slice(&self) -> &[u8] {
-        &self.0
+        self.0.as_slice()
+    }
+
+    /// Capacity of the backing buffer (pool accounting).
+    pub fn capacity(&self) -> usize {
+        self.0.capacity()
+    }
+
+    /// True when this handle is the only holder of the buffer — i.e.
+    /// every recipient of the broadcast has dropped its clone and the
+    /// buffer may be reused.
+    pub fn is_unique(&self) -> bool {
+        Arc::strong_count(&self.0) == 1
+    }
+
+    /// Mutable access to the backing buffer, granted only to a unique
+    /// holder (`None` while any clone is still in flight).
+    pub fn buf_mut(&mut self) -> Option<&mut Vec<u8>> {
+        Arc::get_mut(&mut self.0)
     }
 
     /// True when both handles share one allocation (zero-copy check).
@@ -50,7 +73,7 @@ impl Deref for Payload {
     type Target = [u8];
 
     fn deref(&self) -> &[u8] {
-        &self.0
+        self.0.as_slice()
     }
 }
 
@@ -62,13 +85,14 @@ impl Default for Payload {
 
 impl From<Vec<u8>> for Payload {
     fn from(bytes: Vec<u8>) -> Payload {
-        Payload(Arc::from(bytes))
+        // Moves the buffer: one control-block allocation, no byte copy.
+        Payload(Arc::new(bytes))
     }
 }
 
 impl From<&[u8]> for Payload {
     fn from(bytes: &[u8]) -> Payload {
-        Payload(Arc::from(bytes))
+        Payload(Arc::new(bytes.to_vec()))
     }
 }
 
@@ -107,5 +131,22 @@ mod tests {
         assert!(Payload::empty().is_empty());
         assert_eq!(Payload::default(), Payload::empty());
         assert_eq!(Payload::empty().len(), 0);
+    }
+
+    #[test]
+    fn unique_holder_can_refill_in_place() {
+        let mut p: Payload = vec![1u8, 2, 3].into();
+        assert!(p.is_unique());
+        let q = p.clone();
+        assert!(!p.is_unique());
+        assert!(p.buf_mut().is_none()); // shared: bytes stay frozen
+        drop(q);
+        assert!(p.is_unique());
+        let before = p.as_slice().as_ptr();
+        let buf = p.buf_mut().unwrap();
+        buf.clear();
+        buf.extend_from_slice(&[9, 9]);
+        assert_eq!(&p[..], &[9, 9]);
+        assert_eq!(p.as_slice().as_ptr(), before); // same backing buffer
     }
 }

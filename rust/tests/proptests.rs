@@ -588,3 +588,183 @@ fn prop_f16_roundtrip_idempotent() {
         }
     }
 }
+
+#[test]
+fn prop_paged_store_read_your_writes_and_interning_accounting() {
+    // Paged CoW under random interleavings: read-your-writes and
+    // isolation exactly as in the unpaged store, plus *content-keyed*
+    // accounting — the interner dedupes byte-identical divergent pages
+    // store-wide (across nodes AND page indices), so live pages must
+    // equal the number of unique divergent page bit patterns in the
+    // shadow fleet, not the number of (node, page) divergences.
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(18_000 + case);
+        let dim = rng.range(2, 300);
+        let page = rng.range(1, dim + 2); // page > dim = one-page store
+        let nodes = rng.range(2, 10);
+        let base = rand_vals(&mut rng, dim, 1.0);
+        let store = ParamStore::from_vec_paged(base.clone(), page);
+        let slots: Vec<_> = (0..nodes).map(|_| store.register()).collect();
+        let mut shadow: Vec<Vec<f32>> = vec![base.clone(); nodes];
+        for op in 0..rng.range(5, 60) {
+            let who = rng.range(0, nodes);
+            match rng.range(0, 3) {
+                0 => {
+                    // Drift a random coordinate.
+                    let at = rng.range(0, dim);
+                    let delta = rng.normal_f32(0.0, 1.0);
+                    let mut v = slots[who].take_for_write();
+                    assert_eq!(v, shadow[who], "case {case} op {op}: take view");
+                    v[at] += delta;
+                    shadow[who][at] += delta;
+                    slots[who].put(v);
+                }
+                1 => {
+                    // Write a coordinate back to its base bits — the
+                    // reconvergence path that folds pages into the base.
+                    let at = rng.range(0, dim);
+                    let mut v = slots[who].take_for_write();
+                    v[at] = base[at];
+                    shadow[who][at] = base[at];
+                    slots[who].put(v);
+                }
+                _ => {
+                    slots[who].with(|v| {
+                        assert_eq!(v, &shadow[who][..], "case {case} op {op}")
+                    });
+                    // Materialized iff some page differs from base bits.
+                    assert_eq!(
+                        slots[who].materialized(),
+                        bits(&shadow[who]) != bits(&base),
+                        "case {case} op {op}"
+                    );
+                }
+            }
+        }
+        // End-state accounting from the shadow fleet, content-keyed.
+        let mut unique: std::collections::HashSet<Vec<u32>> = std::collections::HashSet::new();
+        let mut live_shards = 0u64;
+        for sh in &shadow {
+            let mut any = false;
+            let mut p = 0;
+            while p * page < dim {
+                let (lo, hi) = (p * page, ((p + 1) * page).min(dim));
+                if bits(&sh[lo..hi]) != bits(&base[lo..hi]) {
+                    any = true;
+                    unique.insert(bits(&sh[lo..hi]));
+                }
+                p += 1;
+            }
+            if any {
+                live_shards += 1;
+            }
+        }
+        let s = store.stats();
+        assert_eq!(s.page_size, page as u64, "case {case}");
+        assert_eq!(s.live_shards, live_shards, "case {case}");
+        assert_eq!(s.live_pages, unique.len() as u64, "case {case}");
+        let page_bytes: u64 = unique.iter().map(|p| p.len() as u64 * 4).sum();
+        assert_eq!(s.page_bytes, page_bytes, "case {case}");
+        assert_eq!(s.resident_bytes, page_bytes, "case {case}");
+        assert!(s.peak_resident_bytes >= s.resident_bytes, "case {case}");
+        // Final isolation over every node.
+        for (i, slot) in slots.iter().enumerate() {
+            assert_eq!(slot.to_vec(), shadow[i], "case {case} node {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_param_slot_modes_agree_bitwise() {
+    // owned vs stored-shared vs stored-paged (random page size) driven
+    // in lockstep: identical histories must yield bit-identical vectors
+    // at every step — the invariant behind `param_store` being a pure
+    // memory knob with no numeric surface.
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(19_000 + case);
+        let dim = rng.range(1, 200);
+        let page = rng.range(1, dim + 2);
+        let base = rand_vals(&mut rng, dim, 1.0);
+        let shared = ParamStore::from_vec(base.clone());
+        let paged = ParamStore::from_vec_paged(base.clone(), page);
+        let mut slots = vec![
+            ParamSlot::owned(base.clone()),
+            ParamSlot::stored(shared.register()),
+            ParamSlot::stored(paged.register()),
+        ];
+        for op in 0..rng.range(1, 40) {
+            if rng.next_f64() < 0.6 {
+                let at = rng.range(0, dim);
+                let delta = rng.normal_f32(0.0, 2.0);
+                let mut taken: Vec<Vec<f32>> = slots.iter_mut().map(|s| s.take()).collect();
+                for v in taken.iter_mut() {
+                    v[at] *= 0.5;
+                    v[at] += delta;
+                }
+                assert_eq!(bits(&taken[0]), bits(&taken[1]), "case {case} op {op} (shared)");
+                assert_eq!(bits(&taken[0]), bits(&taken[2]), "case {case} op {op} (paged)");
+                for (s, v) in slots.iter_mut().zip(taken) {
+                    s.put(v);
+                }
+            } else {
+                let views: Vec<Vec<f32>> = slots.iter().map(|s| s.to_vec()).collect();
+                assert_eq!(bits(&views[0]), bits(&views[1]), "case {case} op {op} (shared)");
+                assert_eq!(bits(&views[0]), bits(&views[2]), "case {case} op {op} (paged)");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_paged_interning_reconverges_to_baseline() {
+    // Diverge -> reconverge (write the base bits back) -> every byte of
+    // page accounting returns to zero while the peak keeps its mark;
+    // the store must then support rediverging (the intern table and
+    // slot state fully reset, not just the counters).
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(20_000 + case);
+        let dim = rng.range(2, 300);
+        let page = rng.range(1, dim + 2);
+        let nodes = rng.range(1, 8);
+        let base = rand_vals(&mut rng, dim, 1.0);
+        let store = ParamStore::from_vec_paged(base.clone(), page);
+        let slots: Vec<_> = (0..nodes).map(|_| store.register()).collect();
+        // Diverge every node at a handful of coordinates (+1.0.. shifts
+        // always change the bits of N(0,1) values).
+        for slot in &slots {
+            let mut v = slot.take_for_write();
+            for _ in 0..rng.range(1, 6) {
+                let at = rng.range(0, dim);
+                v[at] += 1.0 + rng.next_f32();
+            }
+            slot.put(v);
+        }
+        let mid = store.stats();
+        assert!(mid.live_pages >= 1, "case {case}");
+        assert_eq!(mid.live_shards, nodes as u64, "case {case}");
+        assert!(mid.resident_bytes > 0, "case {case}");
+        // Reconverge: every node writes the base back, bit for bit.
+        for slot in &slots {
+            let mut v = slot.take_for_write();
+            v.copy_from_slice(&base);
+            slot.put(v);
+        }
+        let s = store.stats();
+        assert_eq!(s.live_pages, 0, "case {case}");
+        assert_eq!(s.page_bytes, 0, "case {case}");
+        assert_eq!(s.live_shards, 0, "case {case}");
+        assert_eq!(s.resident_bytes, 0, "case {case}");
+        assert!(s.peak_resident_bytes >= mid.resident_bytes, "case {case}");
+        for slot in &slots {
+            assert!(!slot.materialized(), "case {case}: reconverged slot still paged-live");
+            slot.with(|v| assert_eq!(bits(v), bits(&base), "case {case}"));
+        }
+        // Rediverge one node: the drained store is still fully usable.
+        let mut v = slots[0].take_for_write();
+        v[0] += 3.5;
+        slots[0].put(v);
+        let s2 = store.stats();
+        assert_eq!(s2.live_shards, 1, "case {case}");
+        assert!(s2.live_pages >= 1, "case {case}");
+    }
+}

@@ -199,3 +199,122 @@ fn compute_duration_advances_virtual_clock() {
     let expect = 0.05 + w / 1000.0 + 0.01;
     assert!((trace[0].0 - expect).abs() < 1e-12, "{} vs {expect}", trace[0].0);
 }
+
+/// Full-surface ring fleet for the sharded-heap oracle: every round each
+/// node arms a deadline timer, starts a compute job, and gossips with
+/// both ring neighbors, advancing only once all three complete. Every
+/// wake it observes lands in the shared trace as
+/// `(virtual time, source id, round * 10 + kind)` with kind 0 = message,
+/// 1 = compute completion, 2 = timer fire.
+struct ShardedFleetNode {
+    id: usize,
+    fleet: usize,
+    rounds: u64,
+    round: u64,
+    /// Buffered neighbor arrivals per round (a neighbor may run ahead).
+    msgs: std::collections::HashMap<u64, usize>,
+    compute_done: bool,
+    timer_fired: bool,
+    trace: Trace,
+}
+
+impl ShardedFleetNode {
+    fn begin_round(&mut self, ctx: &mut NodeCtx) {
+        let r = self.round;
+        // Id- and round-skewed delays so the heads of different heap
+        // shards carry genuinely distinct timestamps.
+        ctx.set_timer(0.005 + (self.id % 7) as f64 * 1e-4);
+        let duration = 0.01 + ((self.id + r as usize) % 5) as f64 * 0.003;
+        ctx.start_compute(duration, Box::new(move || Ok(ComputeOutput::Value(r as f64))));
+        for dst in [(self.id + 1) % self.fleet, (self.id + self.fleet - 1) % self.fleet] {
+            ctx.send(env(self.id, dst, r, 20 + (self.id % 3) * 40));
+        }
+    }
+
+    fn advance_if_ready(&mut self, ctx: &mut NodeCtx) {
+        while self.round < self.rounds
+            && self.msgs.get(&self.round).copied().unwrap_or(0) >= 2
+            && self.compute_done
+            && self.timer_fired
+        {
+            self.msgs.remove(&self.round);
+            self.compute_done = false;
+            self.timer_fired = false;
+            self.round += 1;
+            if self.round < self.rounds {
+                self.begin_round(ctx);
+            }
+        }
+    }
+}
+
+impl EventNode for ShardedFleetNode {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> anyhow::Result<()> {
+        match wake {
+            Wake::Start => self.begin_round(ctx),
+            Wake::Message(env) => {
+                self.trace.lock().unwrap().push((ctx.now_s, env.src, env.round * 10));
+                if env.round >= self.round {
+                    *self.msgs.entry(env.round).or_insert(0) += 1;
+                }
+                self.advance_if_ready(ctx);
+            }
+            Wake::ComputeDone(out) => {
+                let r = match out {
+                    ComputeOutput::Value(v) => v as u64,
+                    _ => unreachable!("fleet node only produces Value outputs"),
+                };
+                self.trace.lock().unwrap().push((ctx.now_s, self.id, r * 10 + 1));
+                self.compute_done = true;
+                self.advance_if_ready(ctx);
+            }
+            Wake::Timer(_) => {
+                self.trace.lock().unwrap().push((ctx.now_s, self.id, self.round * 10 + 2));
+                self.timer_fired = true;
+                self.advance_if_ready(ctx);
+            }
+        }
+        Ok(())
+    }
+    fn done(&self) -> bool {
+        self.round >= self.rounds
+    }
+}
+
+#[test]
+fn sharded_heaps_bit_identical_across_worker_counts() {
+    // The per-worker heap shards must merge into exactly the global
+    // (at, seq) order a single heap would produce: the complete wake
+    // trace — message arrivals, compute completions, and timer fires,
+    // with their virtual timestamps — is the oracle, compared bitwise
+    // across workers 1 / 4 / 8 (different worker counts mean different
+    // shard counts AND different real execution interleavings).
+    let run = |workers: usize| -> Vec<(u64, usize, u64)> {
+        let trace: Trace = Arc::new(Mutex::new(Vec::new()));
+        let fleet = 24;
+        let mut s = Scheduler::new(Some(net()), workers);
+        for id in 0..fleet {
+            s.add_node(Box::new(ShardedFleetNode {
+                id,
+                fleet,
+                rounds: 3,
+                round: 0,
+                msgs: std::collections::HashMap::new(),
+                compute_done: false,
+                timer_fired: false,
+                trace: Arc::clone(&trace),
+            }));
+        }
+        s.run().unwrap();
+        let recorded = trace.lock().unwrap().clone();
+        drop(s);
+        recorded.iter().map(|&(at, src, tag)| (at.to_bits(), src, tag)).collect()
+    };
+    let a = run(1);
+    let b = run(4);
+    let c = run(8);
+    // 3 rounds x 24 nodes x (2 messages + 1 compute + 1 timer).
+    assert_eq!(a.len(), 3 * 24 * 4);
+    assert_eq!(a, b, "trace differs between 1 and 4 workers");
+    assert_eq!(a, c, "trace differs between 1 and 8 workers");
+}

@@ -3,8 +3,10 @@
 //! mode, where only a small cohort ever writes. Peak resident parameter
 //! bytes must stay bounded by the *divergence* (writers × shard), not by
 //! the fleet size — the property that breaks the per-node-buffer scale
-//! ceiling. Artifact-free: nodes mutate parameters directly instead of
-//! running the PJRT engine.
+//! ceiling. In paged mode the budget tightens further to writers ×
+//! *page*: only the pages a writer actually dirties are charged.
+//! Artifact-free: nodes mutate parameters directly instead of running
+//! the PJRT engine.
 
 use anyhow::Result;
 
@@ -142,6 +144,57 @@ fn peak_param_bytes_stay_under_divergence_budget() {
     assert_eq!(c.bytes_serialized, ROUNDS * 64);
     assert_eq!(c.msgs_sent, ROUNDS * 2);
     assert!(c.bytes_sent >= ROUNDS * 2 * 64);
+}
+
+#[test]
+fn paged_store_charges_pages_not_shards() {
+    // Same fleet in paged mode with 1 KiB pages (256 f32, 16 pages per
+    // shard). Every writer dirties exactly one page — coordinates
+    // 0..WRITERS all land in page 0 of the writer's own shard, each
+    // with a distinct bumped coordinate, so interning cannot collapse
+    // them — and the divergence charge must be page-granular: one page
+    // per writer plus one transient assembled shard, a 16x tighter
+    // budget than the unpaged shared store's whole-shard charge.
+    const PAGE: usize = 256;
+    let shard_bytes = (DIM * 4) as u64;
+    let page_bytes = (PAGE * 4) as u64;
+    let store = ParamStore::from_vec_paged(vec![0.5; DIM], PAGE);
+    let mut sched = Scheduler::new(None, 4);
+    for id in 0..NODES {
+        sched.add_node(Box::new(GossipNode {
+            id,
+            params: ParamSlot::stored(store.register()),
+            writer: id < WRITERS,
+            round: 0,
+            arrived: std::collections::HashMap::new(),
+        }));
+    }
+    sched.run().unwrap();
+
+    let stats = store.stats();
+    let budget = WRITERS as u64 * page_bytes + shard_bytes;
+    assert!(
+        stats.peak_resident_bytes <= budget,
+        "paged peak {} exceeds page-granular budget {} (whole-shard charges are back?)",
+        stats.peak_resident_bytes,
+        budget
+    );
+    // The paged budget itself is far below the unpaged one.
+    assert!(budget < (WRITERS as u64 + 1) * shard_bytes / 4);
+    assert_eq!(stats.page_size, PAGE as u64);
+    assert_eq!(stats.live_shards, WRITERS as u64);
+    assert_eq!(stats.materialized_total, WRITERS as u64);
+    assert_eq!(stats.live_pages, WRITERS as u64);
+    assert_eq!(stats.page_bytes, WRITERS as u64 * page_bytes);
+    assert_eq!(stats.resident_bytes, WRITERS as u64 * page_bytes);
+
+    // Readers still see the base through the paged read path, and
+    // writers read their own writes.
+    let probe = store.register();
+    probe.with(|v| {
+        assert_eq!(v[0], 0.5);
+        assert_eq!(v[DIM - 1], 0.5);
+    });
 }
 
 #[test]
