@@ -32,6 +32,7 @@ fn seed_with_stragglers(cfg: &ExperimentConfig) -> u64 {
                 &cfg.step_time,
                 &cfg.link_model,
                 &cfg.churn_trace,
+                &cfg.byzantine,
                 None,
                 cfg.nodes,
                 cfg.rounds,

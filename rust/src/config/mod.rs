@@ -75,6 +75,12 @@ pub struct ExperimentConfig {
     /// `sessions:<mean_on>:<mean_off>` | `departures:<frac>`.
     /// See [`crate::scenario`].
     pub churn_trace: String,
+    /// Byzantine adversary spec: empty (all honest) |
+    /// `byzantine:<frac>:flood[:<factor>]` |
+    /// `byzantine:<frac>:poison[:<scale>]` |
+    /// `byzantine:<frac>:collude:<k>`.
+    /// See [`crate::scenario::ByzantineRoster`].
+    pub byzantine: String,
     pub lr: f32,
     /// Local SGD steps per communication round.
     pub local_steps: u32,
@@ -135,6 +141,7 @@ impl Default for ExperimentConfig {
             mask_scale: 4.0,
             churn: 0.0,
             churn_trace: String::new(),
+            byzantine: String::new(),
             lr: 0.05,
             local_steps: 2,
             network: "lan".into(),
@@ -160,7 +167,7 @@ impl ExperimentConfig {
             "dataset", "image", "train_total", "test_total", "noise",
             "partition", "topology", "dynamic", "sharing", "mode", "deadline", "staleness",
             "late", "secure", "mask_scale", "churn",
-            "churn_trace", "lr", "local_steps", "network", "step_time", "link_model",
+            "churn_trace", "byzantine", "lr", "local_steps", "network", "step_time", "link_model",
             "runner", "workers", "param_store", "page_size", "artifacts_dir", "results_dir",
         ];
         for k in obj.keys() {
@@ -198,6 +205,7 @@ impl ExperimentConfig {
             mask_scale: f("mask_scale", d.mask_scale as f64) as f32,
             churn: f("churn", d.churn),
             churn_trace: s("churn_trace", &d.churn_trace),
+            byzantine: s("byzantine", &d.byzantine),
             lr: f("lr", d.lr as f64) as f32,
             local_steps: n("local_steps", d.local_steps as usize) as u32,
             network: s("network", &d.network),
@@ -246,6 +254,7 @@ impl ExperimentConfig {
             ("mask_scale", Json::num(self.mask_scale as f64)),
             ("churn", Json::num(self.churn)),
             ("churn_trace", Json::str(self.churn_trace.clone())),
+            ("byzantine", Json::str(self.byzantine.clone())),
             ("lr", Json::num(self.lr as f64)),
             ("local_steps", Json::num(self.local_steps as f64)),
             ("network", Json::str(self.network.clone())),
@@ -339,6 +348,15 @@ impl ExperimentConfig {
         }
         if !matches!(self.link_model.as_str(), "" | "uniform") && self.runner != "scheduler" {
             bail!("link_model {:?} requires runner \"scheduler\"", self.link_model);
+        }
+        crate::scenario::ByzantineRoster::validate_spec(&self.byzantine)?;
+        if !self.byzantine.is_empty() {
+            if self.secure {
+                bail!("byzantine scenarios are incompatible with secure aggregation (pairwise masks assume honest-but-curious peers, not active adversaries)");
+            }
+            if self.sharing.starts_with("choco") {
+                bail!("byzantine scenarios are incompatible with choco sharing (error-feedback state assumes honest self-broadcast)");
+            }
         }
         // CHOCO keeps per-neighbor estimate replicas that must observe
         // every increment; a changing neighbor set (dynamic topologies)
@@ -547,6 +565,38 @@ mod tests {
         cfg.validate().unwrap(); // static + scheduler: the WAN scenario
         cfg.dynamic = true;
         cfg.validate().unwrap(); // dynamic churn traces too
+    }
+
+    #[test]
+    fn byzantine_spec_validation() {
+        // Attacks compose with robust sharing on either runner.
+        let mut cfg = ExperimentConfig::default();
+        cfg.byzantine = "byzantine:0.2:poison:2".into();
+        cfg.sharing = "trimmed_mean:0.2".into();
+        cfg.validate().unwrap();
+        cfg.runner = "threads".into();
+        cfg.validate().unwrap();
+        cfg.runner = "scheduler".into();
+        cfg.sharing = "coord_median".into();
+        cfg.validate().unwrap();
+        cfg.sharing = "krum:2".into();
+        cfg.byzantine = "byzantine:0.1:collude:3".into();
+        cfg.validate().unwrap();
+        // Malformed specs fail in validation, not mid-run.
+        for bad in ["byzantine:1.5:flood", "byzantine:-0.1:poison:2", "byzantine:0.1:ddos"] {
+            cfg = ExperimentConfig::default();
+            cfg.byzantine = bad.into();
+            assert!(cfg.validate().is_err(), "{bad}");
+        }
+        // Incompatible subsystems are rejected eagerly.
+        cfg = ExperimentConfig::default();
+        cfg.byzantine = "byzantine:0.2:flood".into();
+        cfg.secure = true;
+        assert!(cfg.validate().is_err()); // masks assume honest peers
+        cfg = ExperimentConfig::default();
+        cfg.byzantine = "byzantine:0.2:poison".into();
+        cfg.sharing = "choco:0.1:0.5".into();
+        assert!(cfg.validate().is_err()); // error feedback assumes honesty
     }
 
     #[test]

@@ -173,11 +173,12 @@ pub fn prepare(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunSetup
     };
 
     // Scenario axes (all degenerate by default): per-node step-time
-    // multipliers, per-link delays, availability churn.
+    // multipliers, per-link delays, availability churn, adversaries.
     let scenario = Scenario::from_specs(
         &cfg.step_time,
         &cfg.link_model,
         &cfg.churn_trace,
+        &cfg.byzantine,
         network,
         cfg.nodes,
         cfg.rounds,
@@ -367,6 +368,7 @@ impl Runner for SchedulerRunner {
                     w.neighbor_weights(id).collect(),
                     Arc::clone(&setup.test),
                     node_churn.clone(),
+                    setup.scenario.byzantine.clone(),
                     setup.step_times[id],
                     setup.eval_times[id],
                     policy,
@@ -397,6 +399,7 @@ impl Runner for SchedulerRunner {
                     topology_view(cfg, setup, id),
                     Arc::clone(&setup.test),
                     node_churn.clone(),
+                    setup.scenario.byzantine.clone(),
                     setup.step_times[id],
                     setup.eval_times[id],
                 )));
@@ -511,6 +514,7 @@ impl Runner for ThreadedRunner {
                         params,
                         topology: topology_view(cfg, setup, id),
                         test,
+                        byz: setup.scenario.byzantine.clone(),
                         network: setup.network,
                         step_time_s: setup.step_times[id],
                         eval_time_s: setup.eval_times[id],

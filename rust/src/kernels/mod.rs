@@ -223,6 +223,153 @@ pub fn scatter_blend(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32],
     }
 }
 
+/// Little-endian f32 decode into an exact-length slice (a row of a
+/// staged candidate matrix; no allocation, unlike [`decode_le_into`]).
+pub fn decode_le(out: &mut [f32], bytes: &[u8]) -> Result<()> {
+    if bytes.len() != out.len() * 4 {
+        bail!("raw_f32: expected {} bytes, got {}", out.len() * 4, bytes.len());
+    }
+    for (o, c) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+    }
+    Ok(())
+}
+
+/// Coordinate-wise trimmed mean over `rows` stacked vectors.
+///
+/// `vals` is row-major `rows × out.len()`. Per coordinate, the `trim`
+/// lowest and `trim` highest values are dropped and the survivors are
+/// averaged in f64, summed in ascending sorted order (deterministic and
+/// shared with the scalar twin). `gather` stages one coordinate's
+/// column (`len >= rows`, `sort_unstable` so no allocation);
+/// `admitted[r]` accumulates, per row, the number of coordinates whose
+/// value fell inside the kept range — boundary duplicates count as
+/// admitted, which over-credits ties but never under-reports an honest
+/// row.
+pub fn trimmed_mean(
+    out: &mut [f32],
+    vals: &[f32],
+    rows: usize,
+    trim: usize,
+    gather: &mut [f32],
+    admitted: &mut [f64],
+) {
+    assert_eq!(vals.len(), rows * out.len());
+    assert!(gather.len() >= rows && admitted.len() >= rows);
+    assert!(2 * trim < rows, "trim {trim} leaves no survivors of {rows} rows");
+    let dim = out.len();
+    let kept = (rows - 2 * trim) as f64;
+    for c in 0..dim {
+        let g = &mut gather[..rows];
+        for (r, slot) in g.iter_mut().enumerate() {
+            *slot = vals[r * dim + c];
+        }
+        g.sort_unstable_by(f32::total_cmp);
+        let (lo, hi) = (g[trim], g[rows - 1 - trim]);
+        let mut sum = 0.0f64;
+        for &v in &g[trim..rows - trim] {
+            sum += v as f64;
+        }
+        out[c] = (sum / kept) as f32;
+        for (r, a) in admitted.iter_mut().enumerate().take(rows) {
+            let v = vals[r * dim + c];
+            if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
+                *a += 1.0;
+            }
+        }
+    }
+}
+
+/// Coordinate-wise median over `rows` stacked vectors (row-major, as
+/// [`trimmed_mean`]). Even row counts average the two middle values in
+/// f64. `admitted[r]` counts coordinates where the row's value lies
+/// within the median bracket (the one or two middle order statistics).
+pub fn coord_median(
+    out: &mut [f32],
+    vals: &[f32],
+    rows: usize,
+    gather: &mut [f32],
+    admitted: &mut [f64],
+) {
+    assert_eq!(vals.len(), rows * out.len());
+    assert!(gather.len() >= rows && admitted.len() >= rows);
+    assert!(rows > 0);
+    let dim = out.len();
+    for c in 0..dim {
+        let g = &mut gather[..rows];
+        for (r, slot) in g.iter_mut().enumerate() {
+            *slot = vals[r * dim + c];
+        }
+        g.sort_unstable_by(f32::total_cmp);
+        let (lo, hi, med) = if rows % 2 == 1 {
+            let m = g[rows / 2];
+            (m, m, m as f64)
+        } else {
+            let (a, b) = (g[rows / 2 - 1], g[rows / 2]);
+            (a, b, (a as f64 + b as f64) / 2.0)
+        };
+        out[c] = med as f32;
+        for (r, a) in admitted.iter_mut().enumerate().take(rows) {
+            let v = vals[r * dim + c];
+            if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
+                *a += 1.0;
+            }
+        }
+    }
+}
+
+/// Pairwise squared L2 distances between `rows` stacked vectors
+/// (row-major `rows × dim`) into a row-major `rows × rows` matrix.
+/// Accumulation is f64 in coordinate order; the matrix is symmetric
+/// with a zero diagonal.
+pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize, dist: &mut [f64]) {
+    assert_eq!(vals.len(), rows * dim);
+    assert!(dist.len() >= rows * rows);
+    for i in 0..rows {
+        dist[i * rows + i] = 0.0;
+        for j in (i + 1)..rows {
+            let a = &vals[i * dim..(i + 1) * dim];
+            let b = &vals[j * dim..(j + 1) * dim];
+            let mut s = 0.0f64;
+            for k in 0..dim {
+                let d = (a[k] - b[k]) as f64;
+                s += d * d;
+            }
+            dist[i * rows + j] = s;
+            dist[j * rows + i] = s;
+        }
+    }
+}
+
+/// Krum selection: each candidate's score is the sum of its `closest`
+/// smallest squared distances to the *other* candidates (ascending
+/// order, f64), and the lowest score wins, ties broken by lowest row
+/// index. `dist` is the [`pairwise_sq_dist`] matrix; `row_buf` stages
+/// one row per candidate (`len >= rows`). Sorting the copied row puts
+/// the zero self-distance first, so skipping one leading entry excludes
+/// self even when other distances are exactly zero (identical
+/// colluders) — the skipped value is equal either way.
+pub fn krum_select(dist: &[f64], rows: usize, closest: usize, row_buf: &mut [f64]) -> usize {
+    assert!(rows > 0 && dist.len() >= rows * rows && row_buf.len() >= rows);
+    assert!(closest < rows);
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    for i in 0..rows {
+        let b = &mut row_buf[..rows];
+        b.copy_from_slice(&dist[i * rows..i * rows + rows]);
+        b.sort_unstable_by(f64::total_cmp);
+        let mut score = 0.0f64;
+        for &d in &b[1..1 + closest] {
+            score += d;
+        }
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    best
+}
+
 pub mod reference {
     //! Retained scalar originals of every kernel, kept for two jobs:
     //! the bit-identity proptests pin each kernel to its reference
@@ -294,6 +441,92 @@ pub mod reference {
             let i = i as usize;
             acc[i] += alpha * (v - own[i]);
         }
+    }
+
+    /// Allocating scalar twin of [`super::trimmed_mean`]: fresh column
+    /// vector per coordinate, stable `sort_by`, same ascending f64 sum
+    /// and boundary-inclusive admitted counting — bit-identical output.
+    pub fn trimmed_mean(out: &mut [f32], vals: &[f32], rows: usize, trim: usize, admitted: &mut [f64]) {
+        assert_eq!(vals.len(), rows * out.len());
+        assert!(2 * trim < rows);
+        let dim = out.len();
+        let kept = (rows - 2 * trim) as f64;
+        for c in 0..dim {
+            let mut col: Vec<f32> = (0..rows).map(|r| vals[r * dim + c]).collect();
+            col.sort_by(f32::total_cmp);
+            let (lo, hi) = (col[trim], col[rows - 1 - trim]);
+            let mut sum = 0.0f64;
+            for &v in &col[trim..rows - trim] {
+                sum += v as f64;
+            }
+            out[c] = (sum / kept) as f32;
+            for (r, a) in admitted.iter_mut().enumerate().take(rows) {
+                let v = vals[r * dim + c];
+                if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
+                    *a += 1.0;
+                }
+            }
+        }
+    }
+
+    /// Allocating scalar twin of [`super::coord_median`].
+    pub fn coord_median(out: &mut [f32], vals: &[f32], rows: usize, admitted: &mut [f64]) {
+        assert_eq!(vals.len(), rows * out.len());
+        assert!(rows > 0);
+        let dim = out.len();
+        for c in 0..dim {
+            let mut col: Vec<f32> = (0..rows).map(|r| vals[r * dim + c]).collect();
+            col.sort_by(f32::total_cmp);
+            let (lo, hi, med) = if rows % 2 == 1 {
+                let m = col[rows / 2];
+                (m, m, m as f64)
+            } else {
+                let (a, b) = (col[rows / 2 - 1], col[rows / 2]);
+                (a, b, (a as f64 + b as f64) / 2.0)
+            };
+            out[c] = med as f32;
+            for (r, a) in admitted.iter_mut().enumerate().take(rows) {
+                let v = vals[r * dim + c];
+                if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
+                    *a += 1.0;
+                }
+            }
+        }
+    }
+
+    /// Allocating scalar twin of [`super::pairwise_sq_dist`].
+    pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize) -> Vec<f64> {
+        assert_eq!(vals.len(), rows * dim);
+        let mut dist = vec![0.0f64; rows * rows];
+        for i in 0..rows {
+            for j in 0..rows {
+                let mut s = 0.0f64;
+                for k in 0..dim {
+                    let d = (vals[i * dim + k] - vals[j * dim + k]) as f64;
+                    s += d * d;
+                }
+                dist[i * rows + j] = s;
+            }
+        }
+        dist
+    }
+
+    /// Allocating scalar twin of [`super::krum_select`] (stable sort,
+    /// same skip-one-leading-zero self exclusion and index tie-break).
+    pub fn krum_select(dist: &[f64], rows: usize, closest: usize) -> usize {
+        assert!(rows > 0 && closest < rows);
+        let mut best = 0usize;
+        let mut best_score = f64::INFINITY;
+        for i in 0..rows {
+            let mut row: Vec<f64> = dist[i * rows..i * rows + rows].to_vec();
+            row.sort_by(f64::total_cmp);
+            let score: f64 = row[1..1 + closest].iter().sum();
+            if score < best_score {
+                best_score = score;
+                best = i;
+            }
+        }
+        best
     }
 }
 
@@ -517,6 +750,99 @@ mod tests {
         let cap = out.capacity();
         decode_le_into(&mut out, &payload);
         assert_eq!(out.capacity(), cap, "steady-state decode must not grow");
+    }
+
+    #[test]
+    fn decode_le_matches_decode_le_into_and_checks_length() {
+        let payload: Vec<u8> = (0..37u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        let mut out = vec![0.0f32; 37];
+        decode_le(&mut out, &payload).unwrap();
+        let mut want = Vec::new();
+        decode_le_into(&mut want, &payload);
+        assert_eq!(out, want);
+        let mut short = vec![0.0f32; 4];
+        assert!(decode_le(&mut short, &payload[..15]).is_err());
+    }
+
+    #[test]
+    fn robust_kernels_match_reference_on_edge_shapes() {
+        for (case, &dim) in EDGE_LENS.iter().enumerate() {
+            for rows in [1usize, 2, 3, 5, 8] {
+                let mut rng = Xoshiro256pp::new(400 + 100 * case as u64 + rows as u64);
+                let stacked = vals(&mut rng, rows * dim);
+                let mut gather = vec![0.0f32; rows];
+                let trim = if rows > 2 { 1 } else { 0 };
+
+                let (mut out, mut out_ref) = (vec![0.0f32; dim], vec![0.0f32; dim]);
+                let (mut adm, mut adm_ref) = (vec![0.0f64; rows], vec![0.0f64; rows]);
+                trimmed_mean(&mut out, &stacked, rows, trim, &mut gather, &mut adm);
+                reference::trimmed_mean(&mut out_ref, &stacked, rows, trim, &mut adm_ref);
+                assert_eq!(out, out_ref, "trimmed_mean dim={dim} rows={rows}");
+                assert_eq!(adm, adm_ref, "trimmed_mean admitted dim={dim} rows={rows}");
+
+                adm.iter_mut().for_each(|a| *a = 0.0);
+                adm_ref.iter_mut().for_each(|a| *a = 0.0);
+                coord_median(&mut out, &stacked, rows, &mut gather, &mut adm);
+                reference::coord_median(&mut out_ref, &stacked, rows, &mut adm_ref);
+                assert_eq!(out, out_ref, "coord_median dim={dim} rows={rows}");
+                assert_eq!(adm, adm_ref, "coord_median admitted dim={dim} rows={rows}");
+
+                let mut dist = vec![0.0f64; rows * rows];
+                pairwise_sq_dist(&stacked, rows, dim, &mut dist);
+                let dist_ref = reference::pairwise_sq_dist(&stacked, rows, dim);
+                assert_eq!(dist, dist_ref, "pairwise dim={dim} rows={rows}");
+                let mut row_buf = vec![0.0f64; rows];
+                for closest in 0..rows {
+                    assert_eq!(
+                        krum_select(&dist, rows, closest, &mut row_buf),
+                        reference::krum_select(&dist, rows, closest),
+                        "krum dim={dim} rows={rows} closest={closest}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_discards_an_outlier_row() {
+        // Three honest rows near 1.0, one poisoned row at -100: with
+        // trim=1 the aggregate sits with the honest mass and the
+        // poisoned row's admitted count stays at zero.
+        let dim = 8;
+        let honest = [0.9f32, 1.0, 1.1];
+        let mut vals = Vec::new();
+        for &h in &honest {
+            vals.extend(std::iter::repeat(h).take(dim));
+        }
+        vals.extend(std::iter::repeat(-100.0f32).take(dim));
+        let mut out = vec![0.0f32; dim];
+        let mut gather = vec![0.0f32; 4];
+        let mut admitted = vec![0.0f64; 4];
+        trimmed_mean(&mut out, &vals, 4, 1, &mut gather, &mut admitted);
+        assert!(out.iter().all(|&v| (v - 0.95).abs() < 1e-6), "{out:?}");
+        assert_eq!(admitted[3], 0.0, "poisoned row must not be admitted");
+        assert!(admitted[0] > 0.0 && admitted[1] > 0.0);
+    }
+
+    #[test]
+    fn krum_prefers_the_honest_cluster() {
+        // Rows 0..3 clustered, row 3 far away: krum with closest=2 must
+        // pick a cluster member, never the outlier.
+        let dim = 4;
+        let mut vals = vec![0.0f32; 4 * dim];
+        for r in 0..3 {
+            for c in 0..dim {
+                vals[r * dim + c] = 1.0 + 0.01 * r as f32;
+            }
+        }
+        for c in 0..dim {
+            vals[3 * dim + c] = 50.0;
+        }
+        let mut dist = vec![0.0f64; 16];
+        pairwise_sq_dist(&vals, 4, dim, &mut dist);
+        let mut row_buf = vec![0.0f64; 4];
+        let pick = krum_select(&dist, 4, 2, &mut row_buf);
+        assert!(pick < 3, "krum picked the outlier (row {pick})");
     }
 
     #[test]

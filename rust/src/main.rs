@@ -86,6 +86,7 @@ fn print_usage() {
                 opt("step-time-trace", "per-node compute: uniform | stragglers:<f>:<x> | lognormal:<s> | trace:<path>", Some("uniform")),
                 opt("link-model", "per-link delays: uniform | geo:<clusters> | matrix:<path>", Some("uniform")),
                 opt("churn-trace", "availability: trace:<path> | sessions:<on>:<off> | departures:<frac> | crashes:<frac>:<horizon_s>", None),
+                opt("byzantine", "adversaries: byzantine:<frac>:flood[:<factor>] | byzantine:<frac>:poison[:<scale>] | byzantine:<frac>:collude:<k>", None),
                 opt("participation", "client participation fraction (fl mode)", Some("0.5")),
                 opt("artifacts", "artifacts directory", Some("artifacts")),
                 flag("save", "persist logs under results/"),
@@ -156,6 +157,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     if let Some(s) = args.get("churn-trace") {
         cfg.churn_trace = s.to_string();
     }
+    if let Some(s) = args.get("byzantine") {
+        cfg.byzantine = s.to_string();
+    }
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts_dir = PathBuf::from(a);
     }
@@ -163,7 +167,8 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
 }
 
 /// Merge a scenario overlay file onto the config: a JSON object with
-/// any of `step_time`, `link_model`, `churn_trace`, `network`, `churn`.
+/// any of `step_time`, `link_model`, `churn_trace`, `byzantine`,
+/// `network`, `churn`.
 /// Individual flags (`--step-time-trace`, …) still win over the file.
 /// Unknown keys and wrong-typed values are hard errors — a silently
 /// ignored scenario axis would fake baseline results as scenario runs.
@@ -182,6 +187,7 @@ fn apply_scenario_file(cfg: &mut ExperimentConfig, path: &Path) -> Result<()> {
             "step_time" => cfg.step_time = want_str()?,
             "link_model" => cfg.link_model = want_str()?,
             "churn_trace" => cfg.churn_trace = want_str()?,
+            "byzantine" => cfg.byzantine = want_str()?,
             "network" => cfg.network = want_str()?,
             "churn" => {
                 cfg.churn = val.as_f64().with_context(|| {
@@ -190,7 +196,7 @@ fn apply_scenario_file(cfg: &mut ExperimentConfig, path: &Path) -> Result<()> {
             }
             other => bail!(
                 "unknown scenario key {other:?} in {} \
-                 (expected step_time | link_model | churn_trace | network | churn)",
+                 (expected step_time | link_model | churn_trace | byzantine | network | churn)",
                 path.display()
             ),
         }
@@ -205,11 +211,12 @@ fn reject_scenario_axes(cfg: &ExperimentConfig, mode: &str) -> Result<()> {
     if !matches!(cfg.step_time.as_str(), "" | "uniform")
         || !matches!(cfg.link_model.as_str(), "" | "uniform")
         || !cfg.churn_trace.is_empty()
+        || !cfg.byzantine.is_empty()
         || cfg.churn > 0.0
     {
         bail!(
             "{mode} mode does not support scenario axes \
-             (step_time / link_model / churn_trace / churn); use `decentra run`"
+             (step_time / link_model / churn_trace / byzantine / churn); use `decentra run`"
         );
     }
     if cfg.mode != "dl" {
@@ -343,6 +350,8 @@ fn cmd_node(args: &Args) -> Result<()> {
             neighbors: w.neighbor_weights(rank).collect(),
         },
         test: Arc::new(test),
+        // reject_scenario_axes above guarantees no byzantine spec here.
+        byz: None,
         network: None,
         step_time_s: 0.0,
         eval_time_s: 0.0,

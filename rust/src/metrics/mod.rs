@@ -43,6 +43,16 @@ pub struct Record {
     /// Async gossip: mean virtual age (seconds) of every neighbor model
     /// aggregated so far.
     pub mean_staleness_s: f64,
+    /// Byzantine scenarios: cumulative mixing weight of Byzantine
+    /// contributions the aggregation *admitted* (0 with no adversaries
+    /// or a perfect defense).
+    pub poisoned_mass_admitted: f64,
+    /// Byzantine scenarios: cumulative contributions (any sender) the
+    /// robust aggregation rejected.
+    pub rejected_contribs: u64,
+    /// Byzantine scenarios: fraction of Byzantine contributions the
+    /// defense rejected so far (0 when nothing Byzantine arrived).
+    pub isolation_rate: f64,
 }
 
 impl Record {
@@ -61,6 +71,9 @@ impl Record {
             ("late_msgs", Json::num(self.late_msgs as f64)),
             ("dropped_msgs", Json::num(self.dropped_msgs as f64)),
             ("mean_staleness_s", Json::num(self.mean_staleness_s)),
+            ("poisoned_mass_admitted", Json::num(self.poisoned_mass_admitted)),
+            ("rejected_contribs", Json::num(self.rejected_contribs as f64)),
+            ("isolation_rate", Json::num(self.isolation_rate)),
         ])
     }
 
@@ -87,6 +100,9 @@ impl Record {
             late_msgs: opt("late_msgs") as u64,
             dropped_msgs: opt("dropped_msgs") as u64,
             mean_staleness_s: opt("mean_staleness_s"),
+            poisoned_mass_admitted: opt("poisoned_mass_admitted"),
+            rejected_contribs: opt("rejected_contribs") as u64,
+            isolation_rate: opt("isolation_rate"),
         })
     }
 }
@@ -173,6 +189,10 @@ pub struct SeriesPoint {
     pub test_acc: MeanCi,
     pub test_loss: MeanCi,
     pub train_loss: MeanCi,
+    /// Mean per-node fraction of Byzantine contributions rejected.
+    pub isolation_rate: MeanCi,
+    /// Mean per-node cumulative admitted Byzantine mixing weight.
+    pub poisoned_mass_admitted: MeanCi,
 }
 
 /// Aggregate across nodes, grouped by **round number**: every round
@@ -207,6 +227,8 @@ pub fn aggregate(logs: &[NodeLog]) -> Vec<SeriesPoint> {
             test_acc: mean_ci(&collect(&|r| r.test_acc)),
             test_loss: mean_ci(&collect(&|r| r.test_loss)),
             train_loss: mean_ci(&collect(&|r| r.train_loss)),
+            isolation_rate: mean_ci(&collect(&|r| r.isolation_rate)),
+            poisoned_mass_admitted: mean_ci(&collect(&|r| r.poisoned_mass_admitted)),
         });
     }
     out
@@ -248,6 +270,9 @@ mod tests {
             late_msgs: round,
             dropped_msgs: 1,
             mean_staleness_s: 0.25,
+            poisoned_mass_admitted: 0.125,
+            rejected_contribs: round,
+            isolation_rate: 0.75,
         }
     }
 
@@ -260,12 +285,18 @@ mod tests {
             obj.remove("dropped_msgs");
             obj.remove("mean_staleness_s");
             obj.remove("bytes_serialized");
+            obj.remove("poisoned_mass_admitted");
+            obj.remove("rejected_contribs");
+            obj.remove("isolation_rate");
         }
         let r = Record::from_json(&j).unwrap();
         assert_eq!(r.late_msgs, 0);
         assert_eq!(r.dropped_msgs, 0);
         assert_eq!(r.mean_staleness_s, 0.0);
         assert_eq!(r.bytes_serialized, 0);
+        assert_eq!(r.poisoned_mass_admitted, 0.0);
+        assert_eq!(r.rejected_contribs, 0);
+        assert_eq!(r.isolation_rate, 0.0);
     }
 
     #[test]

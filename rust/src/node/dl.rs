@@ -12,7 +12,8 @@ use crate::dataset::Dataset;
 use crate::kernels::Scratch;
 use crate::metrics::{NodeLog, Record};
 use crate::model::ParamVec;
-use crate::sharing::{Received, Sharing};
+use crate::scenario::ByzantineRoster;
+use crate::sharing::{DefenseStats, Received, Sharing};
 use crate::store::{ParamSlot, Payload};
 use crate::training::Trainer;
 use crate::util::Timer;
@@ -39,6 +40,10 @@ pub struct DlNode {
     pub params: ParamSlot,
     pub topology: TopologyView,
     pub test: Arc<Dataset>,
+    /// Byzantine attack roster (`None` = every node honest). This node
+    /// consults only its own entry; the roster is shared fleet-wide so
+    /// defense metrics can label senders.
+    pub byz: Option<Arc<ByzantineRoster>>,
     /// WAN model for the emulated clock (None = skip emu accounting).
     pub network: Option<NetworkModel>,
     /// Calibrated seconds per local training step (for the emu clock).
@@ -58,6 +63,7 @@ impl DlNode {
         // Per-node arena: hot-path buffers warm up in round 0 and are
         // reused for the rest of the run.
         let mut scratch = Scratch::new();
+        let mut defense = DefenseStats::default();
 
         for round in 0..self.rounds {
             // 1. Current topology row.
@@ -70,18 +76,36 @@ impl DlNode {
 
             // 3. Share with neighbors: serialize once, every envelope
             //    shares the same payload buffer (pooled across rounds).
-            let payload: Payload = self.sharing.outgoing_pooled(&model, round, &mut scratch)?;
+            //    A Byzantine node swaps in its attack model here — its
+            //    *own* params keep the honest training result, so the
+            //    attack is sustained round after round. Flood attacks
+            //    amplify by sending `copies` duplicates per neighbor
+            //    (receivers keep one per (round, sender); the rest is
+            //    wire-byte damage).
+            let (payload, copies): (Payload, u32) = match self
+                .byz
+                .as_ref()
+                .and_then(|b| b.payload_model(self.id, round, model.as_slice()))
+            {
+                Some((attack, copies)) => {
+                    let attack = ParamVec::from_vec(attack);
+                    (self.sharing.outgoing_pooled(&attack, round, &mut scratch)?, copies)
+                }
+                None => (self.sharing.outgoing_pooled(&model, round, &mut scratch)?, 1),
+            };
             self.transport.note_serialized(payload.len());
             let bytes_before = self.transport.counters().bytes_sent;
             for &(nbr, _) in &assign.neighbors {
-                self.transport.send(Envelope {
-                    src: self.id,
-                    dst: nbr,
-                    round,
-                    kind: MsgKind::Model,
-                    sent_at_s: 0.0,
-                    payload: payload.clone(),
-                })?;
+                for _ in 0..copies {
+                    self.transport.send(Envelope {
+                        src: self.id,
+                        dst: nbr,
+                        round,
+                        kind: MsgKind::Model,
+                        sent_at_s: 0.0,
+                        payload: payload.clone(),
+                    })?;
+                }
             }
             let sent_this_round = self.transport.counters().bytes_sent - bytes_before;
 
@@ -105,6 +129,16 @@ impl DlNode {
                     .collect();
                 self.sharing
                     .aggregate_with(&mut model, assign.self_weight, &received, &mut scratch)?;
+                // Defense accounting: how much adversarial mass did the
+                // aggregation admit, how much did it isolate?
+                if let Some(roster) = &self.byz {
+                    let report = self.sharing.defense_report();
+                    for (i, r) in received.iter().enumerate() {
+                        let admitted = report
+                            .map_or(1.0, |rep| rep.admitted.get(i).copied().unwrap_or(1.0));
+                        defense.observe(roster.is_byzantine(r.src), r.weight, admitted);
+                    }
+                }
             }
             self.params.put(model.into_vec());
 
@@ -137,6 +171,9 @@ impl DlNode {
                     late_msgs: 0,
                     dropped_msgs: 0,
                     mean_staleness_s: 0.0,
+                    poisoned_mass_admitted: defense.poisoned_mass,
+                    rejected_contribs: defense.rejected,
+                    isolation_rate: defense.isolation_rate(),
                 });
             }
         }

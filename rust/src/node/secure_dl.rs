@@ -132,6 +132,9 @@ impl SecureDlNode {
                     late_msgs: 0,
                     dropped_msgs: 0,
                     mean_staleness_s: 0.0,
+                    poisoned_mass_admitted: 0.0,
+                    rejected_contribs: 0,
+                    isolation_rate: 0.0,
                 });
             }
         }

@@ -1,0 +1,314 @@
+//! Byzantine adversaries as a first-class scenario axis.
+//!
+//! A [`ByzantineRoster`] resolves a `byzantine:<frac>:<attack>` spec
+//! into a deterministic per-node attack assignment: each node is drawn
+//! Byzantine with probability `frac` (one RNG draw per node, consumed
+//! unconditionally, so a node's fate depends only on the experiment
+//! seed — never on how many peers were drawn before it). Attacks:
+//!
+//! * `flood[:<factor>]` — the node broadcasts a fresh noise model every
+//!   round and sends `factor` duplicate copies to every neighbor
+//!   (message amplification; duplicates overwrite in receivers'
+//!   per-(round, sender) buffers, so the damage is junk content plus
+//!   `factor`× wire bytes).
+//! * `poison:<scale>` — the node trains honestly, then broadcasts
+//!   `-scale ×` its model (scaled sign-flip poisoning).
+//! * `collude:<k>` — Byzantine nodes are partitioned into groups of `k`
+//!   (in node-id order) and every member of a group broadcasts the
+//!   *same* poisoned model each round, deterministically derived from
+//!   `(seed, group, round)` — mutually close candidates that stress
+//!   distance-based defenses like Krum.
+//!
+//! Injection happens at the broadcast step of the node round loop
+//! (sync + async state machines and the threaded `DlNode`): the node's
+//! *own* parameters keep the honest training result so the attack is
+//! sustained round after round, only the outgoing payload is corrupted.
+//! All attack payloads derive from `(roster seed, node-or-group,
+//! round)` — never from arrival order or wall clock — which is what
+//! keeps adversarial runs bit-identical across scheduler worker counts.
+
+use anyhow::{bail, Context, Result};
+
+use crate::rng::{mix_seed, Xoshiro256pp};
+
+/// Domain-separation label for everything Byzantine (roster membership
+/// and per-round attack payload derivation).
+const BYZ_LABEL: u64 = 0xB12A;
+
+/// Copies per neighbor for a bare `flood` spec.
+const DEFAULT_FLOOD_FACTOR: u32 = 3;
+
+/// Noise scale of flood-attack payloads (junk models, far outside the
+/// honest parameter distribution).
+const FLOOD_NOISE_STD: f32 = 5.0;
+
+/// Noise scale of the colluders' common poisoned model.
+const COLLUDE_STD: f32 = 5.0;
+
+/// The attack a single Byzantine node mounts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeAttack {
+    /// Broadcast `factor` copies of a fresh noise model per neighbor.
+    Flood { factor: u32 },
+    /// Broadcast `-scale ×` the honestly-trained model. (The scale is
+    /// carried as bits so the attack enum stays `Eq`; it is always a
+    /// finite positive f32 by construction.)
+    Poison { scale_bits: u32 },
+    /// Broadcast the colluding group's common poisoned model.
+    Collude { group: u64 },
+}
+
+/// Deterministic per-node attack assignment for one experiment.
+pub struct ByzantineRoster {
+    seed: u64,
+    attacks: Vec<Option<NodeAttack>>,
+    count: usize,
+}
+
+enum AttackKind {
+    Flood { factor: u32 },
+    Poison { scale: f32 },
+    Collude { k: usize },
+}
+
+fn parse_attack(s: &str) -> Result<AttackKind> {
+    let parts: Vec<&str> = s.split(':').collect();
+    Ok(match parts.as_slice() {
+        ["flood"] => AttackKind::Flood { factor: DEFAULT_FLOOD_FACTOR },
+        ["flood", f] => {
+            let factor: u32 = f.parse().with_context(|| format!("bad flood factor {f:?}"))?;
+            if !(1..=64).contains(&factor) {
+                bail!("flood factor must be in [1, 64], got {factor}");
+            }
+            AttackKind::Flood { factor }
+        }
+        ["poison"] => AttackKind::Poison { scale: 1.0 },
+        ["poison", sc] => {
+            let scale: f32 = sc.parse().with_context(|| format!("bad poison scale {sc:?}"))?;
+            if !scale.is_finite() || scale <= 0.0 {
+                bail!("poison scale must be positive and finite, got {scale}");
+            }
+            AttackKind::Poison { scale }
+        }
+        ["collude", k] => {
+            let k: usize = k.parse().with_context(|| format!("bad collude group size {k:?}"))?;
+            if k < 2 {
+                bail!("collude group size must be >= 2, got {k}");
+            }
+            AttackKind::Collude { k }
+        }
+        _ => bail!(
+            "unknown byzantine attack {s:?} (expected flood[:<factor>] | poison[:<scale>] | collude:<k>)"
+        ),
+    })
+}
+
+impl ByzantineRoster {
+    /// Resolve a spec for an `nodes`-node fleet. Empty spec = no
+    /// adversaries (`None`); everything else must match
+    /// `byzantine:<frac>:<attack>`.
+    pub fn from_spec(spec: &str, nodes: usize, seed: u64) -> Result<Option<ByzantineRoster>> {
+        if spec.is_empty() {
+            return Ok(None);
+        }
+        let Some(rest) = spec.strip_prefix("byzantine:") else {
+            bail!("unknown byzantine spec {spec:?} (expected byzantine:<frac>:<attack>)");
+        };
+        let Some((frac_s, attack_s)) = rest.split_once(':') else {
+            bail!("byzantine spec {spec:?} is missing an attack (byzantine:<frac>:<attack>)");
+        };
+        let frac: f64 = frac_s
+            .parse()
+            .with_context(|| format!("bad byzantine fraction {frac_s:?}"))?;
+        if !(0.0..=1.0).contains(&frac) {
+            bail!("byzantine fraction must be in [0, 1], got {frac}");
+        }
+        let kind = parse_attack(attack_s)?;
+        let roster_seed = mix_seed(&[seed, BYZ_LABEL]);
+        let mut rng = Xoshiro256pp::new(roster_seed);
+        let mut attacks: Vec<Option<NodeAttack>> = Vec::with_capacity(nodes);
+        let mut byz_index = 0usize;
+        for _ in 0..nodes {
+            // One draw per node, consumed unconditionally.
+            let hit = rng.next_f64() < frac;
+            attacks.push(if hit {
+                let a = match kind {
+                    AttackKind::Flood { factor } => NodeAttack::Flood { factor },
+                    AttackKind::Poison { scale } => {
+                        NodeAttack::Poison { scale_bits: scale.to_bits() }
+                    }
+                    AttackKind::Collude { k } => {
+                        NodeAttack::Collude { group: (byz_index / k) as u64 }
+                    }
+                };
+                byz_index += 1;
+                Some(a)
+            } else {
+                None
+            });
+        }
+        Ok(Some(ByzantineRoster { seed: roster_seed, attacks, count: byz_index }))
+    }
+
+    /// Check a spec's syntax without needing the fleet size.
+    pub fn validate_spec(spec: &str) -> Result<()> {
+        ByzantineRoster::from_spec(spec, 8, 0).map(|_| ())
+    }
+
+    /// The attack node `id` mounts, if any.
+    pub fn attack(&self, id: usize) -> Option<NodeAttack> {
+        self.attacks.get(id).copied().flatten()
+    }
+
+    /// Ground truth for the defense metrics.
+    pub fn is_byzantine(&self, id: usize) -> bool {
+        self.attack(id).is_some()
+    }
+
+    /// How many nodes the roster drew Byzantine.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// The model node `id` broadcasts in `round` *instead of* its
+    /// honestly-trained `model`, plus the number of copies each
+    /// neighbor receives (flood amplification; 1 otherwise). `None`
+    /// for honest nodes. Deterministic in `(seed, id-or-group, round)`
+    /// only, so adversarial runs stay bit-identical across worker
+    /// counts.
+    pub fn payload_model(&self, id: usize, round: u64, model: &[f32]) -> Option<(Vec<f32>, u32)> {
+        Some(match self.attack(id)? {
+            NodeAttack::Poison { scale_bits } => {
+                let scale = f32::from_bits(scale_bits);
+                (model.iter().map(|&v| -scale * v).collect(), 1)
+            }
+            NodeAttack::Flood { factor } => {
+                let mut rng =
+                    Xoshiro256pp::new(mix_seed(&[self.seed, 0xF100D, id as u64, round]));
+                let junk = (0..model.len())
+                    .map(|_| rng.normal_f32(0.0, FLOOD_NOISE_STD))
+                    .collect();
+                (junk, factor)
+            }
+            NodeAttack::Collude { group } => {
+                let mut rng = Xoshiro256pp::new(mix_seed(&[self.seed, 0xC0_11DE, group, round]));
+                let common = (0..model.len())
+                    .map(|_| rng.normal_f32(0.0, COLLUDE_STD))
+                    .collect();
+                (common, 1)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_validation_accepts_the_grammar() {
+        for good in [
+            "",
+            "byzantine:0.1:flood",
+            "byzantine:0.1:flood:5",
+            "byzantine:0.2:poison",
+            "byzantine:0.2:poison:2.5",
+            "byzantine:0.25:collude:3",
+            "byzantine:0:poison:1",
+            "byzantine:1:flood",
+        ] {
+            assert!(ByzantineRoster::validate_spec(good).is_ok(), "{good}");
+        }
+    }
+
+    #[test]
+    fn spec_validation_rejects_malformed_specs() {
+        for bad in [
+            "byzantine:1.5:flood",     // fraction out of range
+            "byzantine:-0.2:poison:2", // negative fraction
+            "byzantine:0.1:ddos",      // unknown attack name
+            "byzantine:0.1",           // missing attack
+            "byzantine:x:flood",       // unparsable fraction
+            "byzantine:0.1:flood:0",   // zero-copy flood
+            "byzantine:0.1:flood:999", // absurd flood factor
+            "byzantine:0.1:poison:0",  // non-positive scale
+            "byzantine:0.1:poison:-3", // negative scale
+            "byzantine:0.1:poison:inf",
+            "byzantine:0.1:collude:1", // group of one cannot collude
+            "byzantine:0.1:collude:x",
+            "adversary:0.1:flood", // wrong prefix
+        ] {
+            assert!(ByzantineRoster::validate_spec(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn roster_is_deterministic_and_fraction_shaped() {
+        let a = ByzantineRoster::from_spec("byzantine:0.25:poison:2", 400, 42)
+            .unwrap()
+            .unwrap();
+        let b = ByzantineRoster::from_spec("byzantine:0.25:poison:2", 400, 42)
+            .unwrap()
+            .unwrap();
+        for id in 0..400 {
+            assert_eq!(a.attack(id), b.attack(id), "node {id}");
+        }
+        // Law of large numbers, loose: 25% of 400 within ±10 points.
+        assert!((60..=140).contains(&a.count()), "count = {}", a.count());
+        // A different seed redraws membership.
+        let c = ByzantineRoster::from_spec("byzantine:0.25:poison:2", 400, 43)
+            .unwrap()
+            .unwrap();
+        assert!((0..400).any(|id| a.is_byzantine(id) != c.is_byzantine(id)));
+        // Empty spec: no roster at all.
+        assert!(ByzantineRoster::from_spec("", 400, 42).unwrap().is_none());
+        // Fraction 0 never draws anyone.
+        let z = ByzantineRoster::from_spec("byzantine:0:flood", 400, 42).unwrap().unwrap();
+        assert_eq!(z.count(), 0);
+    }
+
+    #[test]
+    fn poison_negates_and_scales_the_model() {
+        let r = ByzantineRoster::from_spec("byzantine:1:poison:2", 4, 1).unwrap().unwrap();
+        assert_eq!(r.count(), 4);
+        let (sent, copies) = r.payload_model(2, 5, &[1.0, -0.5, 0.25]).unwrap();
+        assert_eq!(copies, 1);
+        assert_eq!(sent, vec![-2.0, 1.0, -0.5]);
+    }
+
+    #[test]
+    fn flood_sends_junk_copies_independent_of_the_model() {
+        let r = ByzantineRoster::from_spec("byzantine:1:flood:4", 4, 1).unwrap().unwrap();
+        let (j1, copies) = r.payload_model(0, 3, &[1.0; 8]).unwrap();
+        assert_eq!(copies, 4);
+        let (j2, _) = r.payload_model(0, 3, &[9.0; 8]).unwrap();
+        assert_eq!(j1, j2, "flood payload must not depend on the trained model");
+        let (j3, _) = r.payload_model(0, 4, &[1.0; 8]).unwrap();
+        assert_ne!(j1, j3, "flood payload must vary per round");
+        let (j4, _) = r.payload_model(1, 3, &[1.0; 8]).unwrap();
+        assert_ne!(j1, j4, "flood payload must vary per node");
+    }
+
+    #[test]
+    fn colluders_share_one_payload_per_group_and_round() {
+        let r = ByzantineRoster::from_spec("byzantine:1:collude:2", 6, 9).unwrap().unwrap();
+        assert_eq!(r.count(), 6);
+        // Groups of 2 in id order: {0,1}, {2,3}, {4,5}.
+        let (p0, _) = r.payload_model(0, 2, &[0.0; 16]).unwrap();
+        let (p1, _) = r.payload_model(1, 2, &[7.0; 16]).unwrap();
+        assert_eq!(p0, p1, "group members must broadcast the same model");
+        let (p2, _) = r.payload_model(2, 2, &[0.0; 16]).unwrap();
+        assert_ne!(p0, p2, "different groups must differ");
+        let (p0_next, _) = r.payload_model(0, 3, &[0.0; 16]).unwrap();
+        assert_ne!(p0, p0_next, "the common model must vary per round");
+    }
+
+    #[test]
+    fn honest_nodes_get_no_payload_override() {
+        let r = ByzantineRoster::from_spec("byzantine:0:poison:1", 8, 3).unwrap().unwrap();
+        for id in 0..8 {
+            assert!(r.payload_model(id, 0, &[1.0]).is_none());
+            assert!(!r.is_byzantine(id));
+        }
+    }
+}

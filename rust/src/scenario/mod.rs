@@ -21,19 +21,28 @@
 //!   replayable per-node online intervals replacing the Bernoulli draw;
 //!   nodes can sit out rounds, return, or depart for good, in which
 //!   case the scheduler drops their in-flight deliveries.
+//! * **Byzantine adversaries** ([`ByzantineRoster`]) — a deterministic
+//!   per-node attack assignment (`byzantine:<frac>:<attack>` with
+//!   `flood`, `poison:<scale>`, `collude:<k>`); malicious nodes corrupt
+//!   their *outgoing* broadcasts at the round loop's send step while
+//!   robust `Sharing` strategies (`trimmed_mean`, `coord_median`,
+//!   `krum`) defend on the receive side.
 //!
-//! Every axis has a *degenerate* spec (`uniform` / `uniform` / empty)
-//! under which runs stay **bit-identical** to the plain PR-1 scheduler
-//! path — scenarios are pure extensions, never silent behavior changes.
-//! Specs enter through the config keys `step_time`, `link_model`, and
-//! `churn_trace`, or the CLI flags `--step-time-trace`, `--link-model`,
-//! `--churn-trace`, and `--scenario` (a JSON overlay file). See
-//! `docs/ARCHITECTURE.md` for the subsystem walk-through and
-//! `docs/CLI.md` for the full spec grammars.
+//! Every axis has a *degenerate* spec (`uniform` / `uniform` / empty /
+//! empty) under which runs stay **bit-identical** to the plain PR-1
+//! scheduler path — scenarios are pure extensions, never silent
+//! behavior changes. Specs enter through the config keys `step_time`,
+//! `link_model`, `churn_trace`, and `byzantine`, or the CLI flags
+//! `--step-time-trace`, `--link-model`, `--churn-trace`, `--byzantine`,
+//! and `--scenario` (a JSON overlay file). See `docs/ARCHITECTURE.md`
+//! for the subsystem walk-through and `docs/CLI.md` for the full spec
+//! grammars.
 
+mod byzantine;
 mod churn;
 mod compute;
 
+pub use byzantine::{ByzantineRoster, NodeAttack};
 pub use churn::{is_crash_spec, Availability, ChurnTrace, FOREVER};
 pub use compute::ComputePlan;
 
@@ -105,6 +114,8 @@ pub struct Scenario {
     pub links: Option<LinkModel>,
     /// Replayable availability (`None` = the config's Bernoulli churn).
     pub churn: Option<Arc<ChurnTrace>>,
+    /// Per-node attack assignment (`None` = every node is honest).
+    pub byzantine: Option<Arc<ByzantineRoster>>,
 }
 
 impl Scenario {
@@ -114,16 +125,18 @@ impl Scenario {
             compute: ComputePlan::uniform(nodes),
             links: base.map(LinkModel::Uniform),
             churn: None,
+            byzantine: None,
         }
     }
 
-    /// Materialize the three axes from their config specs. Seeds for
+    /// Materialize the four axes from their config specs. Seeds for
     /// each axis derive from the experiment seed with distinct labels,
     /// so e.g. changing the churn spec never reshuffles stragglers.
     pub fn from_specs(
         step_time: &str,
         link_model: &str,
         churn_trace: &str,
+        byzantine: &str,
         base: Option<NetworkModel>,
         nodes: usize,
         rounds: u64,
@@ -133,6 +146,7 @@ impl Scenario {
             compute: ComputePlan::from_spec(step_time, nodes, mix_seed(&[seed, 0x5CE0]))?,
             links: link_model_from_spec(link_model, nodes, mix_seed(&[seed, 0x11EF]), base)?,
             churn: ChurnTrace::from_spec(churn_trace, nodes, rounds, mix_seed(&[seed, 0xC0A1]))?,
+            byzantine: ByzantineRoster::from_spec(byzantine, nodes, seed)?.map(Arc::new),
         })
     }
 
@@ -187,6 +201,7 @@ mod tests {
             "stragglers:0.25:4",
             "geo:4",
             "departures:0.25",
+            "byzantine:0.25:poison:2",
             Some(NetworkModel::lan()),
             64,
             20,
@@ -197,11 +212,14 @@ mod tests {
         assert!(matches!(s.links, Some(LinkModel::Matrix(_))));
         assert!(s.churn.is_some());
         assert!(matches!(s.availability(0.0), Availability::Trace(_)));
+        let roster = s.byzantine.as_ref().expect("byzantine axis resolved");
+        assert!(roster.count() > 0);
         // Deterministic in the seed.
         let t = Scenario::from_specs(
             "stragglers:0.25:4",
             "geo:4",
             "departures:0.25",
+            "byzantine:0.25:poison:2",
             Some(NetworkModel::lan()),
             64,
             20,
@@ -209,5 +227,10 @@ mod tests {
         )
         .unwrap();
         assert_eq!(s.compute, t.compute);
+        let other = t.byzantine.as_ref().unwrap();
+        assert_eq!(
+            (0..64).map(|i| roster.is_byzantine(i)).collect::<Vec<_>>(),
+            (0..64).map(|i| other.is_byzantine(i)).collect::<Vec<_>>(),
+        );
     }
 }

@@ -44,9 +44,9 @@ use crate::node::proto::{decode_control, decode_neighbors, encode_control, encod
 use crate::node::proto::{Control, NeighborAssignment};
 use crate::node::TopologyView;
 use crate::node::{draw_round, key_agreement_envelopes, secure_round_envelopes};
-use crate::scenario::{Availability, ChurnTrace};
+use crate::scenario::{Availability, ByzantineRoster, ChurnTrace};
 use crate::secure::Masker;
-use crate::sharing::{Received, Sharing};
+use crate::sharing::{DefenseStats, Received, Sharing};
 use crate::store::{ParamSlot, Payload};
 use crate::training::Trainer;
 use crate::util::Timer;
@@ -84,6 +84,8 @@ pub struct DlNodeSm {
     test: Arc<Dataset>,
     /// Availability trace (static topologies only; `None` = always on).
     churn: Option<Arc<ChurnTrace>>,
+    /// Byzantine attack roster (`None` = every node honest).
+    byz: Option<Arc<ByzantineRoster>>,
     step_time_s: f64,
     eval_time_s: f64,
     // --- runtime state ---
@@ -98,6 +100,8 @@ pub struct DlNodeSm {
     /// Reusable hot-path buffers (decode, diff, sparse staging): warm
     /// after round 0, so steady-state rounds allocate nothing.
     scratch: Scratch,
+    /// Cumulative defense accounting (admitted/rejected contributions).
+    defense: DefenseStats,
     log: Option<NodeLog>,
     wall: Timer,
 }
@@ -114,6 +118,7 @@ impl DlNodeSm {
         topology: TopologyView,
         test: Arc<Dataset>,
         churn: Option<Arc<ChurnTrace>>,
+        byz: Option<Arc<ByzantineRoster>>,
         step_time_s: f64,
         eval_time_s: f64,
     ) -> DlNodeSm {
@@ -127,6 +132,7 @@ impl DlNodeSm {
             topology,
             test,
             churn,
+            byz,
             step_time_s,
             eval_time_s,
             round: 0,
@@ -136,6 +142,7 @@ impl DlNodeSm {
             train_loss: 0.0,
             pending: HashMap::new(),
             scratch: Scratch::new(),
+            defense: DefenseStats::default(),
             log: Some(NodeLog::new(id)),
             wall: Timer::start(),
         }
@@ -261,6 +268,16 @@ impl DlNodeSm {
                 .collect();
             self.sharing
                 .aggregate_with(&mut model, self_weight, &received, &mut self.scratch)?;
+            // Defense accounting: how much adversarial mass did the
+            // aggregation admit, how much did it isolate?
+            if let Some(roster) = &self.byz {
+                let report = self.sharing.defense_report();
+                for (i, r) in received.iter().enumerate() {
+                    let admitted =
+                        report.map_or(1.0, |rep| rep.admitted.get(i).copied().unwrap_or(1.0));
+                    self.defense.observe(roster.is_byzantine(r.src), r.weight, admitted);
+                }
+            }
         }
         self.params.put(model.into_vec());
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
@@ -316,20 +333,48 @@ impl EventNode for DlNodeSm {
                     // the same buffer (zero-copy broadcast), and the
                     // buffer itself comes from the arena's payload pool
                     // once recipients of earlier rounds let go.
-                    let payload: Payload = self
-                        .sharing
-                        .outgoing_pooled(&model, self.round, &mut self.scratch)?;
+                    // A Byzantine node swaps in its attack model here —
+                    // its *own* params keep the honest training result,
+                    // so the attack is sustained round after round. The
+                    // attack payload depends only on (seed, id/group,
+                    // round), never on event interleaving, which keeps
+                    // adversarial runs bit-identical across workers.
+                    // Flood copies overwrite in receivers' per-(round,
+                    // sender) buffers; the damage is wire bytes + junk.
+                    let (payload, copies): (Payload, u32) = match self
+                        .byz
+                        .as_ref()
+                        .and_then(|b| b.payload_model(self.id, self.round, model.as_slice()))
+                    {
+                        Some((attack, copies)) => {
+                            let attack = ParamVec::from_vec(attack);
+                            (
+                                self.sharing.outgoing_pooled(
+                                    &attack,
+                                    self.round,
+                                    &mut self.scratch,
+                                )?,
+                                copies,
+                            )
+                        }
+                        None => (
+                            self.sharing.outgoing_pooled(&model, self.round, &mut self.scratch)?,
+                            1,
+                        ),
+                    };
                     ctx.note_serialized(payload.len());
                     let assign = self.assign.as_ref().context("no neighbor assignment")?;
                     for &(nbr, _) in &assign.neighbors {
-                        ctx.send(Envelope {
-                            src: self.id,
-                            dst: nbr,
-                            round: self.round,
-                            kind: MsgKind::Model,
-                            sent_at_s: 0.0,
-                            payload: payload.clone(),
-                        });
+                        for _ in 0..copies {
+                            ctx.send(Envelope {
+                                src: self.id,
+                                dst: nbr,
+                                round: self.round,
+                                kind: MsgKind::Model,
+                                sent_at_s: 0.0,
+                                payload: payload.clone(),
+                            });
+                        }
                     }
                     if self.parting_round() {
                         // Final online round: push the last update, then
@@ -365,6 +410,9 @@ impl EventNode for DlNodeSm {
                         late_msgs: 0,
                         dropped_msgs: 0,
                         mean_staleness_s: 0.0,
+                        poisoned_mass_admitted: self.defense.poisoned_mass,
+                        rejected_contribs: self.defense.rejected,
+                        isolation_rate: self.defense.isolation_rate(),
                     });
                     self.round += 1;
                     self.begin_round(ctx)
@@ -581,6 +629,9 @@ impl EventNode for SecureDlNodeSm {
                         late_msgs: 0,
                         dropped_msgs: 0,
                         mean_staleness_s: 0.0,
+                        poisoned_mass_admitted: 0.0,
+                        rejected_contribs: 0,
+                        isolation_rate: 0.0,
                     });
                     self.round += 1;
                     self.begin_round(ctx)
@@ -754,6 +805,8 @@ pub struct AsyncDlNodeSm {
     test: Arc<Dataset>,
     /// Round-indexed availability trace (`None` = always on).
     churn: Option<Arc<ChurnTrace>>,
+    /// Byzantine attack roster (`None` = every node honest).
+    byz: Option<Arc<ByzantineRoster>>,
     eval_time_s: f64,
     /// Own per-round training time (step time × local steps).
     round_compute_s: f64,
@@ -782,6 +835,8 @@ pub struct AsyncDlNodeSm {
     stats: AsyncStats,
     /// Reusable hot-path buffers, as in [`DlNodeSm`].
     scratch: Scratch,
+    /// Cumulative defense accounting (admitted/rejected contributions).
+    defense: DefenseStats,
     log: Option<NodeLog>,
     wall: Timer,
 }
@@ -799,6 +854,7 @@ impl AsyncDlNodeSm {
         neighbors: Vec<(usize, f64)>,
         test: Arc<Dataset>,
         churn: Option<Arc<ChurnTrace>>,
+        byz: Option<Arc<ByzantineRoster>>,
         step_time_s: f64,
         eval_time_s: f64,
         policy: AsyncPolicy,
@@ -815,6 +871,7 @@ impl AsyncDlNodeSm {
             neighbors,
             test,
             churn,
+            byz,
             eval_time_s,
             round_compute_s,
             policy,
@@ -831,6 +888,7 @@ impl AsyncDlNodeSm {
             offset_cursor: 0,
             stats: AsyncStats::default(),
             scratch: Scratch::new(),
+            defense: DefenseStats::default(),
             log: Some(NodeLog::new(id)),
             wall: Timer::start(),
         }
@@ -942,6 +1000,15 @@ impl AsyncDlNodeSm {
                 .collect();
             self.sharing
                 .aggregate_with(&mut model, self_w, &received, &mut self.scratch)?;
+            // Defense accounting, as in [`DlNodeSm::try_aggregate`].
+            if let Some(roster) = &self.byz {
+                let report = self.sharing.defense_report();
+                for (i, r) in received.iter().enumerate() {
+                    let admitted =
+                        report.map_or(1.0, |rep| rep.admitted.get(i).copied().unwrap_or(1.0));
+                    self.defense.observe(roster.is_byzantine(r.src), r.weight, admitted);
+                }
+            }
         }
         self.params.put(model.into_vec());
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
@@ -1026,20 +1093,44 @@ impl EventNode for AsyncDlNodeSm {
                     self.train_loss = loss;
                     let model = ParamVec::from_vec(params);
                     // One serialization, shared by every recipient —
-                    // in a pooled buffer reused across rounds.
-                    let payload: Payload = self
-                        .sharing
-                        .outgoing_pooled(&model, self.round, &mut self.scratch)?;
+                    // in a pooled buffer reused across rounds. Byzantine
+                    // nodes swap in their attack model, exactly as in
+                    // [`DlNodeSm`]; in async mode flood duplicates also
+                    // overwrite (freshest-per-sender inbox), so the
+                    // damage is wire bytes plus junk content.
+                    let (payload, copies): (Payload, u32) = match self
+                        .byz
+                        .as_ref()
+                        .and_then(|b| b.payload_model(self.id, self.round, model.as_slice()))
+                    {
+                        Some((attack, copies)) => {
+                            let attack = ParamVec::from_vec(attack);
+                            (
+                                self.sharing.outgoing_pooled(
+                                    &attack,
+                                    self.round,
+                                    &mut self.scratch,
+                                )?,
+                                copies,
+                            )
+                        }
+                        None => (
+                            self.sharing.outgoing_pooled(&model, self.round, &mut self.scratch)?,
+                            1,
+                        ),
+                    };
                     ctx.note_serialized(payload.len());
                     for &(nbr, _) in &self.neighbors {
-                        ctx.send(Envelope {
-                            src: self.id,
-                            dst: nbr,
-                            round: self.round,
-                            kind: MsgKind::Model,
-                            sent_at_s: 0.0, // stamped by the scheduler
-                            payload: payload.clone(),
-                        });
+                        for _ in 0..copies {
+                            ctx.send(Envelope {
+                                src: self.id,
+                                dst: nbr,
+                                round: self.round,
+                                kind: MsgKind::Model,
+                                sent_at_s: 0.0, // stamped by the scheduler
+                                payload: payload.clone(),
+                            });
+                        }
                     }
                     if self.parting_round() {
                         // Push the final update, then leave without
@@ -1080,6 +1171,9 @@ impl EventNode for AsyncDlNodeSm {
                         late_msgs: self.stats.late_msgs,
                         dropped_msgs: self.stats.dropped_msgs,
                         mean_staleness_s: self.stats.mean_staleness_s(),
+                        poisoned_mass_admitted: self.defense.poisoned_mass,
+                        rejected_contribs: self.defense.rejected,
+                        isolation_rate: self.defense.isolation_rate(),
                     });
                     self.round += 1;
                     self.begin_round(ctx)

@@ -11,6 +11,10 @@
 //! * [`ChocoSgd`] — error-compensated compressed gossip (Koloskova et
 //!   al. 2019), the paper's tuned state-of-the-art sparsifier.
 //! * [`Quantized`] — full support with QSGD-quantized values (ablation).
+//! * [`TrimmedMean`] / [`CoordMedian`] / [`Krum`] — Byzantine-robust
+//!   aggregation rules ([`robust`]): dense payloads, candidate-matrix
+//!   order statistics / Krum selection instead of weighted mixing, plus
+//!   a per-round [`DefenseReport`] feeding the attack metrics.
 //!
 //! Sparse payloads share one wire layout: `u32 index-block length ‖
 //! adaptive index codec block ‖ f32 values`. All byte counts flow through
@@ -26,12 +30,14 @@
 mod choco;
 mod full;
 mod quantized;
+pub mod robust;
 mod subsample;
 mod topk;
 
 pub use choco::ChocoSgd;
 pub use full::FullSharing;
 pub use quantized::Quantized;
+pub use robust::{CoordMedian, DefenseReport, DefenseStats, Krum, TrimmedMean, ADMIT_THRESHOLD};
 pub use subsample::SubSampling;
 pub use topk::TopK;
 
@@ -144,12 +150,22 @@ pub trait Sharing: Send {
         received: &[Received<'_>],
         scratch: &mut Scratch,
     ) -> Result<()>;
+
+    /// What the most recent [`aggregate_with`](Sharing::aggregate_with)
+    /// admitted per contribution. `None` (the default) means the
+    /// strategy admits everything it is given — plain weighted mixing —
+    /// so callers treat every contribution as fully admitted. Robust
+    /// strategies ([`robust`]) return their per-round report.
+    fn defense_report(&self) -> Option<&DefenseReport> {
+        None
+    }
 }
 
 /// Parse a sharing spec into a strategy for a `dim`-parameter model.
 ///
 /// Grammar: `full` | `full:fp16` | `subsample:<budget>` | `topk:<budget>`
-/// | `choco:<budget>:<gamma>` | `quant:<levels>`.
+/// | `choco:<budget>:<gamma>` | `quant:<levels>` | `trimmed_mean:<frac>`
+/// | `coord_median` | `krum:<f>`.
 pub fn from_spec(spec: &str, dim: usize, seed: u64) -> Result<Box<dyn Sharing>> {
     let parts: Vec<&str> = spec.split(':').collect();
     Ok(match parts.as_slice() {
@@ -166,6 +182,15 @@ pub fn from_spec(spec: &str, dim: usize, seed: u64) -> Result<Box<dyn Sharing>> 
             Box::new(ChocoSgd::new(parse_budget(b)?, gamma, dim))
         }
         ["quant", levels] => Box::new(Quantized::new(levels.parse()?, seed)),
+        ["trimmed_mean", f] => {
+            let frac: f64 = f.parse().context("trimmed_mean fraction")?;
+            if !(0.0..0.5).contains(&frac) {
+                bail!("trimmed_mean fraction must be in [0, 0.5), got {frac}");
+            }
+            Box::new(TrimmedMean::new(frac))
+        }
+        ["coord_median"] => Box::new(CoordMedian::new()),
+        ["krum", f] => Box::new(Krum::new(f.parse().context("krum tolerated byzantine count")?)),
         _ => bail!("unknown sharing spec {spec:?}"),
     })
 }
@@ -327,10 +352,36 @@ mod tests {
 
     #[test]
     fn spec_dispatch() {
-        for spec in ["full", "full:fp16", "subsample:0.1", "topk:0.25", "choco:0.1:0.7", "quant:64"] {
+        for spec in [
+            "full",
+            "full:fp16",
+            "subsample:0.1",
+            "topk:0.25",
+            "choco:0.1:0.7",
+            "quant:64",
+            "trimmed_mean:0.2",
+            "trimmed_mean:0",
+            "coord_median",
+            "krum:1",
+            "krum:0",
+        ] {
             assert!(validate_spec(spec).is_ok(), "{spec}");
         }
-        for spec in ["", "nope", "subsample:0", "subsample:1.5", "choco:0.1:0", "choco:0.1:2"] {
+        for spec in [
+            "",
+            "nope",
+            "subsample:0",
+            "subsample:1.5",
+            "choco:0.1:0",
+            "choco:0.1:2",
+            "trimmed_mean:0.5",
+            "trimmed_mean:-0.1",
+            "trimmed_mean",
+            "coord_median:0.2",
+            "krum:-1",
+            "krum:x",
+            "krum",
+        ] {
             assert!(validate_spec(spec).is_err(), "{spec}");
         }
     }

@@ -1,0 +1,432 @@
+//! Byzantine-robust aggregation strategies: [`TrimmedMean`],
+//! [`CoordMedian`], and [`Krum`].
+//!
+//! Unlike the weighted-mixing strategies, the robust rules treat each
+//! round's inputs as a *candidate matrix* — the node's own
+//! post-training model plus one decoded row per received message, in
+//! canonical sender order (ascending `src`, so the result is invariant
+//! in the neighbor arrival/assignment order) — and compute a
+//! statistics-based aggregate that bounds the influence any single
+//! (or small colluding set of) malicious rows can exert:
+//!
+//! * [`TrimmedMean`] (`trimmed_mean:<frac>`) — coordinate-wise mean
+//!   after dropping the `⌊frac·rows⌋` lowest and highest values per
+//!   coordinate.
+//! * [`CoordMedian`] (`coord_median`) — coordinate-wise median.
+//! * [`Krum`] (`krum:<f>`) — selects the single candidate whose summed
+//!   squared distance to its `rows − f − 2` nearest candidates is
+//!   minimal (Blanchard et al. 2017), tolerating up to `f` Byzantine
+//!   rows.
+//!
+//! Mixing weights are deliberately ignored: the robust rules are order
+//! statistics / geometric selection over candidates, not convex mixing,
+//! which is exactly what removes the attacker's ability to buy
+//! influence through edge weights. All heavy lifting happens in the
+//! fused kernels ([`kernels::trimmed_mean`], [`kernels::coord_median`],
+//! [`kernels::pairwise_sq_dist`], [`kernels::krum_select`]) with scalar
+//! twins in [`kernels::reference`], staged entirely in the node's
+//! [`Scratch`] arena — warm rounds allocate nothing, including Krum's
+//! `rows²` distance matrix, which lives in `scratch.doubles` (rows is
+//! the node degree + 1, so the matrix is tiny next to the model).
+//!
+//! Each strategy keeps a per-round [`DefenseReport`] of the admitted
+//! fraction per contribution; nodes cross it against the
+//! [`crate::scenario::ByzantineRoster`] ground truth to produce the
+//! `poisoned_mass_admitted` / `rejected_contribs` / `isolation_rate`
+//! metrics.
+
+use anyhow::Result;
+
+use crate::kernels::{self, Scratch};
+use crate::model::ParamVec;
+
+use super::{Received, Sharing};
+
+/// Admitted fraction below which a contribution counts as *rejected*
+/// (isolated) in the defense metrics.
+pub const ADMIT_THRESHOLD: f64 = 0.5;
+
+/// What a robust strategy admitted in its most recent
+/// [`Sharing::aggregate_with`] call.
+#[derive(Debug, Default)]
+pub struct DefenseReport {
+    /// Per-contribution admitted fraction in `[0, 1]`, aligned with the
+    /// `received` slice the aggregate call was given (NOT canonical
+    /// order — callers index it by their own message order).
+    pub admitted: Vec<f64>,
+}
+
+impl DefenseReport {
+    /// Contributions whose admitted fraction fell below
+    /// [`ADMIT_THRESHOLD`].
+    pub fn rejected(&self) -> u64 {
+        self.admitted.iter().filter(|&&a| a < ADMIT_THRESHOLD).count() as u64
+    }
+}
+
+/// Cumulative node-side defense accounting: the strategy's per-round
+/// admitted fractions crossed with the roster's ground truth of which
+/// senders are Byzantine. Nodes keep one per run and snapshot it into
+/// every eval [`crate::metrics::Record`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DefenseStats {
+    /// Σ weight × admitted-fraction over Byzantine-sourced
+    /// contributions — the mass of poison that actually entered models.
+    pub poisoned_mass: f64,
+    /// Contributions rejected (admitted < [`ADMIT_THRESHOLD`]), any
+    /// source — honest rows trimmed as collateral count here too.
+    pub rejected: u64,
+    /// Byzantine-sourced contributions seen.
+    pub byz_contribs: u64,
+    /// Byzantine-sourced contributions rejected.
+    pub byz_rejected: u64,
+}
+
+impl DefenseStats {
+    /// Fold in one contribution's outcome.
+    pub fn observe(&mut self, is_byz: bool, weight: f64, admitted: f64) {
+        let rejected = admitted < ADMIT_THRESHOLD;
+        if rejected {
+            self.rejected += 1;
+        }
+        if is_byz {
+            self.byz_contribs += 1;
+            self.poisoned_mass += weight * admitted;
+            if rejected {
+                self.byz_rejected += 1;
+            }
+        }
+    }
+
+    /// Fraction of Byzantine contributions rejected (0 when none seen).
+    pub fn isolation_rate(&self) -> f64 {
+        if self.byz_contribs == 0 {
+            0.0
+        } else {
+            self.byz_rejected as f64 / self.byz_contribs as f64
+        }
+    }
+}
+
+/// Stage the candidate matrix in the arena: row 0 is the node's own
+/// model, rows 1.. are the received payloads decoded in canonical
+/// (src-ascending) order. The canonical permutation lands in
+/// `scratch.indices` (`indices[row-1]` = position in `received`), the
+/// matrix in `scratch.values`. Returns the row count.
+fn stage_rows(model: &ParamVec, received: &[Received<'_>], scratch: &mut Scratch) -> Result<usize> {
+    let dim = model.len();
+    let k = received.len();
+    scratch.indices.clear();
+    scratch.indices.extend(0..k as u32);
+    scratch.indices.sort_unstable_by_key(|&i| received[i as usize].src);
+    scratch.values.clear();
+    scratch.values.resize((k + 1) * dim, 0.0);
+    scratch.values[..dim].copy_from_slice(model.as_slice());
+    for (row, &i) in scratch.indices.iter().enumerate() {
+        kernels::decode_le(
+            &mut scratch.values[(row + 1) * dim..(row + 2) * dim],
+            received[i as usize].payload,
+        )?;
+    }
+    Ok(k + 1)
+}
+
+/// Map per-row admitted *counts* (canonical order, self row excluded)
+/// back onto the caller's `received` order as fractions of `dim`.
+fn fill_report(report: &mut DefenseReport, order: &[u32], row_counts: &[f64], dim: usize) {
+    let d = if dim == 0 { 1.0 } else { dim as f64 };
+    report.admitted.clear();
+    report.admitted.resize(order.len(), 0.0);
+    for (row, &i) in order.iter().enumerate() {
+        report.admitted[i as usize] = row_counts[row + 1] / d;
+    }
+}
+
+/// Coordinate-wise trimmed mean (`trimmed_mean:<frac>`).
+pub struct TrimmedMean {
+    frac: f64,
+    report: DefenseReport,
+}
+
+impl TrimmedMean {
+    pub fn new(frac: f64) -> TrimmedMean {
+        TrimmedMean { frac, report: DefenseReport::default() }
+    }
+}
+
+impl Sharing for TrimmedMean {
+    fn name(&self) -> &'static str {
+        "trimmed_mean"
+    }
+
+    fn outgoing_into(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        _scratch: &mut Scratch,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        encode_dense(model, out);
+        Ok(())
+    }
+
+    fn aggregate_with(
+        &mut self,
+        model: &mut ParamVec,
+        _self_weight: f64,
+        received: &[Received<'_>],
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        let dim = model.len();
+        let rows = stage_rows(model, received, scratch)?;
+        let trim = ((self.frac * rows as f64).floor() as usize).min((rows - 1) / 2);
+        scratch.dense.clear();
+        scratch.dense.resize(dim, 0.0);
+        scratch.mags.clear();
+        scratch.mags.resize(rows, 0.0);
+        scratch.doubles.clear();
+        scratch.doubles.resize(rows, 0.0);
+        kernels::trimmed_mean(
+            &mut scratch.dense,
+            &scratch.values,
+            rows,
+            trim,
+            &mut scratch.mags,
+            &mut scratch.doubles,
+        );
+        model.as_mut_slice().copy_from_slice(&scratch.dense);
+        fill_report(&mut self.report, &scratch.indices, &scratch.doubles, dim);
+        Ok(())
+    }
+
+    fn defense_report(&self) -> Option<&DefenseReport> {
+        Some(&self.report)
+    }
+}
+
+/// Coordinate-wise median (`coord_median`).
+#[derive(Default)]
+pub struct CoordMedian {
+    report: DefenseReport,
+}
+
+impl CoordMedian {
+    pub fn new() -> CoordMedian {
+        CoordMedian::default()
+    }
+}
+
+impl Sharing for CoordMedian {
+    fn name(&self) -> &'static str {
+        "coord_median"
+    }
+
+    fn outgoing_into(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        _scratch: &mut Scratch,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        encode_dense(model, out);
+        Ok(())
+    }
+
+    fn aggregate_with(
+        &mut self,
+        model: &mut ParamVec,
+        _self_weight: f64,
+        received: &[Received<'_>],
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        let dim = model.len();
+        let rows = stage_rows(model, received, scratch)?;
+        scratch.dense.clear();
+        scratch.dense.resize(dim, 0.0);
+        scratch.mags.clear();
+        scratch.mags.resize(rows, 0.0);
+        scratch.doubles.clear();
+        scratch.doubles.resize(rows, 0.0);
+        kernels::coord_median(
+            &mut scratch.dense,
+            &scratch.values,
+            rows,
+            &mut scratch.mags,
+            &mut scratch.doubles,
+        );
+        model.as_mut_slice().copy_from_slice(&scratch.dense);
+        fill_report(&mut self.report, &scratch.indices, &scratch.doubles, dim);
+        Ok(())
+    }
+
+    fn defense_report(&self) -> Option<&DefenseReport> {
+        Some(&self.report)
+    }
+}
+
+/// Krum selection (`krum:<f>`): the aggregate IS the single most
+/// centrally-located candidate; everything else is rejected outright.
+pub struct Krum {
+    f: usize,
+    report: DefenseReport,
+}
+
+impl Krum {
+    pub fn new(f: usize) -> Krum {
+        Krum { f, report: DefenseReport::default() }
+    }
+}
+
+impl Sharing for Krum {
+    fn name(&self) -> &'static str {
+        "krum"
+    }
+
+    fn outgoing_into(
+        &mut self,
+        model: &ParamVec,
+        _round: u64,
+        _scratch: &mut Scratch,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        encode_dense(model, out);
+        Ok(())
+    }
+
+    fn aggregate_with(
+        &mut self,
+        model: &mut ParamVec,
+        _self_weight: f64,
+        received: &[Received<'_>],
+        scratch: &mut Scratch,
+    ) -> Result<()> {
+        let dim = model.len();
+        let rows = stage_rows(model, received, scratch)?;
+        // Standard Krum sums the n−f−2 nearest; clamp so degenerate
+        // degrees (rows ≤ f+2) still score over at least one neighbor.
+        let closest =
+            if rows <= 1 { 0 } else { rows.saturating_sub(self.f + 2).clamp(1, rows - 1) };
+        scratch.doubles.clear();
+        scratch.doubles.resize(rows * rows + rows, 0.0);
+        let (dist, row_buf) = scratch.doubles.split_at_mut(rows * rows);
+        kernels::pairwise_sq_dist(&scratch.values, rows, dim, dist);
+        let pick = kernels::krum_select(dist, rows, closest, row_buf);
+        model
+            .as_mut_slice()
+            .copy_from_slice(&scratch.values[pick * dim..(pick + 1) * dim]);
+        // All-or-nothing admission: only the selected row (if it is a
+        // neighbor's) was admitted.
+        self.report.admitted.clear();
+        self.report.admitted.resize(received.len(), 0.0);
+        if pick >= 1 {
+            self.report.admitted[scratch.indices[pick - 1] as usize] = 1.0;
+        }
+        Ok(())
+    }
+
+    fn defense_report(&self) -> Option<&DefenseReport> {
+        Some(&self.report)
+    }
+}
+
+/// Dense little-endian f32 payload, worst case reserved up front so a
+/// pooled buffer never regrows (the zero-alloc warm outgoing contract).
+fn encode_dense(model: &ParamVec, out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(model.len() * 4);
+    for v in model.as_slice() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sharing;
+
+    fn recv<'a>(src: usize, payload: &'a [u8]) -> Received<'a> {
+        Received { src, weight: 0.25, payload }
+    }
+
+    fn enc(vals: &[f32]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn trimmed_mean_ignores_a_poisoned_neighbor() {
+        let mut s = sharing::from_spec("trimmed_mean:0.25", 4, 0).unwrap();
+        let mut model = ParamVec::from_vec(vec![1.0; 4]);
+        let honest1 = enc(&[1.1; 4]);
+        let honest2 = enc(&[0.9; 4]);
+        let poison = enc(&[-50.0; 4]);
+        let received =
+            [recv(1, &honest1), recv(2, &honest2), recv(3, &poison)];
+        let mut scratch = Scratch::new();
+        s.aggregate_with(&mut model, 0.25, &received, &mut scratch).unwrap();
+        // rows = 4, trim = 1: the -50 row and the 1.1 row are trimmed,
+        // survivors are {0.9, 1.0} per coordinate.
+        for &v in model.as_slice() {
+            assert!((v - 0.95).abs() < 1e-6, "{v}");
+        }
+        let report = s.defense_report().unwrap();
+        assert_eq!(report.admitted.len(), 3);
+        assert_eq!(report.admitted[2], 0.0, "poisoned row admitted");
+        assert_eq!(report.rejected(), 1 + 1, "poison + trimmed-high honest row");
+    }
+
+    #[test]
+    fn coord_median_tracks_the_honest_majority() {
+        let mut s = sharing::from_spec("coord_median", 3, 0).unwrap();
+        let mut model = ParamVec::from_vec(vec![2.0, 2.0, 2.0]);
+        let honest = enc(&[2.2, 2.2, 2.2]);
+        let poison = enc(&[100.0, -100.0, 100.0]);
+        let received = [recv(1, &honest), recv(2, &poison)];
+        s.aggregate_with(&mut model, 0.4, &received, &mut Scratch::new()).unwrap();
+        // rows = 3: median per coordinate is the honest 2.2 or own 2.0.
+        for &v in model.as_slice() {
+            assert!((2.0..=2.2).contains(&v), "{v}");
+        }
+        let report = s.defense_report().unwrap();
+        assert!(report.admitted[1] < ADMIT_THRESHOLD);
+    }
+
+    #[test]
+    fn krum_selects_within_the_cluster_and_reports_all_or_nothing() {
+        let mut s = sharing::from_spec("krum:1", 2, 0).unwrap();
+        let mut model = ParamVec::from_vec(vec![1.0, 1.0]);
+        let near1 = enc(&[1.01, 1.01]);
+        let near2 = enc(&[0.99, 0.99]);
+        let far = enc(&[80.0, -80.0]);
+        let received = [recv(5, &far), recv(1, &near1), recv(3, &near2)];
+        s.aggregate_with(&mut model, 0.25, &received, &mut Scratch::new()).unwrap();
+        assert!(model.as_slice().iter().all(|&v| (v - 1.0).abs() < 0.05), "{:?}", model.as_slice());
+        let report = s.defense_report().unwrap();
+        assert!(report.admitted.iter().filter(|&&a| a > 0.0).count() <= 1);
+        assert_eq!(report.admitted[0], 0.0, "outlier must never be selected");
+    }
+
+    #[test]
+    fn empty_round_keeps_the_own_model() {
+        for spec in ["trimmed_mean:0.2", "coord_median", "krum:1"] {
+            let mut s = sharing::from_spec(spec, 3, 0).unwrap();
+            let mut model = ParamVec::from_vec(vec![0.5, -0.25, 4.0]);
+            s.aggregate_with(&mut model, 1.0, &[], &mut Scratch::new()).unwrap();
+            assert_eq!(model.as_slice(), &[0.5, -0.25, 4.0], "{spec}");
+        }
+    }
+
+    #[test]
+    fn defense_stats_accumulate_and_rate() {
+        let mut d = DefenseStats::default();
+        d.observe(true, 0.2, 0.0); // byzantine, rejected
+        d.observe(true, 0.2, 1.0); // byzantine, admitted
+        d.observe(false, 0.2, 1.0); // honest, admitted
+        d.observe(false, 0.2, 0.1); // honest, collateral rejection
+        assert_eq!(d.byz_contribs, 2);
+        assert_eq!(d.byz_rejected, 1);
+        assert_eq!(d.rejected, 2);
+        assert!((d.isolation_rate() - 0.5).abs() < 1e-12);
+        assert!((d.poisoned_mass - 0.2).abs() < 1e-12);
+        assert_eq!(DefenseStats::default().isolation_rate(), 0.0);
+    }
+}

@@ -1,0 +1,589 @@
+//! Byzantine scenario semantics, artifact-free where possible: a
+//! Sharing-level fleet simulation (real strategies, real roster, real
+//! defense accounting — synthetic "training" that drifts models toward
+//! a known target) shows honest nodes surviving poisoning under the
+//! robust rules while plain averaging collapses; flood junk is
+//! isolated and its admitted mass bounded; a 256-node poisoned fleet
+//! (the CI smoke target) reports a nonzero isolation rate in
+//! milliseconds; and a scheduler-level skeleton proves attack traffic
+//! — payload bits, flood amplification, arrival accounting — is
+//! bit-identical across worker counts. Full-fidelity training runs
+//! (the ±2% accuracy acceptance criterion) are gated on compiled
+//! artifacts exactly like `dl_integration.rs`.
+
+use std::collections::HashSet;
+
+use decentralize_rs::communication::{Envelope, MsgKind};
+use decentralize_rs::config::ExperimentConfig;
+use decentralize_rs::coordinator::{prepare, run_experiment, Runner, SchedulerRunner};
+use decentralize_rs::model::ParamVec;
+use decentralize_rs::rng::Xoshiro256pp;
+use decentralize_rs::runtime::EngineHandle;
+use decentralize_rs::scenario::ByzantineRoster;
+use decentralize_rs::scheduler::{ComputeOutput, EventNode, NodeCtx, Scheduler, Wake};
+use decentralize_rs::sharing::{self, DefenseStats, Received, Sharing};
+
+// ---------------------------------------------------------------------
+// Sharing-level fleet simulation (no training engine).
+// ---------------------------------------------------------------------
+
+/// Smallest seed whose Bernoulli roster draw lands `count()` inside
+/// `band` — the same pin-the-draw idiom as fig8's straggler seed, so
+/// the assertions below never depend on a lucky tail of the binomial.
+fn seed_with_byz_count(spec: &str, nodes: usize, band: std::ops::RangeInclusive<usize>) -> u64 {
+    (0..10_000u64)
+        .find(|&s| {
+            ByzantineRoster::from_spec(spec, nodes, s)
+                .unwrap()
+                .is_some_and(|r| band.contains(&r.count()))
+        })
+        .expect("a seed with a roster count in band")
+}
+
+struct FleetOutcome {
+    /// Mean over honest nodes of mean |coordinate - target|.
+    honest_err: f64,
+    /// Defense accounting summed over honest receivers.
+    defense: DefenseStats,
+}
+
+/// Run a miniature fleet: every node "trains" by drifting toward a
+/// fixed target (plus per-node noise), then broadcasts through its own
+/// [`Sharing`] instance and aggregates its neighbors — except that
+/// roster-listed adversaries substitute their attack payload for the
+/// outgoing model, exactly like the real node loops (their OWN model
+/// keeps the honest trajectory; only the wire is corrupted). Flood
+/// copies are a transport-level amplification, so this model-level sim
+/// delivers one junk row per flooder per round.
+fn run_fleet(
+    spec: &str,
+    byz: &str,
+    n: usize,
+    neighbors_of: &dyn Fn(usize) -> Vec<usize>,
+    rounds: u64,
+    dim: usize,
+    seed: u64,
+) -> FleetOutcome {
+    let roster = ByzantineRoster::from_spec(byz, n, seed).unwrap();
+    let target: Vec<f32> = (0..dim).map(|j| 0.5 + 0.05 * (j % 8) as f32).collect();
+    let mut sharers: Vec<Box<dyn Sharing>> =
+        (0..n).map(|i| sharing::from_spec(spec, dim, seed + i as u64).unwrap()).collect();
+    let mut rngs: Vec<Xoshiro256pp> =
+        (0..n).map(|i| Xoshiro256pp::new(seed ^ (0xF1EE7 + i as u64))).collect();
+    let mut models: Vec<ParamVec> = (0..n)
+        .map(|i| {
+            ParamVec::from_vec(
+                target.iter().map(|&t| t + rngs[i].normal_f32(0.0, 0.1)).collect(),
+            )
+        })
+        .collect();
+    let mut defense = DefenseStats::default();
+
+    for round in 0..rounds {
+        // Honest local step for everyone (adversaries train honestly
+        // too; the attack lives at the broadcast boundary).
+        for (i, m) in models.iter_mut().enumerate() {
+            for (v, &t) in m.as_mut_slice().iter_mut().zip(&target) {
+                *v += 0.4 * (t - *v) + rngs[i].normal_f32(0.0, 0.005);
+            }
+        }
+        let payloads: Vec<Vec<u8>> = (0..n)
+            .map(|i| {
+                match roster.as_ref().and_then(|r| r.payload_model(i, round, models[i].as_slice()))
+                {
+                    Some((attack, _copies)) => {
+                        sharers[i].outgoing(&ParamVec::from_vec(attack), round).unwrap()
+                    }
+                    None => sharers[i].outgoing(&models[i], round).unwrap(),
+                }
+            })
+            .collect();
+        let mut next = models.clone();
+        for (i, model) in next.iter_mut().enumerate() {
+            let nbrs = neighbors_of(i);
+            let w = 1.0 / (nbrs.len() + 1) as f64;
+            let received: Vec<Received> = nbrs
+                .iter()
+                .map(|&j| Received { src: j, weight: w, payload: &payloads[j] })
+                .collect();
+            sharers[i].aggregate(model, w, &received).unwrap();
+            if let Some(r) = &roster {
+                if !r.is_byzantine(i) {
+                    let report = sharers[i].defense_report();
+                    for (k, rec) in received.iter().enumerate() {
+                        let admitted =
+                            report.map_or(1.0, |rep| rep.admitted.get(k).copied().unwrap_or(1.0));
+                        defense.observe(r.is_byzantine(rec.src), rec.weight, admitted);
+                    }
+                }
+            }
+        }
+        models = next;
+    }
+
+    let honest: Vec<usize> = (0..n)
+        .filter(|&i| !roster.as_ref().is_some_and(|r| r.is_byzantine(i)))
+        .collect();
+    let honest_err = honest
+        .iter()
+        .map(|&i| {
+            models[i]
+                .as_slice()
+                .iter()
+                .zip(&target)
+                .map(|(v, t)| (v - t).abs() as f64)
+                .sum::<f64>()
+                / dim as f64
+        })
+        .sum::<f64>()
+        / honest.len() as f64;
+    FleetOutcome { honest_err, defense }
+}
+
+fn complete(n: usize) -> impl Fn(usize) -> Vec<usize> {
+    move |i| (0..n).filter(|&j| j != i).collect()
+}
+
+fn ring(n: usize, half_degree: usize) -> impl Fn(usize) -> Vec<usize> {
+    move |i| (1..=half_degree).flat_map(|d| [(i + d) % n, (i + n - d) % n]).collect()
+}
+
+#[test]
+fn robust_aggregation_survives_poisoning_where_full_collapses() {
+    // 20 fully-connected nodes, 3-5 of them sending 8x-negated models.
+    // Every robust rule must keep the honest fleet within 2% (absolute
+    // per-coordinate error) of its own honest-run trajectory — the
+    // artifact-free proxy for the accuracy acceptance criterion — while
+    // isolating >80% of the poisoned contributions. Plain averaging
+    // must visibly collapse on the same roster.
+    let (n, rounds, dim) = (20usize, 15u64, 16usize);
+    let byz = "byzantine:0.2:poison:8";
+    let seed = seed_with_byz_count(byz, n, 3..=5);
+    let nbrs = complete(n);
+
+    // trim 0.3 * 20 rows = 6 per side >= the pinned 5-adversary worst
+    // case; krum:5 likewise tolerates the whole band.
+    for spec in ["trimmed_mean:0.3", "coord_median", "krum:5"] {
+        let base = run_fleet(spec, "", n, &nbrs, rounds, dim, seed);
+        let pois = run_fleet(spec, byz, n, &nbrs, rounds, dim, seed);
+        assert!(base.honest_err < 0.05, "{spec}: honest baseline err {}", base.honest_err);
+        assert!(
+            (pois.honest_err - base.honest_err).abs() <= 0.02,
+            "{spec}: poisoned err {} vs honest {}",
+            pois.honest_err,
+            base.honest_err
+        );
+        assert!(
+            pois.defense.isolation_rate() > 0.8,
+            "{spec}: isolation {}",
+            pois.defense.isolation_rate()
+        );
+        assert!(
+            pois.defense.poisoned_mass < 0.5,
+            "{spec}: admitted poisoned mass {}",
+            pois.defense.poisoned_mass
+        );
+    }
+
+    let full_base = run_fleet("full", "", n, &nbrs, rounds, dim, seed);
+    let full_pois = run_fleet("full", byz, n, &nbrs, rounds, dim, seed);
+    assert!(full_base.honest_err < 0.05, "full baseline err {}", full_base.honest_err);
+    assert!(
+        full_pois.honest_err > 0.3,
+        "full under poison should collapse: err {}",
+        full_pois.honest_err
+    );
+    // No defense report => everything admitted at weight: the metric
+    // itself distinguishes the undefended run.
+    assert_eq!(full_pois.defense.isolation_rate(), 0.0);
+    assert!(
+        full_pois.defense.poisoned_mass > 10.0,
+        "full admitted mass {}",
+        full_pois.defense.poisoned_mass
+    );
+}
+
+#[test]
+fn flood_junk_is_isolated_and_admitted_mass_bounded() {
+    // Flooders broadcast high-variance junk. At the model level the
+    // robust rules must reject it (the honest trajectory is unmoved and
+    // the admitted Byzantine mass stays under 10% of full admission).
+    let (n, rounds, dim) = (20usize, 15u64, 16usize);
+    let byz = "byzantine:0.2:flood:4";
+    let seed = seed_with_byz_count(byz, n, 3..=5);
+    let nbrs = complete(n);
+    let w = 1.0 / n as f64;
+
+    for spec in ["trimmed_mean:0.3", "coord_median"] {
+        let base = run_fleet(spec, "", n, &nbrs, rounds, dim, seed);
+        let flood = run_fleet(spec, byz, n, &nbrs, rounds, dim, seed);
+        assert!(
+            (flood.honest_err - base.honest_err).abs() <= 0.02,
+            "{spec}: flooded err {} vs honest {}",
+            flood.honest_err,
+            base.honest_err
+        );
+        assert!(
+            flood.defense.isolation_rate() > 0.8,
+            "{spec}: isolation {}",
+            flood.defense.isolation_rate()
+        );
+        // Full admission would contribute w per Byzantine contribution.
+        let full_admission = w * flood.defense.byz_contribs as f64;
+        assert!(
+            flood.defense.poisoned_mass < 0.1 * full_admission,
+            "{spec}: admitted mass {} vs full admission {}",
+            flood.defense.poisoned_mass,
+            full_admission
+        );
+    }
+}
+
+#[test]
+fn smoke_256_node_poisoned_fleet_reports_nonzero_isolation() {
+    // The CI byzantine-smoke target: 256 nodes on a degree-6 ring,
+    // ~51 poisoners, trimmed_mean:0.2 — artifact-free and fast. The
+    // guarantee asserted here is deliberately the weak one the metric
+    // pipeline owes us (nonzero isolation, bounded admitted mass), not
+    // full protection: with trim=1 a node with two Byzantine neighbors
+    // legitimately admits one of them.
+    let (n, rounds, dim) = (256usize, 5u64, 8usize);
+    let byz = "byzantine:0.2:poison:8";
+    let seed = seed_with_byz_count(byz, n, 40..=65);
+    let out = run_fleet("trimmed_mean:0.2", byz, n, &ring(n, 3), rounds, dim, seed);
+    assert!(out.defense.byz_contribs > 0, "no Byzantine contributions observed");
+    assert!(out.defense.rejected > 0, "no contributions rejected");
+    assert!(
+        out.defense.isolation_rate() > 0.2,
+        "isolation rate {}",
+        out.defense.isolation_rate()
+    );
+    let full_admission = out.defense.byz_contribs as f64 / 7.0;
+    assert!(
+        out.defense.poisoned_mass < 0.5 * full_admission,
+        "admitted mass {} vs full admission {}",
+        out.defense.poisoned_mass,
+        full_admission
+    );
+}
+
+// ---------------------------------------------------------------------
+// Scheduler-level skeleton: attack traffic is deterministic across
+// worker counts, and flood amplification is exactly `factor`.
+// ---------------------------------------------------------------------
+
+fn enc(vals: &[f32]) -> Vec<u8> {
+    vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+}
+
+/// The DL round loop reduced to its scheduler skeleton, with the real
+/// roster injected at the real point (the post-train broadcast): train
+/// for `step_s`, substitute the attack payload + send `copies`
+/// envelopes per peer, then await one model per peer per round,
+/// dropping duplicate (src, round) deliveries like the real inboxes.
+struct ByzRoundNode {
+    id: usize,
+    peers: Vec<usize>,
+    roster: std::sync::Arc<ByzantineRoster>,
+    rounds: u64,
+    step_s: f64,
+    round: u64,
+    waiting: bool,
+    have: HashSet<(usize, u64)>,
+    dup_drops: u64,
+    checksum: u64,
+    finished: bool,
+}
+
+impl ByzRoundNode {
+    fn start_round(&mut self, ctx: &mut NodeCtx) {
+        if self.round == self.rounds {
+            self.finished = true;
+            return;
+        }
+        self.waiting = false;
+        ctx.start_compute(self.step_s, Box::new(|| Ok(ComputeOutput::Value(0.0))));
+    }
+
+    fn try_advance(&mut self, ctx: &mut NodeCtx) {
+        if self.waiting && self.peers.iter().all(|&p| self.have.contains(&(p, self.round))) {
+            self.round += 1;
+            self.start_round(ctx);
+        }
+    }
+}
+
+impl EventNode for ByzRoundNode {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> anyhow::Result<()> {
+        match wake {
+            Wake::Start => self.start_round(ctx),
+            Wake::ComputeDone(_) => {
+                // A deterministic round-dependent "model" keeps honest
+                // payload bits meaningful without an engine.
+                let model: Vec<f32> =
+                    (0..8).map(|j| 1.0 + 0.1 * self.round as f32 + 0.01 * j as f32).collect();
+                let (payload, copies) = match self.roster.payload_model(
+                    self.id,
+                    self.round,
+                    &model,
+                ) {
+                    Some((attack, copies)) => (enc(&attack), copies),
+                    None => (enc(&model), 1),
+                };
+                for &p in &self.peers {
+                    for _ in 0..copies {
+                        ctx.send(Envelope {
+                            src: self.id,
+                            dst: p,
+                            round: self.round,
+                            kind: MsgKind::Model,
+                            sent_at_s: 0.0,
+                            payload: payload.clone().into(),
+                        });
+                    }
+                }
+                self.waiting = true;
+                self.try_advance(ctx);
+            }
+            Wake::Message(m) => {
+                // Order-independent content fingerprint: any payload or
+                // roster divergence across worker counts changes it.
+                let mut h = (m.src as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ m.round;
+                for &b in m.payload.as_slice() {
+                    h = h.wrapping_mul(31).wrapping_add(b as u64);
+                }
+                self.checksum = self.checksum.wrapping_add(h);
+                if !self.have.insert((m.src, m.round)) {
+                    self.dup_drops += 1;
+                }
+                self.try_advance(ctx);
+            }
+            Wake::Timer(_) => {}
+        }
+        Ok(())
+    }
+    fn done(&self) -> bool {
+        self.finished
+    }
+}
+
+#[test]
+fn attack_traffic_bit_identical_across_worker_counts() {
+    // 32 ring-coupled nodes, a quarter of them flooding 3 copies: per-
+    // node virtual end times, receive counters, duplicate-drop counts,
+    // and payload-content checksums must be identical for 1/4/8 workers
+    // — and total duplicate drops must equal exactly
+    // count * peers * (factor - 1) * rounds (amplification is bounded
+    // by the factor, nothing more, nothing less).
+    let (n, rounds, factor) = (32usize, 4u64, 3u32);
+    let byz = "byzantine:0.25:flood:3";
+    let seed = seed_with_byz_count(byz, n, 6..=10);
+    let roster =
+        std::sync::Arc::new(ByzantineRoster::from_spec(byz, n, seed).unwrap().unwrap());
+
+    let run = |workers: usize| -> (Vec<f64>, Vec<u64>, Vec<u64>, u64) {
+        let net = decentralize_rs::communication::shaper::NetworkModel {
+            latency_s: 0.002,
+            bandwidth_bps: 1e7,
+        };
+        let mut s = Scheduler::new(Some(net), workers);
+        let traces: Vec<std::sync::Arc<std::sync::Mutex<(u64, u64, u64)>>> =
+            (0..n).map(|_| Default::default()).collect();
+        struct Reporting {
+            inner: ByzRoundNode,
+            out: std::sync::Arc<std::sync::Mutex<(u64, u64, u64)>>,
+        }
+        impl EventNode for Reporting {
+            fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> anyhow::Result<()> {
+                self.inner.on_event(ctx, wake)?;
+                let mut t = self.out.lock().unwrap();
+                *t = (self.inner.checksum, self.inner.dup_drops, self.inner.round);
+                Ok(())
+            }
+            fn done(&self) -> bool {
+                self.inner.done()
+            }
+        }
+        for i in 0..n {
+            s.add_node(Box::new(Reporting {
+                inner: ByzRoundNode {
+                    id: i,
+                    peers: vec![(i + 1) % n, (i + n - 1) % n],
+                    roster: std::sync::Arc::clone(&roster),
+                    rounds,
+                    step_s: 0.01,
+                    round: 0,
+                    waiting: false,
+                    have: HashSet::new(),
+                    dup_drops: 0,
+                    checksum: 0,
+                    finished: false,
+                },
+                out: std::sync::Arc::clone(&traces[i]),
+            }));
+        }
+        s.run().unwrap();
+        let times: Vec<f64> = (0..n).map(|i| s.node_time(i)).collect();
+        let recv: Vec<u64> = (0..n).map(|i| s.counters(i).msgs_recv).collect();
+        let sums: Vec<u64> = traces.iter().map(|t| t.lock().unwrap().0).collect();
+        let dups: u64 = traces.iter().map(|t| t.lock().unwrap().1).sum();
+        (times, recv, sums, dups)
+    };
+
+    let (t1, r1, c1, d1) = run(1);
+    let (t4, r4, c4, d4) = run(4);
+    let (t8, r8, c8, d8) = run(8);
+    assert_eq!(t1, t4, "virtual times differ between 1 and 4 workers");
+    assert_eq!(t4, t8, "virtual times differ between 4 and 8 workers");
+    assert_eq!(r1, r4);
+    assert_eq!(r4, r8);
+    assert_eq!(c1, c4, "payload checksums differ between 1 and 4 workers");
+    assert_eq!(c4, c8, "payload checksums differ between 4 and 8 workers");
+    assert_eq!(d1, d4);
+    assert_eq!(d4, d8);
+    let expected = roster.count() as u64 * 2 * (factor as u64 - 1) * rounds;
+    assert_eq!(d1, expected, "flood amplification must be exactly the factor");
+}
+
+// ---------------------------------------------------------------------
+// Engine-gated full-fidelity runs (skip without compiled artifacts).
+// ---------------------------------------------------------------------
+
+/// Artifact/PJRT gate, as in `dl_integration.rs`.
+fn engine_or_skip(models: &[&str]) -> Option<EngineHandle> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    match EngineHandle::start(&dir, models) {
+        Ok(engine) => Some(engine),
+        Err(e) => {
+            eprintln!("skipping: PJRT engine unavailable ({e:#})");
+            None
+        }
+    }
+}
+
+fn byz_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.nodes = 8;
+    cfg.rounds = 12;
+    cfg.eval_every = 6;
+    cfg.train_total = 640;
+    cfg.test_total = 96;
+    cfg.topology = "regular:4".into();
+    cfg.local_steps = 2;
+    cfg
+}
+
+#[test]
+fn poisoned_training_with_trimmed_mean_recovers_honest_accuracy() {
+    // The acceptance criterion end-to-end: one 8x-poisoner among 8
+    // nodes. trimmed_mean:0.2 (trim 1 of 5 rows at degree 4) must land
+    // within 2 accuracy points of its own honest run; plain averaging
+    // must lose at least 10 points against its honest run.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let byz = "byzantine:0.15:poison:8";
+    let mut honest_tm = byz_cfg("it_byz_honest_tm");
+    honest_tm.sharing = "trimmed_mean:0.2".into();
+    honest_tm.seed = (0..10_000u64)
+        .find(|&s| {
+            ByzantineRoster::from_spec(byz, honest_tm.nodes, s)
+                .unwrap()
+                .is_some_and(|r| r.count() == 1)
+        })
+        .expect("a seed with exactly one adversary");
+
+    let mut pois_tm = honest_tm.clone();
+    pois_tm.name = "it_byz_pois_tm".into();
+    pois_tm.byzantine = byz.into();
+    let mut honest_full = honest_tm.clone();
+    honest_full.name = "it_byz_honest_full".into();
+    honest_full.sharing = "full".into();
+    let mut pois_full = honest_full.clone();
+    pois_full.name = "it_byz_pois_full".into();
+    pois_full.byzantine = byz.into();
+
+    let r_honest_tm = run_experiment(&honest_tm, &engine).unwrap();
+    let r_pois_tm = run_experiment(&pois_tm, &engine).unwrap();
+    let r_honest_full = run_experiment(&honest_full, &engine).unwrap();
+    let r_pois_full = run_experiment(&pois_full, &engine).unwrap();
+
+    let (a_htm, a_ptm) = (r_honest_tm.final_accuracy(), r_pois_tm.final_accuracy());
+    let (a_hf, a_pf) = (r_honest_full.final_accuracy(), r_pois_full.final_accuracy());
+    assert!(
+        a_ptm >= a_htm - 0.02,
+        "trimmed_mean under poison {a_ptm} vs honest {a_htm}"
+    );
+    assert!(a_pf <= a_hf - 0.10, "full under poison {a_pf} vs honest {a_hf} (no degradation?)");
+
+    // Defense metrics flowed through the records: somebody adjacent to
+    // the poisoner rejected it outright, and the robust run admitted
+    // strictly less poisoned mass than the undefended one.
+    let max_isolation = r_pois_tm
+        .logs
+        .iter()
+        .filter_map(|l| l.records.last())
+        .map(|r| r.isolation_rate)
+        .fold(0.0f64, f64::max);
+    assert!(max_isolation > 0.5, "max isolation {max_isolation}");
+    let mass = |r: &decentralize_rs::coordinator::RunResult| -> f64 {
+        r.logs.iter().filter_map(|l| l.records.last()).map(|x| x.poisoned_mass_admitted).sum()
+    };
+    assert!(
+        mass(&r_pois_tm) < mass(&r_pois_full),
+        "robust admitted mass {} vs full {}",
+        mass(&r_pois_tm),
+        mass(&r_pois_full)
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn byzantine_training_run_bit_identical_across_worker_counts() {
+    // The determinism contract extended to adversaries: one prepare(),
+    // three worker counts, identical per-node records — including the
+    // defense metrics, which would drift first if attack payloads ever
+    // depended on event interleaving.
+    let Some(engine) = engine_or_skip(&["mlp"]) else { return };
+    let mut cfg = byz_cfg("it_byz_workers");
+    cfg.sharing = "trimmed_mean:0.2".into();
+    cfg.byzantine = "byzantine:0.25:poison:4".into();
+    cfg.seed = (0..10_000u64)
+        .find(|&s| {
+            ByzantineRoster::from_spec(&cfg.byzantine, cfg.nodes, s)
+                .unwrap()
+                .is_some_and(|r| r.count() >= 1)
+        })
+        .expect("a seed with at least one adversary");
+    let setup = prepare(&cfg, &engine).expect("prepare");
+    let mut runs = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let mut logs = SchedulerRunner { workers }
+            .run(&cfg, &engine, &setup)
+            .expect("scheduler run")
+            .logs;
+        logs.sort_by_key(|l| l.node);
+        runs.push(logs);
+    }
+    for other in &runs[1..] {
+        assert_eq!(runs[0].len(), other.len());
+        for (a, b) in runs[0].iter().zip(other.iter()) {
+            assert_eq!(a.records.len(), b.records.len(), "node {}", a.node);
+            for (x, y) in a.records.iter().zip(b.records.iter()) {
+                assert_eq!(x.test_acc, y.test_acc, "node {}", a.node);
+                assert_eq!(x.bytes_sent, y.bytes_sent, "node {}", a.node);
+                assert_eq!(
+                    x.poisoned_mass_admitted, y.poisoned_mass_admitted,
+                    "node {}",
+                    a.node
+                );
+                assert_eq!(x.rejected_contribs, y.rejected_contribs, "node {}", a.node);
+                assert_eq!(x.isolation_rate, y.isolation_rate, "node {}", a.node);
+            }
+        }
+    }
+    engine.shutdown();
+}

@@ -388,6 +388,7 @@ fn seed_where(
             &cfg.step_time,
             &cfg.link_model,
             &cfg.churn_trace,
+            &cfg.byzantine,
             None,
             cfg.nodes,
             cfg.rounds,

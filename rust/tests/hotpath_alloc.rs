@@ -44,8 +44,22 @@ fn allocs() -> u64 {
 
 const DIM: usize = 4096;
 const NEIGHBORS: usize = 6;
-const SPECS: [&str; 6] =
-    ["full", "full:fp16", "subsample:0.2", "topk:0.2", "quant:64", "choco:0.2:0.5"];
+// The robust strategies (trimmed_mean / coord_median / krum) are held
+// to the same zero-alloc bar: their candidate matrix, per-coordinate
+// gather column, admitted counts, and Krum's distance matrix all live
+// in existing Scratch buffers (values / mags / doubles), and the sorts
+// are `sort_unstable*` (no temp buffer).
+const SPECS: [&str; 9] = [
+    "full",
+    "full:fp16",
+    "subsample:0.2",
+    "topk:0.2",
+    "quant:64",
+    "choco:0.2:0.5",
+    "trimmed_mean:0.2",
+    "coord_median",
+    "krum:1",
+];
 
 fn rand_model(seed: u64) -> ParamVec {
     let mut rng = Xoshiro256pp::new(seed);
@@ -151,7 +165,16 @@ fn steady_state_rounds_do_not_allocate_hot_path_buffers() {
     // capacity), and retained for the next round. This is what took
     // the broadcast from one allocation per round to zero. subsample
     // is exempt: its `sample_k` draws a fresh SparseVec by design.
-    for spec in ["full", "full:fp16", "topk:0.2", "quant:64", "choco:0.2:0.5"] {
+    for spec in [
+        "full",
+        "full:fp16",
+        "topk:0.2",
+        "quant:64",
+        "choco:0.2:0.5",
+        "trimmed_mean:0.2",
+        "coord_median",
+        "krum:1",
+    ] {
         let mut sh = sharing::from_spec(spec, DIM, 0).unwrap();
         sh.set_init(&init);
         let model = rand_model(3);

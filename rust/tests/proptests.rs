@@ -537,7 +537,17 @@ fn prop_strategies_bit_identical_under_scratch_reuse() {
     // throwaway arena per call (the scratch-less trait wrappers) or one
     // long-lived dirty arena (the node hot path) — over multi-round
     // trajectories with evolving models and real payloads.
-    let specs = ["full", "full:fp16", "subsample:0.2", "topk:0.2", "quant:64", "choco:0.2:0.5"];
+    let specs = [
+        "full",
+        "full:fp16",
+        "subsample:0.2",
+        "topk:0.2",
+        "quant:64",
+        "choco:0.2:0.5",
+        "trimmed_mean:0.2",
+        "coord_median",
+        "krum:1",
+    ];
     for (si, spec) in specs.iter().enumerate() {
         for case in 0..10u64 {
             let mut rng = Xoshiro256pp::new(17_000 + 100 * si as u64 + case);
@@ -766,5 +776,111 @@ fn prop_paged_interning_reconverges_to_baseline() {
         let s2 = store.stats();
         assert_eq!(s2.live_shards, 1, "case {case}");
         assert!(s2.live_pages >= 1, "case {case}");
+    }
+}
+
+#[test]
+fn prop_robust_kernels_bit_identical_to_scalar_reference() {
+    // The robust-aggregation kernels (gathered columns, reused scratch
+    // buffers) vs their retained allocating scalar twins: outputs,
+    // per-row admitted counts, distance matrices, and Krum picks must
+    // all agree exactly, across chunk-edge dims and every legal trim.
+    for case in 0..CASES {
+        let mut rng = Xoshiro256pp::new(21_000 + case);
+        let dim = edge_len(&mut rng, case).max(1);
+        let rows = rng.range(1, 9);
+        let vals = rand_vals(&mut rng, rows * dim, 2.0);
+        // 2*trim < rows must hold; sample the full legal range.
+        let trim = rng.range(0, (rows - 1) / 2 + 1);
+
+        let mut out_a = vec![0.0f32; dim];
+        let mut out_b = vec![0.0f32; dim];
+        let mut gather = vec![0.0f32; rows];
+        let mut adm_a = vec![0.0f64; rows];
+        let mut adm_b = vec![0.0f64; rows];
+        kernels::trimmed_mean(&mut out_a, &vals, rows, trim, &mut gather, &mut adm_a);
+        reference::trimmed_mean(&mut out_b, &vals, rows, trim, &mut adm_b);
+        assert_eq!(bits(&out_a), bits(&out_b), "trimmed_mean case {case} rows={rows} trim={trim}");
+        assert_eq!(adm_a, adm_b, "trimmed_mean admitted case {case} rows={rows} trim={trim}");
+
+        adm_a.iter_mut().for_each(|v| *v = -1.0);
+        adm_b.iter_mut().for_each(|v| *v = -1.0);
+        kernels::coord_median(&mut out_a, &vals, rows, &mut gather, &mut adm_a);
+        reference::coord_median(&mut out_b, &vals, rows, &mut adm_b);
+        assert_eq!(bits(&out_a), bits(&out_b), "coord_median case {case} rows={rows}");
+        assert_eq!(adm_a, adm_b, "coord_median admitted case {case} rows={rows}");
+
+        let mut dist = vec![0.0f64; rows * rows];
+        kernels::pairwise_sq_dist(&vals, rows, dim, &mut dist);
+        let dist_ref = reference::pairwise_sq_dist(&vals, rows, dim);
+        assert_eq!(dist, dist_ref, "pairwise_sq_dist case {case} rows={rows} dim={dim}");
+        let closest = rng.range(0, rows);
+        let mut row_buf = vec![0.0f64; rows];
+        let pick = kernels::krum_select(&dist, rows, closest, &mut row_buf);
+        let pick_ref = reference::krum_select(&dist_ref, rows, closest);
+        assert_eq!(pick, pick_ref, "krum_select case {case} rows={rows} closest={closest}");
+    }
+}
+
+#[test]
+fn prop_robust_aggregation_invariant_in_receive_order() {
+    // The robust rules canonicalize candidates by sender id before
+    // doing anything, so the aggregated model must be bit-identical no
+    // matter the order in which the same messages happened to arrive —
+    // and the defense report must permute exactly with the caller's
+    // received order.
+    for (si, spec) in ["trimmed_mean:0.25", "coord_median", "krum:1"].iter().enumerate() {
+        for case in 0..CASES / 3 {
+            let mut rng = Xoshiro256pp::new(22_000 + 1000 * si as u64 + case);
+            let dim = rng.range(1, 400);
+            let k = rng.range(1, 8);
+            let w = 1.0 / (k + 1) as f64;
+            let start = rand_vals(&mut rng, dim, 1.0);
+            // Distinct, non-contiguous sender ids.
+            let payloads: Vec<(usize, Vec<u8>)> = (0..k)
+                .map(|i| (3 * i + 1, RawF32.encode(&rand_vals(&mut rng, dim, 1.0))))
+                .collect();
+            let ordered: Vec<Received> = payloads
+                .iter()
+                .map(|(s, p)| Received { src: *s, weight: w, payload: p })
+                .collect();
+            // Fisher–Yates with the case PRNG: a deterministic shuffle.
+            let mut perm: Vec<usize> = (0..k).collect();
+            for i in (1..k).rev() {
+                let j = rng.range(0, i + 1);
+                perm.swap(i, j);
+            }
+            let shuffled: Vec<Received> = perm
+                .iter()
+                .map(|&i| Received {
+                    src: ordered[i].src,
+                    weight: ordered[i].weight,
+                    payload: ordered[i].payload,
+                })
+                .collect();
+
+            let mut s1 = sharing::from_spec(spec, dim, 0).unwrap();
+            let mut s2 = sharing::from_spec(spec, dim, 0).unwrap();
+            let mut m1 = ParamVec::from_vec(start.clone());
+            let mut m2 = ParamVec::from_vec(start.clone());
+            let mut scratch = Scratch::new();
+            s1.aggregate_with(&mut m1, w, &ordered, &mut scratch).unwrap();
+            s2.aggregate_with(&mut m2, w, &shuffled, &mut scratch).unwrap();
+            assert_eq!(
+                bits(m1.as_slice()),
+                bits(m2.as_slice()),
+                "{spec} case {case}: model depends on receive order"
+            );
+            let r1 = s1.defense_report().unwrap();
+            let r2 = s2.defense_report().unwrap();
+            assert_eq!(r1.admitted.len(), k, "{spec} case {case}");
+            assert_eq!(r2.admitted.len(), k, "{spec} case {case}");
+            for (pos, &orig) in perm.iter().enumerate() {
+                assert_eq!(
+                    r1.admitted[orig], r2.admitted[pos],
+                    "{spec} case {case}: report did not permute with the received order"
+                );
+            }
+        }
     }
 }
