@@ -1,0 +1,342 @@
+//! API load harness for the `decentra serve` daemon: drive a live
+//! daemon with concurrent status pollers and an SSE consumer while a
+//! 1024-node artifact-free sim run executes on the scheduler, and
+//! record request throughput + tail latency into the committed
+//! `BENCH_hotpath.json` trajectory (same ratchet flow as the `hotpath`
+//! harness: rows append with the next `run` id, and `--ratchet` /
+//! `HOTPATH_RATCHET=1` compares each throughput row against the median
+//! of its prior `(bench, mode, quick)` history, exiting 2 on a
+//! sustained >20% drop).
+//!
+//! Quick mode (CI): `cargo bench --bench api_load -- --quick` or
+//! `HOTPATH_QUICK=1` — 256 nodes and a 2s measurement window instead
+//! of 1024 nodes and 5s.
+//!
+//! Everything here goes over real TCP against the daemon's hand-rolled
+//! HTTP/1.1 server, so the numbers include parsing, routing, the run
+//! table mutex, and telemetry-ring reads — the full observability path
+//! a monitoring stack would exercise.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use decentralize_rs::serve::{Daemon, ServeOptions};
+use decentralize_rs::util::json::{parse, Json};
+
+/// Concurrent `GET /runs/:id` pollers during the measurement window.
+const STATUS_CLIENTS: usize = 4;
+
+/// Read one HTTP/1.1 response (status + headers + `Content-Length`
+/// body) off the stream.
+fn read_response(stream: &mut TcpStream) -> Result<(u16, String)> {
+    let mut head = Vec::new();
+    let mut buf = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = head.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            bail!("connection closed mid-response");
+        }
+        head.extend_from_slice(&buf[..n]);
+    };
+    let (header_bytes, rest) = head.split_at(header_end);
+    let rest = &rest[4..];
+    let text = std::str::from_utf8(header_bytes)?;
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .context("malformed status line")?
+        .parse()?;
+    let mut content_length = 0usize;
+    for line in text.lines().skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse()?;
+            }
+        }
+    }
+    let mut body = rest.to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&buf[..n]);
+    }
+    body.truncate(content_length);
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+/// Issue one request on an open keep-alive connection.
+fn request(stream: &mut TcpStream, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.flush()?;
+    read_response(stream)
+}
+
+/// Connect, issue one request, drop the connection.
+fn one_shot(addr: SocketAddr, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    request(&mut stream, method, path, body)
+}
+
+/// Poll `GET /runs/:id` until its status is one of `want`.
+fn wait_for_status(addr: SocketAddr, id: u64, want: &[&str], timeout: Duration) -> Result<String> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let (code, body) = one_shot(addr, "GET", &format!("/runs/{id}"), "")?;
+        if code != 200 {
+            bail!("GET /runs/{id} returned {code}: {body}");
+        }
+        let status = parse(&body)
+            .ok()
+            .and_then(|j| j.get("status").as_str().map(str::to_string))
+            .unwrap_or_default();
+        if want.contains(&status.as_str()) {
+            return Ok(status);
+        }
+        if Instant::now() > deadline {
+            bail!("timed out waiting for status {want:?} on run {id} (last {status:?})");
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("HOTPATH_QUICK").is_ok_and(|v| v != "0");
+    let ratchet = std::env::args().any(|a| a == "--ratchet")
+        || std::env::var("HOTPATH_RATCHET").is_ok_and(|v| v != "0");
+    let history: Vec<Json> = std::fs::read_to_string("BENCH_hotpath.json")
+        .ok()
+        .and_then(|s| parse(&s).ok())
+        .and_then(|j| match j {
+            Json::Arr(rows) => Some(rows),
+            _ => None,
+        })
+        .unwrap_or_default();
+    let run_id = history
+        .iter()
+        .filter_map(|r| r.get("run").as_f64())
+        .fold(0.0, f64::max) as u64
+        + 1;
+    let nodes: usize = if quick { 256 } else { 1024 };
+    let window = Duration::from_secs_f64(if quick { 2.0 } else { 5.0 });
+    println!(
+        "== api_load: serve daemon under load ({nodes} nodes, {:.0}s window{}) ==",
+        window.as_secs_f64(),
+        if quick { ", quick" } else { "" }
+    );
+
+    // Bind on port 0 and run the daemon in the background; everything
+    // below is a real HTTP client.
+    let opts = ServeOptions { addr: "127.0.0.1:0".into(), ..ServeOptions::default() };
+    let daemon = Daemon::bind(&opts).expect("bind daemon");
+    let addr = daemon.local_addr();
+    let daemon_thread = std::thread::spawn(move || daemon.run());
+
+    // Long-horizon sim run: it cannot finish inside the window, so the
+    // pollers always observe a live fleet; DELETE stops it afterwards.
+    let results_dir = std::env::temp_dir().join(format!("apibench-{}", std::process::id()));
+    let cfg = Json::obj(vec![
+        ("name", Json::str("apibench")),
+        ("nodes", Json::num(nodes as f64)),
+        ("rounds", Json::num(1_000_000.0)),
+        ("eval_every", Json::num(5.0)),
+        ("topology", Json::str("ring")),
+        ("network", Json::str("none")),
+        ("train_total", Json::num(nodes.max(2048) as f64)),
+        ("results_dir", Json::str(results_dir.display().to_string())),
+    ]);
+    let envelope = Json::obj(vec![("driver", Json::str("sim")), ("config", cfg)]);
+    let (code, body) = one_shot(addr, "POST", "/runs", &envelope.dump()).expect("submit");
+    assert_eq!(code, 201, "POST /runs: {body}");
+    let id = parse(&body).unwrap().get("id").as_f64().expect("run id") as u64;
+    wait_for_status(addr, id, &["running"], Duration::from_secs(30)).expect("run start");
+
+    // Measurement window: STATUS_CLIENTS keep-alive pollers + one SSE
+    // consumer, all against the live run.
+    let deadline = Instant::now() + window;
+    let stop = Arc::new(AtomicBool::new(false));
+    let sse = {
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || -> usize {
+            let mut stream = TcpStream::connect(addr).expect("sse connect");
+            stream
+                .set_read_timeout(Some(Duration::from_millis(200)))
+                .expect("sse read timeout");
+            let req = format!("GET /runs/{id}/events HTTP/1.1\r\nHost: bench\r\n\r\n");
+            stream.write_all(req.as_bytes()).expect("sse request");
+            let mut raw = Vec::new();
+            let mut buf = [0u8; 16 * 1024];
+            while !stop.load(Ordering::SeqCst) {
+                match stream.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(n) => raw.extend_from_slice(&buf[..n]),
+                    Err(_) => continue, // read timeout: poll the stop flag
+                }
+            }
+            String::from_utf8_lossy(&raw).matches("event: round\n").count()
+        })
+    };
+    let pollers: Vec<_> = (0..STATUS_CLIENTS)
+        .map(|_| {
+            std::thread::spawn(move || -> Vec<f64> {
+                let mut stream = TcpStream::connect(addr).expect("poller connect");
+                let path = format!("/runs/{id}");
+                let mut latencies = Vec::new();
+                while Instant::now() < deadline {
+                    let t = Instant::now();
+                    let (code, _) = request(&mut stream, "GET", &path, "").expect("status poll");
+                    assert_eq!(code, 200);
+                    latencies.push(t.elapsed().as_secs_f64());
+                }
+                latencies
+            })
+        })
+        .collect();
+    let t0 = Instant::now();
+    let mut latencies: Vec<f64> = Vec::new();
+    for p in pollers {
+        latencies.extend(p.join().expect("poller thread"));
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(window.as_secs_f64());
+    stop.store(true, Ordering::SeqCst);
+    let round_events = sse.join().expect("sse thread");
+
+    latencies.sort_by(f64::total_cmp);
+    let requests = latencies.len();
+    let throughput = requests as f64 / wall_s;
+    let p50 = percentile(&latencies, 0.50);
+    let p99 = percentile(&latencies, 0.99);
+    println!(
+        "api/status: {requests} requests in {wall_s:.2}s over {STATUS_CLIENTS} clients \
+         = {throughput:.0} req/s (p50 {:.1}us, p99 {:.1}us)",
+        p50 * 1e6,
+        p99 * 1e6
+    );
+    println!(
+        "api/sse_rounds: {round_events} round events streamed \
+         = {:.0} events/s alongside the pollers",
+        round_events as f64 / wall_s
+    );
+
+    // Stop the run at a round boundary, wait for the executor to land
+    // it, then take the daemon down cleanly.
+    let (code, body) = one_shot(addr, "DELETE", &format!("/runs/{id}"), "").expect("cancel");
+    assert_eq!(code, 200, "DELETE /runs/{id}: {body}");
+    let status =
+        wait_for_status(addr, id, &["cancelled", "done", "failed"], Duration::from_secs(120))
+            .expect("run teardown");
+    assert_eq!(status, "cancelled", "expected the cancel flag to stop the run");
+    let (code, _) = one_shot(addr, "POST", "/shutdown", "").expect("shutdown");
+    assert_eq!(code, 200);
+    daemon_thread.join().expect("daemon thread").expect("daemon run");
+    let _ = std::fs::remove_dir_all(&results_dir);
+
+    let mut rows = vec![
+        Json::obj(vec![
+            ("figure", Json::str("api")),
+            ("bench", Json::str("api/status")),
+            ("mode", Json::str("daemon")),
+            ("nodes", Json::num(nodes as f64)),
+            ("clients", Json::num(STATUS_CLIENTS as f64)),
+            ("requests", Json::num(requests as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("throughput", Json::num(throughput)),
+            ("throughput_unit", Json::str("requests_per_s")),
+            ("p50_latency_s", Json::num(p50)),
+            ("p99_latency_s", Json::num(p99)),
+            ("quick", Json::Bool(quick)),
+        ]),
+        Json::obj(vec![
+            ("figure", Json::str("api")),
+            ("bench", Json::str("api/sse_rounds")),
+            ("mode", Json::str("daemon")),
+            ("nodes", Json::num(nodes as f64)),
+            ("events", Json::num(round_events as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("throughput", Json::num(round_events as f64 / wall_s)),
+            ("throughput_unit", Json::str("round_events_per_s")),
+            ("quick", Json::Bool(quick)),
+        ]),
+    ];
+    for r in rows.iter_mut() {
+        if let Json::Obj(m) = r {
+            m.insert("run".into(), Json::num(run_id as f64));
+        }
+    }
+    // Same ratchet as hotpath: median of the prior (bench, mode, quick)
+    // history, checked before the write so regressions still land in
+    // the artifact.
+    let mut regressions: Vec<String> = Vec::new();
+    if ratchet {
+        for r in &rows {
+            let (Some(bench), Some(cur)) =
+                (r.get("bench").as_str(), r.get("throughput").as_f64())
+            else {
+                continue;
+            };
+            let mode = r.get("mode").as_str().unwrap_or("");
+            let mut prior: Vec<f64> = history
+                .iter()
+                .filter(|h| {
+                    h.get("bench").as_str() == Some(bench)
+                        && h.get("mode").as_str().unwrap_or("") == mode
+                        && h.get("quick").as_bool() == Some(quick)
+                })
+                .filter_map(|h| h.get("throughput").as_f64())
+                .collect();
+            if prior.is_empty() {
+                continue;
+            }
+            prior.sort_by(f64::total_cmp);
+            let baseline = prior[prior.len() / 2];
+            if cur < 0.8 * baseline {
+                regressions.push(format!(
+                    "{bench} [{mode}]: {cur:.3e} < 80% of median baseline {baseline:.3e} \
+                     ({} prior runs)",
+                    prior.len()
+                ));
+            }
+        }
+    }
+
+    let mut all = history;
+    all.extend(rows);
+    let artifact = Json::Arr(all).pretty();
+    match std::fs::write("BENCH_hotpath.json", &artifact) {
+        Ok(()) => println!("trajectory written to BENCH_hotpath.json (run {run_id})"),
+        Err(e) => {
+            eprintln!("could not write BENCH_hotpath.json: {e}");
+            std::process::exit(1);
+        }
+    }
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("perf ratchet: {r}");
+        }
+        eprintln!("perf ratchet: sustained >20% regression vs committed history");
+        std::process::exit(2);
+    }
+    println!("== api_load done ==");
+}

@@ -10,7 +10,7 @@
 mod fig_common;
 
 use decentralize_rs::config::ExperimentConfig;
-use decentralize_rs::coordinator::{prepare, RunResult, Runner, SchedulerRunner};
+use decentralize_rs::coordinator::{prepare, RunHooks, RunResult, Runner, SchedulerRunner};
 use decentralize_rs::scenario::Scenario;
 use fig_common::{bench_config, engine_or_skip, run_variant};
 
@@ -112,7 +112,7 @@ fn main() {
     let mut runs = Vec::new();
     for workers in [1usize, 4, 8] {
         let mut logs = SchedulerRunner { workers }
-            .run(&async_cfg, &engine, &setup)
+            .run(&async_cfg, &engine, &setup, &RunHooks::default())
             .expect("async run")
             .logs;
         logs.sort_by_key(|l| l.node);

@@ -28,12 +28,14 @@ use crate::scenario::Scenario;
 use crate::config::ExperimentConfig;
 use crate::dataset::{generate, DataLoader, Dataset, Partition, SyntheticSpec};
 use crate::graph::{from_spec, metropolis_hastings, Graph, MixingWeights};
-use crate::metrics::{aggregate, NodeLog, SeriesPoint};
+use crate::metrics::{aggregate, NodeLog, SeriesPoint, Telemetry, TelemetryEvent};
 use crate::model::ParamVec;
 use crate::node::{AsyncPolicy, DlNode, PeerSampler, SecureDlNode, TopologyView};
 use crate::rng::{mix_seed, Xoshiro256pp};
 use crate::runtime::{EngineHandle, ModelMeta};
 use crate::scheduler::{AsyncDlNodeSm, DlNodeSm, SamplerSm, Scheduler, SecureDlNodeSm};
+
+pub use crate::scheduler::RunControl;
 use crate::secure::Masker;
 use crate::sharing;
 use crate::store::{ParamSlot, ParamStore, StoreReport};
@@ -49,8 +51,13 @@ pub struct RunResult {
     pub wall_s: f64,
     /// Model parameter count (benches derive owned-mode memory from it).
     pub param_count: usize,
-    /// Shared-store accounting (`param_store = "shared"` runs only).
+    /// Store accounting for `param_store = "shared"` **or** `"paged"`
+    /// runs (`None` in owned mode). Each report row carries the store
+    /// kind so consumers can tell the two apart.
     pub store: Option<StoreReport>,
+    /// True when the run was stopped early through its [`RunControl`]
+    /// (logs then end at the last completed evaluation round).
+    pub cancelled: bool,
 }
 
 impl RunResult {
@@ -74,6 +81,20 @@ impl RunResult {
     pub fn save(&self) -> Result<std::path::PathBuf> {
         let dir = self.config.results_dir.join(&self.config.name);
         std::fs::create_dir_all(&dir)?;
+        // Remove the previous run's outputs first: a smaller fleet
+        // re-run into the same directory would otherwise leave the old
+        // run's higher-numbered node_*.jsonl behind, and load_dir would
+        // silently aggregate the two runs.
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            let stale = (name.starts_with("node_") && name.ends_with(".jsonl"))
+                || name == "store.jsonl"
+                || name == "series.txt";
+            if stale {
+                std::fs::remove_file(&path)?;
+            }
+        }
         std::fs::write(dir.join("config.json"), self.config.to_json().pretty())?;
         for log in &self.logs {
             log.save(&dir)?;
@@ -205,23 +226,60 @@ pub fn prepare(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunSetup
     })
 }
 
-/// What a [`Runner`] hands back: per-node logs plus, for
-/// `param_store = "shared"` runs, the store's accounting report.
+/// What a [`Runner`] hands back: per-node logs, the store's accounting
+/// report (shared/paged runs), and whether the run was cancelled.
 pub struct RunnerOutput {
     pub logs: Vec<NodeLog>,
     pub store: Option<StoreReport>,
+    /// True when the runner stopped on its [`RunControl`] instead of
+    /// completing every round.
+    pub cancelled: bool,
+}
+
+/// Hooks a caller threads through a run: a cooperative cancel flag and
+/// an optional live telemetry sink. `RunHooks::default()` is inert —
+/// never cancelled, no sink — so batch callers pay nothing.
+#[derive(Clone, Default)]
+pub struct RunHooks {
+    /// Cancel flag, checked by the scheduler at event boundaries. The
+    /// threaded runner does not support cancellation (its nodes block in
+    /// `recv`) and ignores this.
+    pub control: RunControl,
+    /// Live sink for round/store events ([`TelemetryEvent`]).
+    pub telemetry: Option<Telemetry>,
+}
+
+impl RunHooks {
+    /// Emit both phases of a store report into the sink, labeled with
+    /// the store kind.
+    fn emit_store(&self, report: &Option<StoreReport>) {
+        if let (Some(sink), Some(report)) = (&self.telemetry, report) {
+            sink.emit(TelemetryEvent::Store {
+                phase: "start".into(),
+                kind: report.at_start.kind().into(),
+                stats: report.at_start,
+            });
+            sink.emit(TelemetryEvent::Store {
+                phase: "end".into(),
+                kind: report.at_end.kind().into(),
+                stats: report.at_end,
+            });
+        }
+    }
 }
 
 /// Strategy for executing the in-process node fleet.
 pub trait Runner {
     fn name(&self) -> &'static str;
 
-    /// Run every node to completion and return their logs (any order).
+    /// Run every node to completion (or until `hooks.control` cancels)
+    /// and return their logs (any order).
     fn run(
         &self,
         cfg: &ExperimentConfig,
         engine: &EngineHandle,
         setup: &RunSetup,
+        hooks: &RunHooks,
     ) -> Result<RunnerOutput>;
 }
 
@@ -257,10 +315,42 @@ pub fn runner_from_spec(spec: &str, workers: usize) -> Result<Box<dyn Runner>> {
 /// Run a full experiment in-process. The engine must already host the
 /// config's model. Dispatches to the runner named by `cfg.runner`.
 pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<RunResult> {
+    run_experiment_with(cfg, engine, &RunHooks::default())
+}
+
+/// [`run_experiment`] with caller-supplied [`RunHooks`]: the `decentra
+/// serve` daemon threads its cancel flag and telemetry ring through
+/// here. The sink (when present) sees `run_started`, per-round, and
+/// store events during the run, then `run_finished` and a close on
+/// every exit path — success, cancellation, or error — so SSE consumers
+/// never hang on a dead run.
+pub fn run_experiment_with(
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    hooks: &RunHooks,
+) -> Result<RunResult> {
+    let result = run_experiment_inner(cfg, engine, hooks);
+    if let Some(sink) = &hooks.telemetry {
+        if let Ok(r) = &result {
+            sink.emit(TelemetryEvent::RunFinished { cancelled: r.cancelled, wall_s: r.wall_s });
+        }
+        sink.close();
+    }
+    result
+}
+
+fn run_experiment_inner(
+    cfg: &ExperimentConfig,
+    engine: &EngineHandle,
+    hooks: &RunHooks,
+) -> Result<RunResult> {
     let wall = Timer::start();
     let setup = prepare(cfg, engine)?;
+    if let Some(sink) = &hooks.telemetry {
+        sink.emit(TelemetryEvent::RunStarted { nodes: cfg.nodes, rounds: cfg.rounds });
+    }
     let runner = runner_from_spec(&cfg.runner, cfg.workers)?;
-    let RunnerOutput { mut logs, store } = runner.run(cfg, engine, &setup)?;
+    let RunnerOutput { mut logs, store, cancelled } = runner.run(cfg, engine, &setup, hooks)?;
     logs.sort_by_key(|l| l.node);
     let series = aggregate(&logs);
     Ok(RunResult {
@@ -270,6 +360,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, engine: &EngineHandle) -> Result<R
         wall_s: wall.elapsed().as_secs_f64(),
         param_count: setup.meta.param_count,
         store,
+        cancelled,
     })
 }
 
@@ -332,6 +423,7 @@ impl Runner for SchedulerRunner {
         cfg: &ExperimentConfig,
         engine: &EngineHandle,
         setup: &RunSetup,
+        hooks: &RunHooks,
     ) -> Result<RunnerOutput> {
         let workers = if self.workers > 0 {
             self.workers
@@ -341,6 +433,10 @@ impl Runner for SchedulerRunner {
         let store = param_store_for(cfg, setup);
         let init_pv = ParamVec::from_vec(setup.init.to_vec());
         let mut sched = Scheduler::with_links(setup.scenario.links.clone(), workers);
+        sched.set_control(hooks.control.clone());
+        if let Some(sink) = &hooks.telemetry {
+            sched.set_telemetry(sink.clone());
+        }
         // Static topologies handle churn traces node-side (each node
         // filters by the shared trace); dynamic ones centrally in the
         // sampler, so the nodes stay trace-unaware there.
@@ -428,12 +524,14 @@ impl Runner for SchedulerRunner {
         // yet — in shared mode this snapshot stays O(1) in node count.
         let at_start = store.as_ref().map(|s| s.stats());
         sched.run()?;
+        let cancelled = sched.was_cancelled();
         let logs = sched.take_logs();
         let report = store.as_ref().map(|s| StoreReport {
             at_start: at_start.unwrap(),
             at_end: s.stats(),
         });
-        Ok(RunnerOutput { logs, store: report })
+        hooks.emit_store(&report);
+        Ok(RunnerOutput { logs, store: report, cancelled })
     }
 }
 
@@ -450,6 +548,7 @@ impl Runner for ThreadedRunner {
         cfg: &ExperimentConfig,
         engine: &EngineHandle,
         setup: &RunSetup,
+        hooks: &RunHooks,
     ) -> Result<RunnerOutput> {
         // Transport hub: nodes + (dynamic ? sampler : 0).
         let ranks = cfg.nodes + usize::from(cfg.dynamic);
@@ -501,6 +600,7 @@ impl Runner for ThreadedRunner {
                         network: setup.network,
                         step_time_s: setup.step_times[id],
                         eval_time_s: setup.eval_times[id],
+                        telemetry: hooks.telemetry.clone(),
                     };
                     handles.push(scope.spawn(move || node.run()));
                 } else {
@@ -518,6 +618,7 @@ impl Runner for ThreadedRunner {
                         network: setup.network,
                         step_time_s: setup.step_times[id],
                         eval_time_s: setup.eval_times[id],
+                        telemetry: hooks.telemetry.clone(),
                     };
                     handles.push(scope.spawn(move || node.run()));
                 }
@@ -540,7 +641,10 @@ impl Runner for ThreadedRunner {
             at_start: at_start.unwrap(),
             at_end: s.stats(),
         });
-        Ok(RunnerOutput { logs, store: report })
+        hooks.emit_store(&report);
+        // Thread-per-node nodes block in recv; cancellation is a
+        // scheduler-runner capability.
+        Ok(RunnerOutput { logs, store: report, cancelled: false })
     }
 }
 

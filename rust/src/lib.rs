@@ -44,6 +44,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod scheduler;
 pub mod secure;
+pub mod serve;
 pub mod sharing;
 pub mod store;
 pub mod training;

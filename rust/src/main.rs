@@ -6,6 +6,7 @@
 //! * `graph`   — generate / inspect topology files
 //! * `report`  — aggregate a results directory into a series table
 //! * `fl`      — run the FL-server emulation (Fig 1's specialized node)
+//! * `serve`   — HTTP daemon: submit / watch / cancel runs over a REST+SSE API
 
 use std::path::{Path, PathBuf};
 
@@ -38,6 +39,7 @@ fn main() {
         Some("graph") => cmd_graph(&args),
         Some("report") => cmd_report(&args),
         Some("fl") => cmd_fl(&args),
+        Some("serve") => cmd_serve(&args),
         _ => {
             print_usage();
             return;
@@ -95,10 +97,13 @@ fn print_usage() {
                 opt("out", "output file (graph mode)", None),
                 flag("info", "print graph statistics (graph mode)"),
                 opt("dir", "results dir (report mode)", None),
+                opt("addr", "listen address (serve mode)", Some("127.0.0.1:7070")),
+                opt("queue-cap", "max queued runs before 429 (serve mode)", Some("16")),
+                opt("ring-cap", "telemetry ring capacity per run (serve mode)", Some("65536")),
             ],
         )
     );
-    println!("subcommands: run | node | graph | report | fl");
+    println!("subcommands: run | node | graph | report | fl | serve");
 }
 
 /// Apply common CLI overrides onto a loaded config.
@@ -355,6 +360,7 @@ fn cmd_node(args: &Args) -> Result<()> {
         network: None,
         step_time_s: 0.0,
         eval_time_s: 0.0,
+        telemetry: None,
     };
     let log = node.run()?;
     let dir = cfg.results_dir.join(&cfg.name);
@@ -480,4 +486,20 @@ fn cmd_fl(args: &Args) -> Result<()> {
     print!("{}", render_series("fl_emulation", &series));
     engine.shutdown();
     Ok(())
+}
+
+/// Observability daemon: a REST + SSE API for submitting, watching, and
+/// cancelling experiment runs (see [`decentralize_rs::serve`]).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use decentralize_rs::serve::{Daemon, ServeOptions};
+
+    let defaults = ServeOptions::default();
+    let opts = ServeOptions {
+        addr: args.get_or("addr", &defaults.addr).to_string(),
+        queue_cap: args.get_parse("queue-cap", defaults.queue_cap)?,
+        ring_cap: args.get_parse("ring-cap", defaults.ring_cap)?,
+    };
+    let daemon = Daemon::bind(&opts)?;
+    log_info!("serve", "listening on http://{}", daemon.local_addr());
+    daemon.run()
 }

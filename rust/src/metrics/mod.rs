@@ -15,6 +15,10 @@ use anyhow::{Context, Result};
 use crate::util::json::{parse, Json};
 use crate::util::stats::{mean_ci, MeanCi};
 
+pub mod telemetry;
+
+pub use telemetry::{Registry, Telemetry, TelemetryEvent};
+
 /// One evaluation record for one node.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Record {
@@ -108,18 +112,31 @@ impl Record {
 }
 
 /// Per-node log: node id + records in round order.
+///
+/// Optionally mirrors every pushed [`Record`] into a [`Telemetry`] sink
+/// ([`set_sink`](NodeLog::set_sink)) so live consumers see rounds as
+/// they complete; the sink never changes what is stored or saved.
 #[derive(Debug, Clone, Default)]
 pub struct NodeLog {
     pub node: usize,
     pub records: Vec<Record>,
+    sink: Option<Telemetry>,
 }
 
 impl NodeLog {
     pub fn new(node: usize) -> NodeLog {
-        NodeLog { node, records: Vec::new() }
+        NodeLog { node, records: Vec::new(), sink: None }
+    }
+
+    /// Mirror future pushes into `sink` as [`TelemetryEvent::Round`]s.
+    pub fn set_sink(&mut self, sink: Telemetry) {
+        self.sink = Some(sink);
     }
 
     pub fn push(&mut self, r: Record) {
+        if let Some(sink) = &self.sink {
+            sink.emit(TelemetryEvent::Round { node: self.node, record: r.clone() });
+        }
         self.records.push(r);
     }
 
@@ -347,6 +364,58 @@ mod tests {
         assert_eq!(series[0].test_acc.n, 2);
         assert!((series[1].test_acc.mean - 0.4).abs() < 1e-12);
         assert_eq!(series[1].test_acc.n, 1);
+    }
+
+    #[test]
+    fn aggregate_survivor_series_includes_defense_fields() {
+        // Three nodes; node 2 crashes after round 0. The defense-metric
+        // columns (isolation_rate, poisoned_mass_admitted) must average
+        // over exactly the survivors, with the CI's n saying how many.
+        let mut a = NodeLog::new(0);
+        let mut b = NodeLog::new(1);
+        let mut c = NodeLog::new(2);
+        for (log, iso, mass) in [(&mut a, 0.5, 0.1), (&mut b, 1.0, 0.3), (&mut c, 0.0, 0.8)] {
+            let mut r = rec(0, 0.2, 100);
+            r.isolation_rate = iso;
+            r.poisoned_mass_admitted = mass;
+            log.push(r);
+        }
+        for (log, iso, mass) in [(&mut a, 0.6, 0.2), (&mut b, 0.8, 0.4)] {
+            let mut r = rec(1, 0.3, 200);
+            r.isolation_rate = iso;
+            r.poisoned_mass_admitted = mass;
+            log.push(r);
+        }
+        let series = aggregate(&[a, b, c]);
+        assert_eq!(series.len(), 2);
+        assert_eq!(series[0].isolation_rate.n, 3);
+        assert!((series[0].isolation_rate.mean - 0.5).abs() < 1e-12);
+        assert!((series[0].poisoned_mass_admitted.mean - 0.4).abs() < 1e-12);
+        // Round 1: only the two survivors contribute.
+        assert_eq!(series[1].isolation_rate.n, 2);
+        assert_eq!(series[1].poisoned_mass_admitted.n, 2);
+        assert!((series[1].isolation_rate.mean - 0.7).abs() < 1e-12);
+        assert!((series[1].poisoned_mass_admitted.mean - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn push_mirrors_into_telemetry_sink() {
+        let t = Telemetry::new(8);
+        let mut log = NodeLog::new(4);
+        log.set_sink(t.clone());
+        let r = rec(0, 0.5, 100);
+        log.push(r.clone());
+        let (batch, _) = t.events_since(0);
+        assert_eq!(batch.len(), 1);
+        match &batch[0].1 {
+            TelemetryEvent::Round { node, record } => {
+                assert_eq!(*node, 4);
+                assert_eq!(record, &r);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+        // The sink is live-mirroring only: the log still stores records.
+        assert_eq!(log.records.len(), 1);
     }
 
     #[test]

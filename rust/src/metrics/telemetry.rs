@@ -1,0 +1,432 @@
+//! Live telemetry: the streaming side of the metrics subsystem.
+//!
+//! Saved `node_*.jsonl` logs only exist after a run finishes; the
+//! `decentra serve` control plane ([`crate::serve`]) needs the same
+//! round-granularity data *while* the run executes. Two pieces provide
+//! it:
+//!
+//! * [`Telemetry`] — a lock-light bounded ring buffer of
+//!   [`TelemetryEvent`]s. Producers (the node state machines, via their
+//!   [`crate::metrics::NodeLog`] sink) append under one short mutex
+//!   hold; consumers read by **cursor** (a monotone sequence number), so
+//!   any number of SSE streams can follow the same run without
+//!   back-pressure on the fleet — a slow consumer misses evicted events
+//!   (counted in [`Telemetry::dropped_events`]) instead of stalling the
+//!   scheduler.
+//! * [`Registry`] — a small Prometheus-text counter/gauge/histogram
+//!   registry backing the daemon's `GET /metrics` endpoint.
+//!
+//! The round event carries the exact [`Record`] the node pushes into its
+//! log, so a streamed round and the `node_*.jsonl` line written at save
+//! time serialize bit-identically (pinned by `rust/tests/serve_api.rs`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::store::StoreStats;
+use crate::util::json::Json;
+
+use super::Record;
+
+/// One live event in a run's telemetry stream.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TelemetryEvent {
+    /// A runner started executing the fleet.
+    RunStarted { nodes: usize, rounds: u64 },
+    /// One node finished an evaluation round. `record` is exactly what
+    /// the node appended to its [`crate::metrics::NodeLog`] — the same
+    /// struct later serialized into `node_*.jsonl` — so consumers see
+    /// round rate (event cadence), virtual vs. real clock skew
+    /// (`emu_time_s` vs `real_time_s`), and the staleness / defense
+    /// metrics without waiting for the run to end.
+    Round { node: usize, record: Record },
+    /// A [`StoreStats`] accounting snapshot (`phase`: `start` | `end`),
+    /// labeled with the store kind (`shared` | `paged`).
+    Store { phase: String, kind: String, stats: StoreStats },
+    /// The run reached quiescence (or its cancel flag).
+    RunFinished { cancelled: bool, wall_s: f64 },
+}
+
+impl TelemetryEvent {
+    /// Stable event-type tag (the SSE `event:` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TelemetryEvent::RunStarted { .. } => "run_started",
+            TelemetryEvent::Round { .. } => "round",
+            TelemetryEvent::Store { .. } => "store",
+            TelemetryEvent::RunFinished { .. } => "run_finished",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            TelemetryEvent::RunStarted { nodes, rounds } => Json::obj(vec![
+                ("nodes", Json::num(*nodes as f64)),
+                ("rounds", Json::num(*rounds as f64)),
+            ]),
+            // The record is embedded unmodified: `data.record` dumps to
+            // the identical bytes as the saved node_*.jsonl line.
+            TelemetryEvent::Round { node, record } => Json::obj(vec![
+                ("node", Json::num(*node as f64)),
+                ("record", record.to_json()),
+            ]),
+            TelemetryEvent::Store { phase, kind, stats } => {
+                let mut j = stats.to_json();
+                if let Json::Obj(ref mut obj) = j {
+                    obj.insert("phase".into(), Json::str(phase.as_str()));
+                    obj.insert("kind".into(), Json::str(kind.as_str()));
+                }
+                j
+            }
+            TelemetryEvent::RunFinished { cancelled, wall_s } => Json::obj(vec![
+                ("cancelled", Json::Bool(*cancelled)),
+                ("wall_s", Json::num(*wall_s)),
+            ]),
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Ring {
+    events: VecDeque<(u64, TelemetryEvent)>,
+    next_seq: u64,
+    closed: bool,
+}
+
+#[derive(Debug)]
+struct TelemetryInner {
+    cap: usize,
+    ring: Mutex<Ring>,
+    cond: Condvar,
+    rounds: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Lock-light ring buffer of [`TelemetryEvent`]s for one run. Cheap to
+/// clone (handle); producers and consumers share the same ring.
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    inner: Arc<TelemetryInner>,
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new(65_536)
+    }
+}
+
+impl Telemetry {
+    /// A ring holding at most `cap` events; the oldest are evicted (and
+    /// counted as dropped) when producers outpace the slowest consumer.
+    pub fn new(cap: usize) -> Telemetry {
+        Telemetry {
+            inner: Arc::new(TelemetryInner {
+                cap: cap.max(1),
+                ring: Mutex::new(Ring { events: VecDeque::new(), next_seq: 0, closed: false }),
+                cond: Condvar::new(),
+                rounds: AtomicU64::new(0),
+                dropped: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Append one event (no-op after [`close`](Telemetry::close)).
+    pub fn emit(&self, event: TelemetryEvent) {
+        let is_round = matches!(event, TelemetryEvent::Round { .. });
+        let mut ring = self.inner.ring.lock().unwrap();
+        if ring.closed {
+            return;
+        }
+        if is_round {
+            self.inner.rounds.fetch_add(1, Ordering::Relaxed);
+        }
+        if ring.events.len() == self.inner.cap {
+            ring.events.pop_front();
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        ring.events.push_back((seq, event));
+        drop(ring);
+        self.inner.cond.notify_all();
+    }
+
+    /// Copy out every buffered event with sequence >= `cursor`; returns
+    /// the batch and the cursor to pass next time. Non-blocking.
+    pub fn events_since(&self, cursor: u64) -> (Vec<(u64, TelemetryEvent)>, u64) {
+        let ring = self.inner.ring.lock().unwrap();
+        let batch: Vec<(u64, TelemetryEvent)> = ring
+            .events
+            .iter()
+            .filter(|(seq, _)| *seq >= cursor)
+            .cloned()
+            .collect();
+        let next = batch.last().map_or(cursor, |(seq, _)| seq + 1);
+        (batch, next)
+    }
+
+    /// Like [`events_since`](Telemetry::events_since), but blocks up to
+    /// `timeout` for something new. The final `bool` is the closed flag:
+    /// an empty batch with `closed = true` means the stream is over.
+    pub fn wait_since(
+        &self,
+        cursor: u64,
+        timeout: Duration,
+    ) -> (Vec<(u64, TelemetryEvent)>, u64, bool) {
+        let guard = self.inner.ring.lock().unwrap();
+        let (ring, _) = self
+            .inner
+            .cond
+            .wait_timeout_while(guard, timeout, |r| !r.closed && r.next_seq <= cursor)
+            .unwrap();
+        let batch: Vec<(u64, TelemetryEvent)> = ring
+            .events
+            .iter()
+            .filter(|(seq, _)| *seq >= cursor)
+            .cloned()
+            .collect();
+        let next = batch.last().map_or(cursor, |(seq, _)| seq + 1);
+        (batch, next, ring.closed)
+    }
+
+    /// Mark the stream finished: consumers drain what is buffered and
+    /// stop waiting. Idempotent; later emits are dropped.
+    pub fn close(&self) {
+        let mut ring = self.inner.ring.lock().unwrap();
+        ring.closed = true;
+        drop(ring);
+        self.inner.cond.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.ring.lock().unwrap().closed
+    }
+
+    /// Total `Round` events emitted (monotone; unaffected by eviction).
+    pub fn rounds_emitted(&self) -> u64 {
+        self.inner.rounds.load(Ordering::Relaxed)
+    }
+
+    /// Events evicted from the ring before every consumer saw them.
+    pub fn dropped_events(&self) -> u64 {
+        self.inner.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Sequence number the next emitted event will get (== events ever
+    /// emitted).
+    pub fn next_seq(&self) -> u64 {
+        self.inner.ring.lock().unwrap().next_seq
+    }
+}
+
+/// Default latency buckets for [`Registry::observe`] (seconds).
+const LATENCY_BUCKETS: [f64; 12] =
+    [1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2, 0.1, 0.5, 1.0];
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(f64),
+    Gauge(f64),
+    Histogram { buckets: Vec<f64>, counts: Vec<u64>, sum: f64, count: u64 },
+}
+
+/// Minimal counter/gauge/histogram registry rendering the Prometheus
+/// text exposition format (`GET /metrics`). Metric names are used as-is;
+/// callers keep them to `[a-zA-Z_][a-zA-Z0-9_]*`.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    metrics: Arc<Mutex<BTreeMap<String, Metric>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `by` to a (monotone) counter, creating it at 0 first.
+    pub fn inc_counter(&self, name: &str, by: f64) {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert(Metric::Counter(0.0)) {
+            Metric::Counter(v) => *v += by,
+            _ => debug_assert!(false, "metric {name} is not a counter"),
+        }
+    }
+
+    /// Set a gauge to `v`, creating it if absent.
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        let mut m = self.metrics.lock().unwrap();
+        match m.entry(name.to_string()).or_insert(Metric::Gauge(0.0)) {
+            Metric::Gauge(g) => *g = v,
+            _ => debug_assert!(false, "metric {name} is not a gauge"),
+        }
+    }
+
+    /// Observe one sample into a histogram (created on first use with
+    /// the default latency buckets).
+    pub fn observe(&self, name: &str, v: f64) {
+        let mut m = self.metrics.lock().unwrap();
+        let metric = m.entry(name.to_string()).or_insert(Metric::Histogram {
+            buckets: LATENCY_BUCKETS.to_vec(),
+            counts: vec![0; LATENCY_BUCKETS.len()],
+            sum: 0.0,
+            count: 0,
+        });
+        match metric {
+            Metric::Histogram { buckets, counts, sum, count } => {
+                for (le, c) in buckets.iter().zip(counts.iter_mut()) {
+                    if v <= *le {
+                        *c += 1;
+                    }
+                }
+                *sum += v;
+                *count += 1;
+            }
+            _ => debug_assert!(false, "metric {name} is not a histogram"),
+        }
+    }
+
+    /// Render every metric in the Prometheus text format.
+    pub fn render(&self) -> String {
+        let m = self.metrics.lock().unwrap();
+        let mut out = String::new();
+        for (name, metric) in m.iter() {
+            match metric {
+                Metric::Counter(v) => {
+                    out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+                }
+                Metric::Gauge(v) => {
+                    out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+                }
+                Metric::Histogram { buckets, counts, sum, count } => {
+                    out.push_str(&format!("# TYPE {name} histogram\n"));
+                    for (le, c) in buckets.iter().zip(counts.iter()) {
+                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {c}\n"));
+                    }
+                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {count}\n"));
+                    out.push_str(&format!("{name}_sum {sum}\n"));
+                    out.push_str(&format!("{name}_count {count}\n"));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_ev(node: usize, round: u64) -> TelemetryEvent {
+        TelemetryEvent::Round {
+            node,
+            record: Record {
+                round,
+                emu_time_s: 1.0,
+                real_time_s: 0.5,
+                train_loss: 0.1,
+                test_loss: 0.2,
+                test_acc: 0.9,
+                bytes_sent: 10,
+                bytes_recv: 10,
+                msgs_sent: 6,
+                bytes_serialized: 5,
+                late_msgs: 0,
+                dropped_msgs: 0,
+                mean_staleness_s: 0.0,
+                poisoned_mass_admitted: 0.0,
+                rejected_contribs: 0,
+                isolation_rate: 0.0,
+            },
+        }
+    }
+
+    #[test]
+    fn cursor_reads_are_incremental() {
+        let t = Telemetry::new(16);
+        t.emit(round_ev(0, 0));
+        t.emit(round_ev(1, 0));
+        let (batch, next) = t.events_since(0);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(next, 2);
+        let (batch, next) = t.events_since(next);
+        assert!(batch.is_empty());
+        assert_eq!(next, 2);
+        t.emit(round_ev(2, 0));
+        let (batch, _) = t.events_since(next);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(t.rounds_emitted(), 3);
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let t = Telemetry::new(2);
+        for i in 0..5 {
+            t.emit(round_ev(i, 0));
+        }
+        assert_eq!(t.dropped_events(), 3);
+        let (batch, _) = t.events_since(0);
+        assert_eq!(batch.len(), 2);
+        // The survivors are the newest, with their original sequences.
+        assert_eq!(batch[0].0, 3);
+        assert_eq!(batch[1].0, 4);
+    }
+
+    #[test]
+    fn wait_since_wakes_on_emit_and_on_close() {
+        let t = Telemetry::new(8);
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            t2.emit(round_ev(0, 0));
+            std::thread::sleep(Duration::from_millis(20));
+            t2.close();
+        });
+        let (batch, next, closed) = t.wait_since(0, Duration::from_secs(5));
+        assert_eq!(batch.len(), 1);
+        assert!(!closed);
+        let (batch, _, closed) = t.wait_since(next, Duration::from_secs(5));
+        assert!(batch.is_empty());
+        assert!(closed);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn closed_ring_drops_emits() {
+        let t = Telemetry::new(8);
+        t.close();
+        t.emit(round_ev(0, 0));
+        let (batch, _) = t.events_since(0);
+        assert!(batch.is_empty());
+        assert!(t.is_closed());
+    }
+
+    #[test]
+    fn round_event_json_embeds_record_verbatim() {
+        let ev = round_ev(3, 7);
+        assert_eq!(ev.kind(), "round");
+        let want = match &ev {
+            TelemetryEvent::Round { record, .. } => record.to_json().dump(),
+            _ => unreachable!(),
+        };
+        assert_eq!(ev.to_json().get("record").dump(), want);
+        assert_eq!(ev.to_json().get("node").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn registry_renders_prometheus_text() {
+        let r = Registry::new();
+        r.inc_counter("requests_total", 1.0);
+        r.inc_counter("requests_total", 2.0);
+        r.set_gauge("queued", 4.0);
+        r.observe("latency_seconds", 0.002);
+        r.observe("latency_seconds", 0.2);
+        let text = r.render();
+        assert!(text.contains("# TYPE requests_total counter"));
+        assert!(text.contains("requests_total 3"));
+        assert!(text.contains("queued 4"));
+        assert!(text.contains("latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("latency_seconds_count 2"));
+    }
+}

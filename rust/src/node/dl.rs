@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 use crate::communication::{shaper::EmuClock, shaper::NetworkModel, Envelope, MsgKind, Transport};
 use crate::dataset::Dataset;
 use crate::kernels::Scratch;
-use crate::metrics::{NodeLog, Record};
+use crate::metrics::{NodeLog, Record, Telemetry};
 use crate::model::ParamVec;
 use crate::scenario::ByzantineRoster;
 use crate::sharing::{DefenseStats, Received, Sharing};
@@ -50,12 +50,17 @@ pub struct DlNode {
     pub step_time_s: f64,
     /// Eval time estimate per full test pass (emu clock).
     pub eval_time_s: f64,
+    /// Live sink mirroring every completed eval round (`None` = none).
+    pub telemetry: Option<Telemetry>,
 }
 
 impl DlNode {
     /// Run the D-PSGD loop; returns this node's metric log.
     pub fn run(mut self) -> Result<NodeLog> {
         let mut log = NodeLog::new(self.id);
+        if let Some(sink) = &self.telemetry {
+            log.set_sink(sink.clone());
+        }
         let mut clock = EmuClock::new();
         let wall = Timer::start();
         // Model messages that arrived early (neighbors running ahead).

@@ -21,7 +21,7 @@ use crate::compression::{FloatCodec, RawF32};
 use crate::dataset::Dataset;
 use crate::graph::{Graph, MixingWeights};
 use crate::kernels::{self, Scratch};
-use crate::metrics::{NodeLog, Record};
+use crate::metrics::{NodeLog, Record, Telemetry};
 use crate::secure::Masker;
 use crate::store::{ParamSlot, Payload};
 use crate::training::Trainer;
@@ -45,11 +45,16 @@ pub struct SecureDlNode {
     pub network: Option<NetworkModel>,
     pub step_time_s: f64,
     pub eval_time_s: f64,
+    /// Live sink mirroring every completed eval round (`None` = none).
+    pub telemetry: Option<Telemetry>,
 }
 
 impl SecureDlNode {
     pub fn run(mut self) -> Result<NodeLog> {
         let mut log = NodeLog::new(self.id);
+        if let Some(sink) = &self.telemetry {
+            log.set_sink(sink.clone());
+        }
         let mut clock = EmuClock::new();
         let wall = Timer::start();
         let neighbors: Vec<usize> = self.graph.neighbors_vec(self.id);

@@ -73,6 +73,7 @@ pub use nodes::{AsyncDlNodeSm, DlNodeSm, SamplerSm, SecureDlNodeSm};
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -81,8 +82,34 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::communication::shaper::{LinkModel, NetworkModel};
 use crate::communication::{wire_size, Counters, CountersSnapshot, Envelope};
 use crate::dataset::Dataset;
-use crate::metrics::NodeLog;
+use crate::metrics::{NodeLog, Telemetry};
 use crate::training::Trainer;
+
+/// Cooperative cancellation handle for a run. Cheap to clone; any clone
+/// can [`cancel`](RunControl::cancel) from any thread. The scheduler
+/// checks the flag between event dispatches, so a cancelled run stops at
+/// an event boundary — and, from every node log's perspective, at a
+/// round boundary: logs only ever contain fully completed evaluation
+/// rounds.
+#[derive(Debug, Clone, Default)]
+pub struct RunControl {
+    cancelled: Arc<AtomicBool>,
+}
+
+impl RunControl {
+    pub fn new() -> RunControl {
+        RunControl::default()
+    }
+
+    /// Request cancellation (idempotent; safe from any thread).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, AtomicOrdering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(AtomicOrdering::SeqCst)
+    }
+}
 
 /// Result of a compute job executed on the worker pool. Train/Eval carry
 /// the node's [`Trainer`] through the pool and back (a node has at most
@@ -205,6 +232,12 @@ pub trait EventNode {
     fn take_log(&mut self) -> Option<NodeLog> {
         None
     }
+
+    /// Offered a live [`Telemetry`] sink by
+    /// [`Scheduler::set_telemetry`]. Nodes that keep a [`NodeLog`]
+    /// should forward it with [`NodeLog::set_sink`] so completed rounds
+    /// stream out as they happen; nodes without logs ignore it.
+    fn attach_telemetry(&mut self, _sink: &Telemetry) {}
 }
 
 enum EventKind {
@@ -349,6 +382,11 @@ pub struct Scheduler {
     /// Virtual instant at which each node crashes (`NAN` = never).
     crash_at: Vec<f64>,
     dropped: u64,
+    /// Cooperative cancel flag, checked between event dispatches.
+    control: RunControl,
+    /// Live sink handed to every node via `EventNode::attach_telemetry`.
+    telemetry: Option<Telemetry>,
+    was_cancelled: bool,
 }
 
 impl Scheduler {
@@ -378,11 +416,38 @@ impl Scheduler {
             departed: Vec::new(),
             crash_at: Vec::new(),
             dropped: 0,
+            control: RunControl::default(),
+            telemetry: None,
+            was_cancelled: false,
         }
     }
 
+    /// Install a cancellation handle checked between event dispatches;
+    /// see [`RunControl`].
+    pub fn set_control(&mut self, control: RunControl) {
+        self.control = control;
+    }
+
+    /// Stream completed rounds into `sink`: it is attached to every
+    /// node already added and to every node added afterwards.
+    pub fn set_telemetry(&mut self, sink: Telemetry) {
+        for node in self.nodes.iter_mut().flatten() {
+            node.attach_telemetry(&sink);
+        }
+        self.telemetry = Some(sink);
+    }
+
+    /// True iff the last [`run`](Scheduler::run) stopped on its
+    /// [`RunControl`] instead of draining the event queue.
+    pub fn was_cancelled(&self) -> bool {
+        self.was_cancelled
+    }
+
     /// Register a node; its id (== transport rank) is the add order.
-    pub fn add_node(&mut self, node: Box<dyn EventNode>) -> usize {
+    pub fn add_node(&mut self, mut node: Box<dyn EventNode>) -> usize {
+        if let Some(sink) = &self.telemetry {
+            node.attach_telemetry(sink);
+        }
         let id = self.nodes.len();
         self.nodes.push(Some(node));
         self.node_time.push(0.0);
@@ -467,6 +532,7 @@ impl Scheduler {
     /// queue drains; error if any node is not done (a deadlock, e.g. a
     /// node waiting for a message that can never arrive).
     pub fn run(&mut self) -> Result<()> {
+        self.was_cancelled = false;
         let mut pool = WorkerPool::start(self.workers)?;
         for node in 0..self.nodes.len() {
             self.push(0.0, EventKind::Start { node });
@@ -474,6 +540,11 @@ impl Scheduler {
         let result = self.drain(&mut pool);
         pool.shutdown();
         result?;
+        if self.was_cancelled {
+            // A cancelled run stops mid-protocol by design: nodes are
+            // legitimately not done, so the deadlock check is moot.
+            return Ok(());
+        }
         // Departed / crashed nodes are exempt from the deadlock check:
         // they legitimately stop mid-protocol. A node with a crash
         // *scheduled* counts too, even if no event ever popped at or
@@ -513,6 +584,14 @@ impl Scheduler {
 
     fn drain(&mut self, pool: &mut WorkerPool) -> Result<()> {
         while let Some(ev) = self.pop_next() {
+            // Cooperative cancellation: the flag is checked between
+            // event dispatches, never inside one, so the run stops at a
+            // clean event boundary (in-flight pool jobs are reaped by
+            // the pool shutdown that follows).
+            if self.control.is_cancelled() {
+                self.was_cancelled = true;
+                return Ok(());
+            }
             let (node, wake) = match ev.kind {
                 EventKind::Start { node } => {
                     if self.crashed(node, ev.at) {
@@ -765,6 +844,23 @@ mod tests {
         assert_eq!(s.counters(1).msgs_sent, 3);
         assert_eq!(s.counters(1).msgs_recv, 3);
         assert_eq!(s.counters(0).msgs_recv, 3);
+    }
+
+    #[test]
+    fn cancel_flag_stops_drain_without_deadlock_error() {
+        // The request/reply pair normally terminates with 3 exchanges;
+        // with the cancel flag already set, the drain loop must stop
+        // before dispatching anything, and the not-done nodes must NOT
+        // trip the deadlock check.
+        let mut s = Scheduler::new(None, 1);
+        s.add_node(Box::new(Caller { burst: 3, seen: 0 }));
+        s.add_node(Box::new(Responder { id: 1, expect: 3, seen: 0 }));
+        let control = RunControl::new();
+        s.set_control(control.clone());
+        control.cancel();
+        s.run().unwrap();
+        assert!(s.was_cancelled());
+        assert_eq!(s.counters(0).msgs_sent, 0);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use crate::communication::{Envelope, MsgKind};
 use crate::dataset::Dataset;
 use crate::graph::{Graph, MixingWeights};
 use crate::kernels::{self, Scratch};
-use crate::metrics::{NodeLog, Record};
+use crate::metrics::{NodeLog, Record, Telemetry};
 use crate::model::ParamVec;
 use crate::node::async_dl::{AsyncPolicy, AsyncStats, DeadlineSpec, LatePolicy};
 use crate::node::proto::{decode_control, decode_neighbors, encode_control, encode_neighbors};
@@ -431,6 +431,12 @@ impl EventNode for DlNodeSm {
     fn take_log(&mut self) -> Option<NodeLog> {
         self.log.take()
     }
+
+    fn attach_telemetry(&mut self, sink: &Telemetry) {
+        if let Some(log) = &mut self.log {
+            log.set_sink(sink.clone());
+        }
+    }
 }
 
 /// Event-driven secure-aggregation client (state-machine twin of
@@ -649,6 +655,12 @@ impl EventNode for SecureDlNodeSm {
 
     fn take_log(&mut self) -> Option<NodeLog> {
         self.log.take()
+    }
+
+    fn attach_telemetry(&mut self, sink: &Telemetry) {
+        if let Some(log) = &mut self.log {
+            log.set_sink(sink.clone());
+        }
     }
 }
 
@@ -1189,5 +1201,11 @@ impl EventNode for AsyncDlNodeSm {
 
     fn take_log(&mut self) -> Option<NodeLog> {
         self.log.take()
+    }
+
+    fn attach_telemetry(&mut self, sink: &Telemetry) {
+        if let Some(log) = &mut self.log {
+            log.set_sink(sink.clone());
+        }
     }
 }

@@ -1,0 +1,237 @@
+//! Minimal HTTP/1.1 framing for the serve daemon.
+//!
+//! Hand-rolled over [`std::net::TcpStream`] — the same no-new-deps
+//! discipline as the TCP transport in [`crate::communication`]. Scope is
+//! exactly what the daemon's API needs: request-line + headers + an
+//! optional `Content-Length` body on the way in; status + headers + body
+//! (or a streaming body the caller writes itself) on the way out. No
+//! chunked encoding, no TLS, no HTTP/2.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Result};
+
+/// Reject header blocks larger than this (a defensive cap, not a limit
+/// any legitimate client hits).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// Reject bodies larger than this (configs are a few KiB).
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path with the query string stripped (e.g. `/runs/3/events`).
+    pub path: String,
+    /// Decoded `?k=v&k2=v2` query parameters (no percent-decoding —
+    /// the API's values are all numeric).
+    pub query: BTreeMap<String, String>,
+    /// Header names lowercased.
+    pub headers: BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Path split into non-empty `/`-separated segments.
+    pub fn segments(&self) -> Vec<&str> {
+        self.path.split('/').filter(|s| !s.is_empty()).collect()
+    }
+}
+
+/// Read one request off the stream. `Ok(None)` means the peer closed
+/// cleanly before sending anything (the idle keep-alive case).
+pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>> {
+    // Accumulate until the blank line that ends the header block.
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    let header_end = loop {
+        if let Some(pos) = find_header_end(&head) {
+            break pos;
+        }
+        if head.len() > MAX_HEAD_BYTES {
+            bail!("request header block exceeds {MAX_HEAD_BYTES} bytes");
+        }
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            if head.is_empty() {
+                return Ok(None);
+            }
+            bail!("connection closed mid-request");
+        }
+        head.extend_from_slice(&buf[..n]);
+    };
+    let (header_bytes, rest) = head.split_at(header_end);
+    let rest = &rest[4..]; // skip the \r\n\r\n itself
+    let text = std::str::from_utf8(header_bytes)?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || target.is_empty() {
+        bail!("malformed request line {request_line:?}");
+    }
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(name.trim().to_ascii_lowercase(), value.trim().to_string());
+        }
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), parse_query(q)),
+        None => (target, BTreeMap::new()),
+    };
+    let content_length: usize = match headers.get("content-length") {
+        Some(v) => v.parse()?,
+        None => 0,
+    };
+    if content_length > MAX_BODY_BYTES {
+        bail!("request body exceeds {MAX_BODY_BYTES} bytes");
+    }
+    let mut body = rest.to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            bail!("connection closed mid-body");
+        }
+        body.extend_from_slice(&buf[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Some(Request { method, path, query, headers, body }))
+}
+
+fn find_header_end(bytes: &[u8]) -> Option<usize> {
+    bytes.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn parse_query(q: &str) -> BTreeMap<String, String> {
+    let mut out = BTreeMap::new();
+    for pair in q.split('&') {
+        if pair.is_empty() {
+            continue;
+        }
+        match pair.split_once('=') {
+            Some((k, v)) => out.insert(k.to_string(), v.to_string()),
+            None => out.insert(pair.to_string(), String::new()),
+        };
+    }
+    out
+}
+
+/// One response, written whole (streaming endpoints write their own
+/// headers and frames instead).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response { status, content_type: "application/json", body: body.into_bytes() }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        let body = body.into().into_bytes();
+        Response { status, content_type: "text/plain; charset=utf-8", body }
+    }
+
+    /// Serialize onto the stream. `keep_alive` controls the
+    /// `Connection` header (the daemon serves one request per
+    /// connection unless the client asked to keep it open).
+    pub fn write(&self, stream: &mut TcpStream, keep_alive: bool) -> Result<()> {
+        let reason = reason_phrase(self.status);
+        let connection = if keep_alive { "keep-alive" } else { "close" };
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+            self.status,
+            reason,
+            self.content_type,
+            self.body.len(),
+            connection
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()?;
+        Ok(())
+    }
+}
+
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    fn roundtrip(raw: &[u8]) -> Option<Request> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let raw = raw.to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&raw).unwrap();
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        let req = read_request(&mut stream).unwrap();
+        writer.join().unwrap();
+        req
+    }
+
+    #[test]
+    fn parses_request_line_headers_query_and_body() {
+        let raw = b"POST /runs?from=3&verbose HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = roundtrip(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/runs");
+        assert_eq!(req.query.get("from").map(String::as_str), Some("3"));
+        assert_eq!(req.query.get("verbose").map(String::as_str), Some(""));
+        assert_eq!(req.headers.get("host").map(String::as_str), Some("x"));
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(req.segments(), vec!["runs"]);
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_get_has_no_body() {
+        assert!(roundtrip(b"").is_none());
+        let req = roundtrip(b"GET /runs/7/events HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert!(req.body.is_empty());
+        assert_eq!(req.segments(), vec!["runs", "7", "events"]);
+    }
+
+    #[test]
+    fn response_writes_framed_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let reader = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        });
+        let (mut stream, _) = listener.accept().unwrap();
+        Response::json(201, "{\"id\":1}".into()).write(&mut stream, false).unwrap();
+        drop(stream);
+        let got = reader.join().unwrap();
+        assert!(got.starts_with("HTTP/1.1 201 Created\r\n"), "{got}");
+        assert!(got.contains("Content-Length: 8\r\n"), "{got}");
+        assert!(got.ends_with("{\"id\":1}"), "{got}");
+    }
+}

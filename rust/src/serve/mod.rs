@@ -1,0 +1,562 @@
+//! `decentra serve`: an HTTP control plane for experiment runs.
+//!
+//! A hand-rolled HTTP/1.1 daemon ([`http`]) over
+//! [`std::net::TcpListener`] — no new dependencies — exposing:
+//!
+//! * `POST /runs` — submit a config (validated with the existing
+//!   [`ExperimentConfig`] machinery) into a bounded run queue. Body is
+//!   either a bare config object or `{"driver": "sim" | "engine",
+//!   "config": {...}}`; the `sim` driver ([`run_sim`]) needs no
+//!   artifacts, the `engine` driver starts a
+//!   [`crate::runtime::EngineHandle`] from the config's
+//!   `artifacts_dir` and runs the real experiment.
+//! * `GET /runs`, `GET /runs/:id` — queue/run status.
+//! * `DELETE /runs/:id` — cooperative cancellation through the run's
+//!   [`RunControl`]; a running fleet stops at a round boundary.
+//! * `GET /runs/:id/events` — per-round [`TelemetryEvent`]s streamed as
+//!   Server-Sent Events, resumable with `?from=<seq>`.
+//! * `GET /metrics` — Prometheus text over the daemon's [`Registry`].
+//! * `GET /healthz`, `POST /shutdown` — liveness and clean exit.
+//!
+//! Runs execute **one at a time** on a single executor thread; the
+//! queue (bounded, `429` when full) decouples submission from
+//! execution. Every run owns a [`Telemetry`] ring, so status polls and
+//! SSE consumers never contend with the fleet's hot path beyond one
+//! short-lived mutex.
+
+pub mod http;
+pub mod sim;
+
+pub use sim::{run_sim, SIM_DIM};
+
+use std::collections::{BTreeMap, VecDeque};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::{run_experiment_with, RunControl, RunHooks};
+use crate::metrics::{Registry, Telemetry};
+use crate::runtime::EngineHandle;
+use crate::util::json::{parse, Json};
+use crate::util::Timer;
+
+use http::{read_request, Request, Response};
+
+/// How SSE writers poll the telemetry ring between keepalives.
+const SSE_POLL: Duration = Duration::from_millis(250);
+
+/// Idle keep-alive connections are dropped after this.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Daemon configuration (the `decentra serve` flags).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind address (`--addr`); port 0 picks a free port.
+    pub addr: String,
+    /// Max queued (not yet running) submissions (`--queue-cap`).
+    pub queue_cap: usize,
+    /// Telemetry ring capacity per run, in events (`--ring-cap`).
+    pub ring_cap: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { addr: "127.0.0.1:7070".into(), queue_cap: 16, ring_cap: 65_536 }
+    }
+}
+
+/// Which execution path a submission takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Driver {
+    /// Artifact-free synthetic run ([`run_sim`]).
+    Sim,
+    /// Real experiment through [`run_experiment_with`]; loads the
+    /// config's artifacts at execution time.
+    Engine,
+}
+
+impl Driver {
+    fn as_str(self) -> &'static str {
+        match self {
+            Driver::Sim => "sim",
+            Driver::Engine => "engine",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl Phase {
+    fn as_str(self) -> &'static str {
+        match self {
+            Phase::Queued => "queued",
+            Phase::Running => "running",
+            Phase::Done => "done",
+            Phase::Failed => "failed",
+            Phase::Cancelled => "cancelled",
+        }
+    }
+
+    fn is_terminal(self) -> bool {
+        matches!(self, Phase::Done | Phase::Failed | Phase::Cancelled)
+    }
+}
+
+/// Mutable run status, updated by the executor and DELETE handler.
+struct RunState {
+    phase: Phase,
+    error: Option<String>,
+    wall_s: Option<f64>,
+    final_accuracy: Option<f64>,
+    results_dir: Option<String>,
+}
+
+/// One submitted run: immutable identity + config, live control
+/// handles, and the mutable status.
+struct Run {
+    id: u64,
+    driver: Driver,
+    cfg: ExperimentConfig,
+    control: RunControl,
+    telemetry: Telemetry,
+    state: Mutex<RunState>,
+}
+
+impl Run {
+    fn phase(&self) -> Phase {
+        self.state.lock().unwrap().phase
+    }
+
+    fn set_phase(&self, phase: Phase) {
+        self.state.lock().unwrap().phase = phase;
+    }
+
+    fn status_json(&self) -> Json {
+        let st = self.state.lock().unwrap();
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("status", Json::str(st.phase.as_str())),
+            ("driver", Json::str(self.driver.as_str())),
+            ("name", Json::str(self.cfg.name.clone())),
+            ("nodes", Json::num(self.cfg.nodes as f64)),
+            ("rounds", Json::num(self.cfg.rounds as f64)),
+            ("rounds_streamed", Json::num(self.telemetry.rounds_emitted() as f64)),
+            ("dropped_events", Json::num(self.telemetry.dropped_events() as f64)),
+        ];
+        if let Some(err) = &st.error {
+            fields.push(("error", Json::str(err.clone())));
+        }
+        if let Some(wall_s) = st.wall_s {
+            fields.push(("wall_s", Json::num(wall_s)));
+        }
+        if let Some(acc) = st.final_accuracy {
+            fields.push(("final_accuracy", Json::num(acc)));
+        }
+        if let Some(dir) = &st.results_dir {
+            fields.push(("results_dir", Json::str(dir.clone())));
+        }
+        Json::obj(fields)
+    }
+}
+
+struct RunTable {
+    next_id: u64,
+    runs: BTreeMap<u64, Arc<Run>>,
+    queue: VecDeque<u64>,
+    active: Option<u64>,
+}
+
+/// State shared between the accept loop, per-connection handlers, and
+/// the executor thread.
+struct Shared {
+    table: Mutex<RunTable>,
+    /// Signals the executor: new queue entry or shutdown.
+    work: Condvar,
+    shutdown: AtomicBool,
+    registry: Registry,
+    queue_cap: usize,
+    ring_cap: usize,
+    addr: SocketAddr,
+}
+
+/// The serve daemon. [`bind`](Daemon::bind), then [`run`](Daemon::run)
+/// until `POST /shutdown`.
+pub struct Daemon {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Daemon {
+    pub fn bind(opts: &ServeOptions) -> Result<Daemon> {
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding serve daemon to {}", opts.addr))?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            table: Mutex::new(RunTable {
+                next_id: 1,
+                runs: BTreeMap::new(),
+                queue: VecDeque::new(),
+                active: None,
+            }),
+            work: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            registry: Registry::new(),
+            queue_cap: opts.queue_cap.max(1),
+            ring_cap: opts.ring_cap,
+            addr,
+        });
+        Ok(Daemon { listener, shared })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Serve until shutdown: accept loop here, one executor thread for
+    /// the run queue, one short-lived thread per connection.
+    pub fn run(self) -> Result<()> {
+        let exec_shared = Arc::clone(&self.shared);
+        let executor = std::thread::Builder::new()
+            .name("serve-executor".into())
+            .spawn(move || executor_loop(&exec_shared))
+            .context("spawning serve executor")?;
+        for stream in self.listener.incoming() {
+            if self.shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            let shared = Arc::clone(&self.shared);
+            let _ = std::thread::Builder::new()
+                .name("serve-conn".into())
+                .spawn(move || handle_connection(&shared, stream));
+        }
+        // Wake the executor so it observes the shutdown flag.
+        self.shared.work.notify_all();
+        let _ = executor.join();
+        Ok(())
+    }
+}
+
+/// Pop queue entries and execute them one at a time.
+fn executor_loop(shared: &Arc<Shared>) {
+    loop {
+        let run = {
+            let mut table = shared.table.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                if let Some(id) = table.queue.pop_front() {
+                    break table.runs.get(&id).cloned();
+                }
+                table = shared.work.wait(table).unwrap();
+            }
+        };
+        let Some(run) = run else { continue };
+        // A DELETE may have cancelled the run while it sat in the queue.
+        if run.phase() != Phase::Queued {
+            continue;
+        }
+        run.set_phase(Phase::Running);
+        shared.table.lock().unwrap().active = Some(run.id);
+        let hooks = RunHooks {
+            control: run.control.clone(),
+            telemetry: Some(run.telemetry.clone()),
+        };
+        let result = match run.driver {
+            Driver::Sim => sim::run_sim(&run.cfg, &hooks),
+            Driver::Engine => EngineHandle::start(&run.cfg.artifacts_dir, &[&run.cfg.model])
+                .and_then(|engine| run_experiment_with(&run.cfg, &engine, &hooks)),
+        };
+        // The run paths close the sink themselves; this covers early
+        // failures (e.g. missing artifacts) so SSE readers never hang.
+        run.telemetry.close();
+        let outcome = result.and_then(|res| {
+            let dir = res.save()?;
+            Ok((res, dir))
+        });
+        {
+            let mut st = run.state.lock().unwrap();
+            match outcome {
+                Ok((res, dir)) => {
+                    st.phase = if res.cancelled { Phase::Cancelled } else { Phase::Done };
+                    st.wall_s = Some(res.wall_s);
+                    st.final_accuracy = Some(res.final_accuracy());
+                    st.results_dir = Some(dir.display().to_string());
+                }
+                Err(e) => {
+                    st.phase = Phase::Failed;
+                    st.error = Some(format!("{e:#}"));
+                }
+            }
+            let metric = match st.phase {
+                Phase::Done => "decentra_runs_completed_total",
+                Phase::Cancelled => "decentra_runs_cancelled_total",
+                _ => "decentra_runs_failed_total",
+            };
+            shared.registry.inc_counter(metric, 1.0);
+        }
+        shared.table.lock().unwrap().active = None;
+    }
+}
+
+/// Serve requests on one connection until the peer closes (or an SSE
+/// stream takes the connection over).
+fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    loop {
+        let req = match read_request(&mut stream) {
+            Ok(Some(req)) => req,
+            _ => return,
+        };
+        let close = req
+            .headers
+            .get("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false);
+        let timer = Timer::start();
+        shared.registry.inc_counter("decentra_http_requests_total", 1.0);
+        // SSE takes over the whole connection and ends by closing it.
+        if req.method == "GET" {
+            if let Some(run) = events_target(shared, &req) {
+                let from = req.query.get("from").and_then(|v| v.parse().ok()).unwrap_or(0);
+                let _ = stream_events(&mut stream, &run, from);
+                shared
+                    .registry
+                    .observe("decentra_http_request_seconds", timer.elapsed().as_secs_f64());
+                return;
+            }
+        }
+        let resp = route(shared, &req);
+        shared
+            .registry
+            .observe("decentra_http_request_seconds", timer.elapsed().as_secs_f64());
+        if resp.write(&mut stream, !close).is_err() || close {
+            return;
+        }
+    }
+}
+
+/// The run behind `GET /runs/:id/events`, if that is what `req` is.
+fn events_target(shared: &Arc<Shared>, req: &Request) -> Option<Arc<Run>> {
+    let seg = req.segments();
+    if seg.len() == 3 && seg[0] == "runs" && seg[2] == "events" {
+        let id: u64 = seg[1].parse().ok()?;
+        return shared.table.lock().unwrap().runs.get(&id).cloned();
+    }
+    None
+}
+
+fn route(shared: &Arc<Shared>, req: &Request) -> Response {
+    let seg = req.segments();
+    match (req.method.as_str(), seg.as_slice()) {
+        ("GET", ["healthz"]) => Response::text(200, "ok\n"),
+        ("GET", ["metrics"]) => render_metrics(shared),
+        ("POST", ["runs"]) => submit_run(shared, &req.body),
+        ("GET", ["runs"]) => list_runs(shared),
+        ("GET", ["runs", id]) => with_run(shared, id, |run| {
+            Response::json(200, run.status_json().dump())
+        }),
+        ("DELETE", ["runs", id]) => with_run(shared, id, cancel_run),
+        ("GET", ["runs", _, "events"]) => {
+            // events_target said no: the id did not parse or exist.
+            Response::json(404, err_json("no such run"))
+        }
+        ("POST", ["shutdown"]) => shutdown(shared),
+        (_, ["healthz" | "metrics" | "shutdown"]) | (_, ["runs", ..]) => {
+            Response::json(405, err_json("method not allowed"))
+        }
+        _ => Response::json(404, err_json("no such endpoint")),
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).dump()
+}
+
+fn with_run(shared: &Arc<Shared>, id: &str, f: impl FnOnce(&Arc<Run>) -> Response) -> Response {
+    let Ok(id) = id.parse::<u64>() else {
+        return Response::json(404, err_json("run ids are integers"));
+    };
+    let run = shared.table.lock().unwrap().runs.get(&id).cloned();
+    match run {
+        Some(run) => f(&run),
+        None => Response::json(404, err_json("no such run")),
+    }
+}
+
+/// `POST /runs`: parse, validate, enqueue.
+fn submit_run(shared: &Arc<Shared>, body: &[u8]) -> Response {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return Response::json(400, err_json("body is not UTF-8")),
+    };
+    let v = match parse(text) {
+        Ok(v) => v,
+        Err(e) => return Response::json(400, err_json(&format!("invalid JSON: {e}"))),
+    };
+    // Either a bare config or an envelope naming the driver.
+    let (driver_name, cfg_json) = if v.get("config").is_null() {
+        ("sim".to_string(), &v)
+    } else {
+        (v.get("driver").as_str().unwrap_or("sim").to_string(), v.get("config"))
+    };
+    let driver = match driver_name.as_str() {
+        "sim" => Driver::Sim,
+        "engine" => Driver::Engine,
+        other => {
+            let msg = format!("unknown driver {other:?} (expected sim | engine)");
+            return Response::json(400, err_json(&msg));
+        }
+    };
+    let cfg = match ExperimentConfig::from_json(cfg_json) {
+        Ok(cfg) => cfg,
+        Err(e) => return Response::json(400, err_json(&format!("{e:#}"))),
+    };
+    if driver == Driver::Sim {
+        if let Err(e) = sim::check_sim_support(&cfg) {
+            return Response::json(400, err_json(&format!("{e:#}")));
+        }
+    }
+    let mut table = shared.table.lock().unwrap();
+    if table.queue.len() >= shared.queue_cap {
+        return Response::json(429, err_json("run queue is full"));
+    }
+    let id = table.next_id;
+    table.next_id += 1;
+    let run = Arc::new(Run {
+        id,
+        driver,
+        cfg,
+        control: RunControl::new(),
+        telemetry: Telemetry::new(shared.ring_cap),
+        state: Mutex::new(RunState {
+            phase: Phase::Queued,
+            error: None,
+            wall_s: None,
+            final_accuracy: None,
+            results_dir: None,
+        }),
+    });
+    table.runs.insert(id, run);
+    table.queue.push_back(id);
+    drop(table);
+    shared.registry.inc_counter("decentra_runs_submitted_total", 1.0);
+    shared.work.notify_all();
+    let body = Json::obj(vec![("id", Json::num(id as f64)), ("status", Json::str("queued"))]);
+    Response::json(201, body.dump())
+}
+
+fn list_runs(shared: &Arc<Shared>) -> Response {
+    let table = shared.table.lock().unwrap();
+    let runs: Vec<Json> = table.runs.values().map(|r| r.status_json()).collect();
+    Response::json(200, Json::obj(vec![("runs", Json::Arr(runs))]).dump())
+}
+
+/// `DELETE /runs/:id`: queued runs cancel immediately, running runs get
+/// their [`RunControl`] flag and stop at the next round boundary,
+/// finished runs are a conflict.
+fn cancel_run(run: &Arc<Run>) -> Response {
+    let mut st = run.state.lock().unwrap();
+    match st.phase {
+        Phase::Queued => {
+            st.phase = Phase::Cancelled;
+            drop(st);
+            // Nothing will ever run: close the ring so SSE readers end.
+            run.telemetry.close();
+            Response::json(200, run.status_json().dump())
+        }
+        Phase::Running => {
+            drop(st);
+            run.control.cancel();
+            let body = Json::obj(vec![
+                ("id", Json::num(run.id as f64)),
+                ("status", Json::str("running")),
+                ("cancel_requested", Json::Bool(true)),
+            ]);
+            Response::json(200, body.dump())
+        }
+        phase => {
+            debug_assert!(phase.is_terminal());
+            drop(st);
+            Response::json(409, err_json("run already finished"))
+        }
+    }
+}
+
+fn render_metrics(shared: &Arc<Shared>) -> Response {
+    {
+        let table = shared.table.lock().unwrap();
+        shared.registry.set_gauge("decentra_runs_queued", table.queue.len() as f64);
+        let active = if table.active.is_some() { 1.0 } else { 0.0 };
+        shared.registry.set_gauge("decentra_run_active", active);
+    }
+    Response::text(200, shared.registry.render())
+}
+
+fn shutdown(shared: &Arc<Shared>) -> Response {
+    // Stop the active run (if any) and unblock the executor. The flag
+    // is set under the table lock: the executor checks it under the
+    // same lock before waiting, so the notify below cannot be lost.
+    let active = {
+        let table = shared.table.lock().unwrap();
+        shared.shutdown.store(true, Ordering::SeqCst);
+        table.active.and_then(|id| table.runs.get(&id).cloned())
+    };
+    if let Some(run) = active {
+        run.control.cancel();
+    }
+    shared.work.notify_all();
+    // Nudge the accept loop so it observes the flag.
+    let _ = TcpStream::connect(shared.addr);
+    Response::json(200, Json::obj(vec![("status", Json::str("shutting down"))]).dump())
+}
+
+/// Stream `run`'s telemetry ring as Server-Sent Events, starting at
+/// sequence `from`. Frames carry the ring sequence as the SSE `id`, so
+/// a dropped client reconnects with `?from=<last id + 1>`. Ends with an
+/// `end` event once the ring is closed and drained.
+fn stream_events(stream: &mut TcpStream, run: &Arc<Run>, from: u64) -> Result<()> {
+    use std::io::Write;
+    let head = "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+                Cache-Control: no-cache\r\nConnection: close\r\n\r\n";
+    stream.write_all(head.as_bytes())?;
+    stream.flush()?;
+    let mut cursor = from;
+    loop {
+        let (batch, next, closed) = run.telemetry.wait_since(cursor, SSE_POLL);
+        cursor = next;
+        if batch.is_empty() && !closed {
+            // Comment frame: keeps half-open connections detectable.
+            stream.write_all(b": keepalive\n\n")?;
+            stream.flush()?;
+            continue;
+        }
+        for (seq, event) in &batch {
+            let data = event.to_json().dump();
+            let frame = format!("id: {seq}\nevent: {}\ndata: {data}\n\n", event.kind());
+            stream.write_all(frame.as_bytes())?;
+        }
+        stream.flush()?;
+        if closed && batch.is_empty() {
+            stream.write_all(b"event: end\ndata: {}\n\n")?;
+            stream.flush()?;
+            return Ok(());
+        }
+    }
+}

@@ -1,0 +1,425 @@
+//! Artifact-free synthetic driver for the serve daemon.
+//!
+//! The real [`crate::coordinator::run_experiment`] path needs lowered
+//! HLO artifacts on disk; the daemon's smoke tests, the API load bench,
+//! and CI all want a run that exercises the *control plane* — scheduler,
+//! sharing, cancellation, telemetry — without them. [`run_sim`] is that
+//! run: the same D-PSGD round structure on the same virtual-time
+//! [`Scheduler`], but with "training" replaced by a deterministic pull
+//! toward a seeded per-node target vector (a stand-in for non-IID local
+//! objectives). Everything observable from the outside — round records,
+//! telemetry events, cancellation semantics, aggregated series — flows
+//! through exactly the machinery a real run uses.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::communication::shaper::NetworkModel;
+use crate::communication::{Envelope, MsgKind};
+use crate::config::ExperimentConfig;
+use crate::coordinator::{RunHooks, RunResult};
+use crate::graph::{from_spec, metropolis_hastings};
+use crate::kernels::Scratch;
+use crate::metrics::{aggregate, NodeLog, Record, Telemetry, TelemetryEvent};
+use crate::model::ParamVec;
+use crate::rng::{mix_seed, Xoshiro256pp};
+use crate::scheduler::{EventNode, NodeCtx, Scheduler, Wake};
+use crate::sharing::{self, Received, Sharing};
+use crate::store::Payload;
+use crate::util::Timer;
+
+/// Parameter dimension of the synthetic model.
+pub const SIM_DIM: usize = 1024;
+
+/// Virtual seconds one local "training" step takes.
+const SIM_STEP_S: f64 = 0.01;
+
+enum Phase {
+    /// Local step in progress: waiting on the step timer.
+    Training,
+    /// Broadcast staged: waiting for this round's neighbor models.
+    Gathering,
+    Done,
+}
+
+/// Synthetic D-PSGD state machine: same round skeleton as
+/// [`crate::scheduler::DlNodeSm`] (train, broadcast, gather, aggregate,
+/// eval) with the pool compute replaced by an inline update plus a
+/// virtual-time step timer.
+struct SimNodeSm {
+    id: usize,
+    rounds: u64,
+    eval_every: u64,
+    self_weight: f64,
+    neighbors: Vec<(usize, f64)>,
+    model: ParamVec,
+    /// This node's local objective (shared target + per-node offset).
+    target: Arc<[f32]>,
+    sharing: Box<dyn Sharing>,
+    scratch: Scratch,
+    pending: HashMap<(u64, usize), Payload>,
+    round: u64,
+    phase: Phase,
+    train_loss: f64,
+    wall: Timer,
+    log: Option<NodeLog>,
+}
+
+fn mse(a: &[f32], b: &[f32]) -> f64 {
+    let sum: f64 = a
+        .iter()
+        .zip(b.iter())
+        .map(|(x, y)| ((*x - *y) as f64) * ((*x - *y) as f64))
+        .sum();
+    sum / a.len().max(1) as f64
+}
+
+impl SimNodeSm {
+    /// Start a round: inline "training" (pull the model toward the local
+    /// target, pre-step distance is the train loss), then arm the step
+    /// timer that advances virtual time.
+    fn begin_round(&mut self, ctx: &mut NodeCtx) {
+        self.train_loss = mse(self.model.as_slice(), &self.target);
+        for (m, t) in self.model.as_mut_slice().iter_mut().zip(self.target.iter()) {
+            *m = 0.9 * *m + 0.1 * *t;
+        }
+        self.phase = Phase::Training;
+        ctx.set_timer(SIM_STEP_S);
+    }
+
+    /// Serialize once, send the shared payload to every neighbor.
+    fn broadcast(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let payload = self.sharing.outgoing_pooled(&self.model, self.round, &mut self.scratch)?;
+        ctx.note_serialized(payload.len());
+        for &(nbr, _) in &self.neighbors {
+            ctx.send(Envelope {
+                src: self.id,
+                dst: nbr,
+                round: self.round,
+                kind: MsgKind::Model,
+                sent_at_s: 0.0,
+                payload: payload.clone(),
+            });
+        }
+        self.phase = Phase::Gathering;
+        Ok(())
+    }
+
+    /// Aggregate and finish the round once every neighbor's model for
+    /// the current round has arrived; otherwise keep waiting.
+    fn try_aggregate(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let round = self.round;
+        let all_in = self.neighbors.iter().all(|&(n, _)| self.pending.contains_key(&(round, n)));
+        if !all_in {
+            return Ok(());
+        }
+        let msgs: Vec<(usize, f64, Payload)> = self
+            .neighbors
+            .iter()
+            .map(|&(n, w)| (n, w, self.pending.remove(&(round, n)).unwrap()))
+            .collect();
+        let received: Vec<Received> = msgs
+            .iter()
+            .map(|(src, w, payload)| Received {
+                src: *src,
+                weight: *w,
+                payload: payload.as_slice(),
+            })
+            .collect();
+        self.sharing.aggregate_with(
+            &mut self.model,
+            self.self_weight,
+            &received,
+            &mut self.scratch,
+        )?;
+        if (round + 1) % self.eval_every == 0 || round + 1 == self.rounds {
+            let test_loss = mse(self.model.as_slice(), &self.target);
+            let test_acc = 1.0 / (1.0 + test_loss);
+            let c = ctx.counters();
+            let record = Record {
+                round,
+                emu_time_s: ctx.now_s,
+                real_time_s: self.wall.elapsed().as_secs_f64(),
+                train_loss: self.train_loss,
+                test_loss,
+                test_acc,
+                bytes_sent: c.bytes_sent,
+                bytes_recv: c.bytes_recv,
+                msgs_sent: c.msgs_sent,
+                bytes_serialized: c.bytes_serialized,
+                late_msgs: 0,
+                dropped_msgs: 0,
+                mean_staleness_s: 0.0,
+                poisoned_mass_admitted: 0.0,
+                rejected_contribs: 0,
+                isolation_rate: 0.0,
+            };
+            if let Some(log) = &mut self.log {
+                log.push(record);
+            }
+        }
+        self.round += 1;
+        if self.round == self.rounds {
+            self.phase = Phase::Done;
+        } else {
+            self.begin_round(ctx);
+        }
+        Ok(())
+    }
+}
+
+impl EventNode for SimNodeSm {
+    fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        match wake {
+            Wake::Start => self.begin_round(ctx),
+            Wake::Timer(_) => {
+                if matches!(self.phase, Phase::Training) {
+                    self.broadcast(ctx)?;
+                    self.try_aggregate(ctx)?;
+                }
+            }
+            Wake::Message(env) => {
+                if matches!(env.kind, MsgKind::Model) && env.round >= self.round {
+                    self.pending.insert((env.round, env.src), env.payload);
+                }
+                if matches!(self.phase, Phase::Gathering) {
+                    self.try_aggregate(ctx)?;
+                }
+            }
+            Wake::ComputeDone(_) => bail!("sim nodes never submit pool jobs"),
+        }
+        Ok(())
+    }
+
+    fn done(&self) -> bool {
+        matches!(self.phase, Phase::Done)
+    }
+
+    fn take_log(&mut self) -> Option<NodeLog> {
+        self.log.take()
+    }
+
+    fn attach_telemetry(&mut self, sink: &Telemetry) {
+        if let Some(log) = &mut self.log {
+            log.set_sink(sink.clone());
+        }
+    }
+}
+
+/// Axes the sim driver does not model; reject them eagerly so a daemon
+/// submission fails at POST time, not mid-run.
+pub(crate) fn check_sim_support(cfg: &ExperimentConfig) -> Result<()> {
+    if cfg.mode != "dl" {
+        bail!("sim driver supports mode \"dl\" only (got {:?})", cfg.mode);
+    }
+    if cfg.runner != "scheduler" {
+        bail!("sim driver requires runner \"scheduler\" (got {:?})", cfg.runner);
+    }
+    if cfg.secure {
+        bail!("sim driver does not model secure aggregation");
+    }
+    if cfg.dynamic {
+        bail!("sim driver supports static topologies only");
+    }
+    if !cfg.byzantine.is_empty() {
+        bail!("sim driver does not model byzantine adversaries");
+    }
+    if !cfg.churn_trace.is_empty() || cfg.churn > 0.0 {
+        bail!("sim driver does not model churn");
+    }
+    if cfg.step_time != "uniform" {
+        bail!("sim driver supports step_time \"uniform\" only");
+    }
+    if !matches!(cfg.link_model.as_str(), "" | "uniform") {
+        bail!("sim driver supports link_model \"uniform\" only");
+    }
+    Ok(())
+}
+
+/// Run the synthetic experiment described by `cfg` — no artifacts
+/// needed. Honors the same [`RunHooks`] contract as
+/// [`crate::coordinator::run_experiment_with`]: the telemetry sink (when
+/// present) sees `run_started`, per-round, and `run_finished` events and
+/// is closed on every exit path; the cancel flag stops the run at a
+/// round boundary.
+pub fn run_sim(cfg: &ExperimentConfig, hooks: &RunHooks) -> Result<RunResult> {
+    let result = run_sim_inner(cfg, hooks);
+    if let Some(sink) = &hooks.telemetry {
+        if let Ok(r) = &result {
+            sink.emit(TelemetryEvent::RunFinished { cancelled: r.cancelled, wall_s: r.wall_s });
+        }
+        sink.close();
+    }
+    result
+}
+
+fn run_sim_inner(cfg: &ExperimentConfig, hooks: &RunHooks) -> Result<RunResult> {
+    cfg.validate()?;
+    check_sim_support(cfg)?;
+    let wall = Timer::start();
+
+    // Same topology stream as the real coordinator, so a sim run and a
+    // real run of one config share a graph.
+    let mut topo_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x7090]));
+    let graph = from_spec(&cfg.topology, cfg.nodes, &mut topo_rng)?;
+    let weights = metropolis_hastings(&graph);
+
+    // Shared target (the "true model") and common init.
+    let mut target_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x51A0]));
+    let target: Vec<f32> = (0..SIM_DIM).map(|_| target_rng.next_f32() * 2.0 - 1.0).collect();
+    let mut init_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, 0x1217]));
+    let init = ParamVec::random(SIM_DIM, 0.5, &mut init_rng);
+
+    let network = match cfg.network.as_str() {
+        "lan" => Some(NetworkModel::lan()),
+        "wan" => Some(NetworkModel::wan()),
+        _ => None,
+    };
+    let workers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    };
+    let mut sched = Scheduler::new(network, workers);
+    sched.set_control(hooks.control.clone());
+    if let Some(sink) = &hooks.telemetry {
+        sched.set_telemetry(sink.clone());
+        sink.emit(TelemetryEvent::RunStarted { nodes: cfg.nodes, rounds: cfg.rounds });
+    }
+
+    for id in 0..cfg.nodes {
+        // Per-node objective: the shared target plus a small seeded
+        // offset (the sim's stand-in for non-IID local data).
+        let mut node_rng = Xoshiro256pp::new(mix_seed(&[cfg.seed, id as u64, 0x0FF5]));
+        let local: Arc<[f32]> = target
+            .iter()
+            .map(|t| t + (node_rng.next_f32() - 0.5) * 0.2)
+            .collect::<Vec<f32>>()
+            .into();
+        let mut sharing =
+            sharing::from_spec(&cfg.sharing, SIM_DIM, mix_seed(&[cfg.seed, id as u64]))?;
+        sharing.set_init(&init);
+        sched.add_node(Box::new(SimNodeSm {
+            id,
+            rounds: cfg.rounds,
+            eval_every: cfg.eval_every,
+            self_weight: weights.self_weight(id),
+            neighbors: weights.neighbor_weights(id).collect(),
+            model: init.clone(),
+            target: local,
+            sharing,
+            scratch: Scratch::new(),
+            pending: HashMap::new(),
+            round: 0,
+            phase: Phase::Training,
+            train_loss: 0.0,
+            wall: Timer::start(),
+            log: Some(NodeLog::new(id)),
+        }));
+    }
+
+    sched.run()?;
+    let cancelled = sched.was_cancelled();
+    let mut logs = sched.take_logs();
+    logs.sort_by_key(|l| l.node);
+    let series = aggregate(&logs);
+    Ok(RunResult {
+        config: cfg.clone(),
+        logs,
+        series,
+        wall_s: wall.elapsed().as_secs_f64(),
+        param_count: SIM_DIM,
+        store: None,
+        cancelled,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::RunControl;
+
+    fn sim_cfg(nodes: usize, rounds: u64) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = "simtest".into();
+        cfg.nodes = nodes;
+        cfg.rounds = rounds;
+        cfg.eval_every = 2;
+        cfg.topology = "ring".into();
+        cfg.network = "none".into();
+        cfg.workers = 2;
+        // train_total only matters for the artifact path, but validate()
+        // still checks it against the node count.
+        cfg.train_total = nodes.max(2048);
+        cfg
+    }
+
+    #[test]
+    fn sim_run_is_deterministic_and_converges() {
+        let cfg = sim_cfg(8, 6);
+        let a = run_sim(&cfg, &RunHooks::default()).unwrap();
+        let b = run_sim(&cfg, &RunHooks::default()).unwrap();
+        assert_eq!(a.logs.len(), 8);
+        for (la, lb) in a.logs.iter().zip(b.logs.iter()) {
+            assert_eq!(la.records, lb.records);
+        }
+        // Eval rounds: 1, 3, 5 (eval_every = 2, last round 5 coincides).
+        let rounds: Vec<u64> = a.logs[0].records.iter().map(|r| r.round).collect();
+        assert_eq!(rounds, vec![1, 3, 5]);
+        // The consensus pull toward the target must reduce the loss.
+        let first = a.series.first().unwrap().test_loss.mean;
+        let last = a.series.last().unwrap().test_loss.mean;
+        assert!(last < first, "test loss {first} -> {last}");
+        assert!(!a.cancelled);
+    }
+
+    #[test]
+    fn sim_round_events_mirror_saved_records() {
+        let cfg = sim_cfg(4, 4);
+        let sink = Telemetry::new(1024);
+        let hooks = RunHooks { control: RunControl::new(), telemetry: Some(sink.clone()) };
+        let result = run_sim(&cfg, &hooks).unwrap();
+        assert!(sink.is_closed());
+        let (events, _) = sink.events_since(0);
+        let mut streamed: Vec<(usize, Record)> = events
+            .into_iter()
+            .filter_map(|(_, e)| match e {
+                TelemetryEvent::Round { node, record } => Some((node, record)),
+                _ => None,
+            })
+            .collect();
+        streamed.sort_by_key(|(node, r)| (*node, r.round));
+        let mut saved: Vec<(usize, Record)> = Vec::new();
+        for log in &result.logs {
+            for r in &log.records {
+                saved.push((log.node, r.clone()));
+            }
+        }
+        assert_eq!(streamed, saved);
+    }
+
+    #[test]
+    fn pre_cancelled_sim_run_stops_with_empty_logs() {
+        let cfg = sim_cfg(8, 1000);
+        let hooks = RunHooks::default();
+        hooks.control.cancel();
+        let result = run_sim(&cfg, &hooks).unwrap();
+        assert!(result.cancelled);
+        assert!(result.logs.iter().all(|l| l.records.is_empty()));
+    }
+
+    #[test]
+    fn unsupported_axes_are_rejected() {
+        let mut cfg = sim_cfg(4, 2);
+        cfg.mode = "async_dl".into();
+        assert!(run_sim(&cfg, &RunHooks::default()).is_err());
+        let mut cfg = sim_cfg(4, 2);
+        cfg.secure = true;
+        assert!(run_sim(&cfg, &RunHooks::default()).is_err());
+        let mut cfg = sim_cfg(4, 2);
+        cfg.dynamic = true;
+        assert!(run_sim(&cfg, &RunHooks::default()).is_err());
+    }
+}

@@ -280,6 +280,17 @@ pub struct StoreStats {
 }
 
 impl StoreStats {
+    /// Store kind this snapshot came from: `"paged"` when CoW paging is
+    /// on (`page_size > 0`), `"shared"` for the unpaged shard store.
+    /// Labels `store.jsonl` rows and telemetry store events.
+    pub fn kind(&self) -> &'static str {
+        if self.page_size > 0 {
+            "paged"
+        } else {
+            "shared"
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("nodes", Json::num(self.nodes as f64)),
@@ -307,12 +318,14 @@ pub struct StoreReport {
 
 impl StoreReport {
     /// Two JSONL lines (`phase: start | end`), written as `store.jsonl`
-    /// next to the per-node metric logs.
+    /// next to the per-node metric logs. Each row carries the store
+    /// `kind` (`shared` | `paged`) so consumers can label it.
     pub fn to_jsonl(&self) -> String {
         let line = |phase: &str, s: &StoreStats| {
             let mut j = s.to_json();
             if let Json::Obj(ref mut obj) = j {
                 obj.insert("phase".into(), Json::str(phase));
+                obj.insert("kind".into(), Json::str(s.kind()));
             }
             let mut out = j.dump();
             out.push('\n');
@@ -908,5 +921,10 @@ mod tests {
         assert_eq!(end.get("phase").as_str(), Some("end"));
         assert_eq!(end.get("live_shards").as_usize(), Some(1));
         assert_eq!(end.get("shared_bytes").as_usize(), Some(16));
+        // Accounting rows are labeled with the store kind.
+        assert_eq!(start.get("kind").as_str(), Some("shared"));
+        assert_eq!(end.get("kind").as_str(), Some("shared"));
+        let paged = ParamStore::with_base_paged(vec![0.0f32; 8].into(), 4);
+        assert_eq!(paged.stats().kind(), "paged");
     }
 }

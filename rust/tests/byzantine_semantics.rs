@@ -15,7 +15,7 @@ use std::collections::HashSet;
 
 use decentralize_rs::communication::{Envelope, MsgKind};
 use decentralize_rs::config::ExperimentConfig;
-use decentralize_rs::coordinator::{prepare, run_experiment, Runner, SchedulerRunner};
+use decentralize_rs::coordinator::{prepare, run_experiment, RunHooks, Runner, SchedulerRunner};
 use decentralize_rs::model::ParamVec;
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::runtime::EngineHandle;
@@ -562,7 +562,7 @@ fn byzantine_training_run_bit_identical_across_worker_counts() {
     let mut runs = Vec::new();
     for workers in [1usize, 4, 8] {
         let mut logs = SchedulerRunner { workers }
-            .run(&cfg, &engine, &setup)
+            .run(&cfg, &engine, &setup, &RunHooks::default())
             .expect("scheduler run")
             .logs;
         logs.sort_by_key(|l| l.node);

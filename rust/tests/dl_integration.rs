@@ -434,7 +434,7 @@ fn async_dl_bit_identical_across_worker_counts() {
     // One shared prepare() (so the calibrated step time is identical),
     // then the same experiment on 1 / 4 / 8 pool workers: every metric
     // except real wall-clock must match bit-for-bit.
-    use decentralize_rs::coordinator::{prepare, Runner, SchedulerRunner};
+    use decentralize_rs::coordinator::{prepare, RunHooks, Runner, SchedulerRunner};
     let Some(engine) = engine_or_skip(&["mlp"]) else { return };
     let mut cfg = small_cfg("it_async_workers");
     cfg.mode = "async_dl".into();
@@ -446,7 +446,7 @@ fn async_dl_bit_identical_across_worker_counts() {
     let setup = prepare(&cfg, &engine).unwrap();
     let mut runs = Vec::new();
     for workers in [1usize, 4, 8] {
-        let mut logs = SchedulerRunner { workers }.run(&cfg, &engine, &setup).unwrap().logs;
+        let mut logs = SchedulerRunner { workers }.run(&cfg, &engine, &setup, &RunHooks::default()).unwrap().logs;
         logs.sort_by_key(|l| l.node);
         runs.push(logs);
     }
@@ -588,7 +588,7 @@ fn shared_param_store_bit_identical_to_owned_across_workers() {
     // param_store = "shared" vs "owned", each across worker counts 1/4
     // (one shared prepare() so calibration is common), and the store
     // report shows registration cost O(1) in node count.
-    use decentralize_rs::coordinator::{prepare, Runner, SchedulerRunner};
+    use decentralize_rs::coordinator::{prepare, RunHooks, Runner, SchedulerRunner};
     let Some(engine) = engine_or_skip(&["mlp"]) else { return };
     let mut cfg = small_cfg("it_param_store");
     cfg.nodes = 128;
@@ -647,7 +647,7 @@ fn shared_param_store_threaded_runner_matches_scheduler() {
     // Shared mode is runner-agnostic: the threaded path over the same
     // prepare() agrees with the scheduler bit-for-bit, and its store
     // report carries the same peak shape (all nodes trained).
-    use decentralize_rs::coordinator::{prepare, Runner, SchedulerRunner, ThreadedRunner};
+    use decentralize_rs::coordinator::{prepare, RunHooks, Runner, SchedulerRunner, ThreadedRunner};
     let Some(engine) = engine_or_skip(&["mlp"]) else { return };
     let mut cfg = small_cfg("it_param_store_threads");
     cfg.nodes = 16;
@@ -657,8 +657,8 @@ fn shared_param_store_threaded_runner_matches_scheduler() {
     cfg.topology = "regular:4".into();
     cfg.param_store = "shared".into();
     let setup = prepare(&cfg, &engine).unwrap();
-    let sched = SchedulerRunner { workers: 4 }.run(&cfg, &engine, &setup).unwrap();
-    let threads = ThreadedRunner.run(&cfg, &engine, &setup).unwrap();
+    let sched = SchedulerRunner { workers: 4 }.run(&cfg, &engine, &setup, &RunHooks::default()).unwrap();
+    let threads = ThreadedRunner.run(&cfg, &engine, &setup, &RunHooks::default()).unwrap();
     let (mut ls, mut lt) = (sched.logs, threads.logs);
     ls.sort_by_key(|l| l.node);
     lt.sort_by_key(|l| l.node);

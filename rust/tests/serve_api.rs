@@ -1,0 +1,365 @@
+//! End-to-end tests for the `decentra serve` daemon: every request in
+//! here goes over a real TCP connection against an in-process
+//! [`Daemon`] bound to port 0, exercising the hand-rolled HTTP layer,
+//! the run queue, cooperative cancellation, SSE streaming, and the
+//! Prometheus endpoint together.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use decentralize_rs::metrics::NodeLog;
+use decentralize_rs::serve::{Daemon, ServeOptions};
+use decentralize_rs::util::json::{parse, Json};
+
+/// An in-process daemon plus the thread its accept loop runs on.
+struct TestDaemon {
+    addr: SocketAddr,
+    thread: std::thread::JoinHandle<anyhow::Result<()>>,
+}
+
+fn start_daemon() -> TestDaemon {
+    let opts = ServeOptions { addr: "127.0.0.1:0".into(), ..ServeOptions::default() };
+    let daemon = Daemon::bind(&opts).expect("bind daemon");
+    let addr = daemon.local_addr();
+    let thread = std::thread::spawn(move || daemon.run());
+    TestDaemon { addr, thread }
+}
+
+impl TestDaemon {
+    fn shutdown(self) {
+        let (code, _) = one_shot(self.addr, "POST", "/shutdown", "");
+        assert_eq!(code, 200);
+        self.thread.join().expect("daemon thread").expect("daemon run");
+    }
+}
+
+/// Read one `Content-Length`-framed HTTP response.
+fn read_response(stream: &mut TcpStream) -> (u16, String) {
+    let mut head = Vec::new();
+    let mut buf = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = head.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        let n = stream.read(&mut buf).expect("read response");
+        assert!(n > 0, "connection closed mid-response");
+        head.extend_from_slice(&buf[..n]);
+    };
+    let (header_bytes, rest) = head.split_at(header_end);
+    let rest = &rest[4..];
+    let text = std::str::from_utf8(header_bytes).expect("response headers are UTF-8");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    let mut content_length = 0usize;
+    for line in text.lines().skip(1) {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().expect("content-length");
+            }
+        }
+    }
+    let mut body = rest.to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut buf).expect("read body");
+        assert!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&buf[..n]);
+    }
+    body.truncate(content_length);
+    (status, String::from_utf8_lossy(&body).into_owned())
+}
+
+/// Connect, issue one request, return (status, body).
+fn one_shot(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).expect("write request");
+    read_response(&mut stream)
+}
+
+/// Poll `GET /runs/:id` until its status is one of `want`; panics after
+/// `timeout`. Returns the final status document.
+fn wait_for_status(addr: SocketAddr, id: u64, want: &[&str], timeout: Duration) -> Json {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let (code, body) = one_shot(addr, "GET", &format!("/runs/{id}"), "");
+        assert_eq!(code, 200, "GET /runs/{id}: {body}");
+        let doc = parse(&body).expect("status JSON");
+        let status = doc.get("status").as_str().unwrap_or("").to_string();
+        if want.contains(&status.as_str()) {
+            return doc;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "timed out waiting for status {want:?} on run {id} (last {status:?})"
+        );
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Open the SSE stream for a run and read raw bytes until `stop_at`
+/// appears (headers included in the returned text).
+fn read_sse_until(addr: SocketAddr, id: u64, stop_at: &str, timeout: Duration) -> String {
+    let deadline = Instant::now() + timeout;
+    let mut stream = TcpStream::connect(addr).expect("sse connect");
+    stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .expect("sse read timeout");
+    let req = format!("GET /runs/{id}/events HTTP/1.1\r\nHost: test\r\n\r\n");
+    stream.write_all(req.as_bytes()).expect("sse request");
+    let mut raw = Vec::new();
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        let text = String::from_utf8_lossy(&raw).into_owned();
+        if text.contains(stop_at) {
+            return text;
+        }
+        assert!(Instant::now() < deadline, "SSE stream never produced {stop_at:?}:\n{text}");
+        match stream.read(&mut buf) {
+            Ok(0) => return String::from_utf8_lossy(&raw).into_owned(),
+            Ok(n) => raw.extend_from_slice(&buf[..n]),
+            Err(_) => continue, // read timeout: re-check the deadline
+        }
+    }
+}
+
+/// Parse `(event, data)` pairs out of a raw SSE byte stream. Keepalive
+/// comments and the HTTP header block carry no `event:`/`data:` lines
+/// and fall out naturally.
+fn parse_sse(text: &str) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for frame in text.split("\n\n") {
+        let mut event = None;
+        let mut data = None;
+        for line in frame.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                event = Some(v.to_string());
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = Some(v.to_string());
+            }
+        }
+        if let (Some(e), Some(d)) = (event, data) {
+            out.push((e, d));
+        }
+    }
+    out
+}
+
+/// A minimal sim-driver config the daemon accepts.
+fn sim_config(name: &str, nodes: usize, rounds: u64, eval_every: u64, dir: &Path) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("nodes", Json::num(nodes as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("eval_every", Json::num(eval_every as f64)),
+        ("topology", Json::str("ring")),
+        ("network", Json::str("none")),
+        ("workers", Json::num(2.0)),
+        ("train_total", Json::num(nodes.max(2048) as f64)),
+        ("results_dir", Json::str(dir.display().to_string())),
+    ])
+}
+
+fn submit(addr: SocketAddr, body: &Json) -> u64 {
+    let (code, body) = one_shot(addr, "POST", "/runs", &body.dump());
+    assert_eq!(code, 201, "POST /runs: {body}");
+    let doc = parse(&body).expect("submit JSON");
+    assert_eq!(doc.get("status").as_str(), Some("queued"));
+    doc.get("id").as_f64().expect("run id") as u64
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("serve_api_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Tentpole acceptance: every `round` event streamed over SSE carries
+/// the same record — byte for byte — that the run later saves to
+/// `node_*.jsonl`, and the stream terminates with `run_finished` +
+/// `end` once the ring closes.
+#[test]
+fn sse_round_events_match_saved_records_bit_for_bit() {
+    let dir = temp_dir("sse");
+    let daemon = start_daemon();
+    let cfg = sim_config("sse_bitforbit", 4, 6, 2, &dir);
+    // Bare config: the daemon defaults to the sim driver.
+    let id = submit(daemon.addr, &cfg);
+
+    let text = read_sse_until(daemon.addr, id, "event: end", Duration::from_secs(120));
+    let frames = parse_sse(&text);
+    assert_eq!(frames.first().map(|(e, _)| e.as_str()), Some("run_started"));
+    let started = parse(&frames[0].1).expect("run_started data");
+    assert_eq!(started.get("nodes").as_usize(), Some(4));
+    assert_eq!(started.get("rounds").as_usize(), Some(6));
+    let finished: Vec<_> = frames.iter().filter(|(e, _)| e == "run_finished").collect();
+    assert_eq!(finished.len(), 1);
+    let fin = parse(&finished[0].1).expect("run_finished data");
+    assert_eq!(fin.get("cancelled").as_bool(), Some(false));
+    assert_eq!(frames.last().map(|(e, _)| e.as_str()), Some("end"));
+
+    // Group the streamed round payloads per node, preserving order.
+    let mut streamed = std::collections::BTreeMap::<usize, Vec<String>>::new();
+    for (event, data) in &frames {
+        if event == "round" {
+            let doc = parse(data).expect("round data");
+            let node = doc.get("node").as_usize().expect("round node id");
+            streamed.entry(node).or_default().push(doc.get("record").dump());
+        }
+    }
+    // 4 nodes x eval rounds {1, 3, 5}.
+    assert_eq!(streamed.len(), 4);
+    assert!(streamed.values().all(|v| v.len() == 3), "{streamed:?}");
+
+    // The executor saves after the ring closes; wait for it to land.
+    let doc = wait_for_status(daemon.addr, id, &["done"], Duration::from_secs(120));
+    let results = PathBuf::from(doc.get("results_dir").as_str().expect("results_dir"));
+    let logs = NodeLog::load_dir(&results).expect("saved node logs");
+    assert_eq!(logs.len(), 4);
+    for log in &logs {
+        let saved: Vec<String> = log.records.iter().map(|r| r.to_json().dump()).collect();
+        assert_eq!(
+            streamed.get(&log.node),
+            Some(&saved),
+            "node {} streamed records differ from node_{:04}.jsonl",
+            log.node,
+            log.node
+        );
+    }
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Tentpole acceptance: DELETE on a running 1024-node fleet sets the
+/// cooperative cancel flag, the scheduler stops at a round boundary,
+/// and the partial logs it saves hold only complete eval-round records.
+#[test]
+fn cancelled_1024_node_run_stops_at_round_boundary() {
+    let dir = temp_dir("cancel");
+    let daemon = start_daemon();
+    let rounds = 10_000u64;
+    let cfg = sim_config("cancelme", 1024, rounds, 5, &dir);
+    let envelope = Json::obj(vec![("driver", Json::str("sim")), ("config", cfg)]);
+    let id = submit(daemon.addr, &envelope);
+
+    // Wait for live round telemetry so the cancel lands mid-run.
+    let text = read_sse_until(daemon.addr, id, "event: round", Duration::from_secs(300));
+    assert!(text.contains("event: run_started"));
+
+    let (code, body) = one_shot(daemon.addr, "DELETE", &format!("/runs/{id}"), "");
+    assert_eq!(code, 200, "DELETE /runs/{id}: {body}");
+    let ack = parse(&body).expect("cancel ack");
+    assert_eq!(ack.get("cancel_requested").as_bool(), Some(true));
+
+    let doc = wait_for_status(daemon.addr, id, &["cancelled"], Duration::from_secs(300));
+    assert!(doc.get("rounds_streamed").as_f64().unwrap_or(0.0) >= 1.0);
+
+    // The partial results are saved like any finished run's, and every
+    // record sits on an eval boundary: nothing mid-round leaks out.
+    let results = PathBuf::from(doc.get("results_dir").as_str().expect("results_dir"));
+    let logs = NodeLog::load_dir(&results).expect("saved node logs");
+    assert_eq!(logs.len(), 1024);
+    let mut max_round = 0u64;
+    let mut records = 0usize;
+    for log in &logs {
+        for r in &log.records {
+            assert!(
+                (r.round + 1) % 5 == 0 || r.round + 1 == rounds,
+                "node {} saved a non-boundary round {}",
+                log.node,
+                r.round
+            );
+            max_round = max_round.max(r.round);
+            records += 1;
+        }
+    }
+    assert!(records >= 1, "cancelled run saved no records at all");
+    assert!(max_round < rounds - 1, "run was not actually cut short (max round {max_round})");
+
+    // A second DELETE is a conflict: the run already finished.
+    let (code, _) = one_shot(daemon.addr, "DELETE", &format!("/runs/{id}"), "");
+    assert_eq!(code, 409);
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Routing, validation, queue semantics, and the metrics endpoint.
+#[test]
+fn http_api_end_to_end() {
+    let dir = temp_dir("e2e");
+    let daemon = start_daemon();
+    let addr = daemon.addr;
+
+    let (code, body) = one_shot(addr, "GET", "/healthz", "");
+    assert_eq!((code, body.as_str()), (200, "ok\n"));
+    let (code, _) = one_shot(addr, "GET", "/nope", "");
+    assert_eq!(code, 404);
+    let (code, _) = one_shot(addr, "PUT", "/runs", "");
+    assert_eq!(code, 405);
+    let (code, _) = one_shot(addr, "GET", "/runs/notanumber", "");
+    assert_eq!(code, 404);
+    let (code, _) = one_shot(addr, "GET", "/runs/999", "");
+    assert_eq!(code, 404);
+
+    let (code, body) = one_shot(addr, "POST", "/runs", "{not json");
+    assert_eq!(code, 400, "{body}");
+    let bogus = Json::obj(vec![
+        ("driver", Json::str("bogus")),
+        ("config", sim_config("x", 4, 4, 2, &dir)),
+    ]);
+    let (code, body) = one_shot(addr, "POST", "/runs", &bogus.dump());
+    assert_eq!(code, 400, "{body}");
+    // Valid config, but an axis the sim driver rejects at submit time.
+    let mut async_cfg = sim_config("x", 4, 4, 2, &dir);
+    if let Json::Obj(m) = &mut async_cfg {
+        m.insert("mode".into(), Json::str("async_dl"));
+    }
+    let (code, body) = one_shot(addr, "POST", "/runs", &async_cfg.dump());
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("sim driver"), "{body}");
+
+    // Run A occupies the executor; run B stays queued behind it and
+    // cancels instantly (its SSE stream just ends).
+    let a = submit(addr, &sim_config("e2e_a", 64, 100_000, 5, &dir));
+    let b = submit(addr, &sim_config("e2e_b", 64, 100_000, 5, &dir));
+    wait_for_status(addr, a, &["running"], Duration::from_secs(120));
+    let (code, body) = one_shot(addr, "GET", "/runs", "");
+    assert_eq!(code, 200);
+    let listing = parse(&body).expect("listing JSON");
+    let runs = match listing.get("runs") {
+        Json::Arr(rows) => rows.clone(),
+        other => panic!("runs is not an array: {other:?}"),
+    };
+    assert!(runs.len() >= 2);
+
+    let (code, body) = one_shot(addr, "DELETE", &format!("/runs/{b}"), "");
+    assert_eq!(code, 200, "{body}");
+    let doc = parse(&body).expect("queued-cancel JSON");
+    assert_eq!(doc.get("status").as_str(), Some("cancelled"));
+    let text = read_sse_until(addr, b, "event: end", Duration::from_secs(60));
+    assert!(!text.contains("event: round"), "queued run streamed rounds:\n{text}");
+
+    let (code, _) = one_shot(addr, "DELETE", &format!("/runs/{a}"), "");
+    assert_eq!(code, 200);
+    wait_for_status(addr, a, &["cancelled"], Duration::from_secs(300));
+
+    let (code, body) = one_shot(addr, "GET", "/metrics", "");
+    assert_eq!(code, 200);
+    assert!(body.contains("decentra_http_requests_total"), "{body}");
+    assert!(body.contains("decentra_runs_submitted_total"), "{body}");
+    assert!(body.contains("decentra_runs_cancelled_total"), "{body}");
+    assert!(body.contains("decentra_http_request_seconds"), "{body}");
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
