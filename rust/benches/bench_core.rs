@@ -115,6 +115,7 @@ fn main() {
             round: 3,
             kind: MsgKind::Model,
             sent_at_s: 0.0,
+            trace: 0,
             payload: vec![7u8; P * 4].into(),
         };
         let bytes = encode_envelope(&env);

@@ -75,6 +75,7 @@ impl MemNode {
                 round: self.round,
                 kind: MsgKind::Model,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: payload.clone(),
             });
         }

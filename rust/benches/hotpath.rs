@@ -12,7 +12,9 @@
 //!    float codec.
 //! 3. **Scheduler round rate**: a 1024-node regular:6 gossip fleet of
 //!    pure message-driven state machines (no engine), measuring
-//!    node-rounds/s through the virtual-time scheduler.
+//!    node-rounds/s through the virtual-time scheduler — once
+//!    untraced and once with span tracing at `sample:0.01`, so the
+//!    tracing overhead is a ratcheted number of its own.
 //!
 //! Quick mode (CI): `cargo bench --bench hotpath -- --quick` or
 //! `HOTPATH_QUICK=1` — smaller dim, fewer nodes, shorter budgets; the
@@ -40,6 +42,7 @@ use decentralize_rs::model::ParamVec;
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::scheduler::{EventNode, NodeCtx, Scheduler, Wake};
 use decentralize_rs::sharing::{self, Received, Sharing};
+use decentralize_rs::trace::{TraceMode, TraceRecorder};
 use decentralize_rs::util::json::{parse, Json};
 
 const NEIGHBORS: usize = 6;
@@ -119,6 +122,7 @@ impl GossipSm {
                 round: self.round,
                 kind: MsgKind::Model,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: payload.clone(),
             });
         }
@@ -320,48 +324,68 @@ fn main() {
         }
     }
 
-    // --- 3. scheduler round rate: pure-gossip fleet, no engine ---
+    // --- 3. scheduler round rate: pure-gossip fleet, no engine. Run
+    //        untraced, then with span tracing at sample:0.01 — the
+    //        overhead of the tracing hooks is itself a ratcheted number.
     {
         let sched_dim = 1024usize;
-        let mut rng = Xoshiro256pp::new(42);
-        let g = graph::random_regular(sched_nodes, NEIGHBORS, &mut rng).unwrap();
-        let mw = graph::metropolis_hastings(&g);
-        let mut sched = Scheduler::new(None, 1);
-        for id in 0..sched_nodes {
-            let neighbors: Vec<(usize, f64)> = mw.neighbor_weights(id).collect();
-            sched.add_node(Box::new(GossipSm {
-                id,
-                rounds: sched_rounds,
-                round: 0,
-                self_weight: mw.self_weight(id),
-                neighbors,
-                sharing: sharing::from_spec("full", sched_dim, id as u64).unwrap(),
-                model: rand_model(sched_dim, 77 + id as u64),
-                pending: HashMap::new(),
-                scratch: Scratch::new(),
-            }));
-        }
-        let t = std::time::Instant::now();
-        sched.run().unwrap();
-        let elapsed = t.elapsed().as_secs_f64();
+        let run_fleet = |tracer: Option<TraceRecorder>| -> f64 {
+            let mut rng = Xoshiro256pp::new(42);
+            let g = graph::random_regular(sched_nodes, NEIGHBORS, &mut rng).unwrap();
+            let mw = graph::metropolis_hastings(&g);
+            let mut sched = Scheduler::new(None, 1);
+            for id in 0..sched_nodes {
+                let neighbors: Vec<(usize, f64)> = mw.neighbor_weights(id).collect();
+                sched.add_node(Box::new(GossipSm {
+                    id,
+                    rounds: sched_rounds,
+                    round: 0,
+                    self_weight: mw.self_weight(id),
+                    neighbors,
+                    sharing: sharing::from_spec("full", sched_dim, id as u64).unwrap(),
+                    model: rand_model(sched_dim, 77 + id as u64),
+                    pending: HashMap::new(),
+                    scratch: Scratch::new(),
+                }));
+            }
+            if let Some(rec) = tracer {
+                sched.set_tracer(rec);
+            }
+            let t = std::time::Instant::now();
+            sched.run().unwrap();
+            t.elapsed().as_secs_f64()
+        };
         let node_rounds = (sched_nodes as u64 * sched_rounds) as f64;
-        println!(
-            "scheduler/round_rate: {sched_nodes} nodes x {sched_rounds} rounds in {elapsed:.3}s \
-             = {:.0} node-rounds/s",
-            node_rounds / elapsed
-        );
-        rows.push(Json::obj(vec![
-            ("figure", Json::str("hotpath")),
-            ("bench", Json::str("scheduler/round_rate")),
-            ("mode", Json::str("kernel")),
-            ("dim", Json::num(sched_dim as f64)),
-            ("nodes", Json::num(sched_nodes as f64)),
-            ("rounds", Json::num(sched_rounds as f64)),
-            ("wall_s", Json::num(elapsed)),
-            ("throughput", Json::num(node_rounds / elapsed)),
-            ("throughput_unit", Json::str("node_rounds_per_s")),
-            ("quick", Json::Bool(quick)),
-        ]));
+        let mut untraced_s = f64::NAN;
+        let sampled = TraceRecorder::new(TraceMode::Sample(0.01));
+        for (mode, tracer) in [("kernel", None), ("trace:sample:0.01", Some(sampled))] {
+            let elapsed = run_fleet(tracer);
+            println!(
+                "scheduler/round_rate [{mode}]: {sched_nodes} nodes x {sched_rounds} rounds \
+                 in {elapsed:.3}s = {:.0} node-rounds/s",
+                node_rounds / elapsed
+            );
+            rows.push(Json::obj(vec![
+                ("figure", Json::str("hotpath")),
+                ("bench", Json::str("scheduler/round_rate")),
+                ("mode", Json::str(mode)),
+                ("dim", Json::num(sched_dim as f64)),
+                ("nodes", Json::num(sched_nodes as f64)),
+                ("rounds", Json::num(sched_rounds as f64)),
+                ("wall_s", Json::num(elapsed)),
+                ("throughput", Json::num(node_rounds / elapsed)),
+                ("throughput_unit", Json::str("node_rounds_per_s")),
+                ("quick", Json::Bool(quick)),
+            ]));
+            if mode == "kernel" {
+                untraced_s = elapsed;
+            } else {
+                println!(
+                    "scheduler/trace_overhead: sample:0.01 runs at {:.3}x untraced wall time",
+                    elapsed / untraced_s
+                );
+            }
+        }
     }
 
     // Tag this run's rows and append them to the committed history so

@@ -153,6 +153,7 @@ mod tests {
             round,
             kind: MsgKind::Model,
             sent_at_s: 0.0,
+            trace: 0,
             payload: vec![0; 10].into(),
         }
     }
@@ -222,6 +223,7 @@ mod tests {
                 round: 0,
                 kind: MsgKind::Model,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: payload.clone(),
             })
             .unwrap();

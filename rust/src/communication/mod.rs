@@ -89,6 +89,10 @@ pub struct Envelope {
     /// Receivers use it to compute a message's *staleness* (its age at
     /// aggregation time) for asynchronous gossip.
     pub sent_at_s: f64,
+    /// Trace id correlating this hop's send and delivery into one causal
+    /// flow edge ([`crate::trace`]). Stamped by the scheduler when the
+    /// send is staged on a sampled round; `0` means untraced.
+    pub trace: u64,
     /// Shared immutable bytes: cloning an envelope (or fanning one
     /// payload out to many destinations) never copies the payload.
     pub payload: Payload,

@@ -296,6 +296,7 @@ mod tests {
             round,
             kind: MsgKind::Model,
             sent_at_s: 0.25,
+            trace: 0,
             payload: vec![7; len].into(),
         }
     }
@@ -342,6 +343,7 @@ mod tests {
                     round: 1,
                     kind: MsgKind::Model,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: payload.clone(),
                 })
                 .unwrap();

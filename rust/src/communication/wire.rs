@@ -3,12 +3,13 @@
 //! Frame layout (little-endian):
 //! ```text
 //! magic   u16  0xDC17
-//! version u8   2
+//! version u8   3
 //! kind    u8
 //! src     u32
 //! dst     u32
 //! round   u64
 //! sent_at f64  sender's virtual send time in seconds (bit pattern)
+//! trace   u64  flow id correlating send and delivery (0 = untraced)
 //! len     u32  payload byte length
 //! payload [u8; len]
 //! ```
@@ -18,15 +19,18 @@
 //! Version 2 added the `sent_at` virtual timestamp: asynchronous gossip
 //! weights a received model by its *age*, so the send instant must ride
 //! with the message rather than being reconstructed at the receiver.
+//! Version 3 added the `trace` flow id ([`crate::trace`]): a gossip
+//! hop's send and delivery are paired into one causal flow edge, so the
+//! correlation key must survive the wire like `sent_at` does.
 
 use anyhow::{bail, Result};
 
 use super::{Envelope, MsgKind};
 
 pub const WIRE_MAGIC: u16 = 0xDC17;
-pub const WIRE_VERSION: u8 = 2;
+pub const WIRE_VERSION: u8 = 3;
 /// Fixed header size in bytes.
-pub const WIRE_HEADER_BYTES: usize = 2 + 1 + 1 + 4 + 4 + 8 + 8 + 4;
+pub const WIRE_HEADER_BYTES: usize = 2 + 1 + 1 + 4 + 4 + 8 + 8 + 8 + 4;
 
 /// Total wire bytes for an envelope.
 pub fn wire_size(env: &Envelope) -> usize {
@@ -47,7 +51,8 @@ pub fn encode_envelope_header(env: &Envelope) -> [u8; WIRE_HEADER_BYTES] {
     out[8..12].copy_from_slice(&(env.dst as u32).to_le_bytes());
     out[12..20].copy_from_slice(&env.round.to_le_bytes());
     out[20..28].copy_from_slice(&env.sent_at_s.to_le_bytes());
-    out[28..32].copy_from_slice(&(env.payload.len() as u32).to_le_bytes());
+    out[28..36].copy_from_slice(&env.trace.to_le_bytes());
+    out[36..40].copy_from_slice(&(env.payload.len() as u32).to_le_bytes());
     out
 }
 
@@ -77,7 +82,8 @@ pub fn decode_envelope(bytes: &[u8]) -> Result<Envelope> {
     let dst = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
     let round = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
     let sent_at_s = f64::from_le_bytes(bytes[20..28].try_into().unwrap());
-    let len = u32::from_le_bytes(bytes[28..32].try_into().unwrap()) as usize;
+    let trace = u64::from_le_bytes(bytes[28..36].try_into().unwrap());
+    let len = u32::from_le_bytes(bytes[36..40].try_into().unwrap()) as usize;
     if bytes.len() != WIRE_HEADER_BYTES + len {
         bail!(
             "frame length mismatch: header says {}, have {}",
@@ -91,6 +97,7 @@ pub fn decode_envelope(bytes: &[u8]) -> Result<Envelope> {
         round,
         kind,
         sent_at_s,
+        trace,
         payload: crate::store::Payload::from(&bytes[WIRE_HEADER_BYTES..]),
     })
 }
@@ -106,6 +113,7 @@ mod tests {
             round: 12345,
             kind: MsgKind::Model,
             sent_at_s: 1.25,
+            trace: 9001,
             payload: vec![1, 2, 3, 4, 5].into(),
         }
     }

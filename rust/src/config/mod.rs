@@ -111,6 +111,9 @@ pub struct ExperimentConfig {
     /// Page size in *elements* (f32 lanes) for `param_store: "paged"`;
     /// ignored by the other modes. Must be > 0.
     pub page_size: usize,
+    /// Dual-clock span tracing: `off` | `sample:<rate>` | `full`.
+    /// Scheduler runner only. See [`crate::trace`].
+    pub trace: String,
     pub artifacts_dir: PathBuf,
     pub results_dir: PathBuf,
 }
@@ -151,6 +154,7 @@ impl Default for ExperimentConfig {
             workers: 0,
             param_store: "owned".into(),
             page_size: 1024,
+            trace: "off".into(),
             artifacts_dir: PathBuf::from("artifacts"),
             results_dir: PathBuf::from("results"),
         }
@@ -168,7 +172,8 @@ impl ExperimentConfig {
             "partition", "topology", "dynamic", "sharing", "mode", "deadline", "staleness",
             "late", "secure", "mask_scale", "churn",
             "churn_trace", "byzantine", "lr", "local_steps", "network", "step_time", "link_model",
-            "runner", "workers", "param_store", "page_size", "artifacts_dir", "results_dir",
+            "runner", "workers", "param_store", "page_size", "trace",
+            "artifacts_dir", "results_dir",
         ];
         for k in obj.keys() {
             if !KNOWN.contains(&k.as_str()) {
@@ -215,6 +220,7 @@ impl ExperimentConfig {
             workers: n("workers", d.workers),
             param_store: s("param_store", &d.param_store),
             page_size: n("page_size", d.page_size),
+            trace: s("trace", &d.trace),
             artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
             results_dir: PathBuf::from(s("results_dir", "results")),
         };
@@ -264,6 +270,7 @@ impl ExperimentConfig {
             ("workers", Json::num(self.workers as f64)),
             ("param_store", Json::str(self.param_store.clone())),
             ("page_size", Json::num(self.page_size as f64)),
+            ("trace", Json::str(self.trace.clone())),
             ("artifacts_dir", Json::str(self.artifacts_dir.display().to_string())),
             ("results_dir", Json::str(self.results_dir.display().to_string())),
         ])
@@ -386,6 +393,13 @@ impl ExperimentConfig {
         }
         if self.page_size == 0 {
             bail!("page_size must be > 0 (elements per page)");
+        }
+        let trace_mode = crate::trace::TraceMode::parse(&self.trace)
+            .with_context(|| format!("invalid trace {:?}", self.trace))?;
+        if trace_mode != crate::trace::TraceMode::Off && self.runner != "scheduler" {
+            // Spans hang off the virtual-time event loop; the threaded
+            // runner has no scheduler to instrument.
+            bail!("trace {:?} requires runner \"scheduler\"", self.trace);
         }
         if self.secure && self.dynamic {
             bail!("secure aggregation supports static topologies only");
@@ -535,6 +549,24 @@ mod tests {
         cfg = ExperimentConfig::default();
         cfg.churn_trace = "crashes:0.2:10".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn trace_modes_validate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.trace = "full".into();
+        cfg.validate().unwrap();
+        cfg.trace = "sample:0.01".into();
+        cfg.validate().unwrap();
+        cfg.trace = "sample:2".into();
+        assert!(cfg.validate().is_err()); // rate out of (0, 1]
+        cfg.trace = "verbose".into();
+        assert!(cfg.validate().is_err()); // unknown mode
+        cfg.trace = "full".into();
+        cfg.runner = "threads".into();
+        assert!(cfg.validate().is_err()); // scheduler-only
+        cfg.trace = "off".into();
+        cfg.validate().unwrap(); // off composes with any runner
     }
 
     #[test]

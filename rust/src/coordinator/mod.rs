@@ -247,6 +247,9 @@ pub struct RunHooks {
     pub control: RunControl,
     /// Live sink for round/store events ([`TelemetryEvent`]).
     pub telemetry: Option<Telemetry>,
+    /// Span recorder for dual-clock tracing ([`crate::trace`]). Only the
+    /// scheduler runner honors it; a recorder in mode `off` is ignored.
+    pub trace: Option<crate::trace::TraceRecorder>,
 }
 
 impl RunHooks {
@@ -434,6 +437,9 @@ impl Runner for SchedulerRunner {
         let init_pv = ParamVec::from_vec(setup.init.to_vec());
         let mut sched = Scheduler::with_links(setup.scenario.links.clone(), workers);
         sched.set_control(hooks.control.clone());
+        if let Some(tr) = &hooks.trace {
+            sched.set_tracer(tr.clone());
+        }
         if let Some(sink) = &hooks.telemetry {
             sched.set_telemetry(sink.clone());
         }

@@ -47,5 +47,6 @@ pub mod secure;
 pub mod serve;
 pub mod sharing;
 pub mod store;
+pub mod trace;
 pub mod training;
 pub mod util;

@@ -13,11 +13,12 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use decentralize_rs::config::ExperimentConfig;
-use decentralize_rs::coordinator::run_experiment;
+use decentralize_rs::coordinator::{run_experiment_with, RunHooks};
 use decentralize_rs::graph;
 use decentralize_rs::metrics::{aggregate, render_series, NodeLog};
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::runtime::EngineHandle;
+use decentralize_rs::trace::{TraceMode, TraceRecorder};
 use decentralize_rs::util::args::{usage, Args, OptSpec};
 use decentralize_rs::util::logger;
 use decentralize_rs::{log_info, util};
@@ -84,6 +85,8 @@ fn print_usage() {
                 opt("workers", "scheduler worker threads (0 = cores)", Some("0")),
                 opt("param-store", "model-state ownership: owned | shared (CoW shards + zero-copy broadcast) | paged (per-page CoW + interning)", Some("owned")),
                 opt("page-size", "elements per CoW page (paged store only)", Some("1024")),
+                opt("trace", "span tracing: off | sample:<rate> | full (run mode)", Some("off")),
+                opt("trace-out", "trace + folded output path (run mode)", Some("trace.json")),
                 opt("scenario", "scenario overlay JSON: step_time/link_model/churn_trace/network/churn", None),
                 opt("step-time-trace", "per-node compute: uniform | stragglers:<f>:<x> | lognormal:<s> | trace:<path>", Some("uniform")),
                 opt("link-model", "per-link delays: uniform | geo:<clusters> | matrix:<path>", Some("uniform")),
@@ -152,6 +155,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     }
     if let Some(p) = args.get("page-size") {
         cfg.page_size = p.parse().context("--page-size")?;
+    }
+    if let Some(t) = args.get("trace") {
+        cfg.trace = t.to_string();
     }
     if let Some(s) = args.get("step-time-trace") {
         cfg.step_time = s.to_string();
@@ -250,7 +256,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         if cfg.mode == "async_dl" { " + async gossip" } else { "" },
         cfg.runner);
     let engine = EngineHandle::start(&cfg.artifacts_dir, &[cfg.model.as_str()])?;
-    let result = run_experiment(&cfg, &engine)?;
+    // `validate` vetted the spec, so parse cannot fail here.
+    let trace = match TraceMode::parse(&cfg.trace)? {
+        TraceMode::Off => None,
+        mode => Some(TraceRecorder::new(mode)),
+    };
+    let hooks = RunHooks { trace: trace.clone(), ..RunHooks::default() };
+    let result = run_experiment_with(&cfg, &engine, &hooks)?;
     print!("{}", render_series(&cfg.name, &result.series));
     println!(
         "final: acc {:.4}  bytes/node {}  emu {:.1}s  wall {:.1}s",
@@ -275,6 +287,23 @@ fn cmd_run(args: &Args) -> Result<()> {
                 util::human_bytes(report.at_end.page_bytes),
             );
         }
+    }
+    if let Some(tr) = &trace {
+        let out = PathBuf::from(args.get_or("trace-out", "trace.json"));
+        let snap = tr.snapshot();
+        std::fs::write(&out, snap.to_chrome_json())
+            .with_context(|| format!("writing {}", out.display()))?;
+        let folded = out.with_extension("folded");
+        std::fs::write(&folded, snap.to_folded())
+            .with_context(|| format!("writing {}", folded.display()))?;
+        log_info!(
+            "run",
+            "trace: {} spans ({} dropped) -> {} and {}",
+            snap.spans.len(),
+            snap.dropped_spans,
+            out.display(),
+            folded.display()
+        );
     }
     if args.flag("save") {
         let dir = result.save()?;

@@ -219,6 +219,12 @@ impl Telemetry {
     pub fn next_seq(&self) -> u64 {
         self.inner.ring.lock().unwrap().next_seq
     }
+
+    /// Events currently buffered in the ring (the live queue depth,
+    /// bounded by the capacity).
+    pub fn buffered_events(&self) -> u64 {
+        self.inner.ring.lock().unwrap().events.len() as u64
+    }
 }
 
 /// Default latency buckets for [`Registry::observe`] (seconds).
@@ -266,10 +272,23 @@ impl Registry {
     /// Observe one sample into a histogram (created on first use with
     /// the default latency buckets).
     pub fn observe(&self, name: &str, v: f64) {
+        self.observe_with(name, "", &LATENCY_BUCKETS, v);
+    }
+
+    /// Observe one sample into a labeled histogram with explicit
+    /// buckets (created on first use). `labels` is the inner label list
+    /// without braces (e.g. `phase="train"`); empty means unlabeled.
+    /// Every series of one family must use the same buckets.
+    pub fn observe_with(&self, name: &str, labels: &str, buckets: &[f64], v: f64) {
+        let key = if labels.is_empty() {
+            name.to_string()
+        } else {
+            format!("{name}{{{labels}}}")
+        };
         let mut m = self.metrics.lock().unwrap();
-        let metric = m.entry(name.to_string()).or_insert(Metric::Histogram {
-            buckets: LATENCY_BUCKETS.to_vec(),
-            counts: vec![0; LATENCY_BUCKETS.len()],
+        let metric = m.entry(key).or_insert(Metric::Histogram {
+            buckets: buckets.to_vec(),
+            counts: vec![0; buckets.len()],
             sum: 0.0,
             count: 0,
         });
@@ -291,22 +310,42 @@ impl Registry {
     pub fn render(&self) -> String {
         let m = self.metrics.lock().unwrap();
         let mut out = String::new();
-        for (name, metric) in m.iter() {
+        // Labeled histogram series are keyed `family{labels}`; the
+        // BTreeMap keeps one family's series adjacent, so one TYPE line
+        // per family suffices.
+        let mut last_family: Option<String> = None;
+        for (key, metric) in m.iter() {
             match metric {
                 Metric::Counter(v) => {
-                    out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+                    out.push_str(&format!("# TYPE {key} counter\n{key} {v}\n"));
                 }
                 Metric::Gauge(v) => {
-                    out.push_str(&format!("# TYPE {name} gauge\n{name} {v}\n"));
+                    out.push_str(&format!("# TYPE {key} gauge\n{key} {v}\n"));
                 }
                 Metric::Histogram { buckets, counts, sum, count } => {
-                    out.push_str(&format!("# TYPE {name} histogram\n"));
-                    for (le, c) in buckets.iter().zip(counts.iter()) {
-                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {c}\n"));
+                    let (family, labels) = match key.split_once('{') {
+                        Some((f, rest)) => (f, rest.trim_end_matches('}')),
+                        None => (key.as_str(), ""),
+                    };
+                    if last_family.as_deref() != Some(family) {
+                        out.push_str(&format!("# TYPE {family} histogram\n"));
+                        last_family = Some(family.to_string());
                     }
-                    out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {count}\n"));
-                    out.push_str(&format!("{name}_sum {sum}\n"));
-                    out.push_str(&format!("{name}_count {count}\n"));
+                    let sep = if labels.is_empty() { "" } else { "," };
+                    for (le, c) in buckets.iter().zip(counts.iter()) {
+                        out.push_str(&format!(
+                            "{family}_bucket{{{labels}{sep}le=\"{le}\"}} {c}\n"
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{family}_bucket{{{labels}{sep}le=\"+Inf\"}} {count}\n"
+                    ));
+                    if labels.is_empty() {
+                        out.push_str(&format!("{family}_sum {sum}\n{family}_count {count}\n"));
+                    } else {
+                        out.push_str(&format!("{family}_sum{{{labels}}} {sum}\n"));
+                        out.push_str(&format!("{family}_count{{{labels}}} {count}\n"));
+                    }
                 }
             }
         }
@@ -412,6 +451,36 @@ mod tests {
         };
         assert_eq!(ev.to_json().get("record").dump(), want);
         assert_eq!(ev.to_json().get("node").as_usize(), Some(3));
+    }
+
+    #[test]
+    fn buffered_events_tracks_ring_depth() {
+        let t = Telemetry::new(2);
+        assert_eq!(t.buffered_events(), 0);
+        t.emit(round_ev(0, 0));
+        assert_eq!(t.buffered_events(), 1);
+        for i in 0..5 {
+            t.emit(round_ev(i, 0));
+        }
+        // Bounded by the capacity even after evictions.
+        assert_eq!(t.buffered_events(), 2);
+        assert_eq!(t.dropped_events(), 4);
+    }
+
+    #[test]
+    fn labeled_histograms_share_one_type_line() {
+        let r = Registry::new();
+        let buckets = [0.1, 1.0];
+        r.observe_with("phase_seconds", "phase=\"train\"", &buckets, 0.05);
+        r.observe_with("phase_seconds", "phase=\"train\"", &buckets, 0.5);
+        r.observe_with("phase_seconds", "phase=\"aggregate\"", &buckets, 2.0);
+        let text = r.render();
+        assert_eq!(text.matches("# TYPE phase_seconds histogram").count(), 1);
+        assert!(text.contains("phase_seconds_bucket{phase=\"train\",le=\"0.1\"} 1"));
+        assert!(text.contains("phase_seconds_bucket{phase=\"train\",le=\"+Inf\"} 2"));
+        assert!(text.contains("phase_seconds_bucket{phase=\"aggregate\",le=\"1\"} 0"));
+        assert!(text.contains("phase_seconds_count{phase=\"train\"} 2"));
+        assert!(text.contains("phase_seconds_sum{phase=\"aggregate\"} 2"));
     }
 
     #[test]

@@ -108,6 +108,7 @@ impl DlNode {
                         round,
                         kind: MsgKind::Model,
                         sent_at_s: 0.0,
+                        trace: 0,
                         payload: payload.clone(),
                     })?;
                 }
@@ -205,6 +206,7 @@ impl DlNode {
                     round,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: encode_control(&Control::Ready { round }).into(),
                 })?;
                 loop {

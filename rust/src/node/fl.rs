@@ -60,6 +60,7 @@ impl FlServer {
                     round,
                     kind: MsgKind::FlBroadcast,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: payload.clone(),
                 })?;
             }
@@ -120,6 +121,7 @@ impl FlServer {
                 round: self.rounds,
                 kind: MsgKind::Control,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: encode_control(&Control::Stop).into(),
             })?;
         }
@@ -155,6 +157,7 @@ impl FlClient {
                         round: env.round,
                         kind: MsgKind::FlUpdate,
                         sent_at_s: 0.0,
+                        trace: 0,
                         payload,
                     })?;
                 }

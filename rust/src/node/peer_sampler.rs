@@ -75,6 +75,7 @@ impl PeerSampler {
                     round,
                     kind: MsgKind::Neighbors,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: encode_neighbors(&assign).into(),
                 })?;
             }
@@ -203,6 +204,7 @@ mod tests {
                         round,
                         kind: MsgKind::Control,
                         sent_at_s: 0.0,
+                        trace: 0,
                         payload: encode_control(&Control::Ready { round }).into(),
                     })
                     .unwrap();
@@ -258,6 +260,7 @@ mod tests {
                         round,
                         kind: MsgKind::Control,
                         sent_at_s: 0.0,
+                        trace: 0,
                         payload: encode_control(&Control::Ready { round }).into(),
                     })
                     .unwrap();
@@ -294,6 +297,7 @@ mod tests {
                 round: 0,
                 kind: MsgKind::Control,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: encode_control(&Control::Stop).into(),
             })
             .unwrap();
@@ -325,6 +329,7 @@ mod tests {
                         round,
                         kind: MsgKind::Control,
                         sent_at_s: 0.0,
+                        trace: 0,
                         payload: encode_control(&Control::Ready { round }).into(),
                     })
                     .unwrap();

@@ -215,6 +215,7 @@ pub(crate) fn key_agreement_envelopes(
                 round: 0,
                 kind: MsgKind::SecureSeed,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: master.to_vec().into(),
             });
         }
@@ -253,6 +254,7 @@ pub(crate) fn secure_round_envelopes(
                     round,
                     kind: MsgKind::SecureSeed,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: round_seed.to_vec().into(),
                 });
             }
@@ -268,6 +270,7 @@ pub(crate) fn secure_round_envelopes(
             round,
             kind: MsgKind::Model,
             sent_at_s: 0.0,
+            trace: 0,
             payload: codec.encode(&masked).into(),
         });
     }

@@ -76,6 +76,7 @@ use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering as AtomicOrdering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -83,6 +84,7 @@ use crate::communication::shaper::{LinkModel, NetworkModel};
 use crate::communication::{wire_size, Counters, CountersSnapshot, Envelope};
 use crate::dataset::Dataset;
 use crate::metrics::{NodeLog, Telemetry};
+use crate::trace::{self, TraceRecorder};
 use crate::training::Trainer;
 
 /// Cooperative cancellation handle for a run. Cheap to clone; any clone
@@ -155,6 +157,19 @@ pub struct NodeCtx {
     /// Timer ids canceled this wake.
     cancels: Vec<u64>,
     departed: bool,
+    /// Present iff a [`TraceRecorder`] is attached to the scheduler.
+    trace: Option<TraceCtx>,
+}
+
+/// Per-wake tracing state threaded through [`NodeCtx`].
+struct TraceCtx {
+    rec: TraceRecorder,
+    /// Round the node reported via [`NodeCtx::trace_round`]
+    /// ([`trace::ROUND_NONE`] until then; deliveries start from the
+    /// envelope's round).
+    round: u64,
+    /// Phase label for a compute job staged this wake.
+    compute_phase: trace::Phase,
 }
 
 impl NodeCtx {
@@ -212,6 +227,54 @@ impl NodeCtx {
     /// now on is dropped instead of waking it.
     pub fn depart(&mut self) {
         self.departed = true;
+    }
+
+    /// Report the round this wake belongs to — it labels the wake's
+    /// trace spans and drives round-based sampling. No-op (one branch)
+    /// when tracing is off.
+    pub fn trace_round(&mut self, round: u64) {
+        if let Some(tc) = &mut self.trace {
+            tc.round = round;
+        }
+    }
+
+    /// Start a wall-clock measurement for a node-internal phase span
+    /// ([`trace::Phase::Encode`], [`trace::Phase::Aggregate`]). Returns
+    /// `None` — and costs one branch — when tracing is off.
+    pub fn trace_begin(&self) -> Option<std::time::Instant> {
+        self.trace.as_ref().map(|_| std::time::Instant::now())
+    }
+
+    /// Record a node-internal phase span: virtual instant = this wake's
+    /// clock, wall duration measured from the matching
+    /// [`trace_begin`](NodeCtx::trace_begin).
+    pub fn trace_phase(&self, phase: trace::Phase, started: Option<std::time::Instant>) {
+        let (Some(tc), Some(t0)) = (&self.trace, started) else {
+            return;
+        };
+        if !tc.rec.sampled(tc.round) {
+            return;
+        }
+        let wall_dur_s = t0.elapsed().as_secs_f64();
+        tc.rec.record(trace::Span {
+            node: self.id as u32,
+            round: tc.round,
+            phase,
+            virt_start_s: self.now_s,
+            virt_dur_s: 0.0,
+            wall_start_s: tc.rec.wall_now_s() - wall_dur_s,
+            wall_dur_s,
+        });
+    }
+
+    /// Label the compute job staged this wake ([`trace::Phase::Train`]
+    /// by default; evals pass [`trace::Phase::Eval`]). The span covers
+    /// the job's full virtual duration; its wall fields are measured on
+    /// the worker that runs it.
+    pub fn trace_compute_kind(&mut self, phase: trace::Phase) {
+        if let Some(tc) = &mut self.trace {
+            tc.compute_phase = phase;
+        }
     }
 }
 
@@ -386,6 +449,9 @@ pub struct Scheduler {
     control: RunControl,
     /// Live sink handed to every node via `EventNode::attach_telemetry`.
     telemetry: Option<Telemetry>,
+    /// Span recorder for dual-clock tracing; `None` keeps the warm path
+    /// at a single branch per wake.
+    tracer: Option<TraceRecorder>,
     was_cancelled: bool,
 }
 
@@ -418,6 +484,7 @@ impl Scheduler {
             dropped: 0,
             control: RunControl::default(),
             telemetry: None,
+            tracer: None,
             was_cancelled: false,
         }
     }
@@ -435,6 +502,17 @@ impl Scheduler {
             node.attach_telemetry(&sink);
         }
         self.telemetry = Some(sink);
+    }
+
+    /// Attach a span recorder ([`crate::trace`]): every dispatched
+    /// event records a dual-clock span, staged sends are stamped with
+    /// flow ids, and compute jobs report worker-measured wall time. A
+    /// recorder in mode `off` is ignored, so the warm path keeps its
+    /// zero-cost `None` branch.
+    pub fn set_tracer(&mut self, rec: TraceRecorder) {
+        if rec.enabled() {
+            self.tracer = Some(rec);
+        }
     }
 
     /// True iff the last [`run`](Scheduler::run) stopped on its
@@ -643,6 +721,17 @@ impl Scheduler {
         if self.node_time[node] < at {
             self.node_time[node] = at;
         }
+        let tracer = self.tracer.clone();
+        // Event metadata captured before the wake is consumed: deliveries
+        // know their round and inbound flow id up front; other wakes
+        // learn their round from the node ([`NodeCtx::trace_round`]).
+        let (ev_phase, ev_round, in_flow) = match &wake {
+            Wake::Start => (Some(trace::Phase::Start), trace::ROUND_NONE, 0),
+            Wake::Message(env) => (Some(trace::Phase::Deliver), env.round, env.trace),
+            Wake::ComputeDone(_) => (None, trace::ROUND_NONE, 0),
+            Wake::Timer(_) => (Some(trace::Phase::Timer), trace::ROUND_NONE, 0),
+        };
+        let wall_t0 = tracer.as_ref().map(|rec| (rec.wall_now_s(), Instant::now()));
         let mut sm = self.nodes[node].take().expect("node is being woken re-entrantly");
         let mut ctx = NodeCtx {
             id: node,
@@ -654,13 +743,44 @@ impl Scheduler {
             timers: Vec::new(),
             cancels: Vec::new(),
             departed: false,
+            trace: tracer.as_ref().map(|rec| TraceCtx {
+                rec: rec.clone(),
+                round: ev_round,
+                compute_phase: trace::Phase::Train,
+            }),
         };
         let handled = sm.on_event(&mut ctx, wake);
         self.nodes[node] = Some(sm);
         handled?;
-        let NodeCtx { sends, compute, timers, cancels, departed, .. } = ctx;
+        let NodeCtx { sends, compute, timers, cancels, departed, trace: trace_ctx, .. } = ctx;
         if departed {
             self.departed[node] = true;
+        }
+        // Deliveries keep the envelope's round (the node may still be on
+        // an earlier round when a fast neighbor's model arrives); every
+        // other span takes the round the node reported.
+        let span_round = match ev_phase {
+            Some(trace::Phase::Deliver) => ev_round,
+            _ => trace_ctx.as_ref().map_or(ev_round, |tc| tc.round),
+        };
+        let compute_phase = trace_ctx.as_ref().map_or(trace::Phase::Train, |tc| tc.compute_phase);
+        if let (Some(rec), Some((wall_start_s, t0))) = (&tracer, wall_t0) {
+            if in_flow != 0 {
+                rec.flow_recv(in_flow, node as u32, ev_round, at);
+            }
+            if let Some(phase) = ev_phase {
+                if rec.sampled(span_round) {
+                    rec.record(trace::Span {
+                        node: node as u32,
+                        round: span_round,
+                        phase,
+                        virt_start_s: at,
+                        virt_dur_s: 0.0,
+                        wall_start_s,
+                        wall_dur_s: t0.elapsed().as_secs_f64(),
+                    });
+                }
+            }
         }
         let now = self.node_time[node];
         let staged_timers = timers.len() as u64;
@@ -679,6 +799,17 @@ impl Scheduler {
         }
         for mut env in sends {
             env.sent_at_s = now;
+            if let Some(rec) = &tracer {
+                // Flow ids are allocated on the scheduler thread only, in
+                // staging order, so they are deterministic; the receiving
+                // wake re-derives the same sampling decision from the
+                // envelope's round, so edges never dangle.
+                if rec.sampled(env.round) {
+                    let id = rec.next_flow_id();
+                    env.trace = id;
+                    rec.flow_send(id, node as u32, env.round, now);
+                }
+            }
             let bytes = wire_size(&env);
             self.counters[node].on_send(bytes);
             let deliver_at = match &self.links {
@@ -700,6 +831,31 @@ impl Scheduler {
             let duration_s = if self.links.is_some() { duration_s } else { 0.0 };
             let job = self.next_job;
             self.next_job += 1;
+            let body = match &tracer {
+                Some(rec) if rec.sampled(span_round) => {
+                    // The span's virtual interval is fixed at submission
+                    // ([now, now + duration_s]); its wall fields are
+                    // measured on whichever worker runs the job.
+                    let rec = rec.clone();
+                    let node = node as u32;
+                    Box::new(move || {
+                        let wall_start_s = rec.wall_now_s();
+                        let t0 = Instant::now();
+                        let out = body();
+                        rec.record(trace::Span {
+                            node,
+                            round: span_round,
+                            phase: compute_phase,
+                            virt_start_s: now,
+                            virt_dur_s: duration_s,
+                            wall_start_s,
+                            wall_dur_s: t0.elapsed().as_secs_f64(),
+                        });
+                        out
+                    }) as ComputeFn
+                }
+                _ => body,
+            };
             self.push(now + duration_s, EventKind::ComputeDone { node, job });
             pool.submit(job, body)?;
         }
@@ -800,6 +956,7 @@ mod tests {
                             round: r,
                             kind: MsgKind::Control,
                             sent_at_s: 0.0,
+                            trace: 0,
                             payload: vec![1].into(),
                         });
                     }
@@ -824,6 +981,7 @@ mod tests {
                     round: env.round,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: vec![2].into(),
                 });
             }
@@ -983,6 +1141,7 @@ mod tests {
                     round: 0,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: vec![9].into(),
                 });
             }

@@ -48,6 +48,7 @@ use crate::scenario::{Availability, ByzantineRoster, ChurnTrace};
 use crate::secure::Masker;
 use crate::sharing::{DefenseStats, Received, Sharing};
 use crate::store::{ParamSlot, Payload};
+use crate::trace::Phase as TracePhase;
 use crate::training::Trainer;
 use crate::util::Timer;
 
@@ -196,6 +197,7 @@ impl DlNodeSm {
                     round: self.round,
                     kind: MsgKind::Control,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: encode_control(&Control::Ready { round: self.round }).into(),
                 });
                 self.state = DlState::AwaitAssignment;
@@ -230,6 +232,7 @@ impl DlNodeSm {
             params: self.params.to_vec(),
             test: Arc::clone(&self.test),
         };
+        ctx.trace_compute_kind(TracePhase::Eval);
         ctx.start_compute(self.eval_time_s, job.into_compute());
         self.state = DlState::Evaluating;
         Ok(())
@@ -252,6 +255,7 @@ impl DlNodeSm {
         if !order.iter().all(|&(n, _)| self.pending.contains_key(&(self.round, n))) {
             return Ok(());
         }
+        let t = ctx.trace_begin();
         let msgs: Vec<(usize, f64, Payload)> = order
             .iter()
             .map(|&(n, w)| (n, w, self.pending.remove(&(self.round, n)).unwrap()))
@@ -280,6 +284,7 @@ impl DlNodeSm {
             }
         }
         self.params.put(model.into_vec());
+        ctx.trace_phase(TracePhase::Aggregate, t);
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
             self.start_eval(ctx)
         } else {
@@ -291,6 +296,7 @@ impl DlNodeSm {
 
 impl EventNode for DlNodeSm {
     fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        ctx.trace_round(self.round);
         match wake {
             Wake::Start => self.begin_round(ctx),
             Wake::Message(env) => match env.kind {
@@ -341,6 +347,7 @@ impl EventNode for DlNodeSm {
                     // adversarial runs bit-identical across workers.
                     // Flood copies overwrite in receivers' per-(round,
                     // sender) buffers; the damage is wire bytes + junk.
+                    let t = ctx.trace_begin();
                     let (payload, copies): (Payload, u32) = match self
                         .byz
                         .as_ref()
@@ -363,6 +370,7 @@ impl EventNode for DlNodeSm {
                         ),
                     };
                     ctx.note_serialized(payload.len());
+                    ctx.trace_phase(TracePhase::Encode, t);
                     let assign = self.assign.as_ref().context("no neighbor assignment")?;
                     for &(nbr, _) in &assign.neighbors {
                         for _ in 0..copies {
@@ -372,6 +380,7 @@ impl EventNode for DlNodeSm {
                                 round: self.round,
                                 kind: MsgKind::Model,
                                 sent_at_s: 0.0,
+                                trace: 0,
                                 payload: payload.clone(),
                             });
                         }
@@ -536,6 +545,7 @@ impl SecureDlNodeSm {
         // accumulation in neighbor order, exactly as the threaded path,
         // fused straight from the raw-f32 payload bytes into the
         // arena's reusable accumulator.
+        let t = ctx.trace_begin();
         let mut params = self.params.take();
         kernels::widen_scale(
             &mut self.scratch.doubles,
@@ -549,6 +559,7 @@ impl SecureDlNodeSm {
         }
         kernels::narrow(&mut params, &self.scratch.doubles);
         self.params.put(params);
+        ctx.trace_phase(TracePhase::Aggregate, t);
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
             let trainer = self.trainer.take().context("trainer already in flight")?;
             let job = EvalJob {
@@ -556,6 +567,7 @@ impl SecureDlNodeSm {
                 params: self.params.to_vec(),
                 test: Arc::clone(&self.test),
             };
+            ctx.trace_compute_kind(TracePhase::Eval);
             ctx.start_compute(self.eval_time_s, job.into_compute());
             self.state = DlState::Evaluating;
             Ok(())
@@ -568,6 +580,7 @@ impl SecureDlNodeSm {
 
 impl EventNode for SecureDlNodeSm {
     fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        ctx.trace_round(self.round);
         match wake {
             Wake::Start => {
                 for env in key_agreement_envelopes(
@@ -603,6 +616,7 @@ impl EventNode for SecureDlNodeSm {
                     // Masked payloads are per-receiver (each one is a
                     // distinct buffer), so serialization is counted per
                     // envelope here — there is nothing to share.
+                    let t = ctx.trace_begin();
                     for env in secure_round_envelopes(
                         self.id,
                         self.round,
@@ -614,6 +628,7 @@ impl EventNode for SecureDlNodeSm {
                         ctx.note_serialized(env.payload.len());
                         ctx.send(env);
                     }
+                    ctx.trace_phase(TracePhase::Encode, t);
                     self.params.put(params);
                     self.state = DlState::AwaitModels;
                     self.try_aggregate(ctx)
@@ -717,6 +732,7 @@ impl SamplerSm {
                     round: self.round,
                     kind: MsgKind::Neighbors,
                     sent_at_s: 0.0,
+                    trace: 0,
                     payload: encode_neighbors(&assign).into(),
                 });
             }
@@ -728,6 +744,7 @@ impl SamplerSm {
 
 impl EventNode for SamplerSm {
     fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        ctx.trace_round(self.round);
         match wake {
             Wake::Start => Ok(()),
             Wake::Message(env) => {
@@ -981,6 +998,7 @@ impl AsyncDlNodeSm {
 
     /// Aggregate whatever arrived, staleness-weighted, then advance.
     fn aggregate_and_advance(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let t = ctx.trace_begin();
         let mut model = self.model.take().context("no trained model to aggregate")?;
         // Deterministic: walk the static neighbor row in order, pulling
         // each neighbor's freshest buffered model if one arrived.
@@ -1023,6 +1041,7 @@ impl AsyncDlNodeSm {
             }
         }
         self.params.put(model.into_vec());
+        ctx.trace_phase(TracePhase::Aggregate, t);
         if (self.round + 1) % self.eval_every == 0 || self.round + 1 == self.rounds {
             let trainer = self.trainer.take().context("trainer already in flight")?;
             let job = EvalJob {
@@ -1030,6 +1049,7 @@ impl AsyncDlNodeSm {
                 params: self.params.to_vec(),
                 test: Arc::clone(&self.test),
             };
+            ctx.trace_compute_kind(TracePhase::Eval);
             ctx.start_compute(self.eval_time_s, job.into_compute());
             self.state = AsyncState::Evaluating;
             Ok(())
@@ -1042,6 +1062,7 @@ impl AsyncDlNodeSm {
 
 impl EventNode for AsyncDlNodeSm {
     fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        ctx.trace_round(self.round);
         match wake {
             Wake::Start => self.begin_round(ctx),
             Wake::Message(env) => {
@@ -1110,6 +1131,7 @@ impl EventNode for AsyncDlNodeSm {
                     // [`DlNodeSm`]; in async mode flood duplicates also
                     // overwrite (freshest-per-sender inbox), so the
                     // damage is wire bytes plus junk content.
+                    let t = ctx.trace_begin();
                     let (payload, copies): (Payload, u32) = match self
                         .byz
                         .as_ref()
@@ -1132,6 +1154,7 @@ impl EventNode for AsyncDlNodeSm {
                         ),
                     };
                     ctx.note_serialized(payload.len());
+                    ctx.trace_phase(TracePhase::Encode, t);
                     for &(nbr, _) in &self.neighbors {
                         for _ in 0..copies {
                             ctx.send(Envelope {
@@ -1140,6 +1163,7 @@ impl EventNode for AsyncDlNodeSm {
                                 round: self.round,
                                 kind: MsgKind::Model,
                                 sent_at_s: 0.0, // stamped by the scheduler
+                                trace: 0,
                                 payload: payload.clone(),
                             });
                         }

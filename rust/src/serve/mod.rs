@@ -15,6 +15,8 @@
 //!   [`RunControl`]; a running fleet stops at a round boundary.
 //! * `GET /runs/:id/events` — per-round [`TelemetryEvent`]s streamed as
 //!   Server-Sent Events, resumable with `?from=<seq>`.
+//! * `GET /runs/:id/trace` — the run's span recording as Chrome
+//!   `trace.json` when the config enables tracing ([`crate::trace`]).
 //! * `GET /metrics` — Prometheus text over the daemon's [`Registry`].
 //! * `GET /healthz`, `POST /shutdown` — liveness and clean exit.
 //!
@@ -39,8 +41,9 @@ use anyhow::{Context, Result};
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::{run_experiment_with, RunControl, RunHooks};
-use crate::metrics::{Registry, Telemetry};
+use crate::metrics::{Registry, Telemetry, TelemetryEvent};
 use crate::runtime::EngineHandle;
+use crate::trace::{TraceMode, TraceRecorder};
 use crate::util::json::{parse, Json};
 use crate::util::Timer;
 
@@ -51,6 +54,10 @@ const SSE_POLL: Duration = Duration::from_millis(250);
 
 /// Idle keep-alive connections are dropped after this.
 const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Buckets for the per-round staleness and duration histograms
+/// (virtual seconds; rounds run at emulated speed, not wall speed).
+const ROUND_BUCKETS: [f64; 10] = [0.01, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 60.0];
 
 /// Daemon configuration (the `decentra serve` flags).
 #[derive(Debug, Clone)]
@@ -130,6 +137,9 @@ struct Run {
     cfg: ExperimentConfig,
     control: RunControl,
     telemetry: Telemetry,
+    /// Span recorder, present when the config's `trace` key is not
+    /// `off`. Serves `GET /runs/:id/trace` after (or during) the run.
+    trace: Option<TraceRecorder>,
     state: Mutex<RunState>,
 }
 
@@ -277,6 +287,17 @@ fn executor_loop(shared: &Arc<Shared>) {
         let hooks = RunHooks {
             control: run.control.clone(),
             telemetry: Some(run.telemetry.clone()),
+            trace: run.trace.clone(),
+        };
+        // Fold per-round statistics into the daemon registry as the run
+        // streams them, without touching the fleet's hot path.
+        let tap = {
+            let shared = Arc::clone(shared);
+            let telemetry = run.telemetry.clone();
+            std::thread::Builder::new()
+                .name("serve-tap".into())
+                .spawn(move || round_stats_tap(&shared.registry, &telemetry))
+                .ok()
         };
         let result = match run.driver {
             Driver::Sim => sim::run_sim(&run.cfg, &hooks),
@@ -286,6 +307,12 @@ fn executor_loop(shared: &Arc<Shared>) {
         // The run paths close the sink themselves; this covers early
         // failures (e.g. missing artifacts) so SSE readers never hang.
         run.telemetry.close();
+        if let Some(tap) = tap {
+            let _ = tap.join();
+        }
+        if let Some(tr) = &run.trace {
+            tr.observe_phases(&shared.registry);
+        }
         let outcome = result.and_then(|res| {
             let dir = res.save()?;
             Ok((res, dir))
@@ -315,6 +342,48 @@ fn executor_loop(shared: &Arc<Shared>) {
     }
 }
 
+/// Consume a run's telemetry ring and fold per-round statistics into
+/// the daemon [`Registry`]: staleness from each `Round` record, and the
+/// emulated duration of every finished round from per-node
+/// `emu_time_s` deltas. Runs on its own thread until the ring closes.
+fn round_stats_tap(registry: &Registry, telemetry: &Telemetry) {
+    let mut cursor = 0;
+    // Last (round, emu_time_s) seen per node, for duration deltas.
+    let mut last: BTreeMap<usize, (u64, f64)> = BTreeMap::new();
+    loop {
+        let (batch, next, closed) = telemetry.wait_since(cursor, SSE_POLL);
+        cursor = next;
+        for (_, event) in &batch {
+            let TelemetryEvent::Round { node, record } = event else { continue };
+            registry.observe_with(
+                "decentra_staleness_seconds",
+                "",
+                &ROUND_BUCKETS,
+                record.mean_staleness_s,
+            );
+            let prev = last.insert(*node, (record.round, record.emu_time_s));
+            // Eval cadence can skip rounds: spread the emulated-time
+            // delta over every round it covers.
+            let (delta, rounds) = match prev {
+                Some((r0, t0)) => (record.emu_time_s - t0, record.round.saturating_sub(r0)),
+                None => (record.emu_time_s, record.round + 1),
+            };
+            if rounds > 0 && delta.is_finite() && delta >= 0.0 {
+                let per_round = delta / rounds as f64;
+                registry.observe_with(
+                    "decentra_round_duration_seconds",
+                    "",
+                    &ROUND_BUCKETS,
+                    per_round,
+                );
+            }
+        }
+        if closed && batch.is_empty() {
+            return;
+        }
+    }
+}
+
 /// Serve requests on one connection until the peer closes (or an SSE
 /// stream takes the connection over).
 fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
@@ -334,8 +403,14 @@ fn handle_connection(shared: &Arc<Shared>, mut stream: TcpStream) {
         // SSE takes over the whole connection and ends by closing it.
         if req.method == "GET" {
             if let Some(run) = events_target(shared, &req) {
-                let from = req.query.get("from").and_then(|v| v.parse().ok()).unwrap_or(0);
-                let _ = stream_events(&mut stream, &run, from);
+                match parse_cursor(&req) {
+                    Ok(from) => {
+                        let _ = stream_events(&mut stream, &run, from);
+                    }
+                    Err(resp) => {
+                        let _ = resp.write(&mut stream, false);
+                    }
+                }
                 shared
                     .registry
                     .observe("decentra_http_request_seconds", timer.elapsed().as_secs_f64());
@@ -362,6 +437,17 @@ fn events_target(shared: &Arc<Shared>, req: &Request) -> Option<Arc<Run>> {
     None
 }
 
+/// The `?from=` resume cursor for SSE. Absent means 0; anything
+/// non-numeric is a client error rather than a silent restart.
+fn parse_cursor(req: &Request) -> Result<u64, Response> {
+    match req.query.get("from") {
+        None => Ok(0),
+        Some(v) => v
+            .parse()
+            .map_err(|_| Response::json(400, err_json("from must be an integer"))),
+    }
+}
+
 fn route(shared: &Arc<Shared>, req: &Request) -> Response {
     let seg = req.segments();
     match (req.method.as_str(), seg.as_slice()) {
@@ -373,6 +459,7 @@ fn route(shared: &Arc<Shared>, req: &Request) -> Response {
             Response::json(200, run.status_json().dump())
         }),
         ("DELETE", ["runs", id]) => with_run(shared, id, cancel_run),
+        ("GET", ["runs", id, "trace"]) => with_run(shared, id, trace_response),
         ("GET", ["runs", _, "events"]) => {
             // events_target said no: the id did not parse or exist.
             Response::json(404, err_json("no such run"))
@@ -433,6 +520,13 @@ fn submit_run(shared: &Arc<Shared>, body: &[u8]) -> Response {
             return Response::json(400, err_json(&format!("{e:#}")));
         }
     }
+    // `validate` already vetted the spec; building the recorder here
+    // keeps the 400 path alive if that ever loosens.
+    let trace = match TraceMode::parse(&cfg.trace) {
+        Ok(TraceMode::Off) => None,
+        Ok(mode) => Some(TraceRecorder::new(mode)),
+        Err(e) => return Response::json(400, err_json(&format!("{e:#}"))),
+    };
     let mut table = shared.table.lock().unwrap();
     if table.queue.len() >= shared.queue_cap {
         return Response::json(429, err_json("run queue is full"));
@@ -445,6 +539,7 @@ fn submit_run(shared: &Arc<Shared>, body: &[u8]) -> Response {
         cfg,
         control: RunControl::new(),
         telemetry: Telemetry::new(shared.ring_cap),
+        trace,
         state: Mutex::new(RunState {
             phase: Phase::Queued,
             error: None,
@@ -471,6 +566,16 @@ fn list_runs(shared: &Arc<Shared>) -> Response {
 /// `DELETE /runs/:id`: queued runs cancel immediately, running runs get
 /// their [`RunControl`] flag and stop at the next round boundary,
 /// finished runs are a conflict.
+/// `GET /runs/:id/trace`: the run's span recording as Chrome
+/// `trace.json`. Available while the run is still going (a partial
+/// snapshot) and after it ends; 404 when the config left tracing off.
+fn trace_response(run: &Arc<Run>) -> Response {
+    match &run.trace {
+        Some(tr) => Response::json(200, tr.snapshot().to_chrome_json()),
+        None => Response::json(404, err_json("tracing disabled for this run")),
+    }
+}
+
 fn cancel_run(run: &Arc<Run>) -> Response {
     let mut st = run.state.lock().unwrap();
     match st.phase {
@@ -505,6 +610,11 @@ fn render_metrics(shared: &Arc<Shared>) -> Response {
         shared.registry.set_gauge("decentra_runs_queued", table.queue.len() as f64);
         let active = if table.active.is_some() { 1.0 } else { 0.0 };
         shared.registry.set_gauge("decentra_run_active", active);
+        let runs = table.runs.values();
+        let dropped: u64 = runs.clone().map(|r| r.telemetry.dropped_events()).sum();
+        let buffered: u64 = runs.map(|r| r.telemetry.buffered_events()).sum();
+        shared.registry.set_gauge("decentra_telemetry_dropped_events", dropped as f64);
+        shared.registry.set_gauge("decentra_telemetry_buffered_events", buffered as f64);
     }
     Response::text(200, shared.registry.render())
 }

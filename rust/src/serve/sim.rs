@@ -28,6 +28,7 @@ use crate::rng::{mix_seed, Xoshiro256pp};
 use crate::scheduler::{EventNode, NodeCtx, Scheduler, Wake};
 use crate::sharing::{self, Received, Sharing};
 use crate::store::Payload;
+use crate::trace::Phase as TracePhase;
 use crate::util::Timer;
 
 /// Parameter dimension of the synthetic model.
@@ -81,18 +82,22 @@ impl SimNodeSm {
     /// target, pre-step distance is the train loss), then arm the step
     /// timer that advances virtual time.
     fn begin_round(&mut self, ctx: &mut NodeCtx) {
+        let t = ctx.trace_begin();
         self.train_loss = mse(self.model.as_slice(), &self.target);
         for (m, t) in self.model.as_mut_slice().iter_mut().zip(self.target.iter()) {
             *m = 0.9 * *m + 0.1 * *t;
         }
+        ctx.trace_phase(TracePhase::Train, t);
         self.phase = Phase::Training;
         ctx.set_timer(SIM_STEP_S);
     }
 
     /// Serialize once, send the shared payload to every neighbor.
     fn broadcast(&mut self, ctx: &mut NodeCtx) -> Result<()> {
+        let t = ctx.trace_begin();
         let payload = self.sharing.outgoing_pooled(&self.model, self.round, &mut self.scratch)?;
         ctx.note_serialized(payload.len());
+        ctx.trace_phase(TracePhase::Encode, t);
         for &(nbr, _) in &self.neighbors {
             ctx.send(Envelope {
                 src: self.id,
@@ -100,6 +105,7 @@ impl SimNodeSm {
                 round: self.round,
                 kind: MsgKind::Model,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: payload.clone(),
             });
         }
@@ -115,6 +121,7 @@ impl SimNodeSm {
         if !all_in {
             return Ok(());
         }
+        let t = ctx.trace_begin();
         let msgs: Vec<(usize, f64, Payload)> = self
             .neighbors
             .iter()
@@ -134,6 +141,7 @@ impl SimNodeSm {
             &received,
             &mut self.scratch,
         )?;
+        ctx.trace_phase(TracePhase::Aggregate, t);
         if (round + 1) % self.eval_every == 0 || round + 1 == self.rounds {
             let test_loss = mse(self.model.as_slice(), &self.target);
             let test_acc = 1.0 / (1.0 + test_loss);
@@ -172,6 +180,7 @@ impl SimNodeSm {
 
 impl EventNode for SimNodeSm {
     fn on_event(&mut self, ctx: &mut NodeCtx, wake: Wake) -> Result<()> {
+        ctx.trace_round(self.round);
         match wake {
             Wake::Start => self.begin_round(ctx),
             Wake::Timer(_) => {
@@ -284,6 +293,9 @@ fn run_sim_inner(cfg: &ExperimentConfig, hooks: &RunHooks) -> Result<RunResult> 
     };
     let mut sched = Scheduler::new(network, workers);
     sched.set_control(hooks.control.clone());
+    if let Some(tr) = &hooks.trace {
+        sched.set_tracer(tr.clone());
+    }
     if let Some(sink) = &hooks.telemetry {
         sched.set_telemetry(sink.clone());
         sink.emit(TelemetryEvent::RunStarted { nodes: cfg.nodes, rounds: cfg.rounds });
@@ -379,7 +391,8 @@ mod tests {
     fn sim_round_events_mirror_saved_records() {
         let cfg = sim_cfg(4, 4);
         let sink = Telemetry::new(1024);
-        let hooks = RunHooks { control: RunControl::new(), telemetry: Some(sink.clone()) };
+        let hooks =
+            RunHooks { control: RunControl::new(), telemetry: Some(sink.clone()), trace: None };
         let result = run_sim(&cfg, &hooks).unwrap();
         assert!(sink.is_closed());
         let (events, _) = sink.events_since(0);

@@ -1,0 +1,649 @@
+//! Dual-clock span tracing for the virtual-time scheduler.
+//!
+//! Every handled scheduler event — train step, encode/outgoing,
+//! aggregate, timer, wire delivery — can record a [`Span`] carrying
+//! **both clocks**: where the event sits on the deterministic virtual
+//! timeline (`virt_start_s`, `virt_dur_s`) and how much real wall time
+//! the handler burned (`wall_start_s`, `wall_dur_s`). Virtual fields are
+//! bit-identical across worker counts on the same seed; wall fields are
+//! the only run-to-run difference, which is what makes traces usable as
+//! evidence in performance work: the layout is reproducible, the cost
+//! annotations are measured.
+//!
+//! Gossip hops become **causal flow edges**: when a send is staged the
+//! scheduler stamps a fresh flow id into the envelope
+//! ([`crate::communication::Envelope::trace`]), records the send point,
+//! and on delivery records the receive point. The pair exports as a
+//! Chrome `ph:"s"`/`ph:"f"` flow arrow from the sender's track to the
+//! receiver's, spanning exactly the shaper delay the link model charged.
+//!
+//! Spans land in bounded, sharded rings (lossy, with drop accounting).
+//! When tracing is off the scheduler holds no recorder at all, so the
+//! warm path pays one `Option` check and allocates nothing — the
+//! `hotpath_alloc.rs` budget is untouched.
+//!
+//! Exports:
+//! - [`TraceSnapshot::to_chrome_json`]: Chrome/Perfetto `trace.json`,
+//!   virtual time as the timeline (µs), wall time in `args`, one thread
+//!   track per node, flow events for message hops.
+//! - [`TraceSnapshot::to_folded`]: folded stacks (`node;round;phase dur`)
+//!   for flamegraph tooling, weighted by wall microseconds.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Registry;
+use crate::util::json::Json;
+
+/// Round value for spans recorded before the node reported one.
+pub const ROUND_NONE: u64 = u64::MAX;
+
+/// Spans are sharded by node id across this many independently locked
+/// rings, so recording from the scheduler thread and from worker-pool
+/// threads (compute spans) never contends on one lock.
+const SPAN_SHARDS: usize = 16;
+
+/// Default ring capacity per shard (spans). Oldest spans are
+/// overwritten once a shard fills; see [`TraceRecorder::dropped_spans`].
+const DEFAULT_SHARD_CAP: usize = 1 << 16;
+
+/// Histogram buckets for per-phase wall-clock seconds
+/// (`decentra_phase_seconds{phase=...}`).
+pub const PHASE_BUCKETS: [f64; 10] = [1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 0.1, 0.5, 1.0, 10.0, 60.0];
+
+/// Tracing mode parsed from the `trace` config key / `--trace` flag.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceMode {
+    /// No recorder attached; zero overhead.
+    Off,
+    /// Record the given fraction of rounds (deterministic per-round
+    /// hash, so both ends of a hop agree on whether it is sampled).
+    Sample(f64),
+    /// Record every round.
+    Full,
+}
+
+impl TraceMode {
+    /// Parse `"off"`, `"full"`, or `"sample:<rate>"` with
+    /// `0 < rate <= 1`.
+    pub fn parse(spec: &str) -> Result<TraceMode> {
+        match spec {
+            "off" => Ok(TraceMode::Off),
+            "full" => Ok(TraceMode::Full),
+            _ => match spec.strip_prefix("sample:") {
+                Some(rate) => {
+                    let parsed: f64 = match rate.parse() {
+                        Ok(r) => r,
+                        Err(_) => bail!("trace sample rate {rate:?} is not a number"),
+                    };
+                    if !(parsed > 0.0 && parsed <= 1.0) {
+                        bail!("trace sample rate must be in (0, 1], got {parsed}");
+                    }
+                    Ok(TraceMode::Sample(parsed))
+                }
+                None => {
+                    bail!("trace must be \"off\", \"full\", or \"sample:<rate>\", got {spec:?}")
+                }
+            },
+        }
+    }
+}
+
+/// What a span measures. One label per instrumented phase; these are the
+/// stack frames of the folded export and the `phase` label of the
+/// `decentra_phase_seconds` histograms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// The initial `Wake::Start` dispatch.
+    Start,
+    /// Local training (virtual duration = the modeled step time).
+    Train,
+    /// Evaluation on the worker pool.
+    Eval,
+    /// Outgoing payload serialization (encode / `outgoing_pooled`).
+    Encode,
+    /// Neighbor-model aggregation.
+    Aggregate,
+    /// Wire delivery of one envelope to its destination node.
+    Deliver,
+    /// A virtual timer firing (async deadlines, sim step clock).
+    Timer,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Start => "start",
+            Phase::Train => "train",
+            Phase::Eval => "eval",
+            Phase::Encode => "encode",
+            Phase::Aggregate => "aggregate",
+            Phase::Deliver => "deliver",
+            Phase::Timer => "timer",
+        }
+    }
+}
+
+/// One dual-clock span.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub node: u32,
+    /// Round the span belongs to, or [`ROUND_NONE`].
+    pub round: u64,
+    pub phase: Phase,
+    /// Virtual start (seconds on the scheduler clock). Deterministic.
+    pub virt_start_s: f64,
+    /// Virtual duration. Deterministic (0 for instantaneous handlers).
+    pub virt_dur_s: f64,
+    /// Wall-clock start, seconds since the recorder was created.
+    pub wall_start_s: f64,
+    /// Wall-clock cost of the handler.
+    pub wall_dur_s: f64,
+}
+
+/// One endpoint of a gossip-hop flow edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct FlowPoint {
+    id: u64,
+    node: u32,
+    round: u64,
+    virt_s: f64,
+}
+
+/// A paired send → deliver hop, ready for export.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowEdge {
+    pub id: u64,
+    pub src: u32,
+    pub dst: u32,
+    pub round: u64,
+    pub send_virt_s: f64,
+    pub recv_virt_s: f64,
+}
+
+struct Ring {
+    spans: Vec<Span>,
+    /// Next overwrite slot once the ring is full.
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, cap: usize, s: Span) {
+        if self.spans.len() < cap {
+            self.spans.push(s);
+        } else {
+            self.spans[self.head] = s;
+            self.head = (self.head + 1) % cap;
+            self.dropped += 1;
+        }
+    }
+}
+
+struct FlowBuf {
+    sends: Vec<FlowPoint>,
+    recvs: Vec<FlowPoint>,
+    dropped: u64,
+}
+
+struct Inner {
+    mode: TraceMode,
+    shard_cap: usize,
+    epoch: Instant,
+    shards: [Mutex<Ring>; SPAN_SHARDS],
+    flows: Mutex<FlowBuf>,
+    next_flow: AtomicU64,
+}
+
+/// Shared handle to a sampling span recorder. Cloning is an `Arc` bump;
+/// the scheduler, worker-pool closures, and the serve daemon all hold
+/// the same rings.
+#[derive(Clone)]
+pub struct TraceRecorder {
+    inner: Arc<Inner>,
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl TraceRecorder {
+    pub fn new(mode: TraceMode) -> TraceRecorder {
+        TraceRecorder::with_capacity(mode, DEFAULT_SHARD_CAP)
+    }
+
+    /// Recorder with an explicit per-shard span capacity (tests use tiny
+    /// rings to exercise the lossy path).
+    pub fn with_capacity(mode: TraceMode, shard_cap: usize) -> TraceRecorder {
+        let shard_cap = shard_cap.max(1);
+        TraceRecorder {
+            inner: Arc::new(Inner {
+                mode,
+                shard_cap,
+                epoch: Instant::now(),
+                shards: std::array::from_fn(|_| {
+                    Mutex::new(Ring { spans: Vec::new(), head: 0, dropped: 0 })
+                }),
+                flows: Mutex::new(FlowBuf { sends: Vec::new(), recvs: Vec::new(), dropped: 0 }),
+                next_flow: AtomicU64::new(1),
+            }),
+        }
+    }
+
+    pub fn mode(&self) -> TraceMode {
+        self.inner.mode
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.mode != TraceMode::Off
+    }
+
+    /// Deterministic per-round sampling decision: both the sender and
+    /// the receiver of a hop hash the same round number, so flow edges
+    /// never dangle because only one side sampled.
+    pub fn sampled(&self, round: u64) -> bool {
+        match self.inner.mode {
+            TraceMode::Off => false,
+            TraceMode::Full => true,
+            TraceMode::Sample(rate) => {
+                let unit = (splitmix64(round) >> 11) as f64 / (1u64 << 53) as f64;
+                unit < rate
+            }
+        }
+    }
+
+    /// Wall-clock seconds since the recorder was created.
+    pub fn wall_now_s(&self) -> f64 {
+        self.inner.epoch.elapsed().as_secs_f64()
+    }
+
+    pub fn record(&self, span: Span) {
+        let shard = span.node as usize % SPAN_SHARDS;
+        let mut ring = self.inner.shards[shard].lock().expect("trace ring poisoned");
+        ring.push(self.inner.shard_cap, span);
+    }
+
+    /// Allocate a fresh flow id (0 is reserved for "untraced").
+    pub fn next_flow_id(&self) -> u64 {
+        self.inner.next_flow.fetch_add(1, Ordering::Relaxed)
+    }
+
+    pub fn flow_send(&self, id: u64, node: u32, round: u64, virt_s: f64) {
+        let mut flows = self.inner.flows.lock().expect("trace flows poisoned");
+        if flows.sends.len() < self.inner.shard_cap * SPAN_SHARDS {
+            flows.sends.push(FlowPoint { id, node, round, virt_s });
+        } else {
+            flows.dropped += 1;
+        }
+    }
+
+    pub fn flow_recv(&self, id: u64, node: u32, round: u64, virt_s: f64) {
+        let mut flows = self.inner.flows.lock().expect("trace flows poisoned");
+        if flows.recvs.len() < self.inner.shard_cap * SPAN_SHARDS {
+            flows.recvs.push(FlowPoint { id, node, round, virt_s });
+        } else {
+            flows.dropped += 1;
+        }
+    }
+
+    /// Spans overwritten because a shard ring filled.
+    pub fn dropped_spans(&self) -> u64 {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("trace ring poisoned").dropped)
+            .sum()
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| s.lock().expect("trace ring poisoned").spans.len())
+            .sum()
+    }
+
+    /// Copy out a consistent, deterministically ordered view of the
+    /// recorded spans and paired flow edges.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut spans: Vec<Span> = Vec::with_capacity(self.span_count());
+        let mut dropped_spans = 0;
+        for shard in &self.inner.shards {
+            let ring = shard.lock().expect("trace ring poisoned");
+            spans.extend_from_slice(&ring.spans);
+            dropped_spans += ring.dropped;
+        }
+        spans.sort_by(|a, b| {
+            a.virt_start_s
+                .total_cmp(&b.virt_start_s)
+                .then(a.node.cmp(&b.node))
+                .then(a.phase.cmp(&b.phase))
+                .then(a.round.cmp(&b.round))
+                .then(a.virt_dur_s.total_cmp(&b.virt_dur_s))
+        });
+        let flows = self.inner.flows.lock().expect("trace flows poisoned");
+        let mut by_id: BTreeMap<u64, (Option<FlowPoint>, Option<FlowPoint>)> = BTreeMap::new();
+        for s in &flows.sends {
+            by_id.entry(s.id).or_insert((None, None)).0 = Some(*s);
+        }
+        for r in &flows.recvs {
+            by_id.entry(r.id).or_insert((None, None)).1 = Some(*r);
+        }
+        let edges = by_id
+            .into_iter()
+            .filter_map(|(id, (send, recv))| match (send, recv) {
+                (Some(s), Some(r)) => Some(FlowEdge {
+                    id,
+                    src: s.node,
+                    dst: r.node,
+                    round: s.round,
+                    send_virt_s: s.virt_s,
+                    recv_virt_s: r.virt_s,
+                }),
+                // In-flight at shutdown or dropped by the scheduler
+                // (departed/crashed receiver): no edge.
+                _ => None,
+            })
+            .collect();
+        TraceSnapshot {
+            spans,
+            flows: edges,
+            dropped_spans,
+            dropped_flows: flows.dropped,
+        }
+    }
+
+    /// Feed every span's wall-clock duration into per-phase histograms
+    /// (`decentra_phase_seconds{phase=...}`) on `registry`.
+    pub fn observe_phases(&self, registry: &Registry) {
+        for span in self.snapshot().spans {
+            registry.observe_with(
+                "decentra_phase_seconds",
+                &format!("phase=\"{}\"", span.phase.name()),
+                &PHASE_BUCKETS,
+                span.wall_dur_s,
+            );
+        }
+    }
+}
+
+/// A consistent copy of a recorder's contents, ordered by virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSnapshot {
+    pub spans: Vec<Span>,
+    pub flows: Vec<FlowEdge>,
+    pub dropped_spans: u64,
+    pub dropped_flows: u64,
+}
+
+impl TraceSnapshot {
+    /// The virtual half of the trace as an exact text form: one line
+    /// per span (`node round phase virt_start_bits virt_dur_bits`) then
+    /// one per flow edge. Two runs are trace-deterministic iff their
+    /// signatures are byte-identical — wall fields are excluded.
+    pub fn virtual_signature(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            out.push_str(&format!(
+                "span {} {} {} {:016x} {:016x}\n",
+                s.node,
+                s.round,
+                s.phase.name(),
+                s.virt_start_s.to_bits(),
+                s.virt_dur_s.to_bits()
+            ));
+        }
+        for f in &self.flows {
+            out.push_str(&format!(
+                "flow {} {} {} {} {:016x} {:016x}\n",
+                f.id,
+                f.src,
+                f.dst,
+                f.round,
+                f.send_virt_s.to_bits(),
+                f.recv_virt_s.to_bits()
+            ));
+        }
+        out
+    }
+
+    /// Chrome trace event format (load in Perfetto or `chrome://tracing`):
+    /// the virtual clock is the timeline (µs), wall-clock cost rides in
+    /// each event's `args`, every node gets its own thread track, and
+    /// gossip hops are `ph:"s"` / `ph:"f"` flow pairs.
+    pub fn to_chrome_json(&self) -> String {
+        let mut events: Vec<Json> = Vec::new();
+        events.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(1.0)),
+            ("args", Json::obj(vec![("name", Json::str("fleet (virtual time)"))])),
+        ]));
+        let mut nodes: Vec<u32> = self
+            .spans
+            .iter()
+            .map(|s| s.node)
+            .chain(self.flows.iter().flat_map(|f| [f.src, f.dst]))
+            .collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        for &node in &nodes {
+            events.push(Json::obj(vec![
+                ("name", Json::str("thread_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(node as f64)),
+                ("args", Json::obj(vec![("name", Json::str(format!("node {node}")))])),
+            ]));
+        }
+        for s in &self.spans {
+            let round = if s.round == ROUND_NONE {
+                Json::Null
+            } else {
+                Json::num(s.round as f64)
+            };
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.phase.name())),
+                ("cat", Json::str("phase")),
+                ("ph", Json::str("X")),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(s.node as f64)),
+                ("ts", Json::num(s.virt_start_s * 1e6)),
+                ("dur", Json::num(s.virt_dur_s * 1e6)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("round", round),
+                        ("wall_start_s", Json::num(s.wall_start_s)),
+                        ("wall_dur_s", Json::num(s.wall_dur_s)),
+                    ]),
+                ),
+            ]));
+        }
+        for f in &self.flows {
+            events.push(Json::obj(vec![
+                ("name", Json::str("gossip")),
+                ("cat", Json::str("hop")),
+                ("ph", Json::str("s")),
+                ("id", Json::num(f.id as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(f.src as f64)),
+                ("ts", Json::num(f.send_virt_s * 1e6)),
+                ("args", Json::obj(vec![("round", Json::num(f.round as f64))])),
+            ]));
+            events.push(Json::obj(vec![
+                ("name", Json::str("gossip")),
+                ("cat", Json::str("hop")),
+                ("ph", Json::str("f")),
+                ("bp", Json::str("e")),
+                ("id", Json::num(f.id as f64)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(f.dst as f64)),
+                ("ts", Json::num(f.recv_virt_s * 1e6)),
+                ("args", Json::obj(vec![("round", Json::num(f.round as f64))])),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("clock", Json::str("virtual")),
+                    ("dropped_spans", Json::num(self.dropped_spans as f64)),
+                    ("dropped_flows", Json::num(self.dropped_flows as f64)),
+                ]),
+            ),
+        ])
+        .dump()
+    }
+
+    /// Folded stacks (`node;round;phase weight`) for flamegraph tooling,
+    /// weighted by wall-clock microseconds (what profiling cares about).
+    pub fn to_folded(&self) -> String {
+        let mut folded: BTreeMap<(u32, u64, Phase), u64> = BTreeMap::new();
+        for s in &self.spans {
+            let us = (s.wall_dur_s * 1e6).round().max(0.0) as u64;
+            *folded.entry((s.node, s.round, s.phase)).or_insert(0) += us;
+        }
+        let mut out = String::new();
+        for ((node, round, phase), us) in folded {
+            let round = if round == ROUND_NONE {
+                "none".to_string()
+            } else {
+                round.to_string()
+            };
+            out.push_str(&format!("node{node};round{round};{} {us}\n", phase.name()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn span(node: u32, round: u64, phase: Phase, virt: f64) -> Span {
+        Span {
+            node,
+            round,
+            phase,
+            virt_start_s: virt,
+            virt_dur_s: 0.5,
+            wall_start_s: virt * 2.0,
+            wall_dur_s: 1e-4,
+        }
+    }
+
+    #[test]
+    fn mode_parses_and_rejects() {
+        assert_eq!(TraceMode::parse("off").unwrap(), TraceMode::Off);
+        assert_eq!(TraceMode::parse("full").unwrap(), TraceMode::Full);
+        assert_eq!(TraceMode::parse("sample:0.25").unwrap(), TraceMode::Sample(0.25));
+        assert!(TraceMode::parse("sample:0").is_err());
+        assert!(TraceMode::parse("sample:1.5").is_err());
+        assert!(TraceMode::parse("sample:x").is_err());
+        assert!(TraceMode::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_roughly_calibrated() {
+        let rec = TraceRecorder::new(TraceMode::Sample(0.25));
+        let a: Vec<bool> = (0..10_000).map(|r| rec.sampled(r)).collect();
+        let b: Vec<bool> = (0..10_000).map(|r| rec.sampled(r)).collect();
+        assert_eq!(a, b);
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!((2000..3000).contains(&hits), "hits {hits} far from 25%");
+        let full = TraceRecorder::new(TraceMode::Full);
+        assert!((0..100).all(|r| full.sampled(r)));
+        let off = TraceRecorder::new(TraceMode::Off);
+        assert!(!off.enabled());
+        assert!((0..100).all(|r| !off.sampled(r)));
+    }
+
+    #[test]
+    fn ring_is_lossy_with_drop_accounting() {
+        let rec = TraceRecorder::with_capacity(TraceMode::Full, 4);
+        // All spans target node 0, i.e. one shard of capacity 4.
+        for i in 0..10 {
+            rec.record(span(0, i, Phase::Deliver, i as f64));
+        }
+        assert_eq!(rec.span_count(), 4);
+        assert_eq!(rec.dropped_spans(), 6);
+        let snap = rec.snapshot();
+        assert_eq!(snap.spans.len(), 4);
+        assert_eq!(snap.dropped_spans, 6);
+    }
+
+    #[test]
+    fn snapshot_orders_by_virtual_time_and_pairs_flows() {
+        let rec = TraceRecorder::new(TraceMode::Full);
+        rec.record(span(3, 1, Phase::Aggregate, 2.0));
+        rec.record(span(1, 0, Phase::Train, 0.0));
+        rec.record(span(2, 0, Phase::Deliver, 1.0));
+        let id = rec.next_flow_id();
+        rec.flow_send(id, 1, 0, 0.5);
+        rec.flow_recv(id, 2, 0, 1.0);
+        let dangling = rec.next_flow_id();
+        rec.flow_send(dangling, 1, 0, 0.75);
+        let snap = rec.snapshot();
+        assert_eq!(snap.spans[0].node, 1);
+        assert_eq!(snap.spans[1].node, 2);
+        assert_eq!(snap.spans[2].node, 3);
+        assert_eq!(snap.flows.len(), 1);
+        assert_eq!(snap.flows[0].src, 1);
+        assert_eq!(snap.flows[0].dst, 2);
+        assert!(snap.virtual_signature().contains("flow 1 1 2 0"));
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_carries_both_clocks() {
+        let rec = TraceRecorder::new(TraceMode::Full);
+        rec.record(span(0, 0, Phase::Train, 0.0));
+        rec.record(span(1, 0, Phase::Deliver, 1.0));
+        let id = rec.next_flow_id();
+        rec.flow_send(id, 0, 0, 0.5);
+        rec.flow_recv(id, 1, 0, 1.0);
+        let doc = parse(&rec.snapshot().to_chrome_json()).unwrap();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        let phs: Vec<&str> = events.iter().filter_map(|e| e.get("ph").as_str()).collect();
+        assert!(phs.contains(&"M"));
+        assert!(phs.contains(&"X"));
+        assert!(phs.contains(&"s"));
+        assert!(phs.contains(&"f"));
+        let x = events
+            .iter()
+            .find(|e| e.get("ph").as_str() == Some("X"))
+            .unwrap();
+        assert_eq!(x.get("ts").as_f64(), Some(0.0));
+        assert_eq!(x.get("dur").as_f64(), Some(0.5e6));
+        assert!(x.get("args").get("wall_dur_s").as_f64().is_some());
+        // One thread_name metadata track per node.
+        let tracks = events
+            .iter()
+            .filter(|e| {
+                e.get("ph").as_str() == Some("M") && e.get("name").as_str() == Some("thread_name")
+            })
+            .count();
+        assert_eq!(tracks, 2);
+    }
+
+    #[test]
+    fn folded_stacks_fold_by_node_round_phase() {
+        let rec = TraceRecorder::new(TraceMode::Full);
+        rec.record(span(0, 0, Phase::Train, 0.0));
+        rec.record(span(0, 0, Phase::Train, 1.0));
+        rec.record(span(0, ROUND_NONE, Phase::Start, 0.0));
+        let folded = rec.snapshot().to_folded();
+        assert!(folded.contains("node0;round0;train 200"), "{folded}");
+        assert!(folded.contains("node0;roundnone;start 100"), "{folded}");
+    }
+}

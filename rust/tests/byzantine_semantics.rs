@@ -338,6 +338,7 @@ impl EventNode for ByzRoundNode {
                             round: self.round,
                             kind: MsgKind::Model,
                             sent_at_s: 0.0,
+                            trace: 0,
                             payload: payload.clone().into(),
                         });
                     }

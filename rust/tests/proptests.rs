@@ -135,6 +135,7 @@ fn prop_envelope_roundtrip() {
             round: rng.next_u64() % 1_000_000,
             kind: MsgKind::from_u8((rng.next_u64() % 7) as u8).unwrap(),
             sent_at_s: rng.next_f64() * 1e4,
+            trace: 0,
             payload: (0..rng.range(0, 5000))
                 .map(|_| rng.next_u32() as u8)
                 .collect::<Vec<u8>>()

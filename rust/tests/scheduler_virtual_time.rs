@@ -13,7 +13,15 @@ use decentralize_rs::scheduler::{ComputeOutput, EventNode, NodeCtx, Scheduler, W
 type Trace = Arc<Mutex<Vec<(f64, usize, u64)>>>;
 
 fn env(src: usize, dst: usize, round: u64, len: usize) -> Envelope {
-    Envelope { src, dst, round, kind: MsgKind::Model, sent_at_s: 0.0, payload: vec![7; len].into() }
+    Envelope {
+        src,
+        dst,
+        round,
+        kind: MsgKind::Model,
+        sent_at_s: 0.0,
+        trace: 0,
+        payload: vec![7; len].into(),
+    }
 }
 
 /// Sends a burst of messages (given payload sizes) to `dst` at t = 0.

@@ -108,12 +108,17 @@ fn wait_for_status(addr: SocketAddr, id: u64, want: &[&str], timeout: Duration) 
 /// Open the SSE stream for a run and read raw bytes until `stop_at`
 /// appears (headers included in the returned text).
 fn read_sse_until(addr: SocketAddr, id: u64, stop_at: &str, timeout: Duration) -> String {
+    read_sse_at(addr, &format!("/runs/{id}/events"), stop_at, timeout)
+}
+
+/// Like [`read_sse_until`], but for an explicit path (query included).
+fn read_sse_at(addr: SocketAddr, path: &str, stop_at: &str, timeout: Duration) -> String {
     let deadline = Instant::now() + timeout;
     let mut stream = TcpStream::connect(addr).expect("sse connect");
     stream
         .set_read_timeout(Some(Duration::from_millis(200)))
         .expect("sse read timeout");
-    let req = format!("GET /runs/{id}/events HTTP/1.1\r\nHost: test\r\n\r\n");
+    let req = format!("GET {path} HTTP/1.1\r\nHost: test\r\n\r\n");
     stream.write_all(req.as_bytes()).expect("sse request");
     let mut raw = Vec::new();
     let mut buf = [0u8; 16 * 1024];
@@ -288,6 +293,89 @@ fn cancelled_1024_node_run_stops_at_round_boundary() {
     // A second DELETE is a conflict: the run already finished.
     let (code, _) = one_shot(daemon.addr, "DELETE", &format!("/runs/{id}"), "");
     assert_eq!(code, 409);
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// SSE cursor hardening: non-numeric cursors fail fast with a 400, and
+/// cursors past the head or issued after the ring closed end cleanly
+/// with an `end` frame instead of hanging the connection.
+#[test]
+fn sse_cursor_edge_cases() {
+    let dir = temp_dir("cursor");
+    let daemon = start_daemon();
+    let addr = daemon.addr;
+    let id = submit(addr, &sim_config("cursor", 4, 4, 2, &dir));
+    wait_for_status(addr, id, &["done"], Duration::from_secs(120));
+
+    // Non-numeric / negative cursors: a clean client error, not a
+    // silent restart from sequence 0.
+    let (code, body) = one_shot(addr, "GET", &format!("/runs/{id}/events?from=abc"), "");
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("integer"), "{body}");
+    let (code, _) = one_shot(addr, "GET", &format!("/runs/{id}/events?from=-1"), "");
+    assert_eq!(code, 400);
+
+    // Resume from 0 after close: full replay, then `end`.
+    let path = format!("/runs/{id}/events?from=0");
+    let text = read_sse_at(addr, &path, "event: end", Duration::from_secs(60));
+    assert!(text.contains("event: run_started"), "{text}");
+    assert!(text.contains("event: run_finished"), "{text}");
+
+    // A cursor far past the head on a closed ring: no replay, just a
+    // prompt `end` — the reader must not wait for events that will
+    // never come.
+    let path = format!("/runs/{id}/events?from=1000000");
+    let text = read_sse_at(addr, &path, "event: end", Duration::from_secs(60));
+    let frames = parse_sse(&text);
+    assert_eq!(frames, vec![("end".to_string(), "{}".to_string())], "{text}");
+
+    daemon.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `GET /runs/:id/trace` serves the Chrome trace for a traced sim run
+/// (artifact-free), and the executor folds the run's spans and round
+/// statistics into the Prometheus registry.
+#[test]
+fn trace_endpoint_and_phase_metrics() {
+    let dir = temp_dir("trace");
+    let daemon = start_daemon();
+    let addr = daemon.addr;
+    let mut cfg = sim_config("traced", 4, 4, 2, &dir);
+    if let Json::Obj(m) = &mut cfg {
+        m.insert("trace".into(), Json::str("full"));
+    }
+    let id = submit(addr, &cfg);
+    wait_for_status(addr, id, &["done"], Duration::from_secs(120));
+
+    let (code, body) = one_shot(addr, "GET", &format!("/runs/{id}/trace"), "");
+    assert_eq!(code, 200, "{body}");
+    let doc = parse(&body).expect("trace JSON");
+    let events = doc.get("traceEvents").as_arr().expect("traceEvents array");
+    assert!(events.iter().any(|e| e.get("ph").as_str() == Some("X")), "no spans");
+    assert!(events.iter().any(|e| e.get("ph").as_str() == Some("s")), "no flow edges");
+    let tracks = events
+        .iter()
+        .filter(|e| e.get("name").as_str() == Some("thread_name"))
+        .count();
+    assert_eq!(tracks, 4, "one thread track per node");
+
+    let (code, metrics) = one_shot(addr, "GET", "/metrics", "");
+    assert_eq!(code, 200);
+    assert!(metrics.contains("decentra_phase_seconds_bucket{phase=\"train\""), "{metrics}");
+    assert!(metrics.contains("decentra_phase_seconds_bucket{phase=\"aggregate\""), "{metrics}");
+    assert!(metrics.contains("decentra_staleness_seconds_bucket"), "{metrics}");
+    assert!(metrics.contains("decentra_round_duration_seconds_count"), "{metrics}");
+    assert!(metrics.contains("decentra_telemetry_dropped_events"), "{metrics}");
+    assert!(metrics.contains("decentra_telemetry_buffered_events"), "{metrics}");
+
+    // An untraced run has no recorder: the trace endpoint is a 404.
+    let plain = submit(addr, &sim_config("untraced", 4, 4, 2, &dir));
+    wait_for_status(addr, plain, &["done"], Duration::from_secs(120));
+    let (code, body) = one_shot(addr, "GET", &format!("/runs/{plain}/trace"), "");
+    assert_eq!(code, 404, "{body}");
 
     daemon.shutdown();
     let _ = std::fs::remove_dir_all(&dir);

@@ -57,6 +57,7 @@ impl GossipNode {
                 round: self.round,
                 kind: MsgKind::Model,
                 sent_at_s: 0.0,
+                trace: 0,
                 payload: payload.clone(),
             });
         }

@@ -1,0 +1,138 @@
+//! End-to-end trace semantics through the artifact-free sim driver.
+//!
+//! The tentpole guarantee: the **virtual** half of a trace (span
+//! starts, durations, flow edges) is a pure function of the config and
+//! seed — bit-identical across scheduler worker counts — while the
+//! wall-clock fields are free to differ run to run. The exports must
+//! match the Chrome trace-event schema and the folded-stack grammar.
+
+use decentralize_rs::config::ExperimentConfig;
+use decentralize_rs::coordinator::RunHooks;
+use decentralize_rs::serve::run_sim;
+use decentralize_rs::trace::{Phase, TraceMode, TraceRecorder, TraceSnapshot};
+use decentralize_rs::util::json::parse;
+
+const NODES: usize = 6;
+
+fn traced_cfg(workers: usize) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = "trace_semantics".into();
+    cfg.nodes = NODES;
+    cfg.rounds = 4;
+    cfg.eval_every = 2;
+    cfg.topology = "ring".into();
+    cfg.network = "none".into();
+    cfg.workers = workers;
+    cfg.trace = "full".into();
+    cfg.train_total = 2048;
+    cfg
+}
+
+/// Run the sim fleet with a full recorder attached and snapshot it.
+fn record(workers: usize) -> TraceSnapshot {
+    let rec = TraceRecorder::new(TraceMode::Full);
+    let hooks = RunHooks { trace: Some(rec.clone()), ..RunHooks::default() };
+    run_sim(&traced_cfg(workers), &hooks).unwrap();
+    rec.snapshot()
+}
+
+#[test]
+fn virtual_layout_is_identical_across_worker_counts() {
+    let base = record(1);
+    assert!(!base.spans.is_empty(), "full tracing must record spans");
+    assert!(!base.flows.is_empty(), "gossip hops must pair into flow edges");
+    assert_eq!(base.dropped_spans, 0);
+    assert_eq!(base.dropped_flows, 0);
+    let sig = base.virtual_signature();
+    for workers in [4, 8] {
+        let other = record(workers);
+        assert_eq!(sig, other.virtual_signature(), "layout diverged at {workers} workers");
+    }
+}
+
+#[test]
+fn spans_cover_the_round_phases() {
+    let snap = record(2);
+    for phase in [Phase::Train, Phase::Encode, Phase::Aggregate, Phase::Deliver] {
+        assert!(
+            snap.spans.iter().any(|s| s.phase == phase),
+            "no {} span recorded",
+            phase.name()
+        );
+    }
+}
+
+#[test]
+fn flow_edges_connect_send_to_delivery() {
+    let snap = record(2);
+    for f in &snap.flows {
+        assert!(f.recv_virt_s >= f.send_virt_s, "flow {} arrives before it is sent", f.id);
+        assert!((f.src as usize) < NODES && (f.dst as usize) < NODES);
+        assert_ne!(f.src, f.dst, "ring gossip never self-loops");
+    }
+    // Every round gossips both directions around the ring.
+    assert!(snap.flows.len() >= NODES, "{} flows for {NODES} nodes", snap.flows.len());
+}
+
+#[test]
+fn chrome_export_matches_the_trace_event_schema() {
+    let snap = record(2);
+    let v = parse(&snap.to_chrome_json()).unwrap();
+    assert_eq!(v.get("displayTimeUnit").as_str(), Some("ms"));
+    assert_eq!(v.get("otherData").get("clock").as_str(), Some("virtual"));
+    let events = v.get("traceEvents").as_arr().expect("traceEvents array");
+    let mut tracks = std::collections::BTreeSet::new();
+    let (mut spans, mut starts, mut ends) = (0usize, 0usize, 0usize);
+    for ev in events {
+        match ev.get("ph").as_str().expect("every event has ph") {
+            "M" => {
+                if ev.get("name").as_str() == Some("thread_name") {
+                    tracks.insert(ev.get("tid").as_f64().unwrap() as u64);
+                }
+            }
+            "X" => {
+                spans += 1;
+                assert!(ev.get("ts").as_f64().is_some());
+                assert!(ev.get("dur").as_f64().is_some());
+                assert!(ev.get("args").get("wall_dur_s").as_f64().is_some());
+            }
+            "s" => starts += 1,
+            "f" => {
+                ends += 1;
+                assert_eq!(ev.get("bp").as_str(), Some("e"));
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert_eq!(tracks.len(), NODES, "one thread track per node");
+    assert_eq!(spans, snap.spans.len());
+    assert_eq!(starts, snap.flows.len());
+    assert_eq!(starts, ends, "every flow start pairs with a finish");
+    assert!(starts > 0);
+}
+
+#[test]
+fn folded_stacks_follow_the_grammar() {
+    let snap = record(2);
+    let folded = snap.to_folded();
+    assert!(!folded.is_empty());
+    for line in folded.lines() {
+        let (stack, dur) = line.rsplit_once(' ').expect("stack <weight>");
+        let _: u64 = dur.parse().expect("integer microsecond weight");
+        let parts: Vec<&str> = stack.split(';').collect();
+        assert_eq!(parts.len(), 3, "node;round;phase in {line:?}");
+        assert!(parts[0].starts_with("node"));
+        assert!(parts[1].starts_with("round"));
+    }
+}
+
+#[test]
+fn off_and_sampled_recorders_stay_consistent() {
+    // sample:0 never samples; the scheduler still runs to completion.
+    let rec = TraceRecorder::new(TraceMode::Sample(0.0));
+    let hooks = RunHooks { trace: Some(rec.clone()), ..RunHooks::default() };
+    run_sim(&traced_cfg(2), &hooks).unwrap();
+    let snap = rec.snapshot();
+    assert!(snap.spans.is_empty());
+    assert!(snap.flows.is_empty());
+}
