@@ -37,7 +37,8 @@ use decentralize_rs::bench::{run, BenchResult};
 use decentralize_rs::communication::{Envelope, MsgKind, Payload};
 use decentralize_rs::compression::{FloatCodec, Fp16, Qsgd, RawF32};
 use decentralize_rs::graph;
-use decentralize_rs::kernels::{reference, Scratch};
+use decentralize_rs::kernels::fold::FoldCtx;
+use decentralize_rs::kernels::{reference, simd_active, Scratch};
 use decentralize_rs::model::ParamVec;
 use decentralize_rs::rng::Xoshiro256pp;
 use decentralize_rs::scheduler::{EventNode, NodeCtx, Scheduler, Wake};
@@ -46,6 +47,17 @@ use decentralize_rs::trace::{TraceMode, TraceRecorder};
 use decentralize_rs::util::json::{parse, Json};
 
 const NEIGHBORS: usize = 6;
+
+/// Ratchet key for the dispatched-kernel rows: the `simd` feature swaps
+/// the lane backend, so simd-on and simd-off runs accumulate separate
+/// histories and each ratchets against its own baseline.
+fn lane_mode() -> &'static str {
+    if simd_active() {
+        "kernel+simd"
+    } else {
+        "kernel"
+    }
+}
 
 fn rand_model(dim: usize, seed: u64) -> ParamVec {
     let mut rng = Xoshiro256pp::new(seed);
@@ -236,7 +248,7 @@ fn main() {
         kernel.print_throughput(elems, "param_neighbor");
         rows.push(row(
             "aggregate/full",
-            "kernel",
+            lane_mode(),
             dim,
             &kernel,
             elems,
@@ -262,12 +274,13 @@ fn main() {
             quick,
         ));
         let speedup = scalar.mean_s / kernel.mean_s;
-        println!("aggregate/full: kernel is {speedup:.2}x the scalar reference");
+        println!("aggregate/full: {} is {speedup:.2}x the scalar reference", lane_mode());
         speedup
     };
     rows.push(Json::obj(vec![
         ("figure", Json::str("hotpath")),
         ("bench", Json::str("aggregate/full/speedup")),
+        ("mode", Json::str(lane_mode())),
         ("dim", Json::num(dim as f64)),
         ("neighbors", Json::num(NEIGHBORS as f64)),
         ("speedup_vs_scalar", Json::num(speedup)),
@@ -287,12 +300,77 @@ fn main() {
         sh.set_init(&init);
         let mut model = rand_model(dim, 1);
         let mut scratch = Scratch::new();
-        let name = format!("aggregate/{}", spec.split(':').next().unwrap());
+        // Keyed by the full spec: "full:fp16" must not share a ratchet
+        // history with the dense section-1 "aggregate/full" row.
+        let name = format!("aggregate/{spec}");
         let res = run(&name, budget_ms, || {
             sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
         });
         res.print_throughput(elems, "param_neighbor");
-        rows.push(row(&name, "kernel", dim, &res, elems, "param_neighbors_per_s", quick));
+        rows.push(row(&name, lane_mode(), dim, &res, elems, "param_neighbors_per_s", quick));
+    }
+
+    // --- fold plans at high degree: the per-neighbor fold is the
+    //     round-rate bottleneck at degree ≫ 8; compare the serial chain
+    //     against a tree:8 plan (same kernels, grouped reduction).
+    {
+        let fold_dim = dim / 4;
+        let fold_degree = 64usize;
+        let fold_init = ParamVec::zeros(fold_dim);
+        let payloads: Vec<Vec<u8>> = (0..fold_degree)
+            .map(|s| {
+                let mut sh = sharing::from_spec("full", fold_dim, 5000 + s as u64).unwrap();
+                sh.set_init(&fold_init);
+                sh.outgoing(&rand_model(fold_dim, 6000 + s as u64), 0).unwrap()
+            })
+            .collect();
+        let wf = 1.0 / (fold_degree + 1) as f64;
+        let self_wf = 1.0 - fold_degree as f64 * wf;
+        let received: Vec<Received> = payloads
+            .iter()
+            .enumerate()
+            .map(|(s, p)| Received { src: s, weight: wf, payload: p })
+            .collect();
+        let fold_elems = (fold_dim * fold_degree) as f64;
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let mut serial_s = f64::NAN;
+        for (mode, fold) in
+            [("fold:serial", FoldCtx::serial()), ("fold:tree:8", FoldCtx::tree(8, workers))]
+        {
+            let mut sh = sharing::from_spec("full", fold_dim, 0).unwrap();
+            sh.set_fold(fold);
+            let mut model = rand_model(fold_dim, 1);
+            let mut scratch = Scratch::new();
+            let res = run(&format!("aggregate/full_deg{fold_degree}/{mode}"), budget_ms, || {
+                sh.aggregate_with(&mut model, self_wf, &received, &mut scratch).unwrap();
+            });
+            res.print_throughput(fold_elems, "param_neighbor");
+            rows.push(Json::obj(vec![
+                ("figure", Json::str("hotpath")),
+                ("bench", Json::str(format!("aggregate/full_deg{fold_degree}"))),
+                ("mode", Json::str(mode)),
+                ("dim", Json::num(fold_dim as f64)),
+                ("neighbors", Json::num(fold_degree as f64)),
+                ("workers", Json::num(workers as f64)),
+                ("simd", Json::Bool(simd_active())),
+                ("mean_s", Json::num(res.mean_s)),
+                ("median_s", Json::num(res.median_s)),
+                ("min_s", Json::num(res.min_s)),
+                ("iters", Json::num(res.iters as f64)),
+                ("throughput", Json::num(fold_elems / res.mean_s)),
+                ("throughput_unit", Json::str("param_neighbors_per_s")),
+                ("quick", Json::Bool(quick)),
+            ]));
+            if mode == "fold:serial" {
+                serial_s = res.mean_s;
+            } else {
+                println!(
+                    "aggregate/full_deg{fold_degree}: tree:8 on {workers} workers is \
+                     {:.2}x the serial fold",
+                    serial_s / res.mean_s
+                );
+            }
+        }
     }
 
     // --- 2. codec encode / decode throughput (reusable decode buffer,

@@ -99,6 +99,13 @@ pub struct ExperimentConfig {
     pub runner: String,
     /// Worker threads for the scheduler runner (0 = number of cores).
     pub workers: usize,
+    /// Per-neighbor aggregation fold plan: `serial` (left-to-right, the
+    /// historical default) | `tree:<width>` (group neighbors into
+    /// `<width>`-wide leaf groups folded concurrently, then combine in
+    /// group order). The reduction-tree shape is a pure function of
+    /// (degree, width), so results are bit-identical at any worker
+    /// count. See [`crate::kernels::fold`].
+    pub fold: String,
     /// Model-state ownership: `owned` (every node clones the init, the
     /// historical default) | `shared` (one copy-on-write
     /// [`crate::store::ParamStore`]; nodes materialize a private shard
@@ -152,6 +159,7 @@ impl Default for ExperimentConfig {
             link_model: "uniform".into(),
             runner: "scheduler".into(),
             workers: 0,
+            fold: "serial".into(),
             param_store: "owned".into(),
             page_size: 1024,
             trace: "off".into(),
@@ -172,7 +180,7 @@ impl ExperimentConfig {
             "partition", "topology", "dynamic", "sharing", "mode", "deadline", "staleness",
             "late", "secure", "mask_scale", "churn",
             "churn_trace", "byzantine", "lr", "local_steps", "network", "step_time", "link_model",
-            "runner", "workers", "param_store", "page_size", "trace",
+            "runner", "workers", "fold", "param_store", "page_size", "trace",
             "artifacts_dir", "results_dir",
         ];
         for k in obj.keys() {
@@ -218,6 +226,7 @@ impl ExperimentConfig {
             link_model: s("link_model", &d.link_model),
             runner: s("runner", &d.runner),
             workers: n("workers", d.workers),
+            fold: s("fold", &d.fold),
             param_store: s("param_store", &d.param_store),
             page_size: n("page_size", d.page_size),
             trace: s("trace", &d.trace),
@@ -268,6 +277,7 @@ impl ExperimentConfig {
             ("link_model", Json::str(self.link_model.clone())),
             ("runner", Json::str(self.runner.clone())),
             ("workers", Json::num(self.workers as f64)),
+            ("fold", Json::str(self.fold.clone())),
             ("param_store", Json::str(self.param_store.clone())),
             ("page_size", Json::num(self.page_size as f64)),
             ("trace", Json::str(self.trace.clone())),
@@ -385,6 +395,8 @@ impl ExperimentConfig {
         // The coordinator owns the runner-name mapping; delegate so a new
         // runner only has to be registered in one place.
         crate::coordinator::runner_from_spec(&self.runner, self.workers).map(|_| ())?;
+        crate::kernels::fold::FoldSpec::parse(&self.fold)
+            .with_context(|| format!("invalid fold {:?}", self.fold))?;
         if !["owned", "shared", "paged"].contains(&self.param_store.as_str()) {
             bail!(
                 "unknown param_store {:?} (expected owned | shared | paged)",
@@ -469,6 +481,15 @@ mod tests {
         cfg = ExperimentConfig::default();
         cfg.runner = "fibers".into();
         assert!(cfg.validate().is_err());
+        cfg = ExperimentConfig::default();
+        cfg.fold = "tree".into();
+        assert!(cfg.validate().is_err()); // serial | tree:<width> only
+        cfg = ExperimentConfig::default();
+        cfg.fold = "tree:1".into();
+        assert!(cfg.validate().is_err()); // width must be >= 2
+        cfg = ExperimentConfig::default();
+        cfg.fold = "tree:8".into();
+        cfg.validate().unwrap();
         cfg = ExperimentConfig::default();
         cfg.param_store = "mmap".into();
         assert!(cfg.validate().is_err()); // owned | shared | paged only

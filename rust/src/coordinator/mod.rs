@@ -397,6 +397,18 @@ fn build_sharing(
         mix_seed(&[cfg.seed, id as u64]),
     )?;
     s.set_init(init);
+    // The fold plan's shape is fixed by the spec alone; workers only
+    // bound the executor, so reusing the scheduler's worker budget is
+    // safe (bit-identical results at any count).
+    let workers = if cfg.workers > 0 {
+        cfg.workers
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    s.set_fold(crate::kernels::fold::FoldCtx {
+        spec: crate::kernels::fold::FoldSpec::parse(&cfg.fold)?,
+        workers,
+    });
     Ok(s)
 }
 

@@ -1,0 +1,313 @@
+//! Parallel per-neighbor fold plans for high-degree aggregation.
+//!
+//! At degree ≫ 8 the per-round neighbor fold dominates round rate, and
+//! it is embarrassingly parallel *if* the reduction keeps a fixed
+//! shape. This module supplies that shape: a [`FoldSpec`] splits the
+//! received messages into contiguous **leaf groups** of `width`
+//! messages, each group folds into its own partial accumulator, and the
+//! partials are combined into the model **sequentially in group order**.
+//!
+//! **The determinism contract.** The reduction tree's shape is a pure
+//! function of `(degree, width)` — it never depends on the worker
+//! count, thread scheduling, or arrival order. Groups are data-disjoint
+//! (each owns its accumulator and staging buffers), so any number of
+//! workers produces bit-identical results; `workers = 1` runs the exact
+//! same plan inline. This is the same discipline as the sharded event
+//! heaps: parallelism changes *when* work happens, never *what* is
+//! computed.
+//!
+//! Two special cases pin the semantics:
+//! * `serial` (the default) is one group folded straight into the
+//!   model — the pre-fold behavior, bit for bit.
+//! * `tree:<width>` with `width >= degree` is also one group, so it is
+//!   bit-identical to `serial` at any worker count. With
+//!   `width < degree` the partial combine re-associates the weighted
+//!   sum — a *different but deterministic* f32 rounding trajectory,
+//!   reproducible at any worker count (floating-point addition is not
+//!   associative, so no grouped reduction can match the serial chain
+//!   bitwise in general; the tree trades that for scalability and pins
+//!   its own result instead).
+//!
+//! Execution uses `std::thread::scope` so borrows of the model, the
+//! arena partials, and the received payload slices need no `Arc`
+//! plumbing. The `workers <= 1` (or single-group) path never spawns and
+//! performs **zero heap allocations** — it is the path the
+//! `hotpath_alloc` freeze pins; multi-worker scopes pay O(workers)
+//! executor scaffolding per call, which is outside the buffer-reuse
+//! contract (documented in `docs/PERFORMANCE.md`).
+
+use anyhow::{anyhow, bail, Result};
+
+/// How to fold per-neighbor contributions: one serial chain, or a
+/// fixed-shape grouped tree. Parsed from the `fold` config key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FoldSpec {
+    /// Fold every message into the model in order (the default).
+    Serial,
+    /// Split messages into contiguous groups of `width`; fold each group
+    /// into a private partial, then combine partials in group order.
+    Tree {
+        /// Messages per leaf group (≥ 2).
+        width: usize,
+    },
+}
+
+impl FoldSpec {
+    /// Parse `"serial"` | `"tree:<width>"` (width ≥ 2).
+    pub fn parse(spec: &str) -> Result<FoldSpec> {
+        if spec == "serial" {
+            return Ok(FoldSpec::Serial);
+        }
+        if let Some(w) = spec.strip_prefix("tree:") {
+            let width: usize = w
+                .parse()
+                .map_err(|_| anyhow!("fold: bad tree width {w:?} (expected an integer)"))?;
+            if width < 2 {
+                bail!("fold: tree width must be >= 2, got {width}");
+            }
+            return Ok(FoldSpec::Tree { width });
+        }
+        bail!("unknown fold spec {spec:?} (expected \"serial\" | \"tree:<width>\")")
+    }
+}
+
+/// A fold plan bound to an executor width: the spec that fixes the
+/// reduction shape plus the worker budget that only affects wall-clock.
+/// Strategies receive one via [`crate::sharing::Sharing::set_fold`].
+#[derive(Debug, Clone, Copy)]
+pub struct FoldCtx {
+    pub spec: FoldSpec,
+    /// Worker threads the fold may use (≥ 1). Purely an executor knob:
+    /// results are bit-identical at any value by construction.
+    pub workers: usize,
+}
+
+impl Default for FoldCtx {
+    fn default() -> FoldCtx {
+        FoldCtx { spec: FoldSpec::Serial, workers: 1 }
+    }
+}
+
+impl FoldCtx {
+    /// The serial single-chain plan (what every strategy starts with).
+    pub fn serial() -> FoldCtx {
+        FoldCtx::default()
+    }
+
+    /// A grouped tree plan of `width` messages per leaf.
+    pub fn tree(width: usize, workers: usize) -> FoldCtx {
+        FoldCtx { spec: FoldSpec::Tree { width }, workers: workers.max(1) }
+    }
+
+    /// Leaf-group count for `degree` messages. Depends only on
+    /// `(degree, spec)`, never on `workers` — the determinism contract.
+    pub fn groups(&self, degree: usize) -> usize {
+        match self.spec {
+            FoldSpec::Serial => 1,
+            FoldSpec::Tree { width } => {
+                if degree == 0 {
+                    1
+                } else {
+                    degree.div_ceil(width)
+                }
+            }
+        }
+    }
+
+    /// Half-open message range of leaf group `g` (contiguous slices in
+    /// canonical received order, so the plan is arrival-order free once
+    /// the caller canonicalizes).
+    pub fn group_range(&self, degree: usize, g: usize) -> std::ops::Range<usize> {
+        match self.spec {
+            FoldSpec::Serial => 0..degree,
+            FoldSpec::Tree { width } => (g * width)..((g + 1) * width).min(degree),
+        }
+    }
+}
+
+/// Run `own()` on the calling thread while `f(i, &mut items[i])` runs
+/// once per item across up to `workers` scoped threads. This is the
+/// tree-fold executor: `own` folds leaf group 0 into the model while
+/// item `i` stages leaf group `i + 1` into its arena partial.
+///
+/// `workers <= 1` (or an empty item slice) degrades to `own()` followed
+/// by a sequential loop — no spawn, no allocation, same results: item
+/// order never carries meaning because items are data-disjoint.
+/// Worker errors and panics surface as `Err` after every job finished.
+pub fn run_fold_jobs<T, F, G>(workers: usize, items: &mut [T], f: F, own: G) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize, &mut T) -> Result<()> + Sync,
+    G: FnOnce() -> Result<()>,
+{
+    let jobs = items.len();
+    if workers <= 1 || jobs == 0 {
+        own()?;
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item)?;
+        }
+        return Ok(());
+    }
+    let chunk = jobs.div_ceil(workers.min(jobs));
+    let mut worker_results: Vec<Result<()>> = Vec::new();
+    let own_result = std::thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, chunk_items)| {
+                let f = &f;
+                s.spawn(move || -> Result<()> {
+                    for (i, item) in chunk_items.iter_mut().enumerate() {
+                        f(ci * chunk + i, item)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        let own_result = own();
+        worker_results = handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("fold worker panicked")))
+            })
+            .collect();
+        own_result
+    });
+    own_result?;
+    for r in worker_results {
+        r?;
+    }
+    Ok(())
+}
+
+/// Row-parallel variant for staged candidate matrices: split `buf` into
+/// `buf.len() / per` rows of `per` elements and run `f(row, slice)` on
+/// each, spreading contiguous row slabs over up to `workers` scoped
+/// threads. `workers <= 1` loops inline with zero allocations. Used by
+/// the robust strategies to decode neighbor payloads into
+/// `Scratch::values` concurrently (pure per-row byte decode, so results
+/// are trivially bit-identical at any worker count).
+pub fn run_row_jobs<F>(workers: usize, buf: &mut [f32], per: usize, f: F) -> Result<()>
+where
+    F: Fn(usize, &mut [f32]) -> Result<()> + Sync,
+{
+    assert!(per > 0 && buf.len() % per == 0);
+    let rows = buf.len() / per;
+    if workers <= 1 || rows <= 1 {
+        for (r, row) in buf.chunks_exact_mut(per).enumerate() {
+            f(r, row)?;
+        }
+        return Ok(());
+    }
+    let slab = rows.div_ceil(workers.min(rows));
+    let results: Vec<Result<()>> = std::thread::scope(|s| {
+        let handles: Vec<_> = buf
+            .chunks_mut(per * slab)
+            .enumerate()
+            .map(|(ci, slab_buf)| {
+                let f = &f;
+                s.spawn(move || -> Result<()> {
+                    for (r, row) in slab_buf.chunks_exact_mut(per).enumerate() {
+                        f(ci * slab + r, row)?;
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("fold worker panicked")))
+            })
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_serial_and_tree() {
+        assert_eq!(FoldSpec::parse("serial").unwrap(), FoldSpec::Serial);
+        assert_eq!(FoldSpec::parse("tree:8").unwrap(), FoldSpec::Tree { width: 8 });
+        assert_eq!(FoldSpec::parse("tree:2").unwrap(), FoldSpec::Tree { width: 2 });
+        assert!(FoldSpec::parse("tree:1").is_err());
+        assert!(FoldSpec::parse("tree:0").is_err());
+        assert!(FoldSpec::parse("tree:").is_err());
+        assert!(FoldSpec::parse("tree:x").is_err());
+        assert!(FoldSpec::parse("parallel").is_err());
+    }
+
+    #[test]
+    fn group_shape_depends_only_on_degree_and_width() {
+        let t = FoldCtx::tree(8, 4);
+        assert_eq!(t.groups(0), 1);
+        assert_eq!(t.groups(8), 1);
+        assert_eq!(t.groups(9), 2);
+        assert_eq!(t.groups(33), 5);
+        assert_eq!(t.group_range(33, 0), 0..8);
+        assert_eq!(t.group_range(33, 4), 32..33);
+        // Worker count never changes the shape.
+        for w in [1, 2, 7, 64] {
+            let t2 = FoldCtx::tree(8, w);
+            assert_eq!(t2.groups(33), 5);
+            assert_eq!(t2.group_range(33, 2), t.group_range(33, 2));
+        }
+        // width >= degree is a single group == the serial chain.
+        assert_eq!(FoldCtx::tree(64, 4).groups(33), 1);
+        assert_eq!(FoldCtx::tree(64, 4).group_range(33, 0), 0..33);
+        assert_eq!(FoldCtx::serial().groups(33), 1);
+        assert_eq!(FoldCtx::serial().group_range(33, 0), 0..33);
+    }
+
+    #[test]
+    fn fold_jobs_cover_every_item_once_at_any_worker_count() {
+        for workers in [1usize, 2, 3, 8, 16] {
+            let mut items = vec![0u64; 13];
+            run_fold_jobs(workers, &mut items, |i, slot| {
+                *slot += 1 + i as u64;
+                Ok(())
+            }, || Ok(()))
+            .unwrap();
+            let want: Vec<u64> = (0..13).map(|i| 1 + i as u64).collect();
+            assert_eq!(items, want, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fold_jobs_propagate_errors_from_workers_and_own() {
+        let mut items = vec![0u8; 6];
+        let err = run_fold_jobs(4, &mut items, |i, _| {
+            if i == 3 {
+                bail!("group 3 failed")
+            }
+            Ok(())
+        }, || Ok(()));
+        assert!(err.is_err());
+        let err = run_fold_jobs(4, &mut items, |_, _| Ok(()), || bail!("own failed"));
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn row_jobs_decode_every_row_once() {
+        for workers in [1usize, 3, 8] {
+            let mut buf = vec![0.0f32; 7 * 5];
+            run_row_jobs(workers, &mut buf, 5, |r, row| {
+                for (i, v) in row.iter_mut().enumerate() {
+                    *v = (r * 5 + i) as f32;
+                }
+                Ok(())
+            })
+            .unwrap();
+            let want: Vec<f32> = (0..35).map(|i| i as f32).collect();
+            assert_eq!(buf, want, "workers={workers}");
+        }
+    }
+}

@@ -1,0 +1,392 @@
+//! Explicit SSE2 lane implementations of the dense kernels (the `simd`
+//! feature's hot half; `portable` is the auto-vectorized fallback).
+//!
+//! SSE2 is part of the x86_64 baseline ABI, so these intrinsics are
+//! always available on this architecture — no runtime dispatch, no
+//! `#[target_feature]` shims, and the module is compiled only under
+//! `cfg(all(feature = "simd", target_arch = "x86_64"))`.
+//!
+//! **Bit-identity discipline** (same hard contract as `portable`):
+//!
+//! * one vector op = four independent IEEE-754 scalar ops — never a
+//!   fused multiply-add (`_mm_mul_ps` + `_mm_add_ps` round twice,
+//!   exactly like the scalar `acc += a * v`), never a reassociation of
+//!   one element's arithmetic;
+//! * byte decodes use unaligned vector loads, which on little-endian
+//!   x86 are exactly `f32::from_le_bytes` four at a time;
+//! * f32→f64 widening (`_mm_cvtps_pd`) is exact, and every f64
+//!   reduction (`pairwise_sq_dist`) extracts the vector-computed squares
+//!   and adds them **sequentially in element order**, matching the
+//!   scalar sum bit for bit;
+//! * order statistics (`trimmed_mean` / `coord_median`) keep the sort
+//!   and the ascending kept-range sum scalar (order-pinned); what
+//!   vectorizes is the admitted-range counting, via the integer
+//!   transform that makes signed i32 comparison agree with
+//!   [`f32::total_cmp`] — including NaN totals, which is what the
+//!   proptests pin.
+//!
+//! Inputs are pre-validated by the `kernels` wrappers (lengths checked,
+//! errors raised there), so bodies here only `debug_assert`.
+
+use std::arch::x86_64::{
+    __m128i, _mm_add_pd, _mm_add_ps, _mm_castps_si128, _mm_castsi128_ps, _mm_cmpgt_epi32,
+    _mm_cmplt_epi32, _mm_cvtps_pd, _mm_loadu_pd, _mm_loadu_ps, _mm_movehl_ps, _mm_movemask_ps,
+    _mm_mul_pd, _mm_mul_ps, _mm_or_si128, _mm_set1_epi32, _mm_set1_pd, _mm_set1_ps,
+    _mm_srai_epi32, _mm_srli_epi32, _mm_storeu_pd, _mm_storeu_ps, _mm_sub_ps, _mm_xor_si128,
+};
+
+/// `x[i] *= alpha`
+pub fn scale(x: &mut [f32], alpha: f32) {
+    unsafe {
+        let va = _mm_set1_ps(alpha);
+        let n = x.len();
+        let p = x.as_mut_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            _mm_storeu_ps(p.add(i), _mm_mul_ps(_mm_loadu_ps(p.add(i)), va));
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) *= alpha;
+            i += 1;
+        }
+    }
+}
+
+/// `acc[i] += alpha * x[i]`
+pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    unsafe {
+        let va = _mm_set1_ps(alpha);
+        let n = acc.len();
+        let p = acc.as_mut_ptr();
+        let q = x.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let prod = _mm_mul_ps(va, _mm_loadu_ps(q.add(i)));
+            _mm_storeu_ps(p.add(i), _mm_add_ps(_mm_loadu_ps(p.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) += alpha * *q.add(i);
+            i += 1;
+        }
+    }
+}
+
+/// `acc[i] += alpha * (x[i] - y[i])`
+pub fn diff_axpy(acc: &mut [f32], alpha: f32, x: &[f32], y: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    debug_assert_eq!(acc.len(), y.len());
+    unsafe {
+        let va = _mm_set1_ps(alpha);
+        let n = acc.len();
+        let p = acc.as_mut_ptr();
+        let (qx, qy) = (x.as_ptr(), y.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            let d = _mm_sub_ps(_mm_loadu_ps(qx.add(i)), _mm_loadu_ps(qy.add(i)));
+            let prod = _mm_mul_ps(va, d);
+            _mm_storeu_ps(p.add(i), _mm_add_ps(_mm_loadu_ps(p.add(i)), prod));
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) += alpha * (*qx.add(i) - *qy.add(i));
+            i += 1;
+        }
+    }
+}
+
+/// `acc[i] += alpha * f32_le(bytes[4i..])` — length pre-validated.
+pub fn decode_le_axpy(acc: &mut [f32], alpha: f32, bytes: &[u8]) {
+    debug_assert_eq!(bytes.len(), acc.len() * 4);
+    unsafe {
+        let va = _mm_set1_ps(alpha);
+        let n = acc.len();
+        let p = acc.as_mut_ptr();
+        let q = bytes.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(q.add(4 * i).cast());
+            _mm_storeu_ps(p.add(i), _mm_add_ps(_mm_loadu_ps(p.add(i)), _mm_mul_ps(va, v)));
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) += alpha * q.add(4 * i).cast::<f32>().read_unaligned();
+            i += 1;
+        }
+    }
+}
+
+/// `acc[i] = (acc[i] + a1·v1[i]) + a2·v2[i]` — both payloads
+/// pre-validated; two sequential adds per element, one accumulator pass.
+pub fn decode_le_axpy2(acc: &mut [f32], a1: f32, b1: &[u8], a2: f32, b2: &[u8]) {
+    debug_assert_eq!(b1.len(), acc.len() * 4);
+    debug_assert_eq!(b2.len(), acc.len() * 4);
+    unsafe {
+        let va1 = _mm_set1_ps(a1);
+        let va2 = _mm_set1_ps(a2);
+        let n = acc.len();
+        let p = acc.as_mut_ptr();
+        let (q1, q2) = (b1.as_ptr(), b2.as_ptr());
+        let mut i = 0;
+        while i + 4 <= n {
+            let v1 = _mm_loadu_ps(q1.add(4 * i).cast());
+            let v2 = _mm_loadu_ps(q2.add(4 * i).cast());
+            let mut a = _mm_loadu_ps(p.add(i));
+            a = _mm_add_ps(a, _mm_mul_ps(va1, v1));
+            a = _mm_add_ps(a, _mm_mul_ps(va2, v2));
+            _mm_storeu_ps(p.add(i), a);
+            i += 4;
+        }
+        while i < n {
+            let v1 = q1.add(4 * i).cast::<f32>().read_unaligned();
+            let v2 = q2.add(4 * i).cast::<f32>().read_unaligned();
+            *p.add(i) = (*p.add(i) + a1 * v1) + a2 * v2;
+            i += 1;
+        }
+    }
+}
+
+/// `acc[i] += w * (f32_le(bytes) as f64)` — length pre-validated;
+/// `_mm_cvtps_pd` widening is exact, so each lane is the scalar op.
+pub fn decode_le_axpy_widen(acc: &mut [f64], w: f64, bytes: &[u8]) {
+    debug_assert_eq!(bytes.len(), acc.len() * 4);
+    unsafe {
+        let vw = _mm_set1_pd(w);
+        let n = acc.len();
+        let p = acc.as_mut_ptr();
+        let q = bytes.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(q.add(4 * i).cast());
+            let lo = _mm_cvtps_pd(v);
+            let hi = _mm_cvtps_pd(_mm_movehl_ps(v, v));
+            let a_lo = _mm_add_pd(_mm_loadu_pd(p.add(i)), _mm_mul_pd(vw, lo));
+            let a_hi = _mm_add_pd(_mm_loadu_pd(p.add(i + 2)), _mm_mul_pd(vw, hi));
+            _mm_storeu_pd(p.add(i), a_lo);
+            _mm_storeu_pd(p.add(i + 2), a_hi);
+            i += 4;
+        }
+        while i < n {
+            *p.add(i) += w * q.add(4 * i).cast::<f32>().read_unaligned() as f64;
+            i += 1;
+        }
+    }
+}
+
+/// `acc[idx[j]] += alpha * vals[j]` — the products vectorize (they are
+/// independent of the accumulator), the indexed adds stay in `j` order,
+/// so duplicate indices fold exactly as the scalar loop does.
+pub fn scatter_axpy(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32]) {
+    debug_assert_eq!(indices.len(), vals.len());
+    unsafe {
+        let va = _mm_set1_ps(alpha);
+        let n = indices.len();
+        let mut prod = [0.0f32; 4];
+        let mut j = 0;
+        while j + 4 <= n {
+            _mm_storeu_ps(
+                prod.as_mut_ptr(),
+                _mm_mul_ps(va, _mm_loadu_ps(vals.as_ptr().add(j))),
+            );
+            for (t, &p) in prod.iter().enumerate() {
+                acc[*indices.get_unchecked(j + t) as usize] += p;
+            }
+            j += 4;
+        }
+        while j < n {
+            acc[indices[j] as usize] += alpha * vals[j];
+            j += 1;
+        }
+    }
+}
+
+/// `acc[idx[j]] += alpha * (vals[j] - own[idx[j]])` — `own` is a
+/// snapshot disjoint from `acc`, so gathering four of its values up
+/// front is exact even under duplicate indices; adds stay in `j` order.
+pub fn scatter_blend(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32], own: &[f32]) {
+    debug_assert_eq!(indices.len(), vals.len());
+    debug_assert_eq!(acc.len(), own.len());
+    unsafe {
+        let va = _mm_set1_ps(alpha);
+        let n = indices.len();
+        let mut gathered = [0.0f32; 4];
+        let mut prod = [0.0f32; 4];
+        let mut j = 0;
+        while j + 4 <= n {
+            for (t, g) in gathered.iter_mut().enumerate() {
+                *g = own[*indices.get_unchecked(j + t) as usize];
+            }
+            let d = _mm_sub_ps(
+                _mm_loadu_ps(vals.as_ptr().add(j)),
+                _mm_loadu_ps(gathered.as_ptr()),
+            );
+            _mm_storeu_ps(prod.as_mut_ptr(), _mm_mul_ps(va, d));
+            for (t, &p) in prod.iter().enumerate() {
+                acc[*indices.get_unchecked(j + t) as usize] += p;
+            }
+            j += 4;
+        }
+        while j < n {
+            let i = indices[j] as usize;
+            acc[i] += alpha * (vals[j] - own[i]);
+            j += 1;
+        }
+    }
+}
+
+/// The [`f32::total_cmp`] integer transform, four lanes at a time:
+/// signed comparison of `b ^ ((b >>a 31) >>l 1)` orders exactly like the
+/// total order on floats (sign-magnitude → two's complement).
+#[inline]
+unsafe fn total_cmp_keys(bits: __m128i) -> __m128i {
+    _mm_xor_si128(bits, _mm_srli_epi32(_mm_srai_epi32(bits, 31), 1))
+}
+
+/// `admitted[r] += 1.0` for every `col[r]` inside `[lo, hi]` under the
+/// total order — the vectorized half of the robust order-statistic
+/// kernels. Bit-for-bit the scalar `total_cmp` range test (NaNs
+/// included): the key transform makes signed i32 compares agree with
+/// `f32::total_cmp` exactly.
+fn admitted_in_range(col: &[f32], lo: f32, hi: f32, admitted: &mut [f64]) {
+    debug_assert!(admitted.len() >= col.len());
+    unsafe {
+        let klo = total_cmp_keys(_mm_set1_epi32(lo.to_bits() as i32));
+        let khi = total_cmp_keys(_mm_set1_epi32(hi.to_bits() as i32));
+        let n = col.len();
+        let mut r = 0;
+        while r + 4 <= n {
+            let k = total_cmp_keys(_mm_castps_si128(_mm_loadu_ps(col.as_ptr().add(r))));
+            let outside = _mm_or_si128(_mm_cmplt_epi32(k, klo), _mm_cmpgt_epi32(k, khi));
+            let mask = _mm_movemask_ps(_mm_castsi128_ps(outside));
+            for t in 0..4 {
+                if mask & (1 << t) == 0 {
+                    *admitted.get_unchecked_mut(r + t) += 1.0;
+                }
+            }
+            r += 4;
+        }
+        while r < n {
+            let v = col[r];
+            if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
+                admitted[r] += 1.0;
+            }
+            r += 1;
+        }
+    }
+}
+
+/// Coordinate-wise trimmed mean; see the `kernels` wrapper for the
+/// contract. `gather` holds the unsorted column copy in its first
+/// `rows` slots and the sorted copy in the next `rows` (hence the
+/// `2 * rows` capacity contract); sort and ascending f64 sum stay
+/// scalar (order-pinned), the admitted counting vectorizes.
+pub fn trimmed_mean(
+    out: &mut [f32],
+    vals: &[f32],
+    rows: usize,
+    trim: usize,
+    gather: &mut [f32],
+    admitted: &mut [f64],
+) {
+    debug_assert_eq!(vals.len(), rows * out.len());
+    debug_assert!(gather.len() >= 2 * rows && admitted.len() >= rows);
+    debug_assert!(2 * trim < rows);
+    let dim = out.len();
+    let kept = (rows - 2 * trim) as f64;
+    let (unsorted, rest) = gather.split_at_mut(rows);
+    let sorted = &mut rest[..rows];
+    for c in 0..dim {
+        for (r, slot) in unsorted.iter_mut().enumerate() {
+            *slot = vals[r * dim + c];
+        }
+        sorted.copy_from_slice(unsorted);
+        sorted.sort_unstable_by(f32::total_cmp);
+        let (lo, hi) = (sorted[trim], sorted[rows - 1 - trim]);
+        let mut sum = 0.0f64;
+        for &v in &sorted[trim..rows - trim] {
+            sum += v as f64;
+        }
+        out[c] = (sum / kept) as f32;
+        admitted_in_range(unsorted, lo, hi, admitted);
+    }
+}
+
+/// Coordinate-wise median; same staging discipline as [`trimmed_mean`].
+pub fn coord_median(
+    out: &mut [f32],
+    vals: &[f32],
+    rows: usize,
+    gather: &mut [f32],
+    admitted: &mut [f64],
+) {
+    debug_assert_eq!(vals.len(), rows * out.len());
+    debug_assert!(gather.len() >= 2 * rows && admitted.len() >= rows);
+    debug_assert!(rows > 0);
+    let dim = out.len();
+    let (unsorted, rest) = gather.split_at_mut(rows);
+    let sorted = &mut rest[..rows];
+    for c in 0..dim {
+        for (r, slot) in unsorted.iter_mut().enumerate() {
+            *slot = vals[r * dim + c];
+        }
+        sorted.copy_from_slice(unsorted);
+        sorted.sort_unstable_by(f32::total_cmp);
+        let (lo, hi, med) = if rows % 2 == 1 {
+            let m = sorted[rows / 2];
+            (m, m, m as f64)
+        } else {
+            let (a, b) = (sorted[rows / 2 - 1], sorted[rows / 2]);
+            (a, b, (a as f64 + b as f64) / 2.0)
+        };
+        out[c] = med as f32;
+        admitted_in_range(unsorted, lo, hi, admitted);
+    }
+}
+
+/// One pair's squared L2 distance: vector subtract, exact f32→f64
+/// widen, vector square, then a **sequential** in-order sum of the
+/// extracted squares — the f64 accumulation order is the scalar one.
+fn sq_dist(a: &[f32], b: &[f32]) -> f64 {
+    unsafe {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut s = 0.0f64;
+        let mut sq = [0.0f64; 4];
+        let mut k = 0;
+        while k + 4 <= n {
+            let d = _mm_sub_ps(_mm_loadu_ps(pa.add(k)), _mm_loadu_ps(pb.add(k)));
+            let lo = _mm_cvtps_pd(d);
+            let hi = _mm_cvtps_pd(_mm_movehl_ps(d, d));
+            _mm_storeu_pd(sq.as_mut_ptr(), _mm_mul_pd(lo, lo));
+            _mm_storeu_pd(sq.as_mut_ptr().add(2), _mm_mul_pd(hi, hi));
+            s += sq[0];
+            s += sq[1];
+            s += sq[2];
+            s += sq[3];
+            k += 4;
+        }
+        while k < n {
+            let d = (*pa.add(k) - *pb.add(k)) as f64;
+            s += d * d;
+            k += 1;
+        }
+        s
+    }
+}
+
+/// Pairwise squared L2 distances into a symmetric `rows × rows` matrix
+/// with a zero diagonal (upper triangle computed, mirrored).
+pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize, dist: &mut [f64]) {
+    debug_assert_eq!(vals.len(), rows * dim);
+    debug_assert!(dist.len() >= rows * rows);
+    for i in 0..rows {
+        dist[i * rows + i] = 0.0;
+        for j in (i + 1)..rows {
+            let s = sq_dist(&vals[i * dim..(i + 1) * dim], &vals[j * dim..(j + 1) * dim]);
+            dist[i * rows + j] = s;
+            dist[j * rows + i] = s;
+        }
+    }
+}

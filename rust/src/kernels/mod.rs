@@ -6,25 +6,33 @@
 //! updates. Before this module each strategy carried its own scalar
 //! loop, and the dense paths decoded every neighbor payload into a
 //! fresh `Vec<f32>` first — one 4·P-byte allocation plus an extra
-//! memory pass per neighbor per round. The kernels here are
-//! *chunk-unrolled* (fixed 8-lane bodies over `chunks_exact`, scalar
-//! tail) so the compiler can auto-vectorize them without bounds checks,
-//! and the fused [`decode_le_axpy`] goes straight from wire bytes to
-//! the weighted accumulator with no intermediate vector at all.
+//! memory pass per neighbor per round. The kernels here go straight
+//! from wire bytes to the weighted accumulator with no intermediate
+//! vector ([`decode_le_axpy`]), and each has **two lane paths** behind
+//! one validating wrapper:
 //!
-//! **Bit-identity is a hard contract.** Each kernel performs exactly
-//! the per-element operation of the scalar loop it replaced, in the
-//! same element order, with the same rounding — unrolling only splits
-//! *independent* lanes, never reassociates an element's arithmetic. The
-//! scalar originals are retained in [`reference`] and proptests pin
-//! every kernel bit-identical to them across odd tail lengths and chunk
-//! boundaries (`rust/tests/proptests.rs`), which is what keeps the
-//! shared-vs-owned and worker-count equivalence tests green.
+//! * [`portable`] — fixed 8-lane bodies over `chunks_exact` (scalar
+//!   tail) that the compiler auto-vectorizes; the default, and always
+//!   compiled.
+//! * `lanes` — explicit SSE2 intrinsics, selected by the `simd` cargo
+//!   feature on x86_64 ([`simd_active`] reports which path is live).
+//!
+//! **Bit-identity is a hard contract, on both paths.** Each kernel
+//! performs exactly the per-element operation of the scalar loop it
+//! replaced, in the same element order, with the same rounding —
+//! lanes only split *independent* elements, never reassociate one
+//! element's arithmetic, and never contract into FMA. The scalar
+//! originals are retained in [`reference`] and proptests pin every
+//! kernel bit-identical to them across odd tail lengths, chunk
+//! boundaries, and NaN totals (`rust/tests/proptests.rs`), which is
+//! what keeps the shared-vs-owned and worker-count equivalence tests
+//! green under either feature set.
 //!
 //! The [`Scratch`] arena supplies the reusable buffers (decode floats,
-//! sparse index/value staging, f64 accumulator, payload bytes) that
-//! make steady-state rounds allocation-free; every node owns one and
-//! threads it through [`crate::sharing::Sharing::aggregate_with`] /
+//! sparse index/value staging, f64 accumulator, payload bytes, and the
+//! [`FoldPartial`] set backing the parallel neighbor fold in [`fold`])
+//! that make steady-state rounds allocation-free; every node owns one
+//! and threads it through [`crate::sharing::Sharing::aggregate_with`] /
 //! [`outgoing_with`](crate::sharing::Sharing::outgoing_with). See
 //! `docs/PERFORMANCE.md` for the hot-path map and the per-round
 //! allocation budget, and `benches/hotpath.rs` for the regression
@@ -33,35 +41,33 @@
 
 use anyhow::{bail, Result};
 
-/// Unroll width: 8 f32 lanes (one AVX2 register, two NEON registers).
-const LANES: usize = 8;
+pub mod fold;
+pub mod portable;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod lanes;
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use lanes as hot;
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+use portable as hot;
+
+/// Whether the explicit SSE2 lane path is compiled in (the `simd`
+/// feature on x86_64). Purely informational — results are bit-identical
+/// either way — but the bench rows and the CI job summary key on it.
+pub fn simd_active() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
 
 /// `x[i] *= alpha`
 pub fn scale(x: &mut [f32], alpha: f32) {
-    let mut chunks = x.chunks_exact_mut(LANES);
-    for c in &mut chunks {
-        for v in c.iter_mut() {
-            *v *= alpha;
-        }
-    }
-    for v in chunks.into_remainder() {
-        *v *= alpha;
-    }
+    hot::scale(x, alpha)
 }
 
 /// `acc[i] += alpha * x[i]`
 pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
     assert_eq!(acc.len(), x.len());
-    let mut a = acc.chunks_exact_mut(LANES);
-    let mut b = x.chunks_exact(LANES);
-    for (ca, cb) in (&mut a).zip(&mut b) {
-        for i in 0..LANES {
-            ca[i] += alpha * cb[i];
-        }
-    }
-    for (va, vb) in a.into_remainder().iter_mut().zip(b.remainder()) {
-        *va += alpha * vb;
-    }
+    hot::axpy(acc, alpha, x)
 }
 
 /// `acc[i] += alpha * (x[i] - y[i])` — the Choco-SGD gossip step on a
@@ -69,22 +75,7 @@ pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
 pub fn diff_axpy(acc: &mut [f32], alpha: f32, x: &[f32], y: &[f32]) {
     assert_eq!(acc.len(), x.len());
     assert_eq!(acc.len(), y.len());
-    let mut a = acc.chunks_exact_mut(LANES);
-    let mut bx = x.chunks_exact(LANES);
-    let mut by = y.chunks_exact(LANES);
-    for ((ca, cx), cy) in (&mut a).zip(&mut bx).zip(&mut by) {
-        for i in 0..LANES {
-            ca[i] += alpha * (cx[i] - cy[i]);
-        }
-    }
-    for ((va, vx), vy) in a
-        .into_remainder()
-        .iter_mut()
-        .zip(bx.remainder())
-        .zip(by.remainder())
-    {
-        *va += alpha * (vx - vy);
-    }
+    hot::diff_axpy(acc, alpha, x, y)
 }
 
 /// Fused little-endian f32 decode + weighted accumulate:
@@ -95,17 +86,7 @@ pub fn decode_le_axpy(acc: &mut [f32], alpha: f32, bytes: &[u8]) -> Result<()> {
     if bytes.len() != acc.len() * 4 {
         bail!("raw_f32: expected {} bytes, got {}", acc.len() * 4, bytes.len());
     }
-    let mut a = acc.chunks_exact_mut(LANES);
-    let mut b = bytes.chunks_exact(4 * LANES);
-    for (ca, cb) in (&mut a).zip(&mut b) {
-        for i in 0..LANES {
-            let v = f32::from_le_bytes([cb[4 * i], cb[4 * i + 1], cb[4 * i + 2], cb[4 * i + 3]]);
-            ca[i] += alpha * v;
-        }
-    }
-    for (va, cb) in a.into_remainder().iter_mut().zip(b.remainder().chunks_exact(4)) {
-        *va += alpha * f32::from_le_bytes([cb[0], cb[1], cb[2], cb[3]]);
-    }
+    hot::decode_le_axpy(acc, alpha, bytes);
     Ok(())
 }
 
@@ -126,26 +107,7 @@ pub fn decode_le_axpy2(acc: &mut [f32], a1: f32, b1: &[u8], a2: f32, b2: &[u8]) 
     if b2.len() != acc.len() * 4 {
         bail!("raw_f32: expected {} bytes, got {}", acc.len() * 4, b2.len());
     }
-    let mut a = acc.chunks_exact_mut(LANES);
-    let mut c1 = b1.chunks_exact(4 * LANES);
-    let mut c2 = b2.chunks_exact(4 * LANES);
-    for ((ca, p1), p2) in (&mut a).zip(&mut c1).zip(&mut c2) {
-        for i in 0..LANES {
-            let v1 = f32::from_le_bytes([p1[4 * i], p1[4 * i + 1], p1[4 * i + 2], p1[4 * i + 3]]);
-            let v2 = f32::from_le_bytes([p2[4 * i], p2[4 * i + 1], p2[4 * i + 2], p2[4 * i + 3]]);
-            ca[i] = (ca[i] + a1 * v1) + a2 * v2;
-        }
-    }
-    for ((va, p1), p2) in a
-        .into_remainder()
-        .iter_mut()
-        .zip(c1.remainder().chunks_exact(4))
-        .zip(c2.remainder().chunks_exact(4))
-    {
-        let v1 = f32::from_le_bytes([p1[0], p1[1], p1[2], p1[3]]);
-        let v2 = f32::from_le_bytes([p2[0], p2[1], p2[2], p2[3]]);
-        *va = (*va + a1 * v1) + a2 * v2;
-    }
+    hot::decode_le_axpy2(acc, a1, b1, a2, b2);
     Ok(())
 }
 
@@ -164,22 +126,13 @@ pub fn decode_le_into(out: &mut Vec<f32>, bytes: &[u8]) {
 
 /// Fused decode + widening accumulate for the secure-aggregation path:
 /// `acc[i] += w * (decoded f32 as f64)`. Accumulation stays in f64, in
-/// element order, exactly as the scalar loop it replaced.
+/// element order, exactly as the scalar loop it replaced (the SSE2 path
+/// widens with `cvtps2pd`, which is exact).
 pub fn decode_le_axpy_widen(acc: &mut [f64], w: f64, bytes: &[u8]) -> Result<()> {
     if bytes.len() != acc.len() * 4 {
         bail!("raw_f32: expected {} bytes, got {}", acc.len() * 4, bytes.len());
     }
-    let mut a = acc.chunks_exact_mut(LANES);
-    let mut b = bytes.chunks_exact(4 * LANES);
-    for (ca, cb) in (&mut a).zip(&mut b) {
-        for i in 0..LANES {
-            let v = f32::from_le_bytes([cb[4 * i], cb[4 * i + 1], cb[4 * i + 2], cb[4 * i + 3]]);
-            ca[i] += w * v as f64;
-        }
-    }
-    for (va, cb) in a.into_remainder().iter_mut().zip(b.remainder().chunks_exact(4)) {
-        *va += w * f32::from_le_bytes([cb[0], cb[1], cb[2], cb[3]]) as f64;
-    }
+    hot::decode_le_axpy_widen(acc, w, bytes);
     Ok(())
 }
 
@@ -205,9 +158,7 @@ pub fn narrow(dst: &mut [f32], src: &[f64]) {
 /// well-formed payloads; out-of-bounds panics, as the scalar loop did).
 pub fn scatter_axpy(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32]) {
     assert_eq!(indices.len(), vals.len());
-    for (&i, &v) in indices.iter().zip(vals.iter()) {
-        acc[i as usize] += alpha * v;
-    }
+    hot::scatter_axpy(acc, alpha, indices, vals)
 }
 
 /// Sparse absolute-value blend: `acc[idx[j]] += alpha * (vals[j] -
@@ -217,10 +168,7 @@ pub fn scatter_axpy(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32]) 
 pub fn scatter_blend(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32], own: &[f32]) {
     assert_eq!(indices.len(), vals.len());
     assert_eq!(acc.len(), own.len());
-    for (&i, &v) in indices.iter().zip(vals.iter()) {
-        let i = i as usize;
-        acc[i] += alpha * (v - own[i]);
-    }
+    hot::scatter_blend(acc, alpha, indices, vals, own)
 }
 
 /// Little-endian f32 decode into an exact-length slice (a row of a
@@ -240,12 +188,13 @@ pub fn decode_le(out: &mut [f32], bytes: &[u8]) -> Result<()> {
 /// `vals` is row-major `rows × out.len()`. Per coordinate, the `trim`
 /// lowest and `trim` highest values are dropped and the survivors are
 /// averaged in f64, summed in ascending sorted order (deterministic and
-/// shared with the scalar twin). `gather` stages one coordinate's
-/// column (`len >= rows`, `sort_unstable` so no allocation);
-/// `admitted[r]` accumulates, per row, the number of coordinates whose
-/// value fell inside the kept range — boundary duplicates count as
-/// admitted, which over-credits ties but never under-reports an honest
-/// row.
+/// shared with the scalar twin). `gather` stages the coordinate's
+/// column — `len >= 2 * rows`, because the SSE2 lane path keeps an
+/// unsorted copy alongside the sorted one for vectorized admitted
+/// counting; `admitted[r]` accumulates, per row, the number of
+/// coordinates whose value fell inside the kept range — boundary
+/// duplicates count as admitted, which over-credits ties but never
+/// under-reports an honest row.
 pub fn trimmed_mean(
     out: &mut [f32],
     vals: &[f32],
@@ -255,35 +204,16 @@ pub fn trimmed_mean(
     admitted: &mut [f64],
 ) {
     assert_eq!(vals.len(), rows * out.len());
-    assert!(gather.len() >= rows && admitted.len() >= rows);
+    assert!(gather.len() >= 2 * rows && admitted.len() >= rows);
     assert!(2 * trim < rows, "trim {trim} leaves no survivors of {rows} rows");
-    let dim = out.len();
-    let kept = (rows - 2 * trim) as f64;
-    for c in 0..dim {
-        let g = &mut gather[..rows];
-        for (r, slot) in g.iter_mut().enumerate() {
-            *slot = vals[r * dim + c];
-        }
-        g.sort_unstable_by(f32::total_cmp);
-        let (lo, hi) = (g[trim], g[rows - 1 - trim]);
-        let mut sum = 0.0f64;
-        for &v in &g[trim..rows - trim] {
-            sum += v as f64;
-        }
-        out[c] = (sum / kept) as f32;
-        for (r, a) in admitted.iter_mut().enumerate().take(rows) {
-            let v = vals[r * dim + c];
-            if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
-                *a += 1.0;
-            }
-        }
-    }
+    hot::trimmed_mean(out, vals, rows, trim, gather, admitted)
 }
 
 /// Coordinate-wise median over `rows` stacked vectors (row-major, as
-/// [`trimmed_mean`]). Even row counts average the two middle values in
-/// f64. `admitted[r]` counts coordinates where the row's value lies
-/// within the median bracket (the one or two middle order statistics).
+/// [`trimmed_mean`], including the `2 * rows` gather contract). Even
+/// row counts average the two middle values in f64. `admitted[r]`
+/// counts coordinates where the row's value lies within the median
+/// bracket (the one or two middle order statistics).
 pub fn coord_median(
     out: &mut [f32],
     vals: &[f32],
@@ -292,30 +222,9 @@ pub fn coord_median(
     admitted: &mut [f64],
 ) {
     assert_eq!(vals.len(), rows * out.len());
-    assert!(gather.len() >= rows && admitted.len() >= rows);
+    assert!(gather.len() >= 2 * rows && admitted.len() >= rows);
     assert!(rows > 0);
-    let dim = out.len();
-    for c in 0..dim {
-        let g = &mut gather[..rows];
-        for (r, slot) in g.iter_mut().enumerate() {
-            *slot = vals[r * dim + c];
-        }
-        g.sort_unstable_by(f32::total_cmp);
-        let (lo, hi, med) = if rows % 2 == 1 {
-            let m = g[rows / 2];
-            (m, m, m as f64)
-        } else {
-            let (a, b) = (g[rows / 2 - 1], g[rows / 2]);
-            (a, b, (a as f64 + b as f64) / 2.0)
-        };
-        out[c] = med as f32;
-        for (r, a) in admitted.iter_mut().enumerate().take(rows) {
-            let v = vals[r * dim + c];
-            if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
-                *a += 1.0;
-            }
-        }
-    }
+    hot::coord_median(out, vals, rows, gather, admitted)
 }
 
 /// Pairwise squared L2 distances between `rows` stacked vectors
@@ -325,20 +234,7 @@ pub fn coord_median(
 pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize, dist: &mut [f64]) {
     assert_eq!(vals.len(), rows * dim);
     assert!(dist.len() >= rows * rows);
-    for i in 0..rows {
-        dist[i * rows + i] = 0.0;
-        for j in (i + 1)..rows {
-            let a = &vals[i * dim..(i + 1) * dim];
-            let b = &vals[j * dim..(j + 1) * dim];
-            let mut s = 0.0f64;
-            for k in 0..dim {
-                let d = (a[k] - b[k]) as f64;
-                s += d * d;
-            }
-            dist[i * rows + j] = s;
-            dist[j * rows + i] = s;
-        }
-    }
+    hot::pairwise_sq_dist(vals, rows, dim, dist)
 }
 
 /// Krum selection: each candidate's score is the sum of its `closest`
@@ -348,7 +244,8 @@ pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize, dist: &mut [f64])
 /// one row per candidate (`len >= rows`). Sorting the copied row puts
 /// the zero self-distance first, so skipping one leading entry excludes
 /// self even when other distances are exactly zero (identical
-/// colluders) — the skipped value is equal either way.
+/// colluders) — the skipped value is equal either way. Sort-dominated,
+/// so there is no SIMD lane variant.
 pub fn krum_select(dist: &[f64], rows: usize, closest: usize, row_buf: &mut [f64]) -> usize {
     assert!(rows > 0 && dist.len() >= rows * rows && row_buf.len() >= rows);
     assert!(closest < rows);
@@ -375,7 +272,10 @@ pub mod reference {
     //! the bit-identity proptests pin each kernel to its reference
     //! across odd tails and chunk boundaries, and `benches/hotpath.rs`
     //! measures the kernel-vs-reference speedup that
-    //! `BENCH_hotpath.json` tracks per PR. Not called on any hot path.
+    //! `BENCH_hotpath.json` tracks per PR. Not called on any hot path —
+    //! but the order-statistic twins use the same out-param signatures
+    //! as the fast path, so reference-vs-fast comparisons exercise
+    //! identical buffer reuse instead of hiding allocations.
 
     /// Scalar `x[i] *= alpha`.
     pub fn scale(x: &mut [f32], alpha: f32) {
@@ -494,10 +394,13 @@ pub mod reference {
         }
     }
 
-    /// Allocating scalar twin of [`super::pairwise_sq_dist`].
-    pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize) -> Vec<f64> {
+    /// Scalar twin of [`super::pairwise_sq_dist`], same out-param
+    /// signature (both triangles computed independently, unlike the fast
+    /// path's mirrored upper triangle — the arithmetic per pair is
+    /// identical, so the outputs match bitwise).
+    pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize, dist: &mut [f64]) {
         assert_eq!(vals.len(), rows * dim);
-        let mut dist = vec![0.0f64; rows * rows];
+        assert!(dist.len() >= rows * rows);
         for i in 0..rows {
             for j in 0..rows {
                 let mut s = 0.0f64;
@@ -508,18 +411,22 @@ pub mod reference {
                 dist[i * rows + j] = s;
             }
         }
-        dist
     }
 
-    /// Allocating scalar twin of [`super::krum_select`] (stable sort,
-    /// same skip-one-leading-zero self exclusion and index tie-break).
-    pub fn krum_select(dist: &[f64], rows: usize, closest: usize) -> usize {
-        assert!(rows > 0 && closest < rows);
+    /// Scalar twin of [`super::krum_select`], same out-param `row_buf`
+    /// signature and the same skip-one-leading-zero self exclusion and
+    /// index tie-break. (`sort_unstable_by` under a total order yields
+    /// the same sorted array a stable sort would — equal keys are
+    /// bit-identical — without the stable sort's temp allocation.)
+    pub fn krum_select(dist: &[f64], rows: usize, closest: usize, row_buf: &mut [f64]) -> usize {
+        assert!(rows > 0 && dist.len() >= rows * rows && row_buf.len() >= rows);
+        assert!(closest < rows);
         let mut best = 0usize;
         let mut best_score = f64::INFINITY;
         for i in 0..rows {
-            let mut row: Vec<f64> = dist[i * rows..i * rows + rows].to_vec();
-            row.sort_by(f64::total_cmp);
+            let row = &mut row_buf[..rows];
+            row.copy_from_slice(&dist[i * rows..i * rows + rows]);
+            row.sort_unstable_by(f64::total_cmp);
             let score: f64 = row[1..1 + closest].iter().sum();
             if score < best_score {
                 best_score = score;
@@ -528,6 +435,23 @@ pub mod reference {
         }
         best
     }
+}
+
+/// One tree-fold leaf group's private staging: a partial dense
+/// accumulator plus the decode/sparse scratch that group's fold needs,
+/// so concurrent groups never share a buffer (see [`fold`]). Lives in
+/// [`Scratch::partials`]; buffers warm up once and are reused every
+/// round, exactly like the flat arena fields.
+#[derive(Default)]
+pub struct FoldPartial {
+    /// The group's partial accumulator (one model-dim vector).
+    pub acc: Vec<f32>,
+    /// Dense decode staging (per-group codec scratch).
+    pub stage: Vec<f32>,
+    /// Sparse coordinate staging (per-group).
+    pub indices: Vec<u32>,
+    /// Sparse value staging (per-group).
+    pub values: Vec<f32>,
 }
 
 /// Per-node scratch arena: every reusable hot-path buffer in one place.
@@ -565,6 +489,9 @@ pub struct Scratch {
     /// Pooled broadcast payload handles: one parks here per round and is
     /// reused once every recipient of that broadcast dropped its clone.
     pub payloads: Vec<crate::store::Payload>,
+    /// Tree-fold partials: one per leaf group beyond group 0 (which
+    /// folds straight into the model). Empty under the serial plan.
+    pub partials: Vec<FoldPartial>,
 }
 
 /// Bound on parked payload handles: with the scheduler's one-broadcast-
@@ -603,11 +530,28 @@ impl Scratch {
         }
     }
 
-    /// Capacities of every buffer, in declaration order (the last entry
-    /// sums the pooled payload buffers). The allocation-freeze test
+    /// Ensure `n` fold partials exist, each with a zeroed `dim`-length
+    /// accumulator. Never shrinks: once a round warms the partial set to
+    /// its group count, later rounds reuse the buffers in place (the
+    /// zero-fill is a write into retained capacity, not an allocation).
+    /// After this call, field-split borrows of `partials` alongside the
+    /// flat arena buffers are the intended usage.
+    pub fn prepare_partials(&mut self, n: usize, dim: usize) {
+        if self.partials.len() < n {
+            self.partials.resize_with(n, FoldPartial::default);
+        }
+        for p in &mut self.partials[..n] {
+            p.acc.clear();
+            p.acc.resize(dim, 0.0);
+        }
+    }
+
+    /// Capacities of every buffer, in declaration order (the last two
+    /// entries sum the pooled payload buffers and the fold partials'
+    /// four staging buffers respectively). The allocation-freeze test
     /// records this after a warm-up round and asserts it never changes
     /// again: a stable signature means no hot-path buffer reallocated.
-    pub fn capacity_signature(&self) -> [usize; 8] {
+    pub fn capacity_signature(&self) -> [usize; 9] {
         [
             self.dense.capacity(),
             self.dense2.capacity(),
@@ -617,6 +561,12 @@ impl Scratch {
             self.doubles.capacity(),
             self.bytes.capacity(),
             self.payloads.iter().map(|p| p.capacity()).sum(),
+            self.partials
+                .iter()
+                .map(|p| {
+                    p.acc.capacity() + p.stage.capacity() + p.values.capacity() + p.indices.capacity()
+                })
+                .sum(),
         ]
     }
 }
@@ -648,6 +598,100 @@ mod tests {
             reference::axpy(&mut b, -1.25, &x);
             assert_eq!(a, b, "axpy n={n}");
         }
+    }
+
+    /// Pin the dispatched lane path bit-identical to the portable
+    /// bodies. With `--features simd` this compares SSE2 against the
+    /// chunked code on every edge length; without it the two sides are
+    /// the same code and the test is a tautology — cheap either way.
+    #[test]
+    fn dispatched_lanes_match_portable_on_edge_lengths() {
+        for (case, &n) in EDGE_LENS.iter().enumerate() {
+            let mut rng = Xoshiro256pp::new(900 + case as u64);
+            let base = vals(&mut rng, n);
+            let x = vals(&mut rng, n);
+            let y = vals(&mut rng, n);
+            let p1: Vec<u8> = vals(&mut rng, n).iter().flat_map(|v| v.to_le_bytes()).collect();
+            let p2: Vec<u8> = vals(&mut rng, n).iter().flat_map(|v| v.to_le_bytes()).collect();
+
+            let (mut a, mut b) = (base.clone(), base.clone());
+            scale(&mut a, -0.83);
+            portable::scale(&mut b, -0.83);
+            assert_eq!(a, b, "scale n={n}");
+            axpy(&mut a, 0.41, &x);
+            portable::axpy(&mut b, 0.41, &x);
+            assert_eq!(a, b, "axpy n={n}");
+            diff_axpy(&mut a, 1.7, &x, &y);
+            portable::diff_axpy(&mut b, 1.7, &x, &y);
+            assert_eq!(a, b, "diff_axpy n={n}");
+            decode_le_axpy(&mut a, 0.29, &p1).unwrap();
+            portable::decode_le_axpy(&mut b, 0.29, &p1);
+            assert_eq!(a, b, "decode_le_axpy n={n}");
+            decode_le_axpy2(&mut a, 0.5, &p1, -0.25, &p2).unwrap();
+            portable::decode_le_axpy2(&mut b, 0.5, &p1, -0.25, &p2);
+            assert_eq!(a, b, "decode_le_axpy2 n={n}");
+
+            let mut wa: Vec<f64> = base.iter().map(|&v| v as f64).collect();
+            let mut wb = wa.clone();
+            decode_le_axpy_widen(&mut wa, 0.77, &p1).unwrap();
+            portable::decode_le_axpy_widen(&mut wb, 0.77, &p1);
+            assert_eq!(wa, wb, "decode_le_axpy_widen n={n}");
+        }
+    }
+
+    /// NaN totals: the robust kernels order and bracket with
+    /// `total_cmp`, so a NaN-poisoned column must produce identical
+    /// output (and admitted counts) on the dispatched, portable, and
+    /// reference paths.
+    #[test]
+    fn robust_lanes_handle_nan_totals_like_reference() {
+        let (rows, dim) = (5usize, 9usize);
+        let mut rng = Xoshiro256pp::new(4242);
+        let mut stacked = vals(&mut rng, rows * dim);
+        stacked[3] = f32::NAN;
+        stacked[dim + 3] = -f32::NAN;
+        stacked[2 * dim + 7] = f32::NAN;
+        stacked[4 * dim] = -0.0;
+        stacked[4 * dim + 1] = 0.0;
+
+        let mut gather = vec![0.0f32; 2 * rows];
+        let (mut out, mut out_p, mut out_r) =
+            (vec![0.0f32; dim], vec![0.0f32; dim], vec![0.0f32; dim]);
+        let (mut adm, mut adm_p, mut adm_r) =
+            (vec![0.0f64; rows], vec![0.0f64; rows], vec![0.0f64; rows]);
+
+        trimmed_mean(&mut out, &stacked, rows, 1, &mut gather, &mut adm);
+        portable::trimmed_mean(&mut out_p, &stacked, rows, 1, &mut gather, &mut adm_p);
+        reference::trimmed_mean(&mut out_r, &stacked, rows, 1, &mut adm_r);
+        assert_eq!(bits32(&out), bits32(&out_p), "trimmed_mean vs portable");
+        assert_eq!(bits32(&out), bits32(&out_r), "trimmed_mean vs reference");
+        assert_eq!(adm, adm_p);
+        assert_eq!(adm, adm_r);
+
+        adm.iter_mut().for_each(|a| *a = 0.0);
+        adm_p.iter_mut().for_each(|a| *a = 0.0);
+        adm_r.iter_mut().for_each(|a| *a = 0.0);
+        coord_median(&mut out, &stacked, rows, &mut gather, &mut adm);
+        portable::coord_median(&mut out_p, &stacked, rows, &mut gather, &mut adm_p);
+        reference::coord_median(&mut out_r, &stacked, rows, &mut adm_r);
+        assert_eq!(bits32(&out), bits32(&out_p), "coord_median vs portable");
+        assert_eq!(bits32(&out), bits32(&out_r), "coord_median vs reference");
+        assert_eq!(adm, adm_p);
+        assert_eq!(adm, adm_r);
+
+        let mut dist = vec![0.0f64; rows * rows];
+        let mut dist_p = vec![0.0f64; rows * rows];
+        pairwise_sq_dist(&stacked, rows, dim, &mut dist);
+        portable::pairwise_sq_dist(&stacked, rows, dim, &mut dist_p);
+        assert_eq!(bits64(&dist), bits64(&dist_p), "pairwise with NaN rows");
+    }
+
+    fn bits32(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn bits64(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
     }
 
     #[test]
@@ -715,7 +759,9 @@ mod tests {
         let n = 50;
         let base = vals(&mut rng, n);
         let own = vals(&mut rng, n);
-        let indices: Vec<u32> = vec![0, 3, 17, 31, 49];
+        // Duplicate indices exercise the lane path's gather-then-add
+        // ordering (adds must stay in j order for exact duplication).
+        let indices: Vec<u32> = vec![0, 3, 17, 17, 31, 49, 3];
         let v = vals(&mut rng, indices.len());
         let (mut a, mut b) = (base.clone(), base.clone());
         scatter_axpy(&mut a, 0.8, &indices, &v);
@@ -770,7 +816,7 @@ mod tests {
             for rows in [1usize, 2, 3, 5, 8] {
                 let mut rng = Xoshiro256pp::new(400 + 100 * case as u64 + rows as u64);
                 let stacked = vals(&mut rng, rows * dim);
-                let mut gather = vec![0.0f32; rows];
+                let mut gather = vec![0.0f32; 2 * rows];
                 let trim = if rows > 2 { 1 } else { 0 };
 
                 let (mut out, mut out_ref) = (vec![0.0f32; dim], vec![0.0f32; dim]);
@@ -788,14 +834,16 @@ mod tests {
                 assert_eq!(adm, adm_ref, "coord_median admitted dim={dim} rows={rows}");
 
                 let mut dist = vec![0.0f64; rows * rows];
+                let mut dist_ref = vec![0.0f64; rows * rows];
                 pairwise_sq_dist(&stacked, rows, dim, &mut dist);
-                let dist_ref = reference::pairwise_sq_dist(&stacked, rows, dim);
+                reference::pairwise_sq_dist(&stacked, rows, dim, &mut dist_ref);
                 assert_eq!(dist, dist_ref, "pairwise dim={dim} rows={rows}");
                 let mut row_buf = vec![0.0f64; rows];
+                let mut row_ref = vec![0.0f64; rows];
                 for closest in 0..rows {
                     assert_eq!(
                         krum_select(&dist, rows, closest, &mut row_buf),
-                        reference::krum_select(&dist, rows, closest),
+                        reference::krum_select(&dist_ref, rows, closest, &mut row_ref),
                         "krum dim={dim} rows={rows} closest={closest}"
                     );
                 }
@@ -816,7 +864,7 @@ mod tests {
         }
         vals.extend(std::iter::repeat(-100.0f32).take(dim));
         let mut out = vec![0.0f32; dim];
-        let mut gather = vec![0.0f32; 4];
+        let mut gather = vec![0.0f32; 8];
         let mut admitted = vec![0.0f64; 4];
         trimmed_mean(&mut out, &vals, 4, 1, &mut gather, &mut admitted);
         assert!(out.iter().all(|&v| (v - 0.95).abs() < 1e-6), "{out:?}");
@@ -849,13 +897,27 @@ mod tests {
     fn scratch_signature_tracks_growth() {
         let mut s = Scratch::new();
         let sig0 = s.capacity_signature();
-        assert_eq!(sig0, [0; 8]);
+        assert_eq!(sig0, [0; 9]);
         s.dense.extend_from_slice(&[1.0; 16]);
         assert_ne!(s.capacity_signature(), sig0);
         let warm = s.capacity_signature();
         s.dense.clear();
         s.dense.extend_from_slice(&[2.0; 16]);
         assert_eq!(s.capacity_signature(), warm);
+
+        // Fold partials register in the signature and re-preparing the
+        // same shape is allocation-stable (zero-fill reuses capacity).
+        s.prepare_partials(3, 32);
+        let warm2 = s.capacity_signature();
+        assert_ne!(warm2, warm);
+        s.partials[1].acc[0] = 9.0; // dirty a partial
+        s.prepare_partials(3, 32);
+        assert_eq!(s.capacity_signature(), warm2);
+        assert_eq!(s.partials[1].acc[0], 0.0, "re-prepare must zero partials");
+        // Fewer groups next round never shrinks the warm set.
+        s.prepare_partials(1, 32);
+        assert_eq!(s.capacity_signature(), warm2);
+        assert_eq!(s.partials.len(), 3);
     }
 
     #[test]

@@ -1,0 +1,235 @@
+//! Portable chunk-unrolled kernel bodies (the default lane path).
+//!
+//! These are the fixed 8-lane `chunks_exact` bodies the `kernels`
+//! wrappers dispatch to when the `simd` feature is off (or the target
+//! is not x86_64); with the feature on, `kernels::lanes` provides the
+//! explicit SSE2 twins and this module remains compiled — and public —
+//! so tests can pin the two paths bit-identical against each other.
+//!
+//! Validation (length checks, error reporting) lives in the `kernels`
+//! wrappers; bodies here only `debug_assert`, which is what lets the
+//! two lane paths share one validation story.
+
+/// Unroll width: 8 f32 lanes (one AVX2 register, two NEON registers).
+const LANES: usize = 8;
+
+/// `x[i] *= alpha`
+pub fn scale(x: &mut [f32], alpha: f32) {
+    let mut chunks = x.chunks_exact_mut(LANES);
+    for c in &mut chunks {
+        for v in c.iter_mut() {
+            *v *= alpha;
+        }
+    }
+    for v in chunks.into_remainder() {
+        *v *= alpha;
+    }
+}
+
+/// `acc[i] += alpha * x[i]`
+pub fn axpy(acc: &mut [f32], alpha: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut b = x.chunks_exact(LANES);
+    for (ca, cb) in (&mut a).zip(&mut b) {
+        for i in 0..LANES {
+            ca[i] += alpha * cb[i];
+        }
+    }
+    for (va, vb) in a.into_remainder().iter_mut().zip(b.remainder()) {
+        *va += alpha * vb;
+    }
+}
+
+/// `acc[i] += alpha * (x[i] - y[i])`
+pub fn diff_axpy(acc: &mut [f32], alpha: f32, x: &[f32], y: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    debug_assert_eq!(acc.len(), y.len());
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut bx = x.chunks_exact(LANES);
+    let mut by = y.chunks_exact(LANES);
+    for ((ca, cx), cy) in (&mut a).zip(&mut bx).zip(&mut by) {
+        for i in 0..LANES {
+            ca[i] += alpha * (cx[i] - cy[i]);
+        }
+    }
+    for ((va, vx), vy) in a
+        .into_remainder()
+        .iter_mut()
+        .zip(bx.remainder())
+        .zip(by.remainder())
+    {
+        *va += alpha * (vx - vy);
+    }
+}
+
+/// `acc[i] += alpha * f32_le(bytes[4i..])` — length pre-validated.
+pub fn decode_le_axpy(acc: &mut [f32], alpha: f32, bytes: &[u8]) {
+    debug_assert_eq!(bytes.len(), acc.len() * 4);
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut b = bytes.chunks_exact(4 * LANES);
+    for (ca, cb) in (&mut a).zip(&mut b) {
+        for i in 0..LANES {
+            let v = f32::from_le_bytes([cb[4 * i], cb[4 * i + 1], cb[4 * i + 2], cb[4 * i + 3]]);
+            ca[i] += alpha * v;
+        }
+    }
+    for (va, cb) in a.into_remainder().iter_mut().zip(b.remainder().chunks_exact(4)) {
+        *va += alpha * f32::from_le_bytes([cb[0], cb[1], cb[2], cb[3]]);
+    }
+}
+
+/// `acc[i] = (acc[i] + a1·v1[i]) + a2·v2[i]` — both payloads
+/// pre-validated; two sequential adds per element, one accumulator pass.
+pub fn decode_le_axpy2(acc: &mut [f32], a1: f32, b1: &[u8], a2: f32, b2: &[u8]) {
+    debug_assert_eq!(b1.len(), acc.len() * 4);
+    debug_assert_eq!(b2.len(), acc.len() * 4);
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut c1 = b1.chunks_exact(4 * LANES);
+    let mut c2 = b2.chunks_exact(4 * LANES);
+    for ((ca, p1), p2) in (&mut a).zip(&mut c1).zip(&mut c2) {
+        for i in 0..LANES {
+            let v1 = f32::from_le_bytes([p1[4 * i], p1[4 * i + 1], p1[4 * i + 2], p1[4 * i + 3]]);
+            let v2 = f32::from_le_bytes([p2[4 * i], p2[4 * i + 1], p2[4 * i + 2], p2[4 * i + 3]]);
+            ca[i] = (ca[i] + a1 * v1) + a2 * v2;
+        }
+    }
+    for ((va, p1), p2) in a
+        .into_remainder()
+        .iter_mut()
+        .zip(c1.remainder().chunks_exact(4))
+        .zip(c2.remainder().chunks_exact(4))
+    {
+        let v1 = f32::from_le_bytes([p1[0], p1[1], p1[2], p1[3]]);
+        let v2 = f32::from_le_bytes([p2[0], p2[1], p2[2], p2[3]]);
+        *va = (*va + a1 * v1) + a2 * v2;
+    }
+}
+
+/// `acc[i] += w * (f32_le(bytes) as f64)` — length pre-validated.
+pub fn decode_le_axpy_widen(acc: &mut [f64], w: f64, bytes: &[u8]) {
+    debug_assert_eq!(bytes.len(), acc.len() * 4);
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut b = bytes.chunks_exact(4 * LANES);
+    for (ca, cb) in (&mut a).zip(&mut b) {
+        for i in 0..LANES {
+            let v = f32::from_le_bytes([cb[4 * i], cb[4 * i + 1], cb[4 * i + 2], cb[4 * i + 3]]);
+            ca[i] += w * v as f64;
+        }
+    }
+    for (va, cb) in a.into_remainder().iter_mut().zip(b.remainder().chunks_exact(4)) {
+        *va += w * f32::from_le_bytes([cb[0], cb[1], cb[2], cb[3]]) as f64;
+    }
+}
+
+/// `acc[idx[j]] += alpha * vals[j]`
+pub fn scatter_axpy(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32]) {
+    debug_assert_eq!(indices.len(), vals.len());
+    for (&i, &v) in indices.iter().zip(vals.iter()) {
+        acc[i as usize] += alpha * v;
+    }
+}
+
+/// `acc[idx[j]] += alpha * (vals[j] - own[idx[j]])`
+pub fn scatter_blend(acc: &mut [f32], alpha: f32, indices: &[u32], vals: &[f32], own: &[f32]) {
+    debug_assert_eq!(indices.len(), vals.len());
+    debug_assert_eq!(acc.len(), own.len());
+    for (&i, &v) in indices.iter().zip(vals.iter()) {
+        let i = i as usize;
+        acc[i] += alpha * (v - own[i]);
+    }
+}
+
+/// Coordinate-wise trimmed mean; see the `kernels` wrapper for the
+/// contract. Only the first `rows` slots of `gather` are used here (the
+/// `2 * rows` capacity contract exists for the SSE2 twin, which stages
+/// an unsorted column copy alongside the sorted one).
+pub fn trimmed_mean(
+    out: &mut [f32],
+    vals: &[f32],
+    rows: usize,
+    trim: usize,
+    gather: &mut [f32],
+    admitted: &mut [f64],
+) {
+    debug_assert_eq!(vals.len(), rows * out.len());
+    debug_assert!(gather.len() >= rows && admitted.len() >= rows);
+    debug_assert!(2 * trim < rows);
+    let dim = out.len();
+    let kept = (rows - 2 * trim) as f64;
+    for c in 0..dim {
+        let g = &mut gather[..rows];
+        for (r, slot) in g.iter_mut().enumerate() {
+            *slot = vals[r * dim + c];
+        }
+        g.sort_unstable_by(f32::total_cmp);
+        let (lo, hi) = (g[trim], g[rows - 1 - trim]);
+        let mut sum = 0.0f64;
+        for &v in &g[trim..rows - trim] {
+            sum += v as f64;
+        }
+        out[c] = (sum / kept) as f32;
+        for (r, a) in admitted.iter_mut().enumerate().take(rows) {
+            let v = vals[r * dim + c];
+            if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
+                *a += 1.0;
+            }
+        }
+    }
+}
+
+/// Coordinate-wise median; same staging discipline as [`trimmed_mean`].
+pub fn coord_median(
+    out: &mut [f32],
+    vals: &[f32],
+    rows: usize,
+    gather: &mut [f32],
+    admitted: &mut [f64],
+) {
+    debug_assert_eq!(vals.len(), rows * out.len());
+    debug_assert!(gather.len() >= rows && admitted.len() >= rows);
+    debug_assert!(rows > 0);
+    let dim = out.len();
+    for c in 0..dim {
+        let g = &mut gather[..rows];
+        for (r, slot) in g.iter_mut().enumerate() {
+            *slot = vals[r * dim + c];
+        }
+        g.sort_unstable_by(f32::total_cmp);
+        let (lo, hi, med) = if rows % 2 == 1 {
+            let m = g[rows / 2];
+            (m, m, m as f64)
+        } else {
+            let (a, b) = (g[rows / 2 - 1], g[rows / 2]);
+            (a, b, (a as f64 + b as f64) / 2.0)
+        };
+        out[c] = med as f32;
+        for (r, a) in admitted.iter_mut().enumerate().take(rows) {
+            let v = vals[r * dim + c];
+            if v.total_cmp(&lo).is_ge() && v.total_cmp(&hi).is_le() {
+                *a += 1.0;
+            }
+        }
+    }
+}
+
+/// Pairwise squared L2 distances into a symmetric `rows × rows` matrix
+/// with a zero diagonal (upper triangle computed, mirrored).
+pub fn pairwise_sq_dist(vals: &[f32], rows: usize, dim: usize, dist: &mut [f64]) {
+    debug_assert_eq!(vals.len(), rows * dim);
+    debug_assert!(dist.len() >= rows * rows);
+    for i in 0..rows {
+        dist[i * rows + i] = 0.0;
+        for j in (i + 1)..rows {
+            let a = &vals[i * dim..(i + 1) * dim];
+            let b = &vals[j * dim..(j + 1) * dim];
+            let mut s = 0.0f64;
+            for k in 0..dim {
+                let d = (a[k] - b[k]) as f64;
+                s += d * d;
+            }
+            dist[i * rows + j] = s;
+            dist[j * rows + i] = s;
+        }
+    }
+}

@@ -83,6 +83,7 @@ fn print_usage() {
                 opt("late", "async late-delivery policy: buffer | drop", Some("buffer")),
                 opt("runner", "in-process runner: scheduler | threads (run mode)", Some("scheduler")),
                 opt("workers", "scheduler worker threads (0 = cores)", Some("0")),
+                opt("fold", "neighbor fold plan: serial | tree:<width> (deterministic at any worker count)", Some("serial")),
                 opt("param-store", "model-state ownership: owned | shared (CoW shards + zero-copy broadcast) | paged (per-page CoW + interning)", Some("owned")),
                 opt("page-size", "elements per CoW page (paged store only)", Some("1024")),
                 opt("trace", "span tracing: off | sample:<rate> | full (run mode)", Some("off")),
@@ -149,6 +150,9 @@ fn apply_overrides(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
     }
     if let Some(w) = args.get("workers") {
         cfg.workers = w.parse().context("--workers")?;
+    }
+    if let Some(f) = args.get("fold") {
+        cfg.fold = f.to_string();
     }
     if let Some(p) = args.get("param-store") {
         cfg.param_store = p.to_string();
@@ -371,11 +375,18 @@ fn cmd_node(args: &Args) -> Result<()> {
         eval_every: cfg.eval_every,
         transport: Box::new(Arc::clone(&transport)),
         trainer: Trainer::new(engine.clone(), &cfg.model, loader, cfg.lr, cfg.local_steps)?,
-        sharing: decentralize_rs::sharing::from_spec(
-            &cfg.sharing,
-            meta.param_count,
-            mix_seed(&[cfg.seed, rank as u64]),
-        )?,
+        sharing: {
+            let mut s = decentralize_rs::sharing::from_spec(
+                &cfg.sharing,
+                meta.param_count,
+                mix_seed(&[cfg.seed, rank as u64]),
+            )?;
+            s.set_fold(decentralize_rs::kernels::fold::FoldCtx {
+                spec: decentralize_rs::kernels::fold::FoldSpec::parse(&cfg.fold)?,
+                workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            });
+            s
+        },
         // One node per process: a shared store has nothing to share, so
         // TCP node mode always owns its parameters.
         params: decentralize_rs::store::ParamSlot::owned(meta.load_init()?),

@@ -270,8 +270,14 @@ impl DlNodeSm {
                     payload: payload.as_slice(),
                 })
                 .collect();
+            let tf = ctx.trace_begin();
             self.sharing
                 .aggregate_with(&mut model, self_weight, &received, &mut self.scratch)?;
+            // Nested fold span (under Aggregate): only meaningful when a
+            // tree plan actually staged partial accumulators.
+            if !self.scratch.partials.is_empty() {
+                ctx.trace_phase(TracePhase::Fold, tf);
+            }
             // Defense accounting: how much adversarial mass did the
             // aggregation admit, how much did it isolate?
             if let Some(roster) = &self.byz {
@@ -1028,8 +1034,13 @@ impl AsyncDlNodeSm {
                     payload: payload.as_slice(),
                 })
                 .collect();
+            let tf = ctx.trace_begin();
             self.sharing
                 .aggregate_with(&mut model, self_w, &received, &mut self.scratch)?;
+            // Nested fold span, as in [`DlNodeSm::try_aggregate`].
+            if !self.scratch.partials.is_empty() {
+                ctx.trace_phase(TracePhase::Fold, tf);
+            }
             // Defense accounting, as in [`DlNodeSm::try_aggregate`].
             if let Some(roster) = &self.byz {
                 let report = self.sharing.defense_report();

@@ -20,7 +20,8 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::kernels::{self, Scratch};
+use crate::kernels::fold::FoldCtx;
+use crate::kernels::{self, FoldPartial, Scratch};
 use crate::model::{topk_of, ParamVec};
 
 use super::{decode_sparse_into, encode_sparse_parts_into, Received, Sharing};
@@ -29,6 +30,7 @@ pub struct ChocoSgd {
     budget: f64,
     gamma: f64,
     dim: usize,
+    fold: FoldCtx,
     /// x̂_i — public estimate of our own model.
     x_hat_self: ParamVec,
     /// x̂_j per neighbor (created lazily at the common init = zeros…
@@ -47,6 +49,7 @@ impl ChocoSgd {
             budget,
             gamma,
             dim,
+            fold: FoldCtx::serial(),
             x_hat_self: ParamVec::zeros(dim),
             x_hat_neighbors: HashMap::new(),
             init: ParamVec::zeros(dim),
@@ -78,6 +81,10 @@ impl Sharing for ChocoSgd {
 
     fn set_init(&mut self, init: &ParamVec) {
         ChocoSgd::set_init(self, init);
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -142,15 +149,46 @@ impl Sharing for ChocoSgd {
             kernels::scatter_axpy(x_hat.as_mut_slice(), 1.0, &scratch.indices, &scratch.values);
         }
         // Gossip step on estimates: x += gamma * sum_j w_j (x_hat_j - x_hat_i).
-        for r in received {
-            let x_hat_j = &self.x_hat_neighbors[&r.src];
-            let g = (self.gamma * r.weight) as f32;
-            kernels::diff_axpy(
-                model.as_mut_slice(),
-                g,
-                x_hat_j.as_slice(),
-                self.x_hat_self.as_slice(),
-            );
+        // (The estimate updates above stay serial — they mutate per-
+        // neighbor state — but this diff-axpy chain over dense estimates
+        // is the dominant O(degree · dim) term and folds by leaf group:
+        // group 0 into the model, other groups into arena partials,
+        // combined in group order. See `kernels::fold`.)
+        let degree = received.len();
+        let fold = self.fold;
+        let groups = fold.groups(degree);
+        let gamma = self.gamma;
+        let nbrs = &self.x_hat_neighbors;
+        let x_self = self.x_hat_self.as_slice();
+        if groups <= 1 {
+            for r in received {
+                let x_hat_j = &nbrs[&r.src];
+                let g = (gamma * r.weight) as f32;
+                kernels::diff_axpy(model.as_mut_slice(), g, x_hat_j.as_slice(), x_self);
+            }
+            return Ok(());
+        }
+        let dim = self.dim;
+        scratch.prepare_partials(groups - 1, dim);
+        let Scratch { partials, .. } = scratch;
+        let m = model.as_mut_slice();
+        let own = move || -> Result<()> {
+            for r in &received[fold.group_range(degree, 0)] {
+                let x_hat_j = &nbrs[&r.src];
+                kernels::diff_axpy(m, (gamma * r.weight) as f32, x_hat_j.as_slice(), x_self);
+            }
+            Ok(())
+        };
+        let per_group = |g: usize, p: &mut FoldPartial| -> Result<()> {
+            for r in &received[fold.group_range(degree, g + 1)] {
+                let x_hat_j = &nbrs[&r.src];
+                kernels::diff_axpy(&mut p.acc, (gamma * r.weight) as f32, x_hat_j.as_slice(), x_self);
+            }
+            Ok(())
+        };
+        kernels::fold::run_fold_jobs(fold.workers, &mut partials[..groups - 1], per_group, own)?;
+        for p in partials[..groups - 1].iter() {
+            kernels::axpy(model.as_mut_slice(), 1.0, &p.acc);
         }
         Ok(())
     }

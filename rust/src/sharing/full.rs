@@ -3,7 +3,8 @@
 use anyhow::{bail, Result};
 
 use crate::compression::{FloatCodec, Fp16, RawF32};
-use crate::kernels::{self, Scratch};
+use crate::kernels::fold::FoldCtx;
+use crate::kernels::{self, FoldPartial, Scratch};
 use crate::model::ParamVec;
 
 use super::{Received, Sharing};
@@ -12,18 +13,46 @@ use super::{Received, Sharing};
 /// averaging: `x <- w_self * x + Σ w_i * x_i`.
 pub struct FullSharing {
     codec: Box<dyn FloatCodec>,
+    fold: FoldCtx,
 }
 
 impl FullSharing {
     pub fn new() -> FullSharing {
-        FullSharing { codec: Box::new(RawF32) }
+        FullSharing { codec: Box::new(RawF32), fold: FoldCtx::serial() }
     }
 
     /// Full support but fp16 values (2 bytes/param) — a cheap ablation on
     /// the value precision axis.
     pub fn fp16() -> FullSharing {
-        FullSharing { codec: Box::new(Fp16) }
+        FullSharing { codec: Box::new(Fp16), fold: FoldCtx::serial() }
     }
+}
+
+/// Fold one leaf group of dense messages into `acc`: pairs share one
+/// accumulator pass through the codec's fused `decode_axpy2`, the odd
+/// remainder folds alone — exactly the serial aggregation loop applied
+/// to the group's slice, so a single-group plan is the serial fold.
+fn fold_group(
+    codec: &dyn FloatCodec,
+    group: &[Received<'_>],
+    acc: &mut [f32],
+    stage: &mut Vec<f32>,
+) -> Result<()> {
+    let mut pairs = group.chunks_exact(2);
+    for pair in &mut pairs {
+        codec.decode_axpy2(
+            pair[0].payload,
+            pair[0].weight as f32,
+            pair[1].payload,
+            pair[1].weight as f32,
+            acc,
+            stage,
+        )?;
+    }
+    for r in pairs.remainder() {
+        codec.decode_axpy(r.payload, r.weight as f32, acc, stage)?;
+    }
+    Ok(())
 }
 
 impl Default for FullSharing {
@@ -35,6 +64,10 @@ impl Default for FullSharing {
 impl Sharing for FullSharing {
     fn name(&self) -> &'static str {
         "full"
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -65,20 +98,39 @@ impl Sharing for FullSharing {
         // pairs of neighbors share one accumulator pass), other codecs
         // stage once in the scratch arena. (This retired the old
         // `codec.name() == "raw_f32"` string-compare dispatch.)
-        let mut pairs = received.chunks_exact(2);
-        for pair in &mut pairs {
-            self.codec.decode_axpy2(
-                pair[0].payload,
-                pair[0].weight as f32,
-                pair[1].payload,
-                pair[1].weight as f32,
+        //
+        // Under a tree fold plan, leaf group 0 runs that loop into the
+        // model on this thread while groups 1.. run it into zero-seeded
+        // arena partials concurrently; partials then combine in group
+        // order (see `kernels::fold` for the determinism contract).
+        let degree = received.len();
+        let fold = self.fold;
+        let groups = fold.groups(degree);
+        if groups <= 1 {
+            return fold_group(
+                self.codec.as_ref(),
+                received,
                 model.as_mut_slice(),
                 &mut scratch.dense,
-            )?;
+            );
         }
-        for r in pairs.remainder() {
-            self.codec
-                .decode_axpy(r.payload, r.weight as f32, model.as_mut_slice(), &mut scratch.dense)?;
+        let dim = model.len();
+        scratch.prepare_partials(groups - 1, dim);
+        let Scratch { partials, dense, .. } = scratch;
+        let codec = self.codec.as_ref();
+        let m = model.as_mut_slice();
+        let own = move || fold_group(codec, &received[fold.group_range(degree, 0)], m, dense);
+        let per_group = |g: usize, p: &mut FoldPartial| {
+            fold_group(
+                codec,
+                &received[fold.group_range(degree, g + 1)],
+                &mut p.acc,
+                &mut p.stage,
+            )
+        };
+        kernels::fold::run_fold_jobs(fold.workers, &mut partials[..groups - 1], per_group, own)?;
+        for p in partials[..groups - 1].iter() {
+            kernels::axpy(model.as_mut_slice(), 1.0, &p.acc);
         }
         Ok(())
     }

@@ -44,7 +44,8 @@ pub use topk::TopK;
 use anyhow::{bail, Context, Result};
 
 use crate::compression::{decode_indices_best_into, encode_indices_best_into};
-use crate::kernels::{self, Scratch};
+use crate::kernels::fold::FoldCtx;
+use crate::kernels::{self, FoldPartial, Scratch};
 use crate::model::{ParamVec, SparseVec};
 use crate::store::Payload;
 
@@ -74,6 +75,15 @@ pub trait Sharing: Send {
     /// strategies (Choco-SGD) need it so every node's estimate of every
     /// other node starts from the same point; default is a no-op.
     fn set_init(&mut self, _init: &ParamVec) {}
+
+    /// Install the per-neighbor fold plan ([`FoldCtx`]) used by
+    /// [`aggregate_with`](Sharing::aggregate_with). Every strategy
+    /// starts serial; the coordinator calls this once at build time with
+    /// the configured `fold` spec and the effective worker count.
+    /// Results are bit-identical at any worker count by the fold's
+    /// determinism contract (`kernels::fold`); the default is a no-op so
+    /// strategies without a parallelizable fold stay untouched.
+    fn set_fold(&mut self, _fold: FoldCtx) {}
 
     /// Build this round's payload from the post-training model.
     fn outgoing(&mut self, model: &ParamVec, round: u64) -> Result<Vec<u8>> {
@@ -324,24 +334,71 @@ pub fn aggregate_sparse_absolute(
 /// payloads: each message decodes into the arena's sparse buffers and
 /// folds in with [`kernels::scatter_blend`] against an arena snapshot
 /// of the receiver's pre-aggregation values — no clone of the model, no
-/// per-message vectors.
+/// per-message vectors. Serial fold plan; the proptests pin it
+/// bit-identical to [`aggregate_sparse_absolute`].
 pub fn aggregate_sparse_absolute_with(
     model: &mut ParamVec,
     received: &[Received<'_>],
     scratch: &mut Scratch,
 ) -> Result<()> {
+    aggregate_sparse_absolute_fold(model, received, scratch, FoldCtx::serial())
+}
+
+/// [`aggregate_sparse_absolute_with`] under an arbitrary fold plan.
+///
+/// Leaf group 0 folds straight into the model on the calling thread
+/// (under the serial plan — or a tree wide enough to hold every message
+/// — that is the entire aggregation, bit-identical to the serial
+/// reference). Remaining groups scatter-blend into zero-seeded arena
+/// partials against the same own-value snapshot, concurrently, then the
+/// partials are added to the model **in group order** — deterministic at
+/// any worker count because the group shape is fixed by
+/// `(degree, width)` and each group owns its buffers.
+pub fn aggregate_sparse_absolute_fold(
+    model: &mut ParamVec,
+    received: &[Received<'_>],
+    scratch: &mut Scratch,
+    fold: FoldCtx,
+) -> Result<()> {
     let dim = model.len();
     scratch.dense2.clear();
     scratch.dense2.extend_from_slice(model.as_slice());
-    for r in received {
-        decode_sparse_into(r.payload, dim, &mut scratch.indices, &mut scratch.values)?;
-        kernels::scatter_blend(
-            model.as_mut_slice(),
-            r.weight as f32,
-            &scratch.indices,
-            &scratch.values,
-            &scratch.dense2,
-        );
+    let degree = received.len();
+    let groups = fold.groups(degree);
+    if groups <= 1 {
+        for r in received {
+            decode_sparse_into(r.payload, dim, &mut scratch.indices, &mut scratch.values)?;
+            kernels::scatter_blend(
+                model.as_mut_slice(),
+                r.weight as f32,
+                &scratch.indices,
+                &scratch.values,
+                &scratch.dense2,
+            );
+        }
+        return Ok(());
+    }
+    scratch.prepare_partials(groups - 1, dim);
+    let Scratch { partials, dense2, indices, values, .. } = scratch;
+    let own_snapshot: &[f32] = dense2;
+    let m = model.as_mut_slice();
+    let own = move || -> Result<()> {
+        for r in &received[fold.group_range(degree, 0)] {
+            decode_sparse_into(r.payload, dim, indices, values)?;
+            kernels::scatter_blend(m, r.weight as f32, indices, values, own_snapshot);
+        }
+        Ok(())
+    };
+    let per_group = |g: usize, p: &mut FoldPartial| -> Result<()> {
+        for r in &received[fold.group_range(degree, g + 1)] {
+            decode_sparse_into(r.payload, dim, &mut p.indices, &mut p.values)?;
+            kernels::scatter_blend(&mut p.acc, r.weight as f32, &p.indices, &p.values, own_snapshot);
+        }
+        Ok(())
+    };
+    kernels::fold::run_fold_jobs(fold.workers, &mut partials[..groups - 1], per_group, own)?;
+    for p in partials[..groups - 1].iter() {
+        kernels::axpy(model.as_mut_slice(), 1.0, &p.acc);
     }
     Ok(())
 }

@@ -7,24 +7,44 @@
 use anyhow::{bail, Result};
 
 use crate::compression::{FloatCodec, Qsgd};
-use crate::kernels::{self, Scratch};
+use crate::kernels::fold::FoldCtx;
+use crate::kernels::{self, FoldPartial, Scratch};
 use crate::model::ParamVec;
 
 use super::{Received, Sharing};
 
 pub struct Quantized {
     codec: Qsgd,
+    fold: FoldCtx,
 }
 
 impl Quantized {
     pub fn new(levels: u32, seed: u64) -> Quantized {
-        Quantized { codec: Qsgd::new(levels, seed) }
+        Quantized { codec: Qsgd::new(levels, seed), fold: FoldCtx::serial() }
     }
+}
+
+/// Fold one leaf group: each message dequantizes into `stage` once and
+/// folds in with the fused axpy — the serial loop applied to a slice.
+fn fold_group(
+    codec: &Qsgd,
+    group: &[Received<'_>],
+    acc: &mut [f32],
+    stage: &mut Vec<f32>,
+) -> Result<()> {
+    for r in group {
+        codec.decode_axpy(r.payload, r.weight as f32, acc, stage)?;
+    }
+    Ok(())
 }
 
 impl Sharing for Quantized {
     fn name(&self) -> &'static str {
         "quant"
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -50,11 +70,29 @@ impl Sharing for Quantized {
             bail!("mixing weights sum to {total}, expected 1");
         }
         kernels::scale(model.as_mut_slice(), self_weight as f32);
-        for r in received {
-            // QSGD stages its dequantized values once in the arena and
-            // folds them in with the axpy kernel — no fresh vector.
-            self.codec
-                .decode_axpy(r.payload, r.weight as f32, model.as_mut_slice(), &mut scratch.dense)?;
+        // QSGD stages its dequantized values once in the arena and folds
+        // them in with the axpy kernel — no fresh vector. Tree plans run
+        // leaf group 0 into the model while other groups fold into arena
+        // partials concurrently (combined in group order; deterministic
+        // at any worker count, see `kernels::fold`).
+        let degree = received.len();
+        let fold = self.fold;
+        let groups = fold.groups(degree);
+        if groups <= 1 {
+            return fold_group(&self.codec, received, model.as_mut_slice(), &mut scratch.dense);
+        }
+        let dim = model.len();
+        scratch.prepare_partials(groups - 1, dim);
+        let Scratch { partials, dense, .. } = scratch;
+        let codec = &self.codec;
+        let m = model.as_mut_slice();
+        let own = move || fold_group(codec, &received[fold.group_range(degree, 0)], m, dense);
+        let per_group = |g: usize, p: &mut FoldPartial| {
+            fold_group(codec, &received[fold.group_range(degree, g + 1)], &mut p.acc, &mut p.stage)
+        };
+        kernels::fold::run_fold_jobs(fold.workers, &mut partials[..groups - 1], per_group, own)?;
+        for p in partials[..groups - 1].iter() {
+            kernels::axpy(model.as_mut_slice(), 1.0, &p.acc);
         }
         Ok(())
     }

@@ -37,6 +37,7 @@
 
 use anyhow::Result;
 
+use crate::kernels::fold::{FoldCtx, FoldSpec};
 use crate::kernels::{self, Scratch};
 use crate::model::ParamVec;
 
@@ -113,7 +114,19 @@ impl DefenseStats {
 /// (src-ascending) order. The canonical permutation lands in
 /// `scratch.indices` (`indices[row-1]` = position in `received`), the
 /// matrix in `scratch.values`. Returns the row count.
-fn stage_rows(model: &ParamVec, received: &[Received<'_>], scratch: &mut Scratch) -> Result<usize> {
+///
+/// Under a tree fold plan the per-row payload decodes — the only
+/// O(degree · dim) term in the robust path; the reductions that follow
+/// are order statistics and stay serial — run row-parallel across the
+/// plan's workers. Each row's decode is a pure byte copy into its own
+/// disjoint slice, so the staged matrix is trivially bit-identical at
+/// any worker count.
+fn stage_rows(
+    model: &ParamVec,
+    received: &[Received<'_>],
+    scratch: &mut Scratch,
+    fold: FoldCtx,
+) -> Result<usize> {
     let dim = model.len();
     let k = received.len();
     scratch.indices.clear();
@@ -122,11 +135,22 @@ fn stage_rows(model: &ParamVec, received: &[Received<'_>], scratch: &mut Scratch
     scratch.values.clear();
     scratch.values.resize((k + 1) * dim, 0.0);
     scratch.values[..dim].copy_from_slice(model.as_slice());
-    for (row, &i) in scratch.indices.iter().enumerate() {
-        kernels::decode_le(
-            &mut scratch.values[(row + 1) * dim..(row + 2) * dim],
-            received[i as usize].payload,
-        )?;
+    let workers = match fold.spec {
+        FoldSpec::Serial => 1,
+        FoldSpec::Tree { .. } => fold.workers,
+    };
+    if dim == 0 || workers <= 1 || k <= 1 {
+        for (row, &i) in scratch.indices.iter().enumerate() {
+            kernels::decode_le(
+                &mut scratch.values[(row + 1) * dim..(row + 2) * dim],
+                received[i as usize].payload,
+            )?;
+        }
+    } else {
+        let order = &scratch.indices;
+        kernels::fold::run_row_jobs(workers, &mut scratch.values[dim..], dim, |row, out| {
+            kernels::decode_le(out, received[order[row] as usize].payload)
+        })?;
     }
     Ok(k + 1)
 }
@@ -145,18 +169,23 @@ fn fill_report(report: &mut DefenseReport, order: &[u32], row_counts: &[f64], di
 /// Coordinate-wise trimmed mean (`trimmed_mean:<frac>`).
 pub struct TrimmedMean {
     frac: f64,
+    fold: FoldCtx,
     report: DefenseReport,
 }
 
 impl TrimmedMean {
     pub fn new(frac: f64) -> TrimmedMean {
-        TrimmedMean { frac, report: DefenseReport::default() }
+        TrimmedMean { frac, fold: FoldCtx::serial(), report: DefenseReport::default() }
     }
 }
 
 impl Sharing for TrimmedMean {
     fn name(&self) -> &'static str {
         "trimmed_mean"
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -178,12 +207,12 @@ impl Sharing for TrimmedMean {
         scratch: &mut Scratch,
     ) -> Result<()> {
         let dim = model.len();
-        let rows = stage_rows(model, received, scratch)?;
+        let rows = stage_rows(model, received, scratch, self.fold)?;
         let trim = ((self.frac * rows as f64).floor() as usize).min((rows - 1) / 2);
         scratch.dense.clear();
         scratch.dense.resize(dim, 0.0);
         scratch.mags.clear();
-        scratch.mags.resize(rows, 0.0);
+        scratch.mags.resize(2 * rows, 0.0); // gather contract: 2 · rows
         scratch.doubles.clear();
         scratch.doubles.resize(rows, 0.0);
         kernels::trimmed_mean(
@@ -207,6 +236,7 @@ impl Sharing for TrimmedMean {
 /// Coordinate-wise median (`coord_median`).
 #[derive(Default)]
 pub struct CoordMedian {
+    fold: FoldCtx,
     report: DefenseReport,
 }
 
@@ -219,6 +249,10 @@ impl CoordMedian {
 impl Sharing for CoordMedian {
     fn name(&self) -> &'static str {
         "coord_median"
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -240,11 +274,11 @@ impl Sharing for CoordMedian {
         scratch: &mut Scratch,
     ) -> Result<()> {
         let dim = model.len();
-        let rows = stage_rows(model, received, scratch)?;
+        let rows = stage_rows(model, received, scratch, self.fold)?;
         scratch.dense.clear();
         scratch.dense.resize(dim, 0.0);
         scratch.mags.clear();
-        scratch.mags.resize(rows, 0.0);
+        scratch.mags.resize(2 * rows, 0.0); // gather contract: 2 · rows
         scratch.doubles.clear();
         scratch.doubles.resize(rows, 0.0);
         kernels::coord_median(
@@ -268,18 +302,23 @@ impl Sharing for CoordMedian {
 /// centrally-located candidate; everything else is rejected outright.
 pub struct Krum {
     f: usize,
+    fold: FoldCtx,
     report: DefenseReport,
 }
 
 impl Krum {
     pub fn new(f: usize) -> Krum {
-        Krum { f, report: DefenseReport::default() }
+        Krum { f, fold: FoldCtx::serial(), report: DefenseReport::default() }
     }
 }
 
 impl Sharing for Krum {
     fn name(&self) -> &'static str {
         "krum"
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -301,7 +340,7 @@ impl Sharing for Krum {
         scratch: &mut Scratch,
     ) -> Result<()> {
         let dim = model.len();
-        let rows = stage_rows(model, received, scratch)?;
+        let rows = stage_rows(model, received, scratch, self.fold)?;
         // Standard Krum sums the n−f−2 nearest; clamp so degenerate
         // degrees (rows ≤ f+2) still score over at least one neighbor.
         let closest =

@@ -3,15 +3,17 @@
 
 use anyhow::Result;
 
+use crate::kernels::fold::FoldCtx;
 use crate::kernels::Scratch;
 use crate::model::ParamVec;
 use crate::rng::{mix_seed, Xoshiro256pp};
 
-use super::{aggregate_sparse_absolute_with, encode_sparse_parts_into, Received, Sharing};
+use super::{aggregate_sparse_absolute_fold, encode_sparse_parts_into, Received, Sharing};
 
 pub struct SubSampling {
     budget: f64,
     dim: usize,
+    fold: FoldCtx,
     rng: Xoshiro256pp,
 }
 
@@ -21,6 +23,7 @@ impl SubSampling {
         SubSampling {
             budget,
             dim,
+            fold: FoldCtx::serial(),
             rng: Xoshiro256pp::new(mix_seed(&[seed, 0x5AB5])),
         }
     }
@@ -33,6 +36,10 @@ impl SubSampling {
 impl Sharing for SubSampling {
     fn name(&self) -> &'static str {
         "subsample"
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -54,7 +61,7 @@ impl Sharing for SubSampling {
         received: &[Received<'_>],
         scratch: &mut Scratch,
     ) -> Result<()> {
-        aggregate_sparse_absolute_with(model, received, scratch)
+        aggregate_sparse_absolute_fold(model, received, scratch, self.fold)
     }
 }
 

@@ -11,14 +11,16 @@
 
 use anyhow::Result;
 
+use crate::kernels::fold::FoldCtx;
 use crate::kernels::{self, Scratch};
 use crate::model::{topk_of, ParamVec};
 
-use super::{aggregate_sparse_absolute_with, encode_sparse_parts_into, Received, Sharing};
+use super::{aggregate_sparse_absolute_fold, encode_sparse_parts_into, Received, Sharing};
 
 pub struct TopK {
     budget: f64,
     dim: usize,
+    fold: FoldCtx,
     /// Snapshot of each coordinate's value when it was last included in a
     /// message (the reference point for "change since last shared").
     last_shared: ParamVec,
@@ -28,7 +30,13 @@ pub struct TopK {
 impl TopK {
     pub fn new(budget: f64, dim: usize) -> TopK {
         assert!(0.0 < budget && budget <= 1.0);
-        TopK { budget, dim, last_shared: ParamVec::zeros(dim), initialized: false }
+        TopK {
+            budget,
+            dim,
+            fold: FoldCtx::serial(),
+            last_shared: ParamVec::zeros(dim),
+            initialized: false,
+        }
     }
 
     fn k(&self) -> usize {
@@ -39,6 +47,10 @@ impl TopK {
 impl Sharing for TopK {
     fn name(&self) -> &'static str {
         "topk"
+    }
+
+    fn set_fold(&mut self, fold: FoldCtx) {
+        self.fold = fold;
     }
 
     fn outgoing_into(
@@ -104,7 +116,7 @@ impl Sharing for TopK {
         received: &[Received<'_>],
         scratch: &mut Scratch,
     ) -> Result<()> {
-        aggregate_sparse_absolute_with(model, received, scratch)
+        aggregate_sparse_absolute_fold(model, received, scratch, self.fold)
     }
 }
 

@@ -108,6 +108,10 @@ pub enum Phase {
     Encode,
     /// Neighbor-model aggregation.
     Aggregate,
+    /// The strategy's per-neighbor fold inside an [`Phase::Aggregate`]
+    /// span — recorded only when a `tree:<width>` plan actually staged
+    /// partial accumulators, so serial rounds add no spans.
+    Fold,
     /// Wire delivery of one envelope to its destination node.
     Deliver,
     /// A virtual timer firing (async deadlines, sim step clock).
@@ -122,6 +126,7 @@ impl Phase {
             Phase::Eval => "eval",
             Phase::Encode => "encode",
             Phase::Aggregate => "aggregate",
+            Phase::Fold => "fold",
             Phase::Deliver => "deliver",
             Phase::Timer => "timer",
         }

@@ -9,6 +9,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use decentralize_rs::kernels::fold::FoldCtx;
 use decentralize_rs::kernels::Scratch;
 use decentralize_rs::model::ParamVec;
 use decentralize_rs::rng::Xoshiro256pp;
@@ -187,5 +188,47 @@ fn steady_state_rounds_do_not_allocate_hot_path_buffers() {
         let grew = allocs() - before;
         drop(payload);
         assert_eq!(grew, 0, "{spec}: warm pooled outgoing must not allocate ({grew} allocs)");
+    }
+
+    // Part 4: tree folds are staged through arena-owned `FoldPartial`
+    // accumulators, so a `tree:<width>` plan is held to the same bar as
+    // the serial chain — zero allocations once warm, frozen capacity
+    // signature. width 2 over 6 neighbors ⇒ 3 groups ⇒ 2 staged
+    // partials (group 0 folds straight into the model), the deepest
+    // staging any strategy does at this degree; workers = 1 keeps the
+    // whole fold on this thread so the counter only sees the hot path.
+    for spec in SPECS {
+        let payloads: Vec<Vec<u8>> = (0..NEIGHBORS)
+            .map(|s| {
+                let mut sh = sharing::from_spec(spec, DIM, 50 + s as u64).unwrap();
+                sh.set_init(&init);
+                sh.outgoing(&rand_model(60 + s as u64), 0).unwrap()
+            })
+            .collect();
+        let received: Vec<Received> = payloads
+            .iter()
+            .enumerate()
+            .map(|(s, p)| Received { src: s, weight: w, payload: p })
+            .collect();
+        let mut sh = sharing::from_spec(spec, DIM, 0).unwrap();
+        sh.set_init(&init);
+        sh.set_fold(FoldCtx::tree(2, 1));
+        let mut model = rand_model(4);
+        let mut scratch = Scratch::new();
+        for _ in 0..3 {
+            sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
+        }
+        let sig = scratch.capacity_signature();
+        let before = allocs();
+        for _ in 0..25 {
+            sh.aggregate_with(&mut model, self_w, &received, &mut scratch).unwrap();
+        }
+        let grew = allocs() - before;
+        assert_eq!(grew, 0, "{spec}: {grew} allocations in 25 warm tree:2 fold aggregations");
+        assert_eq!(
+            scratch.capacity_signature(),
+            sig,
+            "{spec}: scratch arena grew during warm tree:2 folds"
+        );
     }
 }

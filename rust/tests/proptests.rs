@@ -796,7 +796,7 @@ fn prop_robust_kernels_bit_identical_to_scalar_reference() {
 
         let mut out_a = vec![0.0f32; dim];
         let mut out_b = vec![0.0f32; dim];
-        let mut gather = vec![0.0f32; rows];
+        let mut gather = vec![0.0f32; 2 * rows];
         let mut adm_a = vec![0.0f64; rows];
         let mut adm_b = vec![0.0f64; rows];
         kernels::trimmed_mean(&mut out_a, &vals, rows, trim, &mut gather, &mut adm_a);
@@ -813,13 +813,106 @@ fn prop_robust_kernels_bit_identical_to_scalar_reference() {
 
         let mut dist = vec![0.0f64; rows * rows];
         kernels::pairwise_sq_dist(&vals, rows, dim, &mut dist);
-        let dist_ref = reference::pairwise_sq_dist(&vals, rows, dim);
+        let mut dist_ref = vec![0.0f64; rows * rows];
+        reference::pairwise_sq_dist(&vals, rows, dim, &mut dist_ref);
         assert_eq!(dist, dist_ref, "pairwise_sq_dist case {case} rows={rows} dim={dim}");
         let closest = rng.range(0, rows);
         let mut row_buf = vec![0.0f64; rows];
         let pick = kernels::krum_select(&dist, rows, closest, &mut row_buf);
-        let pick_ref = reference::krum_select(&dist_ref, rows, closest);
+        let mut row_ref = vec![0.0f64; rows];
+        let pick_ref = reference::krum_select(&dist_ref, rows, closest, &mut row_ref);
         assert_eq!(pick, pick_ref, "krum_select case {case} rows={rows} closest={closest}");
+    }
+}
+
+#[test]
+fn prop_tree_folds_worker_invariant_and_wide_width_degenerates_to_serial() {
+    // The fold contract, over every strategy: (1) the reduction-tree
+    // shape is a pure function of (degree, width), so one plan yields
+    // bit-identical models at ANY worker count; (2) a `width >= degree`
+    // tree is a single group and therefore bitwise equal to the serial
+    // chain. One dirty arena is shared across every spec × degree ×
+    // plan, so the staged `FoldPartial` buffers are always inherited at
+    // the wrong size/contents first — the partials-reuse case.
+    use decentralize_rs::kernels::fold::FoldCtx;
+    let specs = [
+        "full",
+        "full:fp16",
+        "subsample:0.2",
+        "topk:0.2",
+        "quant:64",
+        "choco:0.2:0.5",
+        "trimmed_mean:0.2",
+        "coord_median",
+        "krum:1",
+    ];
+    let mut scratch = Scratch::new();
+    for (si, spec) in specs.iter().enumerate() {
+        for (di, &degree) in [16usize, 33, 64].iter().enumerate() {
+            for case in 0..2u64 {
+                let seed = 23_000 + 1000 * si as u64 + 100 * di as u64 + case;
+                let mut rng = Xoshiro256pp::new(seed);
+                let dim = rng.range(1, 400);
+                let init = ParamVec::from_vec(rand_vals(&mut rng, dim, 1.0));
+                let start = ParamVec::from_vec(rand_vals(&mut rng, dim, 1.0));
+                let w = 1.0 / (degree + 1) as f64;
+                let self_w = 1.0 - degree as f64 * w;
+                // Two rounds of payloads from persistent (stateful)
+                // per-sender instances with drifting models.
+                let mut senders: Vec<(Box<dyn Sharing>, ParamVec)> = (0..degree)
+                    .map(|s| {
+                        let mut sh = sharing::from_spec(spec, dim, 40 + s as u64).unwrap();
+                        sh.set_init(&init);
+                        (sh, ParamVec::from_vec(rand_vals(&mut rng, dim, 1.0)))
+                    })
+                    .collect();
+                let mut rounds: Vec<Vec<Vec<u8>>> = Vec::new();
+                for round in 0..2u64 {
+                    let ps: Vec<Vec<u8>> =
+                        senders.iter_mut().map(|(sh, m)| sh.outgoing(m, round).unwrap()).collect();
+                    rounds.push(ps);
+                    for (_, m) in senders.iter_mut() {
+                        for v in m.as_mut_slice() {
+                            *v += rng.normal_f32(0.0, 0.1);
+                        }
+                    }
+                }
+                // Replay both rounds on a fresh same-seed receiver under
+                // one fold plan; return the per-round model bits.
+                let run_plan = |fold: FoldCtx, scratch: &mut Scratch| -> Vec<Vec<u32>> {
+                    let mut sh = sharing::from_spec(spec, dim, 0).unwrap();
+                    sh.set_init(&init);
+                    sh.set_fold(fold);
+                    let mut model = start.clone();
+                    rounds
+                        .iter()
+                        .map(|payloads| {
+                            let received: Vec<Received> = payloads
+                                .iter()
+                                .enumerate()
+                                .map(|(s, p)| Received { src: s, weight: w, payload: p })
+                                .collect();
+                            sh.aggregate_with(&mut model, self_w, &received, scratch).unwrap();
+                            bits(model.as_slice())
+                        })
+                        .collect()
+                };
+                let serial = run_plan(FoldCtx::serial(), &mut scratch);
+                let wide = run_plan(FoldCtx::tree(degree, 4), &mut scratch);
+                assert_eq!(
+                    serial,
+                    wide,
+                    "{spec} deg {degree} case {case}: width >= degree tree must equal serial"
+                );
+                // A real tree (width 8 < degree) reassociates, but the
+                // plan alone fixes the bits: workers 1, 4, 8 agree.
+                let w1 = run_plan(FoldCtx::tree(8, 1), &mut scratch);
+                let w4 = run_plan(FoldCtx::tree(8, 4), &mut scratch);
+                let w8 = run_plan(FoldCtx::tree(8, 8), &mut scratch);
+                assert_eq!(w1, w4, "{spec} deg {degree} case {case}: workers 1 vs 4 differ");
+                assert_eq!(w1, w8, "{spec} deg {degree} case {case}: workers 1 vs 8 differ");
+            }
+        }
     }
 }
 
